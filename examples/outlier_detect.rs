@@ -1,0 +1,75 @@
+//! Orizuru demo: dynamic top-k outlier detection on transformer
+//! activations, vs the sort / heap / SpAtten-6N baselines.
+//!
+//!   cargo run --release --example outlier_detect
+//!
+//! Uses real activations from the `collect_acts` artifact when
+//! artifacts/test is built, otherwise synthetic heavy-tailed tokens.
+
+use kllm::orizuru::{baseline, detect_outliers, Orizuru};
+use kllm::quant::outlier::topk_outliers;
+use kllm::util::bench::Bencher;
+use kllm::util::rng::Rng;
+
+fn activation_tokens() -> Vec<Vec<f32>> {
+    // try the artifact path first (real model activations)
+    let dir = kllm::runtime::artifacts_dir("test");
+    if dir.join("manifest.json").exists() {
+        if let Ok(mut rt) = kllm::runtime::Runtime::new(&dir) {
+            let m = rt.manifest.model;
+            let manifest = rt.manifest.clone();
+            let params =
+                kllm::runtime::ParamSet::init(&manifest, &mut Rng::new(3));
+            let mut gen =
+                kllm::eval::Generator::new(kllm::eval::Corpus::Wiki2, m.vocab, 9);
+            let (t, y) = gen.batch(m.batch, m.seq_len);
+            let mut inputs = params.tensors.clone();
+            inputs.push(kllm::runtime::HostTensor::i32(t, &[m.batch, m.seq_len]));
+            inputs.push(kllm::runtime::HostTensor::i32(y, &[m.batch, m.seq_len]));
+            if let Ok(out) = rt.run("collect_acts", &inputs) {
+                let acts = out[1].as_f32().unwrap(); // mlp_down inputs (ff dim)
+                let dff = m.d_ff;
+                println!("using real activations from collect_acts (d_ff={dff})");
+                return acts.chunks(dff).take(32).map(|c| c.to_vec()).collect();
+            }
+        }
+    }
+    println!("artifacts/test not built; using synthetic heavy-tailed tokens");
+    let mut rng = Rng::new(5);
+    (0..32).map(|_| rng.heavy_tailed_vec(4096, 0.01, 15.0)).collect()
+}
+
+fn main() {
+    let tokens = activation_tokens();
+    let n = tokens[0].len();
+    let k = (n / 100).max(1); // ~1% per side
+
+    // correctness vs the sort oracle
+    for tok in &tokens {
+        assert_eq!(detect_outliers(tok, k), topk_outliers(tok, k));
+    }
+    println!("orizuru == sort-oracle on {} tokens (n={n}, k={k})", tokens.len());
+
+    // comparison counts
+    let mut o = Orizuru::new(&tokens[0]);
+    o.top_k(k);
+    let (_, _, heap_cmp) = baseline::HeapTopK::run(&tokens[0], k);
+    let (_, _, sort_cmp) = baseline::sort_topk(&tokens[0], k);
+    println!("comparisons:  orizuru {:>8}  (model {:.0})", o.comparisons(), Orizuru::paper_cost_model(n, k));
+    println!("              spatten  {:>8}  (6N model)", baseline::spatten_cost_model(n) as u64);
+    println!("              heap     {:>8}", heap_cmp);
+    println!("              sort     {:>8}", sort_cmp);
+
+    // wallclock
+    let b = Bencher::default();
+    b.run("orizuru top-k", || {
+        let mut o = Orizuru::new(&tokens[0]);
+        kllm::util::bench::black_box(o.top_k(k));
+    });
+    b.run("sort top-k", || {
+        kllm::util::bench::black_box(baseline::sort_topk(&tokens[0], k));
+    });
+    b.run("heap top-k", || {
+        kllm::util::bench::black_box(baseline::HeapTopK::run(&tokens[0], k));
+    });
+}

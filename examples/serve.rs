@@ -1,0 +1,83 @@
+//! Serving demo: batched request workload against the coordinator, with a
+//! policy comparison (decode-priority vs fill-all admission).
+//!
+//!   cargo run --release --example serve -- [--preset test] [--requests 16]
+//!       [--max-new 12] [--tcp]
+
+use std::sync::Arc;
+
+use kllm::coordinator::{serve_tcp, AdmitPolicy, Coordinator, EngineConfig};
+use kllm::runtime::{artifacts_dir, Manifest, ParamSet};
+use kllm::util::cli::Args;
+use kllm::util::rng::Rng;
+use kllm::util::stats::LatencyStats;
+use kllm::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let preset = args.str_or("preset", "test");
+    let n_requests = args.usize_or("requests", 16).map_err(anyhow::Error::msg)?;
+    let max_new = args.usize_or("max-new", 12).map_err(anyhow::Error::msg)?;
+
+    let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(anyhow::Error::msg)?;
+    let cfg = manifest.model;
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+
+    let mut table = Table::new(
+        &format!("serving policies ({n_requests} requests x {max_new} tokens, B={})", cfg.decode_batch),
+        &["Policy", "tok/s", "p50 lat (ms)", "p99 lat (ms)", "mean occupancy", "decode steps"],
+    );
+    for (name, policy) in [
+        ("decode-priority (1/step)", AdmitPolicy::OnePerStep),
+        ("prefill-priority (fill)", AdmitPolicy::FillAll),
+    ] {
+        let coord = Coordinator::start(
+            preset.clone(),
+            ParamSet { tensors: params.tensors.clone() },
+            EngineConfig { policy, ..Default::default() },
+        )?;
+        let mut rng = Rng::new(0xBEEF);
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::new();
+        for _ in 0..n_requests {
+            let plen = 2 + rng.below(cfg.seq_len / 4);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+            rxs.push(coord.submit_async(prompt, max_new, 0.0)?.1);
+        }
+        let mut lat = LatencyStats::default();
+        let mut tokens = 0usize;
+        for rx in rxs {
+            let r = rx.recv()?;
+            tokens += r.tokens.len();
+            lat.record_us(r.total_s * 1e6);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (stats, _) = coord.stats()?;
+        let s = lat.summary();
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}", tokens as f64 / wall),
+            format!("{:.1}", s.p50_us / 1e3),
+            format!("{:.1}", s.p99_us / 1e3),
+            format!("{:.2}", stats.mean_occupancy()),
+            stats.decode_steps.to_string(),
+        ]);
+        coord.shutdown()?;
+    }
+    table.print();
+
+    if args.flag("tcp") {
+        let coord = Arc::new(Coordinator::start(
+            preset,
+            params,
+            EngineConfig::default(),
+        )?);
+        let port = serve_tcp(coord, 0)?;
+        println!("TCP front-end on 127.0.0.1:{port} — ctrl-c to stop");
+        println!("try: echo '{{\"prompt\": [1,2,3], \"max_new_tokens\": 8}}' | nc 127.0.0.1 {port}");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    Ok(())
+}

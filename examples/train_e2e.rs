@@ -1,0 +1,132 @@
+//! END-TO-END driver (DESIGN.md deliverable (b)/"end-to-end validation"):
+//! proves all three layers compose on a real workload.
+//!
+//!   cargo run --release --example train_e2e -- [--preset test|gpt20m|gpt100m]
+//!       [--steps N] [--eval-batches N] [--requests N] [--max-new N]
+//!
+//! 1. TRAIN the L2 transformer for a few hundred steps by driving the
+//!    `train_step` HLO artifact from Rust (loss curve logged).
+//! 2. CALIBRATE on a held-out corpus (collect_acts artifact) and quantize
+//!    weights+activations with the paper's K-Means WAQ.
+//! 3. EVALUATE perplexity FP32 vs KLLM-A4/A3 vs RTN through the quantized
+//!    eval artifacts.
+//! 4. SERVE batched decode requests through the coordinator, reporting
+//!    measured latency/throughput and the modeled OASIS latency/energy.
+//!
+//! Default preset is `test` (seconds on this 1-core box); `gpt20m` is the
+//! ~21M-parameter run and `gpt100m` the paper-scale ~109M configuration
+//! (see DESIGN.md §1.3 on the 1-core scaling substitution).
+
+use kllm::coordinator::{Coordinator, EngineConfig};
+use kllm::eval::methods::Method;
+use kllm::eval::ppl::{eval_method, eval_nll, ppl, train};
+use kllm::eval::{calibrate, Corpus};
+use kllm::quant::OutlierCfg;
+use kllm::runtime::{artifacts_dir, Runtime};
+use kllm::util::cli::Args;
+use kllm::util::stats::LatencyStats;
+use kllm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let preset = args.str_or("preset", "test");
+    let steps = args.usize_or("steps", 300).map_err(anyhow::Error::msg)?;
+    let eval_batches = args.usize_or("eval-batches", 8).map_err(anyhow::Error::msg)?;
+    let n_requests = args.usize_or("requests", 8).map_err(anyhow::Error::msg)?;
+    let max_new = args.usize_or("max-new", 16).map_err(anyhow::Error::msg)?;
+
+    let dir = artifacts_dir(&preset);
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts/{preset} missing — run `make artifacts` (and `make artifacts-{preset}` for non-test presets)"
+    );
+    let mut rt = Runtime::new(&dir)?;
+    let m = rt.manifest.model;
+    let n_params: usize = rt.manifest.param_elems();
+    println!(
+        "== train_e2e: preset {preset} ({} params, d={}, L={}, V={}, S={}) ==",
+        n_params, m.d_model, m.n_layers, m.vocab, m.seq_len
+    );
+
+    // ---- 1. training ------------------------------------------------------
+    println!("\n[1/4] training for {steps} steps on wiki2-syn (train_step artifact)");
+    let t0 = std::time::Instant::now();
+    let log_every = (steps / 20).max(1);
+    let (params, losses) = train(&mut rt, Corpus::Wiki2, steps, 3e-3, 0x7121, &mut |s, l| {
+        if s % log_every == 0 || s + 1 == steps {
+            println!("  step {s:>5}  loss {l:.4}");
+        }
+    })?;
+    let train_s = t0.elapsed().as_secs_f64();
+    println!(
+        "  loss {:.3} -> {:.3} in {:.1}s ({:.0} tok/s trained)",
+        losses[0],
+        losses[losses.len() - 1],
+        train_s,
+        (steps * m.batch * m.seq_len) as f64 / train_s
+    );
+    assert!(
+        losses[losses.len() - 1] < losses[0] * 0.8,
+        "training failed to reduce loss"
+    );
+
+    // ---- 2. calibration + quantization ------------------------------------
+    println!("\n[2/4] calibrating on c4-syn + K-Means quantizing (W4)");
+    let calib = calibrate(&mut rt, &params, Corpus::C4, 16, OutlierCfg::default())?;
+
+    // ---- 3. quantized evaluation ------------------------------------------
+    println!("\n[3/4] held-out PPL (wiki2-syn, {eval_batches} batches)");
+    let fp_nll = eval_nll(&mut rt, None, &params, &[], Corpus::Wiki2, eval_batches, 0xE7A1)?;
+    println!("  FP32 baseline   PPL {:.3}", ppl(fp_nll));
+    for (method, bits) in [(Method::Rtn, 4u32), (Method::Kmeans, 4), (Method::Kmeans, 3)] {
+        let (p, qs) = eval_method(&mut rt, &params, &calib, method, bits, Corpus::Wiki2, eval_batches)?;
+        println!(
+            "  {:16} W4A{bits}  PPL {:.3}  (dPPL {:+.3}, quantized in {:.1}s)",
+            method.label(),
+            p,
+            p - ppl(fp_nll),
+            qs
+        );
+    }
+
+    // ---- 4. serving --------------------------------------------------------
+    println!("\n[4/4] serving {n_requests} batched decode requests (coordinator)");
+    let pset = kllm::runtime::ParamSet { tensors: params.tensors.clone() };
+    drop(rt); // engine thread owns its own runtime
+    let coord = Coordinator::start(preset.clone(), pset, EngineConfig::default())?;
+    let mut rng = Rng::new(0x5E12);
+    let mut rxs = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_requests {
+        let plen = 4 + rng.below(m.seq_len / 4);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(m.vocab) as i32).collect();
+        rxs.push(coord.submit_async(prompt, max_new, 0.8)?.1);
+    }
+    let mut lat = LatencyStats::default();
+    let mut ttft = LatencyStats::default();
+    let mut total_tokens = 0usize;
+    for rx in rxs {
+        let r = rx.recv()?;
+        total_tokens += r.tokens.len();
+        lat.record_us(r.total_s * 1e6);
+        ttft.record_us(r.ttft_s * 1e6);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (stats, sim) = coord.stats()?;
+    println!("  measured:  {:.1} tok/s, latency {}", total_tokens as f64 / wall, lat.summary());
+    println!("  ttft:      {}", ttft.summary());
+    println!(
+        "  batching:  {} decode steps, mean occupancy {:.2}",
+        stats.decode_steps,
+        stats.mean_occupancy()
+    );
+    println!(
+        "  modeled OASIS: {:.2} ms total, {:.2} mJ, {:.0} tok/s-equivalent",
+        sim.seconds * 1e3,
+        sim.energy_j * 1e3,
+        total_tokens as f64 / sim.seconds
+    );
+    coord.shutdown()?;
+    println!("\ntrain_e2e complete — record in EXPERIMENTS.md");
+    Ok(())
+}

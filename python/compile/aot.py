@@ -1,0 +1,258 @@
+"""AOT lowering: JAX -> HLO *text* artifacts + manifest.json.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --preset test --out-dir ../artifacts
+    python -m compile.aot --preset gpt20m --out-dir ../artifacts
+
+Every artifact is listed in ``artifacts/<preset>/manifest.json`` with its
+positional input/output shapes + dtypes so the Rust runtime can marshal
+Literals without any Python at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import waq_gemm as KW
+from .kernels import clustering as KC
+
+F32, I32 = "f32", "i32"
+
+# (method, extra-input builder) for the Table III/IV quantized-eval family.
+QUANT_METHODS = ("rtn", "smooth", "quarot", "atom", "kmeans", "kmeans_static")
+# Outlier-fraction sweep for Fig 15 (total fraction; default is 1%).
+KMEANS_FRACS = (0.005, 0.01, 0.02, 0.05, 0.10)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32, name=""):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def sds(s):
+    return jax.ShapeDtypeStruct(tuple(s["shape"]),
+                                jnp.float32 if s["dtype"] == F32 else jnp.int32)
+
+
+class Emitter:
+    def __init__(self, out_dir: str, cfg: M.ModelConfig, preset: str):
+        self.out_dir = out_dir
+        self.cfg = cfg
+        self.preset = preset
+        self.manifest = {
+            "preset": preset,
+            "config": {
+                "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+                "seq_len": cfg.seq_len, "batch": cfg.batch,
+                "decode_batch": cfg.decode_batch, "head_dim": cfg.head_dim,
+                "d_ff": cfg.d_ff, "n_linears": cfg.n_linears,
+            },
+            "params": [{"name": n, "shape": list(s)}
+                       for n, s in M.param_specs(cfg)],
+            "artifacts": {},
+        }
+
+    def emit(self, name, fn, inputs, meta=None):
+        """Lower fn(*inputs-shaped-args) and write <name>.hlo.txt."""
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[sds(s) for s in inputs])
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *[sds(s) for s in inputs])
+        flat, _ = jax.tree_util.tree_flatten(out_tree)
+        outputs = [spec(o.shape, F32 if o.dtype == jnp.float32 else I32)
+                   for o in flat]
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+            "meta": meta or {},
+        }
+        print(f"  {name:32s} {len(text) / 1e6:7.2f} MB  "
+              f"{time.time() - t0:6.1f}s  ({len(inputs)} in / {len(outputs)} out)")
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"  manifest.json ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def param_inputs(cfg):
+    return [spec(s, F32, n) for n, s in M.param_specs(cfg)]
+
+
+def quant_extra_inputs(cfg, method, n_bits):
+    L, d, dff = cfg.n_layers, cfg.d_model, cfg.d_ff
+    if method == "smooth":
+        return [spec((3 * L, d), F32, "smooth_d"),
+                spec((L, dff), F32, "smooth_ff")]
+    if method == "atom":
+        return [spec((3 * L, d), I32, "perm_d"),
+                spec((L, dff), I32, "perm_ff")]
+    if method == "kmeans":
+        return [spec((cfg.n_linears, 2 ** n_bits), F32, "codebooks")]
+    if method == "kmeans_static":
+        return [spec((cfg.n_linears, 2 ** n_bits), F32, "codebooks"),
+                spec((cfg.n_linears, 2), F32, "thresholds")]
+    return []
+
+
+def emit_all(em: Emitter, fast: bool):
+    cfg = em.cfg
+    P = param_inputs(cfg)
+    toks = spec((cfg.batch, cfg.seq_len), I32, "tokens")
+    tgts = spec((cfg.batch, cfg.seq_len), I32, "targets")
+
+    # --- plain forward / loss ------------------------------------------------
+    em.emit("fwd", lambda *a: M.forward(cfg, a[:-1], a[-1]), P + [toks])
+    em.emit("loss_eval",
+            lambda *a: M.nll_loss(cfg, a[:-2], a[-2], a[-1]),
+            P + [toks, tgts])
+
+    # --- training step -------------------------------------------------------
+    n = len(P)
+
+    def _train(*a):
+        params, m, v = a[:n], a[n:2 * n], a[2 * n:3 * n]
+        step, lr, tokens, targets = a[3 * n], a[3 * n + 1], a[3 * n + 2], a[3 * n + 3]
+        return M.train_step(cfg, params, m, v, step, lr, tokens, targets)
+
+    m_in = [spec(s["shape"], F32, "m." + s["name"]) for s in P]
+    v_in = [spec(s["shape"], F32, "v." + s["name"]) for s in P]
+    em.emit("train_step", _train,
+            P + m_in + v_in + [spec((), F32, "step"), spec((), F32, "lr"),
+                               toks, tgts])
+
+    # --- serving path --------------------------------------------------------
+    kv_shape = (cfg.n_layers, cfg.decode_batch, cfg.n_heads, cfg.seq_len,
+                cfg.head_dim)
+
+    def _decode(*a):
+        params = a[:n]
+        kc, vc, tok, pos = a[n], a[n + 1], a[n + 2], a[n + 3]
+        return M.decode_step(cfg, params, kc, vc, tok, pos)
+
+    em.emit("decode_step", _decode,
+            P + [spec(kv_shape, F32, "k_cache"), spec(kv_shape, F32, "v_cache"),
+                 spec((cfg.decode_batch,), I32, "tokens"),
+                 spec((cfg.decode_batch,), I32, "pos")])
+
+    def _prefill(*a):
+        return M.prefill(cfg, a[:n], a[n], a[n + 1])
+
+    em.emit("prefill", _prefill,
+            P + [spec((1, cfg.seq_len), I32, "tokens"),
+                 spec((), I32, "length")])
+
+    # --- calibration ---------------------------------------------------------
+    def _collect(*a):
+        return M.collect_acts(cfg, a[:-2], a[-2], a[-1])
+
+    em.emit("collect_acts", _collect, P + [toks, tgts])
+
+    # --- quantized eval family (Table III/IV, Fig 15/17) ---------------------
+    bit_list = (4, 3)
+    for method in QUANT_METHODS:
+        for n_bits in bit_list:
+            extras = quant_extra_inputs(cfg, method, n_bits)
+            ne = len(extras)
+
+            def _eval(*a, _m=method, _b=n_bits, _ne=ne):
+                params = a[:n]
+                ex = a[n:n + _ne]
+                return M.loss_eval_quant(cfg, _m, _b, 0.01, params, ex,
+                                         a[n + _ne], a[n + _ne + 1])
+
+            em.emit(f"eval_{method}_a{n_bits}", _eval, P + extras + [toks, tgts],
+                    meta={"method": method, "n_bits": n_bits,
+                          "outlier_frac": 0.01})
+        if fast:
+            break
+
+    # Fig 15: outlier-fraction sweep for the paper's method at A4.
+    if not fast:
+        for frac in KMEANS_FRACS:
+            if frac == 0.01:
+                continue  # already emitted as eval_kmeans_a4
+            extras = quant_extra_inputs(cfg, "kmeans", 4)
+
+            def _evalf(*a, _f=frac):
+                return M.loss_eval_quant(cfg, "kmeans", 4, _f, a[:n],
+                                         a[n:n + 1], a[n + 1], a[n + 2])
+
+            tag = str(frac).replace("0.", "").rstrip("0") or "0"
+            em.emit(f"eval_kmeans_a4_f{tag}", _evalf, P + extras + [toks, tgts],
+                    meta={"method": "kmeans", "n_bits": 4,
+                          "outlier_frac": frac})
+
+    # --- standalone L1 kernels ----------------------------------------------
+    mM, kK, nN, nb = 8, 256, 256, 4
+    a_idx = spec((mM, kK), I32, "a_idx")
+    w_idx = spec((kK, nN), I32, "w_idx")
+    a_sc = spec((mM,), F32, "a_scale")
+    w_sc = spec((nN,), F32, "w_scale")
+    em.emit("waq_gemm",
+            lambda ai, wi, ca, cw, sa, sw: KW.waq_gemm_fused(
+                ai, wi, ca, cw, sa, sw),
+            [a_idx, w_idx, spec((2 ** nb,), F32, "cb_a"),
+             spec((2 ** nb,), F32, "cb_w"), a_sc, w_sc],
+            meta={"M": mM, "K": kK, "N": nN, "n_a_bits": nb, "n_w_bits": nb,
+                  "kind": "fused"})
+    em.emit("waq_gemm_hist",
+            lambda ai, wi, lut, sa, sw: KW.waq_gemm_histogram(
+                ai, wi, lut, sa, sw, n_w_bits=nb, n_a_bits=nb),
+            [a_idx, w_idx, spec((2 ** (2 * nb),), F32, "lut"), a_sc, w_sc],
+            meta={"M": mM, "K": kK, "N": nN, "n_a_bits": nb, "n_w_bits": nb,
+                  "kind": "histogram"})
+    em.emit("quantize_act",
+            lambda x, b: KC.cluster(x, b),
+            [spec((128, 256), F32, "x"), spec((15,), F32, "boundaries")],
+            meta={"n_bits": 4})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="test", choices=sorted(M.PRESETS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="emit only the first quant method (CI smoke)")
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.preset]
+    out_dir = os.path.join(args.out_dir, args.preset)
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"[aot] preset={args.preset} -> {out_dir}")
+    t0 = time.time()
+    em = Emitter(out_dir, cfg, args.preset)
+    emit_all(em, fast=args.fast)
+    em.write_manifest()
+    print(f"[aot] done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: the Clustering Unit (paper §IV-C).
+
+Maps each activation to its nearest centroid. The ASIC uses a binary search
+tree over the 2^n - 1 midpoint boundaries; the TPU re-expression does all
+boundary comparisons per lane in parallel on the VPU:
+
+    idx(x) = sum_i [x >= b_i],   b_i = (c_i + c_{i+1}) / 2
+
+which is exactly nearest-centroid assignment for a sorted codebook (ties at
+a boundary go to the upper cell, matching half-open [b_{i-1}, b_i) cells and
+ref.cluster's argmin-lowest-index tie rule for exact midpoints... see
+python/tests/test_kernels.py::test_cluster_matches_ref for the tolerance
+discussion; boundaries are floats so exact ties are measure-zero and the
+hypothesis sweep filters them).
+
+Lowered with interpret=True (see waq_gemm.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cluster_kernel(x_ref, b_ref, idx_ref):
+    x = x_ref[...]
+    b = b_ref[...]
+    # Parallel boundary compare: index = number of boundaries strictly below x.
+    idx = (x[..., None] > b).sum(axis=-1)
+    idx_ref[...] = idx.astype(jnp.int32)
+
+
+def cluster(x, boundaries, *, block: int = 1024, interpret: bool = True):
+    """Assign each element of x (flat or 2-D) to a centroid cell.
+
+    boundaries: (C - 1,) sorted midpoint boundaries for C sorted centroids.
+    Returns int32 indices with x's shape.
+    """
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = min(block, n)
+    if n % block != 0:  # pad to a whole number of blocks
+        pad = block - n % block
+        flat = jnp.pad(flat, (0, pad))
+        n = flat.shape[0]
+
+    out = pl.pallas_call(
+        _cluster_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((boundaries.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(flat, boundaries)
+    size = 1
+    for d in orig_shape:
+        size *= d
+    return out[:size].reshape(orig_shape)
+
+
+def cluster_jnp(x, boundaries):
+    """Plain-jnp version used inside L2 model lowering (same math)."""
+    return (x[..., None] > boundaries).sum(axis=-1).astype(jnp.int32)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package is pytest-compared against the function of the same name here
+(see python/tests/test_kernels.py, driven by hypothesis sweeps).
+
+Semantics follow the paper's WAQ LUT-GEMM (Fig. 6):
+  out[m, n] = a_scale[m] * w_scale[n] * sum_k LUT[a_idx[m,k] * 2^nW + w_idx[k,n]]
+where LUT is the Cartesian-product table of activation x weight centroids
+(but may be an arbitrary 2^(nA+nW)-entry table; the kernels must not assume
+rank-1 structure except where explicitly documented).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def waq_gemm(a_idx, w_idx, lut, a_scale, w_scale, n_w_bits: int):
+    """Reference WAQ LUT-GEMM.
+
+    a_idx:   (M, K) integer activation indices in [0, 2^nA)
+    w_idx:   (K, N) integer weight indices in [0, 2^nW)
+    lut:     (2^(nA+nW),) float Cartesian-product LUT, laid out
+             lut[ia * 2^nW + iw]
+    a_scale: (M,) per-token activation scales
+    w_scale: (N,) per-output-channel weight scales
+    """
+    cat = a_idx[:, :, None] * (1 << n_w_bits) + w_idx[None, :, :]  # (M, K, N)
+    vals = jnp.take(lut, cat.reshape(-1)).reshape(cat.shape)
+    acc = vals.sum(axis=1)  # reduce over K
+    return acc * a_scale[:, None] * w_scale[None, :]
+
+
+def waq_gemm_histogram(a_idx, w_idx, lut, a_scale, w_scale, n_w_bits: int,
+                       n_a_bits: int):
+    """Same result computed the hardware way: Index-Counter histogram of the
+    concatenated indices, then a weighted sum over LUT entries (MAC tree)."""
+    n_entries = 1 << (n_a_bits + n_w_bits)
+    cat = a_idx[:, :, None] * (1 << n_w_bits) + w_idx[None, :, :]  # (M, K, N)
+    onehot = jnp.equal(cat[..., None], jnp.arange(n_entries)).astype(lut.dtype)
+    counts = onehot.sum(axis=1)  # (M, N, 2^(nA+nW))
+    acc = counts @ lut
+    return acc * a_scale[:, None] * w_scale[None, :]
+
+
+def cluster(x, centroids):
+    """Reference Clustering Unit: nearest centroid by L2 (eq. 1 in the paper).
+
+    x: any shape of floats; centroids: (C,) sorted ascending.
+    Equivalent to boundary-based assignment with cells [b_{i-1}, b_i) where
+    b_i = (c_i + c_{i+1}) / 2; argmin ties go to the lower index.
+    """
+    d = jnp.abs(x[..., None] - centroids)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def cluster_boundaries(centroids):
+    """Midpoint decision boundaries b_i = (c_i + c_{i+1}) / 2 (paper SIV-C)."""
+    return 0.5 * (centroids[:-1] + centroids[1:])
+
+
+def dequant(idx, centroids, scale=None):
+    """Codebook dequantization (the accelerator's Dequantization Unit)."""
+    out = jnp.take(centroids, idx)
+    if scale is not None:
+        out = out * scale
+    return out

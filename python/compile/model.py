@@ -1,0 +1,531 @@
+"""L2: the JAX transformer used for all accuracy experiments and serving.
+
+A GPT-style decoder (RMSNorm, causal MHA, GELU MLP, tied embedding head)
+defined functionally over a *flat, deterministically ordered* parameter
+list so the Rust runtime can construct inputs positionally from the
+artifact manifest.
+
+The quantization-method variants (Table III/IV baselines and the paper's
+K-Means WAQ) are expressed as activation-quantization hooks applied at the
+input of every linear GEMM; weight-side quantization is performed by the
+Rust quant library (fake-quant: weights arrive already
+quantize-dequantized), so one lowered artifact per (method, nA, outlier
+fraction) covers the whole table. Python never runs at inference time —
+every entry point here is AOT-lowered to HLO text by aot.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.clustering import cluster_jnp
+
+# Linear tap order within a layer (used by collect_acts and the quant hooks).
+LINEARS_PER_LAYER = 4  # qkv, attn_out, mlp_up, mlp_down
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int = 2          # training/eval batch baked into artifacts
+    decode_batch: int = 4   # serving decode slots
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def n_linears(self) -> int:
+        return LINEARS_PER_LAYER * self.n_layers
+
+
+PRESETS = {
+    # Unit-test scale: traces + artifacts in seconds.
+    "test": ModelConfig(vocab=256, d_model=64, n_layers=2, n_heads=4,
+                        seq_len=32, batch=2, decode_batch=2),
+    # Default end-to-end scale for this 1-core-CPU testbed (~21 M params).
+    "gpt20m": ModelConfig(vocab=4096, d_model=512, n_layers=6, n_heads=8,
+                          seq_len=128, batch=2, decode_batch=4),
+    # Paper-scale driver (~109 M params); runnable but slow on 1 core.
+    # d_model = 1024 (power of 2) so the QuaRot Hadamard applies uniformly.
+    "gpt100m": ModelConfig(vocab=8192, d_model=1024, n_layers=8, n_heads=16,
+                           seq_len=256, batch=2, decode_batch=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[tuple]:
+    """Deterministic (name, shape) list — the L3 runtime mirrors this order."""
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.ln1", (cfg.d_model,)),
+            (f"l{l}.qkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{l}.attn_out", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.ln2", (cfg.d_model,)),
+            (f"l{l}.mlp_up", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}.mlp_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs.append(("lnf", (cfg.d_model,)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key) -> List[jnp.ndarray]:
+    """Scaled-normal init (python-side tests only; Rust has its own init)."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".ln1", ".ln2")) or name == "lnf":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = 0.02 if "emb" in name else 1.0 / math.sqrt(shape[0])
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _unpack(cfg: ModelConfig, params: Sequence[jnp.ndarray]) -> dict:
+    names = [n for n, _ in param_specs(cfg)]
+    assert len(params) == len(names), (len(params), len(names))
+    return dict(zip(names, params))
+
+
+# ---------------------------------------------------------------------------
+# Activation-quantization hooks
+# ---------------------------------------------------------------------------
+# A hook is q(x, li) -> x_dequantized, where li in [0, 4 * n_layers) indexes
+# the linear whose *input* x is (qkv, attn_out, mlp_up, mlp_down per layer).
+# All hooks are fake-quant: they return float tensors carrying the
+# quantization error so downstream math measures accuracy impact.
+
+def q_identity(x, li):
+    return x
+
+
+def make_q_rtn(n_bits: int):
+    """Per-token symmetric round-to-nearest integer quantization."""
+    qmax = float(2 ** (n_bits - 1) - 1)
+
+    def q(x, li):
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+        scale = jnp.maximum(scale, 1e-8)
+        return jnp.clip(jnp.round(x / scale), -qmax - 1, qmax) * scale
+
+    return q
+
+
+def make_q_smooth(n_bits: int, smooth_vecs: Sequence[jnp.ndarray]):
+    """SmoothQuant: divide activations by the per-channel smoothing vector
+    (the matching multiply is folded into the weights by the Rust side),
+    then per-token RTN."""
+    rtn = make_q_rtn(n_bits)
+
+    def q(x, li):
+        return rtn(x / smooth_vecs[li], li)
+
+    return q
+
+
+def hadamard(x):
+    """Fast Walsh-Hadamard transform over the last axis (power-of-2 dim),
+    orthonormal (scaled by 1/sqrt(d))."""
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"hadamard dim {d} not a power of 2"
+    orig = x.shape
+    h = 1
+    x = x.reshape(-1, d)
+    while h < d:
+        x = x.reshape(-1, d // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return (x.reshape(orig)) / jnp.sqrt(jnp.asarray(d, x.dtype))
+
+
+def make_q_quarot(n_bits: int):
+    """QuaRot: rotate activations by the Hadamard matrix (weights arrive
+    pre-rotated by the Rust side), then per-token RTN. The rotation spreads
+    outlier energy across channels."""
+    rtn = make_q_rtn(n_bits)
+
+    def q(x, li):
+        return rtn(hadamard(x), li)
+
+    return q
+
+
+def make_q_atom(n_bits: int, perms: Sequence[jnp.ndarray]):
+    """Atom: channel-reordered group-wise quantization; the trailing
+    outlier-channel block (picked by calibration, applied via the per-linear
+    permutation) is kept in INT8 while inlier groups use n_bits. Weights
+    arrive row-permuted to match.
+
+    Group size and outlier-block size are both d/32, the paper's ratio
+    (group 128 and 128 outlier channels at d = 4096)."""
+    rtn_in = make_q_rtn(n_bits)
+    rtn_out = make_q_rtn(8)
+
+    def q(x, li):
+        perm = perms[li]
+        d = x.shape[-1]
+        g = max(1, d // 32)   # group size, scaled from the paper's 128@4096
+        n_out = g             # outlier-channel block, 128@4096 scaled
+        xp = jnp.take(x, perm, axis=-1)
+        inl, outl = xp[..., : d - n_out], xp[..., d - n_out:]
+        # group-wise RTN on inliers ((d - n_out) = 31 g divides evenly)
+        lead = inl.shape[:-1]
+        gi = inl.reshape(*lead, -1, g)
+        gi = rtn_in(gi, li).reshape(*lead, d - n_out)
+        go = rtn_out(outl, li)
+        xq = jnp.concatenate([gi, go], axis=-1)
+        inv = jnp.argsort(perm)
+        return jnp.take(xq, inv, axis=-1)
+
+    return q
+
+
+def quantize_kmeans_token(x, codebook, outlier_mask):
+    """K-Means per-token fake quant with FP-preserved outliers.
+
+    x: (..., d); codebook: (2^nA,) sorted, normalized to [-1, 1];
+    outlier_mask: (..., d) bool, True where the value stays FP.
+    Per-token scale is the max-|inlier| (the paper's token-wise scaling).
+    """
+    inlier = jnp.where(outlier_mask, 0.0, x)
+    scale = jnp.max(jnp.abs(inlier), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8)
+    bounds = 0.5 * (codebook[:-1] + codebook[1:])
+    idx = cluster_jnp(x / scale, bounds)
+    deq = jnp.take(codebook, idx) * scale
+    return jnp.where(outlier_mask, x, deq)
+
+
+def topk_outlier_mask(x, k_per_side: int):
+    """Dynamic outlier mask: top-k largest and bottom-k smallest per token
+    (the job Orizuru does in hardware).
+
+    Implemented via sort + threshold rather than jax.lax.top_k: the TopK
+    HLO emitted by top_k uses a `largest` attribute that xla_extension
+    0.5.1's HLO-text parser rejects, while `sort` round-trips. Exact ties
+    at the threshold admit a few extra outliers (fake-quant only; the
+    hardware path uses Orizuru's deterministic tie-breaking)."""
+    d = x.shape[-1]
+    sorted_x = jnp.sort(x, axis=-1)
+    hi_thr = sorted_x[..., d - k_per_side][..., None]
+    lo_thr = sorted_x[..., k_per_side - 1][..., None]
+    return (x >= hi_thr) | (x <= lo_thr)
+
+
+def make_q_kmeans(codebooks: Sequence[jnp.ndarray], outlier_frac: float):
+    """The paper's scheme (OASIS/KLLM): offline-learned per-linear codebooks,
+    dynamic top-k outlier preservation. outlier_frac is the TOTAL fraction
+    (split half top / half bottom, matching 'top 0.5% + bottom 0.5%')."""
+
+    def q(x, li):
+        d = x.shape[-1]
+        k = max(1, int(round(0.5 * outlier_frac * d)))
+        mask = topk_outlier_mask(x, k)
+        return quantize_kmeans_token(x, codebooks[li], mask)
+
+    return q
+
+
+def make_q_kmeans_static(codebooks: Sequence[jnp.ndarray],
+                         thresholds: Sequence[jnp.ndarray]):
+    """OASIS-S: outliers picked by *static* per-linear (lo, hi) thresholds
+    learned offline instead of online top-k."""
+
+    def q(x, li):
+        lo, hi = thresholds[li][0], thresholds[li][1]
+        mask = (x > hi) | (x < lo)
+        return quantize_kmeans_token(x, codebooks[li], mask)
+
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, g, eps=1e-5):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _attention(q, k, v, mask):
+    # q, k, v: (B, H, T, hd); mask: broadcastable to (B, H, Tq, Tk)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(q.shape[-1])
+    scores = jnp.where(mask, scores, -1e30)
+    return jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(scores, axis=-1), v)
+
+
+def forward(cfg: ModelConfig, params: Sequence[jnp.ndarray], tokens,
+            act_q: Callable = q_identity, taps: Optional[dict] = None):
+    """Full-sequence forward. tokens: (B, T) int32 -> logits (B, T, vocab).
+
+    act_q is applied to the input of every linear GEMM. If `taps` is given,
+    pre-GEMM activations are recorded into it (used by collect_acts).
+    """
+    p = _unpack(cfg, params)
+    b, t = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = jnp.take(p["tok_emb"], tokens, axis=0) + p["pos_emb"][None, :t]
+    causal = jnp.tril(jnp.ones((t, t), bool))[None, None]
+
+    def tap(name, val):
+        if taps is not None:
+            taps[name] = val
+        return val
+
+    for l in range(cfg.n_layers):
+        li = LINEARS_PER_LAYER * l
+        xn = rms_norm(x, p[f"l{l}.ln1"])
+        xn = act_q(tap(f"l{l}.qkv_in", xn), li + 0)
+        qkv = xn @ p[f"l{l}.qkv"]
+        q_, k_, v_ = jnp.split(qkv, 3, axis=-1)
+        q_ = q_.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        k_ = k_.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        v_ = v_.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        att = _attention(q_, k_, v_, causal)
+        att = att.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        att = act_q(tap(f"l{l}.attn_out_in", att), li + 1)
+        x = x + att @ p[f"l{l}.attn_out"]
+
+        xn = rms_norm(x, p[f"l{l}.ln2"])
+        xn = act_q(tap(f"l{l}.mlp_up_in", xn), li + 2)
+        hmid = jax.nn.gelu(xn @ p[f"l{l}.mlp_up"])
+        hmid = act_q(tap(f"l{l}.mlp_down_in", hmid), li + 3)
+        x = x + hmid @ p[f"l{l}.mlp_down"]
+
+    x = rms_norm(x, p["lnf"])
+    return x @ p["tok_emb"].T  # tied head (kept FP: paper quantizes GEMM layers)
+
+
+def nll_loss(cfg: ModelConfig, params, tokens, targets, act_q=q_identity):
+    """Mean next-token NLL. targets: (B, T) int32 (-1 entries are ignored)."""
+    logits = forward(cfg, params, tokens, act_q)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = targets >= 0
+    tgt = jnp.where(valid, targets, 0)
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -(picked * valid).sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# Training (AdamW)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.95, 1e-8, 0.01
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, lr, tokens, targets):
+    """One AdamW step. All states are flat lists matching param_specs order.
+
+    step: scalar f32 (1-based) for bias correction; lr: scalar f32.
+    Returns (params', m', v', loss).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda ps: nll_loss(cfg, ps, tokens, targets))(list(params))
+    b1t = jnp.power(ADAM_B1, step)
+    b2t = jnp.power(ADAM_B2, step)
+    new_p, new_m, new_v = [], [], []
+    for (name, _), pi, mi, vi, gi in zip(param_specs(cfg), params, m, v, grads):
+        mi = ADAM_B1 * mi + (1 - ADAM_B1) * gi
+        vi = ADAM_B2 * vi + (1 - ADAM_B2) * gi * gi
+        mhat = mi / (1 - b1t)
+        vhat = vi / (1 - b2t)
+        upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        decay = 0.0 if (name.endswith(("ln1", "ln2")) or name == "lnf") else WEIGHT_DECAY
+        pi = pi - lr * (upd + decay * pi)
+        new_p.append(pi)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode (the serving hot path)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, k_cache, v_cache, tokens, pos):
+    """Single-token decode over B slots.
+
+    k_cache, v_cache: (L, B, H, S, hd); tokens: (B,) int32; pos: (B,) int32
+    (the cache position this token is written to; slots past a request's
+    length are garbage — the coordinator masks them out).
+    Returns (logits (B, vocab), k_cache', v_cache').
+    """
+    p = _unpack(cfg, params)
+    bsz = tokens.shape[0]
+    h, hd, s = cfg.n_heads, cfg.head_dim, cfg.seq_len
+    binds = jnp.arange(bsz)
+    x = jnp.take(p["tok_emb"], tokens, axis=0) + jnp.take(p["pos_emb"], pos, axis=0)
+
+    for l in range(cfg.n_layers):
+        xn = rms_norm(x, p[f"l{l}.ln1"])
+        qkv = xn @ p[f"l{l}.qkv"]
+        q_, k_, v_ = jnp.split(qkv, 3, axis=-1)
+        q_ = q_.reshape(bsz, h, hd)
+        k_ = k_.reshape(bsz, h, hd)
+        v_ = v_.reshape(bsz, h, hd)
+        k_cache = k_cache.at[l, binds, :, pos, :].set(k_)
+        v_cache = v_cache.at[l, binds, :, pos, :].set(v_)
+        mask = (jnp.arange(s)[None, :] <= pos[:, None])[:, None, :]  # (B,1,S)
+        scores = jnp.einsum("bhd,bhsd->bhs", q_, k_cache[l]) / math.sqrt(hd)
+        scores = jnp.where(mask, scores, -1e30)
+        att = jnp.einsum("bhs,bhsd->bhd", jax.nn.softmax(scores, axis=-1),
+                         v_cache[l]).reshape(bsz, cfg.d_model)
+        x = x + att @ p[f"l{l}.attn_out"]
+        xn = rms_norm(x, p[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(xn @ p[f"l{l}.mlp_up"]) @ p[f"l{l}.mlp_down"]
+
+    x = rms_norm(x, p["lnf"])
+    return x @ p["tok_emb"].T, k_cache, v_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, length):
+    """Single-request prefill: tokens (1, S) padded, length scalar int32.
+
+    Returns (logits_at_last (vocab,), k_cache, v_cache) with caches shaped
+    (L, 1, H, S, hd) and positions >= length left as zeros/garbage.
+    """
+    p = _unpack(cfg, params)
+    _, t = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = jnp.take(p["tok_emb"], tokens, axis=0) + p["pos_emb"][None, :t]
+    valid = jnp.arange(t)[None, :] < length  # (1, T)
+    causal = jnp.tril(jnp.ones((t, t), bool))[None, None]
+    mask = causal & valid[:, None, None, :]
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        xn = rms_norm(x, p[f"l{l}.ln1"])
+        qkv = xn @ p[f"l{l}.qkv"]
+        q_, k_, v_ = jnp.split(qkv, 3, axis=-1)
+        q_ = q_.reshape(1, t, h, hd).transpose(0, 2, 1, 3)
+        k_ = k_.reshape(1, t, h, hd).transpose(0, 2, 1, 3)
+        v_ = v_.reshape(1, t, h, hd).transpose(0, 2, 1, 3)
+        ks.append(k_)
+        vs.append(v_)
+        att = _attention(q_, k_, v_, mask)
+        att = att.transpose(0, 2, 1, 3).reshape(1, t, cfg.d_model)
+        x = x + att @ p[f"l{l}.attn_out"]
+        xn = rms_norm(x, p[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(xn @ p[f"l{l}.mlp_up"]) @ p[f"l{l}.mlp_down"]
+    x = rms_norm(x, p["lnf"])
+    logits = x @ p["tok_emb"].T  # (1, T, V)
+    last = jnp.take_along_axis(
+        logits, jnp.maximum(length - 1, 0)[None, None, None], axis=1)[0, 0]
+    k_cache = jnp.stack(ks)  # (L, 1, H, S, hd)
+    v_cache = jnp.stack(vs)
+    return last, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Calibration: activations + their loss-gradients (Fisher weights)
+# ---------------------------------------------------------------------------
+
+def collect_acts(cfg: ModelConfig, params, tokens, targets):
+    """Returns pre-GEMM activations and dL/d(activation) at every linear.
+
+    Outputs:
+      acts_d:  (3L, B, T, d)   inputs of qkv / attn_out / mlp_up
+      acts_ff: (L,  B, T, 4d)  inputs of mlp_down
+      grads_d, grads_ff: same shapes — squared by the Rust side to form the
+      diagonal-Fisher weights for weighted K-Means centroid learning.
+    """
+    b, t = tokens.shape
+    zd = jnp.zeros((3 * cfg.n_layers, b, t, cfg.d_model))
+    zf = jnp.zeros((cfg.n_layers, b, t, cfg.d_ff))
+
+    def loss_with_z(zd, zf):
+        taps = {}
+
+        def act_q(x, li):
+            l, kind = divmod(li, LINEARS_PER_LAYER)
+            if kind == 3:
+                return x + zf[l]
+            return x + zd[3 * l + kind]
+
+        loss = nll_loss(cfg, params, tokens, targets, act_q=act_q)
+        return loss, taps
+
+    # Gradients w.r.t. the zero perturbations == dL/d(activation).
+    (_, taps), (gd, gf) = jax.value_and_grad(loss_with_z, argnums=(0, 1),
+                                             has_aux=True)(zd, zf)
+    # Re-run forward with tap recording for the activations themselves.
+    taps = {}
+    forward(cfg, params, tokens, act_q=q_identity, taps=taps)
+    acts_d = jnp.stack(
+        [taps[f"l{l}.{nm}_in"] for l in range(cfg.n_layers)
+         for nm in ("qkv", "attn_out", "mlp_up")])
+    acts_ff = jnp.stack([taps[f"l{l}.mlp_down_in"] for l in range(cfg.n_layers)])
+    return acts_d, acts_ff, gd, gf
+
+
+# ---------------------------------------------------------------------------
+# Quantized-eval entry points (one per Table III/IV method)
+# ---------------------------------------------------------------------------
+
+def loss_eval_quant(cfg: ModelConfig, method: str, n_bits: int,
+                    outlier_frac: float, params, extras, tokens, targets):
+    """Dispatch the fake-quant NLL for a method.
+
+    `extras` is the method's flat list of extra inputs (see aot.py manifest):
+      rtn:          []
+      smooth:       [sm_d (3L, d), sm_ff (L, 4d)]
+      quarot:       []
+      atom:         [perm_d (3L, d) i32, perm_ff (L, 4d) i32]
+      kmeans:       [cb (4L, 2^nA)]
+      kmeans_static:[cb (4L, 2^nA), thr (4L, 2)]
+    """
+    nl = cfg.n_layers
+
+    def per_linear_d(arr_d, arr_ff, li):
+        l, kind = divmod(li, LINEARS_PER_LAYER)
+        return arr_ff[l] if kind == 3 else arr_d[3 * l + kind]
+
+    if method == "rtn":
+        q = make_q_rtn(n_bits)
+    elif method == "smooth":
+        sm_d, sm_ff = extras
+        vecs = [per_linear_d(sm_d, sm_ff, li) for li in range(cfg.n_linears)]
+        q = make_q_smooth(n_bits, vecs)
+    elif method == "quarot":
+        q = make_q_quarot(n_bits)
+    elif method == "atom":
+        pd, pf = extras
+        perms = [per_linear_d(pd, pf, li) for li in range(cfg.n_linears)]
+        q = make_q_atom(n_bits, perms)
+    elif method == "kmeans":
+        (cb,) = extras
+        q = make_q_kmeans([cb[li] for li in range(cfg.n_linears)], outlier_frac)
+    elif method == "kmeans_static":
+        cb, thr = extras
+        q = make_q_kmeans_static([cb[li] for li in range(cfg.n_linears)],
+                                 [thr[li] for li in range(cfg.n_linears)])
+    else:
+        raise ValueError(f"unknown method {method}")
+    del nl
+    return nll_loss(cfg, params, tokens, targets, act_q=q)
+
+
+# gpt100m uses d_model = 1024 so the QuaRot Hadamard (power-of-2) applies
+# uniformly; see aot.py for the preset table actually lowered.

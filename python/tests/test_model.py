@@ -1,0 +1,196 @@
+"""L2 model tests: shapes, causality, training signal, quant hooks, decode
+cache consistency. Uses the 'test' preset so everything runs in seconds."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.PRESETS["test"]
+KEY = jax.random.PRNGKey(0)
+PARAMS = M.init_params(CFG, KEY)
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, CFG.vocab, size=(CFG.batch, CFG.seq_len))
+    return jnp.asarray(toks, jnp.int32)
+
+
+def test_param_specs_deterministic():
+    a = M.param_specs(CFG)
+    b = M.param_specs(CFG)
+    assert a == b
+    assert a[0][0] == "tok_emb" and a[-1][0] == "lnf"
+    assert len(a) == 2 + 6 * CFG.n_layers + 1
+
+
+def test_forward_shape():
+    logits = M.forward(CFG, PARAMS, _batch())
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_is_causal():
+    """Changing a future token must not affect earlier logits."""
+    toks = _batch(1)
+    l1 = M.forward(CFG, PARAMS, toks)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    l2 = M.forward(CFG, PARAMS, toks2)
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_nll_loss_near_uniform_at_init():
+    toks = _batch(2)
+    loss = M.nll_loss(CFG, PARAMS, toks, toks)
+    assert 0.5 * math.log(CFG.vocab) < float(loss) < 2.0 * math.log(CFG.vocab)
+
+
+def test_nll_ignores_masked_targets():
+    toks = _batch(3)
+    tgts = toks.at[:, : CFG.seq_len // 2].set(-1)
+    loss = M.nll_loss(CFG, PARAMS, toks, tgts)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_train_step_reduces_loss():
+    toks = _batch(4)
+    tgts = jnp.roll(toks, -1, axis=1).at[:, -1].set(-1)
+    params = list(PARAMS)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    losses = []
+    for step in range(8):
+        params, m, v, loss = M.train_step(
+            CFG, params, m, v, jnp.float32(step + 1), jnp.float32(3e-3),
+            toks, tgts)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_decode_matches_forward():
+    """Token-by-token decode over the KV cache must reproduce full forward."""
+    toks = _batch(5)[:CFG.decode_batch]
+    bsz = toks.shape[0]
+    full = M.forward(CFG, PARAMS, toks)
+    kv_shape = (CFG.n_layers, bsz, CFG.n_heads, CFG.seq_len, CFG.head_dim)
+    kc = jnp.zeros(kv_shape)
+    vc = jnp.zeros(kv_shape)
+    for t in range(CFG.seq_len):
+        logits, kc, vc = M.decode_step(
+            CFG, PARAMS, kc, vc, toks[:, t],
+            jnp.full((bsz,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_matches_forward():
+    toks = _batch(6)[:1]
+    length = CFG.seq_len - 3
+    padded = toks.at[:, length:].set(0)
+    last, kc, vc = M.prefill(CFG, PARAMS, padded, jnp.int32(length))
+    full = M.forward(CFG, PARAMS, toks[:, :length])
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[0, -1]),
+                               rtol=2e-4, atol=2e-4)
+    assert kc.shape == (CFG.n_layers, 1, CFG.n_heads, CFG.seq_len, CFG.head_dim)
+
+
+def test_prefill_then_decode_continues():
+    """Serving invariant: prefill cache + decode_step = full forward."""
+    toks = _batch(7)[:1]
+    length = CFG.seq_len - 4
+    padded = toks.at[:, length:].set(0)
+    _, kc, vc = M.prefill(CFG, PARAMS, padded, jnp.int32(length))
+    bsz = CFG.decode_batch
+    kv_shape = (CFG.n_layers, bsz, CFG.n_heads, CFG.seq_len, CFG.head_dim)
+    kcb = jnp.zeros(kv_shape).at[:, 0].set(kc[:, 0])
+    vcb = jnp.zeros(kv_shape).at[:, 0].set(vc[:, 0])
+    nxt = toks[0, length]
+    logits, _, _ = M.decode_step(
+        CFG, PARAMS, kcb, vcb,
+        jnp.full((bsz,), nxt, jnp.int32),
+        jnp.full((bsz,), length, jnp.int32))
+    full = M.forward(CFG, PARAMS, toks[:, : length + 1])
+    np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(full[0, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_hadamard_is_orthonormal():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(5, 64)), jnp.float32)
+    hx = M.hadamard(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(hx), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(M.hadamard(hx)), np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_topk_outlier_mask_counts():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    mask = M.topk_outlier_mask(x, 3)
+    assert mask.shape == x.shape
+    counts = np.asarray(mask).sum(axis=-1)
+    assert (counts == 6).all()  # 3 largest + 3 smallest, distinct w.p. 1
+
+
+def test_kmeans_quant_outliers_pass_through():
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+    cb = jnp.asarray(np.sort(rng.uniform(-1, 1, size=16)), jnp.float32)
+    mask = M.topk_outlier_mask(x, 2)
+    xq = M.quantize_kmeans_token(x, cb, mask)
+    np.testing.assert_array_equal(np.asarray(xq)[np.asarray(mask)],
+                                  np.asarray(x)[np.asarray(mask)])
+    # inliers are on the codebook grid (up to per-token scale)
+    inl = ~np.asarray(mask)
+    scale = np.abs(np.where(np.asarray(mask), 0, np.asarray(x))).max(
+        axis=-1, keepdims=True)
+    normed = np.asarray(xq) / scale
+    dist = np.abs(normed[inl][:, None] - np.asarray(cb)[None, :]).min(axis=1)
+    assert dist.max() < 1e-5
+
+
+@pytest.mark.parametrize("method", M.PRESETS and
+                         ["rtn", "smooth", "quarot", "atom", "kmeans",
+                          "kmeans_static"])
+def test_quant_eval_runs_and_degrades_gracefully(method):
+    toks = _batch(11)
+    tgts = jnp.roll(toks, -1, axis=1).at[:, -1].set(-1)
+    L, d, dff, nl = CFG.n_layers, CFG.d_model, CFG.d_ff, CFG.n_linears
+    extras = {
+        "rtn": [],
+        "smooth": [jnp.ones((3 * L, d)), jnp.ones((L, dff))],
+        "quarot": [],
+        "atom": [jnp.tile(jnp.arange(d, dtype=jnp.int32), (3 * L, 1)),
+                 jnp.tile(jnp.arange(dff, dtype=jnp.int32), (L, 1))],
+        "kmeans": [jnp.tile(jnp.linspace(-1, 1, 16), (nl, 1))],
+        "kmeans_static": [jnp.tile(jnp.linspace(-1, 1, 16), (nl, 1)),
+                          jnp.tile(jnp.asarray([-3.0, 3.0]), (nl, 1))],
+    }[method]
+    fp = float(M.nll_loss(CFG, PARAMS, toks, tgts))
+    q = float(M.loss_eval_quant(CFG, method, 4, 0.01, PARAMS, extras,
+                                toks, tgts))
+    assert math.isfinite(q)
+    # 4-bit fake-quant on an untrained tiny model should not explode
+    assert q < fp + 5.0
+
+
+def test_collect_acts_shapes_and_grad_signal():
+    toks = _batch(12)
+    tgts = jnp.roll(toks, -1, axis=1).at[:, -1].set(-1)
+    ad, af, gd, gf = M.collect_acts(CFG, PARAMS, toks, tgts)
+    L, B, T, d, dff = (CFG.n_layers, CFG.batch, CFG.seq_len, CFG.d_model,
+                       CFG.d_ff)
+    assert ad.shape == (3 * L, B, T, d)
+    assert af.shape == (L, B, T, dff)
+    assert gd.shape == ad.shape and gf.shape == af.shape
+    assert float(jnp.abs(gd).sum()) > 0 and float(jnp.abs(gf).sum()) > 0

@@ -1,0 +1,60 @@
+//! End-to-end serving bench: coordinator throughput/latency on the test
+//! preset, decode-priority vs fill-all admission (the Fig 12-style batch
+//! utilization story on the real runtime).
+
+use kllm::coordinator::{AdmitPolicy, Coordinator, EngineConfig};
+use kllm::runtime::{artifacts_dir, Manifest, ParamSet};
+use kllm::util::bench::fast_mode;
+use kllm::util::rng::Rng;
+use kllm::util::stats::LatencyStats;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir("test");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/test missing — run `make artifacts`; skipping");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
+    let cfg = manifest.model;
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    let n_requests = if fast_mode() { 6 } else { 24 };
+    let max_new = 8;
+
+    for (name, policy) in [
+        ("decode-priority", AdmitPolicy::OnePerStep),
+        ("fill-all", AdmitPolicy::FillAll),
+    ] {
+        let coord = Coordinator::start(
+            "test".into(),
+            ParamSet { tensors: params.tensors.clone() },
+            EngineConfig { policy, ..Default::default() },
+        )?;
+        let mut rng = Rng::new(3);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|_| {
+                let prompt: Vec<i32> =
+                    (0..4).map(|_| rng.below(cfg.vocab) as i32).collect();
+                coord.submit_async(prompt, max_new, 0.0).unwrap().1
+            })
+            .collect();
+        let mut lat = LatencyStats::default();
+        let mut tokens = 0;
+        for rx in rxs {
+            let r = rx.recv()?;
+            tokens += r.tokens.len();
+            lat.record_us(r.total_s * 1e6);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (stats, sim) = coord.stats()?;
+        println!(
+            "bench e2e_serving/{name:16} {:8.1} tok/s  occupancy {:.2}  {}  modeled-OASIS {:.2} ms",
+            tokens as f64 / wall,
+            stats.mean_occupancy(),
+            lat.summary(),
+            sim.seconds * 1e3,
+        );
+        coord.shutdown()?;
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Bench for Figs 11-13: simulated decode/prefill throughput + energy of
+//! OASIS vs A100 / QuaRot / FIGLUT across the model zoo.
+
+use kllm::baselines::{a100_fp16, figlut, quarot_w4a4};
+use kllm::models::ZOO;
+use kllm::sim::{self, HwConfig, OasisMode};
+use kllm::util::bench::{black_box, fast_mode, Bencher};
+use kllm::util::stats::geomean;
+
+fn main() {
+    let hw = HwConfig::default();
+    let out_len = if fast_mode() { 128 } else { 2048 };
+    println!("== Fig 11 bench: single-batch decode, out_len {out_len} ==");
+    let mut sp_f = Vec::new();
+    for m in ZOO {
+        let f = figlut().generation_cost(m, 1, 0, out_len);
+        let a4 = sim::generation_cost(&hw, m, OasisMode::a4(), 1, 0, out_len);
+        let gpu = a100_fp16();
+        let qr = quarot_w4a4().generation_cost(m, 1, 0, out_len);
+        sp_f.push(f.seconds / a4.seconds);
+        println!(
+            "{:12} OASIS-A4 {:8.1} tok/s | FIGLUT {:8.1} | QuaRot {:8.1} | A100 {}",
+            m.name,
+            out_len as f64 / a4.seconds,
+            out_len as f64 / f.seconds,
+            out_len as f64 / qr.seconds,
+            if gpu.fits(m) {
+                format!("{:8.1}", out_len as f64 / gpu.generation_cost(m, 1, 0, out_len).seconds)
+            } else {
+                "OOM".into()
+            }
+        );
+    }
+    println!("avg OASIS-A4 / FIGLUT speedup: {:.2}x (paper 3.00x)", geomean(&sp_f));
+
+    // Fig 12 slice: batch scaling
+    println!("\n== Fig 12 slice: LLaMA-2-7B batch scaling ==");
+    let m = kllm::models::by_name("LLaMA-2-7B").unwrap();
+    for batch in [1usize, 2, 4] {
+        let a4 = sim::generation_cost(&hw, m, OasisMode::a4(), batch, 0, 256);
+        println!(
+            "batch {batch}: OASIS-A4 {:.1} tok/s, {:.2} J",
+            (256 * batch) as f64 / a4.seconds,
+            a4.energy_j
+        );
+    }
+
+    // the simulator itself is on the coordinator's hot path: bench it
+    let b = Bencher::default();
+    b.run("sim decode_step_cost (LLaMA-2-7B)", || {
+        black_box(sim::decode_step_cost(&hw, m, OasisMode::a4(), 1, 1024));
+    });
+}

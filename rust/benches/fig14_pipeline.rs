@@ -1,0 +1,48 @@
+//! Bench for Fig 14 + Fig 18: pipeline schedule and traffic/energy
+//! breakdown of the 1-4096-4096 GEMM, and the cost-model throughput.
+
+use kllm::sim::{self, energy, pipeline, HwConfig};
+use kllm::util::bench::{black_box, Bencher};
+
+fn main() {
+    let hw = HwConfig::default();
+    let s = pipeline::schedule(&hw, 1, 4096, 4096, 4, 0.01);
+    println!("== Fig 14: 1-4096-4096 W4A4, 1% outliers ==");
+    for st in &s.steps {
+        println!(
+            "{:8} {:14} start {:>6} cycles {:>6}{}",
+            st.branch,
+            st.name,
+            st.start,
+            st.cycles,
+            if st.bottleneck { "  <-- bottleneck" } else { "" }
+        );
+    }
+    println!(
+        "main {} / outlier {} / total {} cycles ({:.1} us at 500 MHz)",
+        s.main_end,
+        s.outlier_end,
+        s.total,
+        s.total as f64 * 2e-3
+    );
+
+    let c = sim::gemm_cost(&hw, 1, 4096, 4096, 4, 0.01);
+    let t = energy::gemm_traffic(&hw, &c, 4);
+    let e = energy::gemm_energy(&hw, &c, 4);
+    println!("\n== Fig 18(a): traffic breakdown ==");
+    for (k, v) in &t.by_component {
+        println!("{k:16} {:>12.0} B  {:5.1}%", v, t.fraction(k) * 100.0);
+    }
+    println!("== Fig 18(b): energy breakdown ==");
+    for (k, v) in &e.by_component {
+        println!("{k:16} {:>9.2} uJ  {:5.1}%", v * 1e6, e.fraction(k) * 100.0);
+    }
+
+    let b = Bencher::default();
+    b.run("gemm_cost model (4096x4096)", || {
+        black_box(sim::gemm_cost(&hw, 1, 4096, 4096, 4, 0.01));
+    });
+    b.run("pipeline schedule", || {
+        black_box(pipeline::schedule(&hw, 1, 4096, 4096, 4, 0.01));
+    });
+}

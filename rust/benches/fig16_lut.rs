@@ -1,0 +1,37 @@
+//! Bench for Fig 16: LUT sizes and reduction FLOPs across LLaMA scales,
+//! plus measured LUT build/regeneration costs (the WOQ schemes pay
+//! per-token regeneration; OASIS builds once offline).
+
+use kllm::baselines::fig16_costs;
+use kllm::gemm::CartesianLut;
+use kllm::models::by_name;
+use kllm::quant::Codebook;
+use kllm::util::bench::{black_box, Bencher};
+use kllm::util::rng::Rng;
+
+fn main() {
+    println!("== Fig 16 bench ==");
+    for name in ["LLaMA-7B", "LLaMA-13B", "LLaMA-30B", "LLaMA-2-70B"] {
+        let m = by_name(name).unwrap();
+        let d = m.d_model;
+        for c in fig16_costs(d, d) {
+            println!(
+                "{name:12} {:16} lut_entries={:>9} reduction_flops={:>12}",
+                c.name, c.lut_entries, c.reduction_flops
+            );
+        }
+    }
+    let mut rng = Rng::new(2);
+    let cb_a = Codebook::new(rng.normal_vec(16, 1.0));
+    let cb_w = Codebook::new(rng.normal_vec(16, 1.0));
+    let b = Bencher::quick();
+    b.run("cartesian LUT build (offline, once)", || {
+        black_box(CartesianLut::build(&cb_a, &cb_w));
+    });
+    // WOQ regenerates group LUTs per token: emulate one 4096-length token
+    let x = rng.normal_vec(4096, 1.0);
+    let w_q = vec![1i8; 4096 * 4];
+    b.run("woq per-token LUT gen + gemv (K=4096, N=4)", || {
+        black_box(kllm::gemm::woq::woq_lut_gemv(&x, &w_q, 4, 4, 4));
+    });
+}

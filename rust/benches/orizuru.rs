@@ -1,0 +1,42 @@
+//! Orizuru bench: comparison counts + wallclock vs sort/heap baselines,
+//! across the paper's relevant N (hidden sizes) and k (outlier counts).
+
+use kllm::orizuru::{baseline, Orizuru};
+use kllm::util::bench::{black_box, fast_mode, Bencher};
+use kllm::util::rng::Rng;
+
+fn main() {
+    println!("== Orizuru bench ==");
+    let sizes: &[(usize, usize)] = if fast_mode() {
+        &[(1024, 10)]
+    } else {
+        &[(2048, 10), (4096, 20), (11008, 55)]
+    };
+    let mut rng = Rng::new(1);
+    for &(n, k) in sizes {
+        let x = rng.heavy_tailed_vec(n, 0.01, 15.0);
+        let mut o = Orizuru::new(&x);
+        o.top_k(k);
+        let (_, _, heap_cmp) = baseline::HeapTopK::run(&x, k);
+        let (_, _, sort_cmp) = baseline::sort_topk(&x, k);
+        println!(
+            "n={n:>6} k={k:>3}: orizuru {} cmps (model {:.0}) | spatten-6N {} | heap {} | sort {}",
+            o.comparisons(),
+            Orizuru::paper_cost_model(n, k),
+            baseline::spatten_cost_model(n) as u64,
+            heap_cmp,
+            sort_cmp
+        );
+        let b = Bencher::default().throughput(n as u64);
+        b.run(&format!("orizuru n={n} k={k}"), || {
+            let mut o = Orizuru::new(black_box(&x));
+            black_box(o.top_k(k));
+        });
+        b.run(&format!("sort    n={n} k={k}"), || {
+            black_box(baseline::sort_topk(&x, k));
+        });
+        b.run(&format!("heap    n={n} k={k}"), || {
+            black_box(baseline::HeapTopK::run(&x, k));
+        });
+    }
+}

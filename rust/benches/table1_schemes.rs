@@ -1,0 +1,54 @@
+//! Bench for Table I: WAQ LUT-GEMM vs WOQ LUT-GEMM — analytic scheme
+//! comparison plus measured software-path timings at the paper's shapes.
+
+use kllm::gemm::{self, lut::analytics, CartesianLut};
+use kllm::quant::{self, OutlierCfg};
+use kllm::tensor::Matrix;
+use kllm::util::bench::{black_box, fast_mode, Bencher};
+use kllm::util::rng::Rng;
+
+fn main() {
+    let (k, n) = if fast_mode() { (512, 512) } else { (4096, 1024) };
+    println!("== Table I bench: M=1, K={k}, N={n} ==");
+    println!(
+        "analytic: WOQ lut {} entries / {} flops; WAQ lut {} entries / {} flops",
+        analytics::woq_lut_entries(k, 4),
+        analytics::woq_reduction_flops(k, 4, 4, n),
+        analytics::waq_lut_entries(4, 4),
+        analytics::waq_reduction_flops(4, 4, n)
+    );
+
+    let mut rng = Rng::new(1);
+    let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+    let qw = quant::quantize_weights(&w, 4);
+    let calib: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(k, 1.0)).collect();
+    let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+    let cb_a = quant::learn_act_codebook(&refs, None, 4, OutlierCfg::default());
+    let x = rng.normal_vec(k, 1.0);
+    let tok = quant::quantize_token(&x, &cb_a, OutlierCfg::default());
+    let lut = CartesianLut::build(&cb_a, &qw.codebook);
+    let w_q: Vec<i8> = qw
+        .idx
+        .iter()
+        .map(|&q| (q as i32 - 8) as i8)
+        .collect();
+
+    let b = Bencher::default().throughput((k * n) as u64);
+    b.run("waq_lut_gemm (direct)", || {
+        black_box(gemm::execute_direct(&tok, &qw, &lut));
+    });
+    b.run("waq_lut_gemm (histogram/hw)", || {
+        black_box(gemm::execute_histogram(&tok, &qw, &lut));
+    });
+    b.run("waq dual-branch (with compensation)", || {
+        black_box(gemm::execute_dual_branch(&tok, &qw, &lut));
+    });
+    b.run("woq_lut_gemm (bit-serial, mu=4)", || {
+        black_box(gemm::woq::woq_lut_gemv(&x, &w_q, n, 4, 4));
+    });
+    let xm = Matrix::from_vec(1, k, x.clone());
+    let wd = qw.dequantize();
+    b.run("dequant + f32 gemm (Fig 1(c) path)", || {
+        black_box(xm.matmul(&wd));
+    });
+}

@@ -1,0 +1,41 @@
+//! Bench for Table III: the quantized-eval pipeline (calibration + weight
+//! quantization + PPL eval through the artifacts). Uses the `test` preset
+//! with a short training run; the full table is `kllm experiment table3`.
+
+use kllm::eval::methods::Method;
+use kllm::eval::ppl::{eval_method, eval_nll, ppl, train_or_load};
+use kllm::eval::{calibrate, Corpus};
+use kllm::quant::OutlierCfg;
+use kllm::runtime::{artifacts_dir, Runtime};
+use kllm::util::bench::fast_mode;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir("test");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/test missing — run `make artifacts`; skipping");
+        return Ok(());
+    }
+    let steps = if fast_mode() { 60 } else { 200 };
+    let mut rt = Runtime::new(&dir)?;
+    let t0 = std::time::Instant::now();
+    let (params, _) = train_or_load(&mut rt, Corpus::Wiki2, steps, 3e-3, 0x7121)?;
+    println!("train_or_load({steps} steps): {:.1}s", t0.elapsed().as_secs_f64());
+
+    let t0 = std::time::Instant::now();
+    let calib = calibrate(&mut rt, &params, Corpus::C4, 16, OutlierCfg::default())?;
+    println!("calibration (16 samples): {:.2}s", t0.elapsed().as_secs_f64());
+
+    let fp = ppl(eval_nll(&mut rt, None, &params, &[], Corpus::Wiki2, 4, 0xE7A1)?);
+    println!("{:18} PPL {fp:.3}", "FP32");
+    for method in Method::ALL_QUANT {
+        let t0 = std::time::Instant::now();
+        let (p, qs) = eval_method(&mut rt, &params, &calib, method, 4, Corpus::Wiki2, 4)?;
+        println!(
+            "{:18} PPL {p:.3} (dPPL {:+.3})  quant {qs:.2}s  eval {:.2}s",
+            method.label(),
+            p - fp,
+            t0.elapsed().as_secs_f64() - qs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! L1/L3 hot-path bench: the WAQ GEMM along every execution path —
+//! Rust software datapath (direct / histogram / dual-branch), the blocked
+//! f32 SGEMM baseline, and the compiled Pallas artifact through PJRT.
+
+use kllm::gemm::{self, CartesianLut};
+use kllm::quant::{self, OutlierCfg, QuantWeights};
+use kllm::runtime::{artifacts_dir, HostTensor, Runtime};
+use kllm::tensor::Matrix;
+use kllm::util::bench::{black_box, fast_mode, Bencher};
+use kllm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (k, n) = if fast_mode() { (256, 256) } else { (1024, 1024) };
+    let mut rng = Rng::new(1);
+    let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+    let qw = quant::quantize_weights(&w, 4);
+    let calib: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(k, 1.0)).collect();
+    let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+    let cb_a = quant::learn_act_codebook(&refs, None, 4, OutlierCfg::default());
+    let x = rng.normal_vec(k, 1.0);
+    let tok = quant::quantize_token(&x, &cb_a, OutlierCfg::default());
+    let lut = CartesianLut::build(&cb_a, &qw.codebook);
+
+    println!("== WAQ GEMM hot path (K={k}, N={n}) ==");
+    let b = Bencher::default().throughput((k * n) as u64);
+    b.run("rust direct (software datapath)", || {
+        black_box(gemm::execute_direct(&tok, &qw, &lut));
+    });
+    b.run("rust histogram (index-counter semantics)", || {
+        black_box(gemm::execute_histogram(&tok, &qw, &lut));
+    });
+    b.run("rust dual-branch", || {
+        black_box(gemm::execute_dual_branch(&tok, &qw, &lut));
+    });
+    let xm = Matrix::from_vec(1, k, x.clone());
+    b.run("blocked f32 sgemm (tensor::matmul)", || {
+        black_box(xm.matmul(&w));
+    });
+
+    // quantization-side hot paths
+    b.run("clustering unit assign (token)", || {
+        let mut out = Vec::new();
+        cb_a.assign_slice(black_box(&x), &mut out);
+        black_box(out);
+    });
+    let bq = Bencher::default();
+    bq.run("quantize_token (incl. outlier detect)", || {
+        black_box(quant::quantize_token(&x, &cb_a, OutlierCfg::default()));
+    });
+
+    // PJRT artifact path (the fused Pallas kernel, interpret-lowered)
+    let dir = artifacts_dir("test");
+    if dir.join("manifest.json").exists() {
+        let mut rt = Runtime::new(&dir)?;
+        let spec = rt.manifest.artifact("waq_gemm").unwrap().clone();
+        let (mm, kk, nn) = (
+            spec.meta.get("M").unwrap().as_usize().unwrap(),
+            spec.meta.get("K").unwrap().as_usize().unwrap(),
+            spec.meta.get("N").unwrap().as_usize().unwrap(),
+        );
+        let a_idx: Vec<i32> = (0..mm * kk).map(|_| rng.below(16) as i32).collect();
+        let w_idx: Vec<i32> = (0..kk * nn).map(|_| rng.below(16) as i32).collect();
+        let inputs = vec![
+            HostTensor::i32(a_idx, &[mm, kk]),
+            HostTensor::i32(w_idx, &[kk, nn]),
+            HostTensor::f32(cb_a.centroids.clone(), &[16]),
+            HostTensor::f32(qw.codebook.centroids.clone(), &[16]),
+            HostTensor::f32(vec![1.0; mm], &[mm]),
+            HostTensor::f32(vec![1.0; nn], &[nn]),
+        ];
+        let exe = rt.load("waq_gemm")?;
+        let bp = Bencher::default().throughput((mm * kk * nn) as u64);
+        bp.run(&format!("pjrt waq_gemm artifact ({mm}x{kk}x{nn})"), || {
+            black_box(exe.run(&inputs).unwrap());
+        });
+        let qw_small = QuantWeights {
+            n_rows: kk,
+            n_cols: nn,
+            idx: inputs[1].as_i32().unwrap().iter().map(|&v| v as u8).collect(),
+            codebook: qw.codebook.clone(),
+            col_scales: vec![1.0; nn],
+        };
+        let tok_small = quant::QuantToken {
+            idx: inputs[0].as_i32().unwrap()[..kk].iter().map(|&v| v as u8).collect(),
+            scale: 1.0,
+            outliers: vec![],
+        };
+        let lut_small = CartesianLut::build(&cb_a, &qw.codebook);
+        bp.run("rust direct (same shape, per row)", || {
+            black_box(gemm::execute_direct(&tok_small, &qw_small, &lut_small));
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Continuous batcher: admission queue + scheduling policy. Decode-priority
+//! (vLLM-style): running slots always step; waiting requests are admitted
+//! into free slots (one prefill per engine iteration by default, so decode
+//! latency stays bounded — the policy knob the e2e bench sweeps).
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitPolicy {
+    /// at most one prefill per engine iteration (decode-priority)
+    OnePerStep,
+    /// fill every free slot before stepping (prefill-priority)
+    FillAll,
+}
+
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    pub policy: AdmitPolicy,
+    /// monotone admission counter (FIFO fairness check)
+    admitted: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: AdmitPolicy) -> Self {
+        Batcher { queue: VecDeque::new(), policy, admitted: 0 }
+    }
+
+    pub fn enqueue(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests to admit this iteration given `free_slots` capacity.
+    /// FIFO order is guaranteed.
+    pub fn admit(&mut self, free_slots: usize) -> Vec<Request> {
+        let want = match self.policy {
+            AdmitPolicy::OnePerStep => free_slots.min(1),
+            AdmitPolicy::FillAll => free_slots,
+        };
+        let n = want.min(self.queue.len());
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.queue.pop_front().unwrap());
+        }
+        self.admitted += n as u64;
+        out
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    pub fn drain(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3], 4)
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(AdmitPolicy::FillAll);
+        for i in 0..5 {
+            b.enqueue(req(i));
+        }
+        let first = b.admit(3);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let rest = b.admit(10);
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn one_per_step_policy() {
+        let mut b = Batcher::new(AdmitPolicy::OnePerStep);
+        for i in 0..4 {
+            b.enqueue(req(i));
+        }
+        assert_eq!(b.admit(4).len(), 1);
+        assert_eq!(b.admit(4).len(), 1);
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn admit_bounded_by_free_slots() {
+        let mut b = Batcher::new(AdmitPolicy::FillAll);
+        for i in 0..8 {
+            b.enqueue(req(i));
+        }
+        assert_eq!(b.admit(0).len(), 0);
+        assert_eq!(b.admit(2).len(), 2);
+        assert_eq!(b.admitted(), 2);
+    }
+}

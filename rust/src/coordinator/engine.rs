@@ -1,0 +1,361 @@
+//! The serving engine: continuous-batched decode over the PJRT runtime.
+//!
+//! Owns the Runtime (not Send — the engine lives on one thread), the
+//! device-resident weight buffers (uploaded once), the KV slot manager and
+//! the batcher. Each `step()`:
+//!   1. admits queued requests into free slots (prefill artifact),
+//!   2. runs one `decode_step` for all slots (inactive slots padded),
+//!   3. samples next tokens, advances slots, completes finished requests.
+//! A simulated-OASIS clock advances alongside, so every response reports
+//! both measured CPU latency and modeled accelerator latency/energy.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{AdmitPolicy, Batcher};
+use super::kv::KvManager;
+use super::request::{EngineStats, FinishReason, Request, Response};
+use crate::models::LlmSpec;
+use crate::runtime::{HostTensor, ParamSet, Runtime};
+use crate::sim::{self, HwConfig, OasisMode};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub policy: AdmitPolicy,
+    pub seed: u64,
+    pub mode: OasisMode,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { policy: AdmitPolicy::OnePerStep, seed: 0xE116, mode: OasisMode::a4() }
+    }
+}
+
+struct ActiveReq {
+    req: Request,
+    generated: Vec<i32>,
+    first_token_at: Option<Instant>,
+    modeled_start_s: f64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimTotals {
+    pub seconds: f64,
+    pub energy_j: f64,
+}
+
+pub struct Engine {
+    rt: Runtime,
+    params_host: Vec<HostTensor>,
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    kv: KvManager,
+    batcher: Batcher,
+    active: Vec<Option<ActiveReq>>,
+    pub stats: EngineStats,
+    pub sim: SimTotals,
+    hw: HwConfig,
+    spec: LlmSpec,
+    mode: OasisMode,
+    rng: Rng,
+}
+
+impl Engine {
+    pub fn new(mut rt: Runtime, params: ParamSet, cfg: EngineConfig) -> Result<Engine> {
+        let m = rt.manifest.model;
+        // compile the serving artifacts up front
+        rt.load("decode_step")?;
+        rt.load("prefill")?;
+        let weight_buffers = params
+            .tensors
+            .iter()
+            .map(|t| rt.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        let spec = LlmSpec {
+            name: "served",
+            n_layers: m.n_layers,
+            d_model: m.d_model,
+            n_heads: m.n_heads,
+            n_kv_heads: m.n_heads,
+            d_ff: m.d_ff,
+            vocab: m.vocab,
+            gated_mlp: false,
+        };
+        Ok(Engine {
+            kv: KvManager::new(m),
+            batcher: Batcher::new(cfg.policy),
+            active: (0..m.decode_batch).map(|_| None).collect(),
+            stats: EngineStats::default(),
+            sim: SimTotals::default(),
+            hw: HwConfig::default(),
+            spec,
+            mode: cfg.mode,
+            rng: Rng::new(cfg.seed),
+            params_host: params.tensors,
+            rt,
+            weight_buffers,
+        })
+    }
+
+    pub fn model(&self) -> crate::runtime::artifacts::ModelCfg {
+        self.rt.manifest.model
+    }
+
+    pub fn submit(&mut self, r: Request) {
+        self.batcher.enqueue(r);
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.batcher.pending() > 0 || self.kv.active_count() > 0
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.kv.active_count()
+    }
+
+    /// One engine iteration; returns completed responses.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+
+        // ---- admission (prefill) ---------------------------------------
+        let free = self.kv.decode_batch_free();
+        for req in self.batcher.admit(free) {
+            match self.prefill(&req) {
+                Ok(first_logits_slot) => {
+                    let (slot, logits) = first_logits_slot;
+                    // the prefill's last-position logits give token #1
+                    let tok = self.sample(&logits, req.temperature);
+                    let mut ar = ActiveReq {
+                        req,
+                        generated: vec![tok],
+                        first_token_at: Some(Instant::now()),
+                        modeled_start_s: self.sim.seconds,
+                    };
+                    self.stats.generated_tokens += 1;
+                    // completion checks on the very first token
+                    if let Some(resp) = self.maybe_finish(slot, &mut ar) {
+                        self.kv.release(slot);
+                        done.push(resp);
+                    } else {
+                        self.active[slot] = Some(ar);
+                    }
+                }
+                Err(e) => return Err(anyhow!("prefill failed: {e}")),
+            }
+        }
+
+        // ---- decode ------------------------------------------------------
+        if self.kv.active_count() > 0 {
+            let responses = self.decode_step()?;
+            done.extend(responses);
+        }
+        Ok(done)
+    }
+
+    /// Drain everything (used by benches/tests): step until idle.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while self.has_work() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    fn prefill(&mut self, req: &Request) -> Result<(usize, Vec<f32>)> {
+        let m = self.rt.manifest.model;
+        let slot = self
+            .kv
+            .free_slot()
+            .ok_or_else(|| anyhow!("admit with no free slot"))?;
+        let plen = req.prompt.len().min(m.seq_len - 1).max(1);
+        let mut padded = vec![0i32; m.seq_len];
+        padded[..plen].copy_from_slice(&req.prompt[..plen]);
+
+        let exe = self.rt.load("prefill")?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = self.weight_buffers.iter().collect();
+        let ptoks = self.rt.upload(&HostTensor::i32(padded, &[1, m.seq_len]))?;
+        let plen_b = self.rt.upload(&HostTensor::scalar_i32(plen as i32))?;
+        bufs.push(&ptoks);
+        bufs.push(&plen_b);
+        let out = exe.run_buffers(&bufs)?;
+        let logits = out[0].as_f32()?.to_vec();
+        self.kv
+            .install_prefill(slot, req.id, plen, &out[1], &out[2])
+            .map_err(|e| anyhow!(e))?;
+        self.stats.prefills += 1;
+        // modeled accelerator cost of this prefill
+        let c = sim::llm::prefill_cost(&self.hw, &self.spec, self.mode, plen);
+        self.sim.seconds += c.seconds;
+        self.sim.energy_j += c.energy_j;
+        Ok((slot, logits))
+    }
+
+    fn decode_step(&mut self) -> Result<Vec<Response>> {
+        let m = self.rt.manifest.model;
+        let b = m.decode_batch;
+        // last generated token (or pad) + position per slot
+        let mut toks = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut occupancy = 0u64;
+        let mut mean_ctx = 0usize;
+        for slot in 0..b {
+            if let Some(ar) = &self.active[slot] {
+                toks[slot] = *ar.generated.last().unwrap();
+                pos[slot] = self.kv.position(slot).unwrap() as i32;
+                occupancy += 1;
+                mean_ctx += pos[slot] as usize;
+            }
+        }
+        let active_n = occupancy as usize;
+        mean_ctx /= active_n.max(1);
+
+        let exe = self.rt.load("decode_step")?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = self.weight_buffers.iter().collect();
+        let kb = self.rt.upload(&self.kv.k_tensor())?;
+        let vb = self.rt.upload(&self.kv.v_tensor())?;
+        let tb = self.rt.upload(&HostTensor::i32(toks, &[b]))?;
+        let pb = self.rt.upload(&HostTensor::i32(pos, &[b]))?;
+        bufs.push(&kb);
+        bufs.push(&vb);
+        bufs.push(&tb);
+        bufs.push(&pb);
+        let out = exe.run_buffers(&bufs)?;
+        let logits = out[0].as_f32()?;
+        self.kv
+            .update_from_step(&out[1], &out[2])
+            .map_err(|e| anyhow!(e))?;
+
+        self.stats.decode_steps += 1;
+        self.stats.occupancy_sum += occupancy;
+        // modeled accelerator cost of this batched decode step
+        let c = sim::decode_step_cost(&self.hw, &self.spec, self.mode, active_n.max(1), mean_ctx.max(1));
+        self.sim.seconds += c.seconds;
+        self.sim.energy_j += c.energy_j;
+
+        let mut done = Vec::new();
+        for slot in 0..b {
+            let Some(mut ar) = self.active[slot].take() else { continue };
+            self.kv.advance(slot).map_err(|e| anyhow!(e))?;
+            let lrow = &logits[slot * m.vocab..(slot + 1) * m.vocab];
+            let tok = self.sample(lrow, ar.req.temperature);
+            ar.generated.push(tok);
+            self.stats.generated_tokens += 1;
+            if ar.first_token_at.is_none() {
+                ar.first_token_at = Some(Instant::now());
+            }
+            if let Some(resp) = self.maybe_finish(slot, &mut ar) {
+                self.kv.release(slot);
+                done.push(resp);
+            } else {
+                self.active[slot] = Some(ar);
+            }
+        }
+        Ok(done)
+    }
+
+    fn maybe_finish(&mut self, slot: usize, ar: &mut ActiveReq) -> Option<Response> {
+        let last = *ar.generated.last().unwrap();
+        let reason = if ar.req.eos_token == Some(last) {
+            Some(FinishReason::Eos)
+        } else if ar.generated.len() >= ar.req.max_new_tokens {
+            Some(FinishReason::MaxTokens)
+        } else if self.kv.exhausted(slot) {
+            Some(FinishReason::Length)
+        } else {
+            None
+        };
+        reason.map(|fr| {
+            self.stats.completed += 1;
+            Response {
+                id: ar.req.id,
+                prompt_len: ar.req.prompt.len(),
+                tokens: std::mem::take(&mut ar.generated),
+                finish_reason: fr,
+                ttft_s: ar
+                    .first_token_at
+                    .map(|t| (t - ar.req.arrived).as_secs_f64())
+                    .unwrap_or(0.0),
+                total_s: ar.req.arrived.elapsed().as_secs_f64(),
+                modeled_accel_s: self.sim.seconds - ar.modeled_start_s,
+                modeled_accel_j: self.sim.energy_j,
+            }
+        })
+    }
+
+    fn sample(&mut self, logits: &[f32], temperature: f32) -> i32 {
+        if temperature <= 0.0 {
+            return logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0);
+        }
+        // softmax sample
+        let maxv = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let exps: Vec<f64> = logits
+            .iter()
+            .map(|&x| (((x - maxv) / temperature) as f64).exp())
+            .collect();
+        let total: f64 = exps.iter().sum();
+        let mut u = self.rng.f64() * total;
+        for (i, e) in exps.iter().enumerate() {
+            u -= e;
+            if u <= 0.0 {
+                return i as i32;
+            }
+        }
+        (logits.len() - 1) as i32
+    }
+
+    /// Abort everything in flight (shutdown path).
+    pub fn abort_all(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        for slot in 0..self.active.len() {
+            if let Some(mut ar) = self.active[slot].take() {
+                self.kv.release(slot);
+                out.push(Response {
+                    id: ar.req.id,
+                    prompt_len: ar.req.prompt.len(),
+                    tokens: std::mem::take(&mut ar.generated),
+                    finish_reason: FinishReason::Aborted,
+                    ttft_s: 0.0,
+                    total_s: ar.req.arrived.elapsed().as_secs_f64(),
+                    modeled_accel_s: 0.0,
+                    modeled_accel_j: 0.0,
+                });
+            }
+        }
+        for req in self.batcher.drain() {
+            out.push(Response {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: vec![],
+                finish_reason: FinishReason::Aborted,
+                ttft_s: 0.0,
+                total_s: req.arrived.elapsed().as_secs_f64(),
+                modeled_accel_s: 0.0,
+                modeled_accel_j: 0.0,
+            });
+        }
+        out
+    }
+
+    /// Host parameter tensors (e.g. for eval reuse).
+    pub fn params(&self) -> &[HostTensor] {
+        &self.params_host
+    }
+}
+
+impl KvManager {
+    /// free-slot count helper used by the batcher handshake
+    pub fn decode_batch_free(&self) -> usize {
+        self.slots.iter().filter(|s| **s == super::kv::Slot::Free).count()
+    }
+}

@@ -1,0 +1,242 @@
+//! KV-cache slot manager: the decode artifact is lowered for a fixed slot
+//! count B and max context S; this module owns the host-side cache tensors
+//! and the slot lifecycle (free -> prefilled -> decoding -> free). Slot
+//! state is the coordinator invariant most heavily property-tested (no
+//! leaks, no double-assignments, position bounds).
+
+use crate::runtime::artifacts::ModelCfg;
+use crate::runtime::HostTensor;
+
+use super::request::RequestId;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Slot {
+    Free,
+    Active { request: RequestId, pos: usize },
+}
+
+pub struct KvManager {
+    pub cfg: ModelCfg,
+    /// (L, B, H, S, hd) host caches
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub slots: Vec<Slot>,
+    /// elements per (layer, slot) block: H * S * hd
+    per_slot: usize,
+    per_layer: usize,
+}
+
+impl KvManager {
+    pub fn new(cfg: ModelCfg) -> Self {
+        let per_slot = cfg.n_heads * cfg.seq_len * cfg.head_dim;
+        let per_layer = cfg.decode_batch * per_slot;
+        let total = cfg.n_layers * per_layer;
+        KvManager {
+            cfg,
+            k: vec![0.0; total],
+            v: vec![0.0; total],
+            slots: vec![Slot::Free; cfg.decode_batch],
+            per_slot,
+            per_layer,
+        }
+    }
+
+    pub fn kv_shape(&self) -> Vec<usize> {
+        vec![
+            self.cfg.n_layers,
+            self.cfg.decode_batch,
+            self.cfg.n_heads,
+            self.cfg.seq_len,
+            self.cfg.head_dim,
+        ]
+    }
+
+    pub fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| *s == Slot::Free)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s, Slot::Active { .. }))
+            .count()
+    }
+
+    /// Install a prefilled (L, 1, H, S, hd) cache pair into `slot`.
+    pub fn install_prefill(
+        &mut self,
+        slot: usize,
+        request: RequestId,
+        prompt_len: usize,
+        kc: &HostTensor,
+        vc: &HostTensor,
+    ) -> Result<(), String> {
+        if self.slots[slot] != Slot::Free {
+            return Err(format!("slot {slot} not free"));
+        }
+        if prompt_len == 0 || prompt_len > self.cfg.seq_len {
+            return Err(format!("prompt_len {prompt_len} out of range"));
+        }
+        let (kc, vc) = (
+            kc.as_f32().map_err(|e| e.to_string())?,
+            vc.as_f32().map_err(|e| e.to_string())?,
+        );
+        for l in 0..self.cfg.n_layers {
+            let src = &kc[l * self.per_slot..(l + 1) * self.per_slot];
+            let dst_off = l * self.per_layer + slot * self.per_slot;
+            self.k[dst_off..dst_off + self.per_slot].copy_from_slice(src);
+            let src = &vc[l * self.per_slot..(l + 1) * self.per_slot];
+            self.v[dst_off..dst_off + self.per_slot].copy_from_slice(src);
+        }
+        self.slots[slot] = Slot::Active { request, pos: prompt_len };
+        Ok(())
+    }
+
+    /// Replace the whole cache pair from a decode_step output.
+    pub fn update_from_step(&mut self, kc: &HostTensor, vc: &HostTensor) -> Result<(), String> {
+        let k = kc.as_f32().map_err(|e| e.to_string())?;
+        let v = vc.as_f32().map_err(|e| e.to_string())?;
+        if k.len() != self.k.len() || v.len() != self.v.len() {
+            return Err("kv size mismatch".into());
+        }
+        self.k.copy_from_slice(k);
+        self.v.copy_from_slice(v);
+        Ok(())
+    }
+
+    pub fn advance(&mut self, slot: usize) -> Result<usize, String> {
+        match &mut self.slots[slot] {
+            Slot::Active { pos, .. } => {
+                *pos += 1;
+                Ok(*pos)
+            }
+            Slot::Free => Err(format!("advance on free slot {slot}")),
+        }
+    }
+
+    pub fn position(&self, slot: usize) -> Option<usize> {
+        match self.slots[slot] {
+            Slot::Active { pos, .. } => Some(pos),
+            Slot::Free => None,
+        }
+    }
+
+    pub fn request_of(&self, slot: usize) -> Option<RequestId> {
+        match self.slots[slot] {
+            Slot::Active { request, .. } => Some(request),
+            Slot::Free => None,
+        }
+    }
+
+    /// Slot is out of context space (pos at the last cache line).
+    pub fn exhausted(&self, slot: usize) -> bool {
+        self.position(slot)
+            .map(|p| p >= self.cfg.seq_len - 1)
+            .unwrap_or(false)
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        self.slots[slot] = Slot::Free;
+        // zero the slot's cache region so stale keys can't leak into the
+        // next request via nonzero garbage at masked positions
+        for l in 0..self.cfg.n_layers {
+            let off = l * self.per_layer + slot * self.per_slot;
+            self.k[off..off + self.per_slot].fill(0.0);
+            self.v[off..off + self.per_slot].fill(0.0);
+        }
+    }
+
+    pub fn k_tensor(&self) -> HostTensor {
+        HostTensor::f32(self.k.clone(), &self.kv_shape())
+    }
+
+    pub fn v_tensor(&self) -> HostTensor {
+        HostTensor::f32(self.v.clone(), &self.kv_shape())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            seq_len: 32,
+            batch: 2,
+            decode_batch: 2,
+            head_dim: 16,
+            d_ff: 256,
+            n_linears: 8,
+        }
+    }
+
+    fn prefill_pair(c: &ModelCfg, fill: f32) -> (HostTensor, HostTensor) {
+        let shape = [c.n_layers, 1, c.n_heads, c.seq_len, c.head_dim];
+        let n: usize = shape.iter().product();
+        (
+            HostTensor::f32(vec![fill; n], &shape),
+            HostTensor::f32(vec![-fill; n], &shape),
+        )
+    }
+
+    #[test]
+    fn slot_lifecycle() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        assert_eq!(kv.free_slot(), Some(0));
+        let (kc, vc) = prefill_pair(&c, 1.0);
+        kv.install_prefill(0, 77, 5, &kc, &vc).unwrap();
+        assert_eq!(kv.position(0), Some(5));
+        assert_eq!(kv.request_of(0), Some(77));
+        assert_eq!(kv.free_slot(), Some(1));
+        assert_eq!(kv.advance(0).unwrap(), 6);
+        kv.release(0);
+        assert_eq!(kv.free_slot(), Some(0));
+        assert!(kv.k.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn install_into_occupied_fails() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        let (kc, vc) = prefill_pair(&c, 1.0);
+        kv.install_prefill(1, 1, 3, &kc, &vc).unwrap();
+        assert!(kv.install_prefill(1, 2, 3, &kc, &vc).is_err());
+    }
+
+    #[test]
+    fn prefill_lands_in_right_slot_region() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        let (kc, vc) = prefill_pair(&c, 2.5);
+        kv.install_prefill(1, 9, 4, &kc, &vc).unwrap();
+        let per_slot = c.n_heads * c.seq_len * c.head_dim;
+        // slot 0 region still zero, slot 1 region filled
+        assert!(kv.k[..per_slot].iter().all(|&x| x == 0.0));
+        assert!(kv.k[per_slot..2 * per_slot].iter().all(|&x| x == 2.5));
+    }
+
+    #[test]
+    fn exhaustion_boundary() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        let (kc, vc) = prefill_pair(&c, 1.0);
+        kv.install_prefill(0, 1, c.seq_len - 2, &kc, &vc).unwrap();
+        assert!(!kv.exhausted(0));
+        kv.advance(0).unwrap();
+        assert!(kv.exhausted(0));
+    }
+
+    #[test]
+    fn bad_prompt_len_rejected() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        let (kc, vc) = prefill_pair(&c, 1.0);
+        assert!(kv.install_prefill(0, 1, 0, &kc, &vc).is_err());
+        assert!(kv.install_prefill(0, 1, c.seq_len + 1, &kc, &vc).is_err());
+    }
+}

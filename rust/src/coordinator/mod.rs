@@ -1,0 +1,15 @@
+//! L3 serving coordinator: request router, continuous batcher, KV slot
+//! manager, PJRT-backed engine, and the leader thread + TCP front-end.
+//! Python never runs here — the engine executes AOT artifacts only.
+
+pub mod batcher;
+pub mod engine;
+pub mod kv;
+pub mod request;
+pub mod server;
+
+pub use batcher::{AdmitPolicy, Batcher};
+pub use engine::{Engine, EngineConfig, SimTotals};
+pub use kv::KvManager;
+pub use request::{EngineStats, FinishReason, Request, RequestId, Response};
+pub use server::{serve_tcp, Coordinator};

@@ -1,0 +1,75 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy; otherwise softmax temperature sampling
+    pub temperature: f32,
+    /// stop when this token is produced (None = run to max_new_tokens)
+    pub eos_token: Option<i32>,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            temperature: 0.0,
+            eos_token: None,
+            arrived: Instant::now(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub finish_reason: FinishReason,
+    /// measured wall-clock
+    pub ttft_s: f64,
+    pub total_s: f64,
+    /// modeled OASIS accelerator time/energy for the same work (the sim
+    /// clock advanced alongside execution)
+    pub modeled_accel_s: f64,
+    pub modeled_accel_j: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    Eos,
+    /// context window exhausted
+    Length,
+    /// engine shut down before completion
+    Aborted,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub decode_steps: u64,
+    pub prefills: u64,
+    pub generated_tokens: u64,
+    /// decode-step batch occupancy sum (for mean occupancy)
+    pub occupancy_sum: u64,
+    pub completed: u64,
+}
+
+impl EngineStats {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.decode_steps as f64
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Coordinator front-end: the leader thread that owns the Engine (the
+//! PJRT runtime is not Send, so it never leaves that thread) plus a
+//! channel-based submission API and an optional TCP JSON-lines listener.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{Engine, EngineConfig, SimTotals};
+use super::request::{EngineStats, Request, RequestId, Response};
+use crate::runtime::{ParamSet, Runtime};
+use crate::util::json::Json;
+
+enum Cmd {
+    Submit(Request, Sender<Response>),
+    Stats(Sender<(EngineStats, SimTotals)>),
+    Shutdown,
+}
+
+pub struct Coordinator {
+    tx: Sender<Cmd>,
+    next_id: Arc<AtomicU64>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl Coordinator {
+    /// Start the engine thread for a preset's artifacts with the given
+    /// (host) parameters.
+    pub fn start(preset: String, params: ParamSet, cfg: EngineConfig) -> Result<Coordinator> {
+        let (tx, rx) = channel::<Cmd>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("kllm-engine".into())
+            .spawn(move || engine_thread(&preset, params, cfg, rx, ready_tx))
+            .map_err(|e| anyhow!("spawn engine: {e}"))?;
+        // surface engine construction errors synchronously
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Coordinator {
+            tx,
+            next_id: Arc::new(AtomicU64::new(1)),
+            handle: Some(handle),
+        })
+    }
+
+    pub fn submit_async(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        temperature: f32,
+    ) -> Result<(RequestId, Receiver<Response>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = Request::new(id, prompt, max_new_tokens);
+        req.temperature = temperature;
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Cmd::Submit(req, rtx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        Ok((id, rrx))
+    }
+
+    /// Blocking convenience.
+    pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<Response> {
+        let (_, rx) = self.submit_async(prompt, max_new_tokens, 0.0)?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))
+    }
+
+    pub fn stats(&self) -> Result<(EngineStats, SimTotals)> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Stats(tx)).map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        self.tx.send(Cmd::Shutdown).ok();
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("engine panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.send(Cmd::Shutdown).ok();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_thread(
+    preset: &str,
+    params: ParamSet,
+    cfg: EngineConfig,
+    rx: Receiver<Cmd>,
+    ready: Sender<Result<()>>,
+) -> Result<()> {
+    let rt = match Runtime::for_preset(preset) {
+        Ok(rt) => rt,
+        Err(e) => {
+            ready.send(Err(anyhow!("{e}"))).ok();
+            return Err(anyhow!("runtime init failed"));
+        }
+    };
+    let mut engine = match Engine::new(rt, params, cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            ready.send(Err(anyhow!("{e}"))).ok();
+            return Err(anyhow!("engine init failed"));
+        }
+    };
+    ready.send(Ok(())).ok();
+
+    let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+    // helper: handle one command; returns false on shutdown
+    fn handle(
+        engine: &mut Engine,
+        waiters: &mut HashMap<RequestId, Sender<Response>>,
+        cmd: Cmd,
+    ) -> bool {
+        match cmd {
+            Cmd::Submit(req, tx) => {
+                waiters.insert(req.id, tx);
+                engine.submit(req);
+                true
+            }
+            Cmd::Stats(tx) => {
+                tx.send((engine.stats.clone(), engine.sim)).ok();
+                true
+            }
+            Cmd::Shutdown => {
+                for resp in engine.abort_all() {
+                    if let Some(tx) = waiters.remove(&resp.id) {
+                        tx.send(resp).ok();
+                    }
+                }
+                false
+            }
+        }
+    }
+
+    loop {
+        // drain every queued command without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    if !handle(&mut engine, &mut waiters, cmd) {
+                        return Ok(());
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    handle(&mut engine, &mut waiters, Cmd::Shutdown);
+                    return Ok(());
+                }
+            }
+        }
+        if engine.has_work() {
+            for resp in engine.step()? {
+                if let Some(tx) = waiters.remove(&resp.id) {
+                    tx.send(resp).ok();
+                }
+            }
+        } else {
+            // idle: block for the next command
+            match rx.recv() {
+                Ok(cmd) => {
+                    if !handle(&mut engine, &mut waiters, cmd) {
+                        return Ok(());
+                    }
+                }
+                Err(_) => {
+                    handle(&mut engine, &mut waiters, Cmd::Shutdown);
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP JSON-lines front-end
+// ---------------------------------------------------------------------------
+
+/// Serve `{"prompt": [ids...], "max_new_tokens": n}` lines over TCP,
+/// responding with `{"id":..,"tokens":[..],"ttft_s":..,"total_s":..}`.
+/// Returns the bound port. Runs until the listener thread is dropped with
+/// the process (demo front-end; the in-process API is the primary one).
+pub fn serve_tcp(coord: Arc<Coordinator>, port: u16) -> Result<u16> {
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+    let actual = listener.local_addr()?.port();
+    std::thread::Builder::new()
+        .name("kllm-tcp".into())
+        .spawn(move || {
+            for stream in listener.incoming().flatten() {
+                let coord = coord.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(coord, stream);
+                });
+            }
+        })
+        .map_err(|e| anyhow!("spawn tcp: {e}"))?;
+    Ok(actual)
+}
+
+fn handle_conn(coord: Arc<Coordinator>, stream: std::net::TcpStream) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let reply = match handle_line(&coord, line.trim()) {
+            Ok(j) => j,
+            Err(e) => format!("{{\"error\": \"{e}\"}}"),
+        };
+        stream.write_all(reply.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+    }
+}
+
+fn handle_line(coord: &Coordinator, line: &str) -> Result<String, String> {
+    let j = Json::parse(line)?;
+    let prompt: Vec<i32> = j
+        .expect("prompt")?
+        .as_arr()
+        .ok_or("prompt must be a list")?
+        .iter()
+        .filter_map(Json::as_f64)
+        .map(|v| v as i32)
+        .collect();
+    let max_new = j
+        .get("max_new_tokens")
+        .and_then(Json::as_usize)
+        .unwrap_or(16);
+    let temperature = j
+        .get("temperature")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0) as f32;
+    let (_, rx) = coord
+        .submit_async(prompt, max_new, temperature)
+        .map_err(|e| e.to_string())?;
+    let resp = rx.recv().map_err(|_| "request dropped".to_string())?;
+    let toks = resp
+        .tokens
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    Ok(format!(
+        "{{\"id\": {}, \"tokens\": [{}], \"ttft_s\": {:.6}, \"total_s\": {:.6}, \"modeled_accel_s\": {:.6}}}",
+        resp.id, toks, resp.ttft_s, resp.total_s, resp.modeled_accel_s
+    ))
+}

@@ -1,0 +1,238 @@
+//! Calibration: run `collect_acts` on a calibration corpus and distill
+//! everything every quantization method needs — per-linear activation
+//! codebooks (Fisher-weighted K-Means, §V-A), static outlier thresholds
+//! (OASIS-S), per-channel absmax (SmoothQuant / Atom), and channel
+//! permutations (Atom).
+
+use anyhow::Result;
+
+use super::corpora::{Corpus, Generator};
+use crate::quant::{self, Codebook, OutlierCfg};
+use crate::runtime::{HostTensor, ParamSet, Runtime};
+
+/// Everything distilled from calibration activations.
+pub struct Calibration {
+    /// per-linear normalized activation codebooks, one per n_bits choice
+    /// is learned on demand via `codebooks(bits)` — raw samples kept here
+    pub acts: Vec<Vec<f32>>,   // [n_linears][samples]
+    pub fisher: Vec<Vec<f32>>, // [n_linears][samples] squared grads
+    /// per-linear (lo, hi) static thresholds
+    pub thresholds: Vec<(f32, f32)>,
+    /// per-linear per-channel absmax (for smooth/atom); channel dim varies
+    pub absmax: Vec<Vec<f32>>,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// token dimension of each linear input
+    pub dims: Vec<usize>,
+    /// tokens used
+    pub n_tokens: usize,
+    pub outlier: OutlierCfg,
+}
+
+/// Which linear a flat index maps to (kind 0..2 are d-dim, 3 is ff-dim),
+/// matching python model.LINEARS_PER_LAYER ordering.
+fn linear_dims(n_layers: usize, d: usize, dff: usize) -> Vec<usize> {
+    let mut v = Vec::with_capacity(4 * n_layers);
+    for _ in 0..n_layers {
+        v.extend_from_slice(&[d, d, d, dff]);
+    }
+    v
+}
+
+/// Run collect_acts over `n_samples` batches of the calibration corpus.
+pub fn calibrate(
+    rt: &mut Runtime,
+    params: &ParamSet,
+    corpus: Corpus,
+    n_samples: usize,
+    outlier: OutlierCfg,
+) -> Result<Calibration> {
+    let m = rt.manifest.model;
+    let (nl, d, dff) = (m.n_layers, m.d_model, m.d_ff);
+    let n_linears = 4 * nl;
+    let dims = linear_dims(nl, d, dff);
+
+    let mut acts: Vec<Vec<f32>> = vec![Vec::new(); n_linears];
+    let mut fisher: Vec<Vec<f32>> = vec![Vec::new(); n_linears];
+    let mut absmax: Vec<Vec<f32>> = dims.iter().map(|&dd| vec![0.0f32; dd]).collect();
+    let mut per_token_thresholds: Vec<(Vec<f32>, Vec<f32>)> =
+        vec![(Vec::new(), Vec::new()); n_linears];
+
+    let mut gen = Generator::new(corpus, m.vocab, 0xCA11B);
+    let exe = rt.load("collect_acts")?;
+    let tokens_per_batch = m.batch * m.seq_len;
+    let n_batches = n_samples.div_ceil(m.batch).max(1);
+
+    for _ in 0..n_batches {
+        let (t, y) = gen.batch(m.batch, m.seq_len);
+        let mut inputs = params.tensors.clone();
+        inputs.push(HostTensor::i32(t, &[m.batch, m.seq_len]));
+        inputs.push(HostTensor::i32(y, &[m.batch, m.seq_len]));
+        let out = exe.run(&inputs)?;
+        // outputs: acts_d (3L,B,T,d), acts_ff (L,B,T,ff), gd, gf
+        let (ad, af, gd, gf) = (
+            out[0].as_f32()?,
+            out[1].as_f32()?,
+            out[2].as_f32()?,
+            out[3].as_f32()?,
+        );
+        for li in 0..n_linears {
+            let (l, kind) = (li / 4, li % 4);
+            let (src, gsrc, dd) = if kind == 3 {
+                (
+                    &af[l * tokens_per_batch * dff..(l + 1) * tokens_per_batch * dff],
+                    &gf[l * tokens_per_batch * dff..(l + 1) * tokens_per_batch * dff],
+                    dff,
+                )
+            } else {
+                let s = (3 * l + kind) * tokens_per_batch * d;
+                (&ad[s..s + tokens_per_batch * d], &gd[s..s + tokens_per_batch * d], d)
+            };
+            for tok in 0..tokens_per_batch {
+                let row = &src[tok * dd..(tok + 1) * dd];
+                let grow = &gsrc[tok * dd..(tok + 1) * dd];
+                // per-token thresholds (k-th largest/smallest)
+                let k = outlier.k_per_side(dd);
+                let mut sorted: Vec<f32> = row.to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                per_token_thresholds[li].0.push(sorted[k - 1]);
+                per_token_thresholds[li].1.push(sorted[dd - k]);
+                for (c, (&v, &_g)) in row.iter().zip(grow).enumerate() {
+                    absmax[li][c] = absmax[li][c].max(v.abs());
+                }
+                // subsample activations for codebook learning
+                let stride = (dd / 64).max(1);
+                let mut c = tok % stride;
+                while c < dd {
+                    acts[li].push(row[c]);
+                    fisher[li].push(grow[c] * grow[c]);
+                    c += stride;
+                }
+            }
+        }
+    }
+
+    let thresholds = per_token_thresholds
+        .iter()
+        .map(|(lo, hi)| {
+            (
+                lo.iter().sum::<f32>() / lo.len().max(1) as f32,
+                hi.iter().sum::<f32>() / hi.len().max(1) as f32,
+            )
+        })
+        .collect();
+
+    Ok(Calibration {
+        acts,
+        fisher,
+        thresholds,
+        absmax,
+        n_layers: nl,
+        d_model: d,
+        d_ff: dff,
+        dims,
+        n_tokens: n_batches * tokens_per_batch,
+        outlier,
+    })
+}
+
+impl Calibration {
+    /// Learn the per-linear normalized activation codebooks at `bits`
+    /// (Fisher-weighted when `weighted`). Returns the (n_linears, 2^bits)
+    /// tensor the `eval_kmeans_*` artifacts expect.
+    pub fn codebooks(&self, bits: u32, weighted: bool) -> HostTensor {
+        let n_linears = self.acts.len();
+        let mut data = Vec::with_capacity(n_linears << bits);
+        for li in 0..n_linears {
+            let cb = self.learn_codebook(li, bits, weighted);
+            data.extend_from_slice(&cb.centroids);
+        }
+        HostTensor::f32(data, &[n_linears, 1usize << bits])
+    }
+
+    pub fn learn_codebook(&self, li: usize, bits: u32, weighted: bool) -> Codebook {
+        // normalize samples per-linear by the 99.5th-percentile magnitude
+        // (a robust stand-in for the per-token inlier scale)
+        let xs = &self.acts[li];
+        let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let scale = mags[((mags.len() - 1) as f64 * 0.995) as usize].max(1e-9);
+        let normed: Vec<f32> = xs.iter().map(|x| (x / scale).clamp(-1.0, 1.0)).collect();
+        let w = if weighted { Some(self.fisher[li].as_slice()) } else { None };
+        Codebook::new(quant::kmeans::weighted_kmeans_1d(&normed, w, 1 << bits, 30))
+    }
+
+    /// (n_linears, 2) static thresholds tensor for `eval_kmeans_static_*`.
+    pub fn thresholds_tensor(&self) -> HostTensor {
+        let mut data = Vec::with_capacity(self.thresholds.len() * 2);
+        for &(lo, hi) in &self.thresholds {
+            data.push(lo);
+            data.push(hi);
+        }
+        HostTensor::f32(data, &[self.thresholds.len(), 2])
+    }
+
+    /// SmoothQuant vectors: (3L, d) and (L, ff) smoothing tensors plus the
+    /// per-linear vectors for weight-side scaling.
+    pub fn smooth_vectors(&self, params_absmax_w: &[Vec<f32>], alpha: f64) -> (HostTensor, HostTensor, Vec<Vec<f32>>) {
+        let (nl, d, dff) = (self.n_layers, self.d_model, self.d_ff);
+        let mut sm_d = vec![0.0f32; 3 * nl * d];
+        let mut sm_ff = vec![0.0f32; nl * dff];
+        let mut per_linear = Vec::with_capacity(4 * nl);
+        for li in 0..4 * nl {
+            let (l, kind) = (li / 4, li % 4);
+            let a = &self.absmax[li];
+            let w = &params_absmax_w[li];
+            let s: Vec<f32> = a
+                .iter()
+                .zip(w)
+                .map(|(&am, &wm)| {
+                    ((am.max(1e-6) as f64).powf(alpha)
+                        / (wm.max(1e-6) as f64).powf(1.0 - alpha))
+                    .max(1e-6) as f32
+                })
+                .collect();
+            if kind == 3 {
+                sm_ff[l * dff..(l + 1) * dff].copy_from_slice(&s);
+            } else {
+                let off = (3 * l + kind) * d;
+                sm_d[off..off + d].copy_from_slice(&s);
+            }
+            per_linear.push(s);
+        }
+        (
+            HostTensor::f32(sm_d, &[3 * nl, d]),
+            HostTensor::f32(sm_ff, &[nl, dff]),
+            per_linear,
+        )
+    }
+
+    /// Atom permutations: (3L, d) and (L, ff) i32 tensors + per-linear perms.
+    pub fn atom_perms(&self) -> (HostTensor, HostTensor, Vec<Vec<u32>>) {
+        let (nl, d, dff) = (self.n_layers, self.d_model, self.d_ff);
+        let mut pd = vec![0i32; 3 * nl * d];
+        let mut pf = vec![0i32; nl * dff];
+        let mut per_linear = Vec::with_capacity(4 * nl);
+        for li in 0..4 * nl {
+            let (l, kind) = (li / 4, li % 4);
+            let perm = quant::atom::outlier_permutation(&self.absmax[li]);
+            if kind == 3 {
+                for (i, &p) in perm.iter().enumerate() {
+                    pf[l * dff + i] = p as i32;
+                }
+            } else {
+                let off = (3 * l + kind) * d;
+                for (i, &p) in perm.iter().enumerate() {
+                    pd[off + i] = p as i32;
+                }
+            }
+            per_linear.push(perm);
+        }
+        (
+            HostTensor::i32(pd, &[3 * nl, d]),
+            HostTensor::i32(pf, &[nl, dff]),
+            per_linear,
+        )
+    }
+}

@@ -1,0 +1,210 @@
+//! Per-method weight preparation + artifact selection for the Table III/IV
+//! family: given FP parameters and a Calibration, produce the fake-quant
+//! parameter set and the extra artifact inputs for each method.
+
+use anyhow::Result;
+
+use super::calibrate::Calibration;
+use crate::quant;
+use crate::runtime::{HostTensor, Manifest, ParamSet};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Fp16,
+    Rtn,
+    Smooth,
+    Quarot,
+    Atom,
+    /// the paper's method (KLLM/OASIS, dynamic outliers)
+    Kmeans,
+    /// OASIS-S (static thresholds)
+    KmeansStatic,
+}
+
+impl Method {
+    pub const ALL_QUANT: [Method; 6] = [
+        Method::Rtn,
+        Method::Smooth,
+        Method::Quarot,
+        Method::Atom,
+        Method::KmeansStatic,
+        Method::Kmeans,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "FP16",
+            Method::Rtn => "RTN",
+            Method::Smooth => "SmoothQuant",
+            Method::Quarot => "QuaRot",
+            Method::Atom => "Atom",
+            Method::Kmeans => "KLLM (OASIS)",
+            Method::KmeansStatic => "KLLM-S (OASIS-S)",
+        }
+    }
+
+    /// artifact name for this method at n_bits (None => plain loss_eval).
+    pub fn artifact(&self, n_bits: u32) -> Option<String> {
+        let m = match self {
+            Method::Fp16 => return None,
+            Method::Rtn => "rtn",
+            Method::Smooth => "smooth",
+            Method::Quarot => "quarot",
+            Method::Atom => "atom",
+            Method::Kmeans => "kmeans",
+            Method::KmeansStatic => "kmeans_static",
+        };
+        Some(format!("eval_{m}_a{n_bits}"))
+    }
+}
+
+/// Prepared evaluation inputs: fake-quant weights + method extras.
+pub struct Prepared {
+    pub params: ParamSet,
+    pub extras: Vec<HostTensor>,
+    /// wall-clock spent quantizing (Fig 17's quantization-time axis)
+    pub quant_seconds: f64,
+}
+
+/// Per-linear weight absmax along input channels (for SmoothQuant).
+fn weight_absmax(manifest: &Manifest, params: &ParamSet) -> Vec<Vec<f32>> {
+    ParamSet::linear_param_names(manifest)
+        .iter()
+        .map(|name| {
+            let idx = ParamSet::index_of(manifest, name).unwrap();
+            let w = params.matrix(idx).unwrap();
+            (0..w.rows)
+                .map(|r| w.row(r).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+                .collect()
+        })
+        .collect()
+}
+
+fn for_each_linear(
+    manifest: &Manifest,
+    params: &mut ParamSet,
+    mut f: impl FnMut(usize, &Matrix) -> Matrix,
+) -> Result<()> {
+    for (li, name) in ParamSet::linear_param_names(manifest).iter().enumerate() {
+        let idx = ParamSet::index_of(manifest, name).unwrap();
+        let w = params.matrix(idx)?;
+        let new = f(li, &w);
+        params.set_matrix(idx, &new)?;
+    }
+    Ok(())
+}
+
+/// Prepare weights + extras for (method, n_bits).
+pub fn prepare(
+    manifest: &Manifest,
+    fp_params: &ParamSet,
+    calib: &Calibration,
+    method: Method,
+    n_bits: u32,
+) -> Result<Prepared> {
+    let t0 = std::time::Instant::now();
+    let mut params = fp_params.clone();
+    let extras: Vec<HostTensor> = match method {
+        Method::Fp16 => vec![],
+        Method::Rtn => {
+            for_each_linear(manifest, &mut params, |_, w| {
+                quant::rtn::fake_quant_weights(w, n_bits)
+            })?;
+            vec![]
+        }
+        Method::Smooth => {
+            let wmax = weight_absmax(manifest, fp_params);
+            let (sm_d, sm_ff, per_linear) = calib.smooth_vectors(&wmax, 0.5);
+            for_each_linear(manifest, &mut params, |li, w| {
+                let mut scaled = w.clone();
+                scaled.scale_rows(&per_linear[li]);
+                quant::rtn::fake_quant_weights(&scaled, n_bits)
+            })?;
+            vec![sm_d, sm_ff]
+        }
+        Method::Quarot => {
+            for_each_linear(manifest, &mut params, |_, w| {
+                quant::quarot::quarot_quantize(w, n_bits)
+            })?;
+            vec![]
+        }
+        Method::Atom => {
+            let (pd, pf, perms) = calib.atom_perms();
+            for_each_linear(manifest, &mut params, |li, w| {
+                // quantize in permuted order (so the trailing outlier-channel
+                // block matches the artifact's permuted activation view)...
+                let mut wp = Matrix::zeros(w.rows, w.cols);
+                for (new_r, &old_r) in perms[li].iter().enumerate() {
+                    wp.row_mut(new_r).copy_from_slice(w.row(old_r as usize));
+                }
+                group_quant_inplace(&mut wp, n_bits);
+                // ...then restore original row order: the artifact's act_q
+                // inverse-permutes activations back before the matmul.
+                let mut out = Matrix::zeros(w.rows, w.cols);
+                for (new_r, &old_r) in perms[li].iter().enumerate() {
+                    out.row_mut(old_r as usize).copy_from_slice(wp.row(new_r));
+                }
+                out
+            })?;
+            vec![pd, pf]
+        }
+        Method::Kmeans => {
+            for_each_linear(manifest, &mut params, |_, w| {
+                quant::quantize_weights(w, 4).dequantize()
+            })?;
+            vec![calib.codebooks(n_bits, true)]
+        }
+        Method::KmeansStatic => {
+            for_each_linear(manifest, &mut params, |_, w| {
+                quant::quantize_weights(w, 4).dequantize()
+            })?;
+            vec![calib.codebooks(n_bits, true), calib.thresholds_tensor()]
+        }
+    };
+    Ok(Prepared { params, extras, quant_seconds: t0.elapsed().as_secs_f64() })
+}
+
+/// Atom-style group quantization along the input dim: groups of d/32 at
+/// n_bits, trailing d/32 outlier block at 8 bits (mirrors model.make_q_atom).
+fn group_quant_inplace(w: &mut Matrix, n_bits: u32) {
+    let d = w.rows;
+    let g = (d / 32).max(1);
+    let n_out = g;
+    for c in 0..w.cols {
+        let mut col: Vec<f32> = (0..d).map(|r| w.at(r, c)).collect();
+        let mut r0 = 0;
+        while r0 < d {
+            let r1 = (r0 + g).min(d);
+            let b = if r0 >= d.saturating_sub(n_out) { 8 } else { n_bits };
+            let seg = &mut col[r0..r1];
+            let m = seg.iter().fold(0.0f32, |mm, &x| mm.max(x.abs()));
+            let qmax = ((1i32 << (b - 1)) - 1) as f32;
+            quant::rtn::fake_quant_slice(seg, m / qmax, b);
+            r0 = r1;
+        }
+        for r in 0..d {
+            *w.at_mut(r, c) = col[r];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(Method::Kmeans.artifact(4).as_deref(), Some("eval_kmeans_a4"));
+        assert_eq!(Method::Fp16.artifact(4), None);
+        assert_eq!(
+            Method::KmeansStatic.artifact(3).as_deref(),
+            Some("eval_kmeans_static_a3")
+        );
+    }
+
+    #[test]
+    fn all_quant_covers_table3_rows() {
+        assert_eq!(Method::ALL_QUANT.len(), 6);
+    }
+}

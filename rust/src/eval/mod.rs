@@ -1,0 +1,16 @@
+//! Algorithm-side evaluation harness (the lm-eval-harness substitute):
+//! synthetic corpora, calibration, per-method quantized evaluation,
+//! zero-shot-style tasks, and the experiment registry that regenerates
+//! every paper table/figure.
+
+pub mod calibrate;
+pub mod corpora;
+pub mod experiments;
+pub mod methods;
+pub mod ppl;
+pub mod tasks;
+
+pub use calibrate::{calibrate, Calibration};
+pub use corpora::{Corpus, Generator};
+pub use experiments::{run as run_experiment, ExperimentCtx, ALL_IDS};
+pub use methods::Method;

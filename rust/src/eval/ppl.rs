@@ -1,0 +1,136 @@
+//! Perplexity evaluation + the train-or-load checkpoint helper shared by
+//! the accuracy experiments (Table III/IV, Figs 3/5/15/17).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use super::calibrate::Calibration;
+use super::corpora::{Corpus, Generator};
+use super::methods::{prepare, Method, Prepared};
+use crate::runtime::{HostTensor, ParamSet, Runtime};
+use crate::util::rng::Rng;
+
+/// Mean NLL over `n_batches` held-out batches via `loss_eval` (method
+/// None) or a quantized-eval artifact.
+pub fn eval_nll(
+    rt: &mut Runtime,
+    artifact: Option<&str>,
+    params: &ParamSet,
+    extras: &[HostTensor],
+    corpus: Corpus,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let m = rt.manifest.model;
+    let mut gen = Generator::new(corpus, m.vocab, seed);
+    let exe = rt.load(artifact.unwrap_or("loss_eval"))?;
+    let mut total = 0.0f64;
+    for _ in 0..n_batches {
+        let (t, y) = gen.batch(m.batch, m.seq_len);
+        let mut inputs = params.tensors.clone();
+        inputs.extend(extras.iter().cloned());
+        inputs.push(HostTensor::i32(t, &[m.batch, m.seq_len]));
+        inputs.push(HostTensor::i32(y, &[m.batch, m.seq_len]));
+        let out = exe.run(&inputs)?;
+        total += out[0].as_f32()?[0] as f64;
+    }
+    Ok(total / n_batches as f64)
+}
+
+pub fn ppl(nll: f64) -> f64 {
+    nll.exp()
+}
+
+/// Evaluate one method end-to-end: prepare fake-quant weights + extras,
+/// run its artifact, return (ppl, quant_seconds).
+pub fn eval_method(
+    rt: &mut Runtime,
+    fp_params: &ParamSet,
+    calib: &Calibration,
+    method: Method,
+    n_bits: u32,
+    corpus: Corpus,
+    n_batches: usize,
+) -> Result<(f64, f64)> {
+    let manifest = rt.manifest.clone();
+    let Prepared { params, extras, quant_seconds } =
+        prepare(&manifest, fp_params, calib, method, n_bits)?;
+    let artifact = method.artifact(n_bits);
+    let nll = eval_nll(
+        rt,
+        artifact.as_deref(),
+        &params,
+        &extras,
+        corpus,
+        n_batches,
+        0xE7A1,
+    )?;
+    Ok((ppl(nll), quant_seconds))
+}
+
+/// Train a model on `corpus` via the train_step artifact, or load the
+/// cached checkpoint if present. Returns (params, loss curve).
+pub fn train_or_load(
+    rt: &mut Runtime,
+    corpus: Corpus,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(ParamSet, Vec<f32>)> {
+    let ckpt: PathBuf = rt
+        .manifest
+        .dir
+        .join(format!("ckpt_{}_{}steps.bin", corpus.name(), steps));
+    if ckpt.exists() {
+        let p = ParamSet::load(&ckpt)?;
+        return Ok((p, vec![]));
+    }
+    let (p, losses) = train(rt, corpus, steps, lr, seed, &mut |_s, _l| {})?;
+    p.save(&ckpt)?;
+    Ok((p, losses))
+}
+
+/// Train loop over the train_step artifact (host-side optimizer state
+/// feedback). `progress(step, loss)` is called every step.
+pub fn train(
+    rt: &mut Runtime,
+    corpus: Corpus,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+    progress: &mut dyn FnMut(usize, f32),
+) -> Result<(ParamSet, Vec<f32>)> {
+    let m = rt.manifest.model;
+    let manifest = rt.manifest.clone();
+    let mut rng = Rng::new(seed);
+    let mut params = ParamSet::init(&manifest, &mut rng);
+    let mut mstate = ParamSet::zeros_like(&manifest);
+    let mut vstate = ParamSet::zeros_like(&manifest);
+    let mut gen = Generator::new(corpus, m.vocab, seed ^ 0x7EA1);
+    let exe = rt.load("train_step")?;
+    let n = params.tensors.len();
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (t, y) = gen.batch(m.batch, m.seq_len);
+        let mut inputs = params.tensors.clone();
+        inputs.extend(mstate.tensors.iter().cloned());
+        inputs.extend(vstate.tensors.iter().cloned());
+        inputs.push(HostTensor::scalar_f32((step + 1) as f32));
+        inputs.push(HostTensor::scalar_f32(lr));
+        inputs.push(HostTensor::i32(t, &[m.batch, m.seq_len]));
+        inputs.push(HostTensor::i32(y, &[m.batch, m.seq_len]));
+        let out = exe.run(&inputs)?;
+        let mut it = out.into_iter();
+        params.tensors = (&mut it).take(n).collect();
+        mstate.tensors = (&mut it).take(n).collect();
+        vstate.tensors = (&mut it).take(n).collect();
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("train_step missing loss output"))?
+            .as_f32()?[0];
+        losses.push(loss);
+        progress(step, loss);
+    }
+    Ok((params, losses))
+}

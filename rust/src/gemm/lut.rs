@@ -1,0 +1,125 @@
+//! The Cartesian-Product LUT (paper §III-B): all 2^(nA+nW) products of
+//! activation x weight centroids, precomputed offline and resident on-chip.
+//! Layout matches the concatenated index `cat = ia << nW | iw` used by the
+//! Concat Units and by the L1 Pallas kernels.
+
+use crate::quant::Codebook;
+
+#[derive(Clone, Debug)]
+pub struct CartesianLut {
+    pub table: Vec<f32>,
+    pub n_a_bits: u32,
+    pub n_w_bits: u32,
+}
+
+impl CartesianLut {
+    pub fn build(cb_a: &Codebook, cb_w: &Codebook) -> Self {
+        let n_a_bits = cb_a.bits();
+        let n_w_bits = cb_w.bits();
+        let mut table = Vec::with_capacity(1 << (n_a_bits + n_w_bits));
+        for &ca in &cb_a.centroids {
+            for &cw in &cb_w.centroids {
+                table.push(ca * cw);
+            }
+        }
+        CartesianLut { table, n_a_bits, n_w_bits }
+    }
+
+    #[inline]
+    pub fn cat(&self, ia: u8, iw: u8) -> usize {
+        ((ia as usize) << self.n_w_bits) | iw as usize
+    }
+
+    #[inline]
+    pub fn lookup(&self, ia: u8, iw: u8) -> f32 {
+        self.table[self.cat(ia, iw)]
+    }
+
+    pub fn entries(&self) -> usize {
+        self.table.len()
+    }
+
+    /// On-chip LUT bytes at FP16 storage (as in Table II: 2 KB holds the
+    /// 256-entry LUT plus both codebooks).
+    pub fn storage_bytes(&self) -> usize {
+        self.table.len() * 2
+    }
+}
+
+/// Table I analytics: LUT sizes / group sizes / reduction FLOPs for the
+/// paper's scheme-comparison table (entries, not bytes).
+pub mod analytics {
+    /// Ours: LUT entries = 2^(nA+nW), independent of K.
+    pub fn waq_lut_entries(n_a_bits: u32, n_w_bits: u32) -> usize {
+        1usize << (n_a_bits + n_w_bits)
+    }
+
+    /// WOQ inner-product LUT entries for reduction length K, group size mu:
+    /// 2^mu entries per group, K/mu groups (Table I: `2^mu * K/mu`).
+    pub fn woq_lut_entries(k: usize, mu: usize) -> usize {
+        (1usize << mu) * k.div_ceil(mu)
+    }
+
+    /// Ours: FP additions per output tile of N channels = 2^(nA+nW) * N
+    /// (one weighted sum per channel), independent of K.
+    pub fn waq_reduction_flops(n_a_bits: u32, n_w_bits: u32, n: usize) -> usize {
+        waq_lut_entries(n_a_bits, n_w_bits) * n
+    }
+
+    /// WOQ: K/mu partial sums per bit-plane, n_w bit-planes, N channels
+    /// (Table I: `K/mu * n_w * N`).
+    pub fn woq_reduction_flops(k: usize, mu: usize, n_w_bits: u32, n: usize) -> usize {
+        k.div_ceil(mu) * n_w_bits as usize * n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lut_is_outer_product() {
+        let mut rng = Rng::new(1);
+        let cb_a = Codebook::new(rng.normal_vec(16, 1.0));
+        let cb_w = Codebook::new(rng.normal_vec(16, 1.0));
+        let lut = CartesianLut::build(&cb_a, &cb_w);
+        assert_eq!(lut.entries(), 256);
+        for ia in 0..16u8 {
+            for iw in 0..16u8 {
+                assert_eq!(
+                    lut.lookup(ia, iw),
+                    cb_a.value(ia) * cb_w.value(iw),
+                    "({ia},{iw})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_table1_numbers() {
+        use analytics::*;
+        // the paper's running example: K = N = 4096, nA = nW = 4, mu = 4
+        let (k, n) = (4096, 4096);
+        assert_eq!(waq_lut_entries(4, 4), 256);
+        assert_eq!(woq_lut_entries(k, 4), 16 * 1024);
+        // 64x LUT-size reduction claimed in §III-B
+        assert_eq!(woq_lut_entries(k, 4) / waq_lut_entries(4, 4), 64);
+        // 16x FLOP reduction claimed in §III-B
+        assert_eq!(
+            woq_reduction_flops(k, 4, 4, n) / waq_reduction_flops(4, 4, n),
+            16
+        );
+    }
+
+    #[test]
+    fn mixed_bitwidths() {
+        let mut rng = Rng::new(2);
+        let cb_a = Codebook::new(rng.normal_vec(8, 1.0)); // 3-bit activations
+        let cb_w = Codebook::new(rng.normal_vec(16, 1.0)); // 4-bit weights
+        let lut = CartesianLut::build(&cb_a, &cb_w);
+        assert_eq!(lut.entries(), 128);
+        assert_eq!(lut.cat(7, 15), 127);
+        assert_eq!(lut.lookup(5, 9), cb_a.value(5) * cb_w.value(9));
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's GEMM schemes in software: the Cartesian-product LUT, the
+//! WAQ LUT-GEMM main branch (bit-exact Index-Counter semantics), the
+//! outlier branch (look-ahead + error compensation), and the WOQ
+//! inner-product-LUT baseline family.
+
+pub mod compensation;
+pub mod lut;
+pub mod waq;
+pub mod woq;
+
+pub use compensation::{compensate, execute_critical_path, execute_dual_branch};
+pub use lut::CartesianLut;
+pub use waq::{execute_direct, execute_histogram};

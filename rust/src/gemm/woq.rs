@@ -1,0 +1,154 @@
+//! WOQ LUT-GEMM baseline (FIGLUT / LUT Tensor Core / LUT-GEMM style,
+//! paper §II-B): group-wise inner-product LUTs over FP16 activations with
+//! bit-serial weight processing. Implemented functionally (verified against
+//! a direct dot product) and instrumented for the Table I / Fig 16
+//! LUT-size and reduction-FLOP comparisons.
+
+use crate::tensor::Matrix;
+
+/// Group size mu used by FIGLUT / LUT Tensor Core (paper: mu = 4).
+pub const DEFAULT_MU: usize = 4;
+
+/// One GEMV y = x @ W with int-quantized weights (values in [-2^(b-1),
+/// 2^(b-1)-1] as i8) via group-wise inner-product LUTs + bit-serial
+/// accumulation. `x` is the FP16(f32) activation of length K; `w_q` is
+/// K x N (row-major); returns length-N output (scales are the caller's
+/// concern — baselines fold them per output channel).
+pub fn woq_lut_gemv(x: &[f32], w_q: &[i8], n: usize, bits: u32, mu: usize) -> Vec<f32> {
+    let k = x.len();
+    assert_eq!(w_q.len(), k * n);
+    let n_groups = k.div_ceil(mu);
+    let lut_len = 1usize << mu;
+
+    // Build the on-the-fly inner-product LUT: for each group g, T[g][p] =
+    // sum of x[i] over the subset selected by bit pattern p. This is the
+    // per-inference LUT-generation cost WOQ schemes pay (2^mu * K/mu
+    // entries — exactly the Table I row).
+    let mut luts = vec![0.0f32; n_groups * lut_len];
+    for g in 0..n_groups {
+        let base = g * mu;
+        let tbl = &mut luts[g * lut_len..(g + 1) * lut_len];
+        for p in 1..lut_len {
+            // incremental: p = q | lowest_bit
+            let low = p.trailing_zeros() as usize;
+            let rest = p & (p - 1);
+            let xv = if base + low < k { x[base + low] } else { 0.0 };
+            tbl[p] = tbl[rest] + xv;
+        }
+    }
+
+    // offset-binary weight encoding: w = q' - 2^(b-1), q' in [0, 2^b)
+    let offset = 1i32 << (bits - 1);
+    let x_total: f32 = x.iter().sum();
+
+    let mut out = vec![0.0f32; n];
+    for j in 0..n {
+        let mut acc = 0.0f32;
+        for g in 0..n_groups {
+            let base = g * mu;
+            let tbl = &luts[g * lut_len..(g + 1) * lut_len];
+            // bit-serial over weight bit-planes
+            for b in 0..bits {
+                let mut pattern = 0usize;
+                for i in 0..mu {
+                    let kk = base + i;
+                    if kk >= k {
+                        break;
+                    }
+                    let qp = (w_q[kk * n + j] as i32 + offset) as u32;
+                    if (qp >> b) & 1 == 1 {
+                        pattern |= 1 << i;
+                    }
+                }
+                acc += ((1u32 << b) as f32) * tbl[pattern];
+            }
+        }
+        out[j] = acc - offset as f32 * x_total;
+    }
+    out
+}
+
+/// Cost metrics of one WOQ LUT-GEMM execution (Fig 16 inputs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WoqCost {
+    /// LUT entries materialized per token (FP16 each)
+    pub lut_entries: usize,
+    /// FP additions in the reduction (per token, all N channels)
+    pub reduction_flops: usize,
+    /// FP additions to *build* the LUTs (on-the-fly generation cost)
+    pub lut_gen_flops: usize,
+}
+
+pub fn woq_cost(k: usize, n: usize, bits: u32, mu: usize) -> WoqCost {
+    let n_groups = k.div_ceil(mu);
+    WoqCost {
+        lut_entries: n_groups << mu,
+        reduction_flops: n_groups * bits as usize * n,
+        lut_gen_flops: n_groups * ((1 << mu) - 1),
+    }
+}
+
+/// LUT-GEMM (Park et al.) uses a larger group size to trade LUT size for
+/// fewer reduction FLOPs; the paper's Fig 16 uses mu = 8 for that baseline.
+pub const LUT_GEMM_MU: usize = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn direct(x: &[f32], w_q: &[i8], n: usize) -> Vec<f32> {
+        let k = x.len();
+        let mut out = vec![0.0f32; n];
+        for j in 0..n {
+            out[j] = (0..k).map(|i| x[i] * w_q[i * n + j] as f32).sum();
+        }
+        out
+    }
+
+    #[test]
+    fn matches_direct_dot() {
+        let mut rng = Rng::new(1);
+        for &(k, n, bits, mu) in &[(16usize, 4usize, 4u32, 4usize), (64, 8, 4, 4), (60, 3, 3, 4), (128, 5, 4, 8)] {
+            let x = rng.normal_vec(k, 1.0);
+            let w_q: Vec<i8> = (0..k * n)
+                .map(|_| (rng.below(1 << bits) as i32 - (1 << (bits - 1))) as i8)
+                .collect();
+            let got = woq_lut_gemv(&x, &w_q, n, bits, mu);
+            let want = direct(&x, &w_q, n);
+            crate::util::check::assert_allclose(&got, &want, 1e-4, 1e-3, "woq");
+        }
+    }
+
+    #[test]
+    fn cost_matches_table1() {
+        // K = N = 4096, nW = 4, mu = 4 (Table I)
+        let c = woq_cost(4096, 4096, 4, 4);
+        assert_eq!(c.lut_entries, (1 << 4) * 1024);
+        assert_eq!(c.reduction_flops, 1024 * 4 * 4096);
+    }
+
+    #[test]
+    fn bigger_group_trades_lut_for_flops() {
+        let a = woq_cost(4096, 4096, 4, 4);
+        let b = woq_cost(4096, 4096, 4, LUT_GEMM_MU);
+        assert!(b.lut_entries > a.lut_entries);
+        assert!(b.reduction_flops < a.reduction_flops);
+    }
+
+    #[test]
+    fn ragged_k_handled() {
+        let mut rng = Rng::new(2);
+        let (k, n) = (13, 3);
+        let x = rng.normal_vec(k, 1.0);
+        let w_q: Vec<i8> = (0..k * n).map(|_| (rng.below(16) as i32 - 8) as i8).collect();
+        let got = woq_lut_gemv(&x, &w_q, n, 4, 4);
+        crate::util::check::assert_allclose(&got, &direct(&x, &w_q, n), 1e-4, 1e-3, "ragged");
+    }
+}
+
+/// Dense-reference path for the baselines that dequantize to FP16 and run a
+/// standard GEMM (paper Fig 1(c)).
+pub fn dequant_then_gemm(a: &Matrix, w_deq: &Matrix) -> Matrix {
+    a.matmul(w_deq)
+}

@@ -1,0 +1,21 @@
+//! KLLM/OASIS: outlier-aware LUT-based GEMM with dual-side K-Means
+//! quantization — a three-layer Rust + JAX + Pallas reproduction.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): quantization algorithms, the bit-exact OASIS datapath
+//!   model, the Orizuru top-k engine, a cycle-level accelerator simulator
+//!   with baselines, the PJRT runtime, and the serving coordinator.
+//! * L2/L1 (python/, build-time only): the JAX transformer + Pallas WAQ
+//!   LUT-GEMM kernels, AOT-lowered to `artifacts/<preset>/*.hlo.txt`.
+
+pub mod util;
+pub mod tensor;
+pub mod quant;
+pub mod gemm;
+pub mod orizuru;
+pub mod models;
+pub mod sim;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;

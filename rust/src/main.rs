@@ -1,0 +1,182 @@
+//! `kllm` — leader entrypoint.
+//!
+//! Subcommands:
+//!   experiment <id|all> [--preset P] [--steps N] [--eval-batches N]
+//!       [--calib-samples N] [--md FILE]    regenerate a paper table/figure
+//!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
+//!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
+//!   quantize [--preset P] [--bits B]        quantize + report one matrix
+//!   list                                    list experiments + artifacts
+
+use std::io::Write;
+
+use anyhow::{anyhow, Result};
+use kllm::coordinator::{serve_tcp, Coordinator, EngineConfig};
+use kllm::eval::{run_experiment, Corpus, ExperimentCtx, ALL_IDS};
+use kllm::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
+use kllm::util::cli::Args;
+use kllm::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse().map_err(|e| anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("list") | None => cmd_list(),
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (try `kllm list`)")),
+    }
+}
+
+fn ctx_from(args: &Args) -> Result<ExperimentCtx> {
+    Ok(ExperimentCtx {
+        preset: args.str_or("preset", "test"),
+        train_steps: args.usize_or("steps", 250).map_err(|e| anyhow!(e))?,
+        eval_batches: args.usize_or("eval-batches", 8).map_err(|e| anyhow!(e))?,
+        calib_samples: args.usize_or("calib-samples", 16).map_err(|e| anyhow!(e))?,
+    })
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    args.check_known(&["preset", "steps", "eval-batches", "calib-samples", "md"])
+        .map_err(|e| anyhow!(e))?;
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: kllm experiment <id|all>"))?;
+    let ctx = ctx_from(args)?;
+    let ids: Vec<&str> = if id == "all" {
+        ALL_IDS.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    let mut md = String::new();
+    for id in ids {
+        eprintln!("[experiment {id}]");
+        let tables = run_experiment(id, &ctx)?;
+        for t in &tables {
+            t.print();
+            md.push_str(&t.render_markdown());
+            md.push('\n');
+        }
+    }
+    if let Some(path) = args.opt("md") {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        f.write_all(md.as_bytes())?;
+        eprintln!("appended markdown to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(&["preset", "steps", "lr", "corpus", "out", "log-every"])
+        .map_err(|e| anyhow!(e))?;
+    let preset = args.str_or("preset", "test");
+    let steps = args.usize_or("steps", 250).map_err(|e| anyhow!(e))?;
+    let lr = args.f64_or("lr", 3e-3).map_err(|e| anyhow!(e))? as f32;
+    let log_every = args.usize_or("log-every", 10).map_err(|e| anyhow!(e))?;
+    let corpus = Corpus::parse(&args.str_or("corpus", "wiki2"))
+        .ok_or_else(|| anyhow!("unknown corpus"))?;
+    let mut rt = Runtime::new(&artifacts_dir(&preset))?;
+    println!(
+        "training {} preset on {} for {steps} steps (lr {lr})",
+        preset,
+        corpus.name()
+    );
+    let t0 = std::time::Instant::now();
+    let (params, losses) = kllm::eval::ppl::train(
+        &mut rt,
+        corpus,
+        steps,
+        lr,
+        0x7121,
+        &mut |s, l| {
+            if s % log_every == 0 {
+                println!("step {s:>5}  loss {l:.4}");
+            }
+        },
+    )?;
+    println!(
+        "done in {:.1}s: loss {:.4} -> {:.4}",
+        t0.elapsed().as_secs_f64(),
+        losses.first().unwrap_or(&0.0),
+        losses.last().unwrap_or(&0.0)
+    );
+    if let Some(out) = args.opt("out") {
+        params.save(std::path::Path::new(out))?;
+        println!("checkpoint saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&["preset", "config", "port", "ckpt", "requests", "max-new"])
+        .map_err(|e| anyhow!(e))?;
+    let mut preset = args.str_or("preset", "test");
+    let mut port = args.usize_or("port", 7070).map_err(|e| anyhow!(e))? as u16;
+    if let Some(cfg_path) = args.opt("config") {
+        let cfg = kllm::util::config::Config::load(cfg_path).map_err(|e| anyhow!(e))?;
+        preset = cfg.str_or("preset", &preset);
+        port = cfg.usize_or("server.port", port as usize).map_err(|e| anyhow!(e))? as u16;
+    }
+    let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(|e| anyhow!(e))?;
+    let params = match args.opt("ckpt") {
+        Some(p) => ParamSet::load(std::path::Path::new(p))?,
+        None => ParamSet::init(&manifest, &mut Rng::new(42)),
+    };
+    let coord = std::sync::Arc::new(Coordinator::start(
+        preset.clone(),
+        params,
+        EngineConfig::default(),
+    )?);
+    let port = serve_tcp(coord.clone(), port)?;
+    println!("kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines)");
+    println!("example: echo '{{\"prompt\": [1,2,3], \"max_new_tokens\": 8}}' | nc 127.0.0.1 {port}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    args.check_known(&["bits", "rows", "cols"]).map_err(|e| anyhow!(e))?;
+    let bits = args.usize_or("bits", 4).map_err(|e| anyhow!(e))? as u32;
+    let rows = args.usize_or("rows", 512).map_err(|e| anyhow!(e))?;
+    let cols = args.usize_or("cols", 512).map_err(|e| anyhow!(e))?;
+    let mut rng = Rng::new(1);
+    let w = kllm::tensor::Matrix::random_normal(rows, cols, 1.0, &mut rng);
+    let t0 = std::time::Instant::now();
+    let q = kllm::quant::quantize_weights(&w, bits);
+    let err = q.dequantize().rel_err(&w);
+    println!(
+        "k-means W{bits} quantization of {rows}x{cols}: rel err {err:.4}, {} bytes ({}x compression), {:.2}s",
+        q.storage_bytes(),
+        rows * cols * 4 / q.storage_bytes(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments: {}", ALL_IDS.join(", "));
+    println!("subcommands: experiment, train, serve, quantize, list");
+    for preset in ["test", "gpt20m", "gpt100m"] {
+        let dir = artifacts_dir(preset);
+        let built = dir.join("manifest.json").exists();
+        println!(
+            "preset {preset:8} artifacts: {}",
+            if built { "built" } else { "missing (make artifacts)" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! LLM architecture descriptors (shape-accurate layer dimensions for every
+//! model in the paper's evaluation). Weight *values* are not needed for the
+//! hardware experiments — throughput/energy of a GEMM-dominated workload
+//! depends on the shapes (DESIGN.md §1.3).
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// gated MLP (SwiGLU: up + gate + down) vs classic (up + down)
+    pub gated_mlp: bool,
+}
+
+impl LlmSpec {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Linear-layer GEMM shapes of one decoder layer as (K, N) pairs for
+    /// y(1xN) = x(1xK) @ W(KxN) during decode.
+    pub fn layer_gemms(&self) -> Vec<(usize, usize)> {
+        let d = self.d_model;
+        let kv = self.n_kv_heads * self.head_dim();
+        let mut v = vec![
+            (d, d),      // q proj
+            (d, kv),     // k proj
+            (d, kv),     // v proj
+            (d, d),      // o proj
+            (d, self.d_ff), // up
+        ];
+        if self.gated_mlp {
+            v.push((d, self.d_ff)); // gate
+        }
+        v.push((self.d_ff, d)); // down
+        v
+    }
+
+    /// Total linear-weight parameter count (embeddings excluded, matching
+    /// what streams from HBM every decode step).
+    pub fn linear_params(&self) -> usize {
+        self.n_layers
+            * self
+                .layer_gemms()
+                .iter()
+                .map(|&(k, n)| k * n)
+                .sum::<usize>()
+    }
+
+    /// KV-cache bytes per token at the given per-element byte size.
+    pub fn kv_bytes_per_token(&self, bytes_per_elem: f64) -> f64 {
+        (2 * self.n_layers * self.n_kv_heads * self.head_dim()) as f64 * bytes_per_elem
+    }
+
+    pub fn params_b(&self) -> f64 {
+        (self.linear_params() + 2 * self.vocab * self.d_model) as f64 / 1e9
+    }
+}
+
+/// All models in the paper's evaluation (Table III / Figs 11-13, 16).
+pub const ZOO: &[LlmSpec] = &[
+    LlmSpec { name: "OPT-6.7B", n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 32, d_ff: 16384, vocab: 50272, gated_mlp: false },
+    LlmSpec { name: "OPT-13B", n_layers: 40, d_model: 5120, n_heads: 40, n_kv_heads: 40, d_ff: 20480, vocab: 50272, gated_mlp: false },
+    LlmSpec { name: "OPT-30B", n_layers: 48, d_model: 7168, n_heads: 56, n_kv_heads: 56, d_ff: 28672, vocab: 50272, gated_mlp: false },
+    LlmSpec { name: "LLaMA-7B", n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 32, d_ff: 11008, vocab: 32000, gated_mlp: true },
+    LlmSpec { name: "LLaMA-13B", n_layers: 40, d_model: 5120, n_heads: 40, n_kv_heads: 40, d_ff: 13824, vocab: 32000, gated_mlp: true },
+    LlmSpec { name: "LLaMA-30B", n_layers: 60, d_model: 6656, n_heads: 52, n_kv_heads: 52, d_ff: 17920, vocab: 32000, gated_mlp: true },
+    LlmSpec { name: "LLaMA-2-7B", n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 32, d_ff: 11008, vocab: 32000, gated_mlp: true },
+    LlmSpec { name: "LLaMA-2-13B", n_layers: 40, d_model: 5120, n_heads: 40, n_kv_heads: 40, d_ff: 13824, vocab: 32000, gated_mlp: true },
+    LlmSpec { name: "LLaMA-2-70B", n_layers: 80, d_model: 8192, n_heads: 64, n_kv_heads: 8, d_ff: 28672, vocab: 32000, gated_mlp: true },
+    LlmSpec { name: "LLaMA-3-8B", n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 8, d_ff: 14336, vocab: 128256, gated_mlp: true },
+    LlmSpec { name: "Mistral-7B", n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 8, d_ff: 14336, vocab: 32000, gated_mlp: true },
+];
+
+pub fn by_name(name: &str) -> Option<&'static LlmSpec> {
+    ZOO.iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_land_near_nameplate() {
+        for (name, lo, hi) in [
+            ("LLaMA-7B", 6.2, 7.2),
+            ("LLaMA-2-13B", 12.0, 13.5),
+            ("LLaMA-2-70B", 63.0, 72.0),
+            ("LLaMA-3-8B", 7.0, 8.6),
+            ("Mistral-7B", 6.5, 7.8),
+            ("OPT-6.7B", 6.0, 7.2),
+        ] {
+            let m = by_name(name).unwrap();
+            let p = m.params_b();
+            assert!(p > lo && p < hi, "{name}: {p}B");
+        }
+    }
+
+    #[test]
+    fn gqa_models_have_small_kv() {
+        let l3 = by_name("LLaMA-3-8B").unwrap();
+        let l2 = by_name("LLaMA-2-7B").unwrap();
+        assert!(l3.kv_bytes_per_token(2.0) < l2.kv_bytes_per_token(2.0) / 2.0);
+    }
+
+    #[test]
+    fn layer_gemm_shapes() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let g = m.layer_gemms();
+        assert!(g.contains(&(4096, 11008)) && g.contains(&(11008, 4096)));
+        assert_eq!(g.len(), 7); // q k v o up gate down
+    }
+
+    #[test]
+    fn zoo_covers_the_paper_table() {
+        assert_eq!(ZOO.len(), 11);
+    }
+}

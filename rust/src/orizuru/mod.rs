@@ -1,0 +1,52 @@
+//! Orizuru — the paper's dynamic outlier-detection engine (§IV-D) — plus
+//! the baselines it is compared against. Cross-checked against
+//! `quant::outlier::topk_outliers` (the algorithm-library reference).
+
+pub mod baseline;
+pub mod tree;
+
+pub use tree::Orizuru;
+
+/// Convenience API matching quant::outlier::topk_outliers: sorted channel
+/// indices of the k largest + k smallest.
+pub fn detect_outliers(x: &[f32], k_per_side: usize) -> Vec<u32> {
+    let mut o = Orizuru::new(x);
+    let (maxs, mins) = o.top_k(k_per_side);
+    let mut idx: Vec<u32> = maxs
+        .into_iter()
+        .chain(mins)
+        .map(|(i, _)| i as u32)
+        .collect();
+    idx.sort_unstable();
+    idx.dedup();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::outlier::topk_outliers;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn agrees_with_reference_detector_on_distinct_values() {
+        let mut rng = Rng::new(1);
+        for case in 0..20 {
+            let n = 64 + case * 37;
+            let x = rng.normal_vec(n, 1.0); // ties have measure zero
+            let k = (n / 50).max(1);
+            let hw = detect_outliers(&x, k);
+            let sw = topk_outliers(&x, k);
+            assert_eq!(hw, sw, "case {case} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn heavy_tailed_activations() {
+        let mut rng = Rng::new(2);
+        let x = rng.heavy_tailed_vec(4096, 0.01, 20.0);
+        let hw = detect_outliers(&x, 20);
+        let sw = topk_outliers(&x, 20);
+        assert_eq!(hw, sw);
+    }
+}

@@ -1,0 +1,331 @@
+//! Orizuru (paper §IV-D): two complete binary trees (max + min) with
+//! *shared leaf nodes*, popping the k largest and k smallest elements of an
+//! activation vector with 1.5N + 2k·log2(N) comparisons.
+//!
+//! Array layout: classic implicit heap — internal nodes 1..N-1, leaves
+//! N..2N-1 (leaf i holds x[i - N]). Each internal node stores one bit (the
+//! MUX select): 0 = left child holds the subtree winner, 1 = right. Each
+//! tree has its own mask (popped leaves), and the min tree's bottom level
+//! is initialized by *reversing* the max tree's bottom-level comparisons,
+//! which is the 50%-init-savings trick that gives the 1.5N term.
+//! Tie-breaking is deterministic: the LEFT child wins ties in both trees
+//! (larger in the max tree, smaller in the min tree).
+
+/// One of the two folded trees.
+struct HalfTree {
+    /// bits[i] for internal node i in 1..n ; bits[0] unused
+    bits: Vec<u8>,
+    /// popped mask per leaf
+    popped: Vec<bool>,
+}
+
+pub struct Orizuru {
+    /// padded leaf count (power of two)
+    n: usize,
+    /// original input length
+    len: usize,
+    values: Vec<f32>,
+    max_tree: HalfTree,
+    min_tree: HalfTree,
+    comparisons: u64,
+}
+
+impl Orizuru {
+    /// Build both trees over `x`. Counts: N-1 comparisons for the max tree,
+    /// N/2-1 for the min tree (bottom level reused) = 1.5N - 2 total.
+    pub fn new(x: &[f32]) -> Self {
+        assert!(!x.is_empty());
+        let len = x.len();
+        let n = len.next_power_of_two().max(2);
+        let mut values = x.to_vec();
+        values.resize(n, 0.0);
+        // padding leaves start popped in both trees so they are never
+        // selected
+        let mut popped = vec![false; n];
+        for p in popped.iter_mut().skip(len) {
+            *p = true;
+        }
+        let mut o = Orizuru {
+            n,
+            len,
+            values,
+            max_tree: HalfTree { bits: vec![0; n], popped: popped.clone() },
+            min_tree: HalfTree { bits: vec![0; n], popped },
+            comparisons: 0,
+        };
+        o.init();
+        o
+    }
+
+    /// Effective leaf value for a tree: popped leaves read as -inf (max
+    /// tree) / +inf (min tree).
+    #[inline]
+    fn leaf_val(&self, is_max: bool, leaf: usize) -> f32 {
+        let t = if is_max { &self.max_tree } else { &self.min_tree };
+        if t.popped[leaf] {
+            if is_max {
+                f32::NEG_INFINITY
+            } else {
+                f32::INFINITY
+            }
+        } else {
+            self.values[leaf]
+        }
+    }
+
+    /// Subtree winner value at node `i` (1-based heap index).
+    fn node_val(&self, is_max: bool, mut i: usize) -> f32 {
+        let t = if is_max { &self.max_tree } else { &self.min_tree };
+        while i < self.n {
+            i = 2 * i + t.bits[i] as usize;
+        }
+        self.leaf_val(is_max, i - self.n)
+    }
+
+    fn init(&mut self) {
+        let n = self.n;
+        // bottom level of the max tree: N/2 comparisons
+        for i in n / 2..n {
+            let l = self.leaf_val(true, 2 * i - n);
+            let r = self.leaf_val(true, 2 * i + 1 - n);
+            self.comparisons += 1;
+            self.max_tree.bits[i] = u8::from(r > l); // left wins ties
+            // min tree bottom level: REVERSED comparison result (free)
+            // careful with popped padding: for the min tree the padded
+            // (popped) side must lose, which the reversed bit already
+            // ensures when exactly one side is padded (it read as -inf in
+            // the max compare, so the other side won there; reversing makes
+            // the padded side "win" the min compare — wrong!). Fix below.
+            self.min_tree.bits[i] = u8::from(!(r > l));
+        }
+        // Repair min-tree bottom bits where padding is involved (no extra
+        // FP comparisons — mask logic only, as in hardware).
+        for i in n / 2..n {
+            let lp = self.min_tree.popped[2 * i - n];
+            let rp = self.min_tree.popped[2 * i + 1 - n];
+            if lp && !rp {
+                self.min_tree.bits[i] = 1;
+            } else if rp && !lp {
+                self.min_tree.bits[i] = 0;
+            }
+        }
+        // upper levels of both trees
+        let mut level_start = n / 4;
+        while level_start >= 1 {
+            for i in level_start..2 * level_start {
+                self.update_node(true, i);
+                self.update_node(false, i);
+            }
+            level_start /= 2;
+        }
+    }
+
+    /// Recompute one internal node's bit from its children (1 comparison).
+    fn update_node(&mut self, is_max: bool, i: usize) {
+        let l = self.node_val(is_max, 2 * i);
+        let r = self.node_val(is_max, 2 * i + 1);
+        self.comparisons += 1;
+        let bit = if is_max {
+            u8::from(r > l) // left wins ties (larger)
+        } else {
+            u8::from(r < l) // left wins ties (smaller)
+        };
+        if is_max {
+            self.max_tree.bits[i] = bit;
+        } else {
+            self.min_tree.bits[i] = bit;
+        }
+    }
+
+    /// Root-to-leaf traversal following the stored bits: zero comparisons,
+    /// one cycle in hardware. Returns the winning leaf index.
+    fn winner_leaf(&self, is_max: bool) -> usize {
+        let t = if is_max { &self.max_tree } else { &self.min_tree };
+        let mut i = 1usize;
+        while i < self.n {
+            i = 2 * i + t.bits[i] as usize;
+        }
+        i - self.n
+    }
+
+    /// Pop the current maximum: returns (original index, value), then
+    /// maintains the tree bottom-up (log2 N comparisons).
+    pub fn pop_max(&mut self) -> Option<(usize, f32)> {
+        self.pop(true)
+    }
+
+    pub fn pop_min(&mut self) -> Option<(usize, f32)> {
+        self.pop(false)
+    }
+
+    fn pop(&mut self, is_max: bool) -> Option<(usize, f32)> {
+        let leaf = self.winner_leaf(is_max);
+        {
+            let t = if is_max { &self.max_tree } else { &self.min_tree };
+            if t.popped[leaf] {
+                return None; // tree exhausted
+            }
+        }
+        let val = self.values[leaf];
+        if is_max {
+            self.max_tree.popped[leaf] = true;
+        } else {
+            self.min_tree.popped[leaf] = true;
+        }
+        // maintenance: update ancestors bottom-up, one comparison per level
+        let mut i = (leaf + self.n) / 2;
+        while i >= 1 {
+            self.update_node(is_max, i);
+            if i == 1 {
+                break;
+            }
+            i /= 2;
+        }
+        Some((leaf, val))
+    }
+
+    /// Pop the k largest and k smallest (the paper's top-k outlier job).
+    /// Emits exactly k per side (ties broken deterministically), matching
+    /// the "always output exactly k outliers" rule in §IV-D.
+    pub fn top_k(&mut self, k: usize) -> (Vec<(usize, f32)>, Vec<(usize, f32)>) {
+        let k = k.min(self.len);
+        let mut maxs = Vec::with_capacity(k);
+        let mut mins = Vec::with_capacity(k);
+        for _ in 0..k {
+            if let Some(m) = self.pop_max() {
+                maxs.push(m);
+            }
+            if let Some(m) = self.pop_min() {
+                mins.push(m);
+            }
+        }
+        (maxs, mins)
+    }
+
+    pub fn comparisons(&self) -> u64 {
+        self.comparisons
+    }
+
+    /// The paper's cost model: 1.5N + 2k·log2(N) comparisons.
+    pub fn paper_cost_model(n: usize, k: usize) -> f64 {
+        let np = n.next_power_of_two().max(2) as f64;
+        1.5 * np + 2.0 * k as f64 * np.log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sorted_check(x: &[f32], k: usize) {
+        let mut o = Orizuru::new(x);
+        let (maxs, mins) = o.top_k(k);
+        let mut sorted = x.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = x.len();
+        for (i, &(_, v)) in maxs.iter().enumerate() {
+            assert_eq!(v, sorted[n - 1 - i], "max #{i}");
+        }
+        for (i, &(_, v)) in mins.iter().enumerate() {
+            assert_eq!(v, sorted[i], "min #{i}");
+        }
+    }
+
+    #[test]
+    fn matches_sort_oracle_random() {
+        let mut rng = Rng::new(1);
+        for &n in &[8usize, 16, 100, 1024, 1000] {
+            let x = rng.normal_vec(n, 1.0);
+            sorted_check(&x, (n / 8).max(1));
+        }
+    }
+
+    #[test]
+    fn paper_figure_example() {
+        // Fig 10: x = [3, 1, 4, 1, 5, 9, 2, 6]; max = 9 at index 5
+        let x = [3.0f32, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut o = Orizuru::new(&x);
+        assert_eq!(o.pop_max(), Some((5, 9.0)));
+        assert_eq!(o.pop_max(), Some((7, 6.0)));
+        assert_eq!(o.pop_max(), Some((4, 5.0)));
+        assert_eq!(o.pop_min(), Some((1, 1.0))); // tie with idx 3: left wins
+        assert_eq!(o.pop_min(), Some((3, 1.0)));
+    }
+
+    #[test]
+    fn comparison_count_matches_model() {
+        let mut rng = Rng::new(2);
+        for &(n, k) in &[(1024usize, 10usize), (4096, 20), (256, 4)] {
+            let x = rng.normal_vec(n, 1.0);
+            let mut o = Orizuru::new(&x);
+            let init_cmp = o.comparisons();
+            // init = N/2 (max bottom) + (N/2 - 1) (max upper) + (N/2 - 1)
+            // (min upper, bottom reused) = 1.5N - 2
+            assert_eq!(init_cmp, (3 * n / 2 - 2) as u64, "init at n={n}");
+            o.top_k(k);
+            let total = o.comparisons();
+            let model = Orizuru::paper_cost_model(n, k);
+            let actual = total as f64;
+            assert!(
+                (actual - model).abs() / model < 0.05,
+                "n={n} k={k}: actual {actual} vs model {model}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_padding() {
+        let mut rng = Rng::new(3);
+        let x = rng.normal_vec(100, 1.0);
+        sorted_check(&x, 10);
+    }
+
+    #[test]
+    fn exactly_k_with_ties() {
+        let x = vec![2.0f32; 64];
+        let mut o = Orizuru::new(&x);
+        let (maxs, mins) = o.top_k(5);
+        assert_eq!(maxs.len(), 5);
+        assert_eq!(mins.len(), 5);
+        // max and min trees pop independently (shared leaves, separate
+        // masks) — a value can be both a max and a min under total ties.
+        for &(_, v) in maxs.iter().chain(mins.iter()) {
+            assert_eq!(v, 2.0);
+        }
+    }
+
+    #[test]
+    fn exhausting_the_tree() {
+        let x = [5.0f32, -1.0, 3.0];
+        let mut o = Orizuru::new(&x);
+        assert_eq!(o.pop_max(), Some((0, 5.0)));
+        assert_eq!(o.pop_max(), Some((2, 3.0)));
+        assert_eq!(o.pop_max(), Some((1, -1.0)));
+        assert_eq!(o.pop_max(), None);
+    }
+
+    #[test]
+    fn popping_max_does_not_disturb_min() {
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(512, 1.0);
+        let mut o = Orizuru::new(&x);
+        for _ in 0..50 {
+            o.pop_max();
+        }
+        let mut sorted = x.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(o.pop_min().unwrap().1, sorted[0]);
+    }
+
+    #[test]
+    fn negative_infinity_never_reaches_root_while_nonempty() {
+        // pop both children of one subtree; winner must still be finite
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut o = Orizuru::new(&x);
+        for _ in 0..7 {
+            let (_, v) = o.pop_max().unwrap();
+            assert!(v.is_finite());
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Token-wise activation quantization (paper §III-A): offline-learned
+//! normalized codebook (optionally Fisher-weighted), per-token max-|inlier|
+//! scale, and FP-preserved outliers (dynamic or static selection).
+
+use super::codebook::Codebook;
+use super::kmeans::weighted_kmeans_1d;
+use super::outlier::{static_outliers, topk_outliers, OutlierCfg};
+
+/// A quantized activation token: inlier indices + per-token scale +
+/// FP-preserved outliers (channel, original value, quantization residual).
+#[derive(Clone, Debug)]
+pub struct QuantToken {
+    pub idx: Vec<u8>,
+    pub scale: f32,
+    /// (channel, fp_value, residual = fp_value - dequant(idx[channel]))
+    pub outliers: Vec<(u32, f32, f32)>,
+}
+
+/// Learn the normalized activation codebook from calibration tokens.
+/// `fisher`: per-element sensitivity aligned with the flattened samples
+/// (the paper's Fisher-weighted K-Means).
+pub fn learn_act_codebook(
+    calib_tokens: &[&[f32]],
+    fisher: Option<&[f32]>,
+    bits: u32,
+    cfg: OutlierCfg,
+) -> Codebook {
+    // Normalize each token by its inlier scale, pool, then k-means.
+    let mut samples = Vec::new();
+    let mut weights = fisher.map(|_| Vec::new());
+    let mut offset = 0usize;
+    for &tok in calib_tokens {
+        let k = cfg.k_per_side(tok.len());
+        let outs = topk_outliers(tok, k);
+        let scale = inlier_scale(tok, &outs);
+        let mut oi = 0usize;
+        for (c, &v) in tok.iter().enumerate() {
+            if oi < outs.len() && outs[oi] as usize == c {
+                oi += 1;
+                continue; // outliers don't shape the codebook
+            }
+            samples.push(v / scale);
+            if let (Some(w), Some(f)) = (weights.as_mut(), fisher) {
+                w.push(f[offset + c]);
+            }
+        }
+        offset += tok.len();
+    }
+    Codebook::new(weighted_kmeans_1d(&samples, weights.as_deref(), 1 << bits, 40))
+}
+
+fn inlier_scale(tok: &[f32], outlier_idx: &[u32]) -> f32 {
+    let mut oi = 0usize;
+    let mut m = 0.0f32;
+    for (c, &v) in tok.iter().enumerate() {
+        if oi < outlier_idx.len() && outlier_idx[oi] as usize == c {
+            oi += 1;
+            continue;
+        }
+        m = m.max(v.abs());
+    }
+    m.max(1e-12)
+}
+
+/// Quantize one token with dynamic (top-k) outlier detection.
+pub fn quantize_token(tok: &[f32], cb: &Codebook, cfg: OutlierCfg) -> QuantToken {
+    let k = cfg.k_per_side(tok.len());
+    let outs = topk_outliers(tok, k);
+    quantize_with_outliers(tok, cb, &outs)
+}
+
+/// Quantize one token with static thresholds (OASIS-S).
+pub fn quantize_token_static(tok: &[f32], cb: &Codebook, lo: f32, hi: f32) -> QuantToken {
+    let outs = static_outliers(tok, lo, hi);
+    quantize_with_outliers(tok, cb, &outs)
+}
+
+fn quantize_with_outliers(tok: &[f32], cb: &Codebook, outs: &[u32]) -> QuantToken {
+    let scale = inlier_scale(tok, outs);
+    // Look-ahead semantics (paper §III-C1): the WHOLE token is clustered —
+    // outliers get (bad) indices too, and the outlier branch compensates
+    // with residual = fp - dequant.
+    let mut idx = Vec::with_capacity(tok.len());
+    for &v in tok {
+        idx.push(cb.assign(v / scale));
+    }
+    let outliers = outs
+        .iter()
+        .map(|&c| {
+            let v = tok[c as usize];
+            let deq = cb.value(idx[c as usize]) * scale;
+            (c, v, v - deq)
+        })
+        .collect();
+    QuantToken { idx, scale, outliers }
+}
+
+impl QuantToken {
+    /// Fake-quant reconstruction: inliers from the codebook, outliers FP.
+    pub fn dequantize(&self, cb: &Codebook) -> Vec<f32> {
+        let mut out: Vec<f32> = self
+            .idx
+            .iter()
+            .map(|&i| cb.value(i) * self.scale)
+            .collect();
+        for &(c, v, _) in &self.outliers {
+            out[c as usize] = v;
+        }
+        out
+    }
+
+    /// The look-ahead (main-branch) view: everything from the codebook,
+    /// outlier error NOT yet compensated.
+    pub fn dequantize_lookahead(&self, cb: &Codebook) -> Vec<f32> {
+        self.idx.iter().map(|&i| cb.value(i) * self.scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn calib(rng: &mut Rng, n_tok: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n_tok)
+            .map(|_| rng.heavy_tailed_vec(d, 0.01, 15.0))
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_error_small_with_outlier_protection() {
+        let mut rng = Rng::new(1);
+        let toks = calib(&mut rng, 32, 512);
+        let refs: Vec<&[f32]> = toks.iter().map(|t| t.as_slice()).collect();
+        let cfg = OutlierCfg { total_frac: 0.02 };
+        let cb = learn_act_codebook(&refs, None, 4, cfg);
+        let x = rng.heavy_tailed_vec(512, 0.01, 15.0);
+        let q = quantize_token(&x, &cb, cfg);
+        let deq = q.dequantize(&cb);
+        let err: f64 = x
+            .iter()
+            .zip(&deq)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            / x.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(err < 0.15, "rel err {err}");
+    }
+
+    #[test]
+    fn outlier_protection_beats_no_protection() {
+        let mut rng = Rng::new(2);
+        let toks = calib(&mut rng, 32, 512);
+        let refs: Vec<&[f32]> = toks.iter().map(|t| t.as_slice()).collect();
+        let cfg = OutlierCfg { total_frac: 0.02 };
+        let cb = learn_act_codebook(&refs, None, 4, cfg);
+        let x = rng.heavy_tailed_vec(512, 0.02, 20.0);
+        let q = quantize_token(&x, &cb, cfg);
+        let with = q.dequantize(&cb);
+        let without = q.dequantize_lookahead(&cb);
+        let e = |v: &[f32]| -> f64 {
+            x.iter()
+                .zip(v)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        assert!(e(&with) < e(&without), "{} !< {}", e(&with), e(&without));
+    }
+
+    #[test]
+    fn lookahead_plus_residual_equals_fp_outlier() {
+        // The error-compensation identity at the token level.
+        let mut rng = Rng::new(3);
+        let toks = calib(&mut rng, 8, 256);
+        let refs: Vec<&[f32]> = toks.iter().map(|t| t.as_slice()).collect();
+        let cfg = OutlierCfg::default();
+        let cb = learn_act_codebook(&refs, None, 4, cfg);
+        let x = rng.heavy_tailed_vec(256, 0.02, 10.0);
+        let q = quantize_token(&x, &cb, cfg);
+        let la = q.dequantize_lookahead(&cb);
+        for &(c, v, r) in &q.outliers {
+            assert!((la[c as usize] + r - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn static_mode_uses_thresholds() {
+        let mut rng = Rng::new(4);
+        let toks = calib(&mut rng, 8, 256);
+        let refs: Vec<&[f32]> = toks.iter().map(|t| t.as_slice()).collect();
+        let cb = learn_act_codebook(&refs, None, 4, OutlierCfg::default());
+        let x = rng.normal_vec(256, 1.0);
+        let q = quantize_token_static(&x, &cb, -2.5, 2.5);
+        for &(c, v, _) in &q.outliers {
+            assert!(v.abs() > 2.5, "channel {c} value {v} not beyond threshold");
+        }
+    }
+
+    #[test]
+    fn fisher_weighting_improves_weighted_mse() {
+        let mut rng = Rng::new(5);
+        let toks = calib(&mut rng, 16, 256);
+        let refs: Vec<&[f32]> = toks.iter().map(|t| t.as_slice()).collect();
+        let total: usize = refs.iter().map(|t| t.len()).sum();
+        // sensitivity concentrated on small-magnitude region
+        let fisher: Vec<f32> = refs
+            .iter()
+            .flat_map(|t| t.iter().map(|&v| if v.abs() < 0.3 { 10.0 } else { 0.1 }))
+            .collect();
+        assert_eq!(fisher.len(), total);
+        let cfg = OutlierCfg::default();
+        let cbw = learn_act_codebook(&refs, Some(&fisher), 3, cfg);
+        let cbu = learn_act_codebook(&refs, None, 3, cfg);
+        // weighted codebook should put more centroids near 0
+        let near = |cb: &Codebook| cb.centroids.iter().filter(|c| c.abs() < 0.3).count();
+        assert!(near(&cbw) >= near(&cbu));
+    }
+}

@@ -1,0 +1,124 @@
+//! Atom baseline: channel reordering + group-wise quantization with an
+//! INT8 outlier-channel block. Group size and outlier block are d/32 — the
+//! paper's ratio (group 128 and 128 outlier channels at d = 4096). The
+//! permutation (outlier channels last) is learned from calibration
+//! activation absmax and shared with the `eval_atom_*` artifacts.
+
+use super::rtn;
+use crate::tensor::Matrix;
+
+pub struct AtomQuant {
+    /// fake-quantized, ROW-PERMUTED weights (use with permuted activations)
+    pub weights: Matrix,
+    /// channel permutation: inlier channels first, outliers last
+    pub perm: Vec<u32>,
+}
+
+/// Choose the permutation placing the n_out highest-absmax activation
+/// channels last.
+pub fn outlier_permutation(calib_absmax: &[f32]) -> Vec<u32> {
+    let d = calib_absmax.len();
+    let n_out = (d / 32).max(1);
+    let mut order: Vec<u32> = (0..d as u32).collect();
+    order.sort_by(|&a, &b| {
+        calib_absmax[a as usize]
+            .partial_cmp(&calib_absmax[b as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    // ascending absmax: first d-n_out are inliers, last n_out outliers —
+    // already the layout we want.
+    let _ = n_out;
+    order
+}
+
+/// Atom weight quantization: permute rows, group-wise RTN along the input
+/// dim per output channel (inlier groups at `bits`, the trailing outlier
+/// block at 8 bits).
+pub fn atom_quantize(w: &Matrix, calib_absmax: &[f32], bits: u32) -> AtomQuant {
+    assert_eq!(calib_absmax.len(), w.rows);
+    let perm = outlier_permutation(calib_absmax);
+    let d = w.rows;
+    let g = (d / 32).max(1);
+    let n_out = g;
+
+    // permuted weight rows
+    let mut wp = Matrix::zeros(d, w.cols);
+    for (new_r, &old_r) in perm.iter().enumerate() {
+        wp.row_mut(new_r).copy_from_slice(w.row(old_r as usize));
+    }
+
+    // group-wise quantization along the input dim, per output channel
+    for c in 0..wp.cols {
+        let mut col: Vec<f32> = (0..d).map(|r| wp.at(r, c)).collect();
+        let mut r0 = 0;
+        while r0 < d {
+            let r1 = (r0 + g).min(d);
+            let b = if r0 >= d - n_out { 8 } else { bits };
+            let seg = &mut col[r0..r1];
+            let m = seg.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let qmax = ((1i32 << (b - 1)) - 1) as f32;
+            rtn::fake_quant_slice(seg, m / qmax, b);
+            r0 = r1;
+        }
+        for r in 0..d {
+            *wp.at_mut(r, c) = col[r];
+        }
+    }
+    AtomQuant { weights: wp, perm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn permutation_puts_outlier_channels_last() {
+        let mut absmax = vec![1.0f32; 64];
+        absmax[3] = 50.0;
+        absmax[41] = 80.0;
+        let p = outlier_permutation(&absmax);
+        assert_eq!(p[63], 41);
+        assert_eq!(p[62], 3);
+    }
+
+    #[test]
+    fn permuted_gemm_matches_with_permuted_activations() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::random_normal(64, 16, 1.0, &mut rng);
+        let absmax: Vec<f32> = (0..64).map(|i| 1.0 + (i % 5) as f32).collect();
+        let a = atom_quantize(&w, &absmax, 16); // high bits: permutation test
+        let x = Matrix::random_normal(4, 64, 1.0, &mut rng);
+        let mut xp = Matrix::zeros(4, 64);
+        for r in 0..4 {
+            for (nc, &oc) in a.perm.iter().enumerate() {
+                *xp.at_mut(r, nc) = x.at(r, oc as usize);
+            }
+        }
+        assert!(xp.matmul(&a.weights).rel_err(&x.matmul(&w)) < 0.02);
+    }
+
+    #[test]
+    fn group_quant_beats_per_channel_on_blocky_weights() {
+        let mut rng = Rng::new(2);
+        // weights whose magnitude varies along the input dim -> group scales win
+        let mut w = Matrix::random_normal(128, 16, 1.0, &mut rng);
+        for r in 0..128 {
+            let boost = if r < 8 { 20.0 } else { 1.0 };
+            for v in w.row_mut(r) {
+                *v *= boost;
+            }
+        }
+        let absmax = vec![1.0f32; 128];
+        let atom = atom_quantize(&w, &absmax, 4);
+        // undo permutation for comparison
+        let mut deq = Matrix::zeros(128, 16);
+        for (new_r, &old_r) in atom.perm.iter().enumerate() {
+            deq.row_mut(old_r as usize)
+                .copy_from_slice(atom.weights.row(new_r));
+        }
+        let plain = rtn::fake_quant_weights(&w, 4);
+        assert!(deq.rel_err(&w) < plain.rel_err(&w));
+    }
+}

@@ -1,0 +1,147 @@
+//! Codebook + the Clustering Unit's boundary-based nearest-centroid
+//! assignment (paper §IV-C): boundaries b_i = (c_i + c_{i+1})/2, and an
+//! input in [b_{i-1}, b_i) belongs to cluster i. Assignment uses binary
+//! search over boundaries — the software twin of the ASIC's log2(C)-depth
+//! comparator tree (and of the L1 Pallas `clustering` kernel).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    /// sorted centroids, len = 2^bits
+    pub centroids: Vec<f32>,
+    /// midpoint boundaries, len = centroids.len() - 1
+    pub boundaries: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(mut centroids: Vec<f32>) -> Self {
+        assert!(!centroids.is_empty());
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let boundaries = centroids
+            .windows(2)
+            .map(|w| 0.5 * (w[0] + w[1]))
+            .collect();
+        Codebook { centroids, boundaries }
+    }
+
+    pub fn bits(&self) -> u32 {
+        debug_assert!(self.centroids.len().is_power_of_two());
+        self.centroids.len().trailing_zeros()
+    }
+
+    pub fn len(&self) -> usize {
+        self.centroids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.centroids.is_empty()
+    }
+
+    /// Nearest-centroid index via boundary binary search; ties at an exact
+    /// boundary go to the upper cell (matches the `x > b` comparator chain
+    /// in hardware and the Pallas kernel).
+    #[inline]
+    pub fn assign(&self, x: f32) -> u8 {
+        // partition_point = number of boundaries < x ... we want x > b
+        let idx = self.boundaries.partition_point(|&b| x > b);
+        idx as u8
+    }
+
+    pub fn assign_slice(&self, xs: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.assign(x)));
+    }
+
+    #[inline]
+    pub fn value(&self, idx: u8) -> f32 {
+        self.centroids[idx as usize]
+    }
+
+    pub fn dequant_slice(&self, idx: &[u8], scale: f32, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(idx.iter().map(|&i| self.value(i) * scale));
+    }
+
+    /// Quantize-dequantize one value (fake quant).
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.value(self.assign(x))
+    }
+
+    /// Normalize centroids into [-1, 1] by max-abs (token-wise scaling uses
+    /// normalized codebooks; see quant::activation).
+    pub fn normalized(&self) -> (Codebook, f32) {
+        let scale = self
+            .centroids
+            .iter()
+            .fold(0.0f32, |m, &c| m.max(c.abs()))
+            .max(1e-12);
+        (
+            Codebook::new(self.centroids.iter().map(|&c| c / scale).collect()),
+            scale,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn assign_matches_argmin() {
+        let mut rng = Rng::new(1);
+        let cb = Codebook::new(rng.normal_vec(16, 1.0));
+        for _ in 0..2000 {
+            let x = rng.normal_f32() * 2.0;
+            let got = cb.assign(x) as usize;
+            let want = cb
+                .centroids
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    (x - **a).abs().partial_cmp(&(x - **b).abs()).unwrap()
+                })
+                .unwrap()
+                .0;
+            // ties can differ by one cell; distances must match
+            let dg = (x - cb.centroids[got]).abs();
+            let dw = (x - cb.centroids[want]).abs();
+            assert!((dg - dw).abs() < 1e-6, "x={x} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn centroids_assign_to_themselves() {
+        let cb = Codebook::new(vec![-2.0, -0.5, 0.1, 3.0]);
+        for (i, &c) in cb.centroids.iter().enumerate() {
+            assert_eq!(cb.assign(c) as usize, i);
+        }
+    }
+
+    #[test]
+    fn extremes_clamp() {
+        let cb = Codebook::new(vec![-1.0, 0.0, 1.0, 2.0]);
+        assert_eq!(cb.assign(-100.0), 0);
+        assert_eq!(cb.assign(100.0), 3);
+    }
+
+    #[test]
+    fn normalized_range() {
+        let cb = Codebook::new(vec![-4.0, -1.0, 2.0, 8.0]);
+        let (n, s) = cb.normalized();
+        assert_eq!(s, 8.0);
+        assert!(n.centroids.iter().all(|c| c.abs() <= 1.0));
+        assert_eq!(n.value(0), -0.5);
+    }
+
+    #[test]
+    fn fake_quant_idempotent() {
+        let mut rng = Rng::new(2);
+        let cb = Codebook::new(rng.normal_vec(8, 1.0));
+        for _ in 0..100 {
+            let x = rng.normal_f32();
+            let q = cb.fake_quant(x);
+            assert_eq!(cb.fake_quant(q), q);
+        }
+    }
+}

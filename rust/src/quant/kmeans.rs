@@ -1,0 +1,259 @@
+//! 1-D (weighted) K-Means — the paper's learned-codebook quantizer (eq. 1).
+//!
+//! Centroids are learned by Lloyd iterations over sorted samples with
+//! quantile initialization; the weighted variant implements the paper's
+//! Fisher-information-weighted activation-centroid learning (§V-A:
+//! "weighted-K-Means algorithm ... where the weights are determined by
+//! Fisher information matrices of the activations").
+
+use crate::util::rng::Rng;
+
+/// Learn `k` centroids from samples. Returns sorted centroids.
+pub fn kmeans_1d(samples: &[f32], k: usize, iters: usize) -> Vec<f32> {
+    weighted_kmeans_1d(samples, None, k, iters)
+}
+
+/// Weighted 1-D K-Means; `weights` (same length as samples) biases both the
+/// assignment objective's update step (weighted mean) — high-Fisher values
+/// pull centroids toward themselves, matching SqueezeLLM-style sensitivity.
+pub fn weighted_kmeans_1d(
+    samples: &[f32],
+    weights: Option<&[f32]>,
+    k: usize,
+    iters: usize,
+) -> Vec<f32> {
+    assert!(k >= 1, "k must be >= 1");
+    assert!(!samples.is_empty(), "empty sample set");
+    if let Some(w) = weights {
+        assert_eq!(w.len(), samples.len(), "weights length mismatch");
+    }
+
+    // Sort samples (carrying weights) — 1-D clusters are contiguous runs,
+    // so assignment reduces to boundary binary search.
+    let mut idx: Vec<u32> = (0..samples.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        samples[a as usize]
+            .partial_cmp(&samples[b as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let xs: Vec<f32> = idx.iter().map(|&i| samples[i as usize]).collect();
+    let ws: Vec<f32> = match weights {
+        Some(w) => idx.iter().map(|&i| w[i as usize].max(0.0)).collect(),
+        None => vec![1.0; xs.len()],
+    };
+
+    let mut centroids = quantile_init(&xs, k);
+    // Degenerate data (all values equal) — centroids collapse, still valid.
+    for _ in 0..iters {
+        let moved = lloyd_step(&xs, &ws, &mut centroids);
+        if moved < 1e-7 {
+            break;
+        }
+    }
+    dedup_monotone(&mut centroids);
+    centroids
+}
+
+/// Initialize at weighted-rank quantiles (robust and deterministic; the
+/// kmeans++ randomized alternative below is used by property tests to
+/// confirm insensitivity to initialization).
+fn quantile_init(sorted_xs: &[f32], k: usize) -> Vec<f32> {
+    let n = sorted_xs.len();
+    (0..k)
+        .map(|i| {
+            let q = (i as f64 + 0.5) / k as f64;
+            sorted_xs[((q * n as f64) as usize).min(n - 1)]
+        })
+        .collect()
+}
+
+/// One Lloyd iteration over sorted data; returns total centroid movement.
+fn lloyd_step(xs: &[f32], ws: &[f32], centroids: &mut [f32]) -> f32 {
+    let k = centroids.len();
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // cluster c owns xs in [bound[c-1], bound[c])
+    let mut sums = vec![0.0f64; k];
+    let mut wsum = vec![0.0f64; k];
+    let mut c = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        while c + 1 < k && x > 0.5 * (centroids[c] + centroids[c + 1]) {
+            c += 1;
+        }
+        sums[c] += (x as f64) * (ws[i] as f64);
+        wsum[c] += ws[i] as f64;
+    }
+    let mut moved = 0.0f32;
+    for j in 0..k {
+        if wsum[j] > 0.0 {
+            let nc = (sums[j] / wsum[j]) as f32;
+            moved += (nc - centroids[j]).abs();
+            centroids[j] = nc;
+        }
+        // empty clusters keep their position (will re-acquire points as
+        // neighbors move)
+    }
+    moved
+}
+
+/// Ensure strictly non-decreasing centroids (numerical safety for the
+/// boundary-based Clustering Unit).
+fn dedup_monotone(centroids: &mut [f32]) {
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for i in 1..centroids.len() {
+        if centroids[i] < centroids[i - 1] {
+            centroids[i] = centroids[i - 1];
+        }
+    }
+}
+
+/// kmeans++-style randomized init + Lloyd, for property tests.
+pub fn kmeans_1d_pp(samples: &[f32], k: usize, iters: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(!samples.is_empty() && k >= 1);
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(*rng.choice(samples));
+    while centroids.len() < k {
+        // sample proportional to squared distance to the nearest centroid
+        let d2: Vec<f64> = samples
+            .iter()
+            .map(|&x| {
+                centroids
+                    .iter()
+                    .map(|&c| ((x - c) as f64).powi(2))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            centroids.push(samples[0]);
+            continue;
+        }
+        let mut u = rng.f64() * total;
+        let mut pick = samples.len() - 1;
+        for (i, &d) in d2.iter().enumerate() {
+            u -= d;
+            if u <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.push(samples[pick]);
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ws = vec![1.0; xs.len()];
+    for _ in 0..iters {
+        if lloyd_step(&xs, &ws, &mut centroids) < 1e-7 {
+            break;
+        }
+    }
+    dedup_monotone(&mut centroids);
+    centroids
+}
+
+/// Weighted quantization MSE of a centroid set over samples.
+pub fn quant_mse(samples: &[f32], weights: Option<&[f32]>, centroids: &[f32]) -> f64 {
+    let mut err = 0.0f64;
+    let mut wtot = 0.0f64;
+    for (i, &x) in samples.iter().enumerate() {
+        let w = weights.map(|w| w[i] as f64).unwrap_or(1.0);
+        let d = centroids
+            .iter()
+            .map(|&c| ((x - c) as f64).powi(2))
+            .fold(f64::INFINITY, f64::min);
+        err += w * d;
+        wtot += w;
+    }
+    err / wtot.max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let mut rng = Rng::new(1);
+        let mut xs = Vec::new();
+        for &mu in &[-10.0f32, 0.0, 10.0, 20.0] {
+            for _ in 0..500 {
+                xs.push(mu + 0.1 * rng.normal_f32());
+            }
+        }
+        let c = kmeans_1d(&xs, 4, 50);
+        for (got, want) in c.iter().zip(&[-10.0f32, 0.0, 10.0, 20.0]) {
+            assert!((got - want).abs() < 0.1, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn output_is_sorted_and_right_size() {
+        let mut rng = Rng::new(2);
+        let xs = rng.normal_vec(4096, 1.0);
+        let c = kmeans_1d(&xs, 16, 30);
+        assert_eq!(c.len(), 16);
+        assert!(c.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn beats_uniform_grid_on_gaussian() {
+        // Non-uniform codebooks should beat a uniform grid on N(0,1) —
+        // the paper's core motivation for NU quantization.
+        let mut rng = Rng::new(3);
+        let xs = rng.normal_vec(20_000, 1.0);
+        let km = kmeans_1d(&xs, 16, 50);
+        let (lo, hi) = crate::util::stats::min_max(&xs);
+        let uniform: Vec<f32> = (0..16)
+            .map(|i| lo + (hi - lo) * (i as f32 + 0.5) / 16.0)
+            .collect();
+        assert!(quant_mse(&xs, None, &km) < 0.5 * quant_mse(&xs, None, &uniform));
+    }
+
+    #[test]
+    fn weights_pull_centroids() {
+        // Two clumps; weighting one clump heavily should allocate it more
+        // centroids (lower weighted MSE) than unweighted.
+        let mut rng = Rng::new(4);
+        let mut xs = Vec::new();
+        for _ in 0..1000 {
+            xs.push(rng.normal_f32() * 0.5);
+        }
+        for _ in 0..1000 {
+            xs.push(8.0 + rng.normal_f32() * 0.5);
+        }
+        let w: Vec<f32> = (0..2000).map(|i| if i < 1000 { 100.0 } else { 0.01 }).collect();
+        let cw = weighted_kmeans_1d(&xs, Some(&w), 8, 50);
+        let cu = kmeans_1d(&xs, 8, 50);
+        let mse_w = quant_mse(&xs, Some(&w), &cw);
+        let mse_u = quant_mse(&xs, Some(&w), &cu);
+        assert!(mse_w <= mse_u + 1e-9, "weighted {mse_w} vs unweighted {mse_u}");
+    }
+
+    #[test]
+    fn kmeanspp_comparable_to_quantile_init() {
+        let mut rng = Rng::new(5);
+        let xs = rng.heavy_tailed_vec(8000, 0.02, 10.0);
+        let a = kmeans_1d(&xs, 16, 40);
+        let b = kmeans_1d_pp(&xs, 16, 40, &mut rng);
+        let ma = quant_mse(&xs, None, &a);
+        let mb = quant_mse(&xs, None, &b);
+        assert!(ma < 2.0 * mb + 1e-6 && mb < 2.0 * ma + 1e-6, "{ma} vs {mb}");
+    }
+
+    #[test]
+    fn degenerate_constant_data() {
+        let xs = vec![3.5f32; 100];
+        let c = kmeans_1d(&xs, 4, 10);
+        assert_eq!(c.len(), 4);
+        assert!(c.iter().all(|&v| (v - 3.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn k1_is_weighted_mean() {
+        let xs = vec![1.0f32, 2.0, 3.0, 4.0];
+        let w = vec![1.0f32, 1.0, 1.0, 5.0];
+        let c = weighted_kmeans_1d(&xs, Some(&w), 1, 5);
+        let want = (1.0 + 2.0 + 3.0 + 20.0) / 8.0;
+        assert!((c[0] - want).abs() < 1e-5, "{c:?} vs {want}");
+    }
+}

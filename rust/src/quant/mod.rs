@@ -1,0 +1,18 @@
+//! Quantization algorithm library: the paper's K-Means NU-WAQ (weights +
+//! activations, Fisher-weighted centroids, outlier protection) and every
+//! Table III/IV baseline (RTN, SmoothQuant, QuaRot, Atom).
+
+pub mod activation;
+pub mod atom;
+pub mod codebook;
+pub mod kmeans;
+pub mod outlier;
+pub mod quarot;
+pub mod rtn;
+pub mod smoothquant;
+pub mod weights;
+
+pub use activation::{learn_act_codebook, quantize_token, quantize_token_static, QuantToken};
+pub use codebook::Codebook;
+pub use outlier::OutlierCfg;
+pub use weights::{quantize_weights, quantize_weights_weighted, QuantWeights};

@@ -1,0 +1,157 @@
+//! Activation-outlier identification (paper §III-A, §II-C).
+//!
+//! Dynamic mode (OASIS): top p/2 % largest and bottom p/2 % smallest values
+//! of each token are outliers — in hardware this is Orizuru's job; here a
+//! select_nth-based reference implements the same semantics for the
+//! algorithm library (the orizuru module provides the hardware-faithful
+//! engine and is cross-checked against this).
+//!
+//! Static mode (OASIS-S): per-layer (lo, hi) thresholds learned on a
+//! calibration corpus; online values beyond the thresholds are outliers.
+
+/// Outlier selection config: total outlier fraction (e.g. 0.01 = paper's
+/// "top 0.5% + bottom 0.5%").
+#[derive(Clone, Copy, Debug)]
+pub struct OutlierCfg {
+    pub total_frac: f64,
+}
+
+impl Default for OutlierCfg {
+    fn default() -> Self {
+        OutlierCfg { total_frac: 0.01 }
+    }
+}
+
+impl OutlierCfg {
+    /// Outliers per side for a token of dimension `d` (>= 1, as the paper
+    /// always emits exactly k per side).
+    pub fn k_per_side(&self, d: usize) -> usize {
+        ((self.total_frac * 0.5 * d as f64).round() as usize).max(1)
+    }
+}
+
+/// Indices of the k largest and k smallest elements (dynamic detection).
+/// Deterministic tie-breaking: lower index wins, mirroring Orizuru's
+/// left-child-first rule.
+pub fn topk_outliers(x: &[f32], k_per_side: usize) -> Vec<u32> {
+    let n = x.len();
+    let k = k_per_side.min(n / 2);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    // full argsort is O(n log n) but simple; the hardware path (orizuru)
+    // is the optimized one. Stable comparator: value, then index.
+    order.sort_by(|&a, &b| {
+        x[a as usize]
+            .partial_cmp(&x[b as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut out: Vec<u32> = Vec::with_capacity(2 * k);
+    out.extend_from_slice(&order[..k]); // k smallest
+    out.extend_from_slice(&order[n - k..]); // k largest
+    out.sort_unstable();
+    out
+}
+
+/// Static thresholds from calibration tokens: the value of the k-th
+/// largest / k-th smallest element, averaged across calibration tokens
+/// (this is exactly the "upper/lower outlier threshold" of Fig 3).
+pub fn calibrate_thresholds(tokens: &[&[f32]], cfg: OutlierCfg) -> (f32, f32) {
+    assert!(!tokens.is_empty());
+    let mut lo_sum = 0.0f64;
+    let mut hi_sum = 0.0f64;
+    for &t in tokens {
+        let k = cfg.k_per_side(t.len());
+        let mut v = t.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lo_sum += v[k - 1] as f64; // k-th smallest
+        hi_sum += v[v.len() - k] as f64; // k-th largest
+    }
+    (
+        (lo_sum / tokens.len() as f64) as f32,
+        (hi_sum / tokens.len() as f64) as f32,
+    )
+}
+
+/// Upper outlier threshold of a single token (value of the k-th largest),
+/// used by the Fig 3 experiment.
+pub fn upper_threshold(token: &[f32], cfg: OutlierCfg) -> f32 {
+    let k = cfg.k_per_side(token.len());
+    let mut v = token.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() - k]
+}
+
+/// Static-mode outlier indices: beyond calibrated thresholds.
+pub fn static_outliers(x: &[f32], lo: f32, hi: f32) -> Vec<u32> {
+    x.iter()
+        .enumerate()
+        .filter(|(_, &v)| v < lo || v > hi)
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn finds_planted_outliers() {
+        let mut rng = Rng::new(1);
+        let mut x = rng.normal_vec(1024, 1.0);
+        x[17] = 50.0;
+        x[900] = -60.0;
+        let out = topk_outliers(&x, 1);
+        assert_eq!(out, vec![17, 900]);
+    }
+
+    #[test]
+    fn exact_count_even_with_ties() {
+        let x = vec![1.0f32; 64]; // all tied
+        let out = topk_outliers(&x, 3);
+        assert_eq!(out.len(), 6);
+        // deterministic: lowest indices on the small side, ... and the
+        // largest side picks the highest sorted-stable indices
+        assert_eq!(&out[..3], &[0, 1, 2]);
+    }
+
+    #[test]
+    fn k_per_side_matches_paper_ratio() {
+        let cfg = OutlierCfg { total_frac: 0.01 };
+        assert_eq!(cfg.k_per_side(4096), 20); // 0.5% of 4096 = 20.48 -> 20
+        assert_eq!(cfg.k_per_side(64), 1); // floor of >= 1
+    }
+
+    #[test]
+    fn static_thresholds_catch_tail() {
+        let mut rng = Rng::new(2);
+        let calib: Vec<Vec<f32>> = (0..16).map(|_| rng.normal_vec(512, 1.0)).collect();
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let (lo, hi) = calibrate_thresholds(&refs, OutlierCfg { total_frac: 0.02 });
+        assert!(lo < 0.0 && hi > 0.0 && hi > lo);
+        let x = rng.normal_vec(512, 1.0);
+        let outs = static_outliers(&x, lo, hi);
+        // roughly 2% of 512 = ~10, very loose tolerance
+        assert!(!outs.is_empty() && outs.len() < 60, "{}", outs.len());
+    }
+
+    #[test]
+    fn dynamic_equals_static_on_calibration_distribution_roughly() {
+        // sanity: on the same distribution the two modes select similar
+        // counts (the paper's Fig 3 point is that they differ across
+        // distribution shift, tested in eval::experiments).
+        let mut rng = Rng::new(3);
+        let x = rng.normal_vec(2048, 1.0);
+        let cfg = OutlierCfg { total_frac: 0.01 };
+        let dynamic = topk_outliers(&x, cfg.k_per_side(2048));
+        let calib: Vec<Vec<f32>> = (0..32).map(|_| rng.normal_vec(2048, 1.0)).collect();
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let (lo, hi) = calibrate_thresholds(&refs, cfg);
+        let stat = static_outliers(&x, lo, hi);
+        let ratio = stat.len() as f64 / dynamic.len() as f64;
+        assert!(ratio > 0.2 && ratio < 5.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,58 @@
+//! QuaRot baseline: rotate weights/activations with an orthonormal Hadamard
+//! so outlier energy spreads across channels, then RTN. Online, the L2
+//! `eval_quarot_*` artifacts apply H to activations; here we pre-rotate the
+//! weights (H^T W along the input dimension) and fake-quantize.
+
+use super::rtn;
+use crate::tensor::Matrix;
+
+/// Rotate W (K x N) along the input dim: returns H^T W = H W (H symmetric).
+pub fn rotate_weights(w: &Matrix) -> Matrix {
+    // hadamard_rows transforms along rows; transpose twice to hit K.
+    let mut wt = w.transpose(); // (N x K)
+    wt.hadamard_rows();
+    wt.transpose()
+}
+
+/// Full QuaRot weight path: rotate then per-channel RTN fake-quant.
+pub fn quarot_quantize(w: &Matrix, bits: u32) -> Matrix {
+    rtn::fake_quant_weights(&rotate_weights(w), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rotation_preserves_gemm() {
+        // (x H) @ (H^T W) == x @ W
+        let mut rng = Rng::new(1);
+        let w = Matrix::random_normal(64, 16, 1.0, &mut rng);
+        let x = Matrix::random_normal(4, 64, 1.0, &mut rng);
+        let wr = rotate_weights(&w);
+        let mut xr = x.clone();
+        xr.hadamard_rows();
+        assert!(xr.matmul(&wr).rel_err(&x.matmul(&w)) < 1e-4);
+    }
+
+    #[test]
+    fn rotation_plus_rtn_beats_plain_rtn_on_outliers() {
+        let mut rng = Rng::new(2);
+        // weights with a few outlier rows (input channels)
+        let mut w = Matrix::random_normal(128, 32, 1.0, &mut rng);
+        for c in 0..32 {
+            *w.at_mut(7, c) *= 30.0;
+        }
+        let plain = rtn::fake_quant_weights(&w, 4);
+        let rot = quarot_quantize(&w, 4);
+        // compare in the GEMM output domain with rotated activations
+        let x = Matrix::random_normal(8, 128, 1.0, &mut rng);
+        let mut xr = x.clone();
+        xr.hadamard_rows();
+        let want = x.matmul(&w);
+        let e_plain = x.matmul(&plain).rel_err(&want);
+        let e_rot = xr.matmul(&rot).rel_err(&want);
+        assert!(e_rot < e_plain, "rot {e_rot} !< plain {e_plain}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Round-to-nearest (RTN) integer quantization — the simplest INT-WAQ
+//! baseline in Table III. Symmetric, per-output-channel for weights and
+//! per-token for activations (matching the paper's baseline setup).
+
+use crate::tensor::Matrix;
+
+/// Symmetric RTN of a slice with a given scale: round(x/s) clamped to the
+/// signed n-bit grid, then dequantized.
+pub fn fake_quant_slice(xs: &mut [f32], scale: f32, bits: u32) {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let qmin = -qmax - 1.0;
+    let s = scale.max(1e-12);
+    for v in xs.iter_mut() {
+        *v = (*v / s).round().clamp(qmin, qmax) * s;
+    }
+}
+
+/// Per-output-channel (column) weight RTN, returns fake-quantized weights.
+pub fn fake_quant_weights(w: &Matrix, bits: u32) -> Matrix {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let mut scales = vec![0.0f32; w.cols];
+    for r in 0..w.rows {
+        for (c, &v) in w.row(r).iter().enumerate() {
+            scales[c] = scales[c].max(v.abs());
+        }
+    }
+    let mut out = w.clone();
+    for r in 0..out.rows {
+        let row = &mut out.data[r * w.cols..(r + 1) * w.cols];
+        for (c, v) in row.iter_mut().enumerate() {
+            let s = (scales[c] / qmax).max(1e-12);
+            *v = (*v / s).round().clamp(-qmax - 1.0, qmax) * s;
+        }
+    }
+    out
+}
+
+/// Per-token activation RTN (max-abs scale over the token).
+pub fn fake_quant_token(tok: &mut [f32], bits: u32) {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let m = tok.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    fake_quant_slice(tok, m / qmax, bits);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn int4_grid() {
+        let mut x = vec![0.05f32, -0.9, 0.51, 1.0];
+        fake_quant_token(&mut x, 4);
+        // grid step = 1/7; every value must be a multiple of it
+        for v in &x {
+            let q = v / (1.0 / 7.0);
+            assert!((q - q.round()).abs() < 1e-5, "{v}");
+        }
+    }
+
+    #[test]
+    fn weights_error_reasonable_without_outliers() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::random_normal(64, 32, 1.0, &mut rng);
+        let q = fake_quant_weights(&w, 4);
+        assert!(q.rel_err(&w) < 0.12);
+    }
+
+    #[test]
+    fn outliers_wreck_rtn() {
+        // The Table III failure mode: one huge value blows up the scale and
+        // the inliers lose all resolution.
+        let mut rng = Rng::new(2);
+        let mut tok = rng.normal_vec(256, 1.0);
+        let clean_err = {
+            let mut t = tok.clone();
+            fake_quant_token(&mut t, 4);
+            rel_err(&tok, &t)
+        };
+        tok[0] = 200.0;
+        let mut t = tok.clone();
+        fake_quant_token(&mut t, 4);
+        let dirty_err = rel_err(&tok[1..], &t[1..]);
+        assert!(dirty_err > 5.0 * clean_err, "{dirty_err} vs {clean_err}");
+    }
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+        let num: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        num / a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+}

@@ -1,0 +1,81 @@
+//! SmoothQuant baseline: migrate activation quantization difficulty into
+//! the weights via per-channel scales s_j = max|X_j|^a / max|W_j|^(1-a),
+//! then RTN-quantize both sides. The smoothing vector is also an input of
+//! the `eval_smooth_*` L2 artifacts (activations are divided by it online).
+
+use super::rtn;
+use crate::tensor::Matrix;
+
+pub struct Smoothed {
+    /// fake-quantized W' = diag(s) W
+    pub weights: Matrix,
+    /// per-input-channel smoothing vector s (activations divide by this)
+    pub smooth: Vec<f32>,
+}
+
+/// `calib_absmax`: per-input-channel max-|activation| from calibration.
+pub fn smooth_quantize(w: &Matrix, calib_absmax: &[f32], alpha: f64, bits: u32) -> Smoothed {
+    assert_eq!(calib_absmax.len(), w.rows, "absmax per input channel");
+    // per-input-channel weight absmax
+    let mut w_absmax = vec![1e-12f32; w.rows];
+    for r in 0..w.rows {
+        w_absmax[r] = w.row(r).iter().fold(1e-12f32, |m, &v| m.max(v.abs()));
+    }
+    let smooth: Vec<f32> = calib_absmax
+        .iter()
+        .zip(&w_absmax)
+        .map(|(&a, &ww)| {
+            let s = (a.max(1e-6) as f64).powf(alpha) / (ww as f64).powf(1.0 - alpha);
+            (s.max(1e-6)) as f32
+        })
+        .collect();
+    let mut scaled = w.clone();
+    scaled.scale_rows(&smooth); // W' = diag(s) W
+    Smoothed { weights: rtn::fake_quant_weights(&scaled, bits), smooth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn smoothing_preserves_product() {
+        // (x / s) @ (diag(s) W) == x @ W exactly (pre-quantization).
+        let mut rng = Rng::new(1);
+        let w = Matrix::random_normal(32, 16, 1.0, &mut rng);
+        let absmax: Vec<f32> = (0..32).map(|i| 1.0 + (i % 7) as f32).collect();
+        let mut scaled = w.clone();
+        let sm = {
+            let s = smooth_quantize(&w, &absmax, 0.5, 16); // bits=16 ~ no quant error focus
+            s.smooth
+        };
+        scaled.scale_rows(&sm);
+        let x = Matrix::random_normal(4, 32, 1.0, &mut rng);
+        let mut xs = x.clone();
+        for r in 0..xs.rows {
+            for (c, v) in xs.row_mut(r).iter_mut().enumerate() {
+                *v /= sm[c];
+            }
+        }
+        let direct = x.matmul(&w);
+        let smoothed = xs.matmul(&scaled);
+        assert!(smoothed.rel_err(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn smoothing_tames_activation_outlier_channels() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::random_normal(64, 32, 1.0, &mut rng);
+        let mut absmax = vec![1.0f32; 64];
+        absmax[5] = 100.0; // a notorious outlier channel
+        let s = smooth_quantize(&w, &absmax, 0.5, 4);
+        // the outlier channel's smoothing factor must be much larger
+        let med = {
+            let mut v = s.smooth.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[32]
+        };
+        assert!(s.smooth[5] > 3.0 * med, "{} vs {}", s.smooth[5], med);
+    }
+}

@@ -1,0 +1,189 @@
+//! Weight-side K-Means quantization (paper §III-A): one shared codebook for
+//! the whole matrix, per-output-channel scaling factors, no outlier
+//! protection. Produces both the index/codebook form consumed by the WAQ
+//! LUT-GEMM datapath and the fake-quant (dequantized) form fed to the L2
+//! artifacts for accuracy experiments.
+
+use super::codebook::Codebook;
+use super::kmeans::weighted_kmeans_1d;
+use crate::tensor::Matrix;
+
+/// K-Means-quantized weight matrix W (K x N), y = x @ W.
+/// Output channel n has scale `col_scales[n]`; `idx[k * n_cols + n]` selects
+/// from the shared normalized `codebook`.
+#[derive(Clone, Debug)]
+pub struct QuantWeights {
+    pub n_rows: usize, // K (input channels / reduction dim)
+    pub n_cols: usize, // N (output channels)
+    pub idx: Vec<u8>,
+    pub codebook: Codebook,
+    pub col_scales: Vec<f32>,
+}
+
+/// Max samples fed to the codebook learner (uniform stride subsample keeps
+/// calibration O(1) regardless of layer size).
+const MAX_KMEANS_SAMPLES: usize = 65_536;
+
+pub fn quantize_weights(w: &Matrix, bits: u32) -> QuantWeights {
+    quantize_weights_weighted(w, None, bits)
+}
+
+/// `fisher`: optional per-element sensitivity (same layout as w.data).
+pub fn quantize_weights_weighted(
+    w: &Matrix,
+    fisher: Option<&Matrix>,
+    bits: u32,
+) -> QuantWeights {
+    let (k, n) = (w.rows, w.cols);
+    // per-output-channel max-abs scale
+    let mut col_scales = vec![0.0f32; n];
+    for r in 0..k {
+        for (c, &v) in w.row(r).iter().enumerate() {
+            col_scales[c] = col_scales[c].max(v.abs());
+        }
+    }
+    for s in col_scales.iter_mut() {
+        *s = s.max(1e-12);
+    }
+
+    // normalized samples for the shared codebook
+    let total = k * n;
+    let stride = (total / MAX_KMEANS_SAMPLES).max(1);
+    let mut samples = Vec::with_capacity(total / stride + 1);
+    let mut weights = fisher.map(|_| Vec::with_capacity(total / stride + 1));
+    let mut i = 0;
+    while i < total {
+        let (r, c) = (i / n, i % n);
+        samples.push(w.data[i] / col_scales[c]);
+        if let (Some(ws), Some(f)) = (weights.as_mut(), fisher) {
+            ws.push(f.data[i]);
+        }
+        i += stride;
+        let _ = r;
+    }
+    let centroids = weighted_kmeans_1d(&samples, weights.as_deref(), 1 << bits, 40);
+    let codebook = Codebook::new(centroids);
+
+    let mut idx = Vec::with_capacity(total);
+    for r in 0..k {
+        for (c, &v) in w.row(r).iter().enumerate() {
+            idx.push(codebook.assign(v / col_scales[c]));
+        }
+    }
+    QuantWeights { n_rows: k, n_cols: n, idx, codebook, col_scales }
+}
+
+impl QuantWeights {
+    /// Dequantize to a dense matrix (the fake-quant form for L2 artifacts,
+    /// and the Dequantization-Unit model for the outlier branch).
+    pub fn dequantize(&self) -> Matrix {
+        let mut data = Vec::with_capacity(self.idx.len());
+        for (i, &q) in self.idx.iter().enumerate() {
+            let c = i % self.n_cols;
+            data.push(self.codebook.value(q) * self.col_scales[c]);
+        }
+        Matrix::from_vec(self.n_rows, self.n_cols, data)
+    }
+
+    /// Dequantize one input-channel row (what the error-compensation branch
+    /// fetches per outlier channel, paper §III-C2).
+    pub fn dequant_row(&self, k: usize, out: &mut Vec<f32>) {
+        out.clear();
+        let row = &self.idx[k * self.n_cols..(k + 1) * self.n_cols];
+        out.extend(
+            row.iter()
+                .enumerate()
+                .map(|(c, &q)| self.codebook.value(q) * self.col_scales[c]),
+        );
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.codebook.bits()
+    }
+
+    /// Bytes to store idx at `bits` packing + codebook + scales (memory
+    /// footprint accounting for the simulator).
+    pub fn storage_bytes(&self) -> usize {
+        let idx_bits = self.idx.len() * self.bits() as usize;
+        idx_bits.div_ceil(8) + self.codebook.len() * 2 + self.col_scales.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_small_at_4bit() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::random_normal(64, 32, 0.05, &mut rng);
+        let q = quantize_weights(&w, 4);
+        let deq = q.dequantize();
+        let err = deq.rel_err(&w);
+        assert!(err < 0.10, "4-bit kmeans rel err {err}");
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::random_normal(48, 48, 1.0, &mut rng);
+        let e3 = quantize_weights(&w, 3).dequantize().rel_err(&w);
+        let e4 = quantize_weights(&w, 4).dequantize().rel_err(&w);
+        assert!(e4 < e3, "e4={e4} e3={e3}");
+    }
+
+    #[test]
+    fn per_channel_scaling_handles_mixed_magnitudes() {
+        let mut rng = Rng::new(3);
+        let mut w = Matrix::random_normal(32, 8, 1.0, &mut rng);
+        w.scale_cols(&[1.0, 10.0, 100.0, 0.1, 1.0, 5.0, 0.01, 1.0]);
+        let q = quantize_weights(&w, 4);
+        let err = q.dequantize().rel_err(&w);
+        assert!(err < 0.1, "channel-scaled rel err {err}");
+    }
+
+    #[test]
+    fn dequant_row_matches_full() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::random_normal(16, 12, 1.0, &mut rng);
+        let q = quantize_weights(&w, 4);
+        let full = q.dequantize();
+        let mut row = Vec::new();
+        q.dequant_row(5, &mut row);
+        assert_eq!(row.as_slice(), full.row(5));
+    }
+
+    #[test]
+    fn fisher_weighting_prioritizes_sensitive_entries() {
+        let mut rng = Rng::new(5);
+        let w = Matrix::random_normal(64, 16, 1.0, &mut rng);
+        // mark a band of entries as highly sensitive
+        let mut fisher = Matrix::zeros(64, 16);
+        for i in 0..fisher.data.len() {
+            fisher.data[i] = if w.data[i].abs() > 1.5 { 100.0 } else { 0.01 };
+        }
+        let qw = quantize_weights_weighted(&w, Some(&fisher), 3);
+        let qu = quantize_weights(&w, 3);
+        let err = |q: &QuantWeights| -> f64 {
+            let d = q.dequantize();
+            let mut e = 0.0f64;
+            for i in 0..d.data.len() {
+                if fisher.data[i] > 1.0 {
+                    e += ((d.data[i] - w.data[i]) as f64).powi(2);
+                }
+            }
+            e
+        };
+        assert!(err(&qw) <= err(&qu) + 1e-9);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let mut rng = Rng::new(6);
+        let w = Matrix::random_normal(128, 64, 1.0, &mut rng);
+        let q = quantize_weights(&w, 4);
+        // 128*64 4-bit indices = 4096 B, + 16 fp16 centroids + 64 fp16 scales
+        assert_eq!(q.storage_bytes(), 4096 + 32 + 128);
+    }
+}

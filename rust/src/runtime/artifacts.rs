@@ -1,0 +1,243 @@
+//! Artifact manifest: the L2 -> L3 contract. aot.py writes
+//! `artifacts/<preset>/manifest.json` describing every HLO module's
+//! positional inputs/outputs (name, shape, dtype) plus the model
+//! configuration and the canonical parameter order; this module parses it
+//! so the Rust runtime can marshal Literals with no Python at runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(format!("unknown dtype '{other}'")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec, String> {
+        Ok(TensorSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            shape: j
+                .expect("shape")?
+                .usize_list()
+                .ok_or("bad shape")?,
+            dtype: DType::parse(j.expect("dtype")?.as_str().ok_or("bad dtype")?)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+/// Model configuration blob (mirrors python ModelConfig).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub decode_batch: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_linears: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub dir: PathBuf,
+    pub model: ModelCfg,
+    /// canonical parameter order (name, shape)
+    pub params: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let cfgj = j.expect("config")?;
+        let u = |k: &str| -> Result<usize, String> {
+            cfgj.expect(k)?.as_usize().ok_or_else(|| format!("bad config.{k}"))
+        };
+        let model = ModelCfg {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            seq_len: u("seq_len")?,
+            batch: u("batch")?,
+            decode_batch: u("decode_batch")?,
+            head_dim: u("head_dim")?,
+            d_ff: u("d_ff")?,
+            n_linears: u("n_linears")?,
+        };
+        let params = j
+            .expect("params")?
+            .as_arr()
+            .ok_or("params not a list")?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.expect("name")?.as_str().ok_or("bad param name")?.to_string(),
+                    p.expect("shape")?.usize_list().ok_or("bad param shape")?,
+                ))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.expect("artifacts")?.as_obj().ok_or("artifacts not an object")? {
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>, String> {
+                a.expect(key)?
+                    .as_arr()
+                    .ok_or_else(|| format!("{key} not a list"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.expect("file")?.as_str().ok_or("bad file")?.to_string(),
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                    meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(Manifest {
+            preset: j
+                .expect("preset")?
+                .as_str()
+                .ok_or("bad preset")?
+                .to_string(),
+            dir: dir.to_path_buf(),
+            model,
+            params,
+            artifacts,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact '{name}' not in manifest ({})", self.preset))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf, String> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Total parameter element count.
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Locate the artifacts directory for a preset: `$KLLM_ARTIFACTS` or
+/// ./artifacts relative to the workspace root.
+pub fn artifacts_dir(preset: &str) -> PathBuf {
+    let base = std::env::var("KLLM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    Path::new(&base).join(preset)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "test",
+      "config": {"vocab":256,"d_model":64,"n_layers":2,"n_heads":4,
+                 "seq_len":32,"batch":2,"decode_batch":2,"head_dim":16,
+                 "d_ff":256,"n_linears":8},
+      "params": [{"name":"tok_emb","shape":[256,64]},
+                 {"name":"lnf","shape":[64]}],
+      "artifacts": {
+        "fwd": {"file":"fwd.hlo.txt",
+                "inputs":[{"name":"tok_emb","shape":[256,64],"dtype":"f32"},
+                          {"name":"tokens","shape":[2,32],"dtype":"i32"}],
+                "outputs":[{"name":"","shape":[2,32,256],"dtype":"f32"}],
+                "meta":{"method":"none"}}
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.preset, "test");
+        assert_eq!(m.model.d_model, 64);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.param_elems(), 256 * 64 + 64);
+        let a = m.artifact("fwd").unwrap();
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[0].elem_count(), 2 * 32 * 256);
+        assert!(m.artifact("nope").is_err());
+        assert_eq!(m.hlo_path("fwd").unwrap(), Path::new("/tmp/x/fwd.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"i32\"", "\"f64\"");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration-style: parse the actual artifacts/test manifest when
+        // `make artifacts` has run (skips silently otherwise).
+        let dir = artifacts_dir("test");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "test");
+        for key in ["fwd", "loss_eval", "train_step", "decode_step", "prefill",
+                    "collect_acts", "waq_gemm", "waq_gemm_hist", "quantize_act"] {
+            assert!(m.artifacts.contains_key(key), "missing {key}");
+        }
+        // every artifact input arity matches the param prefix where relevant
+        let fwd = m.artifact("fwd").unwrap();
+        assert_eq!(fwd.inputs.len(), m.params.len() + 1);
+    }
+}

@@ -1,0 +1,263 @@
+//! PJRT execution wrapper: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and marshals host tensors in/out. Mirrors
+//! /opt/xla-example/load_hlo — HLO *text* is the interchange format because
+//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// A host-side tensor (f32 or i32), shape-carrying.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape mismatch");
+        HostTensor::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape mismatch");
+        HostTensor::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::F32 { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.element_type() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 { data: lit.to_vec()?, shape: dims }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 { data: lit.to_vec()?, shape: dims }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+}
+
+/// A compiled artifact.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors (validates against the manifest spec).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.validate(inputs)?;
+        let lits = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits)?;
+        self.collect(out)
+    }
+
+    /// Execute with pre-uploaded device buffers (the serving hot path: the
+    /// big weight buffers are uploaded once and reused every step).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        self.collect(out)
+    }
+
+    fn collect(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let buf = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let mut lit = buf.to_literal_sync()?;
+        // artifacts are lowered with return_tuple=True: single tuple root
+        let parts = lit.decompose_tuple()?;
+        let tensors = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        if tensors.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: manifest says {} outputs, module returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                tensors.len()
+            );
+        }
+        Ok(tensors)
+    }
+
+    fn validate(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if !t.matches(s) {
+                bail!(
+                    "{}: input #{i} ('{}') expects {:?}{:?}, got {:?}{:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The PJRT runtime: one CPU client + compiled-executable cache.
+/// Not Sync/Send — owned by a single engine thread (the coordinator talks
+/// to it through channels).
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, Rc<Executable>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn for_preset(preset: &str) -> Result<Runtime> {
+        Self::new(&super::artifacts::artifacts_dir(preset))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact.
+    pub fn load(&mut self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name).map_err(|e| anyhow!(e))?.clone();
+        let path = self.manifest.hlo_path(name).map_err(|e| anyhow!(e))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = Rc::new(Executable { spec, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// One-shot convenience.
+    pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?.run(inputs)
+    }
+
+    /// Upload a host tensor to the device (for reuse across steps).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        match t {
+            HostTensor::F32 { data, shape } => {
+                Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+            }
+            HostTensor::I32 { data, shape } => {
+                Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::f32(vec![1.0; 6], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.as_f32().is_ok() && t.as_i32().is_err());
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![0.0; 5], &[2, 3]);
+    }
+}

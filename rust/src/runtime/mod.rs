@@ -1,0 +1,11 @@
+//! L3 runtime: PJRT client wrapper (load + compile + execute the AOT
+//! artifacts), the artifact manifest, and parameter-set plumbing. Python is
+//! never on this path — the HLO text was produced once by `make artifacts`.
+
+pub mod artifacts;
+pub mod client;
+pub mod model_io;
+
+pub use artifacts::{artifacts_dir, ArtifactSpec, DType, Manifest, TensorSpec};
+pub use client::{Executable, HostTensor, Runtime};
+pub use model_io::ParamSet;

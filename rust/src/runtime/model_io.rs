@@ -1,0 +1,210 @@
+//! Parameter-set plumbing between the Rust side and the L2 artifacts:
+//! deterministic initialization matching python's ordering, checkpoint
+//! save/load (flat binary), and weight <-> Matrix views for the quant
+//! library.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::Manifest;
+use super::client::HostTensor;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// A full parameter set in manifest order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub tensors: Vec<HostTensor>,
+}
+
+impl ParamSet {
+    /// Scaled-normal init mirroring python model.init_params: norm gains
+    /// at 1, embeddings at 0.02, linears at 1/sqrt(fan_in).
+    pub fn init(manifest: &Manifest, rng: &mut Rng) -> ParamSet {
+        let tensors = manifest
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data = if name.ends_with(".ln1")
+                    || name.ends_with(".ln2")
+                    || name == "lnf"
+                {
+                    vec![1.0f32; n]
+                } else {
+                    let std = if name.contains("emb") {
+                        0.02
+                    } else {
+                        1.0 / (shape[0] as f32).sqrt()
+                    };
+                    rng.normal_vec(n, std)
+                };
+                HostTensor::f32(data, shape)
+            })
+            .collect();
+        ParamSet { tensors }
+    }
+
+    pub fn zeros_like(manifest: &Manifest) -> ParamSet {
+        ParamSet {
+            tensors: manifest
+                .params
+                .iter()
+                .map(|(_, shape)| HostTensor::zeros(shape))
+                .collect(),
+        }
+    }
+
+    pub fn index_of(manifest: &Manifest, name: &str) -> Option<usize> {
+        manifest.params.iter().position(|(n, _)| n == name)
+    }
+
+    /// View a 2-D parameter as a Matrix (copy).
+    pub fn matrix(&self, idx: usize) -> Result<Matrix> {
+        let t = &self.tensors[idx];
+        let sh = t.shape();
+        if sh.len() != 2 {
+            bail!("param {idx} is not 2-D: {sh:?}");
+        }
+        Ok(Matrix::from_vec(sh[0], sh[1], t.as_f32()?.to_vec()))
+    }
+
+    pub fn set_matrix(&mut self, idx: usize, m: &Matrix) -> Result<()> {
+        let sh = self.tensors[idx].shape().to_vec();
+        if sh != [m.rows, m.cols] {
+            bail!("set_matrix shape mismatch: {sh:?} vs {}x{}", m.rows, m.cols);
+        }
+        self.tensors[idx] = HostTensor::f32(m.data.clone(), &sh);
+        Ok(())
+    }
+
+    /// Simple flat-binary checkpoint: magic, count, per-tensor rank/dims/f32.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(b"KLLMCKPT")?;
+        f.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for t in &self.tensors {
+            let data = t.as_f32()?;
+            let sh = t.shape();
+            f.write_all(&(sh.len() as u64).to_le_bytes())?;
+            for &d in sh {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamSet> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"KLLMCKPT" {
+            bail!("bad checkpoint magic");
+        }
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let count = u64::from_le_bytes(u64buf) as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            f.read_exact(&mut u64buf)?;
+            let rank = u64::from_le_bytes(u64buf) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut u64buf)?;
+                shape.push(u64::from_le_bytes(u64buf) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(HostTensor::f32(data, &shape));
+        }
+        Ok(ParamSet { tensors })
+    }
+
+    /// Names of the quantizable linear weights, in (layer, kind) order
+    /// matching the python per-linear index convention.
+    pub fn linear_param_names(manifest: &Manifest) -> Vec<String> {
+        let mut v = Vec::new();
+        for l in 0..manifest.model.n_layers {
+            for kind in ["qkv", "attn_out", "mlp_up", "mlp_down"] {
+                v.push(format!("l{l}.{kind}"));
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use std::path::Path as P;
+
+    fn tiny_manifest() -> Manifest {
+        let text = r#"{
+          "preset":"t","config":{"vocab":16,"d_model":8,"n_layers":1,
+            "n_heads":2,"seq_len":4,"batch":1,"decode_batch":1,"head_dim":4,
+            "d_ff":32,"n_linears":4},
+          "params":[{"name":"tok_emb","shape":[16,8]},
+                    {"name":"l0.ln1","shape":[8]},
+                    {"name":"l0.qkv","shape":[8,24]}],
+          "artifacts":{}
+        }"#;
+        Manifest::parse(P::new("/tmp"), text).unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic_and_norms_are_ones() {
+        let m = tiny_manifest();
+        let a = ParamSet::init(&m, &mut Rng::new(7));
+        let b = ParamSet::init(&m, &mut Rng::new(7));
+        assert_eq!(a.tensors, b.tensors);
+        assert!(a.tensors[1].as_f32().unwrap().iter().all(|&v| v == 1.0));
+        // embeddings small, linear ~ 1/sqrt(8)
+        let emb_std = crate::util::stats::std_dev(a.tensors[0].as_f32().unwrap());
+        assert!(emb_std < 0.05, "{emb_std}");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = tiny_manifest();
+        let p = ParamSet::init(&m, &mut Rng::new(1));
+        let path = std::env::temp_dir().join("kllm_ckpt_test.bin");
+        p.save(&path).unwrap();
+        let q = ParamSet::load(&path).unwrap();
+        assert_eq!(p.tensors, q.tensors);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn matrix_view_roundtrip() {
+        let m = tiny_manifest();
+        let mut p = ParamSet::init(&m, &mut Rng::new(2));
+        let idx = ParamSet::index_of(&m, "l0.qkv").unwrap();
+        let mut w = p.matrix(idx).unwrap();
+        assert_eq!((w.rows, w.cols), (8, 24));
+        w.data[0] = 42.0;
+        p.set_matrix(idx, &w).unwrap();
+        assert_eq!(p.matrix(idx).unwrap().data[0], 42.0);
+        assert!(p.matrix(1).is_err()); // 1-D param
+    }
+
+    #[test]
+    fn linear_names_order() {
+        let m = tiny_manifest();
+        let names = ParamSet::linear_param_names(&m);
+        assert_eq!(names, vec!["l0.qkv", "l0.attn_out", "l0.mlp_up", "l0.mlp_down"]);
+    }
+}

@@ -1,0 +1,145 @@
+//! Energy + memory-traffic accounting (the Cacti / DRAMSim3 substitute —
+//! see DESIGN.md §1.2). Module energies come from Table II powers times
+//! modeled busy cycles; DRAM energy uses a standard pJ/byte constant. The
+//! per-component breakdown feeds Fig 18.
+
+use std::collections::BTreeMap;
+
+use super::config::HwConfig;
+use super::gemm::GemmCost;
+
+/// HBM access energy (pJ per byte) — DRAMSim3-class constant for HBM2.
+pub const HBM_PJ_PER_BYTE: f64 = 60.0;
+/// SRAM access energy per byte at 28 nm (Cacti-class, small arrays).
+pub const SRAM_PJ_PER_BYTE: f64 = 0.5;
+
+#[derive(Debug, Default, Clone)]
+pub struct Breakdown {
+    /// component -> value (joules for energy, bytes for traffic)
+    pub by_component: BTreeMap<&'static str, f64>,
+}
+
+impl Breakdown {
+    pub fn add(&mut self, component: &'static str, v: f64) {
+        *self.by_component.entry(component).or_insert(0.0) += v;
+    }
+
+    pub fn total(&self) -> f64 {
+        self.by_component.values().sum()
+    }
+
+    pub fn fraction(&self, component: &str) -> f64 {
+        self.by_component
+            .get(component)
+            .copied()
+            .unwrap_or(0.0)
+            / self.total().max(1e-30)
+    }
+
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (k, v) in &other.by_component {
+            self.add(k, *v);
+        }
+    }
+}
+
+/// On-chip memory traffic of one GEMM (bytes, reads + writes) — Fig 18(a).
+pub fn gemm_traffic(hw: &HwConfig, c: &GemmCost, n_a_bits: u32) -> Breakdown {
+    let mut t = Breakdown::default();
+    let n_w_bits = 4u32;
+    // Weight Index Buffer: stream all K*N weight indices through the
+    // per-line buffers (write once from HBM, read once by the Concat Units).
+    let wgt_bytes = (c.k * c.n) as f64 * n_w_bits as f64 / 8.0;
+    t.add("wgt_idx_buffer", 2.0 * wgt_bytes);
+    // LUT: each MAC-tree weighted sum reads the live entries; model one
+    // full LUT read per output channel + the one-time load.
+    let lut_bytes = (1usize << (n_a_bits + n_w_bits)) as f64 * 2.0;
+    t.add("lut", lut_bytes * (c.n * c.m) as f64 + hw.lut_bytes as f64);
+    // Activation Index Buffer: M*K indices written by clustering, read by
+    // every PE line broadcast.
+    let act_bytes = (c.m * c.k) as f64 * n_a_bits as f64 / 8.0;
+    t.add("act_idx_buffer", 2.0 * act_bytes);
+    // Output buffer: activations in (FP), outputs out (FP), outlier reads.
+    t.add(
+        "output_buffer",
+        (c.m * c.k) as f64 * 2.0 + (c.m * c.n) as f64 * 2.0 * 2.0
+            + c.outlier_count as f64 * 2.0,
+    );
+    t
+}
+
+/// Energy of one GEMM (joules) — Fig 18(b) categories.
+pub fn gemm_energy(hw: &HwConfig, c: &GemmCost, n_a_bits: u32) -> Breakdown {
+    let cyc = hw.cycle_s();
+    let p = &hw.power_w;
+    let mut e = Breakdown::default();
+    // dynamic blocks: power * busy-time (powers are per Table II, which
+    // reports the whole-chip module powers)
+    let lines = hw.pe_lines as f64;
+    e.add("clustering", p.clustering_unit * c.main.cluster as f64 * cyc);
+    e.add("broadcast", p.act_idx_buffer * c.main.broadcast as f64 * cyc);
+    e.add("concat", p.concat_unit * lines * c.main.concat as f64 * cyc);
+    e.add("count", p.index_counter * lines * c.main.count as f64 * cyc);
+    e.add("reduction", p.mac_tree * lines * c.main.mac_tree as f64 * cyc);
+    e.add("orizuru", p.orizuru * (c.outlier.orizuru_init + c.outlier.orizuru_pops) as f64 * cyc);
+    e.add(
+        "dequant",
+        p.dequant_unit * lines * c.outlier.fetch_dequant as f64 * cyc,
+    );
+    e.add("error_calc", p.error_calc_unit * c.outlier.error_calc as f64 * cyc);
+    e.add(
+        "merge",
+        p.mac * hw.macs_per_line as f64 * lines
+            * (c.outlier.mac + c.merge) as f64
+            * cyc,
+    );
+    // on-chip SRAM traffic energy (HBM energy is accounted at the LLM
+    // phase level — Fig 18(b) is the ON-CHIP breakdown)
+    let traffic = gemm_traffic(hw, c, n_a_bits);
+    e.add("sram", traffic.total() * SRAM_PJ_PER_BYTE * 1e-12);
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gemm::gemm_cost;
+
+    #[test]
+    fn fig18_weight_buffer_dominates_traffic() {
+        // Fig 18(a): Weight Index Buffer ~76% of on-chip traffic, LUT ~19%.
+        let hw = HwConfig::default();
+        let c = gemm_cost(&hw, 1, 4096, 4096, 4, 0.01);
+        let t = gemm_traffic(&hw, &c, 4);
+        let f_w = t.fraction("wgt_idx_buffer");
+        let f_l = t.fraction("lut");
+        assert!(f_w > 0.55 && f_w < 0.9, "wgt fraction {f_w}");
+        assert!(f_l > 0.08 && f_l < 0.35, "lut fraction {f_l}");
+        assert!(f_w > f_l);
+    }
+
+    #[test]
+    fn fig18_reduction_is_top_energy_block() {
+        // Fig 18(b): reduction 33.1%, merge 22.1% lead the breakdown.
+        let hw = HwConfig::default();
+        let c = gemm_cost(&hw, 1, 4096, 4096, 4, 0.01);
+        let e = gemm_energy(&hw, &c, 4);
+        let top = e
+            .by_component
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert!(
+            *top.0 == "reduction" || *top.0 == "merge",
+            "top component {top:?}"
+        );
+    }
+
+    #[test]
+    fn energy_scales_with_work() {
+        let hw = HwConfig::default();
+        let small = gemm_energy(&hw, &gemm_cost(&hw, 1, 1024, 1024, 4, 0.01), 4);
+        let big = gemm_energy(&hw, &gemm_cost(&hw, 1, 4096, 4096, 4, 0.01), 4);
+        assert!(big.total() > 4.0 * small.total());
+    }
+}

@@ -1,0 +1,230 @@
+//! Cycle model of one M-K-N GEMM on OASIS (paper §IV-A computation flow,
+//! §V-D3 pipeline). Both branches are modeled step by step; the pipeline
+//! overlaps them (look-ahead design), so GEMM latency = max(main, outlier)
+//! + merge. Cost formulas follow directly from the Table II unit counts.
+
+use super::config::HwConfig;
+
+/// Per-step cycle costs of the main (look-ahead) branch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MainBranch {
+    pub cluster: u64,
+    pub broadcast: u64,
+    pub concat: u64,
+    pub count: u64,
+    pub mac_tree: u64,
+}
+
+impl MainBranch {
+    /// Pipelined latency: stages overlap across output channels, so the
+    /// branch is bottlenecked by its slowest stage plus fill of the others.
+    pub fn total(&self) -> u64 {
+        let stages = [self.concat, self.count, self.mac_tree];
+        let bottleneck = *stages.iter().max().unwrap();
+        // cluster + broadcast happen once per token before the PE pipeline
+        self.cluster + self.broadcast + bottleneck
+            + stages.iter().sum::<u64>().saturating_sub(bottleneck) / 8 // fill
+    }
+}
+
+/// Per-step cycle costs of the outlier branch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OutlierBranch {
+    pub orizuru_init: u64,
+    pub orizuru_pops: u64,
+    pub fetch_dequant: u64,
+    pub error_calc: u64,
+    pub mac: u64,
+}
+
+impl OutlierBranch {
+    pub fn total(&self) -> u64 {
+        // init -> (pops || error-calc) -> per-outlier fetch/dequant/mac are
+        // pipelined one outlier behind the pop stream; the per-outlier MAC
+        // work dominates steady state.
+        self.orizuru_init + self.orizuru_pops.max(self.error_calc) + self.fetch_dequant.max(self.mac)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GemmCost {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub main: MainBranch,
+    pub outlier: OutlierBranch,
+    pub merge: u64,
+    /// weight-index HBM streaming cycles (overlapped with compute; the
+    /// scheduler takes max(compute, memory))
+    pub mem_stream: u64,
+    pub outlier_count: usize,
+}
+
+impl GemmCost {
+    /// End-to-end GEMM cycles with the look-ahead (parallel-branch) design.
+    pub fn total_lookahead(&self) -> u64 {
+        let compute = self.main.total().max(self.outlier.total()) + self.merge;
+        compute.max(self.mem_stream)
+    }
+
+    /// Outlier-detection cycles (Orizuru init + pops) — the work OASIS-C
+    /// serializes on the critical path.
+    pub fn detect_cycles(&self) -> u64 {
+        self.outlier.orizuru_init + self.outlier.orizuru_pops
+    }
+
+    /// Conventional critical-path design (paper Fig 4(a), "OASIS-C"):
+    /// detection must finish before any GEMM work (or further weight
+    /// consumption) starts, so it adds on top of the overlapped total.
+    pub fn total_critical_path(&self) -> u64 {
+        self.detect_cycles() + self.total_lookahead()
+    }
+
+    /// Reduction FP operations in the main branch (for Fig 16).
+    pub fn reduction_flops(&self, n_a_bits: u32, n_w_bits: u32) -> usize {
+        (1usize << (n_a_bits + n_w_bits)) * self.n * self.m
+    }
+}
+
+/// Model an M-K-N GEMM at the given activation precision and outlier
+/// fraction. Weights at 4 bits (the paper's only weight precision).
+pub fn gemm_cost(
+    hw: &HwConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    n_a_bits: u32,
+    outlier_frac: f64,
+) -> GemmCost {
+    let n_w_bits = 4u32;
+    let lut_entries = 1u64 << (n_a_bits + n_w_bits);
+
+    // ---- main branch --------------------------------------------------
+    // Clustering Units: 1 element/cycle each (binary-search tree is
+    // pipelined), all M*K activation elements.
+    let cluster = ((m * k) as u64).div_ceil(hw.clustering_units as u64);
+    // Broadcast clustered indices to the PE lines.
+    let idx_bytes = (m * k) as u64 * n_a_bits as u64 / 8;
+    let broadcast = idx_bytes.div_ceil(hw.bcast_bytes_per_cycle as u64).max(1);
+
+    // Each PE line owns N / pe_lines output channels; per channel the line
+    // concatenates K index pairs (concat_units_per_line per cycle), counts
+    // them (index_counters * inputs per cycle), and MAC-trees the
+    // LUT-entry weighted sum (mac_tree_inputs per cycle).
+    let chans_per_line = n.div_ceil(hw.pe_lines) as u64;
+    let per_chan_concat = (k as u64).div_ceil(hw.concat_units_per_line as u64);
+    let per_chan_count = (k as u64)
+        .div_ceil((hw.index_counters_per_line * hw.index_counter_inputs) as u64);
+    let per_chan_mac = lut_entries.div_ceil(hw.mac_tree_inputs as u64);
+    let work = chans_per_line * m as u64;
+    let main = MainBranch {
+        cluster,
+        broadcast,
+        concat: per_chan_concat * work,
+        count: per_chan_count * work,
+        mac_tree: per_chan_mac * work,
+    };
+
+    // ---- outlier branch -------------------------------------------------
+    let k_outliers = (((outlier_frac * k as f64) / 2.0).round() as usize).max(1) * 2;
+    let total_outliers = k_outliers * m;
+    // Orizuru: 16-input units, 273 of them; init does 1.5K comparisons.
+    let cmp_per_cycle = (hw.orizuru_units * hw.orizuru_inputs / 16) as u64; // 1 cmp/unit/cycle
+    let orizuru_init = ((1.5 * k as f64) as u64).div_ceil(cmp_per_cycle) * m as u64;
+    // each pop requires log2(K) *sequential* maintenance comparisons
+    // (paper §IV-D), so pops stream out one per log2(K) cycles
+    let log2k = (usize::BITS - (k - 1).leading_zeros()) as u64;
+    let orizuru_pops = total_outliers as u64 * log2k;
+    // per outlier: fetch the weight-index input channel (N indices across
+    // the lines), dequantize (1 dequant unit per line), MAC into outputs
+    // (macs_per_line per line per cycle).
+    let chans = n.div_ceil(hw.pe_lines) as u64;
+    let fetch_per_outlier = chans.div_ceil(16); // 16 idx/cycle from buffer
+    let dequant_per_outlier = chans.div_ceil(16); // LUT-read pipelined x16
+    let mac_per_outlier = chans.div_ceil(hw.macs_per_line as u64);
+    let outlier = OutlierBranch {
+        orizuru_init,
+        orizuru_pops,
+        fetch_dequant: (fetch_per_outlier + dequant_per_outlier) * total_outliers as u64 / 2,
+        error_calc: total_outliers as u64, // 1/cycle in the Error Calc Unit
+        mac: mac_per_outlier * total_outliers as u64,
+    };
+
+    // ---- merge + memory ------------------------------------------------
+    let merge = (n as u64 * m as u64).div_ceil((hw.macs_per_line * hw.pe_lines) as u64);
+    let wgt_idx_bytes = (k * n) as u64 * n_w_bits as u64 / 8;
+    let mem_stream = (wgt_idx_bytes as f64 / hw.hbm_bytes_per_cycle()).ceil() as u64;
+
+    GemmCost {
+        m,
+        k,
+        n,
+        main,
+        outlier,
+        merge,
+        mem_stream,
+        outlier_count: total_outliers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwConfig {
+        HwConfig::default()
+    }
+
+    #[test]
+    fn paper_pipeline_balance_at_1pct() {
+        // §V-D3: at 1% outliers the two branches are comparable, outlier
+        // branch ~33% faster (so main dominates).
+        let c = gemm_cost(&hw(), 1, 4096, 4096, 4, 0.01);
+        let main = c.main.total() as f64;
+        let outl = c.outlier.total() as f64;
+        assert!(outl < main, "outlier {outl} !< main {main}");
+        assert!(outl > 0.3 * main, "branches should be comparable: {outl} vs {main}");
+    }
+
+    #[test]
+    fn outlier_heavy_flips_bottleneck() {
+        // Fig 15: beyond ~1% the outlier branch becomes the bottleneck.
+        let lo = gemm_cost(&hw(), 1, 4096, 4096, 4, 0.01);
+        let hi = gemm_cost(&hw(), 1, 4096, 4096, 4, 0.10);
+        assert!(lo.outlier.total() < lo.main.total());
+        assert!(hi.outlier.total() > hi.main.total());
+    }
+
+    #[test]
+    fn lookahead_beats_critical_path() {
+        // §V-D4: OASIS vs OASIS-C ~16-18% at 1% outliers.
+        let c = gemm_cost(&hw(), 1, 4096, 4096, 4, 0.01);
+        let la = c.total_lookahead() as f64;
+        let cp = c.total_critical_path() as f64;
+        assert!(cp > la, "critical path {cp} !> lookahead {la}");
+        let gain = cp / la - 1.0;
+        assert!(gain > 0.02 && gain < 0.6, "gain {gain}");
+    }
+
+    #[test]
+    fn reduction_independent_of_k() {
+        let a = gemm_cost(&hw(), 1, 1024, 4096, 4, 0.01);
+        let b = gemm_cost(&hw(), 1, 8192, 4096, 4, 0.01);
+        assert_eq!(a.main.mac_tree, b.main.mac_tree);
+        assert_eq!(a.reduction_flops(4, 4), b.reduction_flops(4, 4));
+    }
+
+    #[test]
+    fn memory_streaming_scales_with_weights() {
+        let a = gemm_cost(&hw(), 1, 4096, 4096, 4, 0.01);
+        let b = gemm_cost(&hw(), 1, 4096, 8192, 4, 0.01);
+        assert!((b.mem_stream as f64 / a.mem_stream as f64 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn a3_smaller_lut_work_than_a4() {
+        let a3 = gemm_cost(&hw(), 1, 4096, 4096, 3, 0.01);
+        let a4 = gemm_cost(&hw(), 1, 4096, 4096, 4, 0.01);
+        assert!(a3.main.mac_tree < a4.main.mac_tree);
+    }
+}

@@ -1,0 +1,202 @@
+//! End-to-end LLM phase model on OASIS: maps a model's decoder layers to
+//! GEMM costs, adds attention (KV-cache streaming) and embedding-head
+//! costs, and produces per-token latency/energy for prefill and decode —
+//! the engine behind Figs 11, 12, 13 and 15(b, c).
+
+use super::config::HwConfig;
+use super::energy::{gemm_energy, Breakdown, HBM_PJ_PER_BYTE};
+use super::gemm::{gemm_cost, GemmCost};
+use crate::models::LlmSpec;
+
+#[derive(Clone, Copy, Debug)]
+pub struct OasisMode {
+    pub n_a_bits: u32,
+    pub outlier_frac: f64,
+    /// look-ahead (OASIS) vs critical-path (OASIS-C)
+    pub lookahead: bool,
+}
+
+impl OasisMode {
+    pub fn a4() -> Self {
+        OasisMode { n_a_bits: 4, outlier_frac: 0.01, lookahead: true }
+    }
+
+    pub fn a3() -> Self {
+        OasisMode { n_a_bits: 3, outlier_frac: 0.01, lookahead: true }
+    }
+
+    /// KV-cache element bytes: activations quantized to nA bits.
+    pub fn kv_bytes_per_elem(&self) -> f64 {
+        self.n_a_bits as f64 / 8.0
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseCost {
+    pub seconds: f64,
+    pub energy_j: f64,
+    /// HBM bytes moved
+    pub hbm_bytes: f64,
+}
+
+/// One decode step for a batch of `batch` sequences at context length
+/// `ctx`. Weight streaming is amortized across the batch (read once per
+/// step); KV traffic is per sequence.
+pub fn decode_step_cost(
+    hw: &HwConfig,
+    m: &LlmSpec,
+    mode: OasisMode,
+    batch: usize,
+    ctx: usize,
+) -> PhaseCost {
+    let mut compute_cycles = 0u64;
+    let mut detect_extra = 0u64; // OASIS-C: detection on the critical path
+    let mut energy = Breakdown::default();
+    for (k, n) in m.layer_gemms() {
+        let c: GemmCost = gemm_cost(hw, batch, k, n, mode.n_a_bits, mode.outlier_frac);
+        // compute only; memory handled globally below
+        compute_cycles += c.main.total().max(c.outlier.total()) + c.merge;
+        if !mode.lookahead {
+            detect_extra += c.detect_cycles();
+        }
+        energy.merge(&gemm_energy(hw, &c, mode.n_a_bits));
+    }
+    compute_cycles *= m.n_layers as u64;
+    detect_extra *= m.n_layers as u64;
+    // scale per-layer energy to all layers
+    let mut total_energy: f64 = energy.total() * m.n_layers as f64;
+
+    // attention: stream the KV cache (quantized to nA bits) per sequence,
+    // plus FP16 score/weighted-sum MACs on the Functional Unit.
+    let kv_bytes =
+        m.kv_bytes_per_token(mode.kv_bytes_per_elem()) * ctx as f64 * batch as f64;
+    let attn_macs = 2.0 * (m.n_heads * m.head_dim()) as f64 * ctx as f64 * batch as f64
+        * m.n_layers as f64;
+    let attn_cycles = attn_macs / (hw.macs_per_line * hw.pe_lines) as f64;
+
+    // head/embedding GEMM (kept FP16-weight in OASIS? no — weights 4-bit):
+    let head = gemm_cost(hw, batch, m.d_model, m.vocab, mode.n_a_bits, mode.outlier_frac);
+    compute_cycles += head.main.total().max(head.outlier.total()) + head.merge;
+
+    // HBM: all 4-bit weight indices once per step + KV + head weights
+    let wgt_bytes = m.linear_params() as f64 * 0.5
+        + (m.d_model * m.vocab) as f64 * 0.5;
+    let hbm_bytes = wgt_bytes + kv_bytes;
+    let mem_cycles = hbm_bytes / hw.hbm_bytes_per_cycle();
+
+    let cycles = (compute_cycles as f64 + attn_cycles).max(mem_cycles) + detect_extra as f64;
+    let seconds = cycles * hw.cycle_s();
+    total_energy += hbm_bytes * HBM_PJ_PER_BYTE * 1e-12;
+    // static leakage-ish floor: idle power of the buffers/controller
+    total_energy += 0.15 * hw.total_power_w() * seconds;
+
+    PhaseCost { seconds, energy_j: total_energy, hbm_bytes }
+}
+
+/// Prefill of `prompt_len` tokens (one pass, weights read once, compute
+/// scales with tokens).
+pub fn prefill_cost(
+    hw: &HwConfig,
+    m: &LlmSpec,
+    mode: OasisMode,
+    prompt_len: usize,
+) -> PhaseCost {
+    // prefill = decode_step with batch = prompt_len tokens and ctx ~ L/2
+    decode_step_cost(hw, m, mode, prompt_len, prompt_len / 2)
+}
+
+/// Whole-generation cost: prefill + `out_len` decode steps with growing
+/// context (evaluated at the mean context for closed form).
+pub fn generation_cost(
+    hw: &HwConfig,
+    m: &LlmSpec,
+    mode: OasisMode,
+    batch: usize,
+    prompt_len: usize,
+    out_len: usize,
+) -> PhaseCost {
+    let pre = if prompt_len > 0 {
+        prefill_cost(hw, m, mode, prompt_len)
+    } else {
+        PhaseCost::default()
+    };
+    let mid_ctx = prompt_len + out_len / 2;
+    let step = decode_step_cost(hw, m, mode, batch, mid_ctx);
+    PhaseCost {
+        seconds: pre.seconds + step.seconds * out_len as f64,
+        energy_j: pre.energy_j + step.energy_j * out_len as f64,
+        hbm_bytes: pre.hbm_bytes + step.hbm_bytes * out_len as f64,
+    }
+}
+
+/// tokens/sec for single-stream decode at the paper's setting.
+pub fn decode_throughput(hw: &HwConfig, m: &LlmSpec, mode: OasisMode, batch: usize, out_len: usize) -> f64 {
+    let g = generation_cost(hw, m, mode, batch, 0, out_len);
+    (out_len * batch) as f64 / g.seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    fn hw() -> HwConfig {
+        HwConfig::default()
+    }
+
+    #[test]
+    fn decode_is_memory_bound_for_7b() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let c = decode_step_cost(&hw(), m, OasisMode::a4(), 1, 1024);
+        // 4-bit weights of ~6.6B linear params ~ 3.3 GB; at 512 GB/s that is
+        // ~6.5 ms — latency must be within 2x of the memory bound.
+        let mem_s = c.hbm_bytes / hw().hbm_bytes_per_sec;
+        assert!(c.seconds >= mem_s * 0.99);
+        assert!(c.seconds < mem_s * 2.0, "{} vs {}", c.seconds, mem_s);
+    }
+
+    #[test]
+    fn batching_amortizes_weights() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t1 = decode_throughput(&hw(), m, OasisMode::a4(), 1, 64);
+        let t4 = decode_throughput(&hw(), m, OasisMode::a4(), 4, 64);
+        assert!(t4 > 2.0 * t1, "batch-4 {t4} vs batch-1 {t1}");
+    }
+
+    #[test]
+    fn a3_faster_than_a4() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let a4 = decode_throughput(&hw(), m, OasisMode::a4(), 1, 64);
+        let a3 = decode_throughput(&hw(), m, OasisMode::a3(), 1, 64);
+        assert!(a3 >= a4 * 0.99, "a3 {a3} vs a4 {a4}");
+    }
+
+    #[test]
+    fn bigger_models_slower() {
+        let s = decode_throughput(&hw(), by_name("LLaMA-2-7B").unwrap(), OasisMode::a4(), 1, 32);
+        let b = decode_throughput(&hw(), by_name("LLaMA-2-70B").unwrap(), OasisMode::a4(), 1, 32);
+        assert!(s > 5.0 * b, "7B {s} vs 70B {b}");
+    }
+
+    #[test]
+    fn lookahead_beats_critical_path_end_to_end() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let la = decode_throughput(&hw(), m, OasisMode::a4(), 1, 32);
+        let cp = decode_throughput(
+            &hw(),
+            m,
+            OasisMode { lookahead: false, ..OasisMode::a4() },
+            1,
+            32,
+        );
+        assert!(la > cp, "la {la} !> cp {cp}");
+    }
+
+    #[test]
+    fn energy_positive_and_scales() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let g1 = generation_cost(&hw(), m, OasisMode::a4(), 1, 128, 64);
+        let g2 = generation_cost(&hw(), m, OasisMode::a4(), 1, 128, 128);
+        assert!(g1.energy_j > 0.0 && g2.energy_j > 1.5 * g1.energy_j);
+    }
+}

@@ -1,0 +1,14 @@
+//! Cycle-level OASIS accelerator simulator (the DnnWeaver-derived simulator
+//! substitute): Table II configuration, per-GEMM dual-branch cycle model,
+//! pipeline schedules (Fig 14), energy/traffic accounting (Fig 18), and the
+//! LLM phase model behind Figs 11-13 and 15.
+
+pub mod config;
+pub mod energy;
+pub mod gemm;
+pub mod llm;
+pub mod pipeline;
+
+pub use config::HwConfig;
+pub use gemm::{gemm_cost, GemmCost};
+pub use llm::{decode_step_cost, decode_throughput, generation_cost, OasisMode, PhaseCost};

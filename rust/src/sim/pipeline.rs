@@ -1,0 +1,132 @@
+//! Pipeline schedule of one GEMM across the two branches (paper Fig 14):
+//! per-step start/duration in cycles, with the bottleneck step of each
+//! stage flagged. `kllm experiment fig14` renders this as the paper does.
+
+use super::config::HwConfig;
+use super::gemm::{gemm_cost, GemmCost};
+
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub branch: &'static str,
+    pub name: &'static str,
+    pub start: u64,
+    pub cycles: u64,
+    pub bottleneck: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub steps: Vec<Step>,
+    pub main_end: u64,
+    pub outlier_end: u64,
+    pub total: u64,
+}
+
+pub fn schedule(hw: &HwConfig, m: usize, k: usize, n: usize, n_a_bits: u32, outlier_frac: f64) -> Schedule {
+    let c: GemmCost = gemm_cost(hw, m, k, n, n_a_bits, outlier_frac);
+    let mut steps = Vec::new();
+
+    // ---- main branch: cluster -> broadcast -> {concat, count, mac} ------
+    let mut t = 0u64;
+    let mb = [
+        ("cluster", c.main.cluster),
+        ("broadcast", c.main.broadcast),
+        ("concat", c.main.concat),
+        ("count", c.main.count),
+        ("mac_tree", c.main.mac_tree),
+    ];
+    let main_max = mb.iter().map(|&(_, d)| d).max().unwrap();
+    for (name, d) in mb {
+        steps.push(Step { branch: "main", name, start: t, cycles: d, bottleneck: d == main_max });
+        // concat/count/mac_tree are pipelined: successors start one
+        // pipeline beat later, not after full completion
+        let pipelined = matches!(name, "concat" | "count");
+        t += if pipelined { d.div_ceil(8).max(1) } else { d };
+    }
+    let main_end = steps
+        .iter()
+        .filter(|s| s.branch == "main")
+        .map(|s| s.start + s.cycles)
+        .max()
+        .unwrap();
+
+    // ---- outlier branch ---------------------------------------------------
+    let mut t = 0u64;
+    let ob = [
+        ("orizuru_init", c.outlier.orizuru_init),
+        ("orizuru_pop", c.outlier.orizuru_pops),
+        ("fetch+dequant", c.outlier.fetch_dequant),
+        ("error_calc", c.outlier.error_calc),
+        ("mac", c.outlier.mac),
+    ];
+    let out_max = ob.iter().map(|&(_, d)| d).max().unwrap();
+    for (name, d) in ob {
+        steps.push(Step { branch: "outlier", name, start: t, cycles: d, bottleneck: d == out_max });
+        let pipelined = matches!(name, "orizuru_pop" | "fetch+dequant" | "error_calc");
+        t += if pipelined { d.div_ceil(8).max(1) } else { d };
+    }
+    let outlier_end = steps
+        .iter()
+        .filter(|s| s.branch == "outlier")
+        .map(|s| s.start + s.cycles)
+        .max()
+        .unwrap();
+
+    // ---- merge ------------------------------------------------------------
+    let merge_start = main_end.max(outlier_end);
+    steps.push(Step {
+        branch: "merge",
+        name: "merge",
+        start: merge_start,
+        cycles: c.merge,
+        bottleneck: false,
+    });
+
+    Schedule { steps, main_end, outlier_end, total: merge_start + c.merge }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig14_shape_at_1pct() {
+        // 1-4096-4096, W4A4, 1% outliers: outlier branch finishes first
+        // (§V-D3: "approximately 33% faster").
+        let s = schedule(&HwConfig::default(), 1, 4096, 4096, 4, 0.01);
+        assert!(s.outlier_end < s.main_end, "{:?}", (s.outlier_end, s.main_end));
+        let ratio = s.outlier_end as f64 / s.main_end as f64;
+        assert!(ratio < 0.95 && ratio > 0.2, "ratio {ratio}");
+        // merge is last
+        let merge = s.steps.last().unwrap();
+        assert_eq!(merge.name, "merge");
+        assert_eq!(merge.start, s.main_end.max(s.outlier_end));
+    }
+
+    #[test]
+    fn heavy_outliers_flip_finish_order() {
+        let s = schedule(&HwConfig::default(), 1, 4096, 4096, 4, 0.10);
+        assert!(s.outlier_end > s.main_end);
+    }
+
+    #[test]
+    fn exactly_one_bottleneck_flag_per_branch_at_least() {
+        let s = schedule(&HwConfig::default(), 1, 4096, 4096, 4, 0.01);
+        for b in ["main", "outlier"] {
+            assert!(s.steps.iter().any(|st| st.branch == b && st.bottleneck), "{b}");
+        }
+    }
+
+    #[test]
+    fn steps_are_causally_ordered() {
+        let s = schedule(&HwConfig::default(), 1, 2048, 2048, 4, 0.01);
+        for b in ["main", "outlier"] {
+            let mut last_start = 0;
+            for st in s.steps.iter().filter(|st| st.branch == b) {
+                assert!(st.start >= last_start);
+                last_start = st.start;
+            }
+        }
+        assert!(s.total >= s.main_end && s.total >= s.outlier_end);
+    }
+}

@@ -1,0 +1,236 @@
+//! Minimal dense f32 matrix used by the quantization library, the software
+//! GEMM paths, and calibration post-processing. Row-major, with a blocked
+//! matmul tuned for the single-core testbed (the runtime-critical GEMMs go
+//! through PJRT; this type backs algorithm code and references).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn random_normal(rows: usize, cols: usize, sigma: f32, rng: &mut crate::util::rng::Rng) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols, sigma) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Blocked SGEMM: `self (M x K) @ rhs (K x N)`. ikj loop order with a
+    /// K-blocking keeps the rhs panel in cache; good enough to serve as the
+    /// fair software baseline the WAQ LUT path is compared against.
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        let mut out = Matrix::zeros(m, n);
+        const BK: usize = 64;
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &rhs.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale_rows(&mut self, scales: &[f32]) {
+        assert_eq!(scales.len(), self.rows);
+        for r in 0..self.rows {
+            let s = scales[r];
+            for v in self.row_mut(r) {
+                *v *= s;
+            }
+        }
+    }
+
+    pub fn scale_cols(&mut self, scales: &[f32]) {
+        assert_eq!(scales.len(), self.cols);
+        for r in 0..self.rows {
+            for (c, v) in self.row_mut(r).iter_mut().enumerate() {
+                *v *= scales[c];
+            }
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Relative Frobenius error vs a reference.
+    pub fn rel_err(&self, reference: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (reference.rows, reference.cols));
+        let diff: f64 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        diff / reference.frob_norm().max(1e-30)
+    }
+
+    /// In-place orthonormal fast Walsh-Hadamard transform over columns of
+    /// each row (used by the QuaRot baseline); cols must be a power of 2.
+    pub fn hadamard_rows(&mut self) {
+        let n = self.cols;
+        assert!(n.is_power_of_two(), "hadamard dim {n} not power of two");
+        let scale = 1.0 / (n as f32).sqrt();
+        for r in 0..self.rows {
+            let row = &mut self.data[r * n..(r + 1) * n];
+            let mut h = 1;
+            while h < n {
+                let mut i = 0;
+                while i < n {
+                    for j in i..i + h {
+                        let x = row[j];
+                        let y = row[j + h];
+                        row[j] = x + y;
+                        row[j + h] = x - y;
+                    }
+                    i += 2 * h;
+                }
+                h *= 2;
+            }
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f32;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 7, 5), (4, 64, 16), (3, 130, 9)] {
+            let a = Matrix::random_normal(m, k, 1.0, &mut rng);
+            let b = Matrix::random_normal(k, n, 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.rel_err(&want) < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random_normal(5, 9, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn hadamard_preserves_norm_and_inverts() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random_normal(4, 64, 1.0, &mut rng);
+        let mut h = a.clone();
+        h.hadamard_rows();
+        assert!((h.frob_norm() - a.frob_norm()).abs() < 1e-4);
+        h.hadamard_rows(); // H is an involution (orthonormal, symmetric)
+        assert!(h.rel_err(&a) < 1e-5);
+    }
+
+    #[test]
+    fn hadamard_spreads_outliers() {
+        // A single huge channel spreads across all channels after rotation —
+        // the mechanism QuaRot relies on.
+        let mut a = Matrix::zeros(1, 64);
+        *a.at_mut(0, 3) = 64.0;
+        let before = a.max_abs();
+        a.hadamard_rows();
+        assert!(a.max_abs() < before / 4.0);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let mut a = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        a.scale_rows(&[2.0, 3.0]);
+        assert_eq!(a.at(1, 2), 15.0);
+        a.scale_cols(&[1.0, 0.5, 1.0]);
+        assert_eq!(a.at(0, 1), 1.0);
+    }
+}

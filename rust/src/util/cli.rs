@@ -1,0 +1,143 @@
+//! Tiny CLI argument parser (no clap offline): subcommand + `--key value` /
+//! `--flag` options with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse() -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Reject unknown options: call with the full allowlist once parsing is
+    /// done so typos fail loudly instead of being ignored.
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse(&["experiment", "fig11", "--preset", "test", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig11"]);
+        assert_eq!(a.opt("preset"), Some("test"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn eq_form_and_typed() {
+        let a = parse(&["x", "--steps=300", "--lr", "0.003"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 300);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.003).abs() < 1e-12);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn typo_detection() {
+        let a = parse(&["x", "--stpes", "3"]);
+        assert!(a.check_known(&["steps"]).is_err());
+        assert!(a.check_known(&["stpes"]).is_ok());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["x", "--lo", "-1.5"]);
+        assert_eq!(a.f64_or("lo", 0.0).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = parse(&["x", "--steps", "abc"]);
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! TOML-subset configuration loader (no `toml`/`serde` offline).
+//!
+//! Supports what the launcher needs: `[section]` headers, `key = value`
+//! with string / integer / float / boolean / homogeneous-array values, `#`
+//! comments, and dotted lookup (`server.port`). Used by `kllm serve
+//! --config <file>` and the experiment harness; every typed accessor
+//! reports the full dotted key on error.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    fn parse(raw: &str, line_no: usize) -> Result<Value, String> {
+        let s = raw.trim();
+        if s.is_empty() {
+            return Err(format!("line {line_no}: empty value"));
+        }
+        if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+            return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+        }
+        if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in split_top_level(inner) {
+                    items.push(Value::parse(&part, line_no)?);
+                }
+            }
+            return Ok(Value::Arr(items));
+        }
+        match s {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(format!("line {line_no}: cannot parse value '{s}'"))
+    }
+}
+
+/// Split an array body at top-level commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut depth = 0usize;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {line_no}: expected 'key = value'"))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if values.contains_key(&key) {
+                return Err(format!("line {line_no}: duplicate key '{key}'"));
+            }
+            values.insert(key, Value::parse(v, line_no)?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Int(i)) if *i >= 0 => Ok(*i as usize),
+            Some(v) => Err(format!("{key}: expected non-negative int, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(v) => Err(format!("{key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(v) => Err(format!("{key}: expected bool, got {v:?}")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+preset = "gpt20m"
+
+[server]
+port = 7070            # TCP listener
+max_batch = 4
+target_util = 0.85
+enable_tcp = true
+quant = ["kmeans", "a4"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("preset", ""), "gpt20m");
+        assert_eq!(c.usize_or("server.port", 0).unwrap(), 7070);
+        assert_eq!(c.usize_or("server.max_batch", 0).unwrap(), 4);
+        assert!((c.f64_or("server.target_util", 0.0).unwrap() - 0.85).abs() < 1e-12);
+        assert!(c.bool_or("server.enable_tcp", false).unwrap());
+        match c.get("server.quant").unwrap() {
+            Value::Arr(a) => assert_eq!(a.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.usize_or("missing", 9).unwrap(), 9);
+        assert!(c.f64_or("x", 0.0).unwrap() == 3.0);
+        assert!(Config::parse("x = ").is_err());
+        assert!(Config::parse("x = 1\nx = 2").is_err());
+        assert!(Config::parse("just a line").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let c = Config::parse("s = \"a # b\"").unwrap();
+        assert_eq!(c.str_or("s", ""), "a # b");
+    }
+}

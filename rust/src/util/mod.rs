@@ -1,0 +1,13 @@
+//! Infrastructure substrates built in-tree (the offline registry only
+//! carries the `xla` crate's dependency closure, so there is no clap /
+//! serde / rand / criterion / proptest — each has a purpose-sized
+//! replacement here).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

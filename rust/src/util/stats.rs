@@ -1,0 +1,178 @@
+//! Small statistics toolkit used by the experiment harness and the
+//! coordinator's latency metrics: moments, percentiles, RMSE, histograms.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Root-mean-square error between two equal-length slices
+/// (used verbatim for the Fig 3 / Fig 5 threshold/centroid comparisons).
+pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rmse length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum();
+    (s / a.len() as f64).sqrt()
+}
+
+/// Min-max normalize to [0, 1] (paper normalizes thresholds/centroids
+/// before RMSE in Figs 3 and 5).
+pub fn normalize01(xs: &[f32]) -> Vec<f32> {
+    let (lo, hi) = min_max(xs);
+    let span = (hi - lo).max(1e-12);
+    xs.iter().map(|&x| (x - lo) / span).collect()
+}
+
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// Percentile by linear interpolation on a *sorted* slice, q in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Online latency accumulator (p50/p95/p99/mean/max) for the coordinator.
+#[derive(Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            count: s.len(),
+            mean_us: if s.is_empty() { 0.0 } else { s.iter().sum::<f64>() / s.len() as f64 },
+            p50_us: percentile_sorted(&s, 50.0),
+            p95_us: percentile_sorted(&s, 95.0),
+            p99_us: percentile_sorted(&s, 99.0),
+            max_us: s.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+            self.count, self.mean_us, self.p50_us, self.p95_us, self.p99_us, self.max_us
+        )
+    }
+}
+
+/// Geometric mean of ratios (used for the "average speedup" rows).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_zero_for_identical() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert_eq!(rmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let a = [0.0f32, 0.0];
+        let b = [3.0f32, 4.0];
+        assert!((rmse(&a, &b) - (12.5f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalize01_range() {
+        let v = normalize01(&[2.0, 4.0, 6.0]);
+        assert_eq!(v, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&s, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile_sorted(&s, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 100.0);
+    }
+
+    #[test]
+    fn latency_summary_monotone() {
+        let mut l = LatencyStats::default();
+        for i in 0..1000 {
+            l.record_us(i as f64);
+        }
+        let s = l.summary();
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+    }
+
+    #[test]
+    fn geomean_of_constant() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,185 @@
+//! ASCII table renderer for the experiment harness — every `kllm experiment
+//! <id>` prints its paper table/figure through this.
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        let aligns = headers
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns,
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    /// Horizontal separator row.
+    pub fn sep(&mut self) -> &mut Self {
+        self.rows.push(Vec::new());
+        self
+    }
+
+    pub fn note(&mut self, n: &str) -> &mut Self {
+        self.notes.push(n.to_string());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let line = |c: char| -> String {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&c.to_string().repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = widths[i] - cell.len();
+                match aligns[i] {
+                    Align::Left => s.push_str(&format!(" {}{} |", cell, " ".repeat(pad))),
+                    Align::Right => s.push_str(&format!(" {}{} |", " ".repeat(pad), cell)),
+                }
+            }
+            s
+        };
+
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&line('-'));
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers, &vec![Align::Left; ncols]));
+        out.push('\n');
+        out.push_str(&line('='));
+        out.push('\n');
+        for row in &self.rows {
+            if row.is_empty() {
+                out.push_str(&line('-'));
+            } else {
+                out.push_str(&fmt_row(row, &self.aligns));
+            }
+            out.push('\n');
+        }
+        out.push_str(&line('-'));
+        out.push('\n');
+        for n in &self.notes {
+            out.push_str(&format!("  note: {}\n", n));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Render as markdown (for EXPERIMENTS.md capture).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("**{}**\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            if row.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("\n_note: {}_\n", n));
+        }
+        out
+    }
+}
+
+/// Compact float formatting matching the paper's table style: large values
+/// in scientific shorthand (`6e3`), small with 2 decimals.
+pub fn fmt_ppl(x: f64) -> String {
+    if !x.is_finite() {
+        return "inf".into();
+    }
+    if x >= 1000.0 {
+        let exp = x.log10().floor() as i32;
+        let mant = x / 10f64.powi(exp);
+        format!("{:.0}e{}", mant, exp)
+    } else {
+        format!("{:.2}", x)
+    }
+}
+
+pub fn fmt_ratio(x: f64) -> String {
+    format!("{:.2}x", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_rows() {
+        let mut t = Table::new("demo", &["k", "v"]);
+        t.row(&["a", "1"]).row(&["bb", "22"]).sep().row(&["c", "3"]);
+        let r = t.render();
+        assert!(r.contains("demo") && r.contains("bb") && r.contains("22"));
+        assert_eq!(r.lines().filter(|l| l.starts_with('|')).count(), 4);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("m", &["a", "b"]);
+        t.row(&["1", "2"]);
+        let md = t.render_markdown();
+        assert!(md.contains("| a | b |") && md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn ppl_formatting_matches_paper_style() {
+        assert_eq!(fmt_ppl(5.47), "5.47");
+        assert_eq!(fmt_ppl(6234.0), "6e3");
+        assert_eq!(fmt_ppl(2e5), "2e5");
+    }
+}

@@ -1,0 +1,293 @@
+//! Property-based invariants (via util::check's forall harness) over the
+//! quantization library, the GEMM datapath, Orizuru, the simulator, and
+//! the coordinator's slot/batching state machines.
+
+use kllm::coordinator::{AdmitPolicy, Batcher, KvManager, Request};
+use kllm::gemm::{self, CartesianLut};
+use kllm::orizuru::Orizuru;
+use kllm::quant::{self, Codebook, OutlierCfg, QuantToken, QuantWeights};
+use kllm::runtime::artifacts::ModelCfg;
+use kllm::runtime::HostTensor;
+use kllm::sim::{gemm_cost, HwConfig};
+use kllm::tensor::Matrix;
+use kllm::util::check::{assert_allclose, Check};
+use kllm::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// quantization invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_codebook_assignment_is_nearest() {
+    Check::new(48).forall("nearest-centroid", |rng, _| {
+        let bits = 2 + rng.below(3) as u32;
+        let cb = Codebook::new(rng.normal_vec(1 << bits, 1.0));
+        let x = rng.normal_f32() * 3.0;
+        let got = cb.value(cb.assign(x));
+        let best = cb
+            .centroids
+            .iter()
+            .map(|&c| (x - c).abs())
+            .fold(f32::INFINITY, f32::min);
+        assert!(((x - got).abs() - best).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_weight_quant_error_bounded_by_scale() {
+    Check::new(24).forall("wq-bounded", |rng, _| {
+        let k = 8 + rng.below(48);
+        let n = 4 + rng.below(24);
+        let w = Matrix::random_normal(k, n, 0.5 + rng.f32(), rng);
+        let q = quant::quantize_weights(&w, 4);
+        let deq = q.dequantize();
+        // per-element error can never exceed the channel scale (codebook
+        // spans [-1, 1] after normalization; cell radius < 1)
+        for c in 0..n {
+            let s = q.col_scales[c];
+            for r in 0..k {
+                assert!(
+                    (deq.at(r, c) - w.at(r, c)).abs() <= s + 1e-5,
+                    "err beyond scale at ({r},{c})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_token_roundtrip_outliers_exact() {
+    Check::new(32).forall("token-outliers-exact", |rng, _| {
+        let d = 32 + rng.below(200);
+        let x = rng.heavy_tailed_vec(d, 0.05, 10.0);
+        let cb = Codebook::new(rng.normal_vec(16, 0.4));
+        let cfg = OutlierCfg { total_frac: 0.02 + rng.f64() * 0.06 };
+        let q = quant::quantize_token(&x, &cb, cfg);
+        let deq = q.dequantize(&cb);
+        for &(c, v, _) in &q.outliers {
+            assert_eq!(deq[c as usize], v, "outlier channel {c} not FP-preserved");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// GEMM datapath invariants
+// ---------------------------------------------------------------------------
+
+fn random_gemm_case(rng: &mut Rng) -> (QuantToken, QuantWeights, CartesianLut, Vec<f32>, Matrix) {
+    let k = 16 + rng.below(120);
+    let n = 4 + rng.below(28);
+    let w = Matrix::random_normal(k, n, 1.0, rng);
+    let qw = quant::quantize_weights(&w, 4);
+    let calib: Vec<Vec<f32>> = (0..4).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
+    let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+    let cfg = OutlierCfg { total_frac: 0.04 };
+    let cb = quant::learn_act_codebook(&refs, None, 4, cfg);
+    let x = rng.heavy_tailed_vec(k, 0.02, 8.0);
+    let tok = quant::quantize_token(&x, &cb, cfg);
+    let lut = CartesianLut::build(&cb, &qw.codebook);
+    (tok, qw, lut, x, w)
+}
+
+#[test]
+fn prop_direct_equals_histogram() {
+    Check::new(24).forall("direct-vs-histogram", |rng, _| {
+        let (tok, qw, lut, _, _) = random_gemm_case(rng);
+        let d = gemm::execute_direct(&tok, &qw, &lut);
+        let h = gemm::execute_histogram(&tok, &qw, &lut);
+        assert_allclose(&d, &h, 1e-4, 1e-4, "direct vs histogram");
+    });
+}
+
+#[test]
+fn prop_dual_branch_equals_critical_path() {
+    Check::new(24).forall("lookahead-equivalence", |rng, _| {
+        let (tok, qw, lut, _, _) = random_gemm_case(rng);
+        let a = gemm::execute_dual_branch(&tok, &qw, &lut);
+        let b = gemm::execute_critical_path(&tok, &qw, &lut);
+        assert_allclose(&a, &b, 1e-4, 1e-4, "dual vs critical");
+    });
+}
+
+#[test]
+fn prop_compensation_never_hurts() {
+    Check::new(16).forall("compensation-helps", |rng, _| {
+        let (tok, qw, lut, x, w) = random_gemm_case(rng);
+        if tok.outliers.iter().all(|&(_, _, r)| r.abs() < 1e-3) {
+            return; // no meaningful outliers this draw
+        }
+        let exact = Matrix::from_vec(1, x.len(), x.clone()).matmul(&w);
+        let la = gemm::execute_direct(&tok, &qw, &lut);
+        let dual = gemm::execute_dual_branch(&tok, &qw, &lut);
+        let err = |v: &[f32]| -> f64 {
+            v.iter()
+                .zip(exact.row(0))
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        assert!(err(&dual) <= err(&la) * 1.25 + 1e-6);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Orizuru invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_orizuru_matches_sort_oracle() {
+    Check::new(32).forall("orizuru-oracle", |rng, _| {
+        let n = 4 + rng.below(500);
+        let k = 1 + rng.below(8).min(n / 2);
+        let x = rng.normal_vec(n, 1.0);
+        let mut o = Orizuru::new(&x);
+        let (maxs, mins) = o.top_k(k);
+        let mut sorted = x.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, &(_, v)) in maxs.iter().enumerate() {
+            assert_eq!(v, sorted[n - 1 - i]);
+        }
+        for (i, &(_, v)) in mins.iter().enumerate() {
+            assert_eq!(v, sorted[i]);
+        }
+    });
+}
+
+#[test]
+fn prop_orizuru_comparison_model_holds() {
+    Check::new(16).forall("orizuru-cost", |rng, _| {
+        let n = 64 + rng.below(4000);
+        let k = 1 + rng.below(16);
+        let x = rng.normal_vec(n, 1.0);
+        let mut o = Orizuru::new(&x);
+        o.top_k(k);
+        let model = Orizuru::paper_cost_model(n, k);
+        let actual = o.comparisons() as f64;
+        assert!(actual <= model * 1.05 + 8.0, "n={n} k={k}: {actual} vs {model}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// simulator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sim_monotone_in_work() {
+    let hw = HwConfig::default();
+    Check::new(24).forall("sim-monotone", |rng, _| {
+        let k = 256 * (1 + rng.below(16));
+        let n = 256 * (1 + rng.below(16));
+        let a = gemm_cost(&hw, 1, k, n, 4, 0.01);
+        let b = gemm_cost(&hw, 1, k * 2, n, 4, 0.01);
+        let c = gemm_cost(&hw, 1, k, n * 2, 4, 0.01);
+        assert!(b.total_lookahead() >= a.total_lookahead());
+        assert!(c.total_lookahead() >= a.total_lookahead());
+        // critical path is never faster than look-ahead
+        assert!(a.total_critical_path() >= a.total_lookahead());
+    });
+}
+
+#[test]
+fn prop_sim_outlier_fraction_monotone() {
+    let hw = HwConfig::default();
+    Check::new(16).forall("sim-outlier-monotone", |rng, _| {
+        let k = 1024 * (1 + rng.below(4));
+        let f1 = 0.005 + rng.f64() * 0.02;
+        let f2 = f1 * (2.0 + rng.f64());
+        let a = gemm_cost(&hw, 1, k, 4096, 4, f1);
+        let b = gemm_cost(&hw, 1, k, 4096, 4, f2);
+        assert!(b.outlier.total() >= a.outlier.total());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator state-machine invariants (no PJRT needed)
+// ---------------------------------------------------------------------------
+
+fn test_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, seq_len: 16,
+        batch: 2, decode_batch: 3, head_dim: 8, d_ff: 64, n_linears: 8,
+    }
+}
+
+#[test]
+fn prop_kv_slots_never_leak() {
+    Check::new(24).forall("kv-no-leak", |rng, _| {
+        let cfg = test_cfg();
+        let mut kv = KvManager::new(cfg);
+        let shape = [cfg.n_layers, 1, cfg.n_heads, cfg.seq_len, cfg.head_dim];
+        let nelem: usize = shape.iter().product();
+        let mut active = 0usize;
+        for step in 0..200 {
+            if rng.f64() < 0.5 {
+                if let Some(slot) = kv.free_slot() {
+                    let kc = HostTensor::f32(vec![1.0; nelem], &shape);
+                    let vc = HostTensor::f32(vec![2.0; nelem], &shape);
+                    let plen = 1 + rng.below(cfg.seq_len - 2);
+                    kv.install_prefill(slot, step as u64, plen, &kc, &vc).unwrap();
+                    active += 1;
+                }
+            } else {
+                // release a random active slot
+                let occupied: Vec<usize> = (0..cfg.decode_batch)
+                    .filter(|&s| kv.position(s).is_some())
+                    .collect();
+                if !occupied.is_empty() {
+                    kv.release(*rng.choice(&occupied));
+                    active -= 1;
+                }
+            }
+            assert_eq!(kv.active_count(), active);
+            assert!(active <= cfg.decode_batch);
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_fifo_and_bounded() {
+    Check::new(24).forall("batcher-fifo", |rng, _| {
+        let mut b = Batcher::new(if rng.f64() < 0.5 {
+            AdmitPolicy::OnePerStep
+        } else {
+            AdmitPolicy::FillAll
+        });
+        let mut next_id = 0u64;
+        let mut last_admitted = None::<u64>;
+        for _ in 0..100 {
+            if rng.f64() < 0.6 {
+                b.enqueue(Request::new(next_id, vec![1], 4));
+                next_id += 1;
+            } else {
+                let free = rng.below(5);
+                let admitted = b.admit(free);
+                assert!(admitted.len() <= free);
+                for r in admitted {
+                    if let Some(prev) = last_admitted {
+                        assert!(r.id > prev, "FIFO violated: {} after {}", r.id, prev);
+                    }
+                    last_admitted = Some(r.id);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_woq_lut_gemv_matches_dot() {
+    Check::new(24).forall("woq-correct", |rng, _| {
+        let k = 4 + rng.below(100);
+        let n = 1 + rng.below(12);
+        let bits = 3 + rng.below(2) as u32;
+        let mu = [2usize, 4, 8][rng.below(3)];
+        let x = rng.normal_vec(k, 1.0);
+        let w_q: Vec<i8> = (0..k * n)
+            .map(|_| (rng.below(1 << bits) as i32 - (1 << (bits - 1))) as i8)
+            .collect();
+        let got = gemm::woq::woq_lut_gemv(&x, &w_q, n, bits, mu);
+        let mut want = vec![0.0f32; n];
+        for j in 0..n {
+            want[j] = (0..k).map(|i| x[i] * w_q[i * n + j] as f32).sum();
+        }
+        assert_allclose(&got, &want, 1e-4, 1e-3, "woq vs dot");
+    });
+}

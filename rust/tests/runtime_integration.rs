@@ -1,0 +1,260 @@
+//! Integration: rust PJRT runtime executing the AOT artifacts (preset
+//! `test`). Requires `make artifacts` to have run; tests panic with a clear
+//! message otherwise (the Makefile wires the dependency).
+
+use kllm::runtime::{artifacts_dir, HostTensor, ParamSet, Runtime};
+use kllm::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    let dir = artifacts_dir("test");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts/test missing — run `make artifacts` first"
+    );
+    Runtime::new(&dir).expect("pjrt runtime")
+}
+
+fn tokens(rng: &mut Rng, b: usize, s: usize, vocab: usize) -> HostTensor {
+    HostTensor::i32(
+        (0..b * s).map(|_| rng.below(vocab) as i32).collect(),
+        &[b, s],
+    )
+}
+
+#[test]
+fn fwd_produces_finite_logits() {
+    let mut rt = runtime();
+    let cfg = rt.manifest.model;
+    let mut rng = Rng::new(1);
+    let params = ParamSet::init(&rt.manifest, &mut rng);
+    let mut inputs = params.tensors.clone();
+    inputs.push(tokens(&mut rng, cfg.batch, cfg.seq_len, cfg.vocab));
+    let out = rt.run("fwd", &inputs).expect("fwd run");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), &[cfg.batch, cfg.seq_len, cfg.vocab]);
+    assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn loss_eval_matches_uniform_at_init() {
+    let mut rt = runtime();
+    let cfg = rt.manifest.model;
+    let mut rng = Rng::new(2);
+    let params = ParamSet::init(&rt.manifest, &mut rng);
+    let toks = tokens(&mut rng, cfg.batch, cfg.seq_len, cfg.vocab);
+    let mut inputs = params.tensors.clone();
+    inputs.push(toks.clone());
+    inputs.push(toks);
+    let out = rt.run("loss_eval", &inputs).expect("loss_eval");
+    let loss = out[0].as_f32().unwrap()[0];
+    let uniform = (cfg.vocab as f32).ln();
+    assert!(
+        loss > 0.5 * uniform && loss < 2.0 * uniform,
+        "loss {loss} vs ln(V) {uniform}"
+    );
+}
+
+#[test]
+fn train_step_decreases_loss() {
+    let mut rt = runtime();
+    let cfg = rt.manifest.model;
+    let mut rng = Rng::new(3);
+    let mut params = ParamSet::init(&rt.manifest, &mut rng);
+    let mut m = ParamSet::zeros_like(&rt.manifest);
+    let mut v = ParamSet::zeros_like(&rt.manifest);
+    let toks = tokens(&mut rng, cfg.batch, cfg.seq_len, cfg.vocab);
+    // next-token targets: shifted copy, last position masked
+    let t = toks.as_i32().unwrap();
+    let mut tg = vec![0i32; t.len()];
+    for b in 0..cfg.batch {
+        for s in 0..cfg.seq_len - 1 {
+            tg[b * cfg.seq_len + s] = t[b * cfg.seq_len + s + 1];
+        }
+        tg[b * cfg.seq_len + cfg.seq_len - 1] = -1;
+    }
+    let targets = HostTensor::i32(tg, &[cfg.batch, cfg.seq_len]);
+
+    let n = params.tensors.len();
+    let mut losses = Vec::new();
+    for step in 0..10 {
+        let mut inputs = params.tensors.clone();
+        inputs.extend(m.tensors.clone());
+        inputs.extend(v.tensors.clone());
+        inputs.push(HostTensor::scalar_f32((step + 1) as f32));
+        inputs.push(HostTensor::scalar_f32(5e-3));
+        inputs.push(toks.clone());
+        inputs.push(targets.clone());
+        let out = rt.run("train_step", &inputs).expect("train_step");
+        assert_eq!(out.len(), 3 * n + 1);
+        let mut it = out.into_iter();
+        params.tensors = (&mut it).take(n).collect();
+        m.tensors = (&mut it).take(n).collect();
+        v.tensors = (&mut it).take(n).collect();
+        losses.push(it.next().unwrap().as_f32().unwrap()[0]);
+    }
+    assert!(
+        losses[9] < losses[0] - 0.2,
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn quantize_act_kernel_matches_rust_clustering_unit() {
+    // Cross-layer check: the L1 Pallas Clustering-Unit kernel and the Rust
+    // Codebook (the hardware's binary-search tree) agree index-for-index.
+    let mut rt = runtime();
+    let mut rng = Rng::new(4);
+    let cb = kllm::quant::Codebook::new(rng.normal_vec(16, 1.0));
+    let x: Vec<f32> = rng.normal_vec(128 * 256, 1.5);
+    let out = rt
+        .run(
+            "quantize_act",
+            &[
+                HostTensor::f32(x.clone(), &[128, 256]),
+                HostTensor::f32(cb.boundaries.clone(), &[15]),
+            ],
+        )
+        .expect("quantize_act");
+    let idx = out[0].as_i32().unwrap();
+    for (i, (&xi, &got)) in x.iter().zip(idx).enumerate() {
+        assert_eq!(got as u8, cb.assign(xi), "elem {i} x={xi}");
+    }
+}
+
+#[test]
+fn waq_gemm_kernel_matches_rust_datapath() {
+    // The L1 fused kernel vs the Rust bit-exact LUT datapath.
+    let mut rt = runtime();
+    let spec = rt.manifest.artifact("waq_gemm").unwrap().clone();
+    let (mm, kk, nn) = (
+        spec.meta.get("M").unwrap().as_usize().unwrap(),
+        spec.meta.get("K").unwrap().as_usize().unwrap(),
+        spec.meta.get("N").unwrap().as_usize().unwrap(),
+    );
+    let mut rng = Rng::new(5);
+    let cb_a = kllm::quant::Codebook::new(rng.normal_vec(16, 1.0));
+    let cb_w = kllm::quant::Codebook::new(rng.normal_vec(16, 1.0));
+    let a_idx: Vec<i32> = (0..mm * kk).map(|_| rng.below(16) as i32).collect();
+    let w_idx: Vec<i32> = (0..kk * nn).map(|_| rng.below(16) as i32).collect();
+    let a_scale: Vec<f32> = (0..mm).map(|_| 0.5 + rng.f32()).collect();
+    let w_scale: Vec<f32> = (0..nn).map(|_| 0.5 + rng.f32()).collect();
+
+    let out = rt
+        .run(
+            "waq_gemm",
+            &[
+                HostTensor::i32(a_idx.clone(), &[mm, kk]),
+                HostTensor::i32(w_idx.clone(), &[kk, nn]),
+                HostTensor::f32(cb_a.centroids.clone(), &[16]),
+                HostTensor::f32(cb_w.centroids.clone(), &[16]),
+                HostTensor::f32(a_scale.clone(), &[mm]),
+                HostTensor::f32(w_scale.clone(), &[nn]),
+            ],
+        )
+        .expect("waq_gemm");
+    let got = out[0].as_f32().unwrap();
+
+    // rust datapath, token by token
+    let lut = kllm::gemm::CartesianLut::build(&cb_a, &cb_w);
+    let qw = kllm::quant::QuantWeights {
+        n_rows: kk,
+        n_cols: nn,
+        idx: w_idx.iter().map(|&v| v as u8).collect(),
+        codebook: cb_w.clone(),
+        col_scales: w_scale.clone(),
+    };
+    for mrow in 0..mm {
+        let tok = kllm::quant::QuantToken {
+            idx: a_idx[mrow * kk..(mrow + 1) * kk]
+                .iter()
+                .map(|&v| v as u8)
+                .collect(),
+            scale: a_scale[mrow],
+            outliers: vec![],
+        };
+        let want = kllm::gemm::execute_direct(&tok, &qw, &lut);
+        kllm::util::check::assert_allclose(
+            &got[mrow * nn..(mrow + 1) * nn],
+            &want,
+            1e-4,
+            1e-4,
+            &format!("row {mrow}"),
+        );
+    }
+}
+
+#[test]
+fn decode_step_is_consistent_with_prefill() {
+    let mut rt = runtime();
+    let cfg = rt.manifest.model;
+    let mut rng = Rng::new(6);
+    let params = ParamSet::init(&rt.manifest, &mut rng);
+
+    // prefill a short prompt
+    let plen = 5usize;
+    let mut prompt = vec![0i32; cfg.seq_len];
+    for p in prompt.iter_mut().take(plen) {
+        *p = rng.below(cfg.vocab) as i32;
+    }
+    let mut inputs = params.tensors.clone();
+    inputs.push(HostTensor::i32(prompt.clone(), &[1, cfg.seq_len]));
+    inputs.push(HostTensor::scalar_i32(plen as i32));
+    let out = rt.run("prefill", &inputs).expect("prefill");
+    let (logits_last, kc, vc) = (&out[0], &out[1], &out[2]);
+    assert_eq!(logits_last.shape(), &[cfg.vocab]);
+
+    // decode the next token on slot 0
+    let kvshape = [cfg.n_layers, cfg.decode_batch, cfg.n_heads, cfg.seq_len, cfg.head_dim];
+    let per = cfg.n_heads * cfg.seq_len * cfg.head_dim;
+    let mut kcb = HostTensor::zeros(&kvshape);
+    let mut vcb = HostTensor::zeros(&kvshape);
+    if let (HostTensor::F32 { data: kd, .. }, HostTensor::F32 { data: dst, .. }) =
+        (kc, &mut kcb)
+    {
+        for l in 0..cfg.n_layers {
+            let src = &kd[l * per..(l + 1) * per];
+            dst[l * cfg.decode_batch * per..l * cfg.decode_batch * per + per]
+                .copy_from_slice(src);
+        }
+    }
+    if let (HostTensor::F32 { data: vd, .. }, HostTensor::F32 { data: dst, .. }) =
+        (vc, &mut vcb)
+    {
+        for l in 0..cfg.n_layers {
+            let src = &vd[l * per..(l + 1) * per];
+            dst[l * cfg.decode_batch * per..l * cfg.decode_batch * per + per]
+                .copy_from_slice(src);
+        }
+    }
+    let next = argmax(logits_last.as_f32().unwrap()) as i32;
+    let mut dinputs = params.tensors.clone();
+    dinputs.push(kcb);
+    dinputs.push(vcb);
+    dinputs.push(HostTensor::i32(vec![next; cfg.decode_batch], &[cfg.decode_batch]));
+    dinputs.push(HostTensor::i32(vec![plen as i32; cfg.decode_batch], &[cfg.decode_batch]));
+    let dout = rt.run("decode_step", &dinputs).expect("decode_step");
+    assert_eq!(dout[0].shape(), &[cfg.decode_batch, cfg.vocab]);
+
+    // cross-check against full fwd over prompt + next token
+    let mut full = prompt.clone();
+    full[plen] = next;
+    let mut finputs = params.tensors.clone();
+    let mut batch_tokens = Vec::new();
+    for _ in 0..cfg.batch {
+        batch_tokens.extend_from_slice(&full);
+    }
+    finputs.push(HostTensor::i32(batch_tokens, &[cfg.batch, cfg.seq_len]));
+    let fout = rt.run("fwd", &finputs).expect("fwd");
+    let flog = fout[0].as_f32().unwrap();
+    let want = &flog[plen * cfg.vocab..(plen + 1) * cfg.vocab];
+    let got = &dout[0].as_f32().unwrap()[..cfg.vocab];
+    kllm::util::check::assert_allclose(got, want, 2e-3, 2e-3, "decode vs fwd");
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
