@@ -69,6 +69,16 @@ fn main() {
     println!("look-ahead only        rel err {:.4}", err(&lookahead));
     println!("with error compensation rel err {:.4}  <- outlier branch pays off", err(&dual));
 
+    // --- packed fast backend (nibble indices + fused pair-LUT) -----------
+    let pw = qw.pack();
+    let packed = gemm::execute_packed(&tok, &pw, &lut);
+    assert_eq!(packed, lookahead, "packed backend is bit-exact with direct");
+    println!(
+        "packed backend: bit-exact with direct at {} KB of weight indices (vs {} KB unpacked)",
+        pw.index_bytes() / 1024,
+        qw.idx.len() / 1024
+    );
+
     // --- modeled accelerator cost (Table II config) -----------------------
     let hw = HwConfig::default();
     let c = sim::gemm_cost(&hw, 1, k, n, 4, cfg.total_frac);

@@ -33,9 +33,13 @@ fn main() {
         .map(|&q| (q as i32 - 8) as i8)
         .collect();
 
-    let b = Bencher::default().throughput((k * n) as u64);
+    let pw = qw.pack();
+    let b = Bencher::default().throughput((k * n) as u64).json("BENCH_waq_gemm.json");
     b.run("waq_lut_gemm (direct)", || {
         black_box(gemm::execute_direct(&tok, &qw, &lut));
+    });
+    b.run("waq_lut_gemm (packed fused pair-LUT)", || {
+        black_box(gemm::execute_packed(&tok, &pw, &lut));
     });
     b.run("waq_lut_gemm (histogram/hw)", || {
         black_box(gemm::execute_histogram(&tok, &qw, &lut));

@@ -6,10 +6,14 @@ use kllm::eval::methods::Method;
 use kllm::eval::ppl::{eval_method, eval_nll, ppl, train_or_load};
 use kllm::eval::{calibrate, Corpus};
 use kllm::quant::OutlierCfg;
-use kllm::runtime::{artifacts_dir, Runtime};
+use kllm::runtime::{artifacts_dir, pjrt_available, Runtime};
 use kllm::util::bench::fast_mode;
 
 fn main() -> anyhow::Result<()> {
+    if !pjrt_available() {
+        println!("kllm built without the `pjrt` feature — skipping table3 bench");
+        return Ok(());
+    }
     let dir = artifacts_dir("test");
     if !dir.join("manifest.json").exists() {
         println!("artifacts/test missing — run `make artifacts`; skipping");

@@ -1,13 +1,20 @@
 //! L1/L3 hot-path bench: the WAQ GEMM along every execution path —
-//! Rust software datapath (direct / histogram / dual-branch), the blocked
-//! f32 SGEMM baseline, and the compiled Pallas artifact through PJRT.
+//! Rust software datapath (direct / histogram / dual-branch / packed
+//! fused-pair-LUT), the tiled+threaded continuous-batch kernel, the
+//! blocked f32 SGEMM baseline, and the compiled Pallas artifact through
+//! PJRT (when built with `--features pjrt` and artifacts exist).
+//!
+//! Results append to BENCH_waq_gemm.json at the repo root (JSON lines) so
+//! the perf trajectory is tracked across PRs.
 
-use kllm::gemm::{self, CartesianLut};
-use kllm::quant::{self, OutlierCfg, QuantWeights};
-use kllm::runtime::{artifacts_dir, HostTensor, Runtime};
+use kllm::gemm::{self, CartesianLut, TileCfg, WaqBackend, WaqGemm};
+use kllm::quant::{self, OutlierCfg, QuantToken, QuantWeights};
+use kllm::runtime::{artifacts_dir, pjrt_available, HostTensor, Runtime};
 use kllm::tensor::Matrix;
 use kllm::util::bench::{black_box, fast_mode, Bencher};
 use kllm::util::rng::Rng;
+
+const JSON: &str = "BENCH_waq_gemm.json";
 
 fn main() -> anyhow::Result<()> {
     let (k, n) = if fast_mode() { (256, 256) } else { (1024, 1024) };
@@ -20,10 +27,11 @@ fn main() -> anyhow::Result<()> {
     let x = rng.normal_vec(k, 1.0);
     let tok = quant::quantize_token(&x, &cb_a, OutlierCfg::default());
     let lut = CartesianLut::build(&cb_a, &qw.codebook);
+    let pw = qw.pack();
 
     println!("== WAQ GEMM hot path (K={k}, N={n}) ==");
-    let b = Bencher::default().throughput((k * n) as u64);
-    b.run("rust direct (software datapath)", || {
+    let b = Bencher::default().throughput((k * n) as u64).json(JSON);
+    let direct = b.run("rust direct (software datapath)", || {
         black_box(gemm::execute_direct(&tok, &qw, &lut));
     });
     b.run("rust histogram (index-counter semantics)", || {
@@ -32,10 +40,53 @@ fn main() -> anyhow::Result<()> {
     b.run("rust dual-branch", || {
         black_box(gemm::execute_dual_branch(&tok, &qw, &lut));
     });
+    let packed = b.run("rust packed (fused pair-LUT, nibble idx)", || {
+        black_box(gemm::execute_packed(&tok, &pw, &lut));
+    });
+    println!(
+        "-- packed vs direct single-token speedup: {:.2}x (target >= 2x)",
+        direct.mean_ns / packed.mean_ns
+    );
     let xm = Matrix::from_vec(1, k, x.clone());
     b.run("blocked f32 sgemm (tensor::matmul)", || {
         black_box(xm.matmul(&w));
     });
+
+    // continuous-batch decode: per-token direct vs tiled+threaded packed
+    for batch in [1usize, 4, 8, 16] {
+        let toks: Vec<QuantToken> = (0..batch)
+            .map(|_| {
+                quant::quantize_token(&rng.normal_vec(k, 1.0), &cb_a, OutlierCfg::default())
+            })
+            .collect();
+        let bb = Bencher::default()
+            .throughput((batch * k * n) as u64)
+            .json(JSON);
+        let per_tok = bb.run(&format!("batch{batch:<2} per-token execute_batch"), || {
+            black_box(gemm::waq::execute_batch(&toks, &qw, &lut));
+        });
+        let tile = TileCfg::default();
+        let tiled = bb.run(&format!("batch{batch:<2} execute_batch_tiled"), || {
+            black_box(gemm::execute_batch_tiled(&toks, &pw, &lut, &tile));
+        });
+        let st = TileCfg::single_thread();
+        bb.run(&format!("batch{batch:<2} tiled single-thread"), || {
+            black_box(gemm::execute_batch_tiled(&toks, &pw, &lut, &st));
+        });
+        println!(
+            "-- batch {batch}: tiled vs per-token speedup {:.2}x",
+            per_tok.mean_ns / tiled.mean_ns
+        );
+    }
+
+    // the dispatch layer all serving paths go through
+    for backend in WaqBackend::ALL {
+        let g = WaqGemm::new(qw.clone(), lut.clone(), backend);
+        let bb = Bencher::quick().throughput((k * n) as u64).json(JSON);
+        bb.run(&format!("WaqGemm backend={}", backend.name()), || {
+            black_box(g.execute(&tok));
+        });
+    }
 
     // quantization-side hot paths
     b.run("clustering unit assign (token)", || {
@@ -43,14 +94,14 @@ fn main() -> anyhow::Result<()> {
         cb_a.assign_slice(black_box(&x), &mut out);
         black_box(out);
     });
-    let bq = Bencher::default();
+    let bq = Bencher::default().json(JSON);
     bq.run("quantize_token (incl. outlier detect)", || {
         black_box(quant::quantize_token(&x, &cb_a, OutlierCfg::default()));
     });
 
     // PJRT artifact path (the fused Pallas kernel, interpret-lowered)
     let dir = artifacts_dir("test");
-    if dir.join("manifest.json").exists() {
+    if pjrt_available() && dir.join("manifest.json").exists() {
         let mut rt = Runtime::new(&dir)?;
         let spec = rt.manifest.artifact("waq_gemm").unwrap().clone();
         let (mm, kk, nn) = (
@@ -69,7 +120,7 @@ fn main() -> anyhow::Result<()> {
             HostTensor::f32(vec![1.0; nn], &[nn]),
         ];
         let exe = rt.load("waq_gemm")?;
-        let bp = Bencher::default().throughput((mm * kk * nn) as u64);
+        let bp = Bencher::default().throughput((mm * kk * nn) as u64).json(JSON);
         bp.run(&format!("pjrt waq_gemm artifact ({mm}x{kk}x{nn})"), || {
             black_box(exe.run(&inputs).unwrap());
         });
@@ -89,6 +140,12 @@ fn main() -> anyhow::Result<()> {
         bp.run("rust direct (same shape, per row)", || {
             black_box(gemm::execute_direct(&tok_small, &qw_small, &lut_small));
         });
+        let pw_small = qw_small.pack();
+        bp.run("rust packed (same shape, per row)", || {
+            black_box(gemm::execute_packed(&tok_small, &pw_small, &lut_small));
+        });
+    } else if !pjrt_available() {
+        println!("pjrt feature disabled — skipping artifact path");
     }
     Ok(())
 }

@@ -1,0 +1,118 @@
+//! Software (host CPU) WAQ LUT-GEMM datapath model — the host-side
+//! analogue of the accelerator comparators in this module: bytes streamed
+//! and scalar table ops per decode step for each [`WaqBackend`]. The
+//! serving engine advances this clock alongside the OASIS simulator so
+//! every response also reports what the *software* datapath would cost
+//! under the configured backend, and so backend choices show up in the
+//! e2e bench as modeled (not just measured) deltas.
+//!
+//! The structural facts captured (mirroring `gemm::packed`'s design):
+//!   * `Direct`/`Histogram` stream one byte per weight index per token;
+//!     `Packed` streams a nibble per index and, being cache-tiled, streams
+//!     the weight matrix once per *batch* rather than once per token;
+//!   * `Direct` does ~2 table ops per MAC, `Packed` ~1 per two MACs plus
+//!     the 2^(2 nW)-add fused-row builds, `Histogram` pays the
+//!     2^(nA+nW)-entry MAC-tree sweep per output channel.
+
+use crate::gemm::WaqBackend;
+use crate::models::LlmSpec;
+
+/// Fused-table / Cartesian-LUT entry count at the paper's 4+4-bit config.
+const LUT_ENTRIES: f64 = 256.0;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CpuWaqModel {
+    pub backend: WaqBackend,
+    /// sustained single-stream load bandwidth of the host datapath
+    pub stream_bytes_per_sec: f64,
+    /// scalar gather+add throughput
+    pub ops_per_sec: f64,
+}
+
+impl CpuWaqModel {
+    /// A conservative single-socket host profile.
+    pub fn host(backend: WaqBackend) -> CpuWaqModel {
+        CpuWaqModel { backend, stream_bytes_per_sec: 12e9, ops_per_sec: 3e9 }
+    }
+
+    /// Weight-index bytes streamed for one (1 x K) @ (K x N) GEMM repeated
+    /// over `batch` tokens.
+    pub fn gemm_index_bytes(&self, k: usize, n: usize, batch: usize) -> f64 {
+        let kn = (k * n) as f64;
+        match self.backend {
+            // byte-per-index, re-streamed for every token
+            WaqBackend::Direct | WaqBackend::Histogram => kn * batch as f64,
+            // nibble-packed and tile-reused across the whole batch
+            WaqBackend::Packed => kn / 2.0,
+        }
+    }
+
+    /// Scalar table ops (gathers + adds) for the same work.
+    pub fn gemm_ops(&self, k: usize, n: usize, batch: usize) -> f64 {
+        let b = batch as f64;
+        let kn = (k * n) as f64;
+        match self.backend {
+            WaqBackend::Direct => 2.0 * kn * b,
+            WaqBackend::Histogram => (kn + LUT_ENTRIES * n as f64) * 2.0 * b,
+            // one lookup+add per packed byte + fused-row builds
+            WaqBackend::Packed => (kn / 2.0 + (k as f64 / 2.0) * LUT_ENTRIES) * b,
+        }
+    }
+
+    /// Roofline seconds for one GEMM over a batch: max of the streaming
+    /// and compute times.
+    pub fn gemm_seconds(&self, k: usize, n: usize, batch: usize) -> f64 {
+        let mem = self.gemm_index_bytes(k, n, batch) / self.stream_bytes_per_sec;
+        let comp = self.gemm_ops(k, n, batch) / self.ops_per_sec;
+        mem.max(comp)
+    }
+
+    /// Modeled host seconds for one batched decode step of `m` (all layer
+    /// linears + the LM head).
+    pub fn decode_step_seconds(&self, m: &LlmSpec, batch: usize) -> f64 {
+        let mut s = 0.0;
+        for (k, n) in m.layer_gemms() {
+            s += self.gemm_seconds(k, n, batch);
+        }
+        s *= m.n_layers as f64;
+        s + self.gemm_seconds(m.d_model, m.vocab, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    #[test]
+    fn packed_halves_and_reuses_index_traffic() {
+        let d = CpuWaqModel::host(WaqBackend::Direct);
+        let p = CpuWaqModel::host(WaqBackend::Packed);
+        assert_eq!(p.gemm_index_bytes(1024, 1024, 1) * 2.0, d.gemm_index_bytes(1024, 1024, 1));
+        // tiling: packed traffic is batch-independent, direct scales with it
+        assert_eq!(p.gemm_index_bytes(1024, 1024, 16), p.gemm_index_bytes(1024, 1024, 1));
+        assert_eq!(
+            d.gemm_index_bytes(1024, 1024, 16),
+            16.0 * d.gemm_index_bytes(1024, 1024, 1)
+        );
+    }
+
+    #[test]
+    fn packed_decode_step_is_fastest() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let direct = CpuWaqModel::host(WaqBackend::Direct).decode_step_seconds(m, 4);
+        let hist = CpuWaqModel::host(WaqBackend::Histogram).decode_step_seconds(m, 4);
+        let packed = CpuWaqModel::host(WaqBackend::Packed).decode_step_seconds(m, 4);
+        assert!(packed < direct, "packed {packed} !< direct {direct}");
+        assert!(packed < hist, "packed {packed} !< histogram {hist}");
+    }
+
+    #[test]
+    fn seconds_monotone_in_batch() {
+        let m = by_name("OPT-6.7B").unwrap();
+        for backend in WaqBackend::ALL {
+            let c = CpuWaqModel::host(backend);
+            assert!(c.decode_step_seconds(m, 8) >= c.decode_step_seconds(m, 1), "{backend:?}");
+        }
+    }
+}

@@ -1,9 +1,12 @@
 //! Baseline accelerator models the paper evaluates against: A100 FP16,
 //! QuaRot W4A4 GPU kernels, and the FIGLUT WOQ-LUT ASIC (plus the Fig 16
-//! LUT-design cost comparators).
+//! LUT-design cost comparators), and the host-CPU software-datapath model
+//! (`cpu`) parameterized by `gemm::WaqBackend`.
 
+pub mod cpu;
 pub mod figlut;
 pub mod gpu;
 
+pub use cpu::CpuWaqModel;
 pub use figlut::{fig16_costs, figlut, FiglutModel};
 pub use gpu::{a100_fp16, quarot_w4a4, GpuModel};

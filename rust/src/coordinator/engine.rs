@@ -16,8 +16,10 @@ use anyhow::{anyhow, Result};
 use super::batcher::{AdmitPolicy, Batcher};
 use super::kv::KvManager;
 use super::request::{EngineStats, FinishReason, Request, Response};
+use crate::baselines::CpuWaqModel;
+use crate::gemm::WaqBackend;
 use crate::models::LlmSpec;
-use crate::runtime::{HostTensor, ParamSet, Runtime};
+use crate::runtime::{DeviceBuffer, HostTensor, ParamSet, Runtime};
 use crate::sim::{self, HwConfig, OasisMode};
 use crate::util::rng::Rng;
 
@@ -26,11 +28,21 @@ pub struct EngineConfig {
     pub policy: AdmitPolicy,
     pub seed: u64,
     pub mode: OasisMode,
+    /// Which software WAQ GEMM backend the host-datapath *model* assumes
+    /// (`baselines::cpu::CpuWaqModel`, reported as `stats.host_waq_s`).
+    /// Decode compute itself always runs the PJRT artifact; this knob does
+    /// not change measured serving throughput.
+    pub waq_backend: WaqBackend,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { policy: AdmitPolicy::OnePerStep, seed: 0xE116, mode: OasisMode::a4() }
+        EngineConfig {
+            policy: AdmitPolicy::OnePerStep,
+            seed: 0xE116,
+            mode: OasisMode::a4(),
+            waq_backend: WaqBackend::default(),
+        }
     }
 }
 
@@ -50,13 +62,14 @@ pub struct SimTotals {
 pub struct Engine {
     rt: Runtime,
     params_host: Vec<HostTensor>,
-    weight_buffers: Vec<xla::PjRtBuffer>,
+    weight_buffers: Vec<DeviceBuffer>,
     kv: KvManager,
     batcher: Batcher,
     active: Vec<Option<ActiveReq>>,
     pub stats: EngineStats,
     pub sim: SimTotals,
     hw: HwConfig,
+    host_model: CpuWaqModel,
     spec: LlmSpec,
     mode: OasisMode,
     rng: Rng,
@@ -83,13 +96,16 @@ impl Engine {
             vocab: m.vocab,
             gated_mlp: false,
         };
+        let stats =
+            EngineStats { waq_backend: cfg.waq_backend.name(), ..Default::default() };
         Ok(Engine {
             kv: KvManager::new(m),
             batcher: Batcher::new(cfg.policy),
             active: (0..m.decode_batch).map(|_| None).collect(),
-            stats: EngineStats::default(),
+            stats,
             sim: SimTotals::default(),
             hw: HwConfig::default(),
+            host_model: CpuWaqModel::host(cfg.waq_backend),
             spec,
             mode: cfg.mode,
             rng: Rng::new(cfg.seed),
@@ -97,6 +113,12 @@ impl Engine {
             rt,
             weight_buffers,
         })
+    }
+
+    /// The software WAQ GEMM backend this engine models the host datapath
+    /// with.
+    pub fn waq_backend(&self) -> WaqBackend {
+        self.host_model.backend
     }
 
     pub fn model(&self) -> crate::runtime::artifacts::ModelCfg {
@@ -178,7 +200,7 @@ impl Engine {
         padded[..plen].copy_from_slice(&req.prompt[..plen]);
 
         let exe = self.rt.load("prefill")?;
-        let mut bufs: Vec<&xla::PjRtBuffer> = self.weight_buffers.iter().collect();
+        let mut bufs: Vec<&DeviceBuffer> = self.weight_buffers.iter().collect();
         let ptoks = self.rt.upload(&HostTensor::i32(padded, &[1, m.seq_len]))?;
         let plen_b = self.rt.upload(&HostTensor::scalar_i32(plen as i32))?;
         bufs.push(&ptoks);
@@ -216,7 +238,7 @@ impl Engine {
         mean_ctx /= active_n.max(1);
 
         let exe = self.rt.load("decode_step")?;
-        let mut bufs: Vec<&xla::PjRtBuffer> = self.weight_buffers.iter().collect();
+        let mut bufs: Vec<&DeviceBuffer> = self.weight_buffers.iter().collect();
         let kb = self.rt.upload(&self.kv.k_tensor())?;
         let vb = self.rt.upload(&self.kv.v_tensor())?;
         let tb = self.rt.upload(&HostTensor::i32(toks, &[b]))?;
@@ -237,6 +259,9 @@ impl Engine {
         let c = sim::decode_step_cost(&self.hw, &self.spec, self.mode, active_n.max(1), mean_ctx.max(1));
         self.sim.seconds += c.seconds;
         self.sim.energy_j += c.energy_j;
+        // ... and the modeled host software-datapath cost under the
+        // configured WAQ backend (packed/tiled vs direct vs histogram)
+        self.stats.host_waq_s += self.host_model.decode_step_seconds(&self.spec, active_n.max(1));
 
         let mut done = Vec::new();
         for slot in 0..b {

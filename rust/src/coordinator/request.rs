@@ -62,6 +62,12 @@ pub struct EngineStats {
     /// decode-step batch occupancy sum (for mean occupancy)
     pub occupancy_sum: u64,
     pub completed: u64,
+    /// software WAQ GEMM backend the engine was configured with
+    /// (`gemm::WaqBackend::name()`; empty before engine construction)
+    pub waq_backend: &'static str,
+    /// modeled host software-datapath seconds for all decode steps under
+    /// that backend (see `baselines::cpu::CpuWaqModel`)
+    pub host_waq_s: f64,
 }
 
 impl EngineStats {

@@ -39,10 +39,14 @@ impl CartesianLut {
         self.table.len()
     }
 
-    /// On-chip LUT bytes at FP16 storage (as in Table II: 2 KB holds the
-    /// 256-entry LUT plus both codebooks).
+    /// On-chip bytes at FP16 storage for the full lookup state the Table II
+    /// budget covers: the Cartesian-product table PLUS both centroid
+    /// codebooks (the Clustering Unit needs them resident too). At 4+4-bit
+    /// that is 256 * 2 + (16 + 16) * 2 = 576 B, well inside the 2 KB LUT
+    /// buffer provisioned per PE line.
     pub fn storage_bytes(&self) -> usize {
-        self.table.len() * 2
+        let codebooks = (1usize << self.n_a_bits) + (1usize << self.n_w_bits);
+        (self.table.len() + codebooks) * 2
     }
 }
 
@@ -110,6 +114,22 @@ mod tests {
             woq_reduction_flops(k, 4, 4, n) / waq_reduction_flops(4, 4, n),
             16
         );
+    }
+
+    #[test]
+    fn storage_counts_table_and_codebooks() {
+        let mut rng = Rng::new(3);
+        // the paper's 4+4-bit running configuration
+        let cb_a = Codebook::new(rng.normal_vec(16, 1.0));
+        let cb_w = Codebook::new(rng.normal_vec(16, 1.0));
+        let lut = CartesianLut::build(&cb_a, &cb_w);
+        // 256 fp16 products + 16 fp16 centroids per side
+        assert_eq!(lut.storage_bytes(), 256 * 2 + 32 * 2);
+        assert!(lut.storage_bytes() <= 2048, "must fit the 2 KB LUT buffer");
+        // asymmetric config counts each codebook at its own size
+        let cb_a3 = Codebook::new(rng.normal_vec(8, 1.0));
+        let lut34 = CartesianLut::build(&cb_a3, &cb_w);
+        assert_eq!(lut34.storage_bytes(), 128 * 2 + (8 + 16) * 2);
     }
 
     #[test]

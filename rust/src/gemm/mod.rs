@@ -1,13 +1,177 @@
 //! The paper's GEMM schemes in software: the Cartesian-product LUT, the
 //! WAQ LUT-GEMM main branch (bit-exact Index-Counter semantics), the
-//! outlier branch (look-ahead + error compensation), and the WOQ
-//! inner-product-LUT baseline family.
+//! outlier branch (look-ahead + error compensation), the WOQ
+//! inner-product-LUT baseline family, and the packed/tiled/threaded fast
+//! backend (`packed`: nibble-packed indices + fused pair-LUT — see its
+//! module docs for the byte layout and the `lutF[b] = lut[ia0][b >> 4] +
+//! lut[ia1][b & 15]` scheme).
+//!
+//! Execution-path selection goes through [`WaqBackend`] / [`WaqGemm`]:
+//! `Direct` and `Histogram` are the numerics twins of the OASIS datapath
+//! (kept for cross-checking and for the simulator's semantics), `Packed`
+//! is the serving default. All three are bit-exact for in-range indices.
 
 pub mod compensation;
 pub mod lut;
+pub mod packed;
 pub mod waq;
 pub mod woq;
 
 pub use compensation::{compensate, execute_critical_path, execute_dual_branch};
 pub use lut::CartesianLut;
+pub use packed::{execute_batch_tiled, execute_packed, TileCfg};
 pub use waq::{execute_direct, execute_histogram};
+
+use crate::quant::{PackedWeights, QuantToken, QuantWeights};
+
+/// Which software execution path runs the WAQ LUT-GEMM.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WaqBackend {
+    /// Per-element LUT gathers over byte-per-index storage.
+    Direct,
+    /// Literal Index-Counter semantics (histogram + MAC tree).
+    Histogram,
+    /// Nibble-packed fused pair-LUT kernel, tiled + threaded for batches.
+    #[default]
+    Packed,
+}
+
+impl WaqBackend {
+    pub const ALL: [WaqBackend; 3] =
+        [WaqBackend::Direct, WaqBackend::Histogram, WaqBackend::Packed];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WaqBackend::Direct => "direct",
+            WaqBackend::Histogram => "histogram",
+            WaqBackend::Packed => "packed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WaqBackend> {
+        match s {
+            "direct" => Some(WaqBackend::Direct),
+            "histogram" => Some(WaqBackend::Histogram),
+            "packed" => Some(WaqBackend::Packed),
+            _ => None,
+        }
+    }
+}
+
+/// Weight storage matching the backend that will stream it: the packed
+/// backend drops the byte-per-index form entirely (keeping both would
+/// cost 1.5x the index memory the packing exists to halve).
+enum WaqWeights {
+    Unpacked(QuantWeights),
+    Packed(PackedWeights),
+}
+
+/// A prepared WAQ GEMM: quantized weights (in backend-appropriate
+/// storage) + LUT + backend choice. This is the software dispatch point:
+/// the benches and the `kllm serve --backend` flag select through
+/// [`WaqBackend`], and `coordinator::engine` mirrors the same choice in
+/// its modeled host-datapath clock (`baselines::cpu::CpuWaqModel`).
+pub struct WaqGemm {
+    pub backend: WaqBackend,
+    pub lut: CartesianLut,
+    pub tile: TileCfg,
+    w: WaqWeights,
+}
+
+impl WaqGemm {
+    pub fn new(w: QuantWeights, lut: CartesianLut, backend: WaqBackend) -> WaqGemm {
+        let w = match backend {
+            WaqBackend::Packed => WaqWeights::Packed(w.pack()),
+            _ => WaqWeights::Unpacked(w),
+        };
+        WaqGemm { backend, lut, tile: TileCfg::default(), w }
+    }
+
+    pub fn with_tile(mut self, tile: TileCfg) -> WaqGemm {
+        self.tile = tile;
+        self
+    }
+
+    /// The packed weight form (present iff the backend is `Packed`).
+    pub fn packed_weights(&self) -> Option<&PackedWeights> {
+        match &self.w {
+            WaqWeights::Packed(p) => Some(p),
+            WaqWeights::Unpacked(_) => None,
+        }
+    }
+
+    /// One-token decode GEMM on the selected backend.
+    pub fn execute(&self, tok: &QuantToken) -> Vec<f32> {
+        match (&self.w, self.backend) {
+            (WaqWeights::Unpacked(w), WaqBackend::Direct) => {
+                waq::execute_direct(tok, w, &self.lut)
+            }
+            (WaqWeights::Unpacked(w), WaqBackend::Histogram) => {
+                waq::execute_histogram(tok, w, &self.lut)
+            }
+            (WaqWeights::Packed(p), _) => packed::execute_packed(tok, p, &self.lut),
+            (WaqWeights::Unpacked(_), WaqBackend::Packed) => {
+                unreachable!("packed backend always stores packed weights")
+            }
+        }
+    }
+
+    /// Batched decode GEMM: the packed backend runs the cache-tiled,
+    /// threaded kernel (weight tiles reused across the batch); the
+    /// reference backends fall back to per-token execution.
+    pub fn execute_batch(&self, toks: &[QuantToken]) -> Vec<Vec<f32>> {
+        match &self.w {
+            WaqWeights::Packed(p) => {
+                packed::execute_batch_tiled(toks, p, &self.lut, &self.tile)
+            }
+            WaqWeights::Unpacked(_) => toks.iter().map(|t| self.execute(t)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{self, OutlierCfg};
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn backend_parse_and_names() {
+        for b in WaqBackend::ALL {
+            assert_eq!(WaqBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(WaqBackend::parse("tpu"), None);
+        assert_eq!(WaqBackend::default(), WaqBackend::Packed);
+    }
+
+    #[test]
+    fn dispatch_agrees_across_backends() {
+        let mut rng = Rng::new(11);
+        let (k, n) = (80, 24);
+        let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
+        let qw = quant::quantize_weights(&wmat, 4);
+        let calib: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(k, 1.0)).collect();
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let cfg = OutlierCfg::default();
+        let cb = quant::learn_act_codebook(&refs, None, 4, cfg);
+        let lut = CartesianLut::build(&cb, &qw.codebook);
+        let toks: Vec<_> = (0..3)
+            .map(|_| quant::quantize_token(&rng.normal_vec(k, 1.0), &cb, cfg))
+            .collect();
+
+        let direct = WaqGemm::new(qw.clone(), lut.clone(), WaqBackend::Direct);
+        let packed = WaqGemm::new(qw.clone(), lut.clone(), WaqBackend::Packed);
+        let hist = WaqGemm::new(qw, lut, WaqBackend::Histogram);
+
+        let want = direct.execute_batch(&toks);
+        // packed is bit-exact with direct
+        assert_eq!(packed.execute_batch(&toks), want);
+        assert_eq!(packed.execute(&toks[0]), want[0]);
+        // histogram groups accumulation differently: close, not identical
+        let h = hist.execute_batch(&toks);
+        for (a, b) in h.iter().zip(&want) {
+            crate::util::check::assert_allclose(a, b, 1e-4, 1e-4, "hist vs direct");
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Packed, tiled, multi-threaded WAQ LUT-GEMM — the fast software backend.
+//!
+//! # Nibble layout
+//!
+//! Weights arrive as [`PackedWeights`]: the K x N index matrix packed two
+//! reduction rows per byte, `pairs[p * N + j] = idx[2p][j] << 4 |
+//! idx[2p+1][j]` (row `2p` in the high nibble). An odd final row is a
+//! nibble-packed tail. Index traffic is therefore half of the
+//! byte-per-index `QuantWeights` form the direct path streams.
+//!
+//! # Fused pair-LUT
+//!
+//! For one token, reduction rows `2p` and `2p+1` use activation indices
+//! `(ia0, ia1)`. Instead of two Cartesian-LUT gathers per output element,
+//! build one fused 256-entry row per pair once:
+//!
+//! ```text
+//! lutF[b] = lut[ia0][b >> 4] + lut[ia1][b & 15]
+//! ```
+//!
+//! and then stream the packed weight bytes: each byte `b` costs a single
+//! table lookup and a single accumulate for TWO MACs. The fused row costs
+//! 2^(2*nW) adds to build and is amortized over all N (or one column
+//! tile's worth of) outputs. Because `lutF[b]` is exactly the
+//! `lut[ia0][iw0] + lut[ia1][iw1]` sum the direct path computes before
+//! accumulating, every result here is bit-exact with
+//! [`super::waq::execute_direct`] (same FP additions in the same order).
+//!
+//! # Tiling + threads
+//!
+//! [`execute_batch_tiled`] blocks over N (column ranges, one per worker
+//! thread) and over K (pair blocks), iterating tokens inside the K block
+//! so a `k_pair_block x n_block`-byte weight tile is re-streamed from
+//! cache — not memory — for every token of a continuous-batch decode
+//! step. Workers own disjoint column ranges, so parallelism never changes
+//! the per-output accumulation order: results are bit-exact for every
+//! thread count and tile shape.
+
+use super::lut::CartesianLut;
+use crate::quant::{PackedWeights, QuantToken};
+
+/// Tile/parallelism configuration for [`execute_batch_tiled`].
+#[derive(Clone, Copy, Debug)]
+pub struct TileCfg {
+    /// Minimum column-range width per worker; also the amortization span
+    /// of each fused-row build. Wider = less build overhead, narrower =
+    /// more parallelism.
+    pub n_block: usize,
+    /// Reduction row-pairs per K tile; `k_pair_block * n_block` bytes of
+    /// packed weights should sit comfortably in L2.
+    pub k_pair_block: usize,
+    /// Worker threads over column ranges; 0 = use available parallelism.
+    pub threads: usize,
+}
+
+impl Default for TileCfg {
+    fn default() -> Self {
+        TileCfg { n_block: 512, k_pair_block: 128, threads: 0 }
+    }
+}
+
+impl TileCfg {
+    /// Single-threaded variant (bit-exact with every other setting; useful
+    /// for deterministic-latency comparisons).
+    pub fn single_thread() -> Self {
+        TileCfg { threads: 1, ..Self::default() }
+    }
+}
+
+/// Debug-only guard matching `execute_direct`'s fail-loudly index check: a
+/// packed byte whose nibble exceeds the weight codebook means corrupt
+/// index data (its fused-table slot is never written) and must not be
+/// silently read as a stale/zero entry.
+#[inline]
+fn debug_assert_nibbles(b: u8, mask: usize) {
+    debug_assert!(
+        (b >> 4) as usize <= mask && (b & 0x0F) as usize <= mask,
+        "packed weight byte {b:#04x} out of range for nibble mask {mask:#x}"
+    );
+}
+
+/// Build the fused pair row: `fused[b] = lut[ia0][b >> 4] + lut[ia1][b & 15]`
+/// for every byte value that can occur with in-range nibbles. Entries whose
+/// nibbles exceed the weight codebook are never produced by
+/// `PackedWeights` and are left untouched.
+#[inline]
+fn build_fused_row(fused: &mut [f32; 256], ia0: u8, ia1: u8, lut: &CartesianLut) {
+    let mask = (1usize << lut.n_w_bits) - 1;
+    let r0 = &lut.table[(ia0 as usize) << lut.n_w_bits..][..mask + 1];
+    let r1 = &lut.table[(ia1 as usize) << lut.n_w_bits..][..mask + 1];
+    for (hi, &v0) in r0.iter().enumerate() {
+        let dst = &mut fused[hi << 4..(hi << 4) + mask + 1];
+        for (d, &v1) in dst.iter_mut().zip(r1) {
+            *d = v0 + v1;
+        }
+    }
+}
+
+/// Accumulate the odd tail row (when K is odd) exactly like the direct
+/// path's scalar tail: one plain LUT-row gather per column.
+fn add_tail(acc: &mut [f32], j0: usize, tok: &QuantToken, w: &PackedWeights, lut: &CartesianLut) {
+    let Some(tail) = &w.tail else { return };
+    let mask = (1usize << lut.n_w_bits) - 1;
+    let base = (tok.idx[w.n_rows - 1] as usize) << lut.n_w_bits;
+    let row = &lut.table[base..base + mask + 1];
+    for (jj, a) in acc.iter_mut().enumerate() {
+        let iw = tail.get(j0 + jj) as usize;
+        debug_assert!(iw <= mask, "tail weight index {iw} out of range (mask {mask})");
+        *a += row[iw & mask];
+    }
+}
+
+/// Single-token packed GEMM: `out[n] = a_scale * w_scale[n] *
+/// sum_k LUT[cat(a_idx[k], w_idx[k, n])]`, bit-exact with
+/// `execute_direct`, at half the index traffic and one lookup per two
+/// MACs. Two pairs are processed per pass (two independent fused tables)
+/// to break the gather->add dependency chain, mirroring the direct path's
+/// two-row unroll.
+pub fn execute_packed(tok: &QuantToken, w: &PackedWeights, lut: &CartesianLut) -> Vec<f32> {
+    assert_eq!(tok.idx.len(), w.n_rows, "reduction length mismatch");
+    let n = w.n_cols;
+    let np = w.n_pairs();
+    let nibble_mask = (1usize << lut.n_w_bits) - 1;
+    let mut acc = vec![0.0f32; n];
+    let mut f0 = [0.0f32; 256];
+    let mut f1 = [0.0f32; 256];
+    let mut p = 0;
+    while p + 1 < np {
+        build_fused_row(&mut f0, tok.idx[2 * p], tok.idx[2 * p + 1], lut);
+        build_fused_row(&mut f1, tok.idx[2 * p + 2], tok.idx[2 * p + 3], lut);
+        let w0 = &w.pairs[p * n..(p + 1) * n];
+        let w1 = &w.pairs[(p + 1) * n..(p + 2) * n];
+        for ((a, &b0), &b1) in acc.iter_mut().zip(w0).zip(w1) {
+            debug_assert_nibbles(b0, nibble_mask);
+            debug_assert_nibbles(b1, nibble_mask);
+            *a += f0[b0 as usize];
+            *a += f1[b1 as usize];
+        }
+        p += 2;
+    }
+    if p < np {
+        build_fused_row(&mut f0, tok.idx[2 * p], tok.idx[2 * p + 1], lut);
+        let w0 = &w.pairs[p * n..(p + 1) * n];
+        for (a, &b) in acc.iter_mut().zip(w0) {
+            debug_assert_nibbles(b, nibble_mask);
+            *a += f0[b as usize];
+        }
+    }
+    add_tail(&mut acc, 0, tok, w, lut);
+    for (j, a) in acc.iter_mut().enumerate() {
+        *a *= tok.scale * w.col_scales[j];
+    }
+    acc
+}
+
+/// Accumulate (no scaling) columns `[j0, j1)` of every token into
+/// `outs[t][..j1-j0]`, iterating K-pair tiles outermost and tokens inside
+/// so each packed weight tile is reused across the whole batch while hot.
+fn accumulate_range(
+    toks: &[QuantToken],
+    w: &PackedWeights,
+    lut: &CartesianLut,
+    k_pair_block: usize,
+    j0: usize,
+    j1: usize,
+    outs: &mut [Vec<f32>],
+) {
+    let n = w.n_cols;
+    let np = w.n_pairs();
+    let width = j1 - j0;
+    let nibble_mask = (1usize << lut.n_w_bits) - 1;
+    let mut fused = [0.0f32; 256];
+    let mut pb = 0;
+    while pb < np {
+        let pe = (pb + k_pair_block).min(np);
+        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
+            for p in pb..pe {
+                build_fused_row(&mut fused, tok.idx[2 * p], tok.idx[2 * p + 1], lut);
+                let wrow = &w.pairs[p * n + j0..p * n + j1];
+                for (a, &b) in acc[..width].iter_mut().zip(wrow) {
+                    debug_assert_nibbles(b, nibble_mask);
+                    *a += fused[b as usize];
+                }
+            }
+        }
+        pb = pe;
+    }
+    if w.tail.is_some() {
+        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
+            add_tail(&mut acc[..width], j0, tok, w, lut);
+        }
+    }
+}
+
+/// Split `[0, n)` into per-worker column ranges: at most `threads` ranges,
+/// each at least `n_block` wide (so fused-row builds stay amortized).
+fn col_ranges(n: usize, cfg: &TileCfg) -> Vec<(usize, usize)> {
+    let hw = if cfg.threads > 0 {
+        cfg.threads
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    };
+    let min_width = cfg.n_block.max(1);
+    let t = hw.clamp(1, (n / min_width).max(1));
+    let width = n.div_ceil(t);
+    (0..t)
+        .map(|i| (i * width, ((i + 1) * width).min(n)))
+        .filter(|&(j0, j1)| j0 < j1)
+        .collect()
+}
+
+/// Multi-token (M x K) @ (K x N) over packed weights: cache-tiled over N
+/// and K with the weight tile reused across every token of the batch, and
+/// column ranges fanned out over scoped worker threads. Bit-exact with
+/// per-token `execute_direct` for every tile shape and thread count.
+pub fn execute_batch_tiled(
+    toks: &[QuantToken],
+    w: &PackedWeights,
+    lut: &CartesianLut,
+    cfg: &TileCfg,
+) -> Vec<Vec<f32>> {
+    for t in toks {
+        assert_eq!(t.idx.len(), w.n_rows, "reduction length mismatch");
+    }
+    if toks.is_empty() {
+        return Vec::new();
+    }
+    let n = w.n_cols;
+    let k_pair_block = cfg.k_pair_block.max(1);
+    let ranges = col_ranges(n, cfg);
+    let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; n]).collect();
+
+    if ranges.len() <= 1 {
+        accumulate_range(toks, w, lut, k_pair_block, 0, n, &mut out);
+    } else {
+        std::thread::scope(|s| {
+            let workers: Vec<_> = ranges
+                .iter()
+                .map(|&(j0, j1)| {
+                    s.spawn(move || {
+                        let mut local: Vec<Vec<f32>> =
+                            toks.iter().map(|_| vec![0.0f32; j1 - j0]).collect();
+                        accumulate_range(toks, w, lut, k_pair_block, j0, j1, &mut local);
+                        (j0, local)
+                    })
+                })
+                .collect();
+            for worker in workers {
+                let (j0, local) = worker.join().expect("waq gemm worker panicked");
+                for (dst, src) in out.iter_mut().zip(local) {
+                    dst[j0..j0 + src.len()].copy_from_slice(&src);
+                }
+            }
+        });
+    }
+
+    // per-token x per-channel scaling, after all accumulation — the same
+    // grouping as the direct path
+    for (tok, row) in toks.iter().zip(out.iter_mut()) {
+        for (j, a) in row.iter_mut().enumerate() {
+            *a *= tok.scale * w.col_scales[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::waq;
+    use crate::quant::{self, OutlierCfg, QuantWeights};
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn setup(
+        seed: u64,
+        k: usize,
+        n: usize,
+        a_bits: u32,
+        w_bits: u32,
+        batch: usize,
+    ) -> (Vec<QuantToken>, QuantWeights, CartesianLut) {
+        let mut rng = Rng::new(seed);
+        let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
+        let qw = quant::quantize_weights(&wmat, w_bits);
+        let calib: Vec<Vec<f32>> =
+            (0..6).map(|_| rng.heavy_tailed_vec(k, 0.02, 10.0)).collect();
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let cfg = OutlierCfg { total_frac: 0.03 };
+        let cb_a = quant::learn_act_codebook(&refs, None, a_bits, cfg);
+        let toks: Vec<QuantToken> = (0..batch)
+            .map(|_| quant::quantize_token(&rng.heavy_tailed_vec(k, 0.02, 10.0), &cb_a, cfg))
+            .collect();
+        let lut = CartesianLut::build(&cb_a, &qw.codebook);
+        (toks, qw, lut)
+    }
+
+    #[test]
+    fn packed_bit_exact_with_direct() {
+        // even and odd K, including a K=1 tail-only edge
+        for &(k, n) in &[(64usize, 24usize), (65, 24), (1, 8), (2, 8), (129, 17)] {
+            let (toks, qw, lut) = setup(10 + k as u64, k, n, 4, 4, 1);
+            let pw = qw.pack();
+            let direct = waq::execute_direct(&toks[0], &qw, &lut);
+            let packed = execute_packed(&toks[0], &pw, &lut);
+            assert_eq!(packed, direct, "({k},{n}) not bit-exact");
+        }
+    }
+
+    #[test]
+    fn packed_bit_exact_mixed_bitwidths() {
+        // 3-bit activations x 4-bit weights and 4x3
+        for &(ab, wb) in &[(3u32, 4u32), (4, 3), (3, 3)] {
+            let (toks, qw, lut) = setup(77 + ab as u64, 96, 20, ab, wb, 1);
+            let pw = qw.pack();
+            let direct = waq::execute_direct(&toks[0], &qw, &lut);
+            let packed = execute_packed(&toks[0], &pw, &lut);
+            assert_eq!(packed, direct, "A{ab}/W{wb} not bit-exact");
+        }
+    }
+
+    #[test]
+    fn tiled_bit_exact_across_tiles_and_threads() {
+        let (toks, qw, lut) = setup(5, 97, 41, 4, 4, 5);
+        let pw = qw.pack();
+        let want: Vec<Vec<f32>> = toks.iter().map(|t| waq::execute_direct(t, &qw, &lut)).collect();
+        for threads in [1usize, 2, 3, 8] {
+            for (nb, kb) in [(8usize, 3usize), (16, 1), (512, 128), (5, 1000)] {
+                let cfg = TileCfg { n_block: nb, k_pair_block: kb, threads };
+                let got = execute_batch_tiled(&toks, &pw, &lut, &cfg);
+                assert_eq!(got, want, "threads={threads} nb={nb} kb={kb}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_handles_empty_and_single() {
+        let (toks, qw, lut) = setup(6, 32, 8, 4, 4, 1);
+        let pw = qw.pack();
+        let none: Vec<QuantToken> = Vec::new();
+        assert!(execute_batch_tiled(&none, &pw, &lut, &TileCfg::default()).is_empty());
+        let got = execute_batch_tiled(&toks, &pw, &lut, &TileCfg::default());
+        assert_eq!(got[0], execute_packed(&toks[0], &pw, &lut));
+    }
+
+    #[test]
+    fn fused_row_matches_two_lookups() {
+        let mut rng = Rng::new(9);
+        let cb_a = quant::Codebook::new(rng.normal_vec(16, 1.0));
+        let cb_w = quant::Codebook::new(rng.normal_vec(16, 1.0));
+        let lut = CartesianLut::build(&cb_a, &cb_w);
+        let mut fused = [0.0f32; 256];
+        build_fused_row(&mut fused, 5, 11, &lut);
+        for iw0 in 0..16u8 {
+            for iw1 in 0..16u8 {
+                let b = ((iw0 as usize) << 4) | iw1 as usize;
+                assert_eq!(fused[b], lut.lookup(5, iw0) + lut.lookup(11, iw1));
+            }
+        }
+    }
+}

@@ -22,7 +22,10 @@ pub fn execute_direct(tok: &QuantToken, w: &QuantWeights, lut: &CartesianLut) ->
     // Process two reduction rows per pass: two independent LUT gathers per
     // output element break the load-add dependency chain (EXPERIMENTS.md
     // §Perf iterations 1-2: 768us -> 536us -> measured below on 1024^2).
-    // Masking iw elides the per-element bounds check on the LUT row slice.
+    // Masking iw elides the per-element bounds check on the LUT row slice
+    // in release; debug builds assert in-range first — a wrapped index
+    // means corrupt data (e.g. a mixed-bitwidth config feeding 4-bit
+    // indices to a 3-bit LUT), which must fail loudly, not alias entries.
     let mut k = 0;
     while k + 1 < w.n_rows {
         let base0 = (tok.idx[k] as usize) << lut.n_w_bits;
@@ -32,6 +35,11 @@ pub fn execute_direct(tok: &QuantToken, w: &QuantWeights, lut: &CartesianLut) ->
         let w0 = &w.idx[k * n..(k + 1) * n];
         let w1 = &w.idx[(k + 1) * n..(k + 2) * n];
         for ((a, &i0), &i1) in acc.iter_mut().zip(w0).zip(w1) {
+            debug_assert!(
+                (i0 as usize) <= mask && (i1 as usize) <= mask,
+                "weight index out of range for {}-bit LUT: {i0}/{i1} at k={k}",
+                lut.n_w_bits
+            );
             *a += lr0[i0 as usize & mask] + lr1[i1 as usize & mask];
         }
         k += 2;
@@ -41,6 +49,11 @@ pub fn execute_direct(tok: &QuantToken, w: &QuantWeights, lut: &CartesianLut) ->
         let lut_row = &lut.table[base..base + mask + 1];
         let wrow = &w.idx[k * n..(k + 1) * n];
         for (a, &iw) in acc.iter_mut().zip(wrow) {
+            debug_assert!(
+                (iw as usize) <= mask,
+                "weight index out of range for {}-bit LUT: {iw} at k={k}",
+                lut.n_w_bits
+            );
             *a += lut_row[iw as usize & mask];
         }
     }
@@ -161,6 +174,26 @@ mod tests {
             );
             assert_eq!(h.iter().sum::<u32>() as usize, qw.n_rows);
         }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "weight index out of range")]
+    fn corrupt_weight_index_fails_loudly() {
+        // 4-bit index stream fed to a 3-bit LUT must not silently alias
+        let mut rng = Rng::new(6);
+        let cb_a = Codebook::new(rng.normal_vec(16, 1.0));
+        let cb_w = Codebook::new(rng.normal_vec(8, 1.0));
+        let lut = CartesianLut::build(&cb_a, &cb_w);
+        let qw = QuantWeights {
+            n_rows: 2,
+            n_cols: 1,
+            idx: vec![15, 0], // 15 is out of range for the 3-bit codebook
+            codebook: cb_w,
+            col_scales: vec![1.0],
+        };
+        let tok = QuantToken { idx: vec![0, 0], scale: 1.0, outliers: vec![] };
+        execute_direct(&tok, &qw, &lut);
     }
 
     #[test]

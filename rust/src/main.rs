@@ -5,6 +5,9 @@
 //!       [--calib-samples N] [--md FILE]    regenerate a paper table/figure
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
+//!       [--backend direct|histogram|packed]   (backend selects the
+//!       modeled host-datapath cost reported per response; decode compute
+//!       itself runs the PJRT artifact)
 //!   quantize [--preset P] [--bits B]        quantize + report one matrix
 //!   list                                    list experiments + artifacts
 
@@ -13,6 +16,7 @@ use std::io::Write;
 use anyhow::{anyhow, Result};
 use kllm::coordinator::{serve_tcp, Coordinator, EngineConfig};
 use kllm::eval::{run_experiment, Corpus, ExperimentCtx, ALL_IDS};
+use kllm::gemm::WaqBackend;
 use kllm::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
 use kllm::util::cli::Args;
 use kllm::util::rng::Rng;
@@ -121,7 +125,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.check_known(&["preset", "config", "port", "ckpt", "requests", "max-new"])
+    args.check_known(&["preset", "config", "port", "ckpt", "requests", "max-new", "backend"])
         .map_err(|e| anyhow!(e))?;
     let mut preset = args.str_or("preset", "test");
     let mut port = args.usize_or("port", 7070).map_err(|e| anyhow!(e))? as u16;
@@ -130,6 +134,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         preset = cfg.str_or("preset", &preset);
         port = cfg.usize_or("server.port", port as usize).map_err(|e| anyhow!(e))? as u16;
     }
+    let backend_name = args.str_or("backend", WaqBackend::default().name());
+    let waq_backend = WaqBackend::parse(&backend_name)
+        .ok_or_else(|| anyhow!("unknown --backend '{backend_name}' (direct|histogram|packed)"))?;
     let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(|e| anyhow!(e))?;
     let params = match args.opt("ckpt") {
         Some(p) => ParamSet::load(std::path::Path::new(p))?,
@@ -138,10 +145,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = std::sync::Arc::new(Coordinator::start(
         preset.clone(),
         params,
-        EngineConfig::default(),
+        EngineConfig { waq_backend, ..Default::default() },
     )?);
     let port = serve_tcp(coord.clone(), port)?;
-    println!("kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines)");
+    println!(
+        "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, modeled WAQ backend {})",
+        waq_backend.name()
+    );
     println!("example: echo '{{\"prompt\": [1,2,3], \"max_new_tokens\": 8}}' | nc 127.0.0.1 {port}");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -7,6 +7,7 @@ pub mod atom;
 pub mod codebook;
 pub mod kmeans;
 pub mod outlier;
+pub mod packed;
 pub mod quarot;
 pub mod rtn;
 pub mod smoothquant;
@@ -15,4 +16,5 @@ pub mod weights;
 pub use activation::{learn_act_codebook, quantize_token, quantize_token_static, QuantToken};
 pub use codebook::Codebook;
 pub use outlier::OutlierCfg;
+pub use packed::{PackedIdx, PackedWeights};
 pub use weights::{quantize_weights, quantize_weights_weighted, QuantWeights};

@@ -1,0 +1,264 @@
+//! Nibble-packed index storage (two 4-bit K-Means indices per byte).
+//!
+//! The WAQ datapath is memory-bandwidth-bound at decode, yet the plain
+//! `QuantWeights`/`QuantToken` forms spend a full byte per <=4-bit index —
+//! twice the traffic the quantization scheme was chosen to avoid. This
+//! module provides the packed forms the fast GEMM backend
+//! (`gemm::packed`) streams:
+//!
+//! * [`PackedIdx`] — a flat nibble stream for any index sequence
+//!   (activation tokens, weight tails). Element `2i` lives in the HIGH
+//!   nibble of byte `i`, element `2i+1` in the LOW nibble, so a byte reads
+//!   left-to-right like the index stream it encodes.
+//! * [`PackedWeights`] — the K x N weight index matrix packed along the
+//!   *reduction* dimension: byte `pairs[p * n_cols + j]` holds
+//!   `idx[2p][j] << 4 | idx[2p+1][j]`. Pairing along K is what lets the
+//!   GEMM kernel fuse two LUT rows into one 256-entry table and do one
+//!   lookup per two MACs (see `gemm::packed` for the kernel-side story).
+//!   An odd final row is kept as a nibble-packed tail.
+//!
+//! Packing is lossless for any codebook of <= 16 centroids (<= 4 bits),
+//! which covers every WAQ configuration in the paper (3- and 4-bit).
+
+use super::codebook::Codebook;
+use super::weights::QuantWeights;
+
+/// A flat sequence of 4-bit indices, two per byte (high nibble first).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedIdx {
+    /// `len.div_ceil(2)` bytes; an odd tail element occupies the high
+    /// nibble of the last byte with the low nibble zeroed.
+    pub bytes: Vec<u8>,
+    /// logical number of indices
+    pub len: usize,
+}
+
+impl PackedIdx {
+    /// Pack a byte-per-index stream. Every index must fit in 4 bits —
+    /// enforced with a hard assert even in release, because a wide index
+    /// would bleed into its neighbor's nibble and corrupt both values
+    /// (packing is a cold path; the check is one branch per pair).
+    pub fn pack(idx: &[u8]) -> PackedIdx {
+        let mut bytes = Vec::with_capacity(idx.len().div_ceil(2));
+        let mut chunks = idx.chunks_exact(2);
+        for pair in &mut chunks {
+            assert!(pair[0] < 16 && pair[1] < 16, "index does not fit in a nibble");
+            bytes.push((pair[0] << 4) | pair[1]);
+        }
+        if let &[tail] = chunks.remainder() {
+            assert!(tail < 16, "index does not fit in a nibble");
+            bytes.push(tail << 4);
+        }
+        PackedIdx { bytes, len: idx.len() }
+    }
+
+    /// Inverse of [`PackedIdx::pack`].
+    pub fn unpack(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Read one logical index.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.len);
+        let b = self.bytes[i / 2];
+        if i % 2 == 0 {
+            b >> 4
+        } else {
+            b & 0x0F
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of index storage (exactly half the unpacked stream, rounded
+    /// up).
+    pub fn storage_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+/// K-Means-quantized weights with the index matrix nibble-packed along the
+/// reduction dimension — the storage format the packed/tiled GEMM backend
+/// streams. Produced by [`QuantWeights::pack`]; numerically identical to
+/// the unpacked form (same codebook, scales, and index values).
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    pub n_rows: usize, // K (reduction dim)
+    pub n_cols: usize, // N (output channels)
+    /// `(n_rows / 2) * n_cols` bytes, row-pair-major:
+    /// `pairs[p * n_cols + j] = idx[2p][j] << 4 | idx[2p+1][j]`.
+    pub pairs: Vec<u8>,
+    /// The unpaired final row when `n_rows` is odd, nibble-packed along
+    /// columns.
+    pub tail: Option<PackedIdx>,
+    pub codebook: Codebook,
+    pub col_scales: Vec<f32>,
+}
+
+impl PackedWeights {
+    /// Number of packed row pairs (`n_rows / 2`).
+    #[inline]
+    pub fn n_pairs(&self) -> usize {
+        self.n_rows / 2
+    }
+
+    /// Recover the byte-per-index matrix (row-major K x N), for tests and
+    /// for interop with the unpacked execution paths.
+    pub fn unpack_idx(&self) -> Vec<u8> {
+        let n = self.n_cols;
+        let mut idx = vec![0u8; self.n_rows * n];
+        for p in 0..self.n_pairs() {
+            for j in 0..n {
+                let b = self.pairs[p * n + j];
+                idx[2 * p * n + j] = b >> 4;
+                idx[(2 * p + 1) * n + j] = b & 0x0F;
+            }
+        }
+        if let Some(tail) = &self.tail {
+            let r = self.n_rows - 1;
+            for j in 0..n {
+                idx[r * n + j] = tail.get(j);
+            }
+        }
+        idx
+    }
+
+    /// Index-storage bytes: half of the byte-per-index form (plus a
+    /// rounded-up tail row when K is odd).
+    pub fn index_bytes(&self) -> usize {
+        self.pairs.len() + self.tail.as_ref().map_or(0, |t| t.storage_bytes())
+    }
+
+    /// Total storage: packed indices + FP16 codebook + FP16 scales. Note
+    /// the index term is one *nibble* per element regardless of codebook
+    /// bits — it equals `QuantWeights::storage_bytes` (which counts
+    /// bit-level packing) only for 4-bit codebooks; a 3-bit codebook costs
+    /// 4/3x the bit-minimal figure in exchange for byte-aligned streaming.
+    pub fn storage_bytes(&self) -> usize {
+        self.index_bytes() + self.codebook.len() * 2 + self.col_scales.len() * 2
+    }
+}
+
+impl QuantWeights {
+    /// Convert to the nibble-packed storage format consumed by
+    /// `gemm::packed`. Requires a <= 4-bit codebook (all WAQ configs).
+    pub fn pack(&self) -> PackedWeights {
+        assert!(
+            self.codebook.len() <= 16,
+            "cannot nibble-pack a {}-entry codebook",
+            self.codebook.len()
+        );
+        let (k, n) = (self.n_rows, self.n_cols);
+        let mut pairs = Vec::with_capacity((k / 2) * n);
+        for p in 0..k / 2 {
+            let hi = &self.idx[2 * p * n..(2 * p + 1) * n];
+            let lo = &self.idx[(2 * p + 1) * n..(2 * p + 2) * n];
+            for (&h, &l) in hi.iter().zip(lo) {
+                assert!(h < 16 && l < 16, "weight index does not fit in a nibble");
+                pairs.push((h << 4) | l);
+            }
+        }
+        let tail = if k % 2 == 1 {
+            Some(PackedIdx::pack(&self.idx[(k - 1) * n..k * n]))
+        } else {
+            None
+        };
+        PackedWeights {
+            n_rows: k,
+            n_cols: n,
+            pairs,
+            tail,
+            codebook: self.codebook.clone(),
+            col_scales: self.col_scales.clone(),
+        }
+    }
+}
+
+impl super::activation::QuantToken {
+    /// Nibble-pack the activation index stream (halves the activation-side
+    /// index traffic; outliers and scale are untouched).
+    pub fn pack_idx(&self) -> PackedIdx {
+        PackedIdx::pack(&self.idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip_even_and_odd() {
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 2, 7, 8, 31, 64, 1001] {
+            let idx: Vec<u8> = (0..len).map(|_| rng.below(16) as u8).collect();
+            let p = PackedIdx::pack(&idx);
+            assert_eq!(p.len, len);
+            assert_eq!(p.storage_bytes(), len.div_ceil(2));
+            assert_eq!(p.unpack(), idx, "len {len}");
+            for (i, &v) in idx.iter().enumerate() {
+                assert_eq!(p.get(i), v, "len {len} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_layout_is_high_first() {
+        let p = PackedIdx::pack(&[0xA, 0x3, 0xF]);
+        assert_eq!(p.bytes, vec![0xA3, 0xF0]);
+    }
+
+    #[test]
+    fn weights_pack_roundtrip() {
+        let mut rng = Rng::new(2);
+        for &(k, n) in &[(8usize, 6usize), (9, 5), (1, 4), (33, 16)] {
+            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+            let qw = quant::quantize_weights(&w, 4);
+            let pw = qw.pack();
+            assert_eq!(pw.n_rows, k);
+            assert_eq!(pw.n_cols, n);
+            assert_eq!(pw.n_pairs(), k / 2);
+            assert_eq!(pw.tail.is_some(), k % 2 == 1);
+            assert_eq!(pw.unpack_idx(), qw.idx, "({k},{n})");
+            assert_eq!(pw.col_scales, qw.col_scales);
+            assert_eq!(pw.codebook, qw.codebook);
+        }
+    }
+
+    #[test]
+    fn packing_halves_index_traffic() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::random_normal(128, 64, 1.0, &mut rng);
+        let qw = quant::quantize_weights(&w, 4);
+        let pw = qw.pack();
+        assert_eq!(pw.index_bytes(), qw.idx.len() / 2);
+        // storage accounting stays consistent with the unpacked form
+        assert_eq!(pw.storage_bytes(), qw.storage_bytes());
+    }
+
+    #[test]
+    fn three_bit_codebooks_pack_too() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::random_normal(17, 9, 1.0, &mut rng);
+        let qw = quant::quantize_weights(&w, 3);
+        let pw = qw.pack();
+        assert_eq!(pw.unpack_idx(), qw.idx);
+    }
+
+    #[test]
+    fn token_pack_idx() {
+        let mut rng = Rng::new(5);
+        let toks: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(33, 1.0)).collect();
+        let refs: Vec<&[f32]> = toks.iter().map(|t| t.as_slice()).collect();
+        let cfg = quant::OutlierCfg::default();
+        let cb = quant::learn_act_codebook(&refs, None, 4, cfg);
+        let x = rng.normal_vec(33, 1.0);
+        let t = quant::quantize_token(&x, &cb, cfg);
+        assert_eq!(t.pack_idx().unpack(), t.idx);
+    }
+}

@@ -2,14 +2,17 @@
 //! the CPU PJRT client, and marshals host tensors in/out. Mirrors
 //! /opt/xla-example/load_hlo — HLO *text* is the interchange format because
 //! xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos.
+//!
+//! The PJRT-backed `Runtime`/`Executable` live behind the off-by-default
+//! `pjrt` cargo feature (the offline registry has no usable xla binding).
+//! Without the feature, an API-identical stub is compiled instead whose
+//! constructors fail with a clear message, so every caller — engine, eval,
+//! benches, examples — builds and runs unchanged and simply skips the
+//! artifact paths. `HostTensor` is pure host code and always available.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
+use anyhow::{bail, Result};
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use super::artifacts::{ArtifactSpec, DType, Manifest, TensorSpec};
+use super::artifacts::{DType, TensorSpec};
 
 /// A host-side tensor (f32 or i32), shape-carrying.
 #[derive(Clone, Debug, PartialEq)]
@@ -75,171 +78,269 @@ impl HostTensor {
         }
     }
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
-            HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
-        };
-        Ok(lit)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.element_type() {
-            xla::ElementType::F32 => Ok(HostTensor::F32 { data: lit.to_vec()?, shape: dims }),
-            xla::ElementType::S32 => Ok(HostTensor::I32 { data: lit.to_vec()?, shape: dims }),
-            other => bail!("unsupported output element type {other:?}"),
-        }
-    }
-
     fn matches(&self, spec: &TensorSpec) -> bool {
         self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
     }
 }
 
-/// A compiled artifact.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+/// Validate positional inputs against an artifact's manifest spec (shared
+/// by the PJRT executable and the featureless stub).
+fn validate_inputs(
+    name: &str,
+    specs: &[TensorSpec],
+    inputs: &[HostTensor],
+) -> Result<()> {
+    if inputs.len() != specs.len() {
+        bail!("{}: expected {} inputs, got {}", name, specs.len(), inputs.len());
+    }
+    for (i, (t, s)) in inputs.iter().zip(specs).enumerate() {
+        if !t.matches(s) {
+            bail!(
+                "{}: input #{i} ('{}') expects {:?}{:?}, got {:?}{:?}",
+                name,
+                s.name,
+                s.dtype,
+                s.shape,
+                t.dtype(),
+                t.shape()
+            );
+        }
+    }
+    Ok(())
 }
 
-impl Executable {
-    /// Execute with host tensors (validates against the manifest spec).
-    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        self.validate(inputs)?;
-        let lits = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        let out = self.exe.execute::<xla::Literal>(&lits)?;
-        self.collect(out)
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    //! The real PJRT-backed runtime (feature `pjrt`).
+
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::rc::Rc;
+
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use super::super::artifacts::{ArtifactSpec, Manifest};
+    use super::{validate_inputs, HostTensor};
+
+    /// Device-resident buffer handle (uploaded once, reused every step).
+    pub type DeviceBuffer = xla::PjRtBuffer;
+
+    impl HostTensor {
+        pub(super) fn to_literal(&self) -> Result<xla::Literal> {
+            let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+            let lit = match self {
+                HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+                HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            };
+            Ok(lit)
+        }
+
+        pub(super) fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            match shape.element_type() {
+                xla::ElementType::F32 => Ok(HostTensor::F32 { data: lit.to_vec()?, shape: dims }),
+                xla::ElementType::S32 => Ok(HostTensor::I32 { data: lit.to_vec()?, shape: dims }),
+                other => bail!("unsupported output element type {other:?}"),
+            }
+        }
     }
 
-    /// Execute with pre-uploaded device buffers (the serving hot path: the
-    /// big weight buffers are uploaded once and reused every step).
-    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        let out = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
-        self.collect(out)
+    /// A compiled artifact.
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    fn collect(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
-        let buf = out
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("no output buffer"))?;
-        let mut lit = buf.to_literal_sync()?;
-        // artifacts are lowered with return_tuple=True: single tuple root
-        let parts = lit.decompose_tuple()?;
-        let tensors = parts
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect::<Result<Vec<_>>>()?;
-        if tensors.len() != self.spec.outputs.len() {
-            bail!(
-                "{}: manifest says {} outputs, module returned {}",
-                self.spec.name,
-                self.spec.outputs.len(),
-                tensors.len()
-            );
+    impl Executable {
+        /// Execute with host tensors (validates against the manifest spec).
+        pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            validate_inputs(&self.spec.name, &self.spec.inputs, inputs)?;
+            let lits = inputs
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<Vec<_>>>()?;
+            let out = self.exe.execute::<xla::Literal>(&lits)?;
+            self.collect(out)
         }
-        Ok(tensors)
-    }
 
-    fn validate(&self, inputs: &[HostTensor]) -> Result<()> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
-            if !t.matches(s) {
+        /// Execute with pre-uploaded device buffers (the serving hot path:
+        /// the big weight buffers are uploaded once and reused every step).
+        pub fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<HostTensor>> {
+            if inputs.len() != self.spec.inputs.len() {
                 bail!(
-                    "{}: input #{i} ('{}') expects {:?}{:?}, got {:?}{:?}",
+                    "{}: expected {} inputs, got {}",
                     self.spec.name,
-                    s.name,
-                    s.dtype,
-                    s.shape,
-                    t.dtype(),
-                    t.shape()
+                    self.spec.inputs.len(),
+                    inputs.len()
                 );
             }
+            let out = self.exe.execute_b::<&DeviceBuffer>(inputs)?;
+            self.collect(out)
         }
-        Ok(())
-    }
-}
 
-/// The PJRT runtime: one CPU client + compiled-executable cache.
-/// Not Sync/Send — owned by a single engine thread (the coordinator talks
-/// to it through channels).
-pub struct Runtime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: HashMap<String, Rc<Executable>>,
-}
-
-impl Runtime {
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { manifest, client, cache: HashMap::new() })
-    }
-
-    pub fn for_preset(preset: &str) -> Result<Runtime> {
-        Self::new(&super::artifacts::artifacts_dir(preset))
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) an artifact.
-    pub fn load(&mut self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self.manifest.artifact(name).map_err(|e| anyhow!(e))?.clone();
-        let path = self.manifest.hlo_path(name).map_err(|e| anyhow!(e))?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("loading HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let e = Rc::new(Executable { spec, exe });
-        self.cache.insert(name.to_string(), e.clone());
-        Ok(e)
-    }
-
-    /// One-shot convenience.
-    pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        self.load(name)?.run(inputs)
-    }
-
-    /// Upload a host tensor to the device (for reuse across steps).
-    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        match t {
-            HostTensor::F32 { data, shape } => {
-                Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+        fn collect(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+            let buf = out
+                .first()
+                .and_then(|r| r.first())
+                .ok_or_else(|| anyhow!("no output buffer"))?;
+            let mut lit = buf.to_literal_sync()?;
+            // artifacts are lowered with return_tuple=True: single tuple root
+            let parts = lit.decompose_tuple()?;
+            let tensors = parts
+                .iter()
+                .map(HostTensor::from_literal)
+                .collect::<Result<Vec<_>>>()?;
+            if tensors.len() != self.spec.outputs.len() {
+                bail!(
+                    "{}: manifest says {} outputs, module returned {}",
+                    self.spec.name,
+                    self.spec.outputs.len(),
+                    tensors.len()
+                );
             }
-            HostTensor::I32 { data, shape } => {
-                Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+            Ok(tensors)
+        }
+    }
+
+    /// The PJRT runtime: one CPU client + compiled-executable cache.
+    /// Not Sync/Send — owned by a single engine thread (the coordinator
+    /// talks to it through channels).
+    pub struct Runtime {
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+        cache: HashMap<String, Rc<Executable>>,
+    }
+
+    impl Runtime {
+        pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Runtime { manifest, client, cache: HashMap::new() })
+        }
+
+        pub fn for_preset(preset: &str) -> Result<Runtime> {
+            Self::new(&super::super::artifacts::artifacts_dir(preset))
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch cached) an artifact.
+        pub fn load(&mut self, name: &str) -> Result<Rc<Executable>> {
+            if let Some(e) = self.cache.get(name) {
+                return Ok(e.clone());
+            }
+            let spec = self.manifest.artifact(name).map_err(|e| anyhow!(e))?.clone();
+            let path = self.manifest.hlo_path(name).map_err(|e| anyhow!(e))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let e = Rc::new(Executable { spec, exe });
+            self.cache.insert(name.to_string(), e.clone());
+            Ok(e)
+        }
+
+        /// One-shot convenience.
+        pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            self.load(name)?.run(inputs)
+        }
+
+        /// Upload a host tensor to the device (for reuse across steps).
+        pub fn upload(&self, t: &HostTensor) -> Result<DeviceBuffer> {
+            match t {
+                HostTensor::F32 { data, shape } => {
+                    Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+                }
+                HostTensor::I32 { data, shape } => {
+                    Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+                }
             }
         }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    //! API-identical stand-in compiled when the `pjrt` feature is off:
+    //! construction fails with a clear message, so artifact-dependent code
+    //! paths degrade to runtime skips instead of compile failures.
+
+    use std::path::Path;
+    use std::rc::Rc;
+
+    use anyhow::{bail, Result};
+
+    use super::super::artifacts::{ArtifactSpec, Manifest};
+    use super::{validate_inputs, HostTensor};
+
+    const NO_PJRT: &str =
+        "kllm was built without the `pjrt` feature; rebuild with `--features pjrt` \
+         (and a real xla binding) to execute AOT artifacts";
+
+    /// Placeholder device buffer: never constructed without PJRT.
+    #[derive(Debug)]
+    pub struct DeviceBuffer {
+        _private: (),
+    }
+
+    /// Spec-carrying placeholder: never constructed without PJRT.
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+    }
+
+    impl Executable {
+        pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            validate_inputs(&self.spec.name, &self.spec.inputs, inputs)?;
+            bail!(NO_PJRT)
+        }
+
+        pub fn run_buffers(&self, _inputs: &[&DeviceBuffer]) -> Result<Vec<HostTensor>> {
+            bail!(NO_PJRT)
+        }
+    }
+
+    /// Featureless runtime: `new` always fails, everything downstream is
+    /// therefore unreachable but type-checks against the PJRT API.
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(_artifacts_dir: &Path) -> Result<Runtime> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn for_preset(preset: &str) -> Result<Runtime> {
+            Self::new(&super::super::artifacts::artifacts_dir(preset))
+        }
+
+        pub fn platform(&self) -> String {
+            "none (pjrt feature disabled)".to_string()
+        }
+
+        pub fn load(&mut self, _name: &str) -> Result<Rc<Executable>> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn run(&mut self, _name: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn upload(&self, _t: &HostTensor) -> Result<DeviceBuffer> {
+            bail!(NO_PJRT)
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{DeviceBuffer, Executable, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::{DeviceBuffer, Executable, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -259,5 +360,26 @@ mod tests {
     #[should_panic(expected = "shape mismatch")]
     fn shape_mismatch_panics() {
         HostTensor::f32(vec![0.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn validate_inputs_checks_arity_and_shape() {
+        let specs = vec![TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 3],
+            dtype: DType::F32,
+        }];
+        let ok = [HostTensor::f32(vec![0.0; 6], &[2, 3])];
+        assert!(validate_inputs("t", &specs, &ok).is_ok());
+        let bad_shape = [HostTensor::f32(vec![0.0; 6], &[3, 2])];
+        assert!(validate_inputs("t", &specs, &bad_shape).is_err());
+        assert!(validate_inputs("t", &specs, &[]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_fails_loudly() {
+        let err = Runtime::new(std::path::Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

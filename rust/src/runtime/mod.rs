@@ -1,11 +1,22 @@
 //! L3 runtime: PJRT client wrapper (load + compile + execute the AOT
 //! artifacts), the artifact manifest, and parameter-set plumbing. Python is
 //! never on this path — the HLO text was produced once by `make artifacts`.
+//!
+//! The PJRT execution backend is gated behind the off-by-default `pjrt`
+//! cargo feature; without it an API-identical stub compiles in (see
+//! `client`), and `pjrt_available()` lets tests/benches skip artifact
+//! paths cleanly.
 
 pub mod artifacts;
 pub mod client;
 pub mod model_io;
 
 pub use artifacts::{artifacts_dir, ArtifactSpec, DType, Manifest, TensorSpec};
-pub use client::{Executable, HostTensor, Runtime};
+pub use client::{DeviceBuffer, Executable, HostTensor, Runtime};
 pub use model_io::ParamSet;
+
+/// Whether this build can actually execute AOT artifacts (the `pjrt`
+/// feature, i.e. a real xla binding, was compiled in).
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}

@@ -4,10 +4,23 @@
 //! warmup, adaptive iteration count targeting a fixed measurement window,
 //! and mean/p50/min reporting with a throughput hook. Also provides
 //! `black_box` via `std::hint`.
+//!
+//! Results can additionally be appended as JSON lines to a repo-root file
+//! (`Bencher::json` / `BenchResult::append_json`), so the perf trajectory
+//! of the hot paths is tracked across PRs instead of only printed.
 
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 pub use std::hint::black_box;
+
+/// Resolve a machine-readable results file at the repo root (one level
+/// above this crate), e.g. `bench_json_path("BENCH_waq_gemm.json")`.
+pub fn bench_json_path(file_name: &str) -> PathBuf {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(file_name)
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -54,6 +67,34 @@ impl BenchResult {
             tp
         );
     }
+
+    /// One JSON object (single line) with the machine-readable fields.
+    pub fn json_line(&self) -> String {
+        let name = self.name.replace('\\', "\\\\").replace('"', "\\\"");
+        let tp = match self.throughput {
+            Some(t) => format!("{t:.3}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"name\": \"{name}\", \"iters\": {}, \"mean_ns\": {:.3}, \
+             \"p50_ns\": {:.3}, \"min_ns\": {:.3}, \"throughput\": {tp}}}",
+            self.iters, self.mean_ns, self.p50_ns, self.min_ns
+        )
+    }
+
+    /// Append the JSON line to `path` (JSON-lines file; created if
+    /// missing). IO failures are reported, never fatal to the bench.
+    pub fn append_json(&self, path: &Path) {
+        let line = self.json_line();
+        let appended = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .and_then(|mut f| writeln!(f, "{line}"));
+        if let Err(e) = appended {
+            eprintln!("bench: could not append to {}: {e}", path.display());
+        }
+    }
 }
 
 pub struct Bencher {
@@ -62,6 +103,8 @@ pub struct Bencher {
     pub warmup: Duration,
     /// per-iteration item count for throughput reporting
     items_per_iter: Option<u64>,
+    /// when set, every result is appended as a JSON line here
+    json_sink: Option<PathBuf>,
 }
 
 impl Default for Bencher {
@@ -70,6 +113,7 @@ impl Default for Bencher {
             measure: Duration::from_millis(900),
             warmup: Duration::from_millis(150),
             items_per_iter: None,
+            json_sink: None,
         }
     }
 }
@@ -79,12 +123,19 @@ impl Bencher {
         Bencher {
             measure: Duration::from_millis(250),
             warmup: Duration::from_millis(50),
-            items_per_iter: None,
+            ..Default::default()
         }
     }
 
     pub fn throughput(mut self, items: u64) -> Self {
         self.items_per_iter = Some(items);
+        self
+    }
+
+    /// Also append every result to the named repo-root JSON-lines file
+    /// (e.g. `"BENCH_waq_gemm.json"`).
+    pub fn json(mut self, file_name: &str) -> Self {
+        self.json_sink = Some(bench_json_path(file_name));
         self
     }
 
@@ -125,6 +176,9 @@ impl Bencher {
             throughput: self.items_per_iter.map(|n| n as f64 * 1e9 / mean),
         };
         res.report();
+        if let Some(path) = &self.json_sink {
+            res.append_json(path);
+        }
         res
     }
 }
@@ -144,7 +198,7 @@ mod tests {
         let b = Bencher {
             measure: Duration::from_millis(30),
             warmup: Duration::from_millis(5),
-            items_per_iter: None,
+            ..Default::default()
         };
         let mut acc = 0u64;
         let r = b.run("noop-ish", || {
@@ -161,5 +215,49 @@ mod tests {
             black_box((0..100).sum::<u64>());
         });
         assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_line_is_machine_readable() {
+        let r = BenchResult {
+            name: "pa\"th".to_string(),
+            iters: 10,
+            mean_ns: 1.5,
+            p50_ns: 1.0,
+            min_ns: 0.5,
+            throughput: Some(2e6),
+        };
+        let line = r.json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"mean_ns\": 1.500"), "{line}");
+        assert!(line.contains("\\\""), "escapes quotes: {line}");
+        let none = BenchResult { throughput: None, ..r };
+        assert!(none.json_line().contains("\"throughput\": null"));
+    }
+
+    #[test]
+    fn append_json_appends_lines() {
+        let path = std::env::temp_dir().join("kllm_bench_json_test.json");
+        let _ = std::fs::remove_file(&path);
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 2.0,
+            p50_ns: 2.0,
+            min_ns: 2.0,
+            throughput: None,
+        };
+        r.append_json(&path);
+        r.append_json(&path);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn json_path_is_repo_root() {
+        let p = bench_json_path("BENCH_test.json");
+        assert!(p.ends_with("BENCH_test.json"));
+        assert!(!p.parent().unwrap().ends_with("rust"), "{p:?} should be repo root");
     }
 }

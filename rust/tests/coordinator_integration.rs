@@ -1,33 +1,62 @@
 //! Integration: the full serving stack (coordinator thread + engine +
 //! batcher + KV manager + PJRT decode) over the `test` preset artifacts.
+//! Skips (with a note) when the `pjrt` feature is off or artifacts are
+//! missing, so the offline tier-1 suite stays green.
 
 use std::sync::Arc;
 
 use kllm::coordinator::{AdmitPolicy, Coordinator, EngineConfig, FinishReason};
-use kllm::runtime::{artifacts_dir, Manifest, ParamSet};
+use kllm::runtime::{artifacts_dir, pjrt_available, Manifest, ParamSet};
 use kllm::util::rng::Rng;
 
-fn params() -> (ParamSet, kllm::runtime::artifacts::ModelCfg) {
+fn params() -> Option<(ParamSet, kllm::runtime::artifacts::ModelCfg)> {
+    if !pjrt_available() {
+        eprintln!("skipping: kllm built without the `pjrt` feature");
+        return None;
+    }
     let dir = artifacts_dir("test");
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts/test missing — run `make artifacts` first"
-    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/test missing — run `make artifacts` first");
+        return None;
+    }
     let m = Manifest::load(&dir).unwrap();
-    (ParamSet::init(&m, &mut Rng::new(42)), m.model)
+    Some((ParamSet::init(&m, &mut Rng::new(42)), m.model))
 }
 
-fn start() -> (Coordinator, kllm::runtime::artifacts::ModelCfg) {
-    let (p, cfg) = params();
-    (
+fn start() -> Option<(Coordinator, kllm::runtime::artifacts::ModelCfg)> {
+    let (p, cfg) = params()?;
+    Some((
         Coordinator::start("test".into(), p, EngineConfig::default()).expect("start"),
         cfg,
-    )
+    ))
+}
+
+/// Always-on (no PJRT, no artifacts): the coordinator's startup error path
+/// must surface the engine-thread failure synchronously with a message
+/// that names the missing capability, not hang or panic. This keeps the
+/// Coordinator/engine glue exercised even when every other test here
+/// skips in an offline build.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn startup_without_pjrt_fails_fast_with_clear_error() {
+    let manifest_text = r#"{
+      "preset":"t","config":{"vocab":16,"d_model":8,"n_layers":1,
+        "n_heads":2,"seq_len":4,"batch":1,"decode_batch":1,"head_dim":4,
+        "d_ff":32,"n_linears":4},
+      "params":[{"name":"tok_emb","shape":[16,8]}],
+      "artifacts":{}
+    }"#;
+    let m = Manifest::parse(std::path::Path::new("/tmp"), manifest_text).unwrap();
+    let params = ParamSet::init(&m, &mut Rng::new(1));
+    let err = Coordinator::start("definitely-missing-preset".into(), params, EngineConfig::default())
+        .err()
+        .expect("start must fail without the pjrt feature");
+    assert!(err.to_string().contains("pjrt"), "unhelpful error: {err}");
 }
 
 #[test]
 fn single_request_roundtrip() {
-    let (coord, cfg) = start();
+    let Some((coord, cfg)) = start() else { return };
     let resp = coord.generate(vec![1, 2, 3, 4], 6).expect("generate");
     assert_eq!(resp.tokens.len(), 6);
     assert_eq!(resp.finish_reason, FinishReason::MaxTokens);
@@ -39,7 +68,7 @@ fn single_request_roundtrip() {
 
 #[test]
 fn batched_requests_all_complete() {
-    let (coord, cfg) = start();
+    let Some((coord, cfg)) = start() else { return };
     let mut rxs = Vec::new();
     let mut rng = Rng::new(7);
     for i in 0..6 {
@@ -66,14 +95,14 @@ fn batched_requests_all_complete() {
 
 #[test]
 fn deterministic_greedy_decoding() {
-    let (coord, _) = start();
+    let Some((coord, _)) = start() else { return };
     let a = coord.generate(vec![5, 6, 7], 8).unwrap();
     let b = coord.generate(vec![5, 6, 7], 8).unwrap();
     assert_eq!(a.tokens, b.tokens);
     coord.shutdown().unwrap();
 
     // same prompt through a fresh coordinator with identical weights
-    let (coord2, _) = start();
+    let Some((coord2, _)) = start() else { return };
     let c = coord2.generate(vec![5, 6, 7], 8).unwrap();
     assert_eq!(a.tokens, c.tokens);
     coord2.shutdown().unwrap();
@@ -81,7 +110,7 @@ fn deterministic_greedy_decoding() {
 
 #[test]
 fn context_exhaustion_terminates() {
-    let (coord, cfg) = start();
+    let Some((coord, cfg)) = start() else { return };
     // ask for far more tokens than the context window holds
     let resp = coord
         .generate(vec![1; cfg.seq_len / 2], cfg.seq_len * 4)
@@ -93,7 +122,7 @@ fn context_exhaustion_terminates() {
 
 #[test]
 fn fill_all_policy_works() {
-    let (p, _) = params();
+    let Some((p, _)) = params() else { return };
     let coord = Coordinator::start(
         "test".into(),
         p,
@@ -113,7 +142,7 @@ fn fill_all_policy_works() {
 #[test]
 fn tcp_front_end_roundtrip() {
     use std::io::{BufRead, BufReader, Write};
-    let (p, _) = params();
+    let Some((p, _)) = params() else { return };
     let coord = Arc::new(
         Coordinator::start("test".into(), p, EngineConfig::default()).unwrap(),
     );

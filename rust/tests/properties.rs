@@ -130,6 +130,92 @@ fn prop_compensation_never_hurts() {
 }
 
 // ---------------------------------------------------------------------------
+// packed/tiled/threaded backend invariants (bit-exact vs execute_direct)
+// ---------------------------------------------------------------------------
+
+fn random_packed_case(
+    rng: &mut Rng,
+    a_bits: u32,
+    w_bits: u32,
+    batch: usize,
+) -> (Vec<QuantToken>, QuantWeights, CartesianLut) {
+    // odd and even K both drawn (odd exercises the packed tail byte)
+    let k = 1 + rng.below(130);
+    let n = 1 + rng.below(40);
+    let w = Matrix::random_normal(k, n, 1.0, rng);
+    let qw = quant::quantize_weights(&w, w_bits);
+    let calib: Vec<Vec<f32>> = (0..4).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
+    let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+    let cfg = OutlierCfg { total_frac: 0.05 };
+    let cb = quant::learn_act_codebook(&refs, None, a_bits, cfg);
+    let toks = (0..batch)
+        .map(|_| quant::quantize_token(&rng.heavy_tailed_vec(k, 0.02, 8.0), &cb, cfg))
+        .collect();
+    let lut = CartesianLut::build(&cb, &qw.codebook);
+    (toks, qw, lut)
+}
+
+#[test]
+fn prop_packed_bit_exact_vs_direct() {
+    Check::new(32).forall("packed-bit-exact", |rng, _| {
+        // mixed bitwidths: 3/4-bit activations x 3/4-bit weights
+        let a_bits = 3 + rng.below(2) as u32;
+        let w_bits = 3 + rng.below(2) as u32;
+        let (toks, qw, lut) = random_packed_case(rng, a_bits, w_bits, 1);
+        let pw = qw.pack();
+        let want = gemm::execute_direct(&toks[0], &qw, &lut);
+        let got = gemm::execute_packed(&toks[0], &pw, &lut);
+        assert_eq!(got, want, "A{a_bits}/W{w_bits} K={} N={}", qw.n_rows, qw.n_cols);
+    });
+}
+
+#[test]
+fn prop_tiled_threaded_bit_exact_vs_direct() {
+    Check::new(20).forall("tiled-threaded-bit-exact", |rng, _| {
+        let a_bits = 3 + rng.below(2) as u32;
+        let batch = 1 + rng.below(16); // batch sizes 1..=16
+        let (toks, qw, lut) = random_packed_case(rng, a_bits, 4, batch);
+        let pw = qw.pack();
+        let want: Vec<Vec<f32>> =
+            toks.iter().map(|t| gemm::execute_direct(t, &qw, &lut)).collect();
+        let cfg = gemm::TileCfg {
+            n_block: 1 + rng.below(64),
+            k_pair_block: 1 + rng.below(40),
+            threads: 1 + rng.below(6),
+        };
+        let got = gemm::execute_batch_tiled(&toks, &pw, &lut, &cfg);
+        assert_eq!(got, want, "batch={batch} cfg={cfg:?}");
+    });
+}
+
+#[test]
+fn prop_packed_outlier_tokens_compensate_identically() {
+    // outlier-bearing tokens: the packed main branch composes with error
+    // compensation exactly like the direct main branch
+    Check::new(16).forall("packed-outlier-compensation", |rng, _| {
+        let (toks, qw, lut) = random_packed_case(rng, 4, 4, 2);
+        let pw = qw.pack();
+        for tok in &toks {
+            let want = gemm::execute_dual_branch(tok, &qw, &lut);
+            let mut got = gemm::execute_packed(tok, &pw, &lut);
+            gemm::compensate(&mut got, tok, &qw);
+            assert_eq!(got, want);
+        }
+    });
+}
+
+#[test]
+fn prop_packed_idx_roundtrip() {
+    Check::new(32).forall("packed-idx-roundtrip", |rng, _| {
+        let len = rng.below(300);
+        let idx: Vec<u8> = (0..len).map(|_| rng.below(16) as u8).collect();
+        let p = quant::PackedIdx::pack(&idx);
+        assert_eq!(p.unpack(), idx);
+        assert_eq!(p.storage_bytes(), len.div_ceil(2));
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Orizuru invariants
 // ---------------------------------------------------------------------------
 

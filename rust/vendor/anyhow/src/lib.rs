@@ -1,0 +1,148 @@
+//! Minimal offline stand-in for the `anyhow` crate (the offline registry
+//! ships no third-party crates). Implements exactly the API surface this
+//! workspace uses — `Result`, `Error`, `anyhow!`, `bail!`, `Context`,
+//! `Error::msg` — with the same semantics (message-carrying dynamic error,
+//! context frames prepended, blanket `From` for std errors). Swap in the
+//! real crate by retargeting the path dependency; no call site changes.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted, exactly like
+/// the real crate (so `Result<String, String>` still names std's Result).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-carrying error. Context frames are folded into the message
+/// (`outer: inner`), which is what both `{}` and `{:#}` render.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow: any std error converts, which is what makes `?`
+// work on io/fmt/etc. results inside functions returning anyhow::Result.
+// (Error itself deliberately does NOT implement std::error::Error, so this
+// blanket impl cannot overlap the identity `From<T> for T`.)
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Attach context to an error (prepended to the message on failure).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt {args}")` or `anyhow!(displayable_expr)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!(...)` = `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `ensure!(cond, ...)` = `if !cond { bail!(...) }`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/kllm")?;
+        Ok(())
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e = io_fail().context("reading config").unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("reading config: "), "{s}");
+        assert_eq!(format!("{e:#}"), s);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 3;
+        let e = anyhow!("x = {x}");
+        assert_eq!(e.to_string(), "x = 3");
+        let e = anyhow!("{} {}", 1, 2);
+        assert_eq!(e.to_string(), "1 2");
+        let owned: String = "owned".into();
+        let e = anyhow!(owned);
+        assert_eq!(e.to_string(), "owned");
+        fn bails() -> Result<()> {
+            bail!("nope {}", 7)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 7");
+    }
+}
