@@ -1,57 +1,87 @@
 //! End-to-end serving bench: coordinator throughput/latency on the test
-//! preset, decode-priority vs fill-all admission (the Fig 12-style batch
-//! utilization story on the real runtime), and the software WAQ backend
-//! comparison (direct vs histogram vs packed) as modeled host-datapath
-//! seconds. Appends machine-readable results to BENCH_e2e.json.
+//! preset across decode backends and admission policies.
+//!
+//! Native (`native-*`) runs execute the K-Means WAQ LUT-GEMM datapath and
+//! always run — with a synthetic test-preset manifest when `make
+//! artifacts` hasn't been built. PJRT runs need the `pjrt` feature plus
+//! artifacts and are skipped otherwise. Each BENCH_e2e.json row is tagged
+//! with the backend name so the perf trajectory keeps measured-native and
+//! modeled-PJRT numbers separate: the wall-clock row is
+//! `e2e_serving/<policy>/<backend>`, and the host-datapath row is
+//! `.../measured-host` (native, real seconds) or `.../modeled-host`
+//! (PJRT, CpuWaqModel roofline).
 
-use kllm::coordinator::{AdmitPolicy, Coordinator, EngineConfig};
+use kllm::coordinator::{AdmitPolicy, BackendSpec, Coordinator, EngineConfig};
 use kllm::gemm::WaqBackend;
+use kllm::runtime::artifacts::ModelCfg;
 use kllm::runtime::{artifacts_dir, pjrt_available, Manifest, ParamSet};
 use kllm::util::bench::{bench_json_path, fast_mode, BenchResult};
 use kllm::util::rng::Rng;
 use kllm::util::stats::LatencyStats;
 
+/// The `test` preset's model config (mirrors python PRESETS["test"]),
+/// used when no artifacts directory has been built.
+fn test_model_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        seq_len: 32,
+        batch: 2,
+        decode_batch: 2,
+        head_dim: 16,
+        d_ff: 256,
+        n_linears: 8,
+    }
+}
+
+fn policy_name(p: AdmitPolicy) -> &'static str {
+    match p {
+        AdmitPolicy::OnePerStep => "decode-priority",
+        AdmitPolicy::FillAll => "fill-all",
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    if !pjrt_available() {
-        println!("kllm built without the `pjrt` feature — skipping e2e serving bench");
-        return Ok(());
-    }
     let dir = artifacts_dir("test");
-    if !dir.join("manifest.json").exists() {
-        println!("artifacts/test missing — run `make artifacts`; skipping");
-        return Ok(());
-    }
-    let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
+    let have_artifacts = dir.join("manifest.json").exists();
+    let manifest = if have_artifacts {
+        Manifest::load(&dir).map_err(anyhow::Error::msg)?
+    } else {
+        println!("artifacts/test missing — native runs use a synthetic manifest");
+        Manifest::synthetic("test", test_model_cfg())
+    };
     let cfg = manifest.model;
     let params = ParamSet::init(&manifest, &mut Rng::new(42));
     let n_requests = if fast_mode() { 6 } else { 24 };
     let max_new = 8;
     let json = bench_json_path("BENCH_e2e.json");
 
-    let mut runs: Vec<(String, AdmitPolicy, WaqBackend)> = vec![
-        (
-            "decode-priority/packed".into(),
-            AdmitPolicy::OnePerStep,
-            WaqBackend::Packed,
-        ),
-        ("fill-all/packed".into(), AdmitPolicy::FillAll, WaqBackend::Packed),
+    // native runs: the measured LUT-GEMM serving path, policy sweep on the
+    // packed kernel plus a packed-vs-direct kernel comparison
+    let mut runs: Vec<(AdmitPolicy, BackendSpec)> = vec![
+        (AdmitPolicy::OnePerStep, BackendSpec::Native(WaqBackend::Packed)),
+        (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Packed)),
+        (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Direct)),
     ];
-    // backend sweep on the fill-all policy: the measured wall-clock is
-    // PJRT-bound either way, but the modeled host-datapath seconds expose
-    // the packed backend's decode advantage
-    for backend in [WaqBackend::Direct, WaqBackend::Histogram] {
-        runs.push((
-            format!("fill-all/{}", backend.name()),
-            AdmitPolicy::FillAll,
-            backend,
-        ));
+    if pjrt_available() && have_artifacts {
+        // PJRT runs: measured wall-clock is artifact-bound; the modeled
+        // host rows expose the packed kernel's decode advantage
+        runs.push((AdmitPolicy::OnePerStep, BackendSpec::Pjrt(WaqBackend::Packed)));
+        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Packed)));
+        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Direct)));
+        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Histogram)));
+    } else {
+        println!("pjrt feature/artifacts unavailable — skipping PJRT backend runs");
     }
 
-    for (name, policy, backend) in runs {
-        let coord = Coordinator::start(
-            "test".into(),
+    for (policy, backend) in runs {
+        let name = format!("{}/{}", policy_name(policy), backend.name());
+        let coord = Coordinator::start_with_manifest(
+            manifest.clone(),
             ParamSet { tensors: params.tensors.clone() },
-            EngineConfig { policy, waq_backend: backend, ..Default::default() },
+            EngineConfig { policy, backend, ..Default::default() },
         )?;
         let mut rng = Rng::new(3);
         let t0 = std::time::Instant::now();
@@ -72,9 +102,10 @@ fn main() -> anyhow::Result<()> {
         let wall = t0.elapsed().as_secs_f64();
         let (stats, sim) = coord.stats()?;
         let summary = lat.summary();
+        let host_kind = if backend.is_native() { "measured" } else { "modeled" };
         println!(
-            "bench e2e_serving/{name:24} {:8.1} tok/s  occupancy {:.2}  {}  \
-             modeled-OASIS {:.2} ms  modeled-host[{}] {:.2} ms",
+            "bench e2e_serving/{name:28} {:8.1} tok/s  occupancy {:.2}  {}  \
+             modeled-OASIS {:.2} ms  {host_kind}-host[{}] {:.2} ms",
             tokens as f64 / wall,
             stats.mean_occupancy(),
             summary,
@@ -84,8 +115,9 @@ fn main() -> anyhow::Result<()> {
         );
         // one JSON row of measured per-token wall clock (mean == p50 == min:
         // only the aggregate is observable here), and a separate row for the
-        // modeled host-datapath per-token cost so the two trajectories stay
-        // semantically distinct in BENCH_e2e.json
+        // host-datapath per-token cost — measured for native backends,
+        // modeled for PJRT — so the two trajectories stay semantically
+        // distinct in BENCH_e2e.json
         let tok_ns = wall * 1e9 / (tokens.max(1) as f64);
         BenchResult {
             name: format!("e2e_serving/{name}"),
@@ -98,7 +130,7 @@ fn main() -> anyhow::Result<()> {
         .append_json(&json);
         let host_ns = stats.host_waq_s * 1e9 / (tokens.max(1) as f64);
         BenchResult {
-            name: format!("e2e_serving/{name}/modeled-host"),
+            name: format!("e2e_serving/{name}/{host_kind}-host"),
             iters: tokens as u64,
             mean_ns: host_ns,
             p50_ns: host_ns,

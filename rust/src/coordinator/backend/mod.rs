@@ -1,0 +1,258 @@
+//! The decode-backend API: the narrow trait the serving engine drives.
+//!
+//! `Engine` owns the *orchestration* of continuous batching — admission,
+//! KV slot lifecycle, sampling, stats — and delegates the whole per-step
+//! *compute* to a [`DecodeBackend`]: `prefill(prompt)` produces the first
+//! token's logits plus the request's KV cache pair, `decode(tokens,
+//! positions, ...)` runs one batched decode step over all slots. Every
+//! call also returns a [`StepCost`] so responses report modeled
+//! accelerator time/energy and the host software-datapath seconds
+//! regardless of which engine executed.
+//!
+//! Two implementations ship:
+//!   * [`PjrtBackend`] — the AOT-artifact path: decode runs the compiled
+//!     `prefill`/`decode_step` HLO modules through the PJRT runtime, and
+//!     the WAQ backend choice only drives a modeled host clock
+//!     (`baselines::cpu::CpuWaqModel`). Also provides a deterministic
+//!     artifact-contract stub for engine tests and offline benches.
+//!   * [`NativeWaqBackend`] — the paper's datapath, executed natively:
+//!     K-Means-quantized weights + per-linear Cartesian LUTs, online
+//!     activation quantization with Orizuru outlier detection feeding the
+//!     error-compensation branch, batched through the packed/tiled WAQ
+//!     LUT-GEMM kernel. No PJRT involved; its host seconds are measured,
+//!     not modeled.
+//!
+//! Future backends (sharded, speculative, KV-quantized) target this trait
+//! instead of the engine internals.
+
+mod native;
+mod pjrt;
+
+pub use native::{NativeCfg, NativeWaqBackend};
+pub use pjrt::PjrtBackend;
+
+use anyhow::Result;
+
+use super::kv::KvManager;
+use crate::baselines::CpuWaqModel;
+use crate::gemm::WaqBackend;
+use crate::models::LlmSpec;
+use crate::runtime::artifacts::ModelCfg;
+use crate::runtime::HostTensor;
+use crate::sim::{self, HwConfig, OasisMode};
+
+/// Which execution engine owns the decode datapath, and which software WAQ
+/// GEMM kernel it runs (`native-*`, measured) or models (`pjrt`, the
+/// `CpuWaqModel` clock).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Decode through the AOT PJRT artifacts; the WAQ backend selects the
+    /// modeled host-datapath clock reported alongside.
+    Pjrt(WaqBackend),
+    /// Decode through the native K-Means WAQ LUT-GEMM datapath with the
+    /// selected software kernel; serving throughput is measured on it.
+    Native(WaqBackend),
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        BackendSpec::Pjrt(WaqBackend::default())
+    }
+}
+
+impl BackendSpec {
+    /// The software WAQ GEMM kernel this spec runs or models.
+    pub fn waq(&self) -> WaqBackend {
+        match self {
+            BackendSpec::Pjrt(b) | BackendSpec::Native(b) => *b,
+        }
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self, BackendSpec::Native(_))
+    }
+
+    /// Canonical CLI/stats name (`packed`, `native-packed`, ...).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSpec::Pjrt(b) => b.name(),
+            BackendSpec::Native(WaqBackend::Direct) => "native-direct",
+            BackendSpec::Native(WaqBackend::Histogram) => "native-histogram",
+            BackendSpec::Native(WaqBackend::Packed) => "native-packed",
+        }
+    }
+
+    /// Every accepted `--backend` value, derived from [`WaqBackend::ALL`]
+    /// (so new kernels surface in CLI error text automatically).
+    pub fn accepted() -> String {
+        WaqBackend::ALL
+            .iter()
+            .map(|b| b.name().to_string())
+            .chain(WaqBackend::ALL.iter().map(|b| format!("native-{b}")))
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+impl std::fmt::Display for BackendSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for BackendSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<BackendSpec, String> {
+        let parsed = match s.strip_prefix("native-") {
+            Some(rest) => rest.parse().map(BackendSpec::Native),
+            None => s.parse().map(BackendSpec::Pjrt),
+        };
+        parsed.map_err(|_| {
+            format!("unknown backend '{s}' (expected {})", BackendSpec::accepted())
+        })
+    }
+}
+
+/// Per-step cost report from a backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepCost {
+    /// Modeled OASIS accelerator seconds for the step (the sim clock).
+    pub accel_s: f64,
+    /// Modeled OASIS accelerator energy for the step.
+    pub accel_j: f64,
+    /// Host software WAQ-datapath seconds: measured wall-clock of the
+    /// WAQ LUT-GEMM linears (quantize + main branch + compensation) for
+    /// the native backend, the `CpuWaqModel` roofline for PJRT, zero for
+    /// prefill (the stat tracks decode steps).
+    pub host_waq_s: f64,
+}
+
+/// Result of a single-request prefill.
+pub struct PrefillOut {
+    /// Prompt length actually consumed (clamped to the context window).
+    pub plen: usize,
+    /// Logits at the last prompt position (length `vocab`).
+    pub logits: Vec<f32>,
+    /// KV cache pair for the request, shaped (L, 1, H, S, hd) — handed to
+    /// `KvManager::install_prefill`.
+    pub k_cache: HostTensor,
+    pub v_cache: HostTensor,
+    pub cost: StepCost,
+}
+
+/// The per-step datapath behind the serving engine. Implementations own
+/// compute; the engine owns slots, admission, sampling, and stats.
+pub trait DecodeBackend {
+    /// Which execution engine + WAQ kernel this is.
+    fn spec(&self) -> BackendSpec;
+
+    /// The model configuration being served (slot count, context, vocab).
+    fn model(&self) -> ModelCfg;
+
+    /// Run one request's prefill and return its first logits + KV pair.
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut>;
+
+    /// Run one batched decode step over all `decode_batch` slots.
+    /// `toks[b]`/`pos[b]` are the last generated token and its cache
+    /// position for slot `b`; `active[b]` marks live slots (inactive slots
+    /// may produce garbage logits the engine ignores). Reads and updates
+    /// the slot caches through `kv`. Returns row-major logits of shape
+    /// (decode_batch, vocab).
+    fn decode(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<f32>, StepCost)>;
+}
+
+/// Shared modeled-cost clock: both backends report the same OASIS
+/// simulator numbers for the same work, so responses stay comparable
+/// across execution engines; only `host_waq_s` semantics differ.
+pub(crate) struct CostModel {
+    hw: HwConfig,
+    spec: LlmSpec,
+    mode: OasisMode,
+    host: CpuWaqModel,
+}
+
+impl CostModel {
+    pub(crate) fn new(m: ModelCfg, mode: OasisMode, waq: WaqBackend) -> CostModel {
+        let spec = LlmSpec {
+            name: "served",
+            n_layers: m.n_layers,
+            d_model: m.d_model,
+            n_heads: m.n_heads,
+            n_kv_heads: m.n_heads,
+            d_ff: m.d_ff,
+            vocab: m.vocab,
+            gated_mlp: false,
+        };
+        CostModel { hw: HwConfig::default(), spec, mode, host: CpuWaqModel::host(waq) }
+    }
+
+    pub(crate) fn prefill(&self, plen: usize) -> StepCost {
+        let c = sim::llm::prefill_cost(&self.hw, &self.spec, self.mode, plen.max(1));
+        StepCost { accel_s: c.seconds, accel_j: c.energy_j, host_waq_s: 0.0 }
+    }
+
+    pub(crate) fn decode(&self, active_n: usize, mean_ctx: usize) -> StepCost {
+        let n = active_n.max(1);
+        let c = sim::decode_step_cost(&self.hw, &self.spec, self.mode, n, mean_ctx.max(1));
+        StepCost {
+            accel_s: c.seconds,
+            accel_j: c.energy_j,
+            host_waq_s: self.host.decode_step_seconds(&self.spec, n),
+        }
+    }
+}
+
+/// (active slot count, mean context length) of one decode step.
+pub(crate) fn batch_occupancy(pos: &[i32], active: &[bool]) -> (usize, usize) {
+    let mut n = 0usize;
+    let mut ctx = 0usize;
+    for (&p, &a) in pos.iter().zip(active) {
+        if a {
+            n += 1;
+            ctx += p as usize;
+        }
+    }
+    (n, ctx / n.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip_and_accepted_list_derive_from_all() {
+        for b in WaqBackend::ALL {
+            assert_eq!(b.name().parse::<BackendSpec>(), Ok(BackendSpec::Pjrt(b)));
+            let native = format!("native-{b}");
+            assert_eq!(native.parse::<BackendSpec>(), Ok(BackendSpec::Native(b)));
+            assert_eq!(native.parse::<BackendSpec>().unwrap().to_string(), native);
+            assert_eq!(BackendSpec::Native(b).waq(), b);
+            assert!(BackendSpec::Native(b).is_native());
+            assert!(!BackendSpec::Pjrt(b).is_native());
+        }
+        assert_eq!(
+            BackendSpec::accepted(),
+            "direct|histogram|packed|native-direct|native-histogram|native-packed"
+        );
+        let err = "tpu".parse::<BackendSpec>().unwrap_err();
+        assert!(err.contains("native-packed") && err.contains("histogram"), "{err}");
+        // an unknown native kernel is rejected too
+        assert!("native-tpu".parse::<BackendSpec>().is_err());
+        assert_eq!(BackendSpec::default(), BackendSpec::Pjrt(WaqBackend::Packed));
+    }
+
+    #[test]
+    fn batch_occupancy_counts_active_only() {
+        let pos = [4, 0, 8, 2];
+        let act = [true, false, true, false];
+        assert_eq!(batch_occupancy(&pos, &act), (2, 6));
+        assert_eq!(batch_occupancy(&pos, &[false; 4]), (0, 0));
+    }
+}

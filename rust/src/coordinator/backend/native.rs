@@ -1,0 +1,581 @@
+//! The native K-Means WAQ decode backend: the paper's datapath as a real,
+//! servable execution engine — no PJRT, no artifacts, measured throughput.
+//!
+//! Construction quantizes a `ParamSet` end to end:
+//!   1. a short full-precision calibration forward over seeded random
+//!      tokens records the pre-GEMM activations of every linear (the
+//!      offline calibration the paper's scheme assumes);
+//!   2. each linear gets a K-Means weight quantization
+//!      (`quant::quantize_weights`), an activation codebook learned from
+//!      its calibration rows (`quant::learn_act_codebook`), and the
+//!      Cartesian-product LUT of both codebooks;
+//!   3. weights are stored in the form the configured [`WaqBackend`]
+//!      streams (nibble-packed for `Packed`).
+//!
+//! Serving then runs every linear through the dual-branch WAQ LUT-GEMM:
+//! online per-token quantization with Orizuru outlier detection
+//! (`orizuru::detect_outliers`), the main branch batched across slots via
+//! `WaqGemm::execute_batch` (the packed/tiled/threaded kernel), and the
+//! detected outliers routed through the error-compensation branch
+//! (`gemm::compensate`). Embeddings, norms, attention, and the tied LM
+//! head stay FP32, matching the paper (only GEMM layers are quantized).
+//!
+//! The packed and direct kernels are bit-exact and the compensation math
+//! is identical across weight forms, so `native-packed` and
+//! `native-direct` produce bit-identical logits. `native-histogram`
+//! groups float accumulation by LUT entry instead of by k, so its logits
+//! agree only to float-reassociation tolerance (see
+//! `gemm::waq::execute_histogram`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{batch_occupancy, BackendSpec, CostModel, DecodeBackend, PrefillOut, StepCost};
+use crate::coordinator::kv::KvManager;
+use crate::gemm::{compensate, compensate_packed, CartesianLut, WaqBackend, WaqGemm};
+use crate::orizuru;
+use crate::quant::{self, Codebook, OutlierCfg, QuantToken};
+use crate::runtime::artifacts::ModelCfg;
+use crate::runtime::{HostTensor, Manifest, ParamSet};
+use crate::sim::OasisMode;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Quantization configuration of the native backend.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeCfg {
+    /// Which software WAQ GEMM kernel executes the main branch.
+    pub waq: WaqBackend,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub outlier: OutlierCfg,
+    /// Modeled-clock schedule: look-ahead OASIS (true) vs critical-path
+    /// OASIS-C (false). Affects reported costs only — the native datapath
+    /// always executes the look-ahead dataflow.
+    pub lookahead: bool,
+    /// Calibration sequence length (clamped to [2, seq_len]).
+    pub calib_tokens: usize,
+    pub calib_seed: u64,
+}
+
+impl Default for NativeCfg {
+    fn default() -> Self {
+        NativeCfg {
+            waq: WaqBackend::default(),
+            w_bits: 4,
+            a_bits: 4,
+            outlier: OutlierCfg::default(),
+            lookahead: true,
+            calib_tokens: 24,
+            calib_seed: 0xCA11B,
+        }
+    }
+}
+
+impl NativeCfg {
+    /// Derive the quantization knobs from the engine's OASIS mode so the
+    /// native datapath and the modeled clock describe the same scheme.
+    pub fn from_mode(waq: WaqBackend, mode: OasisMode) -> NativeCfg {
+        NativeCfg {
+            waq,
+            a_bits: mode.n_a_bits,
+            outlier: OutlierCfg { total_frac: mode.outlier_frac },
+            lookahead: mode.lookahead,
+            ..NativeCfg::default()
+        }
+    }
+}
+
+/// One quantized linear: prepared WAQ GEMM + its activation codebook.
+struct QuantLinear {
+    gemm: WaqGemm,
+    cb: Codebook,
+    k_per_side: usize,
+}
+
+impl QuantLinear {
+    fn build(w: &Matrix, calib: &[Vec<f32>], cfg: &NativeCfg) -> QuantLinear {
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let cb = quant::learn_act_codebook(&refs, None, cfg.a_bits, cfg.outlier);
+        let qw = quant::quantize_weights(w, cfg.w_bits);
+        let lut = CartesianLut::build(&cb, &qw.codebook);
+        QuantLinear {
+            k_per_side: cfg.outlier.k_per_side(w.rows),
+            gemm: WaqGemm::new(qw, lut, cfg.waq),
+            cb,
+        }
+    }
+
+    /// Dual-branch forward for a batch of token rows: Orizuru detection,
+    /// online K-Means quantization, main-branch LUT-GEMM across the whole
+    /// batch, then per-token outlier compensation.
+    fn forward(&self, xs: &[Vec<f32>], outliers_seen: &AtomicU64) -> Vec<Vec<f32>> {
+        let toks: Vec<QuantToken> = xs
+            .iter()
+            .map(|x| {
+                let outs = orizuru::detect_outliers(x, self.k_per_side);
+                outliers_seen.fetch_add(outs.len() as u64, Ordering::Relaxed);
+                quant::quantize_token_with_outliers(x, &self.cb, &outs)
+            })
+            .collect();
+        let mut out = self.gemm.execute_batch(&toks);
+        for (o, t) in out.iter_mut().zip(&toks) {
+            match self.gemm.packed_weights() {
+                Some(p) => compensate_packed(o, t, p),
+                None => compensate(o, t, self.gemm.unpacked_weights().expect("weights")),
+            }
+        }
+        out
+    }
+}
+
+struct Layer {
+    ln1: Vec<f32>,
+    ln2: Vec<f32>,
+    qkv: QuantLinear,
+    attn_out: QuantLinear,
+    mlp_up: QuantLinear,
+    mlp_down: QuantLinear,
+}
+
+pub struct NativeWaqBackend {
+    model: ModelCfg,
+    waq: WaqBackend,
+    cost: CostModel,
+    tok_emb: Matrix,
+    pos_emb: Matrix,
+    lnf: Vec<f32>,
+    layers: Vec<Layer>,
+    /// Total outlier channels routed through the compensation branch.
+    outliers_seen: Arc<AtomicU64>,
+}
+
+impl NativeWaqBackend {
+    /// Quantize `params` into a servable native model. Only the manifest's
+    /// model config and parameter order are used — no artifacts on disk.
+    pub fn new(manifest: &Manifest, params: &ParamSet, cfg: NativeCfg) -> Result<NativeWaqBackend> {
+        let m = manifest.model;
+        if m.n_heads * m.head_dim != m.d_model {
+            bail!("inconsistent model config: {} heads x {} != d_model {}",
+                  m.n_heads, m.head_dim, m.d_model);
+        }
+        let get_mat = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
+            let t = param(manifest, params, name, &[rows, cols])?;
+            Ok(Matrix::from_vec(rows, cols, t.as_f32()?.to_vec()))
+        };
+        let get_vec = |name: &str, n: usize| -> Result<Vec<f32>> {
+            Ok(param(manifest, params, name, &[n])?.as_f32()?.to_vec())
+        };
+
+        let (d, ff) = (m.d_model, m.d_ff);
+        let tok_emb = get_mat("tok_emb", m.vocab, d)?;
+        let pos_emb = get_mat("pos_emb", m.seq_len, d)?;
+        let lnf = get_vec("lnf", d)?;
+        struct FpLayer {
+            ln1: Vec<f32>,
+            ln2: Vec<f32>,
+            qkv: Matrix,
+            attn_out: Matrix,
+            mlp_up: Matrix,
+            mlp_down: Matrix,
+        }
+        let fp_layers = (0..m.n_layers)
+            .map(|l| {
+                Ok(FpLayer {
+                    ln1: get_vec(&format!("l{l}.ln1"), d)?,
+                    ln2: get_vec(&format!("l{l}.ln2"), d)?,
+                    qkv: get_mat(&format!("l{l}.qkv"), d, 3 * d)?,
+                    attn_out: get_mat(&format!("l{l}.attn_out"), d, d)?,
+                    mlp_up: get_mat(&format!("l{l}.mlp_up"), d, ff)?,
+                    mlp_down: get_mat(&format!("l{l}.mlp_down"), ff, d)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        // --- FP calibration forward: pre-GEMM activations per linear ----
+        let n = cfg.calib_tokens.clamp(2, m.seq_len);
+        let mut rng = Rng::new(cfg.calib_seed);
+        let mut x = Matrix::zeros(n, d);
+        for t in 0..n {
+            let tok = rng.below(m.vocab);
+            embed_into(x.row_mut(t), &tok_emb, &pos_emb, tok, t);
+        }
+        let mut taps: Vec<[Vec<Vec<f32>>; 4]> = Vec::with_capacity(m.n_layers);
+        for fl in &fp_layers {
+            let xn = Matrix::from_vec(n, d, rms_rows(&x, &fl.ln1).concat());
+            let qkv = xn.matmul(&fl.qkv);
+            let att = causal_attention(&qkv, m.n_heads, m.head_dim);
+            add_matrix(&mut x, &att.matmul(&fl.attn_out));
+            let xn2 = Matrix::from_vec(n, d, rms_rows(&x, &fl.ln2).concat());
+            let mut hmid = xn2.matmul(&fl.mlp_up);
+            for v in hmid.data.iter_mut() {
+                *v = gelu(*v);
+            }
+            add_matrix(&mut x, &hmid.matmul(&fl.mlp_down));
+            taps.push([mat_rows(&xn), mat_rows(&att), mat_rows(&xn2), mat_rows(&hmid)]);
+        }
+
+        // --- quantize every linear against its calibration rows ---------
+        let layers: Vec<Layer> = fp_layers
+            .into_iter()
+            .zip(&taps)
+            .map(|(fl, t)| Layer {
+                qkv: QuantLinear::build(&fl.qkv, &t[0], &cfg),
+                attn_out: QuantLinear::build(&fl.attn_out, &t[1], &cfg),
+                mlp_up: QuantLinear::build(&fl.mlp_up, &t[2], &cfg),
+                mlp_down: QuantLinear::build(&fl.mlp_down, &t[3], &cfg),
+                ln1: fl.ln1,
+                ln2: fl.ln2,
+            })
+            .collect();
+
+        let mode = OasisMode {
+            n_a_bits: cfg.a_bits,
+            outlier_frac: cfg.outlier.total_frac,
+            lookahead: cfg.lookahead,
+        };
+        Ok(NativeWaqBackend {
+            model: m,
+            waq: cfg.waq,
+            cost: CostModel::new(m, mode, cfg.waq),
+            tok_emb,
+            pos_emb,
+            lnf,
+            layers,
+            outliers_seen: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// Handle to the running count of outlier channels routed through the
+    /// compensation branch (clone before boxing into an engine).
+    pub fn outlier_counter(&self) -> Arc<AtomicU64> {
+        self.outliers_seen.clone()
+    }
+
+    /// Tied-embedding LM head on one final-norm row (kept FP32).
+    fn head_logits(&self, hn: &[f32]) -> Vec<f32> {
+        (0..self.model.vocab)
+            .map(|v| dot(hn, self.tok_emb.row(v)))
+            .collect()
+    }
+
+    /// Run one quantized linear and charge its wall-clock to `waq_ns` —
+    /// the measured WAQ-datapath seconds exclude the FP attention/norm/
+    /// LM-head work, so they stay comparable to `CpuWaqModel`'s modeled
+    /// GEMM-only roofline.
+    fn quant_forward(
+        &self,
+        lin: &QuantLinear,
+        xs: &[Vec<f32>],
+        waq_ns: &mut u64,
+    ) -> Vec<Vec<f32>> {
+        let t0 = Instant::now();
+        let out = lin.forward(xs, &self.outliers_seen);
+        *waq_ns += t0.elapsed().as_nanos() as u64;
+        out
+    }
+}
+
+impl DecodeBackend for NativeWaqBackend {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::Native(self.waq)
+    }
+
+    fn model(&self) -> ModelCfg {
+        self.model
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+        let m = self.model;
+        let (h, hd, d, s) = (m.n_heads, m.head_dim, m.d_model, m.seq_len);
+        // clamp into the context window; an empty prompt degrades to the
+        // pad token (mirrors the PJRT backend)
+        let plen = prompt.len().clamp(1, s - 1);
+        let n = plen;
+        let mut x = Matrix::zeros(n, d);
+        for t in 0..n {
+            let tok = prompt.get(t).map_or(0, |&v| v.rem_euclid(m.vocab as i32)) as usize;
+            embed_into(x.row_mut(t), &self.tok_emb, &self.pos_emb, tok, t);
+        }
+        let mut kc = vec![0f32; m.n_layers * h * s * hd];
+        let mut vc = vec![0f32; m.n_layers * h * s * hd];
+        for (l, layer) in self.layers.iter().enumerate() {
+            let qkv_rows = layer.qkv.forward(&rms_rows(&x, &layer.ln1), &self.outliers_seen);
+            let qkv = Matrix::from_vec(n, 3 * d, qkv_rows.concat());
+            for t in 0..n {
+                let row = qkv.row(t);
+                for head in 0..h {
+                    let base = (l * h + head) * s * hd + t * hd;
+                    kc[base..base + hd]
+                        .copy_from_slice(&row[d + head * hd..d + (head + 1) * hd]);
+                    vc[base..base + hd]
+                        .copy_from_slice(&row[2 * d + head * hd..2 * d + (head + 1) * hd]);
+                }
+            }
+            let att = causal_attention(&qkv, h, hd);
+            let proj = layer.attn_out.forward(&mat_rows(&att), &self.outliers_seen);
+            add_rows(&mut x, &proj);
+            let mut up = layer.mlp_up.forward(&rms_rows(&x, &layer.ln2), &self.outliers_seen);
+            for r in up.iter_mut() {
+                for v in r.iter_mut() {
+                    *v = gelu(*v);
+                }
+            }
+            let down = layer.mlp_down.forward(&up, &self.outliers_seen);
+            add_rows(&mut x, &down);
+        }
+        let mut hn = vec![0f32; d];
+        rms_into(x.row(n - 1), &self.lnf, &mut hn);
+        let logits = self.head_logits(&hn);
+        let shape = [m.n_layers, 1, h, s, hd];
+        Ok(PrefillOut {
+            plen,
+            logits,
+            k_cache: HostTensor::f32(kc, &shape),
+            v_cache: HostTensor::f32(vc, &shape),
+            cost: self.cost.prefill(plen),
+        })
+    }
+
+    fn decode(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<f32>, StepCost)> {
+        let m = self.model;
+        let b = m.decode_batch;
+        if toks.len() != b || pos.len() != b || active.len() != b {
+            bail!("decode arity mismatch: expected {b} slots");
+        }
+        // measured WAQ-datapath nanoseconds (LUT-GEMM linears only)
+        let mut waq_ns = 0u64;
+        let (h, hd, d, s) = (m.n_heads, m.head_dim, m.d_model, m.seq_len);
+        let slots: Vec<usize> = (0..b).filter(|&i| active[i]).collect();
+        let mut out = vec![0f32; b * m.vocab];
+        if slots.is_empty() {
+            let mut cost = self.cost.decode(0, 0);
+            cost.host_waq_s = 0.0;
+            return Ok((out, cost));
+        }
+        let mut xs: Vec<Vec<f32>> = slots
+            .iter()
+            .map(|&i| {
+                let tok = toks[i].rem_euclid(m.vocab as i32) as usize;
+                let p = (pos[i] as usize).min(s - 1);
+                let mut row = vec![0f32; d];
+                embed_into(&mut row, &self.tok_emb, &self.pos_emb, tok, p);
+                row
+            })
+            .collect();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let xn = rms_vecs(&xs, &layer.ln1);
+            let qkv = self.quant_forward(&layer.qkv, &xn, &mut waq_ns);
+            let mut att_rows: Vec<Vec<f32>> = Vec::with_capacity(slots.len());
+            for (bi, &slot) in slots.iter().enumerate() {
+                let p = (pos[slot] as usize).min(s - 1);
+                let row = &qkv[bi];
+                // append this token's K/V at its cache position
+                for head in 0..h {
+                    let base = ((l * b + slot) * h + head) * s * hd + p * hd;
+                    kv.k[base..base + hd]
+                        .copy_from_slice(&row[d + head * hd..d + (head + 1) * hd]);
+                    kv.v[base..base + hd]
+                        .copy_from_slice(&row[2 * d + head * hd..2 * d + (head + 1) * hd]);
+                }
+                // causal attention over cache positions 0..=p
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut att = vec![0f32; d];
+                let mut scores = vec![0f32; p + 1];
+                for head in 0..h {
+                    let q = &row[head * hd..(head + 1) * hd];
+                    let kbase = ((l * b + slot) * h + head) * s * hd;
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (sp, sc) in scores.iter_mut().enumerate() {
+                        *sc = dot(q, &kv.k[kbase + sp * hd..kbase + (sp + 1) * hd]) * scale;
+                        maxv = maxv.max(*sc);
+                    }
+                    let mut denom = 0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - maxv).exp();
+                        denom += *sc;
+                    }
+                    let inv = 1.0 / denom;
+                    let orow = &mut att[head * hd..(head + 1) * hd];
+                    for (sp, &w) in scores.iter().enumerate() {
+                        let v = &kv.v[kbase + sp * hd..kbase + (sp + 1) * hd];
+                        let wn = w * inv;
+                        for (o, &vv) in orow.iter_mut().zip(v) {
+                            *o += wn * vv;
+                        }
+                    }
+                }
+                att_rows.push(att);
+            }
+            let proj = self.quant_forward(&layer.attn_out, &att_rows, &mut waq_ns);
+            for (x, pr) in xs.iter_mut().zip(&proj) {
+                add_into(x, pr);
+            }
+            let xn2 = rms_vecs(&xs, &layer.ln2);
+            let mut up = self.quant_forward(&layer.mlp_up, &xn2, &mut waq_ns);
+            for r in up.iter_mut() {
+                for v in r.iter_mut() {
+                    *v = gelu(*v);
+                }
+            }
+            let down = self.quant_forward(&layer.mlp_down, &up, &mut waq_ns);
+            for (x, dn) in xs.iter_mut().zip(&down) {
+                add_into(x, dn);
+            }
+        }
+        let mut hn = vec![0f32; d];
+        for (bi, &slot) in slots.iter().enumerate() {
+            rms_into(&xs[bi], &self.lnf, &mut hn);
+            out[slot * m.vocab..(slot + 1) * m.vocab]
+                .copy_from_slice(&self.head_logits(&hn));
+        }
+        let (active_n, mean_ctx) = batch_occupancy(pos, active);
+        let mut cost = self.cost.decode(active_n, mean_ctx);
+        // measured, not modeled: wall-clock of the WAQ LUT-GEMM linears
+        // (quantize + main branch + compensation), the datapath the
+        // CpuWaqModel roofline models for the PJRT backend
+        cost.host_waq_s = waq_ns as f64 * 1e-9;
+        Ok((out, cost))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FP32 building blocks shared by calibration, prefill, and decode
+// ---------------------------------------------------------------------------
+
+/// Positional parameter lookup with shape validation.
+fn param<'a>(
+    manifest: &Manifest,
+    params: &'a ParamSet,
+    name: &str,
+    shape: &[usize],
+) -> Result<&'a HostTensor> {
+    let i = ParamSet::index_of(manifest, name)
+        .ok_or_else(|| anyhow!("param '{name}' missing from manifest"))?;
+    let t = params
+        .tensors
+        .get(i)
+        .ok_or_else(|| anyhow!("param '{name}' missing from ParamSet"))?;
+    if t.shape() != shape {
+        bail!("param '{name}': expected shape {shape:?}, got {:?}", t.shape());
+    }
+    Ok(t)
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// out = tok_emb[tok] + pos_emb[pos]
+fn embed_into(out: &mut [f32], tok_emb: &Matrix, pos_emb: &Matrix, tok: usize, pos: usize) {
+    for ((o, &e), &pe) in out.iter_mut().zip(tok_emb.row(tok)).zip(pos_emb.row(pos)) {
+        *o = e + pe;
+    }
+}
+
+/// RMSNorm one row: out = x * g / sqrt(mean(x^2) + 1e-5).
+fn rms_into(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let ms = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for ((o, &v), &gv) in out.iter_mut().zip(x).zip(g) {
+        *o = v * gv * inv;
+    }
+}
+
+fn rms_rows(x: &Matrix, g: &[f32]) -> Vec<Vec<f32>> {
+    (0..x.rows)
+        .map(|r| {
+            let mut o = vec![0f32; x.cols];
+            rms_into(x.row(r), g, &mut o);
+            o
+        })
+        .collect()
+}
+
+fn rms_vecs(xs: &[Vec<f32>], g: &[f32]) -> Vec<Vec<f32>> {
+    xs.iter()
+        .map(|x| {
+            let mut o = vec![0f32; x.len()];
+            rms_into(x, g, &mut o);
+            o
+        })
+        .collect()
+}
+
+/// tanh-approximate GELU (what `jax.nn.gelu` lowers by default, keeping
+/// the native forward aligned with the AOT artifacts).
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+fn add_into(x: &mut [f32], y: &[f32]) {
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+fn add_rows(x: &mut Matrix, rows: &[Vec<f32>]) {
+    let cols = x.cols;
+    for (xr, r) in x.data.chunks_exact_mut(cols).zip(rows) {
+        add_into(xr, r);
+    }
+}
+
+fn add_matrix(x: &mut Matrix, y: &Matrix) {
+    for (a, &b) in x.data.iter_mut().zip(&y.data) {
+        *a += b;
+    }
+}
+
+fn mat_rows(m: &Matrix) -> Vec<Vec<f32>> {
+    (0..m.rows).map(|r| m.row(r).to_vec()).collect()
+}
+
+/// Full-sequence causal attention over a fused (n, 3*d) qkv matrix laid
+/// out [q | k | v] per row, d = h * hd. Returns the (n, d) context.
+fn causal_attention(qkv: &Matrix, h: usize, hd: usize) -> Matrix {
+    let n = qkv.rows;
+    let d = h * hd;
+    debug_assert_eq!(qkv.cols, 3 * d);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Matrix::zeros(n, d);
+    let mut scores: Vec<f32> = Vec::with_capacity(n);
+    for t in 0..n {
+        for head in 0..h {
+            let q = &qkv.row(t)[head * hd..(head + 1) * hd];
+            scores.clear();
+            let mut maxv = f32::NEG_INFINITY;
+            for sp in 0..=t {
+                let k = &qkv.row(sp)[d + head * hd..d + (head + 1) * hd];
+                let sc = dot(q, k) * scale;
+                maxv = maxv.max(sc);
+                scores.push(sc);
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - maxv).exp();
+                denom += *sc;
+            }
+            let inv = 1.0 / denom;
+            let orow = &mut out.row_mut(t)[head * hd..(head + 1) * hd];
+            for (sp, &w) in scores.iter().enumerate() {
+                let v = &qkv.row(sp)[2 * d + head * hd..2 * d + (head + 1) * hd];
+                let wn = w * inv;
+                for (o, &vv) in orow.iter_mut().zip(v) {
+                    *o += wn * vv;
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,174 @@
+//! The PJRT decode backend: a thin wrapper over the AOT-artifact flow the
+//! engine used to hardwire — compiled `prefill`/`decode_step` HLO modules,
+//! device-resident weight buffers uploaded once, KV caches round-tripped
+//! per step. The configured WAQ kernel does not execute here; it selects
+//! the modeled host-datapath clock (`CpuWaqModel`) reported per step.
+//!
+//! [`PjrtBackend::stub`] builds an artifact-contract test double instead:
+//! deterministic single-peaked pseudo-logits and zero caches, no `Runtime`
+//! at all. It exists so engine bookkeeping (slots, admission, finish
+//! reasons, stats) is exercisable in offline builds where the `pjrt`
+//! feature is absent, and is the "PJRT side" of the backend-parity tests.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{batch_occupancy, BackendSpec, CostModel, DecodeBackend, PrefillOut, StepCost};
+use crate::coordinator::kv::KvManager;
+use crate::gemm::WaqBackend;
+use crate::runtime::artifacts::ModelCfg;
+use crate::runtime::{DeviceBuffer, HostTensor, ParamSet, Runtime};
+use crate::sim::OasisMode;
+
+/// The real artifact executor (boxed to keep the enum variants balanced).
+struct ArtifactExec {
+    rt: Runtime,
+    weight_buffers: Vec<DeviceBuffer>,
+}
+
+enum Exec {
+    Artifacts(Box<ArtifactExec>),
+    Stub,
+}
+
+pub struct PjrtBackend {
+    model: ModelCfg,
+    waq: WaqBackend,
+    cost: CostModel,
+    exec: Exec,
+}
+
+impl PjrtBackend {
+    /// Wrap a runtime: compile the serving artifacts up front and upload
+    /// the parameter tensors once (the per-step hot path reuses them).
+    pub fn new(
+        mut rt: Runtime,
+        params: &ParamSet,
+        waq: WaqBackend,
+        mode: OasisMode,
+    ) -> Result<PjrtBackend> {
+        let model = rt.manifest.model;
+        rt.load("decode_step")?;
+        rt.load("prefill")?;
+        let weight_buffers = params
+            .tensors
+            .iter()
+            .map(|t| rt.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PjrtBackend {
+            model,
+            waq,
+            cost: CostModel::new(model, mode, waq),
+            exec: Exec::Artifacts(Box::new(ArtifactExec { rt, weight_buffers })),
+        })
+    }
+
+    /// The artifact-contract test double: same shapes, costs, and engine
+    /// bookkeeping as the real path, deterministic pseudo-logits, zero KV
+    /// caches, and no `Runtime` (so it works in builds without the `pjrt`
+    /// feature).
+    pub fn stub(model: ModelCfg, waq: WaqBackend, mode: OasisMode) -> PjrtBackend {
+        PjrtBackend { model, waq, cost: CostModel::new(model, mode, waq), exec: Exec::Stub }
+    }
+}
+
+/// Deterministic single-peaked logits: argmax at a token-and-position
+/// dependent channel, so greedy decode through the stub is reproducible.
+fn stub_logits(tok: i32, pos: i32, vocab: usize) -> Vec<f32> {
+    let peak = (tok as i64 * 7 + pos as i64 * 13).rem_euclid(vocab as i64) as usize;
+    (0..vocab)
+        .map(|v| if v == peak { 1.0 } else { -1.0 - (v as f32) / vocab as f32 })
+        .collect()
+}
+
+impl DecodeBackend for PjrtBackend {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::Pjrt(self.waq)
+    }
+
+    fn model(&self) -> ModelCfg {
+        self.model
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+        let m = self.model;
+        // clamp into the context window; an empty prompt degrades to the
+        // pad token instead of panicking the engine thread
+        let plen = prompt.len().clamp(1, m.seq_len - 1);
+        let mut padded = vec![0i32; m.seq_len];
+        for (dst, &src) in padded.iter_mut().zip(prompt.iter().take(plen)) {
+            *dst = src;
+        }
+        let (logits, k_cache, v_cache) = match &mut self.exec {
+            Exec::Artifacts(a) => {
+                let exe = a.rt.load("prefill")?;
+                let mut bufs: Vec<&DeviceBuffer> = a.weight_buffers.iter().collect();
+                let ptoks = a.rt.upload(&HostTensor::i32(padded, &[1, m.seq_len]))?;
+                let plen_b = a.rt.upload(&HostTensor::scalar_i32(plen as i32))?;
+                bufs.push(&ptoks);
+                bufs.push(&plen_b);
+                let mut out = exe.run_buffers(&bufs)?;
+                if out.len() != 3 {
+                    bail!("prefill artifact returned {} outputs, expected 3", out.len());
+                }
+                let v = out.pop().unwrap();
+                let k = out.pop().unwrap();
+                let logits = out.pop().unwrap().into_f32()?;
+                (logits, k, v)
+            }
+            Exec::Stub => {
+                let last = padded[plen - 1];
+                let shape = [m.n_layers, 1, m.n_heads, m.seq_len, m.head_dim];
+                (
+                    stub_logits(last, plen as i32 - 1, m.vocab),
+                    HostTensor::zeros(&shape),
+                    HostTensor::zeros(&shape),
+                )
+            }
+        };
+        Ok(PrefillOut { plen, logits, k_cache, v_cache, cost: self.cost.prefill(plen) })
+    }
+
+    fn decode(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<f32>, StepCost)> {
+        let m = self.model;
+        let b = m.decode_batch;
+        let logits = match &mut self.exec {
+            Exec::Artifacts(a) => {
+                let exe = a.rt.load("decode_step")?;
+                let mut bufs: Vec<&DeviceBuffer> = a.weight_buffers.iter().collect();
+                let kb = a.rt.upload(&kv.k_tensor())?;
+                let vb = a.rt.upload(&kv.v_tensor())?;
+                let tb = a.rt.upload(&HostTensor::i32(toks.to_vec(), &[b]))?;
+                let pb = a.rt.upload(&HostTensor::i32(pos.to_vec(), &[b]))?;
+                bufs.push(&kb);
+                bufs.push(&vb);
+                bufs.push(&tb);
+                bufs.push(&pb);
+                let out = exe.run_buffers(&bufs)?;
+                if out.len() != 3 {
+                    bail!("decode_step artifact returned {} outputs, expected 3", out.len());
+                }
+                kv.update_from_step(&out[1], &out[2]).map_err(|e| anyhow!(e))?;
+                out[0].as_f32()?.to_vec()
+            }
+            Exec::Stub => {
+                let mut logits = vec![0f32; b * m.vocab];
+                for slot in 0..b {
+                    if active[slot] {
+                        let row = stub_logits(toks[slot], pos[slot], m.vocab);
+                        logits[slot * m.vocab..(slot + 1) * m.vocab]
+                            .copy_from_slice(&row);
+                    }
+                }
+                logits
+            }
+        };
+        let (active_n, mean_ctx) = batch_occupancy(pos, active);
+        Ok((logits, self.cost.decode(active_n, mean_ctx)))
+    }
+}

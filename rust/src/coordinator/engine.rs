@@ -1,26 +1,28 @@
-//! The serving engine: continuous-batched decode over the PJRT runtime.
+//! The serving engine: continuous-batched decode over a pluggable
+//! [`DecodeBackend`].
 //!
-//! Owns the Runtime (not Send — the engine lives on one thread), the
-//! device-resident weight buffers (uploaded once), the KV slot manager and
-//! the batcher. Each `step()`:
-//!   1. admits queued requests into free slots (prefill artifact),
-//!   2. runs one `decode_step` for all slots (inactive slots padded),
+//! The engine owns orchestration only — the KV slot manager, the batcher,
+//! sampling, and stats. All per-step compute lives behind the
+//! `coordinator::backend::DecodeBackend` trait: `PjrtBackend` (AOT
+//! artifacts) or `NativeWaqBackend` (the K-Means WAQ LUT-GEMM datapath,
+//! executed natively). Each `step()`:
+//!   1. admits queued requests into free slots (backend prefill),
+//!   2. runs one backend decode step for all slots (inactive slots padded),
 //!   3. samples next tokens, advances slots, completes finished requests.
-//! A simulated-OASIS clock advances alongside, so every response reports
-//! both measured CPU latency and modeled accelerator latency/energy.
+//! A simulated-OASIS clock advances alongside from the backend's
+//! `StepCost` reports, so every response carries both measured
+//! wall-clock and modeled accelerator latency/energy.
 
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::backend::{BackendSpec, DecodeBackend};
 use super::batcher::{AdmitPolicy, Batcher};
 use super::kv::KvManager;
 use super::request::{EngineStats, FinishReason, Request, Response};
-use crate::baselines::CpuWaqModel;
 use crate::gemm::WaqBackend;
-use crate::models::LlmSpec;
-use crate::runtime::{DeviceBuffer, HostTensor, ParamSet, Runtime};
-use crate::sim::{self, HwConfig, OasisMode};
+use crate::sim::OasisMode;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -28,11 +30,12 @@ pub struct EngineConfig {
     pub policy: AdmitPolicy,
     pub seed: u64,
     pub mode: OasisMode,
-    /// Which software WAQ GEMM backend the host-datapath *model* assumes
-    /// (`baselines::cpu::CpuWaqModel`, reported as `stats.host_waq_s`).
-    /// Decode compute itself always runs the PJRT artifact; this knob does
-    /// not change measured serving throughput.
-    pub waq_backend: WaqBackend,
+    /// Which execution engine serves decode compute, and which software
+    /// WAQ GEMM kernel it runs (`native-*`: measured on the native K-Means
+    /// WAQ datapath) or models (`direct|histogram|packed`: PJRT artifacts
+    /// with a `CpuWaqModel` host clock). This is a real datapath switch:
+    /// `native-*` serving throughput is measured on the LUT-GEMM kernels.
+    pub backend: BackendSpec,
 }
 
 impl Default for EngineConfig {
@@ -41,7 +44,7 @@ impl Default for EngineConfig {
             policy: AdmitPolicy::OnePerStep,
             seed: 0xE116,
             mode: OasisMode::a4(),
-            waq_backend: WaqBackend::default(),
+            backend: BackendSpec::default(),
         }
     }
 }
@@ -50,7 +53,10 @@ struct ActiveReq {
     req: Request,
     generated: Vec<i32>,
     first_token_at: Option<Instant>,
+    /// sim-clock marks at admission, so responses report per-request
+    /// deltas (not the engine's running totals)
     modeled_start_s: f64,
+    modeled_start_j: f64,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -60,69 +66,44 @@ pub struct SimTotals {
 }
 
 pub struct Engine {
-    rt: Runtime,
-    params_host: Vec<HostTensor>,
-    weight_buffers: Vec<DeviceBuffer>,
+    backend: Box<dyn DecodeBackend>,
     kv: KvManager,
     batcher: Batcher,
     active: Vec<Option<ActiveReq>>,
     pub stats: EngineStats,
     pub sim: SimTotals,
-    hw: HwConfig,
-    host_model: CpuWaqModel,
-    spec: LlmSpec,
-    mode: OasisMode,
     rng: Rng,
 }
 
 impl Engine {
-    pub fn new(mut rt: Runtime, params: ParamSet, cfg: EngineConfig) -> Result<Engine> {
-        let m = rt.manifest.model;
-        // compile the serving artifacts up front
-        rt.load("decode_step")?;
-        rt.load("prefill")?;
-        let weight_buffers = params
-            .tensors
-            .iter()
-            .map(|t| rt.upload(t))
-            .collect::<Result<Vec<_>>>()?;
-        let spec = LlmSpec {
-            name: "served",
-            n_layers: m.n_layers,
-            d_model: m.d_model,
-            n_heads: m.n_heads,
-            n_kv_heads: m.n_heads,
-            d_ff: m.d_ff,
-            vocab: m.vocab,
-            gated_mlp: false,
-        };
-        let stats =
-            EngineStats { waq_backend: cfg.waq_backend.name(), ..Default::default() };
-        Ok(Engine {
+    /// Build an engine over an already-constructed backend. (`cfg.backend`
+    /// describes how a `Coordinator` constructs one; here the caller has.)
+    pub fn new(backend: Box<dyn DecodeBackend>, cfg: &EngineConfig) -> Engine {
+        let m = backend.model();
+        let stats = EngineStats { waq_backend: backend.spec().name(), ..Default::default() };
+        Engine {
             kv: KvManager::new(m),
             batcher: Batcher::new(cfg.policy),
             active: (0..m.decode_batch).map(|_| None).collect(),
             stats,
             sim: SimTotals::default(),
-            hw: HwConfig::default(),
-            host_model: CpuWaqModel::host(cfg.waq_backend),
-            spec,
-            mode: cfg.mode,
             rng: Rng::new(cfg.seed),
-            params_host: params.tensors,
-            rt,
-            weight_buffers,
-        })
+            backend,
+        }
     }
 
-    /// The software WAQ GEMM backend this engine models the host datapath
-    /// with.
+    /// Which execution engine + WAQ kernel this engine decodes with.
+    pub fn backend_spec(&self) -> BackendSpec {
+        self.backend.spec()
+    }
+
+    /// The software WAQ GEMM kernel the backend runs or models.
     pub fn waq_backend(&self) -> WaqBackend {
-        self.host_model.backend
+        self.backend.spec().waq()
     }
 
     pub fn model(&self) -> crate::runtime::artifacts::ModelCfg {
-        self.rt.manifest.model
+        self.backend.model()
     }
 
     pub fn submit(&mut self, r: Request) {
@@ -148,27 +129,40 @@ impl Engine {
         // ---- admission (prefill) ---------------------------------------
         let free = self.kv.decode_batch_free();
         for req in self.batcher.admit(free) {
-            match self.prefill(&req) {
-                Ok(first_logits_slot) => {
-                    let (slot, logits) = first_logits_slot;
-                    // the prefill's last-position logits give token #1
-                    let tok = self.sample(&logits, req.temperature);
-                    let mut ar = ActiveReq {
-                        req,
-                        generated: vec![tok],
-                        first_token_at: Some(Instant::now()),
-                        modeled_start_s: self.sim.seconds,
-                    };
-                    self.stats.generated_tokens += 1;
-                    // completion checks on the very first token
-                    if let Some(resp) = self.maybe_finish(slot, &mut ar) {
-                        self.kv.release(slot);
-                        done.push(resp);
-                    } else {
-                        self.active[slot] = Some(ar);
-                    }
-                }
-                Err(e) => return Err(anyhow!("prefill failed: {e}")),
+            let slot = self
+                .kv
+                .free_slot()
+                .ok_or_else(|| anyhow!("admit with no free slot"))?;
+            // the sim-clock marks are taken before the prefill cost lands,
+            // so each response's modeled delta includes its own prefill
+            let (start_s, start_j) = (self.sim.seconds, self.sim.energy_j);
+            let pre = self
+                .backend
+                .prefill(&req.prompt)
+                .map_err(|e| anyhow!("prefill failed: {e}"))?;
+            self.kv
+                .install_prefill(slot, req.id, pre.plen, &pre.k_cache, &pre.v_cache)
+                .map_err(|e| anyhow!(e))?;
+            self.stats.prefills += 1;
+            self.sim.seconds += pre.cost.accel_s;
+            self.sim.energy_j += pre.cost.accel_j;
+            self.stats.host_waq_s += pre.cost.host_waq_s;
+            // the prefill's last-position logits give token #1
+            let tok = self.sample(&pre.logits, req.temperature);
+            let mut ar = ActiveReq {
+                req,
+                generated: vec![tok],
+                first_token_at: Some(Instant::now()),
+                modeled_start_s: start_s,
+                modeled_start_j: start_j,
+            };
+            self.stats.generated_tokens += 1;
+            // completion checks on the very first token
+            if let Some(resp) = self.maybe_finish(slot, &mut ar) {
+                self.kv.release(slot);
+                done.push(resp);
+            } else {
+                self.active[slot] = Some(ar);
             }
         }
 
@@ -189,79 +183,34 @@ impl Engine {
         Ok(out)
     }
 
-    fn prefill(&mut self, req: &Request) -> Result<(usize, Vec<f32>)> {
-        let m = self.rt.manifest.model;
-        let slot = self
-            .kv
-            .free_slot()
-            .ok_or_else(|| anyhow!("admit with no free slot"))?;
-        let plen = req.prompt.len().min(m.seq_len - 1).max(1);
-        let mut padded = vec![0i32; m.seq_len];
-        padded[..plen].copy_from_slice(&req.prompt[..plen]);
-
-        let exe = self.rt.load("prefill")?;
-        let mut bufs: Vec<&DeviceBuffer> = self.weight_buffers.iter().collect();
-        let ptoks = self.rt.upload(&HostTensor::i32(padded, &[1, m.seq_len]))?;
-        let plen_b = self.rt.upload(&HostTensor::scalar_i32(plen as i32))?;
-        bufs.push(&ptoks);
-        bufs.push(&plen_b);
-        let out = exe.run_buffers(&bufs)?;
-        let logits = out[0].as_f32()?.to_vec();
-        self.kv
-            .install_prefill(slot, req.id, plen, &out[1], &out[2])
-            .map_err(|e| anyhow!(e))?;
-        self.stats.prefills += 1;
-        // modeled accelerator cost of this prefill
-        let c = sim::llm::prefill_cost(&self.hw, &self.spec, self.mode, plen);
-        self.sim.seconds += c.seconds;
-        self.sim.energy_j += c.energy_j;
-        Ok((slot, logits))
-    }
-
     fn decode_step(&mut self) -> Result<Vec<Response>> {
-        let m = self.rt.manifest.model;
+        let m = self.backend.model();
         let b = m.decode_batch;
-        // last generated token (or pad) + position per slot
+        // last generated token + write position per slot (pads elsewhere)
         let mut toks = vec![0i32; b];
         let mut pos = vec![0i32; b];
+        let mut active = vec![false; b];
         let mut occupancy = 0u64;
-        let mut mean_ctx = 0usize;
         for slot in 0..b {
             if let Some(ar) = &self.active[slot] {
                 toks[slot] = *ar.generated.last().unwrap();
                 pos[slot] = self.kv.position(slot).unwrap() as i32;
+                active[slot] = true;
                 occupancy += 1;
-                mean_ctx += pos[slot] as usize;
             }
         }
-        let active_n = occupancy as usize;
-        mean_ctx /= active_n.max(1);
 
-        let exe = self.rt.load("decode_step")?;
-        let mut bufs: Vec<&DeviceBuffer> = self.weight_buffers.iter().collect();
-        let kb = self.rt.upload(&self.kv.k_tensor())?;
-        let vb = self.rt.upload(&self.kv.v_tensor())?;
-        let tb = self.rt.upload(&HostTensor::i32(toks, &[b]))?;
-        let pb = self.rt.upload(&HostTensor::i32(pos, &[b]))?;
-        bufs.push(&kb);
-        bufs.push(&vb);
-        bufs.push(&tb);
-        bufs.push(&pb);
-        let out = exe.run_buffers(&bufs)?;
-        let logits = out[0].as_f32()?;
-        self.kv
-            .update_from_step(&out[1], &out[2])
-            .map_err(|e| anyhow!(e))?;
+        let (logits, cost) = self
+            .backend
+            .decode(&toks, &pos, &active, &mut self.kv)?;
 
         self.stats.decode_steps += 1;
         self.stats.occupancy_sum += occupancy;
-        // modeled accelerator cost of this batched decode step
-        let c = sim::decode_step_cost(&self.hw, &self.spec, self.mode, active_n.max(1), mean_ctx.max(1));
-        self.sim.seconds += c.seconds;
-        self.sim.energy_j += c.energy_j;
-        // ... and the modeled host software-datapath cost under the
-        // configured WAQ backend (packed/tiled vs direct vs histogram)
-        self.stats.host_waq_s += self.host_model.decode_step_seconds(&self.spec, active_n.max(1));
+        self.sim.seconds += cost.accel_s;
+        self.sim.energy_j += cost.accel_j;
+        // host software-datapath seconds: measured for native backends,
+        // the CpuWaqModel roofline for PJRT
+        self.stats.host_waq_s += cost.host_waq_s;
 
         let mut done = Vec::new();
         for slot in 0..b {
@@ -308,7 +257,7 @@ impl Engine {
                     .unwrap_or(0.0),
                 total_s: ar.req.arrived.elapsed().as_secs_f64(),
                 modeled_accel_s: self.sim.seconds - ar.modeled_start_s,
-                modeled_accel_j: self.sim.energy_j,
+                modeled_accel_j: self.sim.energy_j - ar.modeled_start_j,
             }
         })
     }
@@ -339,7 +288,9 @@ impl Engine {
         (logits.len() - 1) as i32
     }
 
-    /// Abort everything in flight (shutdown path).
+    /// Abort everything in flight (shutdown path). In-flight requests
+    /// report their real TTFT (if a first token was emitted) and their
+    /// modeled-cost deltas so far; queued requests report zeros.
     pub fn abort_all(&mut self) -> Vec<Response> {
         let mut out = Vec::new();
         for slot in 0..self.active.len() {
@@ -350,10 +301,13 @@ impl Engine {
                     prompt_len: ar.req.prompt.len(),
                     tokens: std::mem::take(&mut ar.generated),
                     finish_reason: FinishReason::Aborted,
-                    ttft_s: 0.0,
+                    ttft_s: ar
+                        .first_token_at
+                        .map(|t| (t - ar.req.arrived).as_secs_f64())
+                        .unwrap_or(0.0),
                     total_s: ar.req.arrived.elapsed().as_secs_f64(),
-                    modeled_accel_s: 0.0,
-                    modeled_accel_j: 0.0,
+                    modeled_accel_s: self.sim.seconds - ar.modeled_start_s,
+                    modeled_accel_j: self.sim.energy_j - ar.modeled_start_j,
                 });
             }
         }
@@ -370,11 +324,6 @@ impl Engine {
             });
         }
         out
-    }
-
-    /// Host parameter tensors (e.g. for eval reuse).
-    pub fn params(&self) -> &[HostTensor] {
-        &self.params_host
     }
 }
 

@@ -1,13 +1,20 @@
 //! L3 serving coordinator: request router, continuous batcher, KV slot
-//! manager, PJRT-backed engine, and the leader thread + TCP front-end.
-//! Python never runs here — the engine executes AOT artifacts only.
+//! manager, the backend-agnostic engine, and the leader thread + TCP
+//! front-end. Python never runs here — decode compute goes through a
+//! [`backend::DecodeBackend`]: either AOT PJRT artifacts or the native
+//! K-Means WAQ LUT-GEMM datapath.
 
+pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod kv;
 pub mod request;
 pub mod server;
 
+pub use backend::{
+    BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PjrtBackend, PrefillOut,
+    StepCost,
+};
 pub use batcher::{AdmitPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, SimTotals};
 pub use kv::KvManager;

@@ -38,8 +38,9 @@ pub struct Response {
     /// measured wall-clock
     pub ttft_s: f64,
     pub total_s: f64,
-    /// modeled OASIS accelerator time/energy for the same work (the sim
-    /// clock advanced alongside execution)
+    /// modeled OASIS accelerator time/energy for the same work — the
+    /// per-request delta of the sim clock (this request's prefill plus
+    /// every decode step it was in flight for), not the engine total
     pub modeled_accel_s: f64,
     pub modeled_accel_j: f64,
 }
@@ -62,11 +63,13 @@ pub struct EngineStats {
     /// decode-step batch occupancy sum (for mean occupancy)
     pub occupancy_sum: u64,
     pub completed: u64,
-    /// software WAQ GEMM backend the engine was configured with
-    /// (`gemm::WaqBackend::name()`; empty before engine construction)
+    /// serving backend name (`coordinator::BackendSpec::name()`, e.g.
+    /// `packed` or `native-packed`; empty before engine construction)
     pub waq_backend: &'static str,
-    /// modeled host software-datapath seconds for all decode steps under
-    /// that backend (see `baselines::cpu::CpuWaqModel`)
+    /// host software WAQ-datapath seconds across all decode steps:
+    /// *measured* wall-clock when a `native-*` backend executes the
+    /// LUT-GEMM datapath, the modeled `baselines::cpu::CpuWaqModel`
+    /// roofline when decode runs PJRT artifacts
     pub host_waq_s: f64,
 }
 

@@ -1,6 +1,7 @@
-//! Coordinator front-end: the leader thread that owns the Engine (the
-//! PJRT runtime is not Send, so it never leaves that thread) plus a
-//! channel-based submission API and an optional TCP JSON-lines listener.
+//! Coordinator front-end: the leader thread that owns the Engine and its
+//! decode backend (the PJRT runtime is not Send, so backends are built on
+//! — and never leave — that thread) plus a channel-based submission API
+//! and an optional TCP JSON-lines listener.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -10,15 +11,24 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
+use super::backend::{BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PjrtBackend};
 use super::engine::{Engine, EngineConfig, SimTotals};
 use super::request::{EngineStats, Request, RequestId, Response};
-use crate::runtime::{ParamSet, Runtime};
+use crate::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
 use crate::util::json::Json;
 
 enum Cmd {
     Submit(Request, Sender<Response>),
     Stats(Sender<(EngineStats, SimTotals)>),
     Shutdown,
+}
+
+/// Where the engine thread finds the model description: a preset name
+/// (resolved against the artifacts directory) or an in-memory manifest
+/// (no disk access for native backends).
+enum EngineSource {
+    Preset(String),
+    Manifest(Manifest),
 }
 
 pub struct Coordinator {
@@ -31,13 +41,32 @@ impl Coordinator {
     /// Start the engine thread for a preset's artifacts with the given
     /// (host) parameters.
     pub fn start(preset: String, params: ParamSet, cfg: EngineConfig) -> Result<Coordinator> {
+        Self::start_source(EngineSource::Preset(preset), params, cfg)
+    }
+
+    /// Start from an in-memory manifest. Native backends need no artifacts
+    /// directory at all (e.g. `Manifest::synthetic`); PJRT backends load
+    /// HLO files from `manifest.dir`.
+    pub fn start_with_manifest(
+        manifest: Manifest,
+        params: ParamSet,
+        cfg: EngineConfig,
+    ) -> Result<Coordinator> {
+        Self::start_source(EngineSource::Manifest(manifest), params, cfg)
+    }
+
+    fn start_source(
+        source: EngineSource,
+        params: ParamSet,
+        cfg: EngineConfig,
+    ) -> Result<Coordinator> {
         let (tx, rx) = channel::<Cmd>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let handle = std::thread::Builder::new()
             .name("kllm-engine".into())
-            .spawn(move || engine_thread(&preset, params, cfg, rx, ready_tx))
+            .spawn(move || engine_thread(source, params, cfg, rx, ready_tx))
             .map_err(|e| anyhow!("spawn engine: {e}"))?;
-        // surface engine construction errors synchronously
+        // surface backend/engine construction errors synchronously
         ready_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died during startup"))??;
@@ -94,27 +123,53 @@ impl Drop for Coordinator {
     }
 }
 
+/// Construct the configured decode backend on the engine thread (the PJRT
+/// runtime is not Send; the native backend simply has no reason to move).
+fn build_backend(
+    source: &EngineSource,
+    params: &ParamSet,
+    cfg: &EngineConfig,
+) -> Result<Box<dyn DecodeBackend>> {
+    match cfg.backend {
+        BackendSpec::Pjrt(waq) => {
+            let rt = match source {
+                EngineSource::Preset(p) => Runtime::for_preset(p)?,
+                EngineSource::Manifest(m) => Runtime::new(&m.dir)?,
+            };
+            Ok(Box::new(PjrtBackend::new(rt, params, waq, cfg.mode)?))
+        }
+        BackendSpec::Native(waq) => {
+            let manifest = match source {
+                EngineSource::Preset(p) => {
+                    Manifest::load(&artifacts_dir(p)).map_err(|e| anyhow!(e))?
+                }
+                EngineSource::Manifest(m) => m.clone(),
+            };
+            let native = NativeWaqBackend::new(
+                &manifest,
+                params,
+                NativeCfg::from_mode(waq, cfg.mode),
+            )?;
+            Ok(Box::new(native))
+        }
+    }
+}
+
 fn engine_thread(
-    preset: &str,
+    source: EngineSource,
     params: ParamSet,
     cfg: EngineConfig,
     rx: Receiver<Cmd>,
     ready: Sender<Result<()>>,
 ) -> Result<()> {
-    let rt = match Runtime::for_preset(preset) {
-        Ok(rt) => rt,
+    let backend = match build_backend(&source, &params, &cfg) {
+        Ok(b) => b,
         Err(e) => {
             ready.send(Err(anyhow!("{e}"))).ok();
-            return Err(anyhow!("runtime init failed"));
+            return Err(anyhow!("backend init failed"));
         }
     };
-    let mut engine = match Engine::new(rt, params, cfg) {
-        Ok(e) => e,
-        Err(e) => {
-            ready.send(Err(anyhow!("{e}"))).ok();
-            return Err(anyhow!("engine init failed"));
-        }
-    };
+    let mut engine = Engine::new(backend, &cfg);
     ready.send(Ok(())).ok();
 
     let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();

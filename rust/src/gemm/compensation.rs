@@ -12,10 +12,24 @@
 
 use super::lut::CartesianLut;
 use super::waq;
-use crate::quant::{QuantToken, QuantWeights};
+use crate::quant::{PackedWeights, QuantToken, QuantWeights};
 
 /// Apply error compensation in place: out[n] += r * W_deq[c, n] per outlier.
 pub fn compensate(out: &mut [f32], tok: &QuantToken, w: &QuantWeights) {
+    assert_eq!(out.len(), w.n_cols);
+    let mut wrow = Vec::with_capacity(w.n_cols);
+    for &(c, _v, r) in &tok.outliers {
+        w.dequant_row(c as usize, &mut wrow);
+        for (o, &wv) in out.iter_mut().zip(&wrow) {
+            *o += r * wv;
+        }
+    }
+}
+
+/// [`compensate`] over the nibble-packed weight form (what the serving
+/// path keeps resident when the packed GEMM backend is selected): same
+/// per-outlier dequant-row fetch, bit-identical FP accumulation.
+pub fn compensate_packed(out: &mut [f32], tok: &QuantToken, w: &PackedWeights) {
     assert_eq!(out.len(), w.n_cols);
     let mut wrow = Vec::with_capacity(w.n_cols);
     for &(c, _v, r) in &tok.outliers {
@@ -170,6 +184,20 @@ mod tests {
             err(&dual),
             err(&lookahead)
         );
+    }
+
+    #[test]
+    fn packed_compensation_is_bit_exact_with_unpacked() {
+        // odd K exercises the packed tail row
+        for (seed, k) in [(5u64, 96usize), (6, 97)] {
+            let (tok, qw, lut, _, _) = setup(seed, k, 24, 0.04);
+            assert!(!tok.outliers.is_empty());
+            let mut a = waq::execute_direct(&tok, &qw, &lut);
+            let mut b = a.clone();
+            compensate(&mut a, &tok, &qw);
+            compensate_packed(&mut b, &tok, &qw.pack());
+            assert_eq!(a, b, "seed {seed} k {k}");
+        }
     }
 
     #[test]

@@ -17,7 +17,9 @@ pub mod packed;
 pub mod waq;
 pub mod woq;
 
-pub use compensation::{compensate, execute_critical_path, execute_dual_branch};
+pub use compensation::{
+    compensate, compensate_packed, execute_critical_path, execute_dual_branch,
+};
 pub use lut::CartesianLut;
 pub use packed::{execute_batch_tiled, execute_packed, TileCfg};
 pub use waq::{execute_direct, execute_histogram};
@@ -40,6 +42,7 @@ impl WaqBackend {
     pub const ALL: [WaqBackend; 3] =
         [WaqBackend::Direct, WaqBackend::Histogram, WaqBackend::Packed];
 
+    /// Canonical CLI/bench name (thin alias of the `Display` impl).
     pub fn name(&self) -> &'static str {
         match self {
             WaqBackend::Direct => "direct",
@@ -48,13 +51,27 @@ impl WaqBackend {
         }
     }
 
+    /// Thin alias of the `FromStr` impl for call sites that prefer an
+    /// `Option`.
     pub fn parse(s: &str) -> Option<WaqBackend> {
-        match s {
-            "direct" => Some(WaqBackend::Direct),
-            "histogram" => Some(WaqBackend::Histogram),
-            "packed" => Some(WaqBackend::Packed),
-            _ => None,
-        }
+        s.parse().ok()
+    }
+}
+
+impl std::fmt::Display for WaqBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for WaqBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<WaqBackend, String> {
+        WaqBackend::ALL
+            .into_iter()
+            .find(|b| b.name() == s)
+            .ok_or_else(|| format!("unknown WAQ backend '{s}'"))
     }
 }
 
@@ -69,8 +86,9 @@ enum WaqWeights {
 /// A prepared WAQ GEMM: quantized weights (in backend-appropriate
 /// storage) + LUT + backend choice. This is the software dispatch point:
 /// the benches and the `kllm serve --backend` flag select through
-/// [`WaqBackend`], and `coordinator::engine` mirrors the same choice in
-/// its modeled host-datapath clock (`baselines::cpu::CpuWaqModel`).
+/// [`WaqBackend`] — `coordinator::backend::NativeWaqBackend` executes its
+/// serving decode through `execute_batch`, while the PJRT path mirrors
+/// the same choice in a modeled host clock (`baselines::cpu::CpuWaqModel`).
 pub struct WaqGemm {
     pub backend: WaqBackend,
     pub lut: CartesianLut,
@@ -97,6 +115,16 @@ impl WaqGemm {
         match &self.w {
             WaqWeights::Packed(p) => Some(p),
             WaqWeights::Unpacked(_) => None,
+        }
+    }
+
+    /// The byte-per-index weight form (present iff the backend is not
+    /// `Packed`); the outlier-compensation branch fetches dequantized rows
+    /// from whichever form is resident.
+    pub fn unpacked_weights(&self) -> Option<&QuantWeights> {
+        match &self.w {
+            WaqWeights::Unpacked(w) => Some(w),
+            WaqWeights::Packed(_) => None,
         }
     }
 
@@ -140,8 +168,12 @@ mod tests {
     fn backend_parse_and_names() {
         for b in WaqBackend::ALL {
             assert_eq!(WaqBackend::parse(b.name()), Some(b));
+            // FromStr/Display round-trip (parse/name are thin aliases)
+            assert_eq!(b.to_string().parse::<WaqBackend>(), Ok(b));
+            assert_eq!(b.to_string(), b.name());
         }
         assert_eq!(WaqBackend::parse("tpu"), None);
+        assert!("tpu".parse::<WaqBackend>().unwrap_err().contains("tpu"));
         assert_eq!(WaqBackend::default(), WaqBackend::Packed);
     }
 

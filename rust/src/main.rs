@@ -5,18 +5,20 @@
 //!       [--calib-samples N] [--md FILE]    regenerate a paper table/figure
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
-//!       [--backend direct|histogram|packed]   (backend selects the
-//!       modeled host-datapath cost reported per response; decode compute
-//!       itself runs the PJRT artifact)
+//!       [--backend SPEC]   SPEC selects the decode execution engine:
+//!       `direct|histogram|packed` run decode through the PJRT artifacts
+//!       (the WAQ kernel is a modeled host clock), while
+//!       `native-direct|native-histogram|native-packed` serve through the
+//!       native K-Means WAQ LUT-GEMM datapath — measured throughput on
+//!       the selected kernel, no PJRT required
 //!   quantize [--preset P] [--bits B]        quantize + report one matrix
 //!   list                                    list experiments + artifacts
 
 use std::io::Write;
 
 use anyhow::{anyhow, Result};
-use kllm::coordinator::{serve_tcp, Coordinator, EngineConfig};
+use kllm::coordinator::{serve_tcp, BackendSpec, Coordinator, EngineConfig};
 use kllm::eval::{run_experiment, Corpus, ExperimentCtx, ALL_IDS};
-use kllm::gemm::WaqBackend;
 use kllm::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
 use kllm::util::cli::Args;
 use kllm::util::rng::Rng;
@@ -134,23 +136,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         preset = cfg.str_or("preset", &preset);
         port = cfg.usize_or("server.port", port as usize).map_err(|e| anyhow!(e))? as u16;
     }
-    let backend_name = args.str_or("backend", WaqBackend::default().name());
-    let waq_backend = WaqBackend::parse(&backend_name)
-        .ok_or_else(|| anyhow!("unknown --backend '{backend_name}' (direct|histogram|packed)"))?;
+    let backend_name = args.str_or("backend", BackendSpec::default().name());
+    // accepted values (and the error text) derive from WaqBackend::ALL
+    let backend: BackendSpec = backend_name.parse().map_err(|e: String| anyhow!(e))?;
     let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(|e| anyhow!(e))?;
     let params = match args.opt("ckpt") {
         Some(p) => ParamSet::load(std::path::Path::new(p))?,
         None => ParamSet::init(&manifest, &mut Rng::new(42)),
     };
-    let coord = std::sync::Arc::new(Coordinator::start(
-        preset.clone(),
+    // the already-parsed manifest is handed straight to the engine thread
+    // (native backends need no further disk access; PJRT loads HLO files
+    // from manifest.dir)
+    let coord = std::sync::Arc::new(Coordinator::start_with_manifest(
+        manifest,
         params,
-        EngineConfig { waq_backend, ..Default::default() },
+        EngineConfig { backend, ..Default::default() },
     )?);
     let port = serve_tcp(coord.clone(), port)?;
+    let how = if backend.is_native() {
+        "measured native WAQ LUT-GEMM datapath"
+    } else {
+        "PJRT artifacts, modeled WAQ host clock"
+    };
     println!(
-        "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, modeled WAQ backend {})",
-        waq_backend.name()
+        "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, backend {backend}: {how})"
     );
     println!("example: echo '{{\"prompt\": [1,2,3], \"max_new_tokens\": 8}}' | nc 127.0.0.1 {port}");
     loop {

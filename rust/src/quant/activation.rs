@@ -75,6 +75,14 @@ pub fn quantize_token_static(tok: &[f32], cb: &Codebook, lo: f32, hi: f32) -> Qu
     quantize_with_outliers(tok, cb, &outs)
 }
 
+/// Quantize one token with an externally supplied (sorted, deduplicated)
+/// outlier channel set — the serving datapath, where detection runs in the
+/// Orizuru engine (`orizuru::detect_outliers`) rather than the reference
+/// top-k selector.
+pub fn quantize_token_with_outliers(tok: &[f32], cb: &Codebook, outs: &[u32]) -> QuantToken {
+    quantize_with_outliers(tok, cb, outs)
+}
+
 fn quantize_with_outliers(tok: &[f32], cb: &Codebook, outs: &[u32]) -> QuantToken {
     let scale = inlier_scale(tok, outs);
     // Look-ahead semantics (paper §III-C1): the WHOLE token is clustered —

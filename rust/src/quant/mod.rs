@@ -13,7 +13,10 @@ pub mod rtn;
 pub mod smoothquant;
 pub mod weights;
 
-pub use activation::{learn_act_codebook, quantize_token, quantize_token_static, QuantToken};
+pub use activation::{
+    learn_act_codebook, quantize_token, quantize_token_static,
+    quantize_token_with_outliers, QuantToken,
+};
 pub use codebook::Codebook;
 pub use outlier::OutlierCfg;
 pub use packed::{PackedIdx, PackedWeights};

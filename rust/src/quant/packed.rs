@@ -126,6 +126,30 @@ impl PackedWeights {
         idx
     }
 
+    /// Dequantize one input-channel (reduction) row straight from the
+    /// packed form — the per-outlier fetch of the error-compensation
+    /// branch (paper §III-C2), bit-identical to
+    /// `QuantWeights::dequant_row` on the unpacked form.
+    pub fn dequant_row(&self, k: usize, out: &mut Vec<f32>) {
+        debug_assert!(k < self.n_rows, "row {k} out of range ({})", self.n_rows);
+        out.clear();
+        if k == self.n_rows - 1 {
+            if let Some(tail) = &self.tail {
+                out.extend((0..self.n_cols).map(|j| {
+                    self.codebook.value(tail.get(j)) * self.col_scales[j]
+                }));
+                return;
+            }
+        }
+        let row = &self.pairs[(k / 2) * self.n_cols..(k / 2 + 1) * self.n_cols];
+        let nibble = move |b: u8| if k % 2 == 0 { b >> 4 } else { b & 0x0F };
+        out.extend(
+            row.iter()
+                .zip(&self.col_scales)
+                .map(|(&b, &s)| self.codebook.value(nibble(b)) * s),
+        );
+    }
+
     /// Index-storage bytes: half of the byte-per-index form (plus a
     /// rounded-up tail row when K is odd).
     pub fn index_bytes(&self) -> usize {
@@ -227,6 +251,22 @@ mod tests {
             assert_eq!(pw.unpack_idx(), qw.idx, "({k},{n})");
             assert_eq!(pw.col_scales, qw.col_scales);
             assert_eq!(pw.codebook, qw.codebook);
+        }
+    }
+
+    #[test]
+    fn dequant_row_matches_unpacked_even_and_odd_k() {
+        let mut rng = Rng::new(7);
+        for &(k, n) in &[(8usize, 6usize), (9, 5), (1, 4)] {
+            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+            let qw = quant::quantize_weights(&w, 4);
+            let pw = qw.pack();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for r in 0..k {
+                qw.dequant_row(r, &mut a);
+                pw.dequant_row(r, &mut b);
+                assert_eq!(a, b, "({k},{n}) row {r}");
+            }
         }
     }
 

@@ -77,6 +77,27 @@ pub struct ModelCfg {
     pub n_linears: usize,
 }
 
+impl ModelCfg {
+    /// Deterministic (name, shape) parameter list mirroring python
+    /// `model.param_specs` — the canonical order every `ParamSet` follows.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let mut v = vec![
+            ("tok_emb".to_string(), vec![self.vocab, self.d_model]),
+            ("pos_emb".to_string(), vec![self.seq_len, self.d_model]),
+        ];
+        for l in 0..self.n_layers {
+            v.push((format!("l{l}.ln1"), vec![self.d_model]));
+            v.push((format!("l{l}.qkv"), vec![self.d_model, 3 * self.d_model]));
+            v.push((format!("l{l}.attn_out"), vec![self.d_model, self.d_model]));
+            v.push((format!("l{l}.ln2"), vec![self.d_model]));
+            v.push((format!("l{l}.mlp_up"), vec![self.d_model, self.d_ff]));
+            v.push((format!("l{l}.mlp_down"), vec![self.d_ff, self.d_model]));
+        }
+        v.push(("lnf".to_string(), vec![self.d_model]));
+        v
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub preset: String,
@@ -173,6 +194,20 @@ impl Manifest {
     pub fn param_elems(&self) -> usize {
         self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
+
+    /// An artifact-less in-memory manifest for a model configuration:
+    /// enough for `ParamSet::init` and the native serving backend (which
+    /// needs parameter shapes and order, not HLO files). PJRT execution
+    /// still requires a real `make artifacts` manifest on disk.
+    pub fn synthetic(preset: &str, model: ModelCfg) -> Manifest {
+        Manifest {
+            preset: preset.to_string(),
+            dir: PathBuf::from("."),
+            model,
+            params: model.param_specs(),
+            artifacts: BTreeMap::new(),
+        }
+    }
 }
 
 /// Locate the artifacts directory for a preset: `$KLLM_ARTIFACTS` or
@@ -214,6 +249,35 @@ mod tests {
         assert_eq!(a.outputs[0].elem_count(), 2 * 32 * 256);
         assert!(m.artifact("nope").is_err());
         assert_eq!(m.hlo_path("fwd").unwrap(), Path::new("/tmp/x/fwd.hlo.txt"));
+    }
+
+    #[test]
+    fn synthetic_manifest_matches_python_param_order() {
+        let cfg = ModelCfg {
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            seq_len: 32,
+            batch: 2,
+            decode_batch: 2,
+            head_dim: 16,
+            d_ff: 256,
+            n_linears: 8,
+        };
+        let m = Manifest::synthetic("syn", cfg);
+        assert_eq!(m.preset, "syn");
+        // tok_emb + pos_emb + 6 per layer + lnf
+        assert_eq!(m.params.len(), 2 + 6 * cfg.n_layers + 1);
+        assert_eq!(m.params[0].0, "tok_emb");
+        assert_eq!(m.params[1].0, "pos_emb");
+        assert_eq!(m.params[2].0, "l0.ln1");
+        assert_eq!(m.params.last().unwrap().0, "lnf");
+        let qkv = m.params.iter().find(|(n, _)| n == "l1.qkv").unwrap();
+        assert_eq!(qkv.1, vec![64, 192]);
+        let down = m.params.iter().find(|(n, _)| n == "l0.mlp_down").unwrap();
+        assert_eq!(down.1, vec![256, 64]);
+        assert!(m.artifacts.is_empty());
     }
 
     #[test]
