@@ -13,6 +13,7 @@
 
 use kllm::coordinator::{AdmitPolicy, BackendSpec, Coordinator, EngineConfig};
 use kllm::gemm::WaqBackend;
+use kllm::kvcache::KvBits;
 use kllm::runtime::artifacts::ModelCfg;
 use kllm::runtime::{artifacts_dir, pjrt_available, Manifest, ParamSet};
 use kllm::util::bench::{bench_json_path, fast_mode, BenchResult};
@@ -58,30 +59,33 @@ fn main() -> anyhow::Result<()> {
     let max_new = 8;
     let json = bench_json_path("BENCH_e2e.json");
 
-    // native runs: the measured LUT-GEMM serving path, policy sweep on the
-    // packed kernel plus a packed-vs-direct kernel comparison
-    let mut runs: Vec<(AdmitPolicy, BackendSpec)> = vec![
-        (AdmitPolicy::OnePerStep, BackendSpec::Native(WaqBackend::Packed)),
-        (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Packed)),
-        (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Direct)),
+    // native runs: the measured LUT-GEMM serving path — policy sweep on
+    // the packed kernel, a packed-vs-direct kernel comparison, and a KV
+    // precision sweep (32 vs 4 bit cache; FAST_BENCH keeps both so CI
+    // smoke-tests the quantized cache end to end)
+    let mut runs: Vec<(AdmitPolicy, BackendSpec, KvBits)> = vec![
+        (AdmitPolicy::OnePerStep, BackendSpec::Native(WaqBackend::Packed), KvBits::Fp32),
+        (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Packed), KvBits::Fp32),
+        (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Packed), KvBits::B4),
+        (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Direct), KvBits::Fp32),
     ];
     if pjrt_available() && have_artifacts {
         // PJRT runs: measured wall-clock is artifact-bound; the modeled
         // host rows expose the packed kernel's decode advantage
-        runs.push((AdmitPolicy::OnePerStep, BackendSpec::Pjrt(WaqBackend::Packed)));
-        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Packed)));
-        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Direct)));
-        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Histogram)));
+        runs.push((AdmitPolicy::OnePerStep, BackendSpec::Pjrt(WaqBackend::Packed), KvBits::Fp32));
+        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Packed), KvBits::Fp32));
+        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Direct), KvBits::Fp32));
+        runs.push((AdmitPolicy::FillAll, BackendSpec::Pjrt(WaqBackend::Histogram), KvBits::Fp32));
     } else {
         println!("pjrt feature/artifacts unavailable — skipping PJRT backend runs");
     }
 
-    for (policy, backend) in runs {
-        let name = format!("{}/{}", policy_name(policy), backend.name());
+    for (policy, backend, kv_bits) in runs {
+        let name = format!("{}/{}/kv{}", policy_name(policy), backend.name(), kv_bits);
         let coord = Coordinator::start_with_manifest(
             manifest.clone(),
             ParamSet { tensors: params.tensors.clone() },
-            EngineConfig { policy, backend, ..Default::default() },
+            EngineConfig { policy, backend, kv_bits, ..Default::default() },
         )?;
         let mut rng = Rng::new(3);
         let t0 = std::time::Instant::now();
@@ -105,14 +109,22 @@ fn main() -> anyhow::Result<()> {
         let host_kind = if backend.is_native() { "measured" } else { "modeled" };
         println!(
             "bench e2e_serving/{name:28} {:8.1} tok/s  occupancy {:.2}  {}  \
-             modeled-OASIS {:.2} ms  {host_kind}-host[{}] {:.2} ms",
+             modeled-OASIS {:.2} ms  {host_kind}-host[{}] {:.2} ms  kv {}b peak {} B",
             tokens as f64 / wall,
             stats.mean_occupancy(),
             summary,
             sim.seconds * 1e3,
             stats.waq_backend,
             stats.host_waq_s * 1e3,
+            stats.kv_bits,
+            stats.peak_kv_bytes,
         );
+        // every row is tagged with the cache precision and its peak
+        // footprint so the perf trajectory captures the memory axis too
+        let kv_extra = vec![
+            ("kv_bits".to_string(), stats.kv_bits.to_string()),
+            ("peak_kv_bytes".to_string(), stats.peak_kv_bytes.to_string()),
+        ];
         // one JSON row of measured per-token wall clock (mean == p50 == min:
         // only the aggregate is observable here), and a separate row for the
         // host-datapath per-token cost — measured for native backends,
@@ -126,6 +138,7 @@ fn main() -> anyhow::Result<()> {
             p50_ns: tok_ns,
             min_ns: tok_ns,
             throughput: Some(tokens as f64 / wall),
+            extra: kv_extra.clone(),
         }
         .append_json(&json);
         let host_ns = stats.host_waq_s * 1e9 / (tokens.max(1) as f64);
@@ -136,6 +149,7 @@ fn main() -> anyhow::Result<()> {
             p50_ns: host_ns,
             min_ns: host_ns,
             throughput: None,
+            extra: kv_extra,
         }
         .append_json(&json);
         coord.shutdown()?;

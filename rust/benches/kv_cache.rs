@@ -1,0 +1,124 @@
+//! KV-cache precision bench: for each `--kv-bits` setting, measure the
+//! cache bytes/token and peak footprint, end-to-end native decode
+//! throughput, and the attention error introduced by the quantized cache
+//! (one decode step's logits vs the FP32 cache, same backend, same
+//! inputs). Rows land in BENCH_kv.json via `util::bench::KvBenchRow`, so
+//! the memory/accuracy/throughput trade-off is tracked across PRs. CI
+//! smoke-runs this under FAST_BENCH=1 (sweeping 32 and 4 bits; the full
+//! run adds 3 and 2).
+
+use kllm::coordinator::{
+    probe_decode_logits, AdmitPolicy, BackendSpec, DecodeBackend, Engine, EngineConfig,
+    NativeCfg, NativeWaqBackend, Request,
+};
+use kllm::gemm::WaqBackend;
+use kllm::kvcache::{KvBits, KvPrecision};
+use kllm::runtime::artifacts::ModelCfg;
+use kllm::runtime::{Manifest, ParamSet};
+use kllm::util::bench::{fast_mode, KvBenchRow};
+use kllm::util::rng::Rng;
+use kllm::util::stats::rel_l2_err;
+
+/// The `test` preset's model config (mirrors python PRESETS["test"]).
+fn test_model_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        seq_len: 32,
+        batch: 2,
+        decode_batch: 2,
+        head_dim: 16,
+        d_ff: 256,
+        n_linears: 8,
+    }
+}
+
+fn build_backend(manifest: &Manifest, params: &ParamSet) -> anyhow::Result<NativeWaqBackend> {
+    NativeWaqBackend::new(
+        manifest,
+        params,
+        NativeCfg { waq: WaqBackend::Packed, ..NativeCfg::default() },
+    )
+}
+
+fn precision_of(backend: &NativeWaqBackend, bits: KvBits) -> KvPrecision {
+    match bits {
+        KvBits::Fp32 => KvPrecision::Fp32,
+        q => KvPrecision::Quant(backend.kv_quantizer(q.bits())),
+    }
+}
+
+/// One decode step's logits with the prefilled cache stored at `bits`
+/// (the shared `probe_decode_logits` harness — same metric the accuracy
+/// tests bound).
+fn decode_logits_at(
+    backend: &mut NativeWaqBackend,
+    cfg: ModelCfg,
+    bits: KvBits,
+) -> anyhow::Result<Vec<f32>> {
+    let prec = precision_of(backend, bits);
+    let prompt: Vec<i32> = (0..12).map(|i| (i * 17 + 3) % cfg.vocab as i32).collect();
+    probe_decode_logits(backend, prec, &prompt, 7)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = test_model_cfg();
+    let manifest = Manifest::synthetic("test", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    let sweep: &[KvBits] = if fast_mode() {
+        &[KvBits::Fp32, KvBits::B4]
+    } else {
+        &KvBits::ALL
+    };
+    let n_requests = if fast_mode() { 6 } else { 24 };
+    let max_new = 8;
+
+    // attention-error reference: the FP32-cache logits of one decode step
+    let mut err_backend = build_backend(&manifest, &params)?;
+    let fp32_logits = decode_logits_at(&mut err_backend, cfg, KvBits::Fp32)?;
+
+    for &bits in sweep {
+        let attn_rel_err = if bits == KvBits::Fp32 {
+            0.0
+        } else {
+            let logits = decode_logits_at(&mut err_backend, cfg, bits)?;
+            rel_l2_err(&logits, &fp32_logits)
+        };
+
+        // end-to-end native decode throughput at this cache precision
+        let backend = build_backend(&manifest, &params)?;
+        let ecfg = EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            backend: BackendSpec::Native(WaqBackend::Packed),
+            kv_bits: bits,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(Box::new(backend), &ecfg);
+        let mut rng = Rng::new(3);
+        for id in 0..n_requests {
+            let prompt: Vec<i32> = (0..4).map(|_| rng.below(cfg.vocab) as i32).collect();
+            engine.submit(Request::new(id, prompt, max_new));
+        }
+        let t0 = std::time::Instant::now();
+        engine.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens = engine.stats.generated_tokens;
+        let row = KvBenchRow {
+            backend: engine.stats.waq_backend.to_string(),
+            kv_bits: engine.stats.kv_bits,
+            bytes_per_token: engine.stats.kv_bytes_per_token,
+            peak_cache_bytes: engine.stats.peak_kv_bytes,
+            decode_tok_s: tokens as f64 / wall.max(1e-12),
+            attn_rel_err,
+        };
+        println!(
+            "bench kv_cache/kv{bits:<4} {:8.1} tok/s  {:7.1} B/token  peak {:8} B  \
+             attn rel err {:.4}",
+            row.decode_tok_s, row.bytes_per_token, row.peak_cache_bytes, row.attn_rel_err,
+        );
+        row.append();
+    }
+    Ok(())
+}

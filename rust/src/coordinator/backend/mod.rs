@@ -36,6 +36,7 @@ use anyhow::Result;
 use super::kv::KvManager;
 use crate::baselines::CpuWaqModel;
 use crate::gemm::WaqBackend;
+use crate::kvcache::{KvPrecision, KvQuantizer};
 use crate::models::LlmSpec;
 use crate::runtime::artifacts::ModelCfg;
 use crate::runtime::HostTensor;
@@ -150,6 +151,16 @@ pub trait DecodeBackend {
     /// The model configuration being served (slot count, context, vocab).
     fn model(&self) -> ModelCfg;
 
+    /// Codebooks for an n-bit K-Means-quantized KV cache (the engine
+    /// builds its `KvManager` with these when `--kv-bits < 32`). The
+    /// default is a uniform grid over the normalized row range (RTN-like,
+    /// no calibration needed); backends that run a calibration pass
+    /// override this with learned per-layer/per-head codebooks.
+    fn kv_quantizer(&self, bits: u32) -> KvQuantizer {
+        let m = self.model();
+        KvQuantizer::uniform(m.n_layers, m.n_heads, m.head_dim, bits)
+    }
+
     /// Run one request's prefill and return its first logits + KV pair.
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut>;
 
@@ -207,6 +218,33 @@ impl CostModel {
             host_waq_s: self.host.decode_step_seconds(&self.spec, n),
         }
     }
+}
+
+/// One decode step's logits for slot 0 against a freshly prefilled cache
+/// stored at `precision`: prefill `prompt`, install into slot 0, decode
+/// `next_tok` at the next position (other slots padded/inactive). This is
+/// the shared probe behind the KV-cache accuracy tests and the
+/// `kv_cache` bench's `attn_rel_err` rows — one definition, so the
+/// tested metric and the benchmarked metric cannot diverge.
+pub fn probe_decode_logits(
+    backend: &mut dyn DecodeBackend,
+    precision: KvPrecision,
+    prompt: &[i32],
+    next_tok: i32,
+) -> Result<Vec<f32>> {
+    let m = backend.model();
+    let pre = backend.prefill(prompt)?;
+    let mut kv = KvManager::with_precision(m, precision);
+    kv.install_prefill(0, 1, pre.plen, &pre.k_cache, &pre.v_cache)
+        .map_err(anyhow::Error::msg)?;
+    let mut toks = vec![0i32; m.decode_batch];
+    let mut pos = vec![0i32; m.decode_batch];
+    let mut active = vec![false; m.decode_batch];
+    toks[0] = next_tok;
+    pos[0] = pre.plen as i32;
+    active[0] = true;
+    let (logits, _) = backend.decode(&toks, &pos, &active, &mut kv)?;
+    Ok(logits[..m.vocab].to_vec())
 }
 
 /// (active slot count, mean context length) of one decode step.

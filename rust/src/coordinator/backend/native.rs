@@ -17,8 +17,13 @@
 //! (`orizuru::detect_outliers`), the main branch batched across slots via
 //! `WaqGemm::execute_batch` (the packed/tiled/threaded kernel), and the
 //! detected outliers routed through the error-compensation branch
-//! (`gemm::compensate`). Embeddings, norms, attention, and the tied LM
-//! head stay FP32, matching the paper (only GEMM layers are quantized).
+//! (`gemm::compensate`). Embeddings, norms, attention arithmetic, and
+//! the tied LM head stay FP32, matching the paper (only GEMM layers are
+//! quantized) — but decode attention *reads* K/V through the paged
+//! cache's block-table gather (`KvManager::key_scores`/`value_mix`) and
+//! appends each new token's rows in place, so when the engine serves an
+//! n-bit cache (`--kv-bits 4|3|2`) the dominant long-context traffic is
+//! index-domain too, with dequant fused into the dot/mix loops.
 //!
 //! The packed and direct kernels are bit-exact and the compensation math
 //! is identical across weight forms, so `native-packed` and
@@ -36,6 +41,7 @@ use anyhow::{anyhow, bail, Result};
 use super::{batch_occupancy, BackendSpec, CostModel, DecodeBackend, PrefillOut, StepCost};
 use crate::coordinator::kv::KvManager;
 use crate::gemm::{compensate, compensate_packed, CartesianLut, WaqBackend, WaqGemm};
+use crate::kvcache::KvQuantizer;
 use crate::orizuru;
 use crate::quant::{self, Codebook, OutlierCfg, QuantToken};
 use crate::runtime::artifacts::ModelCfg;
@@ -149,6 +155,18 @@ pub struct NativeWaqBackend {
     pos_emb: Matrix,
     lnf: Vec<f32>,
     layers: Vec<Layer>,
+    /// Calibration K/V rows per `[layer * n_heads + head]` (each row
+    /// `head_dim` long), retained so `kv_quantizer` can learn
+    /// per-layer/per-head cache codebooks at any requested bit-width —
+    /// callers may ask repeatedly and at different widths, so the rows
+    /// outlive construction. At this repro's model scales that is a few
+    /// hundred KB; a production port should drop them once the engine
+    /// has built its cache (or memoize books per width).
+    kv_calib_k: Vec<Vec<Vec<f32>>>,
+    kv_calib_v: Vec<Vec<Vec<f32>>>,
+    /// Total outlier fraction for the cache's Orizuru escape hatch
+    /// (same knob as the activation path's `OutlierCfg`).
+    kv_outlier_frac: f64,
     /// Total outlier channels routed through the compensation branch.
     outliers_seen: Arc<AtomicU64>,
 }
@@ -204,9 +222,23 @@ impl NativeWaqBackend {
             embed_into(x.row_mut(t), &tok_emb, &pos_emb, tok, t);
         }
         let mut taps: Vec<[Vec<Vec<f32>>; 4]> = Vec::with_capacity(m.n_layers);
+        // per-(layer, head) calibration K/V rows for the KV-cache codebooks
+        let mut kv_calib_k: Vec<Vec<Vec<f32>>> = Vec::with_capacity(m.n_layers * m.n_heads);
+        let mut kv_calib_v: Vec<Vec<Vec<f32>>> = Vec::with_capacity(m.n_layers * m.n_heads);
         for fl in &fp_layers {
             let xn = Matrix::from_vec(n, d, rms_rows(&x, &fl.ln1).concat());
             let qkv = xn.matmul(&fl.qkv);
+            let (h, hd) = (m.n_heads, m.head_dim);
+            for head in 0..h {
+                let k_rows = (0..n)
+                    .map(|t| qkv.row(t)[d + head * hd..d + (head + 1) * hd].to_vec())
+                    .collect();
+                let v_rows = (0..n)
+                    .map(|t| qkv.row(t)[2 * d + head * hd..2 * d + (head + 1) * hd].to_vec())
+                    .collect();
+                kv_calib_k.push(k_rows);
+                kv_calib_v.push(v_rows);
+            }
             let att = causal_attention(&qkv, m.n_heads, m.head_dim);
             add_matrix(&mut x, &att.matmul(&fl.attn_out));
             let xn2 = Matrix::from_vec(n, d, rms_rows(&x, &fl.ln2).concat());
@@ -245,6 +277,9 @@ impl NativeWaqBackend {
             pos_emb,
             lnf,
             layers,
+            kv_calib_k,
+            kv_calib_v,
+            kv_outlier_frac: cfg.outlier.total_frac,
             outliers_seen: Arc::new(AtomicU64::new(0)),
         })
     }
@@ -286,6 +321,25 @@ impl DecodeBackend for NativeWaqBackend {
 
     fn model(&self) -> ModelCfg {
         self.model
+    }
+
+    /// Per-layer/per-head cache codebooks learned from the same FP
+    /// calibration forward that trained the activation codebooks (the
+    /// K/V rows were retained at construction). The Orizuru escape hatch
+    /// inherits the backend's outlier fraction: `floor(frac * hd / 2)`
+    /// FP-preserved channels per side per row — zero until `frac * hd / 2
+    /// >= 1` (hd >= 200 at the paper's 1% fraction; see
+    /// `KvQuantizer::with_outlier_frac`), so small-head presets keep the
+    /// full 4x bytes/token win.
+    fn kv_quantizer(&self, bits: u32) -> KvQuantizer {
+        KvQuantizer::from_calibration(
+            self.model.n_heads,
+            self.model.head_dim,
+            bits,
+            &self.kv_calib_k,
+            &self.kv_calib_v,
+        )
+        .with_outlier_frac(self.kv_outlier_frac)
     }
 
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
@@ -377,26 +431,25 @@ impl DecodeBackend for NativeWaqBackend {
             let qkv = self.quant_forward(&layer.qkv, &xn, &mut waq_ns);
             let mut att_rows: Vec<Vec<f32>> = Vec::with_capacity(slots.len());
             for (bi, &slot) in slots.iter().enumerate() {
-                let p = (pos[slot] as usize).min(s - 1);
+                // no clamp: the paged cache's own bounds/protocol checks
+                // produce the precise diagnostic for a bad position
+                let p = pos[slot] as usize;
                 let row = &qkv[bi];
-                // append this token's K/V at its cache position
-                for head in 0..h {
-                    let base = ((l * b + slot) * h + head) * s * hd + p * hd;
-                    kv.k[base..base + hd]
-                        .copy_from_slice(&row[d + head * hd..d + (head + 1) * hd]);
-                    kv.v[base..base + hd]
-                        .copy_from_slice(&row[2 * d + head * hd..2 * d + (head + 1) * hd]);
-                }
-                // causal attention over cache positions 0..=p
+                // append this token's K/V at its cache position (the paged
+                // store quantizes in place when serving an n-bit cache)
+                kv.append_token(l, slot, p, &row[d..2 * d], &row[2 * d..3 * d])
+                    .map_err(|e| anyhow!("kv append: {e}"))?;
+                // causal attention over cache positions 0..=p, K/V read
+                // through the block-table gather with fused dequant
                 let scale = 1.0 / (hd as f32).sqrt();
                 let mut att = vec![0f32; d];
                 let mut scores = vec![0f32; p + 1];
                 for head in 0..h {
                     let q = &row[head * hd..(head + 1) * hd];
-                    let kbase = ((l * b + slot) * h + head) * s * hd;
+                    kv.key_scores(l, slot, head, p + 1, q, &mut scores);
                     let mut maxv = f32::NEG_INFINITY;
-                    for (sp, sc) in scores.iter_mut().enumerate() {
-                        *sc = dot(q, &kv.k[kbase + sp * hd..kbase + (sp + 1) * hd]) * scale;
+                    for sc in scores.iter_mut() {
+                        *sc *= scale;
                         maxv = maxv.max(*sc);
                     }
                     let mut denom = 0f32;
@@ -405,14 +458,11 @@ impl DecodeBackend for NativeWaqBackend {
                         denom += *sc;
                     }
                     let inv = 1.0 / denom;
-                    let orow = &mut att[head * hd..(head + 1) * hd];
-                    for (sp, &w) in scores.iter().enumerate() {
-                        let v = &kv.v[kbase + sp * hd..kbase + (sp + 1) * hd];
-                        let wn = w * inv;
-                        for (o, &vv) in orow.iter_mut().zip(v) {
-                            *o += wn * vv;
-                        }
+                    for sc in scores.iter_mut() {
+                        *sc *= inv;
                     }
+                    let orow = &mut att[head * hd..(head + 1) * hd];
+                    kv.value_mix(l, slot, head, p + 1, &scores, orow);
                 }
                 att_rows.push(att);
             }

@@ -141,8 +141,10 @@ impl DecodeBackend for PjrtBackend {
             Exec::Artifacts(a) => {
                 let exe = a.rt.load("decode_step")?;
                 let mut bufs: Vec<&DeviceBuffer> = a.weight_buffers.iter().collect();
-                let kb = a.rt.upload(&kv.k_tensor())?;
-                let vb = a.rt.upload(&kv.v_tensor())?;
+                // one dense materialization pass for both tensors
+                let (kt, vt) = kv.dense_tensors();
+                let kb = a.rt.upload(&kt)?;
+                let vb = a.rt.upload(&vt)?;
                 let tb = a.rt.upload(&HostTensor::i32(toks.to_vec(), &[b]))?;
                 let pb = a.rt.upload(&HostTensor::i32(pos.to_vec(), &[b]))?;
                 bufs.push(&kb);
@@ -153,7 +155,11 @@ impl DecodeBackend for PjrtBackend {
                 if out.len() != 3 {
                     bail!("decode_step artifact returned {} outputs, expected 3", out.len());
                 }
-                kv.update_from_step(&out[1], &out[2]).map_err(|e| anyhow!(e))?;
+                // scatter only the active slots' newly written positions
+                // into the paged cache (the artifact passes every other
+                // region through unchanged)
+                kv.update_from_step(&out[1], &out[2], pos, active)
+                    .map_err(|e| anyhow!(e))?;
                 out[0].as_f32()?.to_vec()
             }
             Exec::Stub => {

@@ -22,6 +22,7 @@ use super::batcher::{AdmitPolicy, Batcher};
 use super::kv::KvManager;
 use super::request::{EngineStats, FinishReason, Request, Response};
 use crate::gemm::WaqBackend;
+use crate::kvcache::{KvBits, KvPrecision};
 use crate::sim::OasisMode;
 use crate::util::rng::Rng;
 
@@ -36,6 +37,11 @@ pub struct EngineConfig {
     /// with a `CpuWaqModel` host clock). This is a real datapath switch:
     /// `native-*` serving throughput is measured on the LUT-GEMM kernels.
     pub backend: BackendSpec,
+    /// KV-cache storage precision (`--kv-bits {32,4,3,2}`): FP32 keeps
+    /// the cache bit-exact with the dense layout it replaced; n-bit
+    /// stores K-Means index streams with codebooks supplied by the
+    /// backend's `kv_quantizer`.
+    pub kv_bits: KvBits,
 }
 
 impl Default for EngineConfig {
@@ -45,6 +51,7 @@ impl Default for EngineConfig {
             seed: 0xE116,
             mode: OasisMode::a4(),
             backend: BackendSpec::default(),
+            kv_bits: KvBits::Fp32,
         }
     }
 }
@@ -80,9 +87,19 @@ impl Engine {
     /// describes how a `Coordinator` constructs one; here the caller has.)
     pub fn new(backend: Box<dyn DecodeBackend>, cfg: &EngineConfig) -> Engine {
         let m = backend.model();
-        let stats = EngineStats { waq_backend: backend.spec().name(), ..Default::default() };
+        let precision = match cfg.kv_bits {
+            KvBits::Fp32 => KvPrecision::Fp32,
+            quantized => KvPrecision::Quant(backend.kv_quantizer(quantized.bits())),
+        };
+        let kv = KvManager::with_precision(m, precision);
+        let stats = EngineStats {
+            waq_backend: backend.spec().name(),
+            kv_bits: cfg.kv_bits.bits(),
+            kv_bytes_per_token: kv.bytes_per_token(),
+            ..Default::default()
+        };
         Engine {
-            kv: KvManager::new(m),
+            kv,
             batcher: Batcher::new(cfg.policy),
             active: (0..m.decode_batch).map(|_| None).collect(),
             stats,
@@ -171,6 +188,10 @@ impl Engine {
             let responses = self.decode_step()?;
             done.extend(responses);
         }
+        // peak_cache_bytes is monotone; the running max just makes the
+        // stat robust to any future non-monotone accounting
+        self.stats.peak_kv_bytes =
+            self.stats.peak_kv_bytes.max(self.kv.peak_cache_bytes() as u64);
         Ok(done)
     }
 

@@ -1,9 +1,13 @@
-//! KV-cache slot manager: the decode artifact is lowered for a fixed slot
-//! count B and max context S; this module owns the host-side cache tensors
-//! and the slot lifecycle (free -> prefilled -> decoding -> free). Slot
-//! state is the coordinator invariant most heavily property-tested (no
-//! leaks, no double-assignments, position bounds).
+//! KV-cache slot manager: slot lifecycle (free -> prefilled -> decoding ->
+//! free) over the paged, precision-pluggable [`PagedKvCache`]. The decode
+//! artifact is lowered for a fixed slot count B and max context S; this
+//! module owns the admission-facing view of the cache — which request
+//! holds which slot, at which position — while block allocation and
+//! payload storage (FP32 or n-bit K-Means) live in `crate::kvcache`.
+//! Slot state is the coordinator invariant most heavily property-tested
+//! (no leaks, no double-assignments, position bounds).
 
+use crate::kvcache::{KvPrecision, PagedKvCache};
 use crate::runtime::artifacts::ModelCfg;
 use crate::runtime::HostTensor;
 
@@ -17,28 +21,33 @@ pub enum Slot {
 
 pub struct KvManager {
     pub cfg: ModelCfg,
-    /// (L, B, H, S, hd) host caches
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
     pub slots: Vec<Slot>,
-    /// elements per (layer, slot) block: H * S * hd
-    per_slot: usize,
-    per_layer: usize,
+    cache: PagedKvCache,
 }
 
 impl KvManager {
+    /// FP32 storage (bit-exact with the dense cache this replaced).
     pub fn new(cfg: ModelCfg) -> Self {
-        let per_slot = cfg.n_heads * cfg.seq_len * cfg.head_dim;
-        let per_layer = cfg.decode_batch * per_slot;
-        let total = cfg.n_layers * per_layer;
+        Self::with_precision(cfg, KvPrecision::Fp32)
+    }
+
+    pub fn with_precision(cfg: ModelCfg, precision: KvPrecision) -> Self {
         KvManager {
-            cfg,
-            k: vec![0.0; total],
-            v: vec![0.0; total],
+            cache: PagedKvCache::new(&cfg, precision),
             slots: vec![Slot::Free; cfg.decode_batch],
-            per_slot,
-            per_layer,
+            cfg,
         }
+    }
+
+    /// The paged storage behind the slots (fused-dequant gather surface
+    /// and block-table introspection).
+    pub fn cache(&self) -> &PagedKvCache {
+        &self.cache
+    }
+
+    /// Stored bits per cache element (32 = FP32).
+    pub fn bits(&self) -> u32 {
+        self.cache.bits()
     }
 
     pub fn kv_shape(&self) -> Vec<usize> {
@@ -62,7 +71,9 @@ impl KvManager {
             .count()
     }
 
-    /// Install a prefilled (L, 1, H, S, hd) cache pair into `slot`.
+    /// Install a prefilled (L, 1, H, S, hd) cache pair into `slot`: only
+    /// positions `0..prompt_len` are read (and quantized, for n-bit
+    /// storage) — the tail of the dense tensors is ignored.
     pub fn install_prefill(
         &mut self,
         slot: usize,
@@ -81,27 +92,114 @@ impl KvManager {
             kc.as_f32().map_err(|e| e.to_string())?,
             vc.as_f32().map_err(|e| e.to_string())?,
         );
+        let (h, hd, s) = (self.cfg.n_heads, self.cfg.head_dim, self.cfg.seq_len);
+        if kc.len() != self.cfg.n_layers * h * s * hd || vc.len() != kc.len() {
+            return Err("prefill kv size mismatch".into());
+        }
+        let mut krow = vec![0f32; h * hd];
+        let mut vrow = vec![0f32; h * hd];
         for l in 0..self.cfg.n_layers {
-            let src = &kc[l * self.per_slot..(l + 1) * self.per_slot];
-            let dst_off = l * self.per_layer + slot * self.per_slot;
-            self.k[dst_off..dst_off + self.per_slot].copy_from_slice(src);
-            let src = &vc[l * self.per_slot..(l + 1) * self.per_slot];
-            self.v[dst_off..dst_off + self.per_slot].copy_from_slice(src);
+            for t in 0..prompt_len {
+                for head in 0..h {
+                    let src = (l * h + head) * s * hd + t * hd;
+                    krow[head * hd..(head + 1) * hd].copy_from_slice(&kc[src..src + hd]);
+                    vrow[head * hd..(head + 1) * hd].copy_from_slice(&vc[src..src + hd]);
+                }
+                self.cache.append(l, slot, t, &krow, &vrow)?;
+            }
         }
         self.slots[slot] = Slot::Active { request, pos: prompt_len };
         Ok(())
     }
 
-    /// Replace the whole cache pair from a decode_step output.
-    pub fn update_from_step(&mut self, kc: &HostTensor, vc: &HostTensor) -> Result<(), String> {
+    /// Scatter a decode step's output caches into the paged store: only
+    /// each *active* slot's row at its write position `pos[slot]` is read
+    /// from the dense (L, B, H, S, hd) tensors — every other region is
+    /// ignored, so untouched slots are preserved verbatim (the step
+    /// artifact passes them through unchanged).
+    pub fn update_from_step(
+        &mut self,
+        kc: &HostTensor,
+        vc: &HostTensor,
+        pos: &[i32],
+        active: &[bool],
+    ) -> Result<(), String> {
         let k = kc.as_f32().map_err(|e| e.to_string())?;
         let v = vc.as_f32().map_err(|e| e.to_string())?;
-        if k.len() != self.k.len() || v.len() != self.v.len() {
+        let (b, h, hd, s) = (
+            self.cfg.decode_batch,
+            self.cfg.n_heads,
+            self.cfg.head_dim,
+            self.cfg.seq_len,
+        );
+        if k.len() != self.cfg.n_layers * b * h * s * hd || v.len() != k.len() {
             return Err("kv size mismatch".into());
         }
-        self.k.copy_from_slice(k);
-        self.v.copy_from_slice(v);
+        if pos.len() != b || active.len() != b {
+            return Err("kv slot arity mismatch".into());
+        }
+        let mut krow = vec![0f32; h * hd];
+        let mut vrow = vec![0f32; h * hd];
+        for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
+            let p = pos[slot] as usize;
+            if p >= s {
+                return Err(format!("step pos {p} beyond context {s}"));
+            }
+            for l in 0..self.cfg.n_layers {
+                for head in 0..h {
+                    let src = ((l * b + slot) * h + head) * s * hd + p * hd;
+                    krow[head * hd..(head + 1) * hd].copy_from_slice(&k[src..src + hd]);
+                    vrow[head * hd..(head + 1) * hd].copy_from_slice(&v[src..src + hd]);
+                }
+                self.cache.append(l, slot, p, &krow, &vrow)?;
+            }
+        }
         Ok(())
+    }
+
+    /// Append one token's K/V rows (head-major, length H * hd each) for
+    /// `(layer, slot)` at cache position `pos` — the native backend's
+    /// in-place quantizing write path.
+    pub fn append_token(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<(), String> {
+        self.cache.append(layer, slot, pos, k_row, v_row)
+    }
+
+    /// Fused-dequant key gather through the slot's block table (see
+    /// [`PagedKvCache::key_scores`]).
+    pub fn key_scores(
+        &self,
+        layer: usize,
+        slot: usize,
+        head: usize,
+        n: usize,
+        q: &[f32],
+        scores: &mut [f32],
+    ) {
+        self.cache.key_scores(layer, slot, head, n, q, scores)
+    }
+
+    /// Fused-dequant value mix through the slot's block table (see
+    /// [`PagedKvCache::value_mix`]).
+    pub fn value_mix(
+        &self,
+        layer: usize,
+        slot: usize,
+        head: usize,
+        n: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        self.cache.value_mix(layer, slot, head, n, w, out)
     }
 
     pub fn advance(&mut self, slot: usize) -> Result<usize, String> {
@@ -135,23 +233,44 @@ impl KvManager {
             .unwrap_or(false)
     }
 
+    /// Free the slot and return its blocks to the pool — copy-free: no
+    /// zero-fill. Stale keys still can't leak into the next request:
+    /// reads are bounded by written counts, which reset to zero here, and
+    /// dense materialization emits zeros for unmapped positions.
     pub fn release(&mut self, slot: usize) {
         self.slots[slot] = Slot::Free;
-        // zero the slot's cache region so stale keys can't leak into the
-        // next request via nonzero garbage at masked positions
-        for l in 0..self.cfg.n_layers {
-            let off = l * self.per_layer + slot * self.per_slot;
-            self.k[off..off + self.per_slot].fill(0.0);
-            self.v[off..off + self.per_slot].fill(0.0);
-        }
+        self.cache.release(slot);
+    }
+
+    /// Peak reserved cache bytes (lazy pool growth: reflects real usage).
+    pub fn peak_cache_bytes(&self) -> usize {
+        self.cache.peak_bytes()
+    }
+
+    /// Ideal storage bytes per token position (all layers, K + V).
+    pub fn bytes_per_token(&self) -> f64 {
+        self.cache.bytes_per_token()
+    }
+
+    /// Materialize both dense (L, B, H, S, hd) cache tensors in one pass
+    /// — the PJRT artifact contract (callers needing both should use this
+    /// rather than `k_tensor()` + `v_tensor()`, which would walk and
+    /// dequantize the whole cache twice).
+    pub fn dense_tensors(&self) -> (HostTensor, HostTensor) {
+        let shape = self.kv_shape();
+        let total: usize = shape.iter().product();
+        let mut k = vec![0f32; total];
+        let mut v = vec![0f32; total];
+        self.cache.fill_dense(&mut k, &mut v);
+        (HostTensor::f32(k, &shape), HostTensor::f32(v, &shape))
     }
 
     pub fn k_tensor(&self) -> HostTensor {
-        HostTensor::f32(self.k.clone(), &self.kv_shape())
+        self.dense_tensors().0
     }
 
     pub fn v_tensor(&self) -> HostTensor {
-        HostTensor::f32(self.v.clone(), &self.kv_shape())
+        self.dense_tensors().1
     }
 }
 
@@ -183,6 +302,10 @@ mod tests {
         )
     }
 
+    fn dense_k(kv: &KvManager) -> Vec<f32> {
+        kv.k_tensor().as_f32().unwrap().to_vec()
+    }
+
     #[test]
     fn slot_lifecycle() {
         let c = cfg();
@@ -196,7 +319,10 @@ mod tests {
         assert_eq!(kv.advance(0).unwrap(), 6);
         kv.release(0);
         assert_eq!(kv.free_slot(), Some(0));
-        assert!(kv.k.iter().all(|&x| x == 0.0));
+        // stale-key-leak guard: a released slot materializes as zeros
+        // (blocks are unmapped, not zero-filled — release is copy-free)
+        assert!(dense_k(&kv).iter().all(|&x| x == 0.0));
+        assert_eq!(kv.cache().in_use_blocks(), 0);
     }
 
     #[test]
@@ -214,10 +340,72 @@ mod tests {
         let mut kv = KvManager::new(c);
         let (kc, vc) = prefill_pair(&c, 2.5);
         kv.install_prefill(1, 9, 4, &kc, &vc).unwrap();
+        let k = dense_k(&kv);
         let per_slot = c.n_heads * c.seq_len * c.head_dim;
-        // slot 0 region still zero, slot 1 region filled
-        assert!(kv.k[..per_slot].iter().all(|&x| x == 0.0));
-        assert!(kv.k[per_slot..2 * per_slot].iter().all(|&x| x == 2.5));
+        // slot 0 region still zero, slot 1 filled at positions 0..4 only
+        assert!(k[..per_slot].iter().all(|&x| x == 0.0));
+        let slot1 = &k[per_slot..2 * per_slot];
+        for head in 0..c.n_heads {
+            for t in 0..c.seq_len {
+                let off = (head * c.seq_len + t) * c.head_dim;
+                let want = if t < 4 { 2.5 } else { 0.0 };
+                assert!(
+                    slot1[off..off + c.head_dim].iter().all(|&x| x == want),
+                    "head {head} pos {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn update_from_step_writes_only_active_slots_new_position() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        let (kc, vc) = prefill_pair(&c, 1.0);
+        kv.install_prefill(0, 1, 3, &kc, &vc).unwrap();
+        let (kc2, vc2) = prefill_pair(&c, 4.0);
+        kv.install_prefill(1, 2, 5, &kc2, &vc2).unwrap();
+        let before = dense_k(&kv);
+
+        // a step tensor full of marker values; only slot 0 is active at
+        // position 3, so exactly one (H, hd) row per layer may change
+        let shape = kv.kv_shape();
+        let n: usize = shape.iter().product();
+        let step_k = HostTensor::f32(vec![9.0; n], &shape);
+        let step_v = HostTensor::f32(vec![-9.0; n], &shape);
+        kv.update_from_step(&step_k, &step_v, &[3, 0], &[true, false]).unwrap();
+
+        let after = dense_k(&kv);
+        let (h, hd, s) = (c.n_heads, c.head_dim, c.seq_len);
+        let mut changed = 0usize;
+        for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+            if b != a {
+                changed += 1;
+                // decompose the dense index: (l, slot, head, t, ch)
+                let t = (i / hd) % s;
+                let slot = (i / (h * s * hd)) % c.decode_batch;
+                assert_eq!(slot, 0, "inactive slot region modified at {i}");
+                assert_eq!(t, 3, "wrong position written at {i}");
+                assert_eq!(*a, 9.0);
+            }
+        }
+        assert_eq!(changed, c.n_layers * h * hd, "exactly one row per layer");
+    }
+
+    #[test]
+    fn update_from_step_rejects_bad_shapes() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        let bad = HostTensor::f32(vec![0.0; 8], &[8]);
+        assert!(kv.update_from_step(&bad, &bad, &[0, 0], &[false, false]).is_err());
+        let shape = kv.kv_shape();
+        let n: usize = shape.iter().product();
+        let ok = HostTensor::f32(vec![0.0; n], &shape);
+        assert!(kv.update_from_step(&ok, &ok, &[0], &[false]).is_err(), "arity");
+        // inactive slots are skipped entirely, so garbage pos is fine there
+        assert!(kv
+            .update_from_step(&ok, &ok, &[1 << 20, 0], &[false, false])
+            .is_ok());
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! L3 serving coordinator: request router, continuous batcher, KV slot
-//! manager, the backend-agnostic engine, and the leader thread + TCP
-//! front-end. Python never runs here — decode compute goes through a
-//! [`backend::DecodeBackend`]: either AOT PJRT artifacts or the native
-//! K-Means WAQ LUT-GEMM datapath.
+//! manager (over the paged `crate::kvcache` subsystem, FP32 or n-bit
+//! K-Means storage via `EngineConfig::kv_bits`), the backend-agnostic
+//! engine, and the leader thread + TCP front-end. Python never runs here
+//! — decode compute goes through a [`backend::DecodeBackend`]: either
+//! AOT PJRT artifacts or the native K-Means WAQ LUT-GEMM datapath.
 
 pub mod backend;
 pub mod batcher;
@@ -12,11 +13,13 @@ pub mod request;
 pub mod server;
 
 pub use backend::{
-    BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PjrtBackend, PrefillOut,
-    StepCost,
+    probe_decode_logits, BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend,
+    PjrtBackend, PrefillOut, StepCost,
 };
 pub use batcher::{AdmitPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, SimTotals};
 pub use kv::KvManager;
+// the KV precision knob is part of the engine-config surface
+pub use crate::kvcache::KvBits;
 pub use request::{EngineStats, FinishReason, Request, RequestId, Response};
 pub use server::{serve_tcp, Coordinator};

@@ -71,6 +71,14 @@ pub struct EngineStats {
     /// LUT-GEMM datapath, the modeled `baselines::cpu::CpuWaqModel`
     /// roofline when decode runs PJRT artifacts
     pub host_waq_s: f64,
+    /// KV-cache storage bits per element (32 = FP32; 0 before engine
+    /// construction)
+    pub kv_bits: u32,
+    /// peak reserved KV-cache bytes (lazy block-pool growth: reflects
+    /// actual usage, not the worst-case dense footprint)
+    pub peak_kv_bytes: u64,
+    /// ideal KV-cache storage bytes per token position (all layers, K+V)
+    pub kv_bytes_per_token: f64,
 }
 
 impl EngineStats {

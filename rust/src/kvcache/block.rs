@@ -1,0 +1,106 @@
+//! Fixed-size block allocator: a free list over a bounded pool of block
+//! ids. Blocks are handed to `(slot, layer)` block tables by
+//! [`super::PagedKvCache`]; releasing is O(blocks) pointer pushes — the
+//! payload is never copied or zeroed (reads are bounded by written
+//! counts, so stale payloads are unobservable).
+
+/// Free-list allocator over block ids `0..capacity`.
+///
+/// Ids are minted lazily (`high_water` tracks how many ever existed), so
+/// backing storage can grow on demand and the peak footprint reflects
+/// actual usage rather than the worst case.
+#[derive(Clone, Debug)]
+pub struct BlockAllocator {
+    /// released ids available for reuse (LIFO: hot blocks are reused first)
+    free: Vec<u32>,
+    /// next never-used id
+    next: u32,
+    capacity: u32,
+    /// liveness bitmap over minted ids (guards double-release)
+    live: Vec<bool>,
+}
+
+impl BlockAllocator {
+    pub fn new(capacity: usize) -> BlockAllocator {
+        BlockAllocator {
+            free: Vec::new(),
+            next: 0,
+            capacity: capacity as u32,
+            live: Vec::new(),
+        }
+    }
+
+    /// Hand out a block id, reusing released ids before minting new ones.
+    /// `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                if self.next >= self.capacity {
+                    return None;
+                }
+                let id = self.next;
+                self.next += 1;
+                self.live.push(false);
+                id
+            }
+        };
+        debug_assert!(!self.live[id as usize], "allocated a live block {id}");
+        self.live[id as usize] = true;
+        Some(id)
+    }
+
+    /// Return a block to the free list. Double-release is a caller bug and
+    /// panics (it would alias one block into two tables).
+    pub fn release(&mut self, id: u32) {
+        assert!(
+            self.live.get(id as usize).copied().unwrap_or(false),
+            "release of non-live block {id}"
+        );
+        self.live[id as usize] = false;
+        self.free.push(id);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity as usize
+    }
+
+    /// Blocks currently assigned to a table.
+    pub fn in_use(&self) -> usize {
+        self.next as usize - self.free.len()
+    }
+
+    /// Blocks ever minted — the backing-storage high-water mark.
+    pub fn high_water(&self) -> usize {
+        self.next as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_reuse() {
+        let mut a = BlockAllocator::new(2);
+        let b0 = a.alloc().unwrap();
+        let b1 = a.alloc().unwrap();
+        assert_ne!(b0, b1);
+        assert_eq!(a.alloc(), None, "pool exhausted");
+        assert_eq!(a.in_use(), 2);
+        a.release(b0);
+        assert_eq!(a.in_use(), 1);
+        // released id is reused; high-water stays at 2
+        assert_eq!(a.alloc(), Some(b0));
+        assert_eq!(a.high_water(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-live")]
+    fn double_release_panics() {
+        let mut a = BlockAllocator::new(1);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.release(b);
+    }
+}

@@ -1,0 +1,806 @@
+//! The paged KV cache: block tables over a free-list allocator, with a
+//! pluggable payload store (FP32 or n-bit K-Means). See the module docs
+//! in [`super`] for the block layout and bytes/token math.
+//!
+//! The attention-facing surface is deliberately *fused*: [`key_scores`]
+//! computes `q . K[pos]` and [`value_mix`] accumulates `w[pos] * V[pos]`
+//! straight off the stored representation — for quantized payloads the
+//! centroid lookup happens inside the dot/mix loops, so no FP32 copy of
+//! the cache is ever materialized on the decode path. For FP32 payloads
+//! both primitives reproduce the exact accumulation order of the dense
+//! attention loops they replaced, keeping `--kv-bits 32` bit-exact.
+//!
+//! [`key_scores`]: PagedKvCache::key_scores
+//! [`value_mix`]: PagedKvCache::value_mix
+
+use super::block::BlockAllocator;
+use super::quantized::{read_idx, KvQuantizer, KvSide};
+use crate::runtime::artifacts::ModelCfg;
+
+/// Storage precision of a [`PagedKvCache`].
+pub enum KvPrecision {
+    /// Raw f32 payloads — bit-exact with the dense cache it replaces.
+    Fp32,
+    /// n-bit K-Means index streams driven by the given quantizer.
+    Quant(KvQuantizer),
+}
+
+/// Bytes per stored outlier entry: u16 channel + f32 value (accounted,
+/// not byte-packed — outliers live in a side table).
+const OUTLIER_BYTES: usize = 6;
+
+/// Shared per-block geometry.
+#[derive(Clone, Copy)]
+struct Geom {
+    block_tokens: usize,
+    n_heads: usize,
+    head_dim: usize,
+}
+
+impl Geom {
+    /// Row index of `(head, tok_in_block)` within a block.
+    #[inline]
+    fn row(&self, block: u32, head: usize, ti: usize) -> usize {
+        block as usize * self.block_tokens * self.n_heads + head * self.block_tokens + ti
+    }
+}
+
+struct Fp32Store {
+    geom: Geom,
+    /// per block: `block_tokens * n_heads * head_dim` f32, head-major
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+struct QuantStore {
+    geom: Geom,
+    quantizer: KvQuantizer,
+    /// packed index pools: `row_bytes` bytes per `(head, tok)` row
+    k_idx: Vec<u8>,
+    v_idx: Vec<u8>,
+    /// per-row scales
+    k_scale: Vec<f32>,
+    v_scale: Vec<f32>,
+    /// FP-preserved channels per row (empty unless the escape hatch is on)
+    k_out: Vec<Vec<(u16, f32)>>,
+    v_out: Vec<Vec<(u16, f32)>>,
+    row_bytes: usize,
+    /// running count of live outlier entries across all rows (kept by
+    /// `write_token`/`release_block`, so byte accounting is O(1) on the
+    /// per-step stats path instead of an all-rows walk)
+    outlier_entries: usize,
+    /// high-water mark of `outlier_entries` (keeps `peak_bytes` monotone)
+    peak_outlier_entries: usize,
+}
+
+enum Store {
+    Fp32(Fp32Store),
+    Quant(QuantStore),
+}
+
+/// Paged, precision-pluggable KV cache for `decode_batch` slots.
+pub struct PagedKvCache {
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    seq_len: usize,
+    n_slots: usize,
+    block_tokens: usize,
+    alloc: BlockAllocator,
+    /// `[slot * n_layers + layer]` -> ordered block ids covering positions
+    /// `[0, written)`
+    tables: Vec<Vec<u32>>,
+    /// `[slot * n_layers + layer]` -> written position count
+    written: Vec<usize>,
+    store: Store,
+}
+
+impl PagedKvCache {
+    /// Block granularity: 16 token positions (or the whole context when
+    /// the model's window is smaller).
+    pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+    pub fn new(m: &ModelCfg, precision: KvPrecision) -> PagedKvCache {
+        let block_tokens = Self::DEFAULT_BLOCK_TOKENS.min(m.seq_len.max(1));
+        let blocks_per = m.seq_len.div_ceil(block_tokens);
+        let capacity = m.decode_batch * m.n_layers * blocks_per;
+        let geom = Geom { block_tokens, n_heads: m.n_heads, head_dim: m.head_dim };
+        let store = match precision {
+            KvPrecision::Fp32 => Store::Fp32(Fp32Store { geom, k: Vec::new(), v: Vec::new() }),
+            KvPrecision::Quant(quantizer) => {
+                assert_eq!(
+                    quantizer.head_dim(),
+                    m.head_dim,
+                    "quantizer head_dim mismatch"
+                );
+                Store::Quant(QuantStore {
+                    geom,
+                    row_bytes: quantizer.row_bytes(),
+                    quantizer,
+                    k_idx: Vec::new(),
+                    v_idx: Vec::new(),
+                    k_scale: Vec::new(),
+                    v_scale: Vec::new(),
+                    k_out: Vec::new(),
+                    v_out: Vec::new(),
+                    outlier_entries: 0,
+                    peak_outlier_entries: 0,
+                })
+            }
+        };
+        PagedKvCache {
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            head_dim: m.head_dim,
+            seq_len: m.seq_len,
+            n_slots: m.decode_batch,
+            block_tokens,
+            alloc: BlockAllocator::new(capacity),
+            tables: vec![Vec::new(); m.decode_batch * m.n_layers],
+            written: vec![0; m.decode_batch * m.n_layers],
+            store,
+        }
+    }
+
+    /// Stored bits per cache element: 32 for FP32, else the codebook
+    /// bit-width.
+    pub fn bits(&self) -> u32 {
+        match &self.store {
+            Store::Fp32(_) => 32,
+            Store::Quant(q) => q.quantizer.bits(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    #[inline]
+    fn entry(&self, layer: usize, slot: usize) -> usize {
+        debug_assert!(layer < self.n_layers && slot < self.n_slots);
+        slot * self.n_layers + layer
+    }
+
+    /// Written position count for `(layer, slot)`.
+    pub fn written(&self, layer: usize, slot: usize) -> usize {
+        self.written[self.entry(layer, slot)]
+    }
+
+    /// The `(layer, slot)` block table (introspection for invariants and
+    /// property tests).
+    pub fn slot_blocks(&self, layer: usize, slot: usize) -> &[u32] {
+        &self.tables[self.entry(layer, slot)]
+    }
+
+    /// Blocks currently assigned across all tables.
+    pub fn in_use_blocks(&self) -> usize {
+        self.alloc.in_use()
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.alloc.capacity()
+    }
+
+    /// Append one token's K and V rows (each `n_heads * head_dim`,
+    /// head-major) for `(layer, slot)` at position `pos`. Writes are
+    /// strictly append-only: `pos` must equal the written count.
+    pub fn append(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<(), String> {
+        if layer >= self.n_layers || slot >= self.n_slots {
+            return Err(format!("append out of range: layer {layer} slot {slot}"));
+        }
+        if pos >= self.seq_len {
+            return Err(format!("append pos {pos} beyond context {}", self.seq_len));
+        }
+        let d = self.n_heads * self.head_dim;
+        if k_row.len() != d || v_row.len() != d {
+            return Err(format!("append row length {} != {d}", k_row.len()));
+        }
+        let e = self.entry(layer, slot);
+        if pos != self.written[e] {
+            return Err(format!(
+                "append out of order: pos {pos}, written {}",
+                self.written[e]
+            ));
+        }
+        let bi = pos / self.block_tokens;
+        if bi == self.tables[e].len() {
+            let id = self
+                .alloc
+                .alloc()
+                .ok_or_else(|| "kv block pool exhausted".to_string())?;
+            self.store.ensure(id);
+            self.tables[e].push(id);
+        }
+        let block = self.tables[e][bi];
+        let ti = pos % self.block_tokens;
+        self.store.write_token(block, ti, layer, k_row, v_row);
+        self.written[e] = pos + 1;
+        Ok(())
+    }
+
+    /// Fused-dequant key gather: `scores[j] = q . K[layer, slot, head, j]`
+    /// for `j in 0..n` (raw dot products — the caller applies its own
+    /// softmax scale). `n` must not exceed the written count.
+    pub fn key_scores(
+        &self,
+        layer: usize,
+        slot: usize,
+        head: usize,
+        n: usize,
+        q: &[f32],
+        scores: &mut [f32],
+    ) {
+        let e = self.entry(layer, slot);
+        assert!(n <= self.written[e], "key gather beyond written positions");
+        let table = &self.tables[e];
+        for (j, sc) in scores.iter_mut().enumerate().take(n) {
+            let block = table[j / self.block_tokens];
+            let ti = j % self.block_tokens;
+            *sc = self.store.key_dot(block, ti, layer, head, q);
+        }
+    }
+
+    /// Fused-dequant value mix: `out[c] += w[j] * V[layer, slot, head, j][c]`
+    /// for `j in 0..n`, accumulating in position order (bit-identical to
+    /// the dense loop for FP32 payloads).
+    pub fn value_mix(
+        &self,
+        layer: usize,
+        slot: usize,
+        head: usize,
+        n: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        let e = self.entry(layer, slot);
+        assert!(n <= self.written[e], "value gather beyond written positions");
+        let table = &self.tables[e];
+        for (j, &wj) in w.iter().enumerate().take(n) {
+            let block = table[j / self.block_tokens];
+            let ti = j % self.block_tokens;
+            self.store.value_mix_into(block, ti, layer, head, wj, out);
+        }
+    }
+
+    /// Dequantize one written position into head-major `n_heads * head_dim`
+    /// rows (dense materialization and tests).
+    pub fn read_row(
+        &self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let e = self.entry(layer, slot);
+        assert!(pos < self.written[e], "read of unwritten position {pos}");
+        let block = self.tables[e][pos / self.block_tokens];
+        let ti = pos % self.block_tokens;
+        self.store.read_token(block, ti, layer, k_out, v_out);
+    }
+
+    /// Release every block of `slot` back to the free list — copy-free:
+    /// no payload is touched. Unwritten (and now unmapped) positions
+    /// materialize as zeros, so stale keys cannot leak into the slot's
+    /// next tenant. Only the outlier *side table* of each freed block is
+    /// cleared (accounting metadata, not payload): otherwise
+    /// `allocated_bytes`/`peak_bytes` would keep counting freed rows'
+    /// FP-preserved channels.
+    pub fn release(&mut self, slot: usize) {
+        for layer in 0..self.n_layers {
+            let e = self.entry(layer, slot);
+            let blocks = std::mem::take(&mut self.tables[e]);
+            for id in blocks {
+                self.store.release_block(id);
+                self.alloc.release(id);
+            }
+            self.written[e] = 0;
+        }
+    }
+
+    /// Materialize the dense `(L, B, H, S, hd)` cache pair, zeros at
+    /// unwritten positions (the PJRT artifact contract). The buffers are
+    /// zeroed here, so reused scratch space can never leak a released
+    /// slot's stale rows into the dense view.
+    pub fn fill_dense(&self, k_out: &mut [f32], v_out: &mut [f32]) {
+        let (h, hd, s) = (self.n_heads, self.head_dim, self.seq_len);
+        let total = self.n_layers * self.n_slots * h * s * hd;
+        assert!(k_out.len() == total && v_out.len() == total, "dense size mismatch");
+        k_out.fill(0.0);
+        v_out.fill(0.0);
+        let mut krow = vec![0f32; h * hd];
+        let mut vrow = vec![0f32; h * hd];
+        for slot in 0..self.n_slots {
+            for layer in 0..self.n_layers {
+                for pos in 0..self.written(layer, slot) {
+                    self.read_row(layer, slot, pos, &mut krow, &mut vrow);
+                    for head in 0..h {
+                        let dst =
+                            ((layer * self.n_slots + slot) * h + head) * s * hd + pos * hd;
+                        k_out[dst..dst + hd]
+                            .copy_from_slice(&krow[head * hd..(head + 1) * hd]);
+                        v_out[dst..dst + hd]
+                            .copy_from_slice(&vrow[head * hd..(head + 1) * hd]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fixed bytes per block (K + V payloads; excludes the outlier side
+    /// table, which is accounted separately).
+    fn block_bytes(&self) -> usize {
+        let rows = self.block_tokens * self.n_heads;
+        match &self.store {
+            Store::Fp32(_) => 2 * rows * self.head_dim * 4,
+            Store::Quant(s) => 2 * rows * (s.row_bytes + 4),
+        }
+    }
+
+    /// Live outlier side-table bytes — O(1) via the store's running
+    /// counter (this sits on the engine's per-step stats path).
+    fn outlier_bytes(&self) -> usize {
+        match &self.store {
+            Store::Fp32(_) => 0,
+            Store::Quant(s) => s.outlier_entries * OUTLIER_BYTES,
+        }
+    }
+
+    /// Bytes currently assigned to live blocks.
+    pub fn allocated_bytes(&self) -> usize {
+        self.alloc.in_use() * self.block_bytes() + self.outlier_bytes()
+    }
+
+    /// High-water mark of reserved cache storage — monotone: block-pool
+    /// growth is lazy (reflects actual peak usage, not the worst case)
+    /// and the outlier term is its own tracked maximum.
+    pub fn peak_bytes(&self) -> usize {
+        let peak_outliers = match &self.store {
+            Store::Fp32(_) => 0,
+            Store::Quant(s) => s.peak_outlier_entries * OUTLIER_BYTES,
+        };
+        self.alloc.high_water() * self.block_bytes() + peak_outliers
+    }
+
+    /// Ideal storage bytes per appended token position across all layers,
+    /// K + V (see the module docs for the formula).
+    pub fn bytes_per_token(&self) -> f64 {
+        let per_row = match &self.store {
+            Store::Fp32(_) => (self.head_dim * 4) as f64,
+            Store::Quant(s) => {
+                (s.row_bytes + 4) as f64
+                    + (s.quantizer.outliers_per_side() * 2 * OUTLIER_BYTES) as f64
+            }
+        };
+        (self.n_layers * 2 * self.n_heads) as f64 * per_row
+    }
+}
+
+impl Store {
+    /// Grow backing pools so block `id` is addressable.
+    fn ensure(&mut self, id: u32) {
+        let n = id as usize + 1;
+        match self {
+            Store::Fp32(s) => {
+                let elems = s.geom.block_tokens * s.geom.n_heads * s.geom.head_dim;
+                s.k.resize(n * elems, 0.0);
+                s.v.resize(n * elems, 0.0);
+            }
+            Store::Quant(s) => {
+                let rows = s.geom.block_tokens * s.geom.n_heads;
+                s.k_idx.resize(n * rows * s.row_bytes, 0);
+                s.v_idx.resize(n * rows * s.row_bytes, 0);
+                s.k_scale.resize(n * rows, 0.0);
+                s.v_scale.resize(n * rows, 0.0);
+                s.k_out.resize(n * rows, Vec::new());
+                s.v_out.resize(n * rows, Vec::new());
+            }
+        }
+    }
+
+    /// Drop per-row accounting metadata of a freed block (outlier side
+    /// table). Payloads are deliberately left as-is — release stays
+    /// copy-free.
+    fn release_block(&mut self, block: u32) {
+        if let Store::Quant(s) = self {
+            let rows = s.geom.block_tokens * s.geom.n_heads;
+            let base = block as usize * rows;
+            for row in base..base + rows {
+                s.outlier_entries -= s.k_out[row].len() + s.v_out[row].len();
+                s.k_out[row] = Vec::new();
+                s.v_out[row] = Vec::new();
+            }
+        }
+    }
+
+    fn write_token(&mut self, block: u32, ti: usize, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        match self {
+            Store::Fp32(s) => {
+                let hd = s.geom.head_dim;
+                for head in 0..s.geom.n_heads {
+                    let off = s.geom.row(block, head, ti) * hd;
+                    s.k[off..off + hd].copy_from_slice(&k_row[head * hd..(head + 1) * hd]);
+                    s.v[off..off + hd].copy_from_slice(&v_row[head * hd..(head + 1) * hd]);
+                }
+            }
+            Store::Quant(s) => {
+                // quantize straight into the pooled slices — no per-row
+                // allocation on the decode-hot write path
+                let hd = s.geom.head_dim;
+                for head in 0..s.geom.n_heads {
+                    let row = s.geom.row(block, head, ti);
+                    let (k_scale, k_outs) = s.quantizer.quantize_row_into(
+                        layer,
+                        head,
+                        KvSide::Key,
+                        &k_row[head * hd..(head + 1) * hd],
+                        &mut s.k_idx[row * s.row_bytes..(row + 1) * s.row_bytes],
+                    );
+                    let (v_scale, v_outs) = s.quantizer.quantize_row_into(
+                        layer,
+                        head,
+                        KvSide::Val,
+                        &v_row[head * hd..(head + 1) * hd],
+                        &mut s.v_idx[row * s.row_bytes..(row + 1) * s.row_bytes],
+                    );
+                    s.k_scale[row] = k_scale;
+                    s.v_scale[row] = v_scale;
+                    let old = s.k_out[row].len() + s.v_out[row].len();
+                    s.k_out[row] = k_outs;
+                    s.v_out[row] = v_outs;
+                    s.outlier_entries = s.outlier_entries + s.k_out[row].len()
+                        + s.v_out[row].len()
+                        - old;
+                    s.peak_outlier_entries =
+                        s.peak_outlier_entries.max(s.outlier_entries);
+                }
+            }
+        }
+    }
+
+    fn read_token(&self, block: u32, ti: usize, layer: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        match self {
+            Store::Fp32(s) => {
+                let hd = s.geom.head_dim;
+                for head in 0..s.geom.n_heads {
+                    let off = s.geom.row(block, head, ti) * hd;
+                    k_out[head * hd..(head + 1) * hd].copy_from_slice(&s.k[off..off + hd]);
+                    v_out[head * hd..(head + 1) * hd].copy_from_slice(&s.v[off..off + hd]);
+                }
+            }
+            Store::Quant(s) => {
+                let hd = s.geom.head_dim;
+                let ipb = s.quantizer.idx_per_byte();
+                for head in 0..s.geom.n_heads {
+                    let row = s.geom.row(block, head, ti);
+                    let kb = s.quantizer.book(layer, head, KvSide::Key);
+                    let vb = s.quantizer.book(layer, head, KvSide::Val);
+                    let kbytes = &s.k_idx[row * s.row_bytes..(row + 1) * s.row_bytes];
+                    let vbytes = &s.v_idx[row * s.row_bytes..(row + 1) * s.row_bytes];
+                    let ko = &mut k_out[head * hd..(head + 1) * hd];
+                    let vo = &mut v_out[head * hd..(head + 1) * hd];
+                    for (ch, o) in ko.iter_mut().enumerate() {
+                        *o = kb.value(read_idx(kbytes, ipb, ch)) * s.k_scale[row];
+                    }
+                    for (ch, o) in vo.iter_mut().enumerate() {
+                        *o = vb.value(read_idx(vbytes, ipb, ch)) * s.v_scale[row];
+                    }
+                    for &(c, val) in &s.k_out[row] {
+                        ko[c as usize] = val;
+                    }
+                    for &(c, val) in &s.v_out[row] {
+                        vo[c as usize] = val;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `q . K[block, head, ti]` with dequant fused into the dot loop.
+    fn key_dot(&self, block: u32, ti: usize, layer: usize, head: usize, q: &[f32]) -> f32 {
+        match self {
+            // identical accumulation to `dot(q, &cache[off..off+hd])` in
+            // the dense attention loop this replaced (bit-exactness)
+            Store::Fp32(s) => {
+                let hd = s.geom.head_dim;
+                let off = s.geom.row(block, head, ti) * hd;
+                q.iter()
+                    .zip(&s.k[off..off + hd])
+                    .map(|(&x, &y)| x * y)
+                    .sum()
+            }
+            Store::Quant(s) => {
+                let row = s.geom.row(block, head, ti);
+                let book = s.quantizer.book(layer, head, KvSide::Key);
+                let bytes = &s.k_idx[row * s.row_bytes..(row + 1) * s.row_bytes];
+                let scale = s.k_scale[row];
+                let ipb = s.quantizer.idx_per_byte();
+                let mut acc = 0f32;
+                for (ch, &qv) in q.iter().enumerate() {
+                    acc += qv * book.value(read_idx(bytes, ipb, ch)) * scale;
+                }
+                for &(c, val) in &s.k_out[row] {
+                    let base = book.value(read_idx(bytes, ipb, c as usize)) * scale;
+                    acc += q[c as usize] * (val - base);
+                }
+                acc
+            }
+        }
+    }
+
+    /// `out[c] += w * V[block, head, ti][c]` with dequant fused in.
+    fn value_mix_into(
+        &self,
+        block: u32,
+        ti: usize,
+        layer: usize,
+        head: usize,
+        w: f32,
+        out: &mut [f32],
+    ) {
+        match self {
+            // identical accumulation to the dense `*o += wn * vv` loop
+            Store::Fp32(s) => {
+                let hd = s.geom.head_dim;
+                let off = s.geom.row(block, head, ti) * hd;
+                for (o, &vv) in out.iter_mut().zip(&s.v[off..off + hd]) {
+                    *o += w * vv;
+                }
+            }
+            Store::Quant(s) => {
+                let row = s.geom.row(block, head, ti);
+                let book = s.quantizer.book(layer, head, KvSide::Val);
+                let bytes = &s.v_idx[row * s.row_bytes..(row + 1) * s.row_bytes];
+                let scale = s.v_scale[row];
+                let ipb = s.quantizer.idx_per_byte();
+                for (ch, o) in out.iter_mut().enumerate() {
+                    *o += w * book.value(read_idx(bytes, ipb, ch)) * scale;
+                }
+                for &(c, val) in &s.v_out[row] {
+                    let base = book.value(read_idx(bytes, ipb, c as usize)) * scale;
+                    out[c as usize] += w * (val - base);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            seq_len: 40, // > one block: exercises block-boundary crossing
+            batch: 1,
+            decode_batch: 2,
+            head_dim: 16,
+            d_ff: 64,
+            n_linears: 8,
+        }
+    }
+
+    fn rand_row(rng: &mut Rng, d: usize) -> Vec<f32> {
+        rng.normal_vec(d, 1.0)
+    }
+
+    #[test]
+    fn fp32_gather_is_bit_exact_with_dense_reference() {
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let mut cache = PagedKvCache::new(&m, KvPrecision::Fp32);
+        let mut rng = Rng::new(1);
+        let n = 37; // crosses into the third block
+        let mut dense_k: Vec<Vec<f32>> = Vec::new();
+        let mut dense_v: Vec<Vec<f32>> = Vec::new();
+        for pos in 0..n {
+            let (kr, vr) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
+            cache.append(1, 0, pos, &kr, &vr).unwrap();
+            dense_k.push(kr);
+            dense_v.push(vr);
+        }
+        let q = rand_row(&mut rng, m.head_dim);
+        let w: Vec<f32> = (0..n).map(|i| 1.0 / (i as f32 + 2.0)).collect();
+        let hd = m.head_dim;
+        for head in 0..m.n_heads {
+            let mut scores = vec![0f32; n];
+            cache.key_scores(1, 0, head, n, &q, &mut scores);
+            let mut out = vec![0f32; hd];
+            cache.value_mix(1, 0, head, n, &w, &mut out);
+            let mut want_out = vec![0f32; hd];
+            for (j, sc) in scores.iter().enumerate() {
+                let krow = &dense_k[j][head * hd..(head + 1) * hd];
+                let want: f32 = q.iter().zip(krow).map(|(&x, &y)| x * y).sum();
+                assert_eq!(*sc, want, "head {head} pos {j}");
+                let vrow = &dense_v[j][head * hd..(head + 1) * hd];
+                for (o, &vv) in want_out.iter_mut().zip(vrow) {
+                    *o += w[j] * vv;
+                }
+            }
+            assert_eq!(out, want_out, "head {head} value mix");
+        }
+    }
+
+    #[test]
+    fn append_protocol_enforced() {
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let mut cache = PagedKvCache::new(&m, KvPrecision::Fp32);
+        let row = vec![1.0f32; d];
+        assert!(cache.append(0, 0, 1, &row, &row).is_err(), "out of order");
+        cache.append(0, 0, 0, &row, &row).unwrap();
+        assert!(cache.append(0, 0, 0, &row, &row).is_err(), "rewind");
+        assert!(cache.append(0, 0, m.seq_len, &row, &row).is_err(), "beyond ctx");
+        assert!(cache.append(0, 0, 1, &row[..d - 1], &row).is_err(), "short row");
+        assert_eq!(cache.written(0, 0), 1);
+        assert_eq!(cache.slot_blocks(0, 0).len(), 1);
+    }
+
+    #[test]
+    fn release_is_copy_free_and_reuse_never_leaks_stale_rows() {
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let mut cache = PagedKvCache::new(&m, KvPrecision::Fp32);
+        let hot = vec![7.5f32; d];
+        for pos in 0..20 {
+            cache.append(0, 0, pos, &hot, &hot).unwrap();
+        }
+        cache.release(0);
+        assert_eq!(cache.in_use_blocks(), 0);
+        assert_eq!(cache.written(0, 0), 0);
+        // new tenant writes 3 positions into a reused block; dense
+        // materialization must show zeros beyond them
+        let cold = vec![-1.0f32; d];
+        for pos in 0..3 {
+            cache.append(0, 0, pos, &cold, &cold).unwrap();
+        }
+        let total = m.n_layers * m.decode_batch * m.n_heads * m.seq_len * m.head_dim;
+        let mut kd = vec![0f32; total];
+        let mut vd = vec![0f32; total];
+        cache.fill_dense(&mut kd, &mut vd);
+        assert!(!kd.iter().any(|&x| x == 7.5), "stale key leaked");
+        assert_eq!(kd.iter().filter(|&&x| x == -1.0).count(), 3 * d);
+    }
+
+    #[test]
+    fn quantized_roundtrip_close_and_bytes_ratio_holds() {
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let mut rng = Rng::new(5);
+        let fp = PagedKvCache::new(&m, KvPrecision::Fp32);
+        for bits in [4u32, 3, 2] {
+            let quant = KvQuantizer::uniform(m.n_layers, m.n_heads, m.head_dim, bits);
+            let mut cache = PagedKvCache::new(&m, KvPrecision::Quant(quant));
+            assert_eq!(cache.bits(), bits);
+            let n = 20;
+            let mut rows = Vec::new();
+            for pos in 0..n {
+                let (kr, vr) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
+                cache.append(0, 1, pos, &kr, &vr).unwrap();
+                rows.push((kr, vr));
+            }
+            let mut kout = vec![0f32; d];
+            let mut vout = vec![0f32; d];
+            let tol = 2.0 / (1u32 << bits) as f32 + 1e-5; // one scaled cell
+            for (pos, (kr, vr)) in rows.iter().enumerate() {
+                cache.read_row(0, 1, pos, &mut kout, &mut vout);
+                let kmax = kr.iter().fold(0f32, |a, &x| a.max(x.abs()));
+                let vmax = vr.iter().fold(0f32, |a, &x| a.max(x.abs()));
+                for (a, b) in kr.iter().zip(&kout) {
+                    assert!((a - b).abs() <= tol * kmax, "bits {bits} K row {pos}");
+                }
+                for (a, b) in vr.iter().zip(&vout) {
+                    assert!((a - b).abs() <= tol * vmax, "bits {bits} V row {pos}");
+                }
+            }
+            // the 4x memory target: >= 4x lower bytes/token than FP32
+            assert!(
+                fp.bytes_per_token() >= 4.0 * cache.bytes_per_token(),
+                "bits {bits}: {} vs fp32 {}",
+                cache.bytes_per_token(),
+                fp.bytes_per_token()
+            );
+            assert!(cache.peak_bytes() > 0);
+            assert!(cache.allocated_bytes() <= cache.peak_bytes());
+        }
+    }
+
+    #[test]
+    fn quantized_gather_matches_read_row_reference() {
+        // key_scores / value_mix must agree with dot/mix over read_row's
+        // dequantized rows (same math, fused vs materialized)
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let mut rng = Rng::new(6);
+        let quant =
+            KvQuantizer::uniform(m.n_layers, m.n_heads, m.head_dim, 4).with_outliers(1);
+        let mut cache = PagedKvCache::new(&m, KvPrecision::Quant(quant));
+        let n = 19;
+        for pos in 0..n {
+            let mut kr = rand_row(&mut rng, d);
+            kr[3] = 25.0; // planted outlier exercises the escape hatch
+            let vr = rand_row(&mut rng, d);
+            cache.append(1, 0, pos, &kr, &vr).unwrap();
+        }
+        let q = rand_row(&mut rng, m.head_dim);
+        let w: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).sin()).collect();
+        let hd = m.head_dim;
+        let (mut kout, mut vout) = (vec![0f32; d], vec![0f32; d]);
+        for head in 0..m.n_heads {
+            let mut scores = vec![0f32; n];
+            cache.key_scores(1, 0, head, n, &q, &mut scores);
+            let mut mixed = vec![0f32; hd];
+            cache.value_mix(1, 0, head, n, &w, &mut mixed);
+            let mut want_mix = vec![0f32; hd];
+            for (j, sc) in scores.iter().enumerate() {
+                cache.read_row(1, 0, j, &mut kout, &mut vout);
+                let want: f32 = q
+                    .iter()
+                    .zip(&kout[head * hd..(head + 1) * hd])
+                    .map(|(&x, &y)| x * y)
+                    .sum();
+                assert!((sc - want).abs() < 1e-4, "head {head} pos {j}: {sc} vs {want}");
+                for (o, &vv) in want_mix.iter_mut().zip(&vout[head * hd..(head + 1) * hd]) {
+                    *o += w[j] * vv;
+                }
+            }
+            for (a, b) in mixed.iter().zip(&want_mix) {
+                assert!((a - b).abs() < 1e-4, "head {head} mix");
+            }
+        }
+    }
+
+    #[test]
+    fn release_clears_outlier_accounting() {
+        // regression: freed slots' FP-preserved channels must not keep
+        // inflating allocated/peak bytes
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let quant =
+            KvQuantizer::uniform(m.n_layers, m.n_heads, m.head_dim, 4).with_outliers(2);
+        let mut cache = PagedKvCache::new(&m, KvPrecision::Quant(quant));
+        let mut rng = Rng::new(8);
+        for pos in 0..10 {
+            let (kr, vr) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
+            cache.append(0, 0, pos, &kr, &vr).unwrap();
+        }
+        let with_outliers = cache.allocated_bytes();
+        let pool_only = cache.in_use_blocks() * 2 * 16 * m.n_heads * (8 + 4);
+        assert!(with_outliers > pool_only, "hatch produced no outliers");
+        assert_eq!(cache.peak_bytes(), with_outliers);
+        cache.release(0);
+        assert_eq!(cache.in_use_blocks(), 0);
+        assert_eq!(cache.allocated_bytes(), 0, "freed outliers still counted");
+        // peak is a true high-water mark: it neither shrinks on release
+        // nor keeps counting freed rows as live
+        assert_eq!(cache.peak_bytes(), with_outliers);
+    }
+
+    #[test]
+    fn pool_capacity_covers_full_occupancy() {
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let mut cache = PagedKvCache::new(&m, KvPrecision::Fp32);
+        let row = vec![0.5f32; d];
+        for slot in 0..m.decode_batch {
+            for layer in 0..m.n_layers {
+                for pos in 0..m.seq_len {
+                    cache.append(layer, slot, pos, &row, &row).unwrap();
+                }
+            }
+        }
+        assert_eq!(cache.in_use_blocks(), cache.capacity_blocks());
+    }
+}

@@ -1,0 +1,368 @@
+//! K-Means row quantizer for the paged KV cache.
+//!
+//! Each appended `(token, head)` K or V row is quantized independently:
+//! max-|inlier| scale, nearest-centroid assignment against a
+//! per-layer/per-head codebook, and `quant::packed` index streams
+//! (nibbles at 3/4 bits, crumbs at 2 bits). Codebooks are learned from
+//! calibration rows when a backend has them (SKIM-style: K-Means holds
+//! accuracy at any bit-width) or fall back to a uniform grid over the
+//! normalized range (RTN-like). The outlier escape hatch routes the most
+//! extreme channels of a row — detected by the Orizuru engine — around
+//! the codebook entirely, storing `(channel, fp_value)` pairs.
+
+use crate::orizuru;
+use crate::quant::kmeans::kmeans_1d;
+use crate::quant::{Codebook, PackedCrumbs, PackedIdx};
+
+/// Which side of the cache a row belongs to (separate codebooks: K rows
+/// feed dot products with queries, V rows feed the weighted mix — their
+/// distributions differ).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvSide {
+    Key,
+    Val,
+}
+
+/// One quantized cache row, ready for pool insertion.
+pub struct QuantRow {
+    /// per-row max-|inlier| scale
+    pub scale: f32,
+    /// packed index stream: `ceil(hd / idx_per_byte)` bytes
+    pub bytes: Vec<u8>,
+    /// FP-preserved extreme channels: `(channel, original value)`
+    pub outliers: Vec<(u16, f32)>,
+}
+
+/// Per-layer/per-head codebooks + packing geometry for an n-bit cache.
+#[derive(Clone, Debug)]
+pub struct KvQuantizer {
+    bits: u32,
+    n_heads: usize,
+    head_dim: usize,
+    /// `[layer * n_heads + head]`, normalized centroids
+    k_books: Vec<Codebook>,
+    v_books: Vec<Codebook>,
+    /// Orizuru escape hatch: FP-preserved channels per row per side.
+    /// Defaults to 0 — at small head_dim the 6-byte-per-outlier cost
+    /// outweighs the accuracy win; [`KvQuantizer::with_outliers`] opts in.
+    outliers_per_side: usize,
+}
+
+impl KvQuantizer {
+    /// Uniform fallback codebooks: `2^bits` centroids at the midpoints of
+    /// an even partition of `[-1, 1]` (rows are scale-normalized into that
+    /// range). This is the "online" construction — no calibration needed.
+    pub fn uniform(n_layers: usize, n_heads: usize, head_dim: usize, bits: u32) -> KvQuantizer {
+        assert!((2..=4).contains(&bits), "kv quantizer supports 2..=4 bits");
+        let n = 1usize << bits;
+        let grid: Vec<f32> = (0..n)
+            .map(|i| -1.0 + (2 * i + 1) as f32 / n as f32)
+            .collect();
+        let book = Codebook::new(grid);
+        KvQuantizer {
+            bits,
+            n_heads,
+            head_dim,
+            k_books: vec![book.clone(); n_layers * n_heads],
+            v_books: vec![book; n_layers * n_heads],
+            outliers_per_side: 0,
+        }
+    }
+
+    /// Learn per-layer/per-head codebooks from calibration rows.
+    /// `k_rows[layer * n_heads + head]` holds that head's calibration K
+    /// rows (each of length `head_dim`); likewise `v_rows`. Heads with no
+    /// calibration rows fall back to the uniform grid.
+    pub fn from_calibration(
+        n_heads: usize,
+        head_dim: usize,
+        bits: u32,
+        k_rows: &[Vec<Vec<f32>>],
+        v_rows: &[Vec<Vec<f32>>],
+    ) -> KvQuantizer {
+        assert!((2..=4).contains(&bits), "kv quantizer supports 2..=4 bits");
+        assert_eq!(k_rows.len(), v_rows.len());
+        assert!(n_heads > 0 && k_rows.len() % n_heads == 0, "rows not head-aligned");
+        let n_layers = k_rows.len() / n_heads;
+        let fallback = KvQuantizer::uniform(n_layers, n_heads, head_dim, bits);
+        let learn = |rows: &Vec<Vec<f32>>, fb: &Codebook| -> Codebook {
+            let mut samples = Vec::new();
+            for row in rows {
+                let scale = row
+                    .iter()
+                    .fold(0.0f32, |m, &v| m.max(v.abs()))
+                    .max(1e-12);
+                samples.extend(row.iter().map(|&v| v / scale));
+            }
+            if samples.is_empty() {
+                fb.clone()
+            } else {
+                Codebook::new(kmeans_1d(&samples, 1 << bits, 40))
+            }
+        };
+        let k_books: Vec<Codebook> = k_rows
+            .iter()
+            .zip(&fallback.k_books)
+            .map(|(rows, fb)| learn(rows, fb))
+            .collect();
+        let v_books: Vec<Codebook> = v_rows
+            .iter()
+            .zip(&fallback.v_books)
+            .map(|(rows, fb)| learn(rows, fb))
+            .collect();
+        KvQuantizer {
+            bits,
+            n_heads,
+            head_dim,
+            k_books,
+            v_books,
+            outliers_per_side: 0,
+        }
+    }
+
+    /// Enable the Orizuru outlier escape hatch: keep the `per_side` most
+    /// extreme channels per side of each row in FP32.
+    pub fn with_outliers(mut self, per_side: usize) -> KvQuantizer {
+        self.outliers_per_side = per_side.min(self.head_dim / 2);
+        self
+    }
+
+    /// Derive the escape-hatch width from a total outlier fraction (the
+    /// serving path's knob, mirroring `quant::OutlierCfg`): `floor(frac *
+    /// head_dim / 2)` channels per side. Unlike the activation path there
+    /// is no 1-minimum — at small head dims a 6-byte FP outlier per row
+    /// costs more memory than it saves accuracy (and would break the 4x
+    /// bytes/token target), so the hatch engages only once `frac * hd / 2
+    /// >= 1` (e.g. `hd >= 200` at the paper's 1% fraction).
+    pub fn with_outlier_frac(self, frac: f64) -> KvQuantizer {
+        let per_side = (frac * 0.5 * self.head_dim as f64).floor() as usize;
+        self.with_outliers(per_side)
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    pub fn outliers_per_side(&self) -> usize {
+        self.outliers_per_side
+    }
+
+    /// Packed indices per byte: nibbles (2) at 3/4 bits, crumbs (4) at 2.
+    pub fn idx_per_byte(&self) -> usize {
+        if self.bits <= 2 {
+            4
+        } else {
+            2
+        }
+    }
+
+    /// Packed bytes per cache row.
+    pub fn row_bytes(&self) -> usize {
+        self.head_dim.div_ceil(self.idx_per_byte())
+    }
+
+    pub fn book(&self, layer: usize, head: usize, side: KvSide) -> &Codebook {
+        let books = match side {
+            KvSide::Key => &self.k_books,
+            KvSide::Val => &self.v_books,
+        };
+        &books[layer * self.n_heads + head]
+    }
+
+    /// Quantize one `head_dim`-length row straight into a pooled packed
+    /// slice (`out_bytes` must be `row_bytes()` long): Orizuru outlier
+    /// detection (when enabled), max-|inlier| scaling, codebook
+    /// assignment, `quant::packed` in-place index writes. Allocation-free
+    /// on the no-outlier path — this is the decode-hot write primitive.
+    /// Returns the row scale and the FP-preserved outlier channels.
+    pub fn quantize_row_into(
+        &self,
+        layer: usize,
+        head: usize,
+        side: KvSide,
+        row: &[f32],
+        out_bytes: &mut [u8],
+    ) -> (f32, Vec<(u16, f32)>) {
+        debug_assert_eq!(row.len(), self.head_dim);
+        debug_assert_eq!(out_bytes.len(), self.row_bytes());
+        let outs = if self.outliers_per_side > 0 {
+            orizuru::detect_outliers(row, self.outliers_per_side)
+        } else {
+            Vec::new()
+        };
+        // inlier scale: |max| over non-outlier channels (outliers are
+        // FP-preserved, so they must not stretch the codebook range)
+        let mut oi = 0usize;
+        let mut m = 0.0f32;
+        for (c, &v) in row.iter().enumerate() {
+            if oi < outs.len() && outs[oi] as usize == c {
+                oi += 1;
+                continue;
+            }
+            m = m.max(v.abs());
+        }
+        let scale = m.max(1e-12);
+        let book = self.book(layer, head, side);
+        let crumbs = self.idx_per_byte() == 4;
+        for (ch, &v) in row.iter().enumerate() {
+            let i = book.assign(v / scale);
+            if crumbs {
+                PackedCrumbs::set_in(out_bytes, ch, i);
+            } else {
+                PackedIdx::set_in(out_bytes, ch, i);
+            }
+        }
+        // zero any tail padding in the final byte (reused pool slices may
+        // hold a previous tenant's bits there)
+        if self.head_dim % self.idx_per_byte() != 0 {
+            for ch in self.head_dim..out_bytes.len() * self.idx_per_byte() {
+                if crumbs {
+                    PackedCrumbs::set_in(out_bytes, ch, 0);
+                } else {
+                    PackedIdx::set_in(out_bytes, ch, 0);
+                }
+            }
+        }
+        let outliers = outs.iter().map(|&c| (c as u16, row[c as usize])).collect();
+        (scale, outliers)
+    }
+
+    /// Allocating convenience wrapper over [`KvQuantizer::quantize_row_into`]
+    /// (tests and one-off callers).
+    pub fn quantize_row(&self, layer: usize, head: usize, side: KvSide, row: &[f32]) -> QuantRow {
+        let mut bytes = vec![0u8; self.row_bytes()];
+        let (scale, outliers) = self.quantize_row_into(layer, head, side, row, &mut bytes);
+        QuantRow { scale, bytes, outliers }
+    }
+}
+
+/// Read one logical index from a packed row — thin dispatch onto the
+/// `quant::packed` layout contract (`PackedIdx::get_in` /
+/// `PackedCrumbs::get_in`), so the bit layout lives in exactly one place.
+#[inline]
+pub(crate) fn read_idx(bytes: &[u8], idx_per_byte: usize, ch: usize) -> u8 {
+    if idx_per_byte == 2 {
+        PackedIdx::get_in(bytes, ch)
+    } else {
+        PackedCrumbs::get_in(bytes, ch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn uniform_grid_covers_unit_range() {
+        let q = KvQuantizer::uniform(2, 2, 16, 4);
+        let b = q.book(1, 1, KvSide::Key);
+        assert_eq!(b.len(), 16);
+        assert!(b.centroids.iter().all(|c| c.abs() < 1.0));
+        assert_eq!(q.row_bytes(), 8);
+        assert_eq!(KvQuantizer::uniform(1, 1, 16, 2).row_bytes(), 4);
+        assert_eq!(KvQuantizer::uniform(1, 1, 17, 3).row_bytes(), 9);
+    }
+
+    #[test]
+    fn quantize_row_roundtrip_error_bounded() {
+        let mut rng = Rng::new(7);
+        for bits in [4u32, 3, 2] {
+            let q = KvQuantizer::uniform(1, 1, 32, bits);
+            let row = rng.normal_vec(32, 1.0);
+            let qr = q.quantize_row(0, 0, KvSide::Key, &row);
+            assert_eq!(qr.bytes.len(), q.row_bytes());
+            let book = q.book(0, 0, KvSide::Key);
+            let max_cell = 2.0 * qr.scale / (1u32 << bits) as f32 + 1e-5;
+            for (ch, &v) in row.iter().enumerate() {
+                let deq = book.value(read_idx(&qr.bytes, q.idx_per_byte(), ch)) * qr.scale;
+                assert!(
+                    (v - deq).abs() <= max_cell,
+                    "bits {bits} ch {ch}: {v} vs {deq}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn calibrated_books_beat_uniform_on_calibration_distribution() {
+        let mut rng = Rng::new(9);
+        // heavy-tailed rows: k-means places centroids where the mass is
+        let rows: Vec<Vec<f32>> = (0..48).map(|_| rng.heavy_tailed_vec(16, 0.05, 6.0)).collect();
+        let cal = KvQuantizer::from_calibration(1, 16, 3, &[rows.clone()], &[rows.clone()]);
+        let uni = KvQuantizer::uniform(1, 1, 16, 3);
+        let err = |q: &KvQuantizer, layer_head_rows: &[Vec<f32>]| -> f64 {
+            let mut e = 0f64;
+            for row in layer_head_rows {
+                let qr = q.quantize_row(0, 0, KvSide::Key, row);
+                let book = q.book(0, 0, KvSide::Key);
+                for (ch, &v) in row.iter().enumerate() {
+                    let deq =
+                        book.value(read_idx(&qr.bytes, q.idx_per_byte(), ch)) * qr.scale;
+                    e += ((v - deq) as f64).powi(2);
+                }
+            }
+            e
+        };
+        assert!(
+            err(&cal, &rows) < err(&uni, &rows),
+            "calibrated {} !< uniform {}",
+            err(&cal, &rows),
+            err(&uni, &rows)
+        );
+    }
+
+    #[test]
+    fn quantize_row_into_matches_pack_and_clears_reused_slices() {
+        let mut rng = Rng::new(13);
+        for (hd, bits) in [(16usize, 4u32), (15, 3), (10, 2)] {
+            let q = KvQuantizer::uniform(1, 1, hd, bits);
+            let row = rng.normal_vec(hd, 1.0);
+            // a dirty pooled slice (reused block) must come out identical
+            // to a fresh pack of the same indices
+            let mut dirty = vec![0xFFu8; q.row_bytes()];
+            let (scale, _) = q.quantize_row_into(0, 0, KvSide::Key, &row, &mut dirty);
+            let book = q.book(0, 0, KvSide::Key);
+            let idx: Vec<u8> = row.iter().map(|&v| book.assign(v / scale)).collect();
+            let packed = if q.idx_per_byte() == 4 {
+                PackedCrumbs::pack(&idx).bytes
+            } else {
+                PackedIdx::pack(&idx).bytes
+            };
+            assert_eq!(dirty, packed, "hd {hd} bits {bits}");
+            assert_eq!(q.quantize_row(0, 0, KvSide::Key, &row).bytes, packed);
+        }
+    }
+
+    #[test]
+    fn outlier_frac_engages_only_at_large_head_dim() {
+        // paper's 1% total fraction: zero on small heads (preserves the
+        // 4x bytes/token target), >= 1 per side once frac * hd / 2 >= 1
+        assert_eq!(KvQuantizer::uniform(1, 1, 16, 4).with_outlier_frac(0.01).outliers_per_side(), 0);
+        assert_eq!(KvQuantizer::uniform(1, 1, 128, 4).with_outlier_frac(0.01).outliers_per_side(), 0);
+        assert_eq!(KvQuantizer::uniform(1, 1, 256, 4).with_outlier_frac(0.01).outliers_per_side(), 1);
+        assert_eq!(KvQuantizer::uniform(1, 1, 16, 4).with_outlier_frac(0.25).outliers_per_side(), 2);
+    }
+
+    #[test]
+    fn outlier_escape_hatch_preserves_extremes() {
+        let mut rng = Rng::new(3);
+        let mut row = rng.normal_vec(16, 0.5);
+        row[3] = 40.0;
+        row[11] = -35.0;
+        let q = KvQuantizer::uniform(1, 1, 16, 4).with_outliers(1);
+        assert_eq!(q.outliers_per_side(), 1);
+        let qr = q.quantize_row(0, 0, KvSide::Val, &row);
+        let chans: Vec<u16> = qr.outliers.iter().map(|&(c, _)| c).collect();
+        assert_eq!(chans, vec![3, 11]);
+        for &(c, v) in &qr.outliers {
+            assert_eq!(v, row[c as usize]);
+        }
+        // the scale reflects inliers, not the planted spikes
+        assert!(qr.scale < 5.0, "scale {} stretched by outliers", qr.scale);
+    }
+}

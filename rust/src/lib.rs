@@ -17,5 +17,6 @@ pub mod models;
 pub mod sim;
 pub mod baselines;
 pub mod runtime;
+pub mod kvcache;
 pub mod coordinator;
 pub mod eval;

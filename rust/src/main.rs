@@ -5,19 +5,23 @@
 //!       [--calib-samples N] [--md FILE]    regenerate a paper table/figure
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
-//!       [--backend SPEC]   SPEC selects the decode execution engine:
+//!       [--backend SPEC] [--kv-bits 32|4|3|2]
+//!       SPEC selects the decode execution engine:
 //!       `direct|histogram|packed` run decode through the PJRT artifacts
 //!       (the WAQ kernel is a modeled host clock), while
 //!       `native-direct|native-histogram|native-packed` serve through the
 //!       native K-Means WAQ LUT-GEMM datapath — measured throughput on
-//!       the selected kernel, no PJRT required
+//!       the selected kernel, no PJRT required. `--kv-bits` picks the
+//!       paged KV-cache storage precision: 32 = FP32 (bit-exact with the
+//!       dense cache), 4/3/2 = K-Means index streams (>= 4x lower cache
+//!       bytes/token)
 //!   quantize [--preset P] [--bits B]        quantize + report one matrix
 //!   list                                    list experiments + artifacts
 
 use std::io::Write;
 
 use anyhow::{anyhow, Result};
-use kllm::coordinator::{serve_tcp, BackendSpec, Coordinator, EngineConfig};
+use kllm::coordinator::{serve_tcp, BackendSpec, Coordinator, EngineConfig, KvBits};
 use kllm::eval::{run_experiment, Corpus, ExperimentCtx, ALL_IDS};
 use kllm::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
 use kllm::util::cli::Args;
@@ -127,8 +131,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.check_known(&["preset", "config", "port", "ckpt", "requests", "max-new", "backend"])
-        .map_err(|e| anyhow!(e))?;
+    args.check_known(&[
+        "preset", "config", "port", "ckpt", "requests", "max-new", "backend", "kv-bits",
+    ])
+    .map_err(|e| anyhow!(e))?;
     let mut preset = args.str_or("preset", "test");
     let mut port = args.usize_or("port", 7070).map_err(|e| anyhow!(e))? as u16;
     if let Some(cfg_path) = args.opt("config") {
@@ -139,6 +145,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend_name = args.str_or("backend", BackendSpec::default().name());
     // accepted values (and the error text) derive from WaqBackend::ALL
     let backend: BackendSpec = backend_name.parse().map_err(|e: String| anyhow!(e))?;
+    // KV-cache storage precision: 32 = FP32, 4/3/2 = K-Means index streams
+    let kv_bits: KvBits = args
+        .str_or("kv-bits", "32")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
     let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(|e| anyhow!(e))?;
     let params = match args.opt("ckpt") {
         Some(p) => ParamSet::load(std::path::Path::new(p))?,
@@ -150,7 +161,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = std::sync::Arc::new(Coordinator::start_with_manifest(
         manifest,
         params,
-        EngineConfig { backend, ..Default::default() },
+        EngineConfig { backend, kv_bits, ..Default::default() },
     )?);
     let port = serve_tcp(coord.clone(), port)?;
     let how = if backend.is_native() {
@@ -159,7 +170,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "PJRT artifacts, modeled WAQ host clock"
     };
     println!(
-        "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, backend {backend}: {how})"
+        "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, backend {backend}: \
+         {how}, kv cache {kv_bits}-bit)"
     );
     println!("example: echo '{{\"prompt\": [1,2,3], \"max_new_tokens\": 8}}' | nc 127.0.0.1 {port}");
     loop {

@@ -61,11 +61,32 @@ impl PackedIdx {
     #[inline]
     pub fn get(&self, i: usize) -> u8 {
         debug_assert!(i < self.len);
-        let b = self.bytes[i / 2];
+        Self::get_in(&self.bytes, i)
+    }
+
+    /// Read one logical index from any nibble-packed byte slice (the
+    /// layout contract for external pools, e.g. the KV-cache store).
+    #[inline]
+    pub fn get_in(bytes: &[u8], i: usize) -> u8 {
+        let b = bytes[i / 2];
         if i % 2 == 0 {
             b >> 4
         } else {
             b & 0x0F
+        }
+    }
+
+    /// Write one logical index into a nibble-packed byte slice in place.
+    #[inline]
+    pub fn set_in(bytes: &mut [u8], i: usize, v: u8) {
+        // hard assert even in release, for the same reason as `pack`: a
+        // wide index would bleed into the neighboring nibble
+        assert!(v < 16, "index does not fit in a nibble");
+        let b = &mut bytes[i / 2];
+        if i % 2 == 0 {
+            *b = (*b & 0x0F) | (v << 4);
+        } else {
+            *b = (*b & 0xF0) | v;
         }
     }
 
@@ -74,6 +95,78 @@ impl PackedIdx {
     }
 
     /// Bytes of index storage (exactly half the unpacked stream, rounded
+    /// up).
+    pub fn storage_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+/// A flat sequence of 2-bit indices ("crumbs"), four per byte, high-first:
+/// element `4i` lives in bits 7..6 of byte `i`, element `4i+3` in bits
+/// 1..0 — a byte reads left-to-right like the index stream it encodes
+/// (the crumb analogue of [`PackedIdx`]). Used by the 2-bit KV-cache
+/// store, where even nibble packing would waste half the stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedCrumbs {
+    /// `len.div_ceil(4)` bytes; tail elements occupy the high crumbs of
+    /// the last byte with unused crumbs zeroed.
+    pub bytes: Vec<u8>,
+    /// logical number of indices
+    pub len: usize,
+}
+
+impl PackedCrumbs {
+    /// Pack a byte-per-index stream. Every index must fit in 2 bits —
+    /// hard assert even in release (a wide index would corrupt up to
+    /// three neighbors; packing is a cold path).
+    pub fn pack(idx: &[u8]) -> PackedCrumbs {
+        let mut bytes = Vec::with_capacity(idx.len().div_ceil(4));
+        for quad in idx.chunks(4) {
+            let mut b = 0u8;
+            for (i, &v) in quad.iter().enumerate() {
+                assert!(v < 4, "index does not fit in a crumb");
+                b |= v << (6 - 2 * i);
+            }
+            bytes.push(b);
+        }
+        PackedCrumbs { bytes, len: idx.len() }
+    }
+
+    /// Inverse of [`PackedCrumbs::pack`].
+    pub fn unpack(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Read one logical index.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.len);
+        Self::get_in(&self.bytes, i)
+    }
+
+    /// Read one logical index from any crumb-packed byte slice (the
+    /// layout contract for external pools, e.g. the KV-cache store).
+    #[inline]
+    pub fn get_in(bytes: &[u8], i: usize) -> u8 {
+        (bytes[i / 4] >> (6 - 2 * (i % 4))) & 0x03
+    }
+
+    /// Write one logical index into a crumb-packed byte slice in place.
+    #[inline]
+    pub fn set_in(bytes: &mut [u8], i: usize, v: u8) {
+        // hard assert even in release, for the same reason as `pack`: a
+        // wide index would corrupt up to three neighboring crumbs
+        assert!(v < 4, "index does not fit in a crumb");
+        let shift = 6 - 2 * (i % 4);
+        let b = &mut bytes[i / 4];
+        *b = (*b & !(0x03 << shift)) | (v << shift);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of index storage (a quarter of the unpacked stream, rounded
     /// up).
     pub fn storage_bytes(&self) -> usize {
         self.bytes.len()
@@ -235,6 +328,66 @@ mod tests {
     fn nibble_layout_is_high_first() {
         let p = PackedIdx::pack(&[0xA, 0x3, 0xF]);
         assert_eq!(p.bytes, vec![0xA3, 0xF0]);
+    }
+
+    #[test]
+    fn crumb_pack_unpack_roundtrip_all_tail_lengths() {
+        let mut rng = Rng::new(11);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 33, 1001] {
+            let idx: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
+            let p = PackedCrumbs::pack(&idx);
+            assert_eq!(p.len, len);
+            assert_eq!(p.storage_bytes(), len.div_ceil(4));
+            assert_eq!(p.unpack(), idx, "len {len}");
+            for (i, &v) in idx.iter().enumerate() {
+                assert_eq!(p.get(i), v, "len {len} elem {i}");
+            }
+        }
+        assert!(PackedCrumbs::pack(&[]).is_empty());
+    }
+
+    #[test]
+    fn crumb_layout_is_high_first() {
+        // 0b11_10_01_00, then 0b01_00_00_00
+        let p = PackedCrumbs::pack(&[3, 2, 1, 0, 1]);
+        assert_eq!(p.bytes, vec![0xE4, 0x40]);
+    }
+
+    #[test]
+    #[should_panic(expected = "crumb")]
+    fn crumb_pack_rejects_wide_index() {
+        PackedCrumbs::pack(&[4]);
+    }
+
+    #[test]
+    fn set_in_matches_pack_for_nibbles_and_crumbs() {
+        let mut rng = Rng::new(21);
+        for len in [1usize, 2, 3, 4, 5, 9, 33] {
+            let idx4: Vec<u8> = (0..len).map(|_| rng.below(16) as u8).collect();
+            let mut buf = vec![0u8; len.div_ceil(2)];
+            for (i, &v) in idx4.iter().enumerate() {
+                PackedIdx::set_in(&mut buf, i, v);
+            }
+            assert_eq!(buf, PackedIdx::pack(&idx4).bytes, "nibble len {len}");
+            for (i, &v) in idx4.iter().enumerate() {
+                assert_eq!(PackedIdx::get_in(&buf, i), v);
+            }
+            let idx2: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
+            let mut buf = vec![0u8; len.div_ceil(4)];
+            for (i, &v) in idx2.iter().enumerate() {
+                PackedCrumbs::set_in(&mut buf, i, v);
+            }
+            assert_eq!(buf, PackedCrumbs::pack(&idx2).bytes, "crumb len {len}");
+            for (i, &v) in idx2.iter().enumerate() {
+                assert_eq!(PackedCrumbs::get_in(&buf, i), v);
+            }
+        }
+        // set_in overwrites in place (read-modify-write, not or-in)
+        let mut buf = vec![0xFFu8; 1];
+        PackedIdx::set_in(&mut buf, 0, 0x2);
+        assert_eq!(buf[0], 0x2F);
+        PackedCrumbs::set_in(&mut buf, 1, 0x1); // bits 5..4: 0b10 -> 0b01
+        assert_eq!(buf[0], 0x1F);
     }
 
     #[test]

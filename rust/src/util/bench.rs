@@ -22,6 +22,7 @@ pub fn bench_json_path(file_name: &str) -> PathBuf {
     manifest.parent().unwrap_or(manifest).join(file_name)
 }
 
+#[derive(Default)]
 pub struct BenchResult {
     pub name: String,
     pub iters: u64,
@@ -30,6 +31,10 @@ pub struct BenchResult {
     pub min_ns: f64,
     /// optional items/sec given a per-iteration item count
     pub throughput: Option<f64>,
+    /// extra `(key, raw JSON value)` pairs appended to the JSON row —
+    /// benches use this to tag rows with run parameters (e.g. `kv_bits`,
+    /// `peak_kv_bytes`) without widening the core schema
+    pub extra: Vec<(String, String)>,
 }
 
 impl BenchResult {
@@ -70,30 +75,85 @@ impl BenchResult {
 
     /// One JSON object (single line) with the machine-readable fields.
     pub fn json_line(&self) -> String {
-        let name = self.name.replace('\\', "\\\\").replace('"', "\\\"");
+        let name = json_escape(&self.name);
         let tp = match self.throughput {
             Some(t) => format!("{t:.3}"),
             None => "null".to_string(),
         };
-        format!(
+        let mut line = format!(
             "{{\"name\": \"{name}\", \"iters\": {}, \"mean_ns\": {:.3}, \
-             \"p50_ns\": {:.3}, \"min_ns\": {:.3}, \"throughput\": {tp}}}",
+             \"p50_ns\": {:.3}, \"min_ns\": {:.3}, \"throughput\": {tp}",
             self.iters, self.mean_ns, self.p50_ns, self.min_ns
-        )
+        );
+        for (k, v) in &self.extra {
+            line.push_str(&format!(", \"{}\": {v}", json_escape(k)));
+        }
+        line.push('}');
+        line
     }
 
     /// Append the JSON line to `path` (JSON-lines file; created if
     /// missing). IO failures are reported, never fatal to the bench.
     pub fn append_json(&self, path: &Path) {
-        let line = self.json_line();
-        let appended = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-            .and_then(|mut f| writeln!(f, "{line}"));
-        if let Err(e) = appended {
-            eprintln!("bench: could not append to {}: {e}", path.display());
-        }
+        append_line(path, &self.json_line());
+    }
+}
+
+/// Append one line to a JSON-lines results file (created if missing).
+/// IO failures are reported, never fatal to the bench — shared by every
+/// BENCH_*.json emitter so append semantics can't diverge.
+fn append_line(path: &Path, line: &str) {
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = appended {
+        eprintln!("bench: could not append to {}: {e}", path.display());
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// One BENCH_kv.json row: the KV-cache memory / accuracy / throughput
+/// trade-off at one `--kv-bits` setting (emitted by the `kv_cache` bench
+/// and smoke-run in CI, so the perf trajectory captures the memory axis).
+pub struct KvBenchRow {
+    /// serving backend tag (e.g. `native-packed`)
+    pub backend: String,
+    /// cache storage bits per element (32 = FP32)
+    pub kv_bits: u32,
+    /// ideal cache bytes per token position (all layers, K + V)
+    pub bytes_per_token: f64,
+    /// peak reserved cache bytes over the run
+    pub peak_cache_bytes: u64,
+    /// measured end-to-end decode throughput at this setting
+    pub decode_tok_s: f64,
+    /// relative error of one decode step's logits vs the FP32 cache
+    /// (0.0 at 32 bits by construction)
+    pub attn_rel_err: f64,
+}
+
+impl KvBenchRow {
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"backend\": \"{}\", \"kv_bits\": {}, \"bytes_per_token\": {:.3}, \
+             \"peak_cache_bytes\": {}, \"decode_tok_s\": {:.3}, \"attn_rel_err\": {:.6}}}",
+            json_escape(&self.backend),
+            self.kv_bits,
+            self.bytes_per_token,
+            self.peak_cache_bytes,
+            self.decode_tok_s,
+            self.attn_rel_err
+        )
+    }
+
+    /// Append to the repo-root BENCH_kv.json (JSON lines; created if
+    /// missing). IO failures are reported, never fatal.
+    pub fn append(&self) {
+        append_line(&bench_json_path("BENCH_kv.json"), &self.json_line());
     }
 }
 
@@ -174,6 +234,7 @@ impl Bencher {
             p50_ns: p50,
             min_ns: min,
             throughput: self.items_per_iter.map(|n| n as f64 * 1e9 / mean),
+            extra: Vec::new(),
         };
         res.report();
         if let Some(path) = &self.json_sink {
@@ -226,6 +287,7 @@ mod tests {
             p50_ns: 1.0,
             min_ns: 0.5,
             throughput: Some(2e6),
+            extra: Vec::new(),
         };
         let line = r.json_line();
         assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
@@ -233,6 +295,37 @@ mod tests {
         assert!(line.contains("\\\""), "escapes quotes: {line}");
         let none = BenchResult { throughput: None, ..r };
         assert!(none.json_line().contains("\"throughput\": null"));
+    }
+
+    #[test]
+    fn extra_pairs_land_in_the_json_row() {
+        let r = BenchResult {
+            name: "kv".into(),
+            extra: vec![
+                ("kv_bits".into(), "4".into()),
+                ("peak_kv_bytes".into(), "1536".into()),
+            ],
+            ..Default::default()
+        };
+        let line = r.json_line();
+        assert!(line.ends_with("\"kv_bits\": 4, \"peak_kv_bytes\": 1536}"), "{line}");
+    }
+
+    #[test]
+    fn kv_row_json_is_machine_readable() {
+        let row = KvBenchRow {
+            backend: "native-packed".into(),
+            kv_bits: 4,
+            bytes_per_token: 192.0,
+            peak_cache_bytes: 6144,
+            decode_tok_s: 123.4,
+            attn_rel_err: 0.0123,
+        };
+        let line = row.json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"kv_bits\": 4"), "{line}");
+        assert!(line.contains("\"bytes_per_token\": 192.000"), "{line}");
+        assert!(line.contains("\"attn_rel_err\": 0.012300"), "{line}");
     }
 
     #[test]
@@ -246,6 +339,7 @@ mod tests {
             p50_ns: 2.0,
             min_ns: 2.0,
             throughput: None,
+            extra: Vec::new(),
         };
         r.append_json(&path);
         r.append_json(&path);

@@ -36,6 +36,20 @@ pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
     (s / a.len() as f64).sqrt()
 }
 
+/// Relative L2 error `||a - b|| / ||b||` (`b` is the reference). Used by
+/// the KV-cache accuracy tests and the kv_cache bench so the tested and
+/// the benchmarked metric are one definition.
+pub fn rel_l2_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rel_l2_err length mismatch");
+    let num: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum();
+    let den: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum();
+    (num / den.max(1e-30)).sqrt()
+}
+
 /// Min-max normalize to [0, 1] (paper normalizes thresholds/centroids
 /// before RMSE in Figs 3 and 5).
 pub fn normalize01(xs: &[f32]) -> Vec<f32> {

@@ -133,8 +133,101 @@ fn native_packed_and_direct_are_bit_exact() {
     let (ld, _) = direct.decode(&toks, &pos, &act, &mut kv_d).expect("direct decode");
     let (lp, _) = packed.decode(&toks, &pos, &act, &mut kv_p).expect("packed decode");
     assert_eq!(ld, lp, "decode logits must be bit-exact");
-    assert_eq!(kv_d.k, kv_p.k);
-    assert_eq!(kv_d.v, kv_p.v);
+    let (kd, vd) = kv_d.dense_tensors();
+    let (kp, vp) = kv_p.dense_tensors();
+    assert_eq!(kd, kp);
+    assert_eq!(vd, vp);
+}
+
+/// The `--kv-bits 32` acceptance property: the paged FP32 cache feeds the
+/// exact same attention arithmetic as the dense cache it replaced, so a
+/// repeated decode is bit-identical — and the n-bit cache stays within a
+/// quantization-error bound of it, tightening with bit-width. Uses the
+/// same probe + error metric the kv_cache bench publishes
+/// (`probe_decode_logits` / `rel_l2_err`), so the tested and benchmarked
+/// numbers share one definition.
+#[test]
+fn kmeans_kv_cache_error_bounded_and_fp32_exact() {
+    use kllm::coordinator::probe_decode_logits;
+    use kllm::kvcache::KvPrecision;
+    use kllm::util::stats::rel_l2_err;
+    let cfg = tiny_cfg(2);
+    let prompt = [5i32, 9, 11, 2, 30, 7];
+    let mut backend = native_backend(cfg, WaqBackend::Packed);
+    let fp_a =
+        probe_decode_logits(&mut backend, KvPrecision::Fp32, &prompt, 7).expect("fp32 probe");
+    let fp_b =
+        probe_decode_logits(&mut backend, KvPrecision::Fp32, &prompt, 7).expect("fp32 probe");
+    assert_eq!(fp_a, fp_b, "FP32 paged cache must be deterministic/bit-exact");
+
+    // calibration-learned codebooks per (layer, head); looser bounds at
+    // fewer bits — the point is "close", not "identical"
+    for (bits, tol) in [(4u32, 0.35), (3, 0.5), (2, 0.8)] {
+        let quant = KvPrecision::Quant(backend.kv_quantizer(bits));
+        let logits =
+            probe_decode_logits(&mut backend, quant, &prompt, 7).expect("quant probe");
+        let e = rel_l2_err(&logits, &fp_a);
+        assert!(e < tol, "{bits}-bit cache rel err {e} > {tol}");
+        assert!(e > 0.0, "{bits}-bit cache unexpectedly bit-exact");
+    }
+}
+
+/// Greedy decode must be deterministic across batch sizes at quantized
+/// bit-widths too: a slot's rows are quantized from its own values with
+/// fixed codebooks, so co-resident requests cannot perturb each other.
+#[test]
+fn quantized_kv_greedy_decode_deterministic_across_batch_sizes() {
+    use kllm::kvcache::KvBits;
+    // every supported quantized width (acceptance criterion), including
+    // 3-bit — the one width whose codebook doesn't fill its nibble
+    for kv_bits in [KvBits::B4, KvBits::B3, KvBits::B2] {
+        let cfg = tiny_cfg(4);
+        let ecfg = EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            kv_bits,
+            ..Default::default()
+        };
+        let probe = vec![3i32, 14, 15];
+        let solo = {
+            let mut e =
+                Engine::new(Box::new(native_backend(cfg, WaqBackend::Packed)), &ecfg);
+            e.submit(Request::new(0, probe.clone(), 6));
+            e.run_to_completion().expect("solo")[0].tokens.clone()
+        };
+        assert_eq!(solo.len(), 6);
+        for extra in 1..4usize {
+            let mut e =
+                Engine::new(Box::new(native_backend(cfg, WaqBackend::Packed)), &ecfg);
+            e.submit(Request::new(0, probe.clone(), 6));
+            for j in 0..extra {
+                e.submit(Request::new(1 + j as u64, vec![7 + j as i32, 9], 6));
+            }
+            let done = e.run_to_completion().expect("batched");
+            let r0 = done.iter().find(|r| r.id == 0).expect("probe response");
+            assert_eq!(r0.tokens, solo, "kv {kv_bits}-bit batch size {}", 1 + extra);
+        }
+    }
+}
+
+/// Serving with a 4-bit cache must stay cheap on the memory axis: the
+/// engine's reported bytes/token is >= 4x below FP32's, and the peak
+/// paged footprint tracks it.
+#[test]
+fn four_bit_cache_cuts_bytes_per_token_4x() {
+    let cfg = tiny_cfg(2);
+    let run = |kv_bits: kllm::kvcache::KvBits| {
+        let ecfg = EngineConfig { kv_bits, ..Default::default() };
+        let mut e = Engine::new(Box::new(native_backend(cfg, WaqBackend::Packed)), &ecfg);
+        e.submit(Request::new(1, vec![1, 2, 3], 6));
+        e.run_to_completion().expect("run");
+        (e.stats.kv_bytes_per_token, e.stats.peak_kv_bytes, e.stats.kv_bits)
+    };
+    let (fp_bpt, fp_peak, fp_bits) = run(kllm::kvcache::KvBits::Fp32);
+    let (q_bpt, q_peak, q_bits) = run(kllm::kvcache::KvBits::B4);
+    assert_eq!((fp_bits, q_bits), (32, 4));
+    assert!(fp_bpt >= 4.0 * q_bpt, "bytes/token {q_bpt} not 4x under {fp_bpt}");
+    assert!(q_peak > 0 && fp_peak > 0);
+    assert!(fp_peak >= 4 * q_peak, "peak bytes {q_peak} not 4x under {fp_peak}");
 }
 
 #[test]

@@ -377,3 +377,105 @@ fn prop_woq_lut_gemv_matches_dot() {
         assert_allclose(&got, &want, 1e-4, 1e-3, "woq vs dot");
     });
 }
+
+// ---------------------------------------------------------------------------
+// paged KV-cache allocator invariants (no PJRT needed)
+// ---------------------------------------------------------------------------
+
+/// Random admit / decode-append / abort sequences over the paged cache:
+/// no block leaks (in-use count == blocks listed in tables), no double
+/// assignment (every live block id appears in exactly one table), and
+/// block-table bounds (written <= seq_len, table length == exactly the
+/// blocks needed to cover the written positions).
+#[test]
+fn prop_paged_kv_no_leaks_no_double_assignment_bounded_tables() {
+    use kllm::kvcache::{KvPrecision, KvQuantizer};
+    Check::new(16).forall("paged-kv", |rng, case| {
+        // seq_len > block_tokens (16): tables must cross block
+        // boundaries, or multi-block release/append bugs go unchallenged
+        let cfg = ModelCfg { seq_len: 40, ..test_cfg() };
+        let precision = match case % 3 {
+            0 => KvPrecision::Fp32,
+            1 => KvPrecision::Quant(KvQuantizer::uniform(
+                cfg.n_layers,
+                cfg.n_heads,
+                cfg.head_dim,
+                4,
+            )),
+            _ => KvPrecision::Quant(
+                KvQuantizer::uniform(cfg.n_layers, cfg.n_heads, cfg.head_dim, 2)
+                    .with_outliers(1),
+            ),
+        };
+        let mut kv = KvManager::with_precision(cfg, precision);
+        let d = cfg.n_heads * cfg.head_dim;
+        let shape = [cfg.n_layers, 1, cfg.n_heads, cfg.seq_len, cfg.head_dim];
+        let nelem: usize = shape.iter().product();
+        let bt = kv.cache().block_tokens();
+        for step in 0..120 {
+            let r = rng.f64();
+            if r < 0.35 {
+                // admit: prefill a free slot at a random prompt length
+                if let Some(slot) = kv.free_slot() {
+                    let kc = HostTensor::f32(rng.normal_vec(nelem, 1.0), &shape);
+                    let vc = HostTensor::f32(rng.normal_vec(nelem, 1.0), &shape);
+                    let plen = 1 + rng.below(cfg.seq_len - 2);
+                    kv.install_prefill(slot, step as u64, plen, &kc, &vc).unwrap();
+                }
+            } else if r < 0.75 {
+                // decode: append one position to every active slot (all
+                // layers), mirroring the engine's step protocol
+                for slot in 0..cfg.decode_batch {
+                    let Some(pos) = kv.position(slot) else { continue };
+                    if pos >= cfg.seq_len - 1 {
+                        kv.release(slot); // exhausted, as the engine would
+                        continue;
+                    }
+                    let krow = rng.normal_vec(d, 1.0);
+                    let vrow = rng.normal_vec(d, 1.0);
+                    for l in 0..cfg.n_layers {
+                        kv.append_token(l, slot, pos, &krow, &vrow).unwrap();
+                    }
+                    kv.advance(slot).unwrap();
+                }
+            } else {
+                // abort a random active slot
+                let occupied: Vec<usize> = (0..cfg.decode_batch)
+                    .filter(|&s| kv.position(s).is_some())
+                    .collect();
+                if !occupied.is_empty() {
+                    kv.release(*rng.choice(&occupied));
+                }
+            }
+
+            // ---- invariants ------------------------------------------
+            let c = kv.cache();
+            let mut seen = std::collections::HashSet::new();
+            let mut listed = 0usize;
+            for slot in 0..cfg.decode_batch {
+                for l in 0..cfg.n_layers {
+                    let written = c.written(l, slot);
+                    let blocks = c.slot_blocks(l, slot);
+                    assert!(written <= cfg.seq_len, "written out of bounds");
+                    assert_eq!(
+                        blocks.len(),
+                        written.div_ceil(bt),
+                        "table covers exactly the written positions"
+                    );
+                    if kv.position(slot).is_none() {
+                        assert_eq!(written, 0, "freed slot still has rows");
+                    }
+                    for &b in blocks {
+                        assert!(
+                            (b as usize) < c.capacity_blocks(),
+                            "block id beyond pool"
+                        );
+                        assert!(seen.insert(b), "block {b} assigned twice");
+                    }
+                    listed += blocks.len();
+                }
+            }
+            assert_eq!(listed, c.in_use_blocks(), "block leak: listed != in-use");
+        }
+    });
+}
