@@ -20,23 +20,6 @@ use kllm::util::bench::{bench_json_path, fast_mode, BenchResult};
 use kllm::util::rng::Rng;
 use kllm::util::stats::LatencyStats;
 
-/// The `test` preset's model config (mirrors python PRESETS["test"]),
-/// used when no artifacts directory has been built.
-fn test_model_cfg() -> ModelCfg {
-    ModelCfg {
-        vocab: 256,
-        d_model: 64,
-        n_layers: 2,
-        n_heads: 4,
-        seq_len: 32,
-        batch: 2,
-        decode_batch: 2,
-        head_dim: 16,
-        d_ff: 256,
-        n_linears: 8,
-    }
-}
-
 fn policy_name(p: AdmitPolicy) -> &'static str {
     match p {
         AdmitPolicy::OnePerStep => "decode-priority",
@@ -51,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         Manifest::load(&dir).map_err(anyhow::Error::msg)?
     } else {
         println!("artifacts/test missing — native runs use a synthetic manifest");
-        Manifest::synthetic("test", test_model_cfg())
+        Manifest::synthetic("test", ModelCfg::test_preset())
     };
     let cfg = manifest.model;
     let params = ParamSet::init(&manifest, &mut Rng::new(42));
@@ -60,14 +43,18 @@ fn main() -> anyhow::Result<()> {
     let json = bench_json_path("BENCH_e2e.json");
 
     // native runs: the measured LUT-GEMM serving path — policy sweep on
-    // the packed kernel, a packed-vs-direct kernel comparison, and a KV
+    // the packed kernel, a packed-vs-direct kernel comparison, a KV
     // precision sweep (32 vs 4 bit cache; FAST_BENCH keeps both so CI
-    // smoke-tests the quantized cache end to end)
+    // smoke-tests the quantized cache end to end), and the
+    // tensor-parallel sharded backend (4 column shards; bit-exact with
+    // native-packed, measured here for the serving-throughput trajectory)
     let mut runs: Vec<(AdmitPolicy, BackendSpec, KvBits)> = vec![
         (AdmitPolicy::OnePerStep, BackendSpec::Native(WaqBackend::Packed), KvBits::Fp32),
         (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Packed), KvBits::Fp32),
         (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Packed), KvBits::B4),
         (AdmitPolicy::FillAll, BackendSpec::Native(WaqBackend::Direct), KvBits::Fp32),
+        (AdmitPolicy::FillAll, BackendSpec::NativeSharded, KvBits::Fp32),
+        (AdmitPolicy::FillAll, BackendSpec::NativeSharded, KvBits::B4),
     ];
     if pjrt_available() && have_artifacts {
         // PJRT runs: measured wall-clock is artifact-bound; the modeled
@@ -85,7 +72,7 @@ fn main() -> anyhow::Result<()> {
         let coord = Coordinator::start_with_manifest(
             manifest.clone(),
             ParamSet { tensors: params.tensors.clone() },
-            EngineConfig { policy, backend, kv_bits, ..Default::default() },
+            EngineConfig { policy, backend, kv_bits, shards: 4, ..Default::default() },
         )?;
         let mut rng = Rng::new(3);
         let t0 = std::time::Instant::now();

@@ -19,22 +19,6 @@ use kllm::util::bench::{fast_mode, KvBenchRow};
 use kllm::util::rng::Rng;
 use kllm::util::stats::rel_l2_err;
 
-/// The `test` preset's model config (mirrors python PRESETS["test"]).
-fn test_model_cfg() -> ModelCfg {
-    ModelCfg {
-        vocab: 256,
-        d_model: 64,
-        n_layers: 2,
-        n_heads: 4,
-        seq_len: 32,
-        batch: 2,
-        decode_batch: 2,
-        head_dim: 16,
-        d_ff: 256,
-        n_linears: 8,
-    }
-}
-
 fn build_backend(manifest: &Manifest, params: &ParamSet) -> anyhow::Result<NativeWaqBackend> {
     NativeWaqBackend::new(
         manifest,
@@ -64,7 +48,7 @@ fn decode_logits_at(
 }
 
 fn main() -> anyhow::Result<()> {
-    let cfg = test_model_cfg();
+    let cfg = ModelCfg::test_preset();
     let manifest = Manifest::synthetic("test", cfg);
     let params = ParamSet::init(&manifest, &mut Rng::new(42));
     let sweep: &[KvBits] = if fast_mode() {

@@ -1,0 +1,260 @@
+//! Shard-scaling bench: tensor-parallel column sharding of the native WAQ
+//! datapath, at two levels —
+//!   * `shard_scaling/gemm/*`: one serving-shaped packed LUT-GEMM split
+//!     into S shards on the persistent pool (the scaling story the column
+//!     split is responsible for);
+//!   * `shard_scaling/e2e/*`: whole-engine decode throughput through
+//!     `--backend native-sharded` on the test preset with a 4-bit KV
+//!     cache.
+//!
+//! Rows land in BENCH_shard.json (`util::bench::ShardBenchRow` documents
+//! the schema). Two CI tripwires fail the job when they fire:
+//!   * parity — sharded output must be bit-exact with the unsharded
+//!     packed kernel (GEMM level) and sharded serving must produce the
+//!     exact greedy token streams of `native-packed` (e2e level);
+//!   * scaling — with >= 4 logical CPUs, serving-scale GEMM time is
+//!     monotonically non-increasing from 1 -> 4 shards (5% noise floor);
+//!     the hard >= 1.5x bound at 4 shards arms at >= 8 logical CPUs
+//!     (>= 4 physical cores under SMT-2 — a 2-core/4-thread runner
+//!     cannot reach it); and 4-shard e2e serving on the tiny preset may
+//!     not collapse below half of 1-shard throughput (the preset's
+//!     narrow linears sit below the fused-build amortization point, so
+//!     e2e *speedup* is asserted at GEMM scale).
+//!
+//! FAST_BENCH=1 sweeps shards {1, 4} on a smaller shape; the full run
+//! sweeps {1, 2, 4, 8}.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use kllm::coordinator::{AdmitPolicy, BackendSpec, Coordinator, EngineConfig};
+use kllm::gemm::{
+    compensate_packed, execute_batch_tiled, CartesianLut, ShardPool, ShardedWaqGemm, TileCfg,
+    WaqBackend,
+};
+use kllm::kvcache::KvBits;
+use kllm::quant::{self, OutlierCfg, QuantToken};
+use kllm::runtime::artifacts::ModelCfg;
+use kllm::runtime::{Manifest, ParamSet};
+use kllm::tensor::Matrix;
+use kllm::util::bench::{fast_mode, ShardBenchRow};
+use kllm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let shard_counts: &[usize] = if fast_mode() { &[1, 4] } else { &[1, 2, 4, 8] };
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    gemm_scaling(shard_counts, cores)?;
+    e2e_scaling(shard_counts, cores)?;
+    Ok(())
+}
+
+/// Serving-shaped sharded GEMM: parity tripwire + scaling measurement.
+fn gemm_scaling(shard_counts: &[usize], cores: usize) -> anyhow::Result<()> {
+    let (k, n, batch, reps) = if fast_mode() {
+        (384usize, 1024usize, 4usize, 40usize)
+    } else {
+        (768, 4096, 8, 60)
+    };
+    let mut rng = Rng::new(0x5A4D);
+    let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
+    let qw = quant::quantize_weights(&wmat, 4);
+    let calib: Vec<Vec<f32>> = (0..6).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
+    let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+    let ocfg = OutlierCfg::default();
+    let cb = quant::learn_act_codebook(&refs, None, 4, ocfg);
+    let toks: Vec<QuantToken> = (0..batch)
+        .map(|_| quant::quantize_token(&rng.heavy_tailed_vec(k, 0.02, 8.0), &cb, ocfg))
+        .collect();
+    let lut = CartesianLut::build(&cb, &qw.codebook);
+    let pw = qw.pack();
+
+    // unsharded reference: packed kernel + outlier compensation (the
+    // bit-exactness oracle every shard count must reproduce)
+    let mut want = execute_batch_tiled(&toks, &pw, &lut, &TileCfg::single_thread());
+    for (o, t) in want.iter_mut().zip(&toks) {
+        compensate_packed(o, t, &pw);
+    }
+
+    let name = format!("shard_scaling/gemm/k{k}n{n}b{batch}");
+    let mut best_by_shards: Vec<(usize, f64)> = Vec::new();
+    for &s in shard_counts {
+        let pool = Arc::new(ShardPool::new(s).map_err(anyhow::Error::msg)?);
+        let sharded =
+            ShardedWaqGemm::from_packed(&pw, &lut, s, pool).map_err(anyhow::Error::msg)?;
+        // parity tripwire (always enforced, any core count)
+        assert_eq!(
+            sharded.execute_batch(&toks),
+            want,
+            "{s}-shard GEMM diverged from the unsharded packed kernel"
+        );
+        let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; n]).collect();
+        for _ in 0..3 {
+            sharded.execute_batch_into(&toks, &mut out);
+        }
+        let (mut best, mut total) = (f64::INFINITY, 0.0f64);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            sharded.execute_batch_into(&toks, &mut out);
+            let dt = t0.elapsed().as_secs_f64();
+            best = best.min(dt);
+            total += dt;
+        }
+        let t1_best = best_by_shards.first().map(|&(_, b)| b).unwrap_or(best);
+        let speedup = t1_best / best;
+        let row = ShardBenchRow {
+            name: name.clone(),
+            shards: s as u32,
+            tok_s: batch as f64 / best,
+            mean_ns: total / reps as f64 * 1e9,
+            speedup_vs_1: speedup,
+            efficiency: speedup / s as f64,
+        };
+        println!(
+            "bench {:34} shards={s} best {:9.3} ms  {:9.1} tok/s  speedup {:.2}x  eff {:.2}",
+            row.name,
+            best * 1e3,
+            row.tok_s,
+            row.speedup_vs_1,
+            row.efficiency
+        );
+        row.append();
+        best_by_shards.push((s, best));
+    }
+
+    // scaling tripwires. `available_parallelism` counts SMT threads, not
+    // physical cores, and a 4-thread/2-core runner genuinely cannot reach
+    // 1.5x (the replicated fused-table build means 4 shards do ~1.6x the
+    // single-shard work; on 2 real cores that nets ~1.25x) — so the hard
+    // 1.5x bound only arms at >= 8 logical CPUs (>= 4 physical under
+    // SMT-2), and 4..8-logical hosts get the monotonicity checks alone.
+    let best = |c: usize| best_by_shards.iter().find(|&&(s, _)| s == c).map(|&(_, b)| b);
+    match (best(1), best(4)) {
+        (Some(t1), Some(t4)) if cores >= 4 => {
+            let speedup = t1 / t4;
+            if cores >= 8 {
+                assert!(
+                    speedup >= 1.5,
+                    "4-shard speedup {speedup:.2}x < 1.5x on a {cores}-logical-CPU host"
+                );
+            }
+            if let Some(t2) = best(2) {
+                // tok/s monotonically non-decreasing from 1 -> 4 shards
+                // (5% timing-noise floor on best-of-N times)
+                assert!(t2 <= t1 * 1.05, "2-shard time regressed vs 1 shard: {t2} vs {t1}");
+                assert!(t4 <= t2 * 1.05, "4-shard time regressed vs 2 shards: {t4} vs {t2}");
+            } else {
+                assert!(t4 <= t1 * 1.05, "4-shard time regressed vs 1 shard: {t4} vs {t1}");
+            }
+        }
+        _ => println!("(skipping scaling assertions: {cores} logical CPUs available)"),
+    }
+    Ok(())
+}
+
+/// One serving run: submit a seeded greedy burst, drain, return the
+/// per-request token streams (sorted by id), wall seconds, and tokens.
+fn run_serving(
+    manifest: &Manifest,
+    params: &ParamSet,
+    backend: BackendSpec,
+    shards: usize,
+    n_requests: usize,
+    max_new: usize,
+) -> anyhow::Result<(Vec<(u64, Vec<i32>)>, f64, usize)> {
+    let coord = Coordinator::start_with_manifest(
+        manifest.clone(),
+        ParamSet { tensors: params.tensors.clone() },
+        EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            backend,
+            kv_bits: KvBits::B4,
+            shards,
+            ..Default::default()
+        },
+    )?;
+    let vocab = manifest.model.vocab;
+    let mut rng = Rng::new(3);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let prompt: Vec<i32> = (0..4).map(|_| rng.below(vocab) as i32).collect();
+            coord.submit_async(prompt, max_new, 0.0).unwrap()
+        })
+        .collect();
+    let mut done = Vec::new();
+    let mut tokens = 0usize;
+    for (id, rx) in rxs {
+        let r = rx.recv()?;
+        tokens += r.tokens.len();
+        done.push((id, r.tokens));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    done.sort_by_key(|&(id, _)| id);
+    coord.shutdown()?;
+    Ok((done, wall, tokens))
+}
+
+/// Whole-engine decode through `--backend native-sharded` (4-bit cache):
+/// e2e parity tripwire vs `native-packed`, plus BENCH_shard.json rows.
+///
+/// The *scaling* acceptance (monotone tok/s, >= 1.5x at 4 shards) is
+/// asserted on the serving-scale GEMM rows above: the test preset's
+/// linear widths (64-256 columns) sit below the fused-table build's
+/// amortization point (see `gemm::sharded`'s "Scaling limit"), so tiny-
+/// preset e2e rows are informational. What IS asserted here, beyond
+/// bit-exact parity, is a catastrophic-regression guard: with enough
+/// cores, 4-shard serving may not fall below half of 1-shard throughput
+/// (catches pool/latch pathologies without demanding speedup on shapes
+/// that cannot provide it).
+fn e2e_scaling(shard_counts: &[usize], cores: usize) -> anyhow::Result<()> {
+    let cfg = ModelCfg::test_preset();
+    let manifest = Manifest::synthetic("test", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    let n_requests = if fast_mode() { 6 } else { 16 };
+    let max_new = 8;
+
+    // unsharded greedy reference (same burst, same seeds)
+    let (reference, _, _) = run_serving(
+        &manifest,
+        &params,
+        BackendSpec::Native(WaqBackend::Packed),
+        1,
+        n_requests,
+        max_new,
+    )?;
+
+    let mut t1_per_tok = None;
+    for &s in shard_counts {
+        let (streams, wall, tokens) =
+            run_serving(&manifest, &params, BackendSpec::NativeSharded, s, n_requests, max_new)?;
+        // e2e parity tripwire: bit-exact greedy token streams
+        assert_eq!(
+            streams, reference,
+            "{s}-shard serving diverged from native-packed greedy decode"
+        );
+        let per_tok = wall / tokens.max(1) as f64;
+        let t1 = *t1_per_tok.get_or_insert(per_tok);
+        let speedup = t1 / per_tok;
+        let row = ShardBenchRow {
+            name: "shard_scaling/e2e/test".into(),
+            shards: s as u32,
+            tok_s: tokens as f64 / wall,
+            mean_ns: per_tok * 1e9,
+            speedup_vs_1: speedup,
+            efficiency: speedup / s as f64,
+        };
+        println!(
+            "bench {:34} shards={s} {:9.1} tok/s  speedup {:.2}x  eff {:.2}",
+            row.name, row.tok_s, row.speedup_vs_1, row.efficiency
+        );
+        row.append();
+        if s == 4 && cores >= 4 {
+            assert!(
+                speedup >= 0.5,
+                "4-shard e2e throughput collapsed to {speedup:.2}x of 1-shard on a \
+                 {cores}-core host (pool/latch pathology)"
+            );
+        }
+    }
+    Ok(())
+}

@@ -22,14 +22,21 @@
 //!     LUT-GEMM kernel. No PJRT involved; its host seconds are measured,
 //!     not modeled.
 //!
-//! Future backends (sharded, speculative, KV-quantized) target this trait
-//! instead of the engine internals.
+//!   * [`ShardedWaqBackend`] — the native datapath with every WAQ
+//!     LUT-GEMM linear split into tensor-parallel column shards on a
+//!     persistent worker pool; bit-exact with `NativeWaqBackend` at any
+//!     shard count (`--backend native-sharded --shards N`).
+//!
+//! Future backends (speculative, multi-node) target this trait instead of
+//! the engine internals.
 
 mod native;
 mod pjrt;
+mod sharded;
 
 pub use native::{NativeCfg, NativeWaqBackend};
 pub use pjrt::PjrtBackend;
+pub use sharded::ShardedWaqBackend;
 
 use anyhow::Result;
 
@@ -53,6 +60,10 @@ pub enum BackendSpec {
     /// Decode through the native K-Means WAQ LUT-GEMM datapath with the
     /// selected software kernel; serving throughput is measured on it.
     Native(WaqBackend),
+    /// Tensor-parallel sharded native serving: every linear's packed WAQ
+    /// GEMM split into `EngineConfig::shards` column shards executed on a
+    /// persistent worker pool — bit-exact with `Native(Packed)`.
+    NativeSharded,
 }
 
 impl Default for BackendSpec {
@@ -66,11 +77,13 @@ impl BackendSpec {
     pub fn waq(&self) -> WaqBackend {
         match self {
             BackendSpec::Pjrt(b) | BackendSpec::Native(b) => *b,
+            // shards stream nibble-packed column slices of the packed form
+            BackendSpec::NativeSharded => WaqBackend::Packed,
         }
     }
 
     pub fn is_native(&self) -> bool {
-        matches!(self, BackendSpec::Native(_))
+        matches!(self, BackendSpec::Native(_) | BackendSpec::NativeSharded)
     }
 
     /// Canonical CLI/stats name (`packed`, `native-packed`, ...).
@@ -80,16 +93,19 @@ impl BackendSpec {
             BackendSpec::Native(WaqBackend::Direct) => "native-direct",
             BackendSpec::Native(WaqBackend::Histogram) => "native-histogram",
             BackendSpec::Native(WaqBackend::Packed) => "native-packed",
+            BackendSpec::NativeSharded => "native-sharded",
         }
     }
 
     /// Every accepted `--backend` value, derived from [`WaqBackend::ALL`]
-    /// (so new kernels surface in CLI error text automatically).
+    /// plus the sharded serving path (so new kernels surface in CLI error
+    /// text automatically).
     pub fn accepted() -> String {
         WaqBackend::ALL
             .iter()
             .map(|b| b.name().to_string())
             .chain(WaqBackend::ALL.iter().map(|b| format!("native-{b}")))
+            .chain(std::iter::once(BackendSpec::NativeSharded.name().to_string()))
             .collect::<Vec<_>>()
             .join("|")
     }
@@ -105,6 +121,9 @@ impl std::str::FromStr for BackendSpec {
     type Err = String;
 
     fn from_str(s: &str) -> Result<BackendSpec, String> {
+        if s == BackendSpec::NativeSharded.name() {
+            return Ok(BackendSpec::NativeSharded);
+        }
         let parsed = match s.strip_prefix("native-") {
             Some(rest) => rest.parse().map(BackendSpec::Native),
             None => s.parse().map(BackendSpec::Pjrt),
@@ -127,6 +146,11 @@ pub struct StepCost {
     /// the native backend, the `CpuWaqModel` roofline for PJRT, zero for
     /// prefill (the stat tracks decode steps).
     pub host_waq_s: f64,
+    /// Tensor-parallel critical path: the sum over this step's sharded
+    /// GEMMs of the slowest shard's measured wall-clock seconds — the
+    /// latency floor the column split cannot beat. 0.0 for unsharded
+    /// backends (their whole GEMM is already counted in `host_waq_s`).
+    pub shard_crit_s: f64,
 }
 
 /// Result of a single-request prefill.
@@ -206,7 +230,7 @@ impl CostModel {
 
     pub(crate) fn prefill(&self, plen: usize) -> StepCost {
         let c = sim::llm::prefill_cost(&self.hw, &self.spec, self.mode, plen.max(1));
-        StepCost { accel_s: c.seconds, accel_j: c.energy_j, host_waq_s: 0.0 }
+        StepCost { accel_s: c.seconds, accel_j: c.energy_j, ..StepCost::default() }
     }
 
     pub(crate) fn decode(&self, active_n: usize, mean_ctx: usize) -> StepCost {
@@ -216,6 +240,7 @@ impl CostModel {
             accel_s: c.seconds,
             accel_j: c.energy_j,
             host_waq_s: self.host.decode_step_seconds(&self.spec, n),
+            ..StepCost::default()
         }
     }
 }
@@ -277,13 +302,29 @@ mod tests {
         }
         assert_eq!(
             BackendSpec::accepted(),
-            "direct|histogram|packed|native-direct|native-histogram|native-packed"
+            "direct|histogram|packed|native-direct|native-histogram|native-packed|\
+             native-sharded"
         );
         let err = "tpu".parse::<BackendSpec>().unwrap_err();
         assert!(err.contains("native-packed") && err.contains("histogram"), "{err}");
         // an unknown native kernel is rejected too
         assert!("native-tpu".parse::<BackendSpec>().is_err());
         assert_eq!(BackendSpec::default(), BackendSpec::Pjrt(WaqBackend::Packed));
+    }
+
+    #[test]
+    fn sharded_spec_roundtrips_and_is_advertised() {
+        // the sharded serving path: FromStr/Display round-trip, packed
+        // kernel underneath, surfaced in the CLI help/error text
+        let sh: BackendSpec = "native-sharded".parse().expect("parse");
+        assert_eq!(sh, BackendSpec::NativeSharded);
+        assert_eq!(sh.to_string(), "native-sharded");
+        assert_eq!(sh.name().parse::<BackendSpec>(), Ok(sh));
+        assert_eq!(sh.waq(), WaqBackend::Packed);
+        assert!(sh.is_native());
+        assert!(BackendSpec::accepted().contains("native-sharded"));
+        let err = "tpu".parse::<BackendSpec>().unwrap_err();
+        assert!(err.contains("native-sharded"), "{err}");
     }
 
     #[test]

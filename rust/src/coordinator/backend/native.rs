@@ -40,7 +40,9 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{batch_occupancy, BackendSpec, CostModel, DecodeBackend, PrefillOut, StepCost};
 use crate::coordinator::kv::KvManager;
-use crate::gemm::{compensate, compensate_packed, CartesianLut, WaqBackend, WaqGemm};
+use crate::gemm::{
+    compensate, compensate_packed, CartesianLut, ShardPool, ShardedWaqGemm, WaqBackend, WaqGemm,
+};
 use crate::kvcache::KvQuantizer;
 use crate::orizuru;
 use crate::quant::{self, Codebook, OutlierCfg, QuantToken};
@@ -95,9 +97,17 @@ impl NativeCfg {
     }
 }
 
+/// How a quantized linear executes its dual-branch GEMM: one fused kernel
+/// call, or `S` tensor-parallel column shards on a persistent worker pool
+/// (bit-exact with each other — see `gemm::sharded`).
+enum GemmExec {
+    Mono(WaqGemm),
+    Sharded(ShardedWaqGemm),
+}
+
 /// One quantized linear: prepared WAQ GEMM + its activation codebook.
 struct QuantLinear {
-    gemm: WaqGemm,
+    exec: GemmExec,
     cb: Codebook,
     k_per_side: usize,
 }
@@ -110,15 +120,38 @@ impl QuantLinear {
         let lut = CartesianLut::build(&cb, &qw.codebook);
         QuantLinear {
             k_per_side: cfg.outlier.k_per_side(w.rows),
-            gemm: WaqGemm::new(qw, lut, cfg.waq),
+            exec: GemmExec::Mono(WaqGemm::new(qw, lut, cfg.waq)),
             cb,
         }
     }
 
+    /// Split the GEMM into `shards` column shards executed on `pool`
+    /// (`ShardedWaqBackend` construction). Requires the packed kernel —
+    /// the shards stream nibble-packed column slices.
+    fn shard(&mut self, shards: usize, pool: &Arc<ShardPool>) -> Result<()> {
+        let GemmExec::Mono(gemm) = &self.exec else {
+            bail!("linear is already sharded");
+        };
+        let Some(pw) = gemm.packed_weights() else {
+            bail!("sharding requires the packed WAQ kernel");
+        };
+        let sharded = ShardedWaqGemm::from_packed(pw, &gemm.lut, shards, pool.clone())
+            .map_err(anyhow::Error::msg)?;
+        self.exec = GemmExec::Sharded(sharded);
+        Ok(())
+    }
+
     /// Dual-branch forward for a batch of token rows: Orizuru detection,
     /// online K-Means quantization, main-branch LUT-GEMM across the whole
-    /// batch, then per-token outlier compensation.
-    fn forward(&self, xs: &[Vec<f32>], outliers_seen: &AtomicU64) -> Vec<Vec<f32>> {
+    /// batch, then per-token outlier compensation (inside each shard's
+    /// column range for the sharded executor, which also adds its
+    /// slowest-shard wall-clock to `shard_crit_ns`).
+    fn forward(
+        &self,
+        xs: &[Vec<f32>],
+        outliers_seen: &AtomicU64,
+        shard_crit_ns: &mut u64,
+    ) -> Vec<Vec<f32>> {
         let toks: Vec<QuantToken> = xs
             .iter()
             .map(|x| {
@@ -127,14 +160,24 @@ impl QuantLinear {
                 quant::quantize_token_with_outliers(x, &self.cb, &outs)
             })
             .collect();
-        let mut out = self.gemm.execute_batch(&toks);
-        for (o, t) in out.iter_mut().zip(&toks) {
-            match self.gemm.packed_weights() {
-                Some(p) => compensate_packed(o, t, p),
-                None => compensate(o, t, self.gemm.unpacked_weights().expect("weights")),
+        match &self.exec {
+            GemmExec::Mono(gemm) => {
+                let mut out = gemm.execute_batch(&toks);
+                for (o, t) in out.iter_mut().zip(&toks) {
+                    match gemm.packed_weights() {
+                        Some(p) => compensate_packed(o, t, p),
+                        None => compensate(o, t, gemm.unpacked_weights().expect("weights")),
+                    }
+                }
+                out
+            }
+            GemmExec::Sharded(sh) => {
+                let mut out: Vec<Vec<f32>> =
+                    toks.iter().map(|_| vec![0.0f32; sh.n_cols()]).collect();
+                *shard_crit_ns += sh.execute_batch_into(&toks, &mut out);
+                out
             }
         }
-        out
     }
 }
 
@@ -290,6 +333,22 @@ impl NativeWaqBackend {
         self.outliers_seen.clone()
     }
 
+    /// Split every quantized linear into `shards` tensor-parallel column
+    /// shards executed on `pool` (see `gemm::sharded`) — the
+    /// `ShardedWaqBackend` construction step. Embeddings, norms,
+    /// attention, and the KV cache stay unsharded; only the WAQ LUT-GEMM
+    /// linears are split, so logits remain bit-identical to the unsharded
+    /// packed datapath.
+    pub(crate) fn shard_linears(&mut self, shards: usize, pool: &Arc<ShardPool>) -> Result<()> {
+        for layer in self.layers.iter_mut() {
+            layer.qkv.shard(shards, pool)?;
+            layer.attn_out.shard(shards, pool)?;
+            layer.mlp_up.shard(shards, pool)?;
+            layer.mlp_down.shard(shards, pool)?;
+        }
+        Ok(())
+    }
+
     /// Tied-embedding LM head on one final-norm row (kept FP32).
     fn head_logits(&self, hn: &[f32]) -> Vec<f32> {
         (0..self.model.vocab)
@@ -300,15 +359,17 @@ impl NativeWaqBackend {
     /// Run one quantized linear and charge its wall-clock to `waq_ns` —
     /// the measured WAQ-datapath seconds exclude the FP attention/norm/
     /// LM-head work, so they stay comparable to `CpuWaqModel`'s modeled
-    /// GEMM-only roofline.
+    /// GEMM-only roofline. `crit_ns` collects the slowest-shard critical
+    /// path when the linears are sharded (0 for the mono executor).
     fn quant_forward(
         &self,
         lin: &QuantLinear,
         xs: &[Vec<f32>],
         waq_ns: &mut u64,
+        crit_ns: &mut u64,
     ) -> Vec<Vec<f32>> {
         let t0 = Instant::now();
-        let out = lin.forward(xs, &self.outliers_seen);
+        let out = lin.forward(xs, &self.outliers_seen, crit_ns);
         *waq_ns += t0.elapsed().as_nanos() as u64;
         out
     }
@@ -356,8 +417,12 @@ impl DecodeBackend for NativeWaqBackend {
         }
         let mut kc = vec![0f32; m.n_layers * h * s * hd];
         let mut vc = vec![0f32; m.n_layers * h * s * hd];
+        // slowest-shard critical path across the prefill's linears
+        // (stays 0 for the unsharded executors)
+        let mut crit_ns = 0u64;
         for (l, layer) in self.layers.iter().enumerate() {
-            let qkv_rows = layer.qkv.forward(&rms_rows(&x, &layer.ln1), &self.outliers_seen);
+            let qkv_rows =
+                layer.qkv.forward(&rms_rows(&x, &layer.ln1), &self.outliers_seen, &mut crit_ns);
             let qkv = Matrix::from_vec(n, 3 * d, qkv_rows.concat());
             for t in 0..n {
                 let row = qkv.row(t);
@@ -370,27 +435,31 @@ impl DecodeBackend for NativeWaqBackend {
                 }
             }
             let att = causal_attention(&qkv, h, hd);
-            let proj = layer.attn_out.forward(&mat_rows(&att), &self.outliers_seen);
+            let proj =
+                layer.attn_out.forward(&mat_rows(&att), &self.outliers_seen, &mut crit_ns);
             add_rows(&mut x, &proj);
-            let mut up = layer.mlp_up.forward(&rms_rows(&x, &layer.ln2), &self.outliers_seen);
+            let mut up =
+                layer.mlp_up.forward(&rms_rows(&x, &layer.ln2), &self.outliers_seen, &mut crit_ns);
             for r in up.iter_mut() {
                 for v in r.iter_mut() {
                     *v = gelu(*v);
                 }
             }
-            let down = layer.mlp_down.forward(&up, &self.outliers_seen);
+            let down = layer.mlp_down.forward(&up, &self.outliers_seen, &mut crit_ns);
             add_rows(&mut x, &down);
         }
         let mut hn = vec![0f32; d];
         rms_into(x.row(n - 1), &self.lnf, &mut hn);
         let logits = self.head_logits(&hn);
         let shape = [m.n_layers, 1, h, s, hd];
+        let mut cost = self.cost.prefill(plen);
+        cost.shard_crit_s = crit_ns as f64 * 1e-9;
         Ok(PrefillOut {
             plen,
             logits,
             k_cache: HostTensor::f32(kc, &shape),
             v_cache: HostTensor::f32(vc, &shape),
-            cost: self.cost.prefill(plen),
+            cost,
         })
     }
 
@@ -406,8 +475,10 @@ impl DecodeBackend for NativeWaqBackend {
         if toks.len() != b || pos.len() != b || active.len() != b {
             bail!("decode arity mismatch: expected {b} slots");
         }
-        // measured WAQ-datapath nanoseconds (LUT-GEMM linears only)
+        // measured WAQ-datapath nanoseconds (LUT-GEMM linears only), and
+        // the slowest-shard critical path when the linears are sharded
         let mut waq_ns = 0u64;
+        let mut crit_ns = 0u64;
         let (h, hd, d, s) = (m.n_heads, m.head_dim, m.d_model, m.seq_len);
         let slots: Vec<usize> = (0..b).filter(|&i| active[i]).collect();
         let mut out = vec![0f32; b * m.vocab];
@@ -428,7 +499,7 @@ impl DecodeBackend for NativeWaqBackend {
             .collect();
         for (l, layer) in self.layers.iter().enumerate() {
             let xn = rms_vecs(&xs, &layer.ln1);
-            let qkv = self.quant_forward(&layer.qkv, &xn, &mut waq_ns);
+            let qkv = self.quant_forward(&layer.qkv, &xn, &mut waq_ns, &mut crit_ns);
             let mut att_rows: Vec<Vec<f32>> = Vec::with_capacity(slots.len());
             for (bi, &slot) in slots.iter().enumerate() {
                 // no clamp: the paged cache's own bounds/protocol checks
@@ -466,18 +537,19 @@ impl DecodeBackend for NativeWaqBackend {
                 }
                 att_rows.push(att);
             }
-            let proj = self.quant_forward(&layer.attn_out, &att_rows, &mut waq_ns);
+            let proj =
+                self.quant_forward(&layer.attn_out, &att_rows, &mut waq_ns, &mut crit_ns);
             for (x, pr) in xs.iter_mut().zip(&proj) {
                 add_into(x, pr);
             }
             let xn2 = rms_vecs(&xs, &layer.ln2);
-            let mut up = self.quant_forward(&layer.mlp_up, &xn2, &mut waq_ns);
+            let mut up = self.quant_forward(&layer.mlp_up, &xn2, &mut waq_ns, &mut crit_ns);
             for r in up.iter_mut() {
                 for v in r.iter_mut() {
                     *v = gelu(*v);
                 }
             }
-            let down = self.quant_forward(&layer.mlp_down, &up, &mut waq_ns);
+            let down = self.quant_forward(&layer.mlp_down, &up, &mut waq_ns, &mut crit_ns);
             for (x, dn) in xs.iter_mut().zip(&down) {
                 add_into(x, dn);
             }
@@ -494,6 +566,7 @@ impl DecodeBackend for NativeWaqBackend {
         // (quantize + main branch + compensation), the datapath the
         // CpuWaqModel roofline models for the PJRT backend
         cost.host_waq_s = waq_ns as f64 * 1e-9;
+        cost.shard_crit_s = crit_ns as f64 * 1e-9;
         Ok((out, cost))
     }
 }

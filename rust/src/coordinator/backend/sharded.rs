@@ -1,0 +1,116 @@
+//! The tensor-parallel sharded native backend: `NativeWaqBackend`'s exact
+//! datapath with every WAQ LUT-GEMM linear split into `S` column shards
+//! executed concurrently on a persistent worker pool (`gemm::sharded`).
+//!
+//! The shard seam, end to end:
+//!   * **Load time** — each packed weight matrix is partitioned into `S`
+//!     contiguous column shards (`PackedWeights::slice_cols`: row-pair
+//!     packing preserved; codebook, per-column scales, outlier-dequant
+//!     state, and a LUT replica go with each shard), mirroring how
+//!     tensor-parallel serving shards a `Linear` across ranks.
+//!   * **Step time** — one GEMM call fans the shards out over the pool;
+//!     each shard writes its disjoint column slice of the shared output
+//!     rows (zero-copy "all-gather": the full row is only consumed at
+//!     the next nonlinearity boundary — norm, GELU, softmax — exactly
+//!     where multi-device TP would gather).
+//!   * **Unsharded remainder** — embeddings, norms, attention, the LM
+//!     head, and the paged KV cache are untouched: attention is FP row
+//!     arithmetic over the cache's block-table gather, not a LUT-GEMM,
+//!     so sharding it would split the *reduction* (requiring a real
+//!     all-reduce) rather than the embarrassingly-parallel column axis.
+//!     `kv_quantizer` likewise delegates to the unsharded calibration
+//!     pass, so `--kv-bits {32,4,3,2}` compose unchanged.
+//!
+//! Because every shard performs the identical per-column FP operations in
+//! the identical order as the unsharded packed kernel, this backend is
+//! **bit-exact** with `native-packed` at any shard count — enforced by
+//! the parity net in `tests/backend_parity.rs` and the `shard_scaling`
+//! bench's CI tripwires. `StepCost::shard_crit_s` reports the real
+//! slowest-shard critical path of each step (the latency floor a
+//! multi-worker split cannot beat).
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::{BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PrefillOut, StepCost};
+use crate::coordinator::kv::KvManager;
+use crate::gemm::{ShardPool, WaqBackend};
+use crate::kvcache::KvQuantizer;
+use crate::runtime::artifacts::ModelCfg;
+use crate::runtime::{Manifest, ParamSet};
+
+/// `--backend native-sharded`: the native K-Means WAQ datapath with
+/// tensor-parallel column-sharded linears on a persistent worker pool.
+pub struct ShardedWaqBackend {
+    inner: NativeWaqBackend,
+    shards: usize,
+}
+
+impl ShardedWaqBackend {
+    /// Quantize `params` exactly like [`NativeWaqBackend`] (same
+    /// calibration pass, same codebooks — the packed kernel is forced,
+    /// since shards stream nibble-packed column slices), then split every
+    /// linear into `shards` column shards on a fresh persistent pool.
+    /// `shards == 0` is a configuration error, reported as `Err`.
+    pub fn new(
+        manifest: &Manifest,
+        params: &ParamSet,
+        cfg: NativeCfg,
+        shards: usize,
+    ) -> Result<ShardedWaqBackend> {
+        if shards == 0 {
+            bail!("invalid --shards 0: the sharded backend needs >= 1 column shard");
+        }
+        let cfg = NativeCfg { waq: WaqBackend::Packed, ..cfg };
+        let mut inner = NativeWaqBackend::new(manifest, params, cfg)?;
+        let pool = Arc::new(ShardPool::new(shards).map_err(anyhow::Error::msg)?);
+        inner.shard_linears(shards, &pool)?;
+        Ok(ShardedWaqBackend { inner, shards })
+    }
+
+    /// Configured shard count (worker threads in the pool; narrow
+    /// matrices may execute fewer effective shards).
+    pub fn shard_count(&self) -> usize {
+        self.shards
+    }
+
+    /// Handle to the compensation-branch outlier counter (shared with the
+    /// inner datapath).
+    pub fn outlier_counter(&self) -> Arc<AtomicU64> {
+        self.inner.outlier_counter()
+    }
+}
+
+impl DecodeBackend for ShardedWaqBackend {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::NativeSharded
+    }
+
+    fn model(&self) -> ModelCfg {
+        self.inner.model()
+    }
+
+    /// Cache codebooks come from the *unsharded* calibration pass —
+    /// attention (and therefore the KV cache) is not sharded, so the
+    /// sharded backend serves any `--kv-bits` with books bit-identical
+    /// to `native-packed`'s.
+    fn kv_quantizer(&self, bits: u32) -> KvQuantizer {
+        self.inner.kv_quantizer(bits)
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+        self.inner.prefill(prompt)
+    }
+
+    fn decode(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<f32>, StepCost)> {
+        self.inner.decode(toks, pos, active, kv)
+    }
+}

@@ -42,6 +42,11 @@ pub struct EngineConfig {
     /// stores K-Means index streams with codebooks supplied by the
     /// backend's `kv_quantizer`.
     pub kv_bits: KvBits,
+    /// Column-shard count for the tensor-parallel sharded backend
+    /// (`--backend native-sharded --shards N`); ignored by the other
+    /// backends. Must be >= 1 — `ShardedWaqBackend::new` rejects 0 with a
+    /// real error (and `kllm serve` refuses `--shards 0` up front).
+    pub shards: usize,
 }
 
 impl Default for EngineConfig {
@@ -52,6 +57,7 @@ impl Default for EngineConfig {
             mode: OasisMode::a4(),
             backend: BackendSpec::default(),
             kv_bits: KvBits::Fp32,
+            shards: 2,
         }
     }
 }
@@ -123,6 +129,12 @@ impl Engine {
         self.backend.model()
     }
 
+    /// The KV slot manager (paged-cache introspection for invariant
+    /// checks and benches; the engine retains ownership).
+    pub fn kv(&self) -> &KvManager {
+        &self.kv
+    }
+
     pub fn submit(&mut self, r: Request) {
         self.batcher.enqueue(r);
     }
@@ -164,6 +176,7 @@ impl Engine {
             self.sim.seconds += pre.cost.accel_s;
             self.sim.energy_j += pre.cost.accel_j;
             self.stats.host_waq_s += pre.cost.host_waq_s;
+            self.stats.host_shard_crit_s += pre.cost.shard_crit_s;
             // the prefill's last-position logits give token #1
             let tok = self.sample(&pre.logits, req.temperature);
             let mut ar = ActiveReq {
@@ -230,8 +243,10 @@ impl Engine {
         self.sim.seconds += cost.accel_s;
         self.sim.energy_j += cost.accel_j;
         // host software-datapath seconds: measured for native backends,
-        // the CpuWaqModel roofline for PJRT
+        // the CpuWaqModel roofline for PJRT; the shard critical path is
+        // the slowest-shard sum for the tensor-parallel backend
         self.stats.host_waq_s += cost.host_waq_s;
+        self.stats.host_shard_crit_s += cost.shard_crit_s;
 
         let mut done = Vec::new();
         for slot in 0..b {

@@ -14,7 +14,7 @@ pub mod server;
 
 pub use backend::{
     probe_decode_logits, BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend,
-    PjrtBackend, PrefillOut, StepCost,
+    PjrtBackend, PrefillOut, ShardedWaqBackend, StepCost,
 };
 pub use batcher::{AdmitPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, SimTotals};

@@ -71,6 +71,11 @@ pub struct EngineStats {
     /// LUT-GEMM datapath, the modeled `baselines::cpu::CpuWaqModel`
     /// roofline when decode runs PJRT artifacts
     pub host_waq_s: f64,
+    /// Tensor-parallel critical-path seconds summed across all steps: for
+    /// the sharded backend, each sharded GEMM contributes its slowest
+    /// shard's measured wall-clock (the latency floor of the column
+    /// split); stays 0.0 for unsharded backends
+    pub host_shard_crit_s: f64,
     /// KV-cache storage bits per element (32 = FP32; 0 before engine
     /// construction)
     pub kv_bits: u32,

@@ -11,9 +11,12 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use super::backend::{BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PjrtBackend};
+use super::backend::{
+    BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PjrtBackend, ShardedWaqBackend,
+};
 use super::engine::{Engine, EngineConfig, SimTotals};
 use super::request::{EngineStats, Request, RequestId, Response};
+use crate::gemm::WaqBackend;
 use crate::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
 use crate::util::json::Json;
 
@@ -139,12 +142,7 @@ fn build_backend(
             Ok(Box::new(PjrtBackend::new(rt, params, waq, cfg.mode)?))
         }
         BackendSpec::Native(waq) => {
-            let manifest = match source {
-                EngineSource::Preset(p) => {
-                    Manifest::load(&artifacts_dir(p)).map_err(|e| anyhow!(e))?
-                }
-                EngineSource::Manifest(m) => m.clone(),
-            };
+            let manifest = native_manifest(source)?;
             let native = NativeWaqBackend::new(
                 &manifest,
                 params,
@@ -152,6 +150,24 @@ fn build_backend(
             )?;
             Ok(Box::new(native))
         }
+        BackendSpec::NativeSharded => {
+            let manifest = native_manifest(source)?;
+            let sharded = ShardedWaqBackend::new(
+                &manifest,
+                params,
+                NativeCfg::from_mode(WaqBackend::Packed, cfg.mode),
+                cfg.shards,
+            )?;
+            Ok(Box::new(sharded))
+        }
+    }
+}
+
+/// Resolve the manifest for a native (artifact-free) backend.
+fn native_manifest(source: &EngineSource) -> Result<Manifest> {
+    match source {
+        EngineSource::Preset(p) => Manifest::load(&artifacts_dir(p)).map_err(|e| anyhow!(e)),
+        EngineSource::Manifest(m) => Ok(m.clone()),
     }
 }
 

@@ -10,10 +10,14 @@
 //! `Direct` and `Histogram` are the numerics twins of the OASIS datapath
 //! (kept for cross-checking and for the simulator's semantics), `Packed`
 //! is the serving default. All three are bit-exact for in-range indices.
+//! The `sharded` module adds tensor-parallel column sharding on top of
+//! the packed form ([`ShardedWaqGemm`] on a persistent [`ShardPool`]),
+//! bit-exact with the unsharded kernel at every shard count.
 
 pub mod compensation;
 pub mod lut;
 pub mod packed;
+pub mod sharded;
 pub mod waq;
 pub mod woq;
 
@@ -21,7 +25,8 @@ pub use compensation::{
     compensate, compensate_packed, execute_critical_path, execute_dual_branch,
 };
 pub use lut::CartesianLut;
-pub use packed::{execute_batch_tiled, execute_packed, TileCfg};
+pub use packed::{accumulate_tiles, execute_batch_tiled, execute_packed, TileCfg};
+pub use sharded::{ShardPool, ShardedWaqGemm};
 pub use waq::{execute_direct, execute_histogram};
 
 use crate::quant::{PackedWeights, QuantToken, QuantWeights};

@@ -153,6 +153,28 @@ pub fn execute_packed(tok: &QuantToken, w: &PackedWeights, lut: &CartesianLut) -
     acc
 }
 
+/// Accumulate (no scaling) the full column range of `w` for every token
+/// into per-token output slices (each at least `w.n_cols` long), K-pair
+/// tiles outermost. Per output column the accumulation order is identical
+/// to [`execute_batch_tiled`]'s — k pairs ascending, then the odd tail —
+/// for every `k_pair_block`, so callers that scale afterwards stay
+/// bit-exact with the unsharded kernel. This is the building block the
+/// tensor-parallel sharded backend (`gemm::sharded`) drives with each
+/// shard's column slice of the packed weights.
+pub fn accumulate_tiles(
+    toks: &[QuantToken],
+    w: &PackedWeights,
+    lut: &CartesianLut,
+    k_pair_block: usize,
+    outs: &mut [&mut [f32]],
+) {
+    for t in toks {
+        assert_eq!(t.idx.len(), w.n_rows, "reduction length mismatch");
+    }
+    assert_eq!(toks.len(), outs.len(), "token/output arity mismatch");
+    accumulate_range(toks, w, lut, k_pair_block.max(1), 0, w.n_cols, outs);
+}
+
 /// Accumulate (no scaling) columns `[j0, j1)` of every token into
 /// `outs[t][..j1-j0]`, iterating K-pair tiles outermost and tokens inside
 /// so each packed weight tile is reused across the whole batch while hot.
@@ -163,7 +185,7 @@ fn accumulate_range(
     k_pair_block: usize,
     j0: usize,
     j1: usize,
-    outs: &mut [Vec<f32>],
+    outs: &mut [&mut [f32]],
 ) {
     let n = w.n_cols;
     let np = w.n_pairs();
@@ -192,6 +214,21 @@ fn accumulate_range(
     }
 }
 
+/// Split `[0, n)` into `parts` contiguous near-equal ranges (width
+/// `ceil(n / parts)`, last range truncated, empty ranges dropped). The
+/// ONE chunking definition shared by the tiled kernel's per-thread column
+/// ranges and the sharded backend's load-time column split
+/// (`gemm::sharded`), so the two paths can never split columns
+/// differently.
+pub(crate) fn even_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1);
+    let width = n.div_ceil(parts);
+    (0..parts)
+        .map(|i| (i * width, ((i + 1) * width).min(n)))
+        .filter(|&(j0, j1)| j0 < j1)
+        .collect()
+}
+
 /// Split `[0, n)` into per-worker column ranges: at most `threads` ranges,
 /// each at least `n_block` wide (so fused-row builds stay amortized).
 fn col_ranges(n: usize, cfg: &TileCfg) -> Vec<(usize, usize)> {
@@ -202,11 +239,7 @@ fn col_ranges(n: usize, cfg: &TileCfg) -> Vec<(usize, usize)> {
     };
     let min_width = cfg.n_block.max(1);
     let t = hw.clamp(1, (n / min_width).max(1));
-    let width = n.div_ceil(t);
-    (0..t)
-        .map(|i| (i * width, ((i + 1) * width).min(n)))
-        .filter(|&(j0, j1)| j0 < j1)
-        .collect()
+    even_ranges(n, t)
 }
 
 /// Multi-token (M x K) @ (K x N) over packed weights: cache-tiled over N
@@ -231,7 +264,8 @@ pub fn execute_batch_tiled(
     let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; n]).collect();
 
     if ranges.len() <= 1 {
-        accumulate_range(toks, w, lut, k_pair_block, 0, n, &mut out);
+        let mut views: Vec<&mut [f32]> = out.iter_mut().map(Vec::as_mut_slice).collect();
+        accumulate_range(toks, w, lut, k_pair_block, 0, n, &mut views);
     } else {
         std::thread::scope(|s| {
             let workers: Vec<_> = ranges
@@ -240,7 +274,10 @@ pub fn execute_batch_tiled(
                     s.spawn(move || {
                         let mut local: Vec<Vec<f32>> =
                             toks.iter().map(|_| vec![0.0f32; j1 - j0]).collect();
-                        accumulate_range(toks, w, lut, k_pair_block, j0, j1, &mut local);
+                        let mut views: Vec<&mut [f32]> =
+                            local.iter_mut().map(Vec::as_mut_slice).collect();
+                        accumulate_range(toks, w, lut, k_pair_block, j0, j1, &mut views);
+                        drop(views);
                         (j0, local)
                     })
                 })
@@ -341,6 +378,26 @@ mod tests {
         assert!(execute_batch_tiled(&none, &pw, &lut, &TileCfg::default()).is_empty());
         let got = execute_batch_tiled(&toks, &pw, &lut, &TileCfg::default());
         assert_eq!(got[0], execute_packed(&toks[0], &pw, &lut));
+    }
+
+    #[test]
+    fn accumulate_tiles_is_the_unscaled_kernel() {
+        // the slice-level entry point the sharded backend drives: after
+        // applying the same per-token/per-column scaling, it equals the
+        // full batched kernel bit-for-bit (odd K exercises the tail row)
+        let (toks, qw, lut) = setup(8, 33, 12, 4, 4, 3);
+        let pw = qw.pack();
+        let mut rows: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; 12]).collect();
+        let mut views: Vec<&mut [f32]> = rows.iter_mut().map(Vec::as_mut_slice).collect();
+        accumulate_tiles(&toks, &pw, &lut, 4, &mut views);
+        drop(views);
+        for (tok, row) in toks.iter().zip(rows.iter_mut()) {
+            for (a, &s) in row.iter_mut().zip(&pw.col_scales) {
+                *a *= tok.scale * s;
+            }
+        }
+        let want = execute_batch_tiled(&toks, &pw, &lut, &TileCfg::single_thread());
+        assert_eq!(rows, want);
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! Tensor-parallel column sharding of the packed WAQ LUT-GEMM.
+//!
+//! The index-based LUT-GEMM is embarrassingly parallel across output
+//! columns: every output channel owns its own accumulator, its own scale,
+//! and its own weight-index column, and the Cartesian LUT is replicated
+//! read-only state. This module exploits that the same way tensor-parallel
+//! serving does — each [`WaqGemm`](super::WaqGemm)-shaped matrix is split
+//! into `S` column shards *at load time* ([`PackedWeights::slice_cols`]:
+//! row-pair packing preserved, codebook/scales/outlier-dequant state
+//! partitioned per shard, per-shard LUT replica), and one GEMM call
+//! executes all shards concurrently on a persistent worker pool.
+//!
+//! # No concat copies, all-gather at nonlinearity boundaries
+//!
+//! Each shard writes directly into its disjoint column slice of the
+//! shared per-token output rows (`split_at_mut`, no post-hoc concat). The
+//! "all-gather" of tensor-parallel serving is therefore zero-copy shared
+//! memory: the only synchronization is the per-GEMM latch, and a full row
+//! is first *consumed* at the next nonlinearity (norm / softmax / GELU) —
+//! exactly the boundary where a multi-device TP implementation would
+//! gather. Attention stays unsharded (it is FP row arithmetic over the
+//! paged KV cache, not a LUT-GEMM; see `coordinator::backend::sharded`).
+//!
+//! # Bit-exactness
+//!
+//! Per output column the shard kernel performs the identical FP additions
+//! in the identical order as the unsharded packed kernel (k pairs
+//! ascending, odd tail, `tok.scale * col_scale` scaling, then outlier
+//! compensation in detection order), so sharded results are bit-identical
+//! to [`super::packed::execute_batch_tiled`] — and hence to
+//! `execute_direct` — at every shard count, including uneven splits.
+//!
+//! # Scaling limit
+//!
+//! The fused pair-table build (`2^(2*nW)` adds per K pair) is replicated
+//! in every shard — it amortizes over the shard's *column width*, not the
+//! full N. Narrow shards therefore pay a relatively larger build tax:
+//! ideal speedup at S shards is `(B + N) / (B + N/S)` with `B = 256`
+//! build adds per pair, which the `shard_scaling` bench's efficiency
+//! column makes visible. Widen per-shard columns (fewer shards, bigger
+//! N) to approach linear scaling.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::compensation::compensate_packed;
+use super::lut::CartesianLut;
+use super::packed::{accumulate_tiles, even_ranges};
+use crate::quant::{PackedWeights, QuantToken};
+
+/// K-pair tile depth used inside every shard (the same default the
+/// unsharded batched kernel uses; per-column accumulation order — and
+/// therefore bit-exactness — does not depend on it).
+const SHARD_K_PAIR_BLOCK: usize = 128;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Countdown latch joining one round of shard jobs.
+struct Latch {
+    /// (jobs still running, any job panicked)
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new((n, false)), cv: Condvar::new() }
+    }
+
+    fn done(&self, panicked: bool) {
+        let mut g = self.state.lock().unwrap();
+        g.0 -= 1;
+        g.1 |= panicked;
+        if g.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every job finished; returns whether any panicked.
+    fn wait(&self) -> bool {
+        let mut g = self.state.lock().unwrap();
+        while g.0 > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.1
+    }
+}
+
+/// Persistent worker pool for shard execution: `S` long-lived threads fed
+/// per-GEMM job rounds over channels, joined by a countdown latch. The
+/// pool outlives individual GEMM calls (workers are spawned once per
+/// backend, not per MatMul), which is what makes per-step sharding cheap
+/// enough for decode-sized GEMMs.
+pub struct ShardPool {
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Spawn `workers` persistent shard threads. Zero workers is a config
+    /// error (`--shards 0`), reported as `Err`, never a panic.
+    pub fn new(workers: usize) -> Result<ShardPool, String> {
+        if workers == 0 {
+            return Err("shard pool needs >= 1 worker (got --shards 0)".into());
+        }
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("kllm-shard-{i}"))
+                .spawn(move || {
+                    // run until the pool drops its sender
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .map_err(|e| format!("spawn shard worker {i}: {e}"))?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(ShardPool { txs, handles })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Execute one round of jobs on the persistent workers (job `i` runs
+    /// on worker `i % workers`; extra jobs queue per worker) and block
+    /// until all of them finish. Panics if any job panicked or a worker
+    /// died mid-round — in every case only *after* the latch has drained,
+    /// so no job is abandoned mid-borrow.
+    pub fn run(&self, jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        let mut send_failed = false;
+        for (i, job) in jobs.into_iter().enumerate() {
+            if send_failed {
+                // round aborted: count the undispatched job down so the
+                // latch still drains to zero
+                latch.done(true);
+                continue;
+            }
+            let l = latch.clone();
+            let wrapped: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let panicked = catch_unwind(AssertUnwindSafe(job)).is_err();
+                l.done(panicked);
+            });
+            // SAFETY: lifetime erasure only — `run` never returns (or
+            // unwinds) before the latch has drained: every dispatched job
+            // counts down after running, a failed send counts its
+            // never-run job down right here (the closure comes back
+            // inside the SendError and is dropped without executing), and
+            // both panic exits below sit after `latch.wait()`. So no
+            // borrow captured by a job outlives this call, and a worker
+            // never holds a job beyond its invocation.
+            let wrapped: Job = unsafe {
+                Box::from_raw(Box::into_raw(wrapped) as *mut (dyn FnOnce() + Send + 'static))
+            };
+            if self.txs[i % self.txs.len()].send(wrapped).is_err() {
+                latch.done(true);
+                send_failed = true;
+            }
+        }
+        let job_panicked = latch.wait();
+        if send_failed {
+            panic!("shard worker exited mid-round");
+        }
+        if job_panicked {
+            panic!("shard worker job panicked");
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // closing the channels ends each worker's recv loop
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One column shard: a contiguous output-column slice of the packed
+/// weights plus its own LUT replica (read-only state is per-shard, as it
+/// would be per-rank in multi-device tensor parallelism).
+struct Shard {
+    w: PackedWeights,
+    lut: CartesianLut,
+}
+
+impl Shard {
+    /// Full dual-branch forward for this shard's columns, written straight
+    /// into the callers' per-token output slices (each `w.n_cols` wide):
+    /// main-branch accumulation (k-pairs ascending + tail), per-column
+    /// scaling, then outlier compensation — the exact per-column op order
+    /// of the unsharded `execute_batch` + `compensate_packed` path.
+    fn run(&self, toks: &[QuantToken], mut outs: Vec<&mut [f32]>) {
+        for o in outs.iter_mut() {
+            o.fill(0.0);
+        }
+        accumulate_tiles(toks, &self.w, &self.lut, SHARD_K_PAIR_BLOCK, &mut outs);
+        for (tok, o) in toks.iter().zip(outs.iter_mut()) {
+            for (a, &s) in o.iter_mut().zip(&self.w.col_scales) {
+                *a *= tok.scale * s;
+            }
+        }
+        // outlier branch on this shard's columns: the canonical
+        // compensation routine over the shard's sliced weights (per-column
+        // values are bit-identical to the full matrix's, so this is the
+        // same math `compensate_packed` applies unsharded)
+        for (tok, o) in toks.iter().zip(outs.iter_mut()) {
+            compensate_packed(o, tok, &self.w);
+        }
+    }
+}
+
+/// A prepared tensor-parallel WAQ GEMM: `S` column shards of one packed
+/// weight matrix, executed concurrently on a shared persistent
+/// [`ShardPool`]. Bit-exact with the unsharded packed kernel (plus
+/// `compensate_packed`) at every shard count.
+pub struct ShardedWaqGemm {
+    shards: Vec<Shard>,
+    pool: Arc<ShardPool>,
+    n_rows: usize,
+    n_cols: usize,
+}
+
+impl ShardedWaqGemm {
+    /// Split `w` into (at most) `shards` contiguous column shards —
+    /// uneven splits are fine; when `n_cols < shards` the surplus shards
+    /// are simply empty and dropped. `shards == 0` is a config error.
+    pub fn from_packed(
+        w: &PackedWeights,
+        lut: &CartesianLut,
+        shards: usize,
+        pool: Arc<ShardPool>,
+    ) -> Result<ShardedWaqGemm, String> {
+        if shards == 0 {
+            return Err("shard count must be >= 1 (got 0)".into());
+        }
+        let n = w.n_cols;
+        // the same chunking the tiled kernel uses for its thread ranges —
+        // one definition, so the two paths can never split differently
+        let parts: Vec<Shard> = even_ranges(n, shards)
+            .into_iter()
+            .map(|(j0, j1)| Shard { w: w.slice_cols(j0, j1), lut: lut.clone() })
+            .collect();
+        Ok(ShardedWaqGemm {
+            shards: parts,
+            pool,
+            n_rows: w.n_rows,
+            n_cols: n,
+        })
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Effective shard count (after dropping empty column ranges).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Batched dual-branch forward into caller-allocated output rows
+    /// (each `n_cols` long; contents are overwritten). Every shard runs
+    /// concurrently on the pool and writes its own column slice of each
+    /// row — no gather copies. Returns the slowest shard's wall-clock
+    /// nanoseconds (the step's tensor-parallel critical path).
+    pub fn execute_batch_into(&self, toks: &[QuantToken], out: &mut [Vec<f32>]) -> u64 {
+        assert_eq!(toks.len(), out.len(), "token/output arity mismatch");
+        for t in toks {
+            assert_eq!(t.idx.len(), self.n_rows, "reduction length mismatch");
+        }
+        for row in out.iter() {
+            assert_eq!(row.len(), self.n_cols, "output row width mismatch");
+        }
+        if toks.is_empty() {
+            return 0;
+        }
+        // carve each token's row into per-shard disjoint slices
+        let mut per_shard: Vec<Vec<&mut [f32]>> = self
+            .shards
+            .iter()
+            .map(|_| Vec::with_capacity(out.len()))
+            .collect();
+        for row in out.iter_mut() {
+            let mut rest: &mut [f32] = row.as_mut_slice();
+            for (si, sh) in self.shards.iter().enumerate() {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(sh.w.n_cols);
+                per_shard[si].push(head);
+                rest = tail;
+            }
+            debug_assert!(rest.is_empty());
+        }
+        let mut times = vec![0u64; self.shards.len()];
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(self.shards.len());
+        for ((sh, slices), t) in self.shards.iter().zip(per_shard).zip(times.iter_mut()) {
+            jobs.push(Box::new(move || {
+                let t0 = Instant::now();
+                sh.run(toks, slices);
+                *t = t0.elapsed().as_nanos() as u64;
+            }));
+        }
+        self.pool.run(jobs);
+        times.into_iter().max().unwrap_or(0)
+    }
+
+    /// Allocating convenience over [`Self::execute_batch_into`], which is
+    /// the primary entry point: callers that need the critical-path
+    /// timing (the serving backend) or want to reuse output buffers
+    /// across calls (the scaling bench) pass their own rows to `_into`.
+    pub fn execute_batch(&self, toks: &[QuantToken]) -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; self.n_cols]).collect();
+        self.execute_batch_into(toks, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{compensate_packed, execute_batch_tiled, TileCfg};
+    use crate::quant::{self, OutlierCfg, QuantToken, QuantWeights};
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn setup(
+        seed: u64,
+        k: usize,
+        n: usize,
+        batch: usize,
+        outliers: bool,
+    ) -> (Vec<QuantToken>, QuantWeights, CartesianLut) {
+        let mut rng = Rng::new(seed);
+        let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
+        let qw = quant::quantize_weights(&wmat, 4);
+        let calib: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let cfg = OutlierCfg { total_frac: 0.04 };
+        let cb = quant::learn_act_codebook(&refs, None, 4, cfg);
+        let toks: Vec<QuantToken> = (0..batch)
+            .map(|_| {
+                let x = rng.heavy_tailed_vec(k, 0.02, 8.0);
+                if outliers {
+                    quant::quantize_token(&x, &cb, cfg)
+                } else {
+                    quant::quantize_token_with_outliers(&x, &cb, &[])
+                }
+            })
+            .collect();
+        let lut = CartesianLut::build(&cb, &qw.codebook);
+        (toks, qw, lut)
+    }
+
+    fn reference(toks: &[QuantToken], qw: &QuantWeights, lut: &CartesianLut) -> Vec<Vec<f32>> {
+        let pw = qw.pack();
+        let mut want = execute_batch_tiled(toks, &pw, lut, &TileCfg::single_thread());
+        for (o, t) in want.iter_mut().zip(toks) {
+            compensate_packed(o, t, &pw);
+        }
+        want
+    }
+
+    #[test]
+    fn sharded_bit_exact_even_and_uneven_splits() {
+        // odd K (tail row), N not divisible by the shard count, N < shards
+        for &(k, n, batch) in &[(64usize, 24usize, 3usize), (65, 23, 5), (9, 3, 1), (1, 8, 2)] {
+            let (toks, qw, lut) = setup(100 + k as u64, k, n, batch, true);
+            let want = reference(&toks, &qw, &lut);
+            let pw = qw.pack();
+            for shards in [1usize, 2, 3, 4, 7] {
+                let pool = Arc::new(ShardPool::new(shards).unwrap());
+                let sh = ShardedWaqGemm::from_packed(&pw, &lut, shards, pool).unwrap();
+                assert!(sh.shard_count() <= shards && sh.shard_count() >= 1);
+                assert_eq!(
+                    sh.execute_batch(&toks),
+                    want,
+                    "({k},{n}) batch {batch} shards {shards}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_without_outliers_and_empty_batch() {
+        let (toks, qw, lut) = setup(7, 48, 10, 4, false);
+        assert!(toks.iter().all(|t| t.outliers.is_empty()));
+        let want = reference(&toks, &qw, &lut);
+        let pool = Arc::new(ShardPool::new(3).unwrap());
+        let sh = ShardedWaqGemm::from_packed(&qw.pack(), &lut, 3, pool).unwrap();
+        assert_eq!(sh.execute_batch(&toks), want);
+        let none: Vec<QuantToken> = Vec::new();
+        assert!(sh.execute_batch(&none).is_empty());
+    }
+
+    #[test]
+    fn output_rows_are_overwritten_not_accumulated() {
+        let (toks, qw, lut) = setup(9, 32, 8, 2, true);
+        let want = reference(&toks, &qw, &lut);
+        let pool = Arc::new(ShardPool::new(2).unwrap());
+        let sh = ShardedWaqGemm::from_packed(&qw.pack(), &lut, 2, pool).unwrap();
+        // poisoned output buffers must not leak into results
+        let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![f32::NAN; 8]).collect();
+        sh.execute_batch_into(&toks, &mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn zero_shards_is_an_error_not_a_panic() {
+        assert!(ShardPool::new(0).is_err());
+        let (_, qw, lut) = setup(11, 16, 8, 1, true);
+        let pool = Arc::new(ShardPool::new(1).unwrap());
+        assert!(ShardedWaqGemm::from_packed(&qw.pack(), &lut, 0, pool).is_err());
+    }
+
+    #[test]
+    fn pool_survives_many_rounds_and_reports_critical_path() {
+        let (toks, qw, lut) = setup(13, 40, 12, 3, true);
+        let pool = Arc::new(ShardPool::new(4).unwrap());
+        assert_eq!(pool.workers(), 4);
+        let sh = ShardedWaqGemm::from_packed(&qw.pack(), &lut, 4, pool).unwrap();
+        let want = sh.execute_batch(&toks);
+        let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; 12]).collect();
+        for round in 0..50 {
+            let crit = sh.execute_batch_into(&toks, &mut out);
+            assert_eq!(out, want, "round {round}");
+            assert!(crit > 0, "critical path must be measured");
+        }
+    }
+}

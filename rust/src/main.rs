@@ -5,16 +5,18 @@
 //!       [--calib-samples N] [--md FILE]    regenerate a paper table/figure
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
-//!       [--backend SPEC] [--kv-bits 32|4|3|2]
+//!       [--backend SPEC] [--kv-bits 32|4|3|2] [--shards N]
 //!       SPEC selects the decode execution engine:
 //!       `direct|histogram|packed` run decode through the PJRT artifacts
 //!       (the WAQ kernel is a modeled host clock), while
 //!       `native-direct|native-histogram|native-packed` serve through the
 //!       native K-Means WAQ LUT-GEMM datapath — measured throughput on
-//!       the selected kernel, no PJRT required. `--kv-bits` picks the
-//!       paged KV-cache storage precision: 32 = FP32 (bit-exact with the
-//!       dense cache), 4/3/2 = K-Means index streams (>= 4x lower cache
-//!       bytes/token)
+//!       the selected kernel, no PJRT required — and `native-sharded`
+//!       splits every linear into `--shards N` tensor-parallel column
+//!       shards on a persistent worker pool (bit-exact with
+//!       `native-packed`). `--kv-bits` picks the paged KV-cache storage
+//!       precision: 32 = FP32 (bit-exact with the dense cache), 4/3/2 =
+//!       K-Means index streams (>= 4x lower cache bytes/token)
 //!   quantize [--preset P] [--bits B]        quantize + report one matrix
 //!   list                                    list experiments + artifacts
 
@@ -133,6 +135,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "preset", "config", "port", "ckpt", "requests", "max-new", "backend", "kv-bits",
+        "shards",
     ])
     .map_err(|e| anyhow!(e))?;
     let mut preset = args.str_or("preset", "test");
@@ -150,6 +153,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .str_or("kv-bits", "32")
         .parse()
         .map_err(|e: String| anyhow!(e))?;
+    // column-shard count for `--backend native-sharded`; 0 is rejected
+    // here with a real error (a zero-worker pool is never constructible)
+    let shards = args.usize_or("shards", 2).map_err(|e| anyhow!(e))?;
+    if shards == 0 {
+        return Err(anyhow!(
+            "--shards 0 is invalid: the sharded backend needs >= 1 column shard"
+        ));
+    }
     let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(|e| anyhow!(e))?;
     let params = match args.opt("ckpt") {
         Some(p) => ParamSet::load(std::path::Path::new(p))?,
@@ -161,13 +172,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = std::sync::Arc::new(Coordinator::start_with_manifest(
         manifest,
         params,
-        EngineConfig { backend, kv_bits, ..Default::default() },
+        EngineConfig { backend, kv_bits, shards, ..Default::default() },
     )?);
     let port = serve_tcp(coord.clone(), port)?;
-    let how = if backend.is_native() {
-        "measured native WAQ LUT-GEMM datapath"
+    let how = if backend == BackendSpec::NativeSharded {
+        format!("measured native WAQ LUT-GEMM datapath, {shards} tensor-parallel column shards")
+    } else if backend.is_native() {
+        "measured native WAQ LUT-GEMM datapath".to_string()
     } else {
-        "PJRT artifacts, modeled WAQ host clock"
+        "PJRT artifacts, modeled WAQ host clock".to_string()
     };
     println!(
         "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, backend {backend}: \

@@ -249,6 +249,35 @@ impl PackedWeights {
         self.pairs.len() + self.tail.as_ref().map_or(0, |t| t.storage_bytes())
     }
 
+    /// Slice out output columns `[j0, j1)` as a standalone packed matrix —
+    /// the load-time column partitioner of the tensor-parallel sharded
+    /// backend (`gemm::sharded`). Row-pair packing is preserved (pair rows
+    /// are copied byte-for-byte), the tail row is re-packed from logical
+    /// values so shard boundaries need not be nibble-aligned, and the
+    /// codebook + per-column scales are partitioned with the slice, so
+    /// every per-column value (GEMM accumulation, `dequant_row`) is
+    /// bit-identical to the same column of the full matrix.
+    pub fn slice_cols(&self, j0: usize, j1: usize) -> PackedWeights {
+        assert!(j0 < j1 && j1 <= self.n_cols, "bad column range {j0}..{j1}");
+        let width = j1 - j0;
+        let mut pairs = Vec::with_capacity(self.n_pairs() * width);
+        for p in 0..self.n_pairs() {
+            pairs.extend_from_slice(&self.pairs[p * self.n_cols + j0..p * self.n_cols + j1]);
+        }
+        let tail = self.tail.as_ref().map(|t| {
+            let vals: Vec<u8> = (j0..j1).map(|j| t.get(j)).collect();
+            PackedIdx::pack(&vals)
+        });
+        PackedWeights {
+            n_rows: self.n_rows,
+            n_cols: width,
+            pairs,
+            tail,
+            codebook: self.codebook.clone(),
+            col_scales: self.col_scales[j0..j1].to_vec(),
+        }
+    }
+
     /// Total storage: packed indices + FP16 codebook + FP16 scales. Note
     /// the index term is one *nibble* per element regardless of codebook
     /// bits — it equals `QuantWeights::storage_bytes` (which counts
@@ -357,6 +386,71 @@ mod tests {
     #[should_panic(expected = "crumb")]
     fn crumb_pack_rejects_wide_index() {
         PackedCrumbs::pack(&[4]);
+    }
+
+    #[test]
+    fn crumb_boundaries_and_storage_match_allocation() {
+        // boundary lengths: empty, single, odd tails, and a large
+        // non-multiple-of-4 stream
+        let mut rng = Rng::new(12);
+        for len in [0usize, 1, 3, 5, 4095] {
+            let idx: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
+            let p = PackedCrumbs::pack(&idx);
+            assert_eq!(p.unpack(), idx, "len {len}");
+            // regression: storage accounting must report the actual byte
+            // allocation, not a formula that can drift from it
+            assert_eq!(p.storage_bytes(), p.bytes.len(), "len {len}");
+            assert_eq!(p.bytes.len(), len.div_ceil(4), "len {len}");
+        }
+        // same accounting contract for the nibble stream
+        for len in [0usize, 1, 3, 4095] {
+            let idx: Vec<u8> = (0..len).map(|_| rng.below(16) as u8).collect();
+            let p = PackedIdx::pack(&idx);
+            assert_eq!(p.unpack(), idx, "len {len}");
+            assert_eq!(p.storage_bytes(), p.bytes.len(), "len {len}");
+            assert_eq!(p.bytes.len(), len.div_ceil(2), "len {len}");
+        }
+    }
+
+    #[test]
+    fn slice_cols_matches_full_matrix_columns() {
+        let mut rng = Rng::new(13);
+        // even and odd K (odd exercises tail re-packing across unaligned
+        // shard boundaries)
+        for &(k, n) in &[(8usize, 11usize), (9, 11), (1, 7), (33, 16)] {
+            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+            let qw = quant::quantize_weights(&w, 4);
+            let pw = qw.pack();
+            let full_idx = pw.unpack_idx();
+            for &(j0, j1) in &[(0usize, n), (0, 1), (n - 1, n), (1, n - 1), (n / 2, n)] {
+                if j0 >= j1 {
+                    continue;
+                }
+                let s = pw.slice_cols(j0, j1);
+                assert_eq!(s.n_rows, k);
+                assert_eq!(s.n_cols, j1 - j0);
+                assert_eq!(s.col_scales, pw.col_scales[j0..j1].to_vec());
+                assert_eq!(s.codebook, pw.codebook);
+                // index identity per (row, column)
+                let sliced_idx = s.unpack_idx();
+                for r in 0..k {
+                    for j in j0..j1 {
+                        assert_eq!(
+                            sliced_idx[r * (j1 - j0) + (j - j0)],
+                            full_idx[r * n + j],
+                            "({k},{n}) row {r} col {j} slice {j0}..{j1}"
+                        );
+                    }
+                }
+                // dequant_row (the outlier-compensation fetch) agrees too
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                for r in 0..k {
+                    pw.dequant_row(r, &mut a);
+                    s.dequant_row(r, &mut b);
+                    assert_eq!(&a[j0..j1], &b[..], "({k},{n}) row {r}");
+                }
+            }
+        }
     }
 
     #[test]

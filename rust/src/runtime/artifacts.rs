@@ -78,6 +78,25 @@ pub struct ModelCfg {
 }
 
 impl ModelCfg {
+    /// The `test` preset's model config, mirroring python
+    /// `PRESETS["test"]` — the ONE definition the offline benches build
+    /// synthetic manifests from (so every BENCH_*.json row measures the
+    /// same model and cross-bench comparisons stay like-for-like).
+    pub fn test_preset() -> ModelCfg {
+        ModelCfg {
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            seq_len: 32,
+            batch: 2,
+            decode_batch: 2,
+            head_dim: 16,
+            d_ff: 256,
+            n_linears: 8,
+        }
+    }
+
     /// Deterministic (name, shape) parameter list mirroring python
     /// `model.param_specs` — the canonical order every `ParamSet` follows.
     pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {

@@ -157,6 +157,53 @@ impl KvBenchRow {
     }
 }
 
+/// One BENCH_shard.json row: tensor-parallel shard scaling of the native
+/// WAQ datapath (emitted by the `shard_scaling` bench; CI smoke-runs
+/// shards {1, 4} under FAST_BENCH and fails the job when the
+/// sharded-vs-unsharded parity or scaling-efficiency tripwires fire).
+///
+/// Schema (JSON lines, one object per row):
+///   `name`          `"shard_scaling/gemm/<shape>"` (batched sharded GEMM)
+///                   or `"shard_scaling/e2e/<preset>"` (engine decode
+///                   through `--backend native-sharded`)
+///   `shards`        column-shard count (1 = sharded datapath on a single
+///                   worker, the scaling baseline)
+///   `tok_s`         measured tokens/sec through that datapath
+///   `mean_ns`       mean ns per GEMM call (gemm rows) / per generated
+///                   token (e2e rows)
+///   `speedup_vs_1`  best-time ratio t(1) / t(shards), same workload
+///   `efficiency`    `speedup_vs_1 / shards` (1.0 = perfect linear
+///                   scaling of the column split)
+pub struct ShardBenchRow {
+    pub name: String,
+    pub shards: u32,
+    pub tok_s: f64,
+    pub mean_ns: f64,
+    pub speedup_vs_1: f64,
+    pub efficiency: f64,
+}
+
+impl ShardBenchRow {
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"shards\": {}, \"tok_s\": {:.3}, \"mean_ns\": {:.3}, \
+             \"speedup_vs_1\": {:.4}, \"efficiency\": {:.4}}}",
+            json_escape(&self.name),
+            self.shards,
+            self.tok_s,
+            self.mean_ns,
+            self.speedup_vs_1,
+            self.efficiency
+        )
+    }
+
+    /// Append to the repo-root BENCH_shard.json (JSON lines; created if
+    /// missing). IO failures are reported, never fatal.
+    pub fn append(&self) {
+        append_line(&bench_json_path("BENCH_shard.json"), &self.json_line());
+    }
+}
+
 pub struct Bencher {
     /// measurement window per bench
     pub measure: Duration,
@@ -326,6 +373,23 @@ mod tests {
         assert!(line.contains("\"kv_bits\": 4"), "{line}");
         assert!(line.contains("\"bytes_per_token\": 192.000"), "{line}");
         assert!(line.contains("\"attn_rel_err\": 0.012300"), "{line}");
+    }
+
+    #[test]
+    fn shard_row_json_is_machine_readable() {
+        let row = ShardBenchRow {
+            name: "shard_scaling/gemm/k768n4096b8".into(),
+            shards: 4,
+            tok_s: 1234.5,
+            mean_ns: 987654.0,
+            speedup_vs_1: 3.1,
+            efficiency: 0.775,
+        };
+        let line = row.json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"shards\": 4"), "{line}");
+        assert!(line.contains("\"speedup_vs_1\": 3.1000"), "{line}");
+        assert!(line.contains("\"efficiency\": 0.7750"), "{line}");
     }
 
     #[test]

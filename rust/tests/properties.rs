@@ -215,6 +215,23 @@ fn prop_packed_idx_roundtrip() {
     });
 }
 
+#[test]
+fn prop_packed_crumbs_roundtrip_and_storage_accounting() {
+    // the 2-bit KV-cache streams: pack/unpack identity at any length and
+    // storage accounting that matches the actual byte allocation
+    Check::new(32).forall("packed-crumbs-roundtrip", |rng, _| {
+        let len = rng.below(300);
+        let idx: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
+        let p = quant::PackedCrumbs::pack(&idx);
+        assert_eq!(p.unpack(), idx);
+        assert_eq!(p.storage_bytes(), p.bytes.len(), "accounting vs allocation");
+        assert_eq!(p.storage_bytes(), len.div_ceil(4));
+        for (i, &v) in idx.iter().enumerate() {
+            assert_eq!(p.get(i), v, "elem {i}");
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Orizuru invariants
 // ---------------------------------------------------------------------------
