@@ -9,14 +9,21 @@
 //! modeled-PJRT numbers separate: the wall-clock row is
 //! `e2e_serving/<policy>/<backend>`, and the host-datapath row is
 //! `.../measured-host` (native, real seconds) or `.../modeled-host`
-//! (PJRT, CpuWaqModel roofline).
+//! (PJRT, CpuWaqModel roofline). A burst-admission sweep additionally
+//! compares 8 sequential prefills against one batched `prefill_batch`
+//! call (BENCH_prefill.json, schema on `util::bench::PrefillBenchRow`),
+//! asserting per-request bit-exactness and the sharded backend's
+//! batched-is-faster property.
 
-use kllm::coordinator::{AdmitPolicy, BackendSpec, Coordinator, EngineConfig};
+use kllm::coordinator::{
+    AdmitPolicy, BackendSpec, Coordinator, DecodeBackend, EngineConfig, NativeCfg,
+    NativeWaqBackend, ShardedWaqBackend,
+};
 use kllm::gemm::WaqBackend;
 use kllm::kvcache::KvBits;
 use kllm::runtime::artifacts::ModelCfg;
 use kllm::runtime::{artifacts_dir, pjrt_available, Manifest, ParamSet};
-use kllm::util::bench::{bench_json_path, fast_mode, BenchResult};
+use kllm::util::bench::{bench_json_path, fast_mode, BenchResult, PrefillBenchRow};
 use kllm::util::rng::Rng;
 use kllm::util::stats::LatencyStats;
 
@@ -129,6 +136,15 @@ fn main() -> anyhow::Result<()> {
         }
         .append_json(&json);
         let host_ns = stats.host_waq_s * 1e9 / (tokens.max(1) as f64);
+        // native host seconds cover decode + prefill since the batched
+        // admission path started measuring prefill; the tag keeps the
+        // trajectory honest against older decode-only rows and the
+        // PJRT modeled rows (whose clock still covers decode only)
+        let mut host_extra = kv_extra;
+        host_extra.push((
+            "host_scope".to_string(),
+            if backend.is_native() { "\"decode+prefill\"" } else { "\"decode\"" }.to_string(),
+        ));
         BenchResult {
             name: format!("e2e_serving/{name}/{host_kind}-host"),
             iters: tokens as u64,
@@ -136,10 +152,114 @@ fn main() -> anyhow::Result<()> {
             p50_ns: host_ns,
             min_ns: host_ns,
             throughput: None,
-            extra: kv_extra,
+            extra: host_extra,
         }
         .append_json(&json);
         coord.shutdown()?;
+    }
+
+    burst_admission_sweep(&manifest, &params)?;
+    Ok(())
+}
+
+/// Burst-admission prefill sweep: one FillAll-style 8-request burst
+/// prefilled two ways on the same quantized model — 8 sequential
+/// `DecodeBackend::prefill` calls vs ONE `prefill_batch` call (the
+/// engine's admission path). Per-request logits must be bit-exact across
+/// the two modes (the parity acceptance criterion, asserted here as a
+/// tripwire too), and BENCH_prefill.json records the measured host-WAQ
+/// seconds of both so the amortization win of running each WAQ LUT-GEMM
+/// linear once per layer for the whole burst is tracked across PRs. The
+/// sharded backend must complete the batched burst in strictly fewer
+/// host-WAQ seconds (one worker-pool round per linear instead of eight);
+/// the mono packed kernel's smaller fixed-overhead saving is recorded
+/// without a strict gate (noise-prone on toy model sizes).
+fn burst_admission_sweep(manifest: &Manifest, params: &ParamSet) -> anyhow::Result<()> {
+    let cfg = manifest.model;
+    let burst = 8usize;
+    let plen = (cfg.seq_len / 2).max(1);
+    let reps = if fast_mode() { 2 } else { 4 };
+    let mut rng = Rng::new(17);
+    let prompts: Vec<Vec<i32>> = (0..burst)
+        .map(|_| (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect())
+        .collect();
+    let prompt_refs: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let prompt_tokens = (burst * plen) as u64;
+
+    for backend_name in ["native-packed", "native-sharded"] {
+        let mut b: Box<dyn DecodeBackend> = if backend_name == "native-sharded" {
+            Box::new(ShardedWaqBackend::new(manifest, params, NativeCfg::default(), 4)?)
+        } else {
+            Box::new(NativeWaqBackend::new(
+                manifest,
+                params,
+                NativeCfg { waq: WaqBackend::Packed, ..NativeCfg::default() },
+            )?)
+        };
+        // warm the datapath (first-touch allocations, branch predictors)
+        let _ = b.prefill(&prompts[0])?;
+
+        // min over reps per mode, so one descheduling blip can't flip the
+        // comparison
+        let (mut seq_host, mut seq_wall) = (f64::INFINITY, f64::INFINITY);
+        let (mut bat_host, mut bat_wall) = (f64::INFINITY, f64::INFINITY);
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let mut host = 0.0;
+            let mut seq_logits = Vec::with_capacity(burst);
+            for p in &prompt_refs {
+                let pre = b.prefill(p)?;
+                host += pre.cost.host_waq_s;
+                seq_logits.push(pre.logits);
+            }
+            seq_wall = seq_wall.min(t0.elapsed().as_secs_f64());
+            seq_host = seq_host.min(host);
+
+            let t0 = std::time::Instant::now();
+            let pres = b.prefill_batch(&prompt_refs)?;
+            bat_wall = bat_wall.min(t0.elapsed().as_secs_f64());
+            bat_host = bat_host.min(pres.iter().map(|p| p.cost.host_waq_s).sum());
+            // parity tripwire: the batched burst is bit-exact per request
+            for (r, (want, pre)) in seq_logits.iter().zip(&pres).enumerate() {
+                assert_eq!(
+                    want, &pre.logits,
+                    "batched prefill logits diverged from sequential (request {r})"
+                );
+            }
+        }
+        let speedup = seq_host / bat_host.max(1e-12);
+        println!(
+            "bench prefill_burst/{backend_name:15} burst={burst} plen={plen}  \
+             seq-host {:.3} ms  batched-host {:.3} ms  speedup {speedup:.2}x",
+            seq_host * 1e3,
+            bat_host * 1e3,
+        );
+        if backend_name == "native-sharded" {
+            // tripwire: one pool round per linear for the whole burst must
+            // beat eight rounds' worth of dispatch/latch overhead
+            assert!(
+                bat_host < seq_host,
+                "batched sharded prefill ({bat_host:.6}s host-WAQ) not faster than \
+                 {burst} sequential prefills ({seq_host:.6}s)"
+            );
+        }
+        for (mode, host, wall, speedup) in [
+            ("sequential", seq_host, seq_wall, 1.0),
+            ("batched", bat_host, bat_wall, speedup),
+        ] {
+            PrefillBenchRow {
+                name: format!("prefill_burst/{backend_name}/{mode}"),
+                backend: backend_name.to_string(),
+                mode: mode.to_string(),
+                burst: burst as u32,
+                prompt_tokens,
+                host_waq_s: host,
+                wall_s: wall,
+                tok_s: prompt_tokens as f64 / wall.max(1e-12),
+                speedup_vs_sequential: speedup,
+            }
+            .append();
+        }
     }
     Ok(())
 }

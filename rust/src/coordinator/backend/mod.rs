@@ -3,11 +3,14 @@
 //! `Engine` owns the *orchestration* of continuous batching — admission,
 //! KV slot lifecycle, sampling, stats — and delegates the whole per-step
 //! *compute* to a [`DecodeBackend`]: `prefill(prompt)` produces the first
-//! token's logits plus the request's KV cache pair, `decode(tokens,
-//! positions, ...)` runs one batched decode step over all slots. Every
-//! call also returns a [`StepCost`] so responses report modeled
-//! accelerator time/energy and the host software-datapath seconds
-//! regardless of which engine executed.
+//! token's logits plus the request's KV cache pair, `prefill_batch`
+//! prefills a whole admission burst in one call (the engine's admission
+//! path; default = loop over `prefill`, native backends run each linear
+//! once for the stacked burst), and `decode(tokens, positions, ...)` runs
+//! one batched decode step over all slots. Every call also returns a
+//! [`StepCost`] so responses report modeled accelerator time/energy and
+//! the host software-datapath seconds regardless of which engine
+//! executed.
 //!
 //! Two implementations ship:
 //!   * [`PjrtBackend`] — the AOT-artifact path: decode runs the compiled
@@ -143,8 +146,11 @@ pub struct StepCost {
     pub accel_j: f64,
     /// Host software WAQ-datapath seconds: measured wall-clock of the
     /// WAQ LUT-GEMM linears (quantize + main branch + compensation) for
-    /// the native backend, the `CpuWaqModel` roofline for PJRT, zero for
-    /// prefill (the stat tracks decode steps).
+    /// the native backends — decode steps AND prefills, so the batched
+    /// admission path's amortization is visible in the stat — or the
+    /// `CpuWaqModel` roofline for PJRT (decode only; PJRT prefill reports
+    /// zero). For a batched prefill the burst is measured once and split
+    /// per request proportionally to token counts.
     pub host_waq_s: f64,
     /// Tensor-parallel critical path: the sum over this step's sharded
     /// GEMMs of the slowest shard's measured wall-clock seconds — the
@@ -153,9 +159,15 @@ pub struct StepCost {
     pub shard_crit_s: f64,
 }
 
-/// Result of a single-request prefill.
+/// Result of one request's prefill (one element of a batch for
+/// [`DecodeBackend::prefill_batch`], whose per-request `cost` fields
+/// carry this request's share of the burst: modeled accelerator cost for
+/// its own `plen`, measured host/shard seconds split proportionally to
+/// token counts).
 pub struct PrefillOut {
-    /// Prompt length actually consumed (clamped to the context window).
+    /// Prompt length actually consumed (clamped to the context window;
+    /// when `plen < prompt.len()` the engine marks the response
+    /// `truncated_prompt`).
     pub plen: usize,
     /// Logits at the last prompt position (length `vocab`).
     pub logits: Vec<f32>,
@@ -187,6 +199,24 @@ pub trait DecodeBackend {
 
     /// Run one request's prefill and return its first logits + KV pair.
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut>;
+
+    /// Prefill a whole admission burst in one call, returning exactly one
+    /// [`PrefillOut`] per prompt, in order. The default implementation
+    /// loops over [`Self::prefill`], so single-request backends (PJRT)
+    /// keep working unchanged; the native backends override it to stack
+    /// every prompt's token rows into one activation matrix per layer and
+    /// run each WAQ LUT-GEMM linear *once* for the burst — amortizing LUT
+    /// builds, weight-tile streaming, and thread/shard fan-out the same
+    /// way the batched decode step does. Per-request results must be
+    /// **bit-exact** with the sequential `prefill` path (enforced by
+    /// `tests/backend_parity.rs`).
+    ///
+    /// All-or-nothing: on `Err` no per-request state may have been
+    /// committed anywhere — the engine then answers every admitted
+    /// request with an `Aborted` response instead of dropping it.
+    fn prefill_batch(&mut self, prompts: &[&[i32]]) -> Result<Vec<PrefillOut>> {
+        prompts.iter().map(|p| self.prefill(p)).collect()
+    }
 
     /// Run one batched decode step over all `decode_batch` slots.
     /// `toks[b]`/`pos[b]` are the last generated token and its cache

@@ -17,7 +17,12 @@
 //! (`orizuru::detect_outliers`), the main branch batched across slots via
 //! `WaqGemm::execute_batch` (the packed/tiled/threaded kernel), and the
 //! detected outliers routed through the error-compensation branch
-//! (`gemm::compensate`). Embeddings, norms, attention arithmetic, and
+//! (`gemm::compensate`). Admission bursts take the same batched shape:
+//! `prefill_batch` stacks every prompt's token rows into one activation
+//! matrix and runs each linear once per layer for the whole burst
+//! (`prefill` is a burst of one), so LUT builds, weight-tile streaming,
+//! and thread fan-out amortize over the burst exactly as they do over a
+//! decode batch. Embeddings, norms, attention arithmetic, and
 //! the tied LM head stay FP32, matching the paper (only GEMM layers are
 //! quantized) — but decode attention *reads* K/V through the paged
 //! cache's block-table gather (`KvManager::key_scores`/`value_mix`) and
@@ -403,64 +408,126 @@ impl DecodeBackend for NativeWaqBackend {
         .with_outlier_frac(self.kv_outlier_frac)
     }
 
+    /// Single-request prefill is a burst of one: the batched path is the
+    /// only implementation, so sequential and batched prefill cannot
+    /// diverge (per-row accumulation order is identical by construction;
+    /// the parity property test pins it anyway).
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+        let mut outs = self.prefill_batch(&[prompt])?;
+        outs.pop().ok_or_else(|| anyhow!("prefill_batch returned no result"))
+    }
+
+    /// The genuinely batched admission path: every prompt's token rows are
+    /// stacked (request-major) into ONE activation matrix, each WAQ
+    /// LUT-GEMM linear runs once per layer for the whole burst through the
+    /// packed/tiled (or sharded) executor, and causal attention + K/V
+    /// extraction run per request over its own row range — ragged prompt
+    /// lengths are handled by a row-offset map. Per-row quantization and
+    /// accumulation are independent of batch composition, so each
+    /// request's logits and caches are bit-exact with a solo `prefill`.
+    ///
+    /// Cost attribution: the modeled accelerator cost is per request
+    /// (`CostModel::prefill(plen)`, identical to the sequential path, so
+    /// the sim clock is batching-invariant); the *measured* host-WAQ and
+    /// slowest-shard seconds are taken once for the burst and split
+    /// proportionally to each request's token count.
+    fn prefill_batch(&mut self, prompts: &[&[i32]]) -> Result<Vec<PrefillOut>> {
         let m = self.model;
         let (h, hd, d, s) = (m.n_heads, m.head_dim, m.d_model, m.seq_len);
+        if prompts.is_empty() {
+            return Ok(Vec::new());
+        }
         // clamp into the context window; an empty prompt degrades to the
         // pad token (mirrors the PJRT backend)
-        let plen = prompt.len().clamp(1, s - 1);
-        let n = plen;
-        let mut x = Matrix::zeros(n, d);
-        for t in 0..n {
-            let tok = prompt.get(t).map_or(0, |&v| v.rem_euclid(m.vocab as i32)) as usize;
-            embed_into(x.row_mut(t), &self.tok_emb, &self.pos_emb, tok, t);
+        let plens: Vec<usize> = prompts.iter().map(|p| p.len().clamp(1, s - 1)).collect();
+        // row-offset map: request r owns stacked rows offs[r]..offs[r]+plens[r]
+        let mut offs = Vec::with_capacity(plens.len());
+        let mut total = 0usize;
+        for &plen in &plens {
+            offs.push(total);
+            total += plen;
         }
-        let mut kc = vec![0f32; m.n_layers * h * s * hd];
-        let mut vc = vec![0f32; m.n_layers * h * s * hd];
-        // slowest-shard critical path across the prefill's linears
-        // (stays 0 for the unsharded executors)
+        let mut x = Matrix::zeros(total, d);
+        for (r, prompt) in prompts.iter().enumerate() {
+            for t in 0..plens[r] {
+                let tok = prompt.get(t).map_or(0, |&v| v.rem_euclid(m.vocab as i32)) as usize;
+                embed_into(x.row_mut(offs[r] + t), &self.tok_emb, &self.pos_emb, tok, t);
+            }
+        }
+        let mut kcs: Vec<Vec<f32>> =
+            plens.iter().map(|_| vec![0f32; m.n_layers * h * s * hd]).collect();
+        let mut vcs: Vec<Vec<f32>> =
+            plens.iter().map(|_| vec![0f32; m.n_layers * h * s * hd]).collect();
+        // measured WAQ-datapath nanoseconds across the burst's linears,
+        // and the slowest-shard critical path when they are sharded
+        let mut waq_ns = 0u64;
         let mut crit_ns = 0u64;
         for (l, layer) in self.layers.iter().enumerate() {
-            let qkv_rows =
-                layer.qkv.forward(&rms_rows(&x, &layer.ln1), &self.outliers_seen, &mut crit_ns);
-            let qkv = Matrix::from_vec(n, 3 * d, qkv_rows.concat());
-            for t in 0..n {
-                let row = qkv.row(t);
-                for head in 0..h {
-                    let base = (l * h + head) * s * hd + t * hd;
-                    kc[base..base + hd]
-                        .copy_from_slice(&row[d + head * hd..d + (head + 1) * hd]);
-                    vc[base..base + hd]
-                        .copy_from_slice(&row[2 * d + head * hd..2 * d + (head + 1) * hd]);
+            let qkv_rows = self.quant_forward(
+                &layer.qkv,
+                &rms_rows(&x, &layer.ln1),
+                &mut waq_ns,
+                &mut crit_ns,
+            );
+            // per request: pull its K/V rows out and run causal attention
+            // over its own row range only (attention never crosses
+            // request boundaries)
+            let mut att_rows: Vec<Vec<f32>> = Vec::with_capacity(total);
+            for r in 0..plens.len() {
+                let (off, n) = (offs[r], plens[r]);
+                let qkv = Matrix::from_vec(n, 3 * d, qkv_rows[off..off + n].concat());
+                for t in 0..n {
+                    let row = qkv.row(t);
+                    for head in 0..h {
+                        let base = (l * h + head) * s * hd + t * hd;
+                        kcs[r][base..base + hd]
+                            .copy_from_slice(&row[d + head * hd..d + (head + 1) * hd]);
+                        vcs[r][base..base + hd]
+                            .copy_from_slice(&row[2 * d + head * hd..2 * d + (head + 1) * hd]);
+                    }
                 }
+                let att = causal_attention(&qkv, h, hd);
+                att_rows.extend(mat_rows(&att));
             }
-            let att = causal_attention(&qkv, h, hd);
-            let proj =
-                layer.attn_out.forward(&mat_rows(&att), &self.outliers_seen, &mut crit_ns);
+            let proj = self.quant_forward(&layer.attn_out, &att_rows, &mut waq_ns, &mut crit_ns);
             add_rows(&mut x, &proj);
-            let mut up =
-                layer.mlp_up.forward(&rms_rows(&x, &layer.ln2), &self.outliers_seen, &mut crit_ns);
+            let mut up = self.quant_forward(
+                &layer.mlp_up,
+                &rms_rows(&x, &layer.ln2),
+                &mut waq_ns,
+                &mut crit_ns,
+            );
             for r in up.iter_mut() {
                 for v in r.iter_mut() {
                     *v = gelu(*v);
                 }
             }
-            let down = layer.mlp_down.forward(&up, &self.outliers_seen, &mut crit_ns);
+            let down = self.quant_forward(&layer.mlp_down, &up, &mut waq_ns, &mut crit_ns);
             add_rows(&mut x, &down);
         }
-        let mut hn = vec![0f32; d];
-        rms_into(x.row(n - 1), &self.lnf, &mut hn);
-        let logits = self.head_logits(&hn);
         let shape = [m.n_layers, 1, h, s, hd];
-        let mut cost = self.cost.prefill(plen);
-        cost.shard_crit_s = crit_ns as f64 * 1e-9;
-        Ok(PrefillOut {
-            plen,
-            logits,
-            k_cache: HostTensor::f32(kc, &shape),
-            v_cache: HostTensor::f32(vc, &shape),
-            cost,
-        })
+        let host_s = waq_ns as f64 * 1e-9;
+        let crit_s = crit_ns as f64 * 1e-9;
+        let mut outs = Vec::with_capacity(plens.len());
+        let mut hn = vec![0f32; d];
+        for (r, (kc, vc)) in kcs.into_iter().zip(vcs).enumerate() {
+            let (off, plen) = (offs[r], plens[r]);
+            rms_into(x.row(off + plen - 1), &self.lnf, &mut hn);
+            let logits = self.head_logits(&hn);
+            // measured-once burst seconds, split by token share
+            let frac = plen as f64 / total as f64;
+            let mut cost = self.cost.prefill(plen);
+            cost.host_waq_s = host_s * frac;
+            cost.shard_crit_s = crit_s * frac;
+            outs.push(PrefillOut {
+                plen,
+                logits,
+                k_cache: HostTensor::f32(kc, &shape),
+                v_cache: HostTensor::f32(vc, &shape),
+                cost,
+            });
+        }
+        Ok(outs)
     }
 
     fn decode(

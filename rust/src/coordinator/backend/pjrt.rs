@@ -3,6 +3,10 @@
 //! device-resident weight buffers uploaded once, KV caches round-tripped
 //! per step. The configured WAQ kernel does not execute here; it selects
 //! the modeled host-datapath clock (`CpuWaqModel`) reported per step.
+//! Admission bursts use the trait's default `prefill_batch` (one artifact
+//! invocation per request — the prefill HLO module is lowered for a
+//! single prompt), so this backend is the "sequential side" of the
+//! batched-prefill parity tests.
 //!
 //! [`PjrtBackend::stub`] builds an artifact-contract test double instead:
 //! deterministic single-peaked pseudo-logits and zero caches, no `Runtime`

@@ -104,6 +104,16 @@ impl DecodeBackend for ShardedWaqBackend {
         self.inner.prefill(prompt)
     }
 
+    /// Batched admission prefill over the sharded linears: the inner
+    /// datapath stacks the burst and each column-sharded GEMM fans out
+    /// over the worker pool once per layer, so the per-GEMM dispatch/latch
+    /// overhead amortizes over every admitted request. Per-request
+    /// `shard_crit_s` is the burst's measured slowest-shard critical path
+    /// split proportionally to token counts.
+    fn prefill_batch(&mut self, prompts: &[&[i32]]) -> Result<Vec<PrefillOut>> {
+        self.inner.prefill_batch(prompts)
+    }
+
     fn decode(
         &mut self,
         toks: &[i32],

@@ -36,7 +36,12 @@ impl Batcher {
     }
 
     /// Requests to admit this iteration given `free_slots` capacity.
-    /// FIFO order is guaranteed.
+    /// FIFO order is guaranteed. The returned burst is the unit of the
+    /// engine's admission handshake: `Engine::step` hands the whole batch
+    /// to ONE `DecodeBackend::prefill_batch` call (so a FillAll burst
+    /// prefills every free slot in a single pass over the model), and on
+    /// prefill failure every request popped here still gets a `Response`
+    /// — admitted requests never silently vanish.
     pub fn admit(&mut self, free_slots: usize) -> Vec<Request> {
         let want = match self.policy {
             AdmitPolicy::OnePerStep => free_slots.min(1),
@@ -90,6 +95,20 @@ mod tests {
         assert_eq!(b.admit(4).len(), 1);
         assert_eq!(b.admit(4).len(), 1);
         assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn fill_all_admits_whole_burst_in_one_call() {
+        // the batched-prefill handshake: one admit() call returns the
+        // entire burst (min of free slots and queue depth), in FIFO order
+        let mut b = Batcher::new(AdmitPolicy::FillAll);
+        for i in 0..5 {
+            b.enqueue(req(i));
+        }
+        let burst = b.admit(8);
+        assert_eq!(burst.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(b.pending(), 0);
+        assert!(b.admit(8).is_empty());
     }
 
     #[test]

@@ -65,7 +65,11 @@ impl Default for EngineConfig {
 struct ActiveReq {
     req: Request,
     generated: Vec<i32>,
-    first_token_at: Option<Instant>,
+    /// when admission sampled the prefill's token — a request is only
+    /// active after its first token exists, so this is never "pending"
+    first_token_at: Instant,
+    /// the backend consumed fewer prompt tokens than submitted
+    truncated_prompt: bool,
     /// sim-clock marks at admission, so responses report per-request
     /// deltas (not the engine's running totals)
     modeled_start_s: f64,
@@ -155,44 +159,79 @@ impl Engine {
     pub fn step(&mut self) -> Result<Vec<Response>> {
         let mut done = Vec::new();
 
-        // ---- admission (prefill) ---------------------------------------
+        // ---- admission (batched prefill) -------------------------------
+        // The whole admit burst goes through ONE backend call: the native
+        // backends stack every prompt's rows and run each WAQ LUT-GEMM
+        // linear once per layer for the burst (bit-exact per request with
+        // the sequential path); the PJRT default loops internally.
         let free = self.kv.decode_batch_free();
-        for req in self.batcher.admit(free) {
-            let slot = self
-                .kv
-                .free_slot()
-                .ok_or_else(|| anyhow!("admit with no free slot"))?;
-            // the sim-clock marks are taken before the prefill cost lands,
-            // so each response's modeled delta includes its own prefill
-            let (start_s, start_j) = (self.sim.seconds, self.sim.energy_j);
-            let pre = self
-                .backend
-                .prefill(&req.prompt)
-                .map_err(|e| anyhow!("prefill failed: {e}"))?;
-            self.kv
-                .install_prefill(slot, req.id, pre.plen, &pre.k_cache, &pre.v_cache)
-                .map_err(|e| anyhow!(e))?;
-            self.stats.prefills += 1;
-            self.sim.seconds += pre.cost.accel_s;
-            self.sim.energy_j += pre.cost.accel_j;
-            self.stats.host_waq_s += pre.cost.host_waq_s;
-            self.stats.host_shard_crit_s += pre.cost.shard_crit_s;
-            // the prefill's last-position logits give token #1
-            let tok = self.sample(&pre.logits, req.temperature);
-            let mut ar = ActiveReq {
-                req,
-                generated: vec![tok],
-                first_token_at: Some(Instant::now()),
-                modeled_start_s: start_s,
-                modeled_start_j: start_j,
-            };
-            self.stats.generated_tokens += 1;
-            // completion checks on the very first token
-            if let Some(resp) = self.maybe_finish(slot, &mut ar) {
-                self.kv.release(slot);
-                done.push(resp);
-            } else {
-                self.active[slot] = Some(ar);
+        let admitted = self.batcher.admit(free);
+        if !admitted.is_empty() {
+            let prompts: Vec<&[i32]> = admitted.iter().map(|r| r.prompt.as_slice()).collect();
+            match self.backend.prefill_batch(&prompts) {
+                Ok(pres) if pres.len() == admitted.len() => {
+                    for (req, pre) in admitted.into_iter().zip(pres) {
+                        let slot = self
+                            .kv
+                            .free_slot()
+                            .ok_or_else(|| anyhow!("admit with no free slot"))?;
+                        // the sim-clock marks are taken before the prefill
+                        // cost lands, so each response's modeled delta
+                        // includes its own prefill (per-request costs come
+                        // from the backend even for a batched burst)
+                        let (start_s, start_j) = (self.sim.seconds, self.sim.energy_j);
+                        let truncated = pre.plen < req.prompt.len();
+                        self.kv
+                            .install_prefill(slot, req.id, pre.plen, &pre.k_cache, &pre.v_cache)
+                            .map_err(|e| anyhow!(e))?;
+                        self.stats.prefills += 1;
+                        if truncated {
+                            self.stats.truncated_prompts += 1;
+                        }
+                        self.sim.seconds += pre.cost.accel_s;
+                        self.sim.energy_j += pre.cost.accel_j;
+                        self.stats.host_waq_s += pre.cost.host_waq_s;
+                        self.stats.host_shard_crit_s += pre.cost.shard_crit_s;
+                        // the prefill's last-position logits give token #1
+                        let tok = self.sample(&pre.logits, req.temperature);
+                        let mut ar = ActiveReq {
+                            req,
+                            generated: vec![tok],
+                            first_token_at: Instant::now(),
+                            truncated_prompt: truncated,
+                            modeled_start_s: start_s,
+                            modeled_start_j: start_j,
+                        };
+                        self.stats.generated_tokens += 1;
+                        // completion checks on the very first token
+                        if let Some(resp) = self.maybe_finish(slot, &mut ar) {
+                            self.kv.release(slot);
+                            done.push(resp);
+                        } else {
+                            self.active[slot] = Some(ar);
+                        }
+                    }
+                }
+                // a failed (or arity-broken) burst prefill must not drop
+                // admitted requests on the floor: nothing was installed,
+                // so every request gets an Aborted response and the
+                // engine keeps serving
+                fail => {
+                    let err = match fail {
+                        Err(e) => e.to_string(),
+                        Ok(p) => format!(
+                            "backend returned {} prefill results for {} prompts",
+                            p.len(),
+                            admitted.len()
+                        ),
+                    };
+                    eprintln!(
+                        "engine: burst prefill failed ({err}); aborting {} admitted request(s)",
+                        admitted.len()
+                    );
+                    self.stats.prefill_failures += 1;
+                    done.extend(admitted.iter().map(aborted_response));
+                }
             }
         }
 
@@ -256,9 +295,9 @@ impl Engine {
             let tok = self.sample(lrow, ar.req.temperature);
             ar.generated.push(tok);
             self.stats.generated_tokens += 1;
-            if ar.first_token_at.is_none() {
-                ar.first_token_at = Some(Instant::now());
-            }
+            // no first-token bookkeeping here: admission always records
+            // `first_token_at` when it samples the prefill's token, so a
+            // decode step can never produce a request's first token
             if let Some(resp) = self.maybe_finish(slot, &mut ar) {
                 self.kv.release(slot);
                 done.push(resp);
@@ -282,36 +321,47 @@ impl Engine {
         };
         reason.map(|fr| {
             self.stats.completed += 1;
-            Response {
-                id: ar.req.id,
-                prompt_len: ar.req.prompt.len(),
-                tokens: std::mem::take(&mut ar.generated),
-                finish_reason: fr,
-                ttft_s: ar
-                    .first_token_at
-                    .map(|t| (t - ar.req.arrived).as_secs_f64())
-                    .unwrap_or(0.0),
-                total_s: ar.req.arrived.elapsed().as_secs_f64(),
-                modeled_accel_s: self.sim.seconds - ar.modeled_start_s,
-                modeled_accel_j: self.sim.energy_j - ar.modeled_start_j,
-            }
+            self.response_for(ar, fr)
         })
     }
 
+    /// Build the response for a request leaving the engine (completion or
+    /// abort): ONE construction site, so response fields cannot diverge
+    /// between the finish and abort paths.
+    fn response_for(&self, ar: &mut ActiveReq, fr: FinishReason) -> Response {
+        Response {
+            id: ar.req.id,
+            prompt_len: ar.req.prompt.len(),
+            tokens: std::mem::take(&mut ar.generated),
+            finish_reason: fr,
+            truncated_prompt: ar.truncated_prompt,
+            ttft_s: (ar.first_token_at - ar.req.arrived).as_secs_f64(),
+            total_s: ar.req.arrived.elapsed().as_secs_f64(),
+            modeled_accel_s: self.sim.seconds - ar.modeled_start_s,
+            modeled_accel_j: self.sim.energy_j - ar.modeled_start_j,
+        }
+    }
+
+    /// Sample the next token from one logit row. NaN-safe in both
+    /// branches: a numerically poisoned row (overflowed accumulator, bad
+    /// weights) must never panic the engine thread — see
+    /// [`greedy_argmax`] and the zero-weighting of NaN entries below.
     fn sample(&mut self, logits: &[f32], temperature: f32) -> i32 {
         if temperature <= 0.0 {
-            return logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i as i32)
-                .unwrap_or(0);
+            return greedy_argmax(logits);
         }
-        // softmax sample
+        // softmax sample; NaN logits carry zero probability mass (f32::max
+        // already ignores NaN, so `maxv` is the finite max when one exists)
         let maxv = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
         let exps: Vec<f64> = logits
             .iter()
-            .map(|&x| (((x - maxv) / temperature) as f64).exp())
+            .map(|&x| {
+                if x.is_nan() {
+                    0.0
+                } else {
+                    (((x - maxv) / temperature) as f64).exp()
+                }
+            })
             .collect();
         let total: f64 = exps.iter().sum();
         let mut u = self.rng.f64() * total;
@@ -325,47 +375,153 @@ impl Engine {
     }
 
     /// Abort everything in flight (shutdown path). In-flight requests
-    /// report their real TTFT (if a first token was emitted) and their
-    /// modeled-cost deltas so far; queued requests report zeros.
+    /// always report a real TTFT (their first token was sampled at
+    /// admission) and their modeled-cost deltas so far; queued requests
+    /// report zeros.
     pub fn abort_all(&mut self) -> Vec<Response> {
         let mut out = Vec::new();
         for slot in 0..self.active.len() {
             if let Some(mut ar) = self.active[slot].take() {
                 self.kv.release(slot);
-                out.push(Response {
-                    id: ar.req.id,
-                    prompt_len: ar.req.prompt.len(),
-                    tokens: std::mem::take(&mut ar.generated),
-                    finish_reason: FinishReason::Aborted,
-                    ttft_s: ar
-                        .first_token_at
-                        .map(|t| (t - ar.req.arrived).as_secs_f64())
-                        .unwrap_or(0.0),
-                    total_s: ar.req.arrived.elapsed().as_secs_f64(),
-                    modeled_accel_s: self.sim.seconds - ar.modeled_start_s,
-                    modeled_accel_j: self.sim.energy_j - ar.modeled_start_j,
-                });
+                out.push(self.response_for(&mut ar, FinishReason::Aborted));
             }
         }
         for req in self.batcher.drain() {
-            out.push(Response {
-                id: req.id,
-                prompt_len: req.prompt.len(),
-                tokens: vec![],
-                finish_reason: FinishReason::Aborted,
-                ttft_s: 0.0,
-                total_s: req.arrived.elapsed().as_secs_f64(),
-                modeled_accel_s: 0.0,
-                modeled_accel_j: 0.0,
-            });
+            out.push(aborted_response(&req));
         }
         out
     }
+}
+
+/// Response for a request aborted before any compute landed for it (a
+/// failed burst prefill, or a queued request drained at shutdown): no
+/// tokens, zero TTFT, zero modeled deltas.
+fn aborted_response(req: &Request) -> Response {
+    Response {
+        id: req.id,
+        prompt_len: req.prompt.len(),
+        tokens: vec![],
+        finish_reason: FinishReason::Aborted,
+        truncated_prompt: false,
+        ttft_s: 0.0,
+        total_s: req.arrived.elapsed().as_secs_f64(),
+        modeled_accel_s: 0.0,
+        modeled_accel_j: 0.0,
+    }
+}
+
+/// Greedy argmax over one logit row, NaN-safe: NaN entries are skipped
+/// (a poisoned channel cannot hijack the argmax), the comparator is the
+/// total order `f32::total_cmp` (ties resolve to the highest index, as
+/// the old `partial_cmp` argmax did), and an all-NaN row falls back to
+/// token 0 instead of panicking the engine thread.
+fn greedy_argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
 }
 
 impl KvManager {
     /// free-slot count helper used by the batcher handshake
     pub fn decode_batch_free(&self) -> usize {
         self.slots.iter().filter(|s| **s == super::kv::Slot::Free).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::PrefillOut;
+    use crate::coordinator::backend::StepCost;
+    use crate::runtime::artifacts::ModelCfg;
+    use crate::runtime::HostTensor;
+
+    #[test]
+    fn greedy_argmax_skips_nan_and_never_panics() {
+        // plain rows behave exactly like the old partial_cmp argmax
+        assert_eq!(greedy_argmax(&[0.1, 2.0, -1.0]), 1);
+        // ties resolve to the highest index (max_by keeps the last max)
+        assert_eq!(greedy_argmax(&[3.0, 3.0, 1.0]), 1);
+        // a NaN-poisoned channel cannot hijack the argmax
+        assert_eq!(greedy_argmax(&[0.5, f32::NAN, 2.0, f32::NAN, -7.0]), 2);
+        assert_eq!(greedy_argmax(&[f32::NAN, 1.0]), 1);
+        // -inf rows still pick a real index; an all-NaN row falls back to 0
+        assert_eq!(greedy_argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 1);
+        assert_eq!(greedy_argmax(&[f32::NAN, f32::NAN, f32::NAN]), 0);
+        assert_eq!(greedy_argmax(&[]), 0);
+    }
+
+    /// Backend that emits NaN-poisoned logit rows: one finite channel at
+    /// prefill (index 3), all-NaN rows at decode — the shape of a
+    /// numerically blown-up datapath.
+    struct NanBackend {
+        model: ModelCfg,
+    }
+
+    impl DecodeBackend for NanBackend {
+        fn spec(&self) -> BackendSpec {
+            BackendSpec::Native(WaqBackend::Packed)
+        }
+
+        fn model(&self) -> ModelCfg {
+            self.model
+        }
+
+        fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+            let m = self.model;
+            let plen = prompt.len().clamp(1, m.seq_len - 1);
+            let shape = [m.n_layers, 1, m.n_heads, m.seq_len, m.head_dim];
+            let mut logits = vec![f32::NAN; m.vocab];
+            logits[3] = 1.0;
+            Ok(PrefillOut {
+                plen,
+                logits,
+                k_cache: HostTensor::zeros(&shape),
+                v_cache: HostTensor::zeros(&shape),
+                cost: StepCost::default(),
+            })
+        }
+
+        fn decode(
+            &mut self,
+            _toks: &[i32],
+            _pos: &[i32],
+            _active: &[bool],
+            _kv: &mut KvManager,
+        ) -> Result<(Vec<f32>, StepCost)> {
+            let m = self.model;
+            Ok((vec![f32::NAN; m.decode_batch * m.vocab], StepCost::default()))
+        }
+    }
+
+    /// NaN logits must never panic the engine thread — greedy picks the
+    /// finite channel (prefill) or falls back to token 0 (all-NaN decode
+    /// rows), and the softmax branch treats NaN as zero probability mass.
+    #[test]
+    fn nan_logits_never_panic_sampling() {
+        let cfg = ModelCfg::test_preset();
+        let mut e = Engine::new(Box::new(NanBackend { model: cfg }), &EngineConfig::default());
+        e.submit(Request::new(1, vec![1, 2, 3], 3));
+        let mut greedy = e.run_to_completion().expect("greedy run");
+        let r = greedy.remove(0);
+        assert_eq!(r.tokens.len(), 3);
+        assert_eq!(r.tokens[0], 3, "greedy must find the finite channel");
+        assert!(r.tokens[1..].iter().all(|&t| t == 0), "all-NaN rows fall back to 0");
+
+        // softmax branch: all-NaN decode rows carry zero mass, sampling
+        // stays in-vocab without panicking
+        let mut req = Request::new(2, vec![4, 5], 4);
+        req.temperature = 1.0;
+        e.submit(req);
+        let sampled = e.run_to_completion().expect("softmax run").remove(0);
+        assert_eq!(sampled.tokens.len(), 4);
+        assert!(sampled
+            .tokens
+            .iter()
+            .all(|&t| t >= 0 && (t as usize) < cfg.vocab));
     }
 }

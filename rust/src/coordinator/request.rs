@@ -32,10 +32,23 @@ impl Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: RequestId,
+    /// Length of the prompt as *submitted*. When the context window is
+    /// shorter, the backend clamps what it actually consumes and
+    /// `truncated_prompt` is set — this field keeps reporting the full
+    /// submitted length either way.
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
     pub finish_reason: FinishReason,
-    /// measured wall-clock
+    /// True when the backend consumed fewer prompt tokens than submitted
+    /// (prompt clamped into the context window, `seq_len - 1`), so
+    /// callers can tell their context was cut instead of silently getting
+    /// a completion over a shorter prompt. Also counted in
+    /// [`EngineStats::truncated_prompts`].
+    pub truncated_prompt: bool,
+    /// Measured wall-clock from arrival to the first token. The first
+    /// token is the one sampled from the prefill's last-position logits,
+    /// so TTFT is set exactly once, at admission (queue wait + prefill) —
+    /// decode steps can never be the first token.
     pub ttft_s: f64,
     pub total_s: f64,
     /// modeled OASIS accelerator time/energy for the same work — the
@@ -59,6 +72,13 @@ pub enum FinishReason {
 pub struct EngineStats {
     pub decode_steps: u64,
     pub prefills: u64,
+    /// Admitted requests whose prompt was clamped into the context window
+    /// (each one's `Response` also carries `truncated_prompt: true`).
+    pub truncated_prompts: u64,
+    /// Failed admission-burst prefills (`DecodeBackend::prefill_batch`
+    /// returned an error): every request of such a burst was answered
+    /// with an `Aborted` response instead of being dropped.
+    pub prefill_failures: u64,
     pub generated_tokens: u64,
     /// decode-step batch occupancy sum (for mean occupancy)
     pub occupancy_sum: u64,
@@ -66,10 +86,11 @@ pub struct EngineStats {
     /// serving backend name (`coordinator::BackendSpec::name()`, e.g.
     /// `packed` or `native-packed`; empty before engine construction)
     pub waq_backend: &'static str,
-    /// host software WAQ-datapath seconds across all decode steps:
-    /// *measured* wall-clock when a `native-*` backend executes the
-    /// LUT-GEMM datapath, the modeled `baselines::cpu::CpuWaqModel`
-    /// roofline when decode runs PJRT artifacts
+    /// host software WAQ-datapath seconds across all decode steps and
+    /// prefills: *measured* wall-clock when a `native-*` backend executes
+    /// the LUT-GEMM datapath (admission bursts are measured once per
+    /// batched prefill), the modeled `baselines::cpu::CpuWaqModel`
+    /// roofline when decode runs PJRT artifacts (PJRT prefills add zero)
     pub host_waq_s: f64,
     /// Tensor-parallel critical-path seconds summed across all steps: for
     /// the sharded backend, each sharded GEMM contributes its slowest

@@ -260,7 +260,8 @@ fn engine_thread(
 // ---------------------------------------------------------------------------
 
 /// Serve `{"prompt": [ids...], "max_new_tokens": n}` lines over TCP,
-/// responding with `{"id":..,"tokens":[..],"ttft_s":..,"total_s":..}`.
+/// responding with `{"id":..,"tokens":[..],"truncated_prompt":..,
+/// "ttft_s":..,"total_s":..}`.
 /// Returns the bound port. Runs until the listener thread is dropped with
 /// the process (demo front-end; the in-process API is the primary one).
 pub fn serve_tcp(coord: Arc<Coordinator>, port: u16) -> Result<u16> {
@@ -329,7 +330,7 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<String, String> {
         .collect::<Vec<_>>()
         .join(",");
     Ok(format!(
-        "{{\"id\": {}, \"tokens\": [{}], \"ttft_s\": {:.6}, \"total_s\": {:.6}, \"modeled_accel_s\": {:.6}}}",
-        resp.id, toks, resp.ttft_s, resp.total_s, resp.modeled_accel_s
+        "{{\"id\": {}, \"tokens\": [{}], \"truncated_prompt\": {}, \"ttft_s\": {:.6}, \"total_s\": {:.6}, \"modeled_accel_s\": {:.6}}}",
+        resp.id, toks, resp.truncated_prompt, resp.ttft_s, resp.total_s, resp.modeled_accel_s
     ))
 }

@@ -157,6 +157,62 @@ impl KvBenchRow {
     }
 }
 
+/// One BENCH_prefill.json row: the burst-admission prefill trade-off —
+/// one admission burst prefilled either sequentially (one
+/// `DecodeBackend::prefill` call per request) or batched (one
+/// `prefill_batch` call for the whole burst). Emitted by the
+/// `e2e_serving` bench's burst-admission sweep and smoke-run in CI.
+///
+/// Schema (JSON lines, one object per row):
+///   `name`           `"prefill_burst/<backend>/<mode>"`
+///   `backend`        serving backend tag (e.g. `native-packed`)
+///   `mode`           `"sequential"` (N prefill calls) or `"batched"`
+///                    (one prefill_batch call)
+///   `burst`          requests prefilled in the burst
+///   `prompt_tokens`  total prompt tokens across the burst
+///   `host_waq_s`     measured WAQ-datapath seconds for the whole burst
+///                    (sum of the per-request `StepCost::host_waq_s`)
+///   `wall_s`         wall-clock seconds for the whole burst
+///   `tok_s`          `prompt_tokens / wall_s`
+///   `speedup_vs_sequential`  host-WAQ-seconds ratio sequential/batched
+///                    for the same burst (1.0 on sequential rows)
+pub struct PrefillBenchRow {
+    pub name: String,
+    pub backend: String,
+    pub mode: String,
+    pub burst: u32,
+    pub prompt_tokens: u64,
+    pub host_waq_s: f64,
+    pub wall_s: f64,
+    pub tok_s: f64,
+    pub speedup_vs_sequential: f64,
+}
+
+impl PrefillBenchRow {
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"backend\": \"{}\", \"mode\": \"{}\", \"burst\": {}, \
+             \"prompt_tokens\": {}, \"host_waq_s\": {:.6}, \"wall_s\": {:.6}, \
+             \"tok_s\": {:.3}, \"speedup_vs_sequential\": {:.4}}}",
+            json_escape(&self.name),
+            json_escape(&self.backend),
+            json_escape(&self.mode),
+            self.burst,
+            self.prompt_tokens,
+            self.host_waq_s,
+            self.wall_s,
+            self.tok_s,
+            self.speedup_vs_sequential
+        )
+    }
+
+    /// Append to the repo-root BENCH_prefill.json (JSON lines; created if
+    /// missing). IO failures are reported, never fatal.
+    pub fn append(&self) {
+        append_line(&bench_json_path("BENCH_prefill.json"), &self.json_line());
+    }
+}
+
 /// One BENCH_shard.json row: tensor-parallel shard scaling of the native
 /// WAQ datapath (emitted by the `shard_scaling` bench; CI smoke-runs
 /// shards {1, 4} under FAST_BENCH and fails the job when the
@@ -373,6 +429,27 @@ mod tests {
         assert!(line.contains("\"kv_bits\": 4"), "{line}");
         assert!(line.contains("\"bytes_per_token\": 192.000"), "{line}");
         assert!(line.contains("\"attn_rel_err\": 0.012300"), "{line}");
+    }
+
+    #[test]
+    fn prefill_row_json_is_machine_readable() {
+        let row = PrefillBenchRow {
+            name: "prefill_burst/native-packed/batched".into(),
+            backend: "native-packed".into(),
+            mode: "batched".into(),
+            burst: 8,
+            prompt_tokens: 128,
+            host_waq_s: 0.0125,
+            wall_s: 0.02,
+            tok_s: 6400.0,
+            speedup_vs_sequential: 2.5,
+        };
+        let line = row.json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"mode\": \"batched\""), "{line}");
+        assert!(line.contains("\"burst\": 8"), "{line}");
+        assert!(line.contains("\"host_waq_s\": 0.012500"), "{line}");
+        assert!(line.contains("\"speedup_vs_sequential\": 2.5000"), "{line}");
     }
 
     #[test]

@@ -7,7 +7,8 @@ use std::sync::atomic::Ordering;
 
 use kllm::coordinator::{
     AdmitPolicy, BackendSpec, Coordinator, DecodeBackend, Engine, EngineConfig, FinishReason,
-    KvManager, NativeCfg, NativeWaqBackend, PjrtBackend, Request, Response, ShardedWaqBackend,
+    KvManager, NativeCfg, NativeWaqBackend, PjrtBackend, PrefillOut, Request, Response,
+    ShardedWaqBackend, StepCost,
 };
 use kllm::gemm::WaqBackend;
 use kllm::runtime::artifacts::ModelCfg;
@@ -526,6 +527,229 @@ fn sharded_engine_burst_is_deterministic_and_leak_free() {
     let b = run();
     assert_eq!(a.len(), 8, "all 8 burst requests must be accounted for");
     assert_eq!(a, b, "two identical sharded runs must produce identical outputs");
+}
+
+// ---------------------------------------------------------------------------
+// batched admission prefill: parity net + hardened admission path
+// ---------------------------------------------------------------------------
+
+/// Batched-vs-sequential prefill parity property (the acceptance
+/// criterion): for random prompt lengths in 1..seq_len and burst sizes
+/// 1..=8, `prefill_batch` must be bit-exact per request with the
+/// sequential `prefill` path — logits AND K/V cache tensors — on both
+/// native-packed and native-sharded, and the caches must land
+/// bit-identically in the paged store at every `--kv-bits` setting
+/// (FP32 and the 4/3/2-bit K-Means index streams alike).
+#[test]
+fn prop_batched_prefill_bit_exact_with_sequential_at_every_kv_bits() {
+    use kllm::kvcache::{KvBits, KvPrecision};
+    use kllm::util::check::Check;
+    use std::cell::RefCell;
+
+    let cfg = tiny_cfg(8);
+    let backends: Vec<(&str, RefCell<Box<dyn DecodeBackend>>)> = vec![
+        (
+            "native-packed",
+            RefCell::new(Box::new(native_backend(cfg, WaqBackend::Packed))),
+        ),
+        ("native-sharded", RefCell::new(Box::new(sharded_backend(cfg, 3)))),
+    ];
+    Check::new(8).forall("batched-prefill-parity", |rng, _case| {
+        let burst = 1 + rng.below(8);
+        let prompts: Vec<Vec<i32>> = (0..burst)
+            .map(|_| {
+                let plen = 1 + rng.below(cfg.seq_len - 1);
+                (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect()
+            })
+            .collect();
+        let refs: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        for (name, cell) in &backends {
+            let mut b = cell.borrow_mut();
+            let seq: Vec<PrefillOut> =
+                refs.iter().map(|p| b.prefill(p).expect("sequential prefill")).collect();
+            let bat = b.prefill_batch(&refs).expect("batched prefill");
+            assert_eq!(seq.len(), bat.len(), "{name}: one result per prompt");
+            for (r, (a, c)) in seq.iter().zip(&bat).enumerate() {
+                assert_eq!(a.plen, c.plen, "{name} burst={burst} request {r} plen");
+                assert_eq!(a.logits, c.logits, "{name} burst={burst} request {r} logits");
+                assert_eq!(a.k_cache, c.k_cache, "{name} burst={burst} request {r} K");
+                assert_eq!(a.v_cache, c.v_cache, "{name} burst={burst} request {r} V");
+            }
+            // and the installed paged-cache contents agree at every
+            // storage precision (quantized index streams included)
+            for kv_bits in KvBits::ALL {
+                let prec = |b: &mut dyn DecodeBackend| match kv_bits {
+                    KvBits::Fp32 => KvPrecision::Fp32,
+                    q => KvPrecision::Quant(b.kv_quantizer(q.bits())),
+                };
+                let mut kv_seq = KvManager::with_precision(cfg, prec(&mut **b));
+                let mut kv_bat = KvManager::with_precision(cfg, prec(&mut **b));
+                for (slot, (a, c)) in seq.iter().zip(&bat).enumerate() {
+                    kv_seq
+                        .install_prefill(slot, 1 + slot as u64, a.plen, &a.k_cache, &a.v_cache)
+                        .expect("install sequential");
+                    kv_bat
+                        .install_prefill(slot, 1 + slot as u64, c.plen, &c.k_cache, &c.v_cache)
+                        .expect("install batched");
+                }
+                assert_eq!(
+                    kv_seq.dense_tensors(),
+                    kv_bat.dense_tensors(),
+                    "{name} burst={burst} paged cache at kv {kv_bits}-bit"
+                );
+            }
+        }
+    });
+}
+
+/// Backend whose prefill fails on a poisoned prompt token; everything
+/// else delegates to the artifact-contract stub. Uses the trait's
+/// *default* `prefill_batch`, so a poisoned prompt fails the burst
+/// mid-loop — the exact shape of the old admission-path bug.
+struct PoisonBackend {
+    inner: PjrtBackend,
+    poison: i32,
+}
+
+impl DecodeBackend for PoisonBackend {
+    fn spec(&self) -> BackendSpec {
+        self.inner.spec()
+    }
+
+    fn model(&self) -> kllm::runtime::artifacts::ModelCfg {
+        self.inner.model()
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> anyhow::Result<PrefillOut> {
+        if prompt.contains(&self.poison) {
+            anyhow::bail!("poisoned prompt");
+        }
+        self.inner.prefill(prompt)
+    }
+
+    fn decode(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        kv: &mut KvManager,
+    ) -> anyhow::Result<(Vec<f32>, StepCost)> {
+        self.inner.decode(toks, pos, active, kv)
+    }
+}
+
+/// Regression (admission error path): a burst with one poisoned prompt
+/// must never silently drop requests — before the fix, the failing
+/// request and every later one popped by `Batcher::admit` vanished with
+/// no `Response` and `Engine::step` returned `Err`. Now every admitted
+/// request of the failed burst gets an `Aborted` response and the engine
+/// keeps serving.
+#[test]
+fn burst_with_poisoned_prompt_never_drops_requests() {
+    let cfg = tiny_cfg(4);
+    let backend = PoisonBackend { inner: stub_backend(cfg), poison: -99 };
+    let ecfg = EngineConfig { policy: AdmitPolicy::FillAll, ..Default::default() };
+    let mut e = Engine::new(Box::new(backend), &ecfg);
+    for id in 0..4u64 {
+        let prompt = if id == 1 { vec![1, -99, 3] } else { vec![1 + id as i32, 2, 3] };
+        e.submit(Request::new(id, prompt, 4));
+    }
+    let done = e.step().expect("a failed burst prefill must not error the step");
+    assert_eq!(done.len(), 4, "every admitted request must get a Response");
+    let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3], "no request may be silently dropped");
+    for r in &done {
+        assert_eq!(r.finish_reason, FinishReason::Aborted, "request {}", r.id);
+        assert!(r.tokens.is_empty(), "request {}", r.id);
+    }
+    assert_eq!(e.stats.prefill_failures, 1);
+    assert_eq!(e.active_count(), 0);
+    assert_eq!(e.pending(), 0);
+    assert_eq!(e.kv().cache().in_use_blocks(), 0, "failed burst must not leak KV blocks");
+
+    // the engine keeps serving after the failure
+    e.submit(Request::new(9, vec![1, 2], 3));
+    let ok = e.run_to_completion().expect("clean request after failed burst");
+    assert_eq!(ok.len(), 1);
+    assert_eq!(ok[0].id, 9);
+    assert_eq!(ok[0].finish_reason, FinishReason::MaxTokens);
+    assert_eq!(ok[0].tokens.len(), 3);
+}
+
+/// Backend that records every `prefill_batch` arity (then delegates per
+/// prompt to the stub): proves the engine hands a FillAll admit burst to
+/// ONE batched-prefill call instead of looping `prefill` itself.
+struct BurstProbe {
+    inner: PjrtBackend,
+    bursts: std::sync::Arc<std::sync::Mutex<Vec<usize>>>,
+}
+
+impl DecodeBackend for BurstProbe {
+    fn spec(&self) -> BackendSpec {
+        self.inner.spec()
+    }
+
+    fn model(&self) -> kllm::runtime::artifacts::ModelCfg {
+        self.inner.model()
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> anyhow::Result<PrefillOut> {
+        self.inner.prefill(prompt)
+    }
+
+    fn prefill_batch(&mut self, prompts: &[&[i32]]) -> anyhow::Result<Vec<PrefillOut>> {
+        self.bursts.lock().unwrap().push(prompts.len());
+        prompts.iter().map(|p| self.inner.prefill(p)).collect()
+    }
+
+    fn decode(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        kv: &mut KvManager,
+    ) -> anyhow::Result<(Vec<f32>, StepCost)> {
+        self.inner.decode(toks, pos, active, kv)
+    }
+}
+
+#[test]
+fn engine_admits_whole_burst_through_one_prefill_batch_call() {
+    let cfg = tiny_cfg(4);
+    let bursts = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let backend = BurstProbe { inner: stub_backend(cfg), bursts: bursts.clone() };
+    let ecfg = EngineConfig { policy: AdmitPolicy::FillAll, ..Default::default() };
+    let mut e = Engine::new(Box::new(backend), &ecfg);
+    for id in 0..6u64 {
+        e.submit(Request::new(id, vec![1 + id as i32, 2], 3));
+    }
+    e.run_to_completion().expect("run");
+    let bursts = bursts.lock().unwrap();
+    assert_eq!(bursts[0], 4, "FillAll fills all four free slots via ONE prefill_batch");
+    assert!(bursts.iter().all(|&n| n >= 1), "empty bursts must not reach the backend");
+    assert_eq!(bursts.iter().sum::<usize>(), 6, "every request prefilled exactly once");
+}
+
+/// Silent-truncation regression: a prompt longer than the context window
+/// is clamped by the backend; the response must say so instead of
+/// pretending the full context was consumed.
+#[test]
+fn over_long_prompt_surfaces_truncation() {
+    let cfg = tiny_cfg(2);
+    let mut e =
+        Engine::new(Box::new(native_backend(cfg, WaqBackend::Packed)), &EngineConfig::default());
+    // seq_len + 7 tokens into a seq_len window (the issue's probe length)
+    let long = vec![7i32; cfg.seq_len + 7];
+    e.submit(Request::new(1, long, 2));
+    e.submit(Request::new(2, vec![1, 2, 3], 2));
+    let mut done = e.run_to_completion().expect("run");
+    done.sort_by_key(|r| r.id);
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[0].prompt_len, cfg.seq_len + 7, "reports the *submitted* length");
+    assert!(done[0].truncated_prompt, "clamped prompt must be surfaced");
+    assert!(!done[1].truncated_prompt, "in-window prompt is not flagged");
+    assert_eq!(e.stats.truncated_prompts, 1);
 }
 
 /// `--shards 0` is a configuration error with a real message, never a
