@@ -1,0 +1,254 @@
+//! Serving-robustness soak bench: a heavy-tailed multi-client trace
+//! through the in-process coordinator API and the TCP JSON-lines
+//! front-end, with chaos fault injection enabled and a bounded admission
+//! queue. Tripwires (any failure fails the run, and CI): every submitted
+//! request resolves to exactly one terminal response, nothing hangs, and
+//! the final graceful drain returns every KV block. Rows land in
+//! BENCH_soak.json via `util::bench::SoakBenchRow` — accepted/rejected/
+//! expired/aborted counts, p50/p99 admission wait, drain time — so the
+//! robustness envelope is tracked across PRs. CI smoke-runs this under
+//! FAST_BENCH=1 with a shrunk trace.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kllm::coordinator::{
+    AdmitPolicy, BackendSpec, ChaosCfg, Coordinator, EngineConfig, FinishReason, TcpCfg,
+};
+use kllm::gemm::WaqBackend;
+use kllm::kvcache::KvBits;
+use kllm::runtime::artifacts::ModelCfg;
+use kllm::runtime::{Manifest, ParamSet};
+use kllm::util::bench::{fast_mode, SoakBenchRow};
+use kllm::util::json::Json;
+use kllm::util::rng::Rng;
+use kllm::util::stats::percentile_sorted;
+
+const CHAOS_SEED: u64 = 0xC4A05;
+const CHAOS_RATE: f64 = 0.02;
+
+fn soak_cfg() -> ModelCfg {
+    ModelCfg { decode_batch: 4, ..ModelCfg::test_preset() }
+}
+
+fn start_coordinator(cfg: ModelCfg) -> anyhow::Result<Coordinator> {
+    let manifest = Manifest::synthetic("test", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    Coordinator::start_with_manifest(
+        manifest,
+        params,
+        EngineConfig {
+            backend: BackendSpec::Native(WaqBackend::Packed),
+            policy: AdmitPolicy::FillAll,
+            kv_bits: KvBits::B4,
+            queue_cap: 16,
+            chaos: Some(ChaosCfg::uniform(CHAOS_SEED, CHAOS_RATE)),
+            ..Default::default()
+        },
+    )
+}
+
+/// Heavy-tailed per-request shape: mostly short prompts/generations with
+/// an occasional long one (the tail is what stresses admission + drain).
+fn trace_request(rng: &mut Rng, vocab: usize, seq_len: usize) -> (Vec<i32>, usize) {
+    let mag = rng.heavy_tailed(0.1, 6.0).abs() as usize;
+    let plen = (1 + rng.below(4) + mag).min(seq_len - 1);
+    let prompt = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+    let max_new = 1 + rng.below(4) + mag / 2;
+    (prompt, max_new)
+}
+
+/// Terminal-outcome tally for one soak phase.
+#[derive(Default)]
+struct Tally {
+    completed: u64,
+    rejected: u64,
+    expired: u64,
+    aborted: u64,
+    queue_waits: Vec<f64>,
+}
+
+impl Tally {
+    fn record(&mut self, reason: FinishReason, queue_wait_s: f64) {
+        match reason {
+            FinishReason::Rejected => self.rejected += 1,
+            FinishReason::DeadlineExpired => self.expired += 1,
+            FinishReason::Aborted => self.aborted += 1,
+            _ => self.completed += 1,
+        }
+        self.queue_waits.push(queue_wait_s);
+    }
+
+    fn total(&self) -> u64 {
+        self.completed + self.rejected + self.expired + self.aborted
+    }
+
+    fn percentiles(&mut self) -> (f64, f64) {
+        self.queue_waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            percentile_sorted(&self.queue_waits, 50.0),
+            percentile_sorted(&self.queue_waits, 99.0),
+        )
+    }
+}
+
+fn emit(name: &str, mut tally: Tally, requests: u64, drain_s: f64) {
+    assert_eq!(
+        tally.total(),
+        requests,
+        "{name}: every request must resolve to exactly one terminal response"
+    );
+    let (p50, p99) = tally.percentiles();
+    let row = SoakBenchRow {
+        name: name.to_string(),
+        backend: "native-packed".to_string(),
+        requests,
+        completed: tally.completed,
+        rejected: tally.rejected,
+        expired: tally.expired,
+        aborted: tally.aborted,
+        p50_queue_wait_s: p50,
+        p99_queue_wait_s: p99,
+        drain_s,
+        chaos_rate: CHAOS_RATE,
+        chaos_seed: CHAOS_SEED,
+    };
+    println!(
+        "bench {name:32} {requests:5} req  done {:5}  rej {:3}  exp {:3}  abort {:3}  \
+         p50 wait {:8.1} us  p99 wait {:8.1} us  drain {:.3} s",
+        row.completed,
+        row.rejected,
+        row.expired,
+        row.aborted,
+        1e6 * row.p50_queue_wait_s,
+        1e6 * row.p99_queue_wait_s,
+        row.drain_s,
+    );
+    row.append();
+}
+
+/// Phase 1: multi-client trace through the in-process API, ending with a
+/// last wave deliberately left in flight when the graceful drain starts —
+/// those requests must come back finished, aborted, or rejected, never
+/// hang.
+fn inproc_phase(clients: u64, per_client: u64) -> anyhow::Result<()> {
+    let cfg = soak_cfg();
+    let coord = Arc::new(start_coordinator(cfg)?);
+    let mut tally = Tally::default();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<(FinishReason, f64)>> {
+            let mut rng = Rng::new(0x50AC ^ c);
+            let mut out = Vec::new();
+            for i in 0..per_client {
+                let (prompt, max_new) = trace_request(&mut rng, cfg.vocab, cfg.seq_len);
+                // a slice of the trace carries deadlines: already-expired
+                // (must expire) or far-future (must not interfere)
+                let deadline = match (c + i) % 8 {
+                    0 => Some(0),
+                    1 => Some(3_600_000),
+                    _ => None,
+                };
+                let (_, rx) = coord.submit_with(prompt, max_new, 0.0, deadline)?;
+                let resp = rx.recv_timeout(Duration::from_secs(60))?;
+                out.push((resp.finish_reason, resp.queue_wait_s));
+            }
+            Ok(out)
+        }));
+    }
+    for h in handles {
+        for (reason, wait) in h.join().expect("client thread")? {
+            tally.record(reason, wait);
+        }
+    }
+    // last wave: submitted but NOT received before drain begins
+    let mut rng = Rng::new(0xD12A1);
+    let wave = clients * 2;
+    let mut pending = Vec::new();
+    for _ in 0..wave {
+        let (prompt, max_new) = trace_request(&mut rng, cfg.vocab, cfg.seq_len);
+        let (_, rx) = coord.submit_with(prompt, max_new, 0.0, None)?;
+        pending.push(rx);
+    }
+    let report = coord.drain(Duration::from_secs(30))?;
+    for rx in pending {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("drain must answer every in-flight request");
+        tally.record(resp.finish_reason, resp.queue_wait_s);
+    }
+    assert_eq!(report.in_use_blocks, 0, "drain leaked KV blocks");
+    emit(
+        "soak/native-packed/inproc",
+        tally,
+        clients * per_client + wave,
+        report.drain_s,
+    );
+    Ok(())
+}
+
+/// Phase 2: the same trace shape through the TCP JSON-lines front-end —
+/// exactly one parseable reply per request line, then a graceful drain.
+fn tcp_phase(clients: u64, per_client: u64) -> anyhow::Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let cfg = soak_cfg();
+    let coord = Arc::new(start_coordinator(cfg)?);
+    let tcp = TcpCfg { max_conns: 64, read_timeout: Some(Duration::from_secs(60)) };
+    let port = kllm::coordinator::serve_tcp_with(coord.clone(), 0, tcp)?;
+    let mut tally = Tally::default();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<(FinishReason, f64)>> {
+            let mut rng = Rng::new(0x7C9 ^ c);
+            let mut sock = std::net::TcpStream::connect(("127.0.0.1", port))?;
+            let mut reader = BufReader::new(sock.try_clone()?);
+            let mut out = Vec::new();
+            for i in 0..per_client {
+                let (prompt, max_new) = trace_request(&mut rng, cfg.vocab, cfg.seq_len);
+                let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+                let deadline = if (c + i) % 8 == 0 { ", \"deadline_ms\": 0" } else { "" };
+                let line = format!(
+                    "{{\"prompt\": [{}], \"max_new_tokens\": {max_new}{deadline}}}\n",
+                    toks.join(",")
+                );
+                sock.write_all(line.as_bytes())?;
+                let mut reply = String::new();
+                reader.read_line(&mut reply)?;
+                let j = Json::parse(reply.trim())
+                    .map_err(|e| anyhow::anyhow!("unparseable reply {reply:?}: {e}"))?;
+                let reason = match j.get("finish_reason").and_then(Json::as_str) {
+                    Some("rejected") => FinishReason::Rejected,
+                    Some("deadline_expired") => FinishReason::DeadlineExpired,
+                    Some("aborted") => FinishReason::Aborted,
+                    Some(_) => FinishReason::MaxTokens,
+                    None => anyhow::bail!("reply without finish_reason: {reply:?}"),
+                };
+                let wait = j.get("queue_wait_s").and_then(Json::as_f64).unwrap_or(0.0);
+                out.push((reason, wait));
+            }
+            Ok(out)
+        }));
+    }
+    for h in handles {
+        for (reason, wait) in h.join().expect("tcp client thread")? {
+            tally.record(reason, wait);
+        }
+    }
+    let report = coord.drain(Duration::from_secs(30))?;
+    assert_eq!(report.in_use_blocks, 0, "drain leaked KV blocks");
+    emit(
+        "soak/native-packed/tcp",
+        tally,
+        clients * per_client,
+        report.drain_s,
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let (clients, per_client) = if fast_mode() { (3, 8) } else { (8, 40) };
+    inproc_phase(clients, per_client)?;
+    tcp_phase(clients, per_client)?;
+    Ok(())
+}

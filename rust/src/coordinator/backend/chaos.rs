@@ -1,0 +1,439 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`ChaosBackend`] wraps any [`DecodeBackend`] and injects faults from a
+//! seeded [`Rng`] — **no wall-clock, no OS randomness** — so a chaos run
+//! is exactly reproducible from `(seed, rates, call sequence)`: the soak
+//! test asserts two identical-seed runs produce identical outcomes, and a
+//! failing fleet trace replays locally from its seed. Three fault shapes,
+//! each at its own rate:
+//!
+//!   * **hard errors** — `prefill`/`prefill_batch`/`decode` return `Err`
+//!     (what a wedged accelerator or a poisoned artifact looks like). The
+//!     engine's containment turns these into `Aborted` responses, never
+//!     thread death. Bounded by `fault_budget` so a test can script
+//!     "exactly one mid-burst failure, then healthy".
+//!   * **NaN logit rows** — one active slot's row is overwritten with NaN
+//!     after a successful decode (a numerically blown-up datapath); the
+//!     engine's NaN-safe sampling must keep the request in-vocab.
+//!   * **latency spikes** — `spike_s` is added to the step's modeled
+//!     `accel_s` (a straggler step); exercises deadline expiry under sim
+//!     time without sleeping.
+//!
+//! The wrapper composes with every backend (`native-packed`,
+//! `native-sharded`, the PJRT stub) and every `--kv-bits`, because it
+//! delegates `spec`/`model`/`kv_quantizer` untouched — chaos is a serving
+//! seam, not a datapath change. Enabled via `EngineConfig::chaos`
+//! (`--chaos-seed` / `--chaos-rate` on `kllm serve`).
+//!
+//! Determinism contract: every entry point draws from the RNG in a fixed
+//! order (`prefill*`: one draw; `decode`: fault, NaN, spike, then a
+//! victim-slot draw only when the NaN fires), so the fault pattern is a
+//! pure function of the seed and the call sequence — it cannot silently
+//! shift when an unrelated branch stops consuming randomness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::{BackendSpec, DecodeBackend, PrefillOut, StepCost};
+use crate::coordinator::kv::KvManager;
+use crate::kvcache::KvQuantizer;
+use crate::runtime::artifacts::ModelCfg;
+use crate::util::rng::Rng;
+
+/// Fault-injection rates and bounds (all probabilities in `[0, 1]`).
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosCfg {
+    /// RNG seed — the whole fault pattern derives from it.
+    pub seed: u64,
+    /// Probability a `prefill`/`prefill_batch` call returns `Err`.
+    pub prefill_err_rate: f64,
+    /// Probability a `decode` call returns `Err`.
+    pub decode_err_rate: f64,
+    /// Probability a successful decode gets one NaN-poisoned logit row.
+    pub nan_rate: f64,
+    /// Probability a successful decode's modeled time gains `spike_s`.
+    pub spike_rate: f64,
+    /// Modeled seconds added per latency spike.
+    pub spike_s: f64,
+    /// Maximum *hard errors* injected over the backend's lifetime (NaN
+    /// rows and spikes are not counted). `u64::MAX` = unlimited. Lets a
+    /// test script "fail exactly once mid-burst, then run healthy".
+    pub fault_budget: u64,
+}
+
+impl ChaosCfg {
+    /// All fault shapes at the same `rate` (the `--chaos-rate` CLI knob):
+    /// hard errors, NaN rows, and spikes each fire with probability
+    /// `rate`, unlimited budget, 5 modeled-ms spikes.
+    pub fn uniform(seed: u64, rate: f64) -> ChaosCfg {
+        ChaosCfg {
+            seed,
+            prefill_err_rate: rate,
+            decode_err_rate: rate,
+            nan_rate: rate,
+            spike_rate: rate,
+            spike_s: 5e-3,
+            fault_budget: u64::MAX,
+        }
+    }
+}
+
+/// Shared injection counters (cloneable handle; the backend keeps the
+/// other clone) so tests and the soak bench can assert how much chaos
+/// actually landed without threading state out of the engine.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosCounters(Arc<CounterCells>);
+
+#[derive(Debug, Default)]
+struct CounterCells {
+    prefill_errs: AtomicU64,
+    decode_errs: AtomicU64,
+    nan_rows: AtomicU64,
+    spikes: AtomicU64,
+}
+
+impl ChaosCounters {
+    pub fn prefill_errs(&self) -> u64 {
+        self.0.prefill_errs.load(Ordering::Relaxed)
+    }
+
+    pub fn decode_errs(&self) -> u64 {
+        self.0.decode_errs.load(Ordering::Relaxed)
+    }
+
+    pub fn nan_rows(&self) -> u64 {
+        self.0.nan_rows.load(Ordering::Relaxed)
+    }
+
+    pub fn spikes(&self) -> u64 {
+        self.0.spikes.load(Ordering::Relaxed)
+    }
+
+    /// Hard errors only (the ones that consume `fault_budget`).
+    pub fn hard_errors(&self) -> u64 {
+        self.prefill_errs() + self.decode_errs()
+    }
+
+    fn bump(cell: &AtomicU64) {
+        cell.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Seeded fault-injecting wrapper around any [`DecodeBackend`].
+pub struct ChaosBackend {
+    inner: Box<dyn DecodeBackend>,
+    cfg: ChaosCfg,
+    rng: Rng,
+    budget_left: u64,
+    counters: ChaosCounters,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Box<dyn DecodeBackend>, cfg: ChaosCfg) -> ChaosBackend {
+        ChaosBackend {
+            inner,
+            rng: Rng::new(cfg.seed),
+            budget_left: cfg.fault_budget,
+            counters: ChaosCounters::default(),
+            cfg,
+        }
+    }
+
+    /// Handle to the injection counters (clone-cheap, thread-safe).
+    pub fn counters(&self) -> ChaosCounters {
+        self.counters.clone()
+    }
+
+    /// Consume one unit of hard-error budget; false when exhausted (the
+    /// fault is then suppressed and the call proceeds normally).
+    fn take_fault(&mut self) -> bool {
+        if self.budget_left == 0 {
+            return false;
+        }
+        self.budget_left -= 1;
+        true
+    }
+}
+
+impl DecodeBackend for ChaosBackend {
+    fn spec(&self) -> BackendSpec {
+        self.inner.spec()
+    }
+
+    fn model(&self) -> ModelCfg {
+        self.inner.model()
+    }
+
+    fn kv_quantizer(&self, bits: u32) -> KvQuantizer {
+        // delegate so chaos composes with calibrated n-bit KV backends
+        self.inner.kv_quantizer(bits)
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+        let roll = self.rng.f64();
+        if roll < self.cfg.prefill_err_rate && self.take_fault() {
+            ChaosCounters::bump(&self.counters.0.prefill_errs);
+            bail!("chaos: injected prefill fault");
+        }
+        self.inner.prefill(prompt)
+    }
+
+    fn prefill_batch(&mut self, prompts: &[&[i32]]) -> Result<Vec<PrefillOut>> {
+        // one draw per burst (not per prompt): the unit the engine's
+        // containment answers is the burst, so that's the unit of fault
+        let roll = self.rng.f64();
+        if roll < self.cfg.prefill_err_rate && self.take_fault() {
+            ChaosCounters::bump(&self.counters.0.prefill_errs);
+            bail!("chaos: injected burst-prefill fault ({} prompts)", prompts.len());
+        }
+        self.inner.prefill_batch(prompts)
+    }
+
+    fn decode(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<f32>, StepCost)> {
+        // fixed draw order regardless of which faults fire
+        let fault = self.rng.f64();
+        let nan = self.rng.f64();
+        let spike = self.rng.f64();
+        if fault < self.cfg.decode_err_rate && self.take_fault() {
+            ChaosCounters::bump(&self.counters.0.decode_errs);
+            bail!("chaos: injected decode fault");
+        }
+        let (mut logits, mut cost) = self.inner.decode(toks, pos, active, kv)?;
+        if nan < self.cfg.nan_rate {
+            let victims: Vec<usize> = active
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &a)| a.then_some(i))
+                .collect();
+            if !victims.is_empty() {
+                let slot = victims[self.rng.below(victims.len())];
+                let vocab = self.inner.model().vocab;
+                for v in &mut logits[slot * vocab..(slot + 1) * vocab] {
+                    *v = f32::NAN;
+                }
+                ChaosCounters::bump(&self.counters.0.nan_rows);
+            }
+        }
+        if spike < self.cfg.spike_rate {
+            cost.accel_s += self.cfg.spike_s;
+            ChaosCounters::bump(&self.counters.0.spikes);
+        }
+        Ok((logits, cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    /// Minimal healthy inner backend: finite logits, fixed cost.
+    struct FlatBackend {
+        model: ModelCfg,
+    }
+
+    impl DecodeBackend for FlatBackend {
+        fn spec(&self) -> BackendSpec {
+            BackendSpec::Native(crate::gemm::WaqBackend::Packed)
+        }
+
+        fn model(&self) -> ModelCfg {
+            self.model
+        }
+
+        fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+            let m = self.model;
+            let plen = prompt.len().clamp(1, m.seq_len - 1);
+            let shape = [m.n_layers, 1, m.n_heads, m.seq_len, m.head_dim];
+            let mut logits = vec![0.0f32; m.vocab];
+            logits[1] = 1.0;
+            Ok(PrefillOut {
+                plen,
+                logits,
+                k_cache: HostTensor::zeros(&shape),
+                v_cache: HostTensor::zeros(&shape),
+                cost: StepCost { accel_s: 1e-4, ..StepCost::default() },
+            })
+        }
+
+        fn decode(
+            &mut self,
+            _toks: &[i32],
+            _pos: &[i32],
+            _active: &[bool],
+            _kv: &mut KvManager,
+        ) -> Result<(Vec<f32>, StepCost)> {
+            let m = self.model;
+            let mut logits = vec![0.0f32; m.decode_batch * m.vocab];
+            for s in 0..m.decode_batch {
+                logits[s * m.vocab + 2] = 1.0;
+            }
+            Ok((logits, StepCost { accel_s: 1e-4, ..StepCost::default() }))
+        }
+    }
+
+    fn flat() -> Box<dyn DecodeBackend> {
+        Box::new(FlatBackend { model: ModelCfg::test_preset() })
+    }
+
+    /// Drive one chaos instance through a fixed call sequence and record
+    /// the per-call outcome signature.
+    fn fault_signature(cfg: ChaosCfg, calls: usize) -> Vec<(bool, bool, bool)> {
+        let m = ModelCfg::test_preset();
+        let mut b = ChaosBackend::new(flat(), cfg);
+        let counters = b.counters();
+        let mut kv = KvManager::new(m);
+        let toks = vec![0i32; m.decode_batch];
+        let pos = vec![0i32; m.decode_batch];
+        let active = vec![true; m.decode_batch];
+        let mut sig = Vec::with_capacity(calls);
+        for _ in 0..calls {
+            let (errs0, nan0, spk0) =
+                (counters.decode_errs(), counters.nan_rows(), counters.spikes());
+            let _ = b.decode(&toks, &pos, &active, &mut kv);
+            sig.push((
+                counters.decode_errs() > errs0,
+                counters.nan_rows() > nan0,
+                counters.spikes() > spk0,
+            ));
+        }
+        sig
+    }
+
+    #[test]
+    fn identical_seeds_produce_identical_fault_patterns() {
+        let cfg = ChaosCfg::uniform(0xC4A05, 0.3);
+        let a = fault_signature(cfg, 64);
+        let b = fault_signature(cfg, 64);
+        assert_eq!(a, b, "same seed must replay the same chaos");
+        // a different seed gives a different pattern (overwhelmingly)
+        let c = fault_signature(ChaosCfg::uniform(0xC4A06, 0.3), 64);
+        assert_ne!(a, c, "different seeds should diverge");
+        // and some of each fault shape actually fired at rate 0.3
+        let (errs, nans, spikes) = a.iter().fold((0, 0, 0), |(e, n, s), &(fe, fn_, fs)| {
+            (e + fe as u32, n + fn_ as u32, s + fs as u32)
+        });
+        assert!(errs > 0 && nans > 0 && spikes > 0, "{errs}/{nans}/{spikes}");
+    }
+
+    #[test]
+    fn rate_zero_is_a_transparent_passthrough() {
+        let m = ModelCfg::test_preset();
+        let mut plain = FlatBackend { model: m };
+        let mut wrapped = ChaosBackend::new(flat(), ChaosCfg::uniform(7, 0.0));
+        let mut kv1 = KvManager::new(m);
+        let mut kv2 = KvManager::new(m);
+        let toks = vec![0i32; m.decode_batch];
+        let pos = vec![0i32; m.decode_batch];
+        let active = vec![true; m.decode_batch];
+        for _ in 0..8 {
+            let (l1, c1) = plain.decode(&toks, &pos, &active, &mut kv1).unwrap();
+            let (l2, c2) = wrapped.decode(&toks, &pos, &active, &mut kv2).unwrap();
+            assert_eq!(l1, l2);
+            assert_eq!(c1.accel_s, c2.accel_s);
+        }
+        let p = wrapped.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(p.plen, 3);
+        assert_eq!(wrapped.counters().hard_errors(), 0);
+    }
+
+    #[test]
+    fn fault_budget_bounds_hard_errors_only() {
+        let m = ModelCfg::test_preset();
+        let cfg = ChaosCfg {
+            fault_budget: 2,
+            ..ChaosCfg::uniform(11, 1.0) // every call would fault
+        };
+        let mut b = ChaosBackend::new(flat(), cfg);
+        let counters = b.counters();
+        let mut kv = KvManager::new(m);
+        let toks = vec![0i32; m.decode_batch];
+        let pos = vec![0i32; m.decode_batch];
+        let active = vec![true; m.decode_batch];
+        let mut errors = 0;
+        for _ in 0..10 {
+            if b.decode(&toks, &pos, &active, &mut kv).is_err() {
+                errors += 1;
+            }
+        }
+        assert_eq!(errors, 2, "budget caps hard errors");
+        assert_eq!(counters.hard_errors(), 2);
+        // NaN rows and spikes keep firing after the budget is spent
+        assert!(counters.nan_rows() >= 8 - 2, "nan_rows {}", counters.nan_rows());
+        assert!(counters.spikes() >= 8 - 2, "spikes {}", counters.spikes());
+    }
+
+    #[test]
+    fn nan_injection_poisons_exactly_one_active_row() {
+        let m = ModelCfg::test_preset();
+        let cfg = ChaosCfg {
+            prefill_err_rate: 0.0,
+            decode_err_rate: 0.0,
+            spike_rate: 0.0,
+            nan_rate: 1.0,
+            ..ChaosCfg::uniform(3, 0.0)
+        };
+        let mut b = ChaosBackend::new(flat(), cfg);
+        let mut kv = KvManager::new(m);
+        let toks = vec![0i32; m.decode_batch];
+        let pos = vec![0i32; m.decode_batch];
+        // only slot 0 active: the victim draw must respect activity
+        let mut active = vec![false; m.decode_batch];
+        active[0] = true;
+        let (logits, _) = b.decode(&toks, &pos, &active, &mut kv).unwrap();
+        assert!(logits[..m.vocab].iter().all(|v| v.is_nan()), "active row poisoned");
+        assert!(
+            logits[m.vocab..].iter().all(|v| !v.is_nan()),
+            "inactive rows untouched"
+        );
+        // no active slots → nothing to poison, call still succeeds
+        let none = vec![false; m.decode_batch];
+        let (clean, _) = b.decode(&toks, &pos, &none, &mut kv).unwrap();
+        assert!(clean.iter().all(|v| !v.is_nan()));
+        assert_eq!(b.counters().nan_rows(), 1);
+    }
+
+    #[test]
+    fn spike_adds_modeled_time_without_touching_logits() {
+        let m = ModelCfg::test_preset();
+        let cfg = ChaosCfg {
+            prefill_err_rate: 0.0,
+            decode_err_rate: 0.0,
+            nan_rate: 0.0,
+            spike_rate: 1.0,
+            spike_s: 0.25,
+            ..ChaosCfg::uniform(5, 0.0)
+        };
+        let mut b = ChaosBackend::new(flat(), cfg);
+        let mut kv = KvManager::new(m);
+        let toks = vec![0i32; m.decode_batch];
+        let pos = vec![0i32; m.decode_batch];
+        let active = vec![true; m.decode_batch];
+        let (logits, cost) = b.decode(&toks, &pos, &active, &mut kv).unwrap();
+        assert!((cost.accel_s - (1e-4 + 0.25)).abs() < 1e-12);
+        assert!(logits.iter().all(|v| !v.is_nan()));
+        assert_eq!(b.counters().spikes(), 1);
+    }
+
+    #[test]
+    fn burst_prefill_draws_once_per_burst() {
+        // budget 1 + rate 1.0: the first burst faults, the second (and
+        // every later call) runs clean — proving one draw/fault per burst,
+        // not one per prompt
+        let cfg = ChaosCfg { fault_budget: 1, ..ChaosCfg::uniform(9, 1.0) };
+        let mut b = ChaosBackend::new(flat(), cfg);
+        let prompts: Vec<&[i32]> = vec![&[1, 2], &[3, 4], &[5]];
+        assert!(b.prefill_batch(&prompts).is_err());
+        let out = b.prefill_batch(&prompts).expect("budget spent, burst ok");
+        assert_eq!(out.len(), 3);
+        assert_eq!(b.counters().prefill_errs(), 1);
+    }
+}

@@ -30,13 +30,20 @@
 //!     persistent worker pool; bit-exact with `NativeWaqBackend` at any
 //!     shard count (`--backend native-sharded --shards N`).
 //!
+//! Plus one wrapper: [`ChaosBackend`] (module [`chaos`]) composes over any
+//! of the above, injecting seeded deterministic faults (errors, NaN
+//! rows, latency spikes) for robustness testing — `--chaos-seed` /
+//! `--chaos-rate`.
+//!
 //! Future backends (speculative, multi-node) target this trait instead of
 //! the engine internals.
 
+pub mod chaos;
 mod native;
 mod pjrt;
 mod sharded;
 
+pub use chaos::{ChaosBackend, ChaosCfg, ChaosCounters};
 pub use native::{NativeCfg, NativeWaqBackend};
 pub use pjrt::PjrtBackend;
 pub use sharded::ShardedWaqBackend;

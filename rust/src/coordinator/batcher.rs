@@ -4,6 +4,7 @@
 //! latency stays bounded — the policy knob the e2e bench sweeps).
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use super::request::Request;
 
@@ -18,17 +19,60 @@ pub enum AdmitPolicy {
 pub struct Batcher {
     queue: VecDeque<Request>,
     pub policy: AdmitPolicy,
+    /// queue-depth cap for bounded admission (0 = unbounded, the
+    /// pre-admission-control behavior)
+    cap: usize,
     /// monotone admission counter (FIFO fairness check)
     admitted: u64,
 }
 
 impl Batcher {
     pub fn new(policy: AdmitPolicy) -> Self {
-        Batcher { queue: VecDeque::new(), policy, admitted: 0 }
+        Batcher::with_cap(policy, 0)
     }
 
+    /// Bounded batcher: `try_enqueue` refuses pushes past `cap` queued
+    /// requests (`cap == 0` keeps the queue unbounded).
+    pub fn with_cap(policy: AdmitPolicy, cap: usize) -> Self {
+        Batcher { queue: VecDeque::new(), policy, cap, admitted: 0 }
+    }
+
+    /// Unconditional enqueue (internal/test paths that bypass admission
+    /// control — production submission goes through [`Batcher::try_enqueue`]).
     pub fn enqueue(&mut self, r: Request) {
         self.queue.push_back(r);
+    }
+
+    /// Bounded enqueue: hands the request back (`Err`) when the queue is
+    /// at `cap`, so the caller can answer it with a `Rejected` response
+    /// instead of growing the queue without limit.
+    pub fn try_enqueue(&mut self, r: Request) -> Result<(), Request> {
+        if self.cap > 0 && self.queue.len() >= self.cap {
+            return Err(r);
+        }
+        self.queue.push_back(r);
+        Ok(())
+    }
+
+    /// Remove and return every queued request whose deadline has passed
+    /// at `now`, preserving FIFO order of both the removed set and the
+    /// survivors. The engine answers each with `DeadlineExpired` — expiry
+    /// never silently drops a request.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Request> {
+        if self.queue.iter().all(|r| !r.expired(now)) {
+            return Vec::new();
+        }
+        let mut expired = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for r in self.queue.drain(..) {
+            if r.expired(now) {
+                expired.push(r);
+            } else {
+                kept.push_back(r);
+            }
+        }
+        self.queue = kept;
+        expired
     }
 
     pub fn pending(&self) -> usize {
@@ -109,6 +153,50 @@ mod tests {
         assert_eq!(burst.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
         assert_eq!(b.pending(), 0);
         assert!(b.admit(8).is_empty());
+    }
+
+    #[test]
+    fn try_enqueue_enforces_cap_and_returns_request() {
+        let mut b = Batcher::with_cap(AdmitPolicy::FillAll, 2);
+        assert!(b.try_enqueue(req(0)).is_ok());
+        assert!(b.try_enqueue(req(1)).is_ok());
+        let bounced = b.try_enqueue(req(2)).expect_err("queue at cap");
+        assert_eq!(bounced.id, 2, "the rejected request comes back intact");
+        assert_eq!(b.pending(), 2);
+        // admission frees capacity again
+        assert_eq!(b.admit(1).len(), 1);
+        assert!(b.try_enqueue(req(3)).is_ok());
+    }
+
+    #[test]
+    fn cap_zero_is_unbounded() {
+        let mut b = Batcher::with_cap(AdmitPolicy::FillAll, 0);
+        for i in 0..100 {
+            assert!(b.try_enqueue(req(i)).is_ok());
+        }
+        assert_eq!(b.pending(), 100);
+    }
+
+    #[test]
+    fn take_expired_preserves_fifo_of_survivors() {
+        let mut b = Batcher::new(AdmitPolicy::FillAll);
+        // ids 0,2,4 already expired (0ms deadline); 1,3 far-future
+        for i in 0..5u64 {
+            let r = if i % 2 == 0 {
+                req(i).with_deadline_ms(0)
+            } else {
+                req(i).with_deadline_ms(60_000)
+            };
+            b.enqueue(r);
+        }
+        let now = std::time::Instant::now();
+        let expired: Vec<u64> = b.take_expired(now).iter().map(|r| r.id).collect();
+        assert_eq!(expired, vec![0, 2, 4]);
+        assert_eq!(b.pending(), 2);
+        let rest: Vec<u64> = b.admit(10).iter().map(|r| r.id).collect();
+        assert_eq!(rest, vec![1, 3], "survivors keep FIFO order");
+        // no deadlines → fast path returns nothing
+        assert!(b.take_expired(now).is_empty());
     }
 
     #[test]

@@ -13,10 +13,11 @@
 //! `StepCost` reports, so every response carries both measured
 //! wall-clock and modeled accelerator latency/energy.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
+use super::backend::chaos::ChaosCfg;
 use super::backend::{BackendSpec, DecodeBackend};
 use super::batcher::{AdmitPolicy, Batcher};
 use super::kv::KvManager;
@@ -47,6 +48,22 @@ pub struct EngineConfig {
     /// backends. Must be >= 1 — `ShardedWaqBackend::new` rejects 0 with a
     /// real error (and `kllm serve` refuses `--shards 0` up front).
     pub shards: usize,
+    /// Bounded admission (`--queue-cap`): maximum queued (not-yet-admitted)
+    /// requests. A submit arriving with the queue at cap is answered
+    /// *immediately* with [`FinishReason::Rejected`] — backpressure, never
+    /// a silent drop. `0` (default) keeps the queue unbounded.
+    pub queue_cap: usize,
+    /// Default per-request deadline (`--default-deadline-ms`), applied at
+    /// submit to requests that didn't set their own. `0` (default) means
+    /// no deadline. Per-request overrides come through the TCP JSON field
+    /// `deadline_ms` or `Request::with_deadline_ms`.
+    pub default_deadline_ms: u64,
+    /// Deterministic fault injection (`--chaos-seed`/`--chaos-rate`):
+    /// when set, the coordinator wraps the constructed backend in a
+    /// [`super::backend::chaos::ChaosBackend`] injecting seeded prefill /
+    /// decode errors, NaN logit rows, and latency spikes. `None` (default)
+    /// = no injection. Composes with every backend and every `kv_bits`.
+    pub chaos: Option<ChaosCfg>,
 }
 
 impl Default for EngineConfig {
@@ -58,6 +75,9 @@ impl Default for EngineConfig {
             backend: BackendSpec::default(),
             kv_bits: KvBits::Fp32,
             shards: 2,
+            queue_cap: 0,
+            default_deadline_ms: 0,
+            chaos: None,
         }
     }
 }
@@ -68,6 +88,9 @@ struct ActiveReq {
     /// when admission sampled the prefill's token — a request is only
     /// active after its first token exists, so this is never "pending"
     first_token_at: Instant,
+    /// arrival → admission wall-clock (time spent queued), frozen at
+    /// admission so the response reports it regardless of outcome
+    queue_wait_s: f64,
     /// the backend consumed fewer prompt tokens than submitted
     truncated_prompt: bool,
     /// sim-clock marks at admission, so responses report per-request
@@ -90,6 +113,8 @@ pub struct Engine {
     pub stats: EngineStats,
     pub sim: SimTotals,
     rng: Rng,
+    /// deadline applied at submit to requests without one (None = none)
+    default_deadline: Option<Duration>,
 }
 
 impl Engine {
@@ -110,11 +135,13 @@ impl Engine {
         };
         Engine {
             kv,
-            batcher: Batcher::new(cfg.policy),
+            batcher: Batcher::with_cap(cfg.policy, cfg.queue_cap),
             active: (0..m.decode_batch).map(|_| None).collect(),
             stats,
             sim: SimTotals::default(),
             rng: Rng::new(cfg.seed),
+            default_deadline: (cfg.default_deadline_ms > 0)
+                .then(|| Duration::from_millis(cfg.default_deadline_ms)),
             backend,
         }
     }
@@ -139,8 +166,46 @@ impl Engine {
         &self.kv
     }
 
+    /// Unconditional submit (tests/benches): applies the default deadline
+    /// but bypasses the queue cap — the request always enqueues. The
+    /// production path (the coordinator's `Cmd::Submit`) goes through
+    /// [`Engine::try_submit`] so overload produces backpressure.
     pub fn submit(&mut self, r: Request) {
-        self.batcher.enqueue(r);
+        self.batcher.enqueue(self.with_default_deadline(r));
+    }
+
+    /// Bounded submit: enqueues (returning `None`) unless the queue is at
+    /// `EngineConfig::queue_cap`, in which case the request is answered
+    /// *immediately* with the returned [`FinishReason::Rejected`] response
+    /// (counted in `EngineStats::rejected`). Rejected requests never touch
+    /// queue or KV capacity and are never silently dropped.
+    pub fn try_submit(&mut self, r: Request) -> Option<Response> {
+        let r = self.with_default_deadline(r);
+        match self.batcher.try_enqueue(r) {
+            Ok(()) => None,
+            Err(req) => {
+                self.stats.rejected += 1;
+                Some(queued_response(&req, FinishReason::Rejected))
+            }
+        }
+    }
+
+    /// Refuse a request outright (admission closed — e.g. the engine is
+    /// draining): counted in `stats.rejected`, answered immediately with
+    /// a [`FinishReason::Rejected`] response. Unlike [`Engine::try_submit`]
+    /// this never enqueues.
+    pub fn reject(&mut self, req: Request) -> Response {
+        self.stats.rejected += 1;
+        queued_response(&req, FinishReason::Rejected)
+    }
+
+    fn with_default_deadline(&self, mut r: Request) -> Request {
+        if r.deadline.is_none() {
+            if let Some(d) = self.default_deadline {
+                r.deadline = Some(r.arrived + d);
+            }
+        }
+        r
     }
 
     pub fn has_work(&self) -> bool {
@@ -156,8 +221,24 @@ impl Engine {
     }
 
     /// One engine iteration; returns completed responses.
+    ///
+    /// Fault containment: a failed burst prefill, per-request install, or
+    /// decode step answers the affected requests with `Aborted` (counted
+    /// in `prefill_failures` / `step_failures`) and returns `Ok` — the
+    /// engine keeps serving. `step()` only returns `Err` for engine-state
+    /// corruption no response can paper over.
     pub fn step(&mut self) -> Result<Vec<Response>> {
         let mut done = Vec::new();
+
+        // ---- deadline sweep (in-queue expiry) --------------------------
+        // Queued requests past deadline are answered now, before they
+        // can consume a prefill nobody is waiting for. Mid-decode expiry
+        // is handled in `maybe_finish` (partial tokens returned there).
+        let now = Instant::now();
+        for req in self.batcher.take_expired(now) {
+            self.stats.expired += 1;
+            done.push(queued_response(&req, FinishReason::DeadlineExpired));
+        }
 
         // ---- admission (batched prefill) -------------------------------
         // The whole admit burst goes through ONE backend call: the native
@@ -170,20 +251,38 @@ impl Engine {
             let prompts: Vec<&[i32]> = admitted.iter().map(|r| r.prompt.as_slice()).collect();
             match self.backend.prefill_batch(&prompts) {
                 Ok(pres) if pres.len() == admitted.len() => {
+                    let admitted_at = Instant::now();
                     for (req, pre) in admitted.into_iter().zip(pres) {
-                        let slot = self
-                            .kv
-                            .free_slot()
-                            .ok_or_else(|| anyhow!("admit with no free slot"))?;
+                        let queue_wait_s = (admitted_at - req.arrived).as_secs_f64();
+                        let Some(slot) = self.kv.free_slot() else {
+                            // unreachable (admit is bounded by free slots)
+                            // — but an accounting bug must still answer
+                            // the request, not drop it
+                            self.stats.step_failures += 1;
+                            done.push(queued_response(&req, FinishReason::Aborted));
+                            continue;
+                        };
                         // the sim-clock marks are taken before the prefill
                         // cost lands, so each response's modeled delta
                         // includes its own prefill (per-request costs come
                         // from the backend even for a batched burst)
                         let (start_s, start_j) = (self.sim.seconds, self.sim.energy_j);
                         let truncated = pre.plen < req.prompt.len();
-                        self.kv
+                        if let Err(e) = self
+                            .kv
                             .install_prefill(slot, req.id, pre.plen, &pre.k_cache, &pre.v_cache)
-                            .map_err(|e| anyhow!(e))?;
+                        {
+                            // contained: reclaim any partially-appended
+                            // blocks, answer this request, keep the burst
+                            eprintln!(
+                                "engine: prefill install failed for request {} ({e}); aborting it",
+                                req.id
+                            );
+                            self.stats.step_failures += 1;
+                            self.kv.release(slot);
+                            done.push(queued_response(&req, FinishReason::Aborted));
+                            continue;
+                        }
                         self.stats.prefills += 1;
                         if truncated {
                             self.stats.truncated_prompts += 1;
@@ -198,13 +297,14 @@ impl Engine {
                             req,
                             generated: vec![tok],
                             first_token_at: Instant::now(),
+                            queue_wait_s,
                             truncated_prompt: truncated,
                             modeled_start_s: start_s,
                             modeled_start_j: start_j,
                         };
                         self.stats.generated_tokens += 1;
                         // completion checks on the very first token
-                        if let Some(resp) = self.maybe_finish(slot, &mut ar) {
+                        if let Some(resp) = self.maybe_finish(slot, &mut ar, admitted_at) {
                             self.kv.release(slot);
                             done.push(resp);
                         } else {
@@ -230,15 +330,32 @@ impl Engine {
                         admitted.len()
                     );
                     self.stats.prefill_failures += 1;
-                    done.extend(admitted.iter().map(aborted_response));
+                    done.extend(
+                        admitted
+                            .iter()
+                            .map(|r| queued_response(r, FinishReason::Aborted)),
+                    );
                 }
             }
         }
 
         // ---- decode ------------------------------------------------------
+        // Contained: a failed decode step aborts the in-flight requests
+        // (every waiter still gets a response, every KV slot is released)
+        // but does NOT propagate — the engine thread survives and keeps
+        // admitting. Counted in `EngineStats::step_failures`.
         if self.kv.active_count() > 0 {
-            let responses = self.decode_step()?;
-            done.extend(responses);
+            match self.decode_step() {
+                Ok(responses) => done.extend(responses),
+                Err(e) => {
+                    eprintln!(
+                        "engine: decode step failed ({e}); aborting {} in-flight request(s)",
+                        self.kv.active_count()
+                    );
+                    self.stats.step_failures += 1;
+                    done.extend(self.abort_inflight());
+                }
+            }
         }
         // peak_cache_bytes is monotone; the running max just makes the
         // stat robust to any future non-monotone accounting
@@ -287,10 +404,23 @@ impl Engine {
         self.stats.host_waq_s += cost.host_waq_s;
         self.stats.host_shard_crit_s += cost.shard_crit_s;
 
+        let now = Instant::now();
         let mut done = Vec::new();
         for slot in 0..b {
             let Some(mut ar) = self.active[slot].take() else { continue };
-            self.kv.advance(slot).map_err(|e| anyhow!(e))?;
+            if let Err(e) = self.kv.advance(slot) {
+                // contained per-slot: the request was already taken off
+                // `active`, so failing here without answering it would
+                // hang its waiter AND leak the slot — release + Aborted
+                eprintln!(
+                    "engine: slot {slot} advance failed for request {} ({e}); aborting it",
+                    ar.req.id
+                );
+                self.stats.step_failures += 1;
+                self.kv.release(slot);
+                done.push(self.response_for(&mut ar, FinishReason::Aborted));
+                continue;
+            }
             let lrow = &logits[slot * m.vocab..(slot + 1) * m.vocab];
             let tok = self.sample(lrow, ar.req.temperature);
             ar.generated.push(tok);
@@ -298,7 +428,7 @@ impl Engine {
             // no first-token bookkeeping here: admission always records
             // `first_token_at` when it samples the prefill's token, so a
             // decode step can never produce a request's first token
-            if let Some(resp) = self.maybe_finish(slot, &mut ar) {
+            if let Some(resp) = self.maybe_finish(slot, &mut ar, now) {
                 self.kv.release(slot);
                 done.push(resp);
             } else {
@@ -308,7 +438,12 @@ impl Engine {
         Ok(done)
     }
 
-    fn maybe_finish(&mut self, slot: usize, ar: &mut ActiveReq) -> Option<Response> {
+    /// Terminal-state check after each sampled token. Natural completions
+    /// (Eos / MaxTokens / Length) win over deadline expiry when both hold
+    /// — the work is done either way, and "completed" is the more useful
+    /// label. Mid-decode expiry returns the partial tokens generated so
+    /// far; the caller releases the KV slot on any `Some`.
+    fn maybe_finish(&mut self, slot: usize, ar: &mut ActiveReq, now: Instant) -> Option<Response> {
         let last = *ar.generated.last().unwrap();
         let reason = if ar.req.eos_token == Some(last) {
             Some(FinishReason::Eos)
@@ -316,11 +451,17 @@ impl Engine {
             Some(FinishReason::MaxTokens)
         } else if self.kv.exhausted(slot) {
             Some(FinishReason::Length)
+        } else if ar.req.expired(now) {
+            Some(FinishReason::DeadlineExpired)
         } else {
             None
         };
         reason.map(|fr| {
-            self.stats.completed += 1;
+            if fr == FinishReason::DeadlineExpired {
+                self.stats.expired += 1;
+            } else {
+                self.stats.completed += 1;
+            }
             self.response_for(ar, fr)
         })
     }
@@ -336,6 +477,7 @@ impl Engine {
             finish_reason: fr,
             truncated_prompt: ar.truncated_prompt,
             ttft_s: (ar.first_token_at - ar.req.arrived).as_secs_f64(),
+            queue_wait_s: ar.queue_wait_s,
             total_s: ar.req.arrived.elapsed().as_secs_f64(),
             modeled_accel_s: self.sim.seconds - ar.modeled_start_s,
             modeled_accel_j: self.sim.energy_j - ar.modeled_start_j,
@@ -374,11 +516,11 @@ impl Engine {
         (logits.len() - 1) as i32
     }
 
-    /// Abort everything in flight (shutdown path). In-flight requests
-    /// always report a real TTFT (their first token was sampled at
-    /// admission) and their modeled-cost deltas so far; queued requests
-    /// report zeros.
-    pub fn abort_all(&mut self) -> Vec<Response> {
+    /// Abort only the *in-flight* (slot-holding) requests, releasing
+    /// their KV slots; the queue is untouched. This is the decode-failure
+    /// containment path: the blast radius of a bad step is the batch that
+    /// was in it, not the requests still waiting.
+    pub fn abort_inflight(&mut self) -> Vec<Response> {
         let mut out = Vec::new();
         for slot in 0..self.active.len() {
             if let Some(mut ar) = self.active[slot].take() {
@@ -386,25 +528,37 @@ impl Engine {
                 out.push(self.response_for(&mut ar, FinishReason::Aborted));
             }
         }
+        out
+    }
+
+    /// Abort everything in flight AND queued (shutdown / drain-deadline
+    /// path). In-flight requests always report a real TTFT (their first
+    /// token was sampled at admission) and their modeled-cost deltas so
+    /// far; queued requests report zeros.
+    pub fn abort_all(&mut self) -> Vec<Response> {
+        let mut out = self.abort_inflight();
         for req in self.batcher.drain() {
-            out.push(aborted_response(&req));
+            out.push(queued_response(&req, FinishReason::Aborted));
         }
         out
     }
 }
 
-/// Response for a request aborted before any compute landed for it (a
-/// failed burst prefill, or a queued request drained at shutdown): no
-/// tokens, zero TTFT, zero modeled deltas.
-fn aborted_response(req: &Request) -> Response {
+/// Response for a request that never held a KV slot (rejected at submit,
+/// expired in-queue, failed burst prefill, or drained at shutdown): no
+/// tokens, zero TTFT, zero modeled deltas, and its whole lifetime counts
+/// as queue wait.
+fn queued_response(req: &Request, fr: FinishReason) -> Response {
+    let total_s = req.arrived.elapsed().as_secs_f64();
     Response {
         id: req.id,
         prompt_len: req.prompt.len(),
         tokens: vec![],
-        finish_reason: FinishReason::Aborted,
+        finish_reason: fr,
         truncated_prompt: false,
         ttft_s: 0.0,
-        total_s: req.arrived.elapsed().as_secs_f64(),
+        queue_wait_s: total_s,
+        total_s,
         modeled_accel_s: 0.0,
         modeled_accel_j: 0.0,
     }
@@ -496,6 +650,179 @@ mod tests {
             let m = self.model;
             Ok((vec![f32::NAN; m.decode_batch * m.vocab], StepCost::default()))
         }
+    }
+
+    /// Well-behaved scripted backend that can be told to fail decode on
+    /// its Nth call — the minimal engine-fault fixture (the full seeded
+    /// fault matrix lives in `backend::chaos`).
+    struct ScriptedBackend {
+        model: ModelCfg,
+        decode_calls: usize,
+        fail_decode_on: Option<usize>,
+    }
+
+    impl ScriptedBackend {
+        fn ok(model: ModelCfg) -> Self {
+            ScriptedBackend { model, decode_calls: 0, fail_decode_on: None }
+        }
+    }
+
+    impl DecodeBackend for ScriptedBackend {
+        fn spec(&self) -> BackendSpec {
+            BackendSpec::Native(WaqBackend::Packed)
+        }
+
+        fn model(&self) -> ModelCfg {
+            self.model
+        }
+
+        fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+            let m = self.model;
+            let plen = prompt.len().clamp(1, m.seq_len - 1);
+            let shape = [m.n_layers, 1, m.n_heads, m.seq_len, m.head_dim];
+            let mut logits = vec![0.0f32; m.vocab];
+            logits[1] = 1.0;
+            Ok(PrefillOut {
+                plen,
+                logits,
+                k_cache: HostTensor::zeros(&shape),
+                v_cache: HostTensor::zeros(&shape),
+                cost: StepCost::default(),
+            })
+        }
+
+        fn decode(
+            &mut self,
+            _toks: &[i32],
+            _pos: &[i32],
+            _active: &[bool],
+            _kv: &mut KvManager,
+        ) -> Result<(Vec<f32>, StepCost)> {
+            self.decode_calls += 1;
+            if self.fail_decode_on == Some(self.decode_calls) {
+                anyhow::bail!("scripted decode fault (call {})", self.decode_calls);
+            }
+            let m = self.model;
+            let mut logits = vec![0.0f32; m.decode_batch * m.vocab];
+            for s in 0..m.decode_batch {
+                logits[s * m.vocab + 2] = 1.0;
+            }
+            Ok((logits, StepCost::default()))
+        }
+    }
+
+    #[test]
+    fn queue_cap_rejects_immediately_and_counts() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig { queue_cap: 2, ..Default::default() };
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
+        assert!(e.try_submit(Request::new(1, vec![1, 2], 2)).is_none());
+        assert!(e.try_submit(Request::new(2, vec![1, 2], 2)).is_none());
+        let r = e.try_submit(Request::new(3, vec![1, 2], 2)).expect("queue full");
+        assert_eq!(r.id, 3);
+        assert_eq!(r.finish_reason, FinishReason::Rejected);
+        assert!(r.tokens.is_empty());
+        assert_eq!(e.stats.rejected, 1);
+        // the two admitted requests still complete; the rejected one is
+        // not counted as completed
+        let done = e.run_to_completion().expect("run");
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|r| r.finish_reason == FinishReason::MaxTokens));
+        assert_eq!(e.stats.completed, 2);
+        assert_eq!(e.kv().cache().in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn deadline_expires_in_queue_before_any_compute() {
+        let cfg = ModelCfg::test_preset();
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &EngineConfig::default());
+        e.submit(Request::new(1, vec![1, 2], 4).with_deadline_ms(0));
+        e.submit(Request::new(2, vec![1, 2], 4)); // no deadline
+        let done = e.run_to_completion().expect("run");
+        let exp = done.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(exp.finish_reason, FinishReason::DeadlineExpired);
+        assert!(exp.tokens.is_empty(), "expired in-queue: no tokens");
+        assert!(exp.queue_wait_s > 0.0 && (exp.queue_wait_s - exp.total_s).abs() < 1e-9);
+        let ok = done.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(ok.finish_reason, FinishReason::MaxTokens);
+        assert_eq!(e.stats.expired, 1);
+        assert_eq!(e.stats.prefills, 1, "expired request never prefilled");
+        assert_eq!(e.kv().cache().in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn deadline_expires_mid_decode_with_partial_tokens_and_slot_reclaim() {
+        let cfg = ModelCfg::test_preset();
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &EngineConfig::default());
+        // deadline passes after admission but long before 1000 tokens
+        e.submit(Request::new(1, vec![1, 2, 3], 1000).with_deadline_ms(30));
+        let first = e.step().expect("admit step");
+        assert!(first.is_empty(), "still decoding");
+        assert_eq!(e.active_count(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let mut done = Vec::new();
+        while e.has_work() {
+            done.extend(e.step().expect("step"));
+        }
+        assert_eq!(done.len(), 1);
+        let r = &done[0];
+        assert_eq!(r.finish_reason, FinishReason::DeadlineExpired);
+        assert!(!r.tokens.is_empty(), "mid-decode expiry returns partial tokens");
+        assert!(r.tokens.len() < 1000);
+        assert_eq!(e.stats.expired, 1);
+        assert_eq!(e.stats.completed, 0);
+        assert_eq!(e.kv().cache().in_use_blocks(), 0, "KV slot reclaimed");
+    }
+
+    #[test]
+    fn default_deadline_applies_only_when_request_has_none() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig { default_deadline_ms: 60_000, ..Default::default() };
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
+        e.submit(Request::new(1, vec![1], 2)); // gets the 60s default
+        e.submit(Request::new(2, vec![1], 2).with_deadline_ms(0)); // keeps its own
+        let done = e.run_to_completion().expect("run");
+        assert_eq!(
+            done.iter().find(|r| r.id == 1).unwrap().finish_reason,
+            FinishReason::MaxTokens
+        );
+        assert_eq!(
+            done.iter().find(|r| r.id == 2).unwrap().finish_reason,
+            FinishReason::DeadlineExpired
+        );
+    }
+
+    /// The engine-fault containment contract: a decode error aborts the
+    /// batch that was in flight (each waiter answered `Aborted`, slots
+    /// released) but the engine keeps serving — the next submit completes.
+    #[test]
+    fn decode_fault_aborts_inflight_but_engine_survives() {
+        let cfg = ModelCfg::test_preset();
+        let backend = ScriptedBackend {
+            model: cfg,
+            decode_calls: 0,
+            fail_decode_on: Some(2),
+        };
+        let mut e = Engine::new(
+            Box::new(backend),
+            &EngineConfig { policy: AdmitPolicy::FillAll, ..Default::default() },
+        );
+        e.submit(Request::new(1, vec![1, 2], 50));
+        e.submit(Request::new(2, vec![3, 4], 50));
+        let done = e.run_to_completion().expect("contained run");
+        assert_eq!(done.len(), 2);
+        for r in &done {
+            assert_eq!(r.finish_reason, FinishReason::Aborted, "request {}", r.id);
+            assert!(!r.tokens.is_empty(), "partial tokens survive the abort");
+        }
+        assert_eq!(e.stats.step_failures, 1);
+        assert_eq!(e.kv().cache().in_use_blocks(), 0, "slots released on abort");
+        // the engine is still alive: a fresh request completes normally
+        e.submit(Request::new(3, vec![5], 3));
+        let after = e.run_to_completion().expect("post-fault run");
+        assert_eq!(after.len(), 1);
+        assert_eq!(after[0].finish_reason, FinishReason::MaxTokens);
+        assert_eq!(e.stats.completed, 1);
     }
 
     /// NaN logits must never panic the engine thread — greedy picks the

@@ -13,8 +13,8 @@ pub mod request;
 pub mod server;
 
 pub use backend::{
-    probe_decode_logits, BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend,
-    PjrtBackend, PrefillOut, ShardedWaqBackend, StepCost,
+    probe_decode_logits, BackendSpec, ChaosBackend, ChaosCfg, ChaosCounters, DecodeBackend,
+    NativeCfg, NativeWaqBackend, PjrtBackend, PrefillOut, ShardedWaqBackend, StepCost,
 };
 pub use batcher::{AdmitPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, SimTotals};
@@ -22,4 +22,4 @@ pub use kv::KvManager;
 // the KV precision knob is part of the engine-config surface
 pub use crate::kvcache::KvBits;
 pub use request::{EngineStats, FinishReason, Request, RequestId, Response};
-pub use server::{serve_tcp, Coordinator};
+pub use server::{serve_tcp, serve_tcp_with, Coordinator, DrainReport, TcpCfg};

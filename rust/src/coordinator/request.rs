@@ -14,6 +14,14 @@ pub struct Request {
     /// stop when this token is produced (None = run to max_new_tokens)
     pub eos_token: Option<i32>,
     pub arrived: Instant,
+    /// Absolute completion deadline. `None` = no deadline (the engine
+    /// substitutes `EngineConfig::default_deadline_ms` at submit when that
+    /// knob is set). A request past its deadline is answered with
+    /// [`FinishReason::DeadlineExpired`] — in-queue (no tokens) or
+    /// mid-decode (partial tokens returned, KV slot reclaimed) — instead
+    /// of occupying capacity nobody is waiting for anymore. Set per
+    /// request over TCP with the `deadline_ms` JSON field.
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
@@ -25,7 +33,19 @@ impl Request {
             temperature: 0.0,
             eos_token: None,
             arrived: Instant::now(),
+            deadline: None,
         }
+    }
+
+    /// Deadline `ms` milliseconds after arrival (builder-style).
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline = Some(self.arrived + std::time::Duration::from_millis(ms));
+        self
+    }
+
+    /// True when the request's deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
     }
 }
 
@@ -50,6 +70,12 @@ pub struct Response {
     /// so TTFT is set exactly once, at admission (queue wait + prefill) —
     /// decode steps can never be the first token.
     pub ttft_s: f64,
+    /// Measured wall-clock from arrival to admission (time spent in the
+    /// batcher queue). For requests that never reached a slot (rejected,
+    /// expired in-queue, or drained while queued) this equals `total_s` —
+    /// their whole life was queue wait. The soak bench publishes the
+    /// p50/p99 of this field.
+    pub queue_wait_s: f64,
     pub total_s: f64,
     /// modeled OASIS accelerator time/energy for the same work — the
     /// per-request delta of the sim clock (this request's prefill plus
@@ -58,14 +84,64 @@ pub struct Response {
     pub modeled_accel_j: f64,
 }
 
+/// Why a request left the engine. Every submitted request receives
+/// **exactly one** terminal response carrying one of these — the
+/// serving-robustness invariant the soak test pins. `MaxTokens`, `Eos`,
+/// and `Length` are the natural completions; the rest are the
+/// admission-control / fault-containment outcomes.
+///
+/// Over the TCP front-end the reason is reported as the `finish_reason`
+/// string field (see [`FinishReason::name`]); `Rejected` replies
+/// additionally carry `"rejected": true` so load-shedding is trivially
+/// machine-detectable.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
     MaxTokens,
     Eos,
     /// context window exhausted
     Length,
-    /// engine shut down before completion
+    /// engine shut down, drain deadline passed, or a contained engine
+    /// fault aborted the request before natural completion
     Aborted,
+    /// Admission control: the queue was at `EngineConfig::queue_cap` (or
+    /// admission was closed by a drain) when the request arrived. The
+    /// response is immediate — rejected requests are never silently
+    /// dropped and never consume queue or KV capacity. Counted in
+    /// [`EngineStats::rejected`].
+    Rejected,
+    /// The request's deadline passed before completion: in-queue (no
+    /// tokens) or mid-decode (the tokens generated so far are returned
+    /// and the KV slot is reclaimed). Counted in [`EngineStats::expired`].
+    DeadlineExpired,
+}
+
+impl FinishReason {
+    /// Stable machine-readable name (the TCP `finish_reason` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::Eos => "eos",
+            FinishReason::Length => "length",
+            FinishReason::Aborted => "aborted",
+            FinishReason::Rejected => "rejected",
+            FinishReason::DeadlineExpired => "deadline_expired",
+        }
+    }
+
+    /// Natural completion (ran to its stopping condition) vs an
+    /// admission-control / fault / shutdown outcome.
+    pub fn is_natural(&self) -> bool {
+        matches!(
+            self,
+            FinishReason::MaxTokens | FinishReason::Eos | FinishReason::Length
+        )
+    }
+}
+
+impl std::fmt::Display for FinishReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -79,6 +155,24 @@ pub struct EngineStats {
     /// returned an error): every request of such a burst was answered
     /// with an `Aborted` response instead of being dropped.
     pub prefill_failures: u64,
+    /// Contained engine faults: a failed decode step (or a failed
+    /// per-request prefill install) that aborted the in-flight requests
+    /// it touched but did NOT kill the engine — the engine answered every
+    /// affected waiter with `Aborted` and kept serving.
+    pub step_failures: u64,
+    /// Requests answered with [`FinishReason::Rejected`] by admission
+    /// control (queue at `queue_cap`, or submitted during a drain).
+    pub rejected: u64,
+    /// Requests answered with [`FinishReason::DeadlineExpired`] (in-queue
+    /// or mid-decode).
+    pub expired: u64,
+    /// TCP listener `accept()` errors (the listener logs and keeps
+    /// accepting instead of silently swallowing them). Maintained by the
+    /// front-end; merged into coordinator-level stats reads.
+    pub accept_errors: u64,
+    /// TCP connections refused because `--max-conns` handler threads were
+    /// already live (each got an immediate structured rejection line).
+    pub conn_rejected: u64,
     pub generated_tokens: u64,
     /// decode-step batch occupancy sum (for mean occupancy)
     pub occupancy_sum: u64,
@@ -114,5 +208,39 @@ impl EngineStats {
         } else {
             self.occupancy_sum as f64 / self.decode_steps as f64
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_reason_names_are_stable_and_classified() {
+        let all = [
+            (FinishReason::MaxTokens, "max_tokens", true),
+            (FinishReason::Eos, "eos", true),
+            (FinishReason::Length, "length", true),
+            (FinishReason::Aborted, "aborted", false),
+            (FinishReason::Rejected, "rejected", false),
+            (FinishReason::DeadlineExpired, "deadline_expired", false),
+        ];
+        for (fr, name, natural) in all {
+            assert_eq!(fr.name(), name);
+            assert_eq!(fr.to_string(), name);
+            assert_eq!(fr.is_natural(), natural, "{name}");
+        }
+    }
+
+    #[test]
+    fn deadline_expiry_boundaries() {
+        let now = Instant::now();
+        let r = Request::new(1, vec![1], 4);
+        assert!(r.deadline.is_none());
+        assert!(!r.expired(now), "no deadline never expires");
+        let r = r.with_deadline_ms(0);
+        assert!(r.expired(r.arrived), "0ms deadline is already due at arrival");
+        let far = Request::new(2, vec![1], 4).with_deadline_ms(60_000);
+        assert!(!far.expired(Instant::now()));
     }
 }

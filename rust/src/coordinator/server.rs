@@ -1,29 +1,81 @@
 //! Coordinator front-end: the leader thread that owns the Engine and its
 //! decode backend (the PJRT runtime is not Send, so backends are built on
-//! — and never leave — that thread) plus a channel-based submission API
-//! and an optional TCP JSON-lines listener.
+//! — and never leave — that thread) plus a channel-based submission API,
+//! graceful drain, and an optional TCP JSON-lines listener.
+//!
+//! ## TCP JSON-lines schema
+//!
+//! Request (one JSON object per line):
+//! ```json
+//! {"prompt": [1, 2, 3], "max_new_tokens": 16, "temperature": 0.0,
+//!  "deadline_ms": 500}
+//! ```
+//! `prompt` is required; `max_new_tokens` defaults to 16, `temperature`
+//! to 0.0 (greedy), and `deadline_ms` (optional) bounds this request's
+//! end-to-end latency — overriding the server-wide
+//! `--default-deadline-ms` when present.
+//!
+//! Reply (one JSON object per line, always exactly one per request line):
+//! ```json
+//! {"id": 7, "tokens": [5, 9], "finish_reason": "max_tokens",
+//!  "rejected": false, "truncated_prompt": false, "queue_wait_s": 0.00012,
+//!  "ttft_s": 0.0031, "total_s": 0.0094, "modeled_accel_s": 0.0021}
+//! ```
+//! `finish_reason` is one of `max_tokens | eos | length | aborted |
+//! rejected | deadline_expired` ([`FinishReason::name`]); `rejected` is
+//! `true` exactly when admission control refused the request (queue at
+//! `--queue-cap`, or the server is draining), so load-shedding is
+//! machine-detectable without string matching. Malformed or failed
+//! request lines get `{"error": "<json-escaped message>"}` instead.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::backend::{
-    BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PjrtBackend, ShardedWaqBackend,
+    BackendSpec, ChaosBackend, DecodeBackend, NativeCfg, NativeWaqBackend, PjrtBackend,
+    ShardedWaqBackend,
 };
 use super::engine::{Engine, EngineConfig, SimTotals};
-use super::request::{EngineStats, Request, RequestId, Response};
+use super::request::{EngineStats, FinishReason, Request, RequestId, Response};
 use crate::gemm::WaqBackend;
 use crate::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
-use crate::util::json::Json;
+use crate::util::json::{self, Json};
 
 enum Cmd {
     Submit(Request, Sender<Response>),
     Stats(Sender<(EngineStats, SimTotals)>),
+    /// Graceful drain: stop admitting (new submits get `Rejected`),
+    /// finish in-flight work under the deadline, abort the rest, reply
+    /// with a [`DrainReport`], then exit the engine thread.
+    Drain(Duration, Sender<DrainReport>),
     Shutdown,
+}
+
+/// What a graceful drain accomplished (the `kllm serve` shutdown dump and
+/// the soak bench's drain row).
+#[derive(Clone, Debug)]
+pub struct DrainReport {
+    /// Requests that reached a *natural* completion during the drain
+    /// window (max_tokens / eos / length).
+    pub finished: u64,
+    /// Requests aborted when the drain deadline cut them off (in-flight
+    /// and still-queued; each waiter got an `Aborted` response).
+    pub aborted: u64,
+    /// Wall-clock the drain took.
+    pub drain_s: f64,
+    /// KV blocks still held after the drain — must be 0; the soak test
+    /// asserts it (a leak here means a slot escaped release).
+    pub in_use_blocks: usize,
+    /// Final engine stats (submits arriving mid-drain are counted in
+    /// `stats.rejected`).
+    pub stats: EngineStats,
+    pub sim: SimTotals,
 }
 
 /// Where the engine thread finds the model description: a preset name
@@ -34,9 +86,19 @@ enum EngineSource {
     Manifest(Manifest),
 }
 
+/// Listener-side counters (incremented on the TCP threads, merged into
+/// `EngineStats` by `Coordinator::stats`/`drain` — the engine thread
+/// never sees them).
+#[derive(Debug, Default)]
+struct NetCounters {
+    accept_errors: AtomicU64,
+    conn_rejected: AtomicU64,
+}
+
 pub struct Coordinator {
     tx: Sender<Cmd>,
     next_id: Arc<AtomicU64>,
+    net: Arc<NetCounters>,
     handle: Option<JoinHandle<Result<()>>>,
 }
 
@@ -76,6 +138,7 @@ impl Coordinator {
         Ok(Coordinator {
             tx,
             next_id: Arc::new(AtomicU64::new(1)),
+            net: Arc::new(NetCounters::default()),
             handle: Some(handle),
         })
     }
@@ -86,9 +149,27 @@ impl Coordinator {
         max_new_tokens: usize,
         temperature: f32,
     ) -> Result<(RequestId, Receiver<Response>)> {
+        self.submit_with(prompt, max_new_tokens, temperature, None)
+    }
+
+    /// Full-surface submit: like [`Coordinator::submit_async`] plus an
+    /// optional per-request deadline (milliseconds from now) overriding
+    /// the engine's `default_deadline_ms`. Exactly one `Response` arrives
+    /// on the returned receiver — including when the request is rejected
+    /// by admission control or expires before decoding.
+    pub fn submit_with(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        temperature: f32,
+        deadline_ms: Option<u64>,
+    ) -> Result<(RequestId, Receiver<Response>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = Request::new(id, prompt, max_new_tokens);
         req.temperature = temperature;
+        if let Some(ms) = deadline_ms {
+            req = req.with_deadline_ms(ms);
+        }
         let (rtx, rrx) = channel();
         self.tx
             .send(Cmd::Submit(req, rtx))
@@ -105,7 +186,30 @@ impl Coordinator {
     pub fn stats(&self) -> Result<(EngineStats, SimTotals)> {
         let (tx, rx) = channel();
         self.tx.send(Cmd::Stats(tx)).map_err(|_| anyhow!("engine gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine gone"))
+        let (mut stats, sim) = rx.recv().map_err(|_| anyhow!("engine gone"))?;
+        self.merge_net(&mut stats);
+        Ok((stats, sim))
+    }
+
+    /// Graceful drain (the SIGTERM-equivalent path): admission closes
+    /// (submits arriving from now on are answered `Rejected`), in-flight
+    /// and queued work keeps stepping until done or until `limit`
+    /// elapses, stragglers are answered `Aborted`, and the engine thread
+    /// exits. Every waiter is answered — drain never strands a request.
+    /// The coordinator stays usable only for `shutdown()`/Drop afterwards.
+    pub fn drain(&self, limit: Duration) -> Result<DrainReport> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Drain(limit, tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        let mut report = rx.recv().map_err(|_| anyhow!("engine died mid-drain"))?;
+        self.merge_net(&mut report.stats);
+        Ok(report)
+    }
+
+    fn merge_net(&self, stats: &mut EngineStats) {
+        stats.accept_errors = self.net.accept_errors.load(Ordering::Relaxed);
+        stats.conn_rejected = self.net.conn_rejected.load(Ordering::Relaxed);
     }
 
     pub fn shutdown(mut self) -> Result<()> {
@@ -128,18 +232,20 @@ impl Drop for Coordinator {
 
 /// Construct the configured decode backend on the engine thread (the PJRT
 /// runtime is not Send; the native backend simply has no reason to move).
+/// When `cfg.chaos` is set, the backend is wrapped in a fault-injecting
+/// [`ChaosBackend`] — chaos composes over every backend uniformly.
 fn build_backend(
     source: &EngineSource,
     params: &ParamSet,
     cfg: &EngineConfig,
 ) -> Result<Box<dyn DecodeBackend>> {
-    match cfg.backend {
+    let inner: Box<dyn DecodeBackend> = match cfg.backend {
         BackendSpec::Pjrt(waq) => {
             let rt = match source {
                 EngineSource::Preset(p) => Runtime::for_preset(p)?,
                 EngineSource::Manifest(m) => Runtime::new(&m.dir)?,
             };
-            Ok(Box::new(PjrtBackend::new(rt, params, waq, cfg.mode)?))
+            Box::new(PjrtBackend::new(rt, params, waq, cfg.mode)?)
         }
         BackendSpec::Native(waq) => {
             let manifest = native_manifest(source)?;
@@ -148,7 +254,7 @@ fn build_backend(
                 params,
                 NativeCfg::from_mode(waq, cfg.mode),
             )?;
-            Ok(Box::new(native))
+            Box::new(native)
         }
         BackendSpec::NativeSharded => {
             let manifest = native_manifest(source)?;
@@ -158,9 +264,13 @@ fn build_backend(
                 NativeCfg::from_mode(WaqBackend::Packed, cfg.mode),
                 cfg.shards,
             )?;
-            Ok(Box::new(sharded))
+            Box::new(sharded)
         }
-    }
+    };
+    Ok(match cfg.chaos {
+        Some(chaos_cfg) => Box::new(ChaosBackend::new(inner, chaos_cfg)),
+        None => inner,
+    })
 }
 
 /// Resolve the manifest for a native (artifact-free) backend.
@@ -168,6 +278,19 @@ fn native_manifest(source: &EngineSource) -> Result<Manifest> {
     match source {
         EngineSource::Preset(p) => Manifest::load(&artifacts_dir(p)).map_err(|e| anyhow!(e)),
         EngineSource::Manifest(m) => Ok(m.clone()),
+    }
+}
+
+/// What the command handler tells the engine loop to do next.
+enum Flow {
+    Continue,
+    Shutdown,
+    Drain(Duration, Sender<DrainReport>),
+}
+
+fn deliver(waiters: &mut HashMap<RequestId, Sender<Response>>, resp: Response) {
+    if let Some(tx) = waiters.remove(&resp.id) {
+        tx.send(resp).ok();
     }
 }
 
@@ -189,29 +312,37 @@ fn engine_thread(
     ready.send(Ok(())).ok();
 
     let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
-    // helper: handle one command; returns false on shutdown
+    // helper: handle one command
     fn handle(
         engine: &mut Engine,
         waiters: &mut HashMap<RequestId, Sender<Response>>,
         cmd: Cmd,
-    ) -> bool {
+    ) -> Flow {
         match cmd {
             Cmd::Submit(req, tx) => {
-                waiters.insert(req.id, tx);
-                engine.submit(req);
-                true
+                let id = req.id;
+                match engine.try_submit(req) {
+                    // queue full: the rejection response goes straight
+                    // back — the waiter map never sees the request
+                    Some(reject) => {
+                        tx.send(reject).ok();
+                    }
+                    None => {
+                        waiters.insert(id, tx);
+                    }
+                }
+                Flow::Continue
             }
             Cmd::Stats(tx) => {
                 tx.send((engine.stats.clone(), engine.sim)).ok();
-                true
+                Flow::Continue
             }
+            Cmd::Drain(limit, tx) => Flow::Drain(limit, tx),
             Cmd::Shutdown => {
                 for resp in engine.abort_all() {
-                    if let Some(tx) = waiters.remove(&resp.id) {
-                        tx.send(resp).ok();
-                    }
+                    deliver(waiters, resp);
                 }
-                false
+                Flow::Shutdown
             }
         }
     }
@@ -220,11 +351,14 @@ fn engine_thread(
         // drain every queued command without blocking
         loop {
             match rx.try_recv() {
-                Ok(cmd) => {
-                    if !handle(&mut engine, &mut waiters, cmd) {
+                Ok(cmd) => match handle(&mut engine, &mut waiters, cmd) {
+                    Flow::Continue => {}
+                    Flow::Shutdown => return Ok(()),
+                    Flow::Drain(limit, tx) => {
+                        run_drain(&mut engine, &mut waiters, &rx, limit, tx);
                         return Ok(());
                     }
-                }
+                },
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     handle(&mut engine, &mut waiters, Cmd::Shutdown);
@@ -233,19 +367,34 @@ fn engine_thread(
             }
         }
         if engine.has_work() {
-            for resp in engine.step()? {
-                if let Some(tx) = waiters.remove(&resp.id) {
-                    tx.send(resp).ok();
+            // step() contains backend faults internally; an Err here is
+            // unrecoverable engine-state corruption — still answer every
+            // waiter before surfacing it, so nobody hangs on a dead thread
+            match engine.step() {
+                Ok(responses) => {
+                    for resp in responses {
+                        deliver(&mut waiters, resp);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("engine: unrecoverable step error: {e}");
+                    for resp in engine.abort_all() {
+                        deliver(&mut waiters, resp);
+                    }
+                    return Err(e);
                 }
             }
         } else {
             // idle: block for the next command
             match rx.recv() {
-                Ok(cmd) => {
-                    if !handle(&mut engine, &mut waiters, cmd) {
+                Ok(cmd) => match handle(&mut engine, &mut waiters, cmd) {
+                    Flow::Continue => {}
+                    Flow::Shutdown => return Ok(()),
+                    Flow::Drain(limit, tx) => {
+                        run_drain(&mut engine, &mut waiters, &rx, limit, tx);
                         return Ok(());
                     }
-                }
+                },
                 Err(_) => {
                     handle(&mut engine, &mut waiters, Cmd::Shutdown);
                     return Ok(());
@@ -255,25 +404,138 @@ fn engine_thread(
     }
 }
 
+/// The drain procedure: admission is closed (new submits answered
+/// `Rejected` immediately), in-flight + queued work steps until idle or
+/// the deadline, stragglers are aborted, and every collected report
+/// channel gets the same [`DrainReport`]. Runs on the engine thread; the
+/// thread exits after it returns.
+fn run_drain(
+    engine: &mut Engine,
+    waiters: &mut HashMap<RequestId, Sender<Response>>,
+    rx: &Receiver<Cmd>,
+    limit: Duration,
+    tx: Sender<DrainReport>,
+) {
+    let started = Instant::now();
+    let mut report_txs = vec![tx];
+    let mut finished = 0u64;
+    let mut cut_short = false;
+    loop {
+        // commands keep arriving mid-drain: reject submits, answer stats,
+        // collect concurrent drain requests, honor a hard shutdown
+        loop {
+            match rx.try_recv() {
+                Ok(Cmd::Submit(req, rtx)) => {
+                    rtx.send(engine.reject(req)).ok();
+                }
+                Ok(Cmd::Stats(stx)) => {
+                    stx.send((engine.stats.clone(), engine.sim)).ok();
+                }
+                Ok(Cmd::Drain(_, dtx)) => report_txs.push(dtx),
+                Ok(Cmd::Shutdown) => cut_short = true,
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        if cut_short || !engine.has_work() || started.elapsed() >= limit {
+            break;
+        }
+        match engine.step() {
+            Ok(responses) => {
+                for resp in responses {
+                    if resp.finish_reason.is_natural() {
+                        finished += 1;
+                    }
+                    deliver(waiters, resp);
+                }
+            }
+            Err(e) => {
+                eprintln!("engine: step error during drain ({e}); aborting the rest");
+                break;
+            }
+        }
+    }
+    let mut aborted = 0u64;
+    for resp in engine.abort_all() {
+        aborted += 1;
+        deliver(waiters, resp);
+    }
+    let report = DrainReport {
+        finished,
+        aborted,
+        drain_s: started.elapsed().as_secs_f64(),
+        in_use_blocks: engine.kv().cache().in_use_blocks(),
+        stats: engine.stats.clone(),
+        sim: engine.sim,
+    };
+    for rtx in report_txs {
+        rtx.send(report.clone()).ok();
+    }
+}
+
 // ---------------------------------------------------------------------------
 // TCP JSON-lines front-end
 // ---------------------------------------------------------------------------
 
-/// Serve `{"prompt": [ids...], "max_new_tokens": n}` lines over TCP,
-/// responding with `{"id":..,"tokens":[..],"truncated_prompt":..,
-/// "ttft_s":..,"total_s":..}`.
-/// Returns the bound port. Runs until the listener thread is dropped with
-/// the process (demo front-end; the in-process API is the primary one).
+/// Listener hardening knobs (`--max-conns`, `--read-timeout-ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct TcpCfg {
+    /// Maximum concurrent connection-handler threads; excess connections
+    /// get an immediate structured rejection line and are closed (counted
+    /// in `EngineStats::conn_rejected`). `0` = unlimited.
+    pub max_conns: usize,
+    /// Per-read socket timeout so a dead client can't pin a handler
+    /// thread forever; a timed-out connection is closed cleanly.
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for TcpCfg {
+    fn default() -> Self {
+        TcpCfg { max_conns: 64, read_timeout: Some(Duration::from_secs(30)) }
+    }
+}
+
+/// Serve the JSON-lines protocol (see the module docs for the schema)
+/// with default hardening ([`TcpCfg::default`]). Returns the bound port.
 pub fn serve_tcp(coord: Arc<Coordinator>, port: u16) -> Result<u16> {
+    serve_tcp_with(coord, port, TcpCfg::default())
+}
+
+/// [`serve_tcp`] with explicit listener hardening. Accept errors are
+/// counted (`EngineStats::accept_errors`) and logged — never silently
+/// swallowed — and the listener keeps accepting after them.
+pub fn serve_tcp_with(coord: Arc<Coordinator>, port: u16, cfg: TcpCfg) -> Result<u16> {
+    use std::io::Write;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
     let actual = listener.local_addr()?.port();
+    let net = coord.net.clone();
+    let active = Arc::new(AtomicUsize::new(0));
     std::thread::Builder::new()
         .name("kllm-tcp".into())
         .spawn(move || {
-            for stream in listener.incoming().flatten() {
+            for stream in listener.incoming() {
+                let mut stream = match stream {
+                    Ok(s) => s,
+                    Err(e) => {
+                        net.accept_errors.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("kllm-tcp: accept error: {e}");
+                        continue;
+                    }
+                };
+                let slots = active.fetch_add(1, Ordering::AcqRel);
+                if cfg.max_conns > 0 && slots >= cfg.max_conns {
+                    active.fetch_sub(1, Ordering::AcqRel);
+                    net.conn_rejected.fetch_add(1, Ordering::Relaxed);
+                    // structured rejection, then close — the client sees
+                    // backpressure, not a mystery hangup
+                    let _ = stream.write_all(conn_reject_reply().as_bytes());
+                    let _ = stream.write_all(b"\n");
+                    continue;
+                }
                 let coord = coord.clone();
+                let active = active.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(coord, stream);
+                    let _ = handle_conn(coord, stream, cfg.read_timeout);
+                    active.fetch_sub(1, Ordering::AcqRel);
                 });
             }
         })
@@ -281,24 +543,82 @@ pub fn serve_tcp(coord: Arc<Coordinator>, port: u16) -> Result<u16> {
     Ok(actual)
 }
 
-fn handle_conn(coord: Arc<Coordinator>, stream: std::net::TcpStream) -> Result<()> {
+fn handle_conn(
+    coord: Arc<Coordinator>,
+    stream: std::net::TcpStream,
+    read_timeout: Option<Duration>,
+) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
+    stream.set_read_timeout(read_timeout)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(());
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {}
+            // read timeout: close the idle/dead connection cleanly
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
         }
         let reply = match handle_line(&coord, line.trim()) {
             Ok(j) => j,
-            Err(e) => format!("{{\"error\": \"{e}\"}}"),
+            Err(e) => error_reply(&e),
         };
         stream.write_all(reply.as_bytes())?;
         stream.write_all(b"\n")?;
         stream.flush()?;
     }
+}
+
+/// The `{"error": ...}` reply line, with the message JSON-escaped — raw
+/// interpolation corrupted the protocol whenever an error contained a
+/// quote or backslash (regression-tested).
+fn error_reply(msg: &str) -> String {
+    format!("{{\"error\": {}}}", json::escape(msg))
+}
+
+/// The structured over-capacity rejection sent to connections past
+/// `--max-conns` before closing them.
+fn conn_reject_reply() -> String {
+    format!(
+        "{{\"rejected\": true, \"error\": {}}}",
+        json::escape("server at connection capacity")
+    )
+}
+
+/// One reply line for a completed/terminal response (schema in the
+/// module docs). A single construction site so the TCP surface cannot
+/// diverge between completion and rejection paths.
+fn response_reply(resp: &Response) -> String {
+    let toks = resp
+        .tokens
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"id\": {}, \"tokens\": [{}], \"finish_reason\": {}, \"rejected\": {}, \
+         \"truncated_prompt\": {}, \"queue_wait_s\": {:.6}, \"ttft_s\": {:.6}, \
+         \"total_s\": {:.6}, \"modeled_accel_s\": {:.6}}}",
+        resp.id,
+        toks,
+        json::escape(resp.finish_reason.name()),
+        resp.finish_reason == FinishReason::Rejected,
+        resp.truncated_prompt,
+        resp.queue_wait_s,
+        resp.ttft_s,
+        resp.total_s,
+        resp.modeled_accel_s
+    )
 }
 
 fn handle_line(coord: &Coordinator, line: &str) -> Result<String, String> {
@@ -319,18 +639,68 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<String, String> {
         .get("temperature")
         .and_then(Json::as_f64)
         .unwrap_or(0.0) as f32;
+    let deadline_ms = j
+        .get("deadline_ms")
+        .and_then(Json::as_f64)
+        .map(|v| v.max(0.0) as u64);
     let (_, rx) = coord
-        .submit_async(prompt, max_new, temperature)
+        .submit_with(prompt, max_new, temperature, deadline_ms)
         .map_err(|e| e.to_string())?;
     let resp = rx.recv().map_err(|_| "request dropped".to_string())?;
-    let toks = resp
-        .tokens
-        .iter()
-        .map(|t| t.to_string())
-        .collect::<Vec<_>>()
-        .join(",");
-    Ok(format!(
-        "{{\"id\": {}, \"tokens\": [{}], \"truncated_prompt\": {}, \"ttft_s\": {:.6}, \"total_s\": {:.6}, \"modeled_accel_s\": {:.6}}}",
-        resp.id, toks, resp.truncated_prompt, resp.ttft_s, resp.total_s, resp.modeled_accel_s
-    ))
+    Ok(response_reply(&resp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite regression: error strings with JSON metacharacters must
+    /// produce *parseable* reply lines (the old code interpolated raw).
+    #[test]
+    fn error_reply_escapes_metacharacters() {
+        for msg in [
+            "plain failure",
+            "unexpected token '\"' at line 1",
+            "path C:\\tmp\\x and a\nnewline",
+        ] {
+            let line = error_reply(msg);
+            let j = Json::parse(&line).expect("error reply must stay valid JSON");
+            assert_eq!(j.get("error").and_then(Json::as_str), Some(msg), "{line}");
+        }
+    }
+
+    #[test]
+    fn conn_reject_reply_is_structured() {
+        let j = Json::parse(&conn_reject_reply()).expect("valid JSON");
+        assert_eq!(j.get("rejected").and_then(Json::as_bool), Some(true));
+        assert!(j.get("error").and_then(Json::as_str).is_some());
+    }
+
+    #[test]
+    fn response_reply_surfaces_rejection_and_finish_reason() {
+        let mk = |fr: FinishReason, tokens: Vec<i32>| Response {
+            id: 42,
+            prompt_len: 3,
+            tokens,
+            finish_reason: fr,
+            truncated_prompt: false,
+            ttft_s: 0.001,
+            queue_wait_s: 0.0005,
+            total_s: 0.002,
+            modeled_accel_s: 0.0001,
+            modeled_accel_j: 0.0,
+        };
+        let done = Json::parse(&response_reply(&mk(FinishReason::MaxTokens, vec![1, 2])))
+            .expect("valid JSON");
+        assert_eq!(done.get("finish_reason").and_then(Json::as_str), Some("max_tokens"));
+        assert_eq!(done.get("rejected").and_then(Json::as_bool), Some(false));
+        assert_eq!(done.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert!(done.get("queue_wait_s").and_then(Json::as_f64).is_some());
+
+        let rej = Json::parse(&response_reply(&mk(FinishReason::Rejected, vec![])))
+            .expect("valid JSON");
+        assert_eq!(rej.get("rejected").and_then(Json::as_bool), Some(true));
+        assert_eq!(rej.get("finish_reason").and_then(Json::as_str), Some("rejected"));
+        assert_eq!(rej.get("tokens").unwrap().as_arr().unwrap().len(), 0);
+    }
 }

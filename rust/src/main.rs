@@ -6,6 +6,17 @@
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
 //!       [--backend SPEC] [--kv-bits 32|4|3|2] [--shards N]
+//!       [--queue-cap N] [--default-deadline-ms MS] [--max-conns N]
+//!       [--read-timeout-ms MS] [--chaos-rate R] [--chaos-seed S]
+//!       [--drain-ms MS]
+//!       Robustness knobs: `--queue-cap` bounds the admission queue
+//!       (overflow answered with a structured rejection, never dropped);
+//!       `--default-deadline-ms` applies a deadline to requests that
+//!       bring none (per-request `deadline_ms` JSON field overrides);
+//!       `--max-conns`/`--read-timeout-ms` harden the TCP listener;
+//!       `--chaos-rate`/`--chaos-seed` wrap the backend in deterministic
+//!       fault injection (testing); stdin EOF triggers a graceful drain
+//!       bounded by `--drain-ms`.
 //!       SPEC selects the decode execution engine:
 //!       `direct|histogram|packed` run decode through the PJRT artifacts
 //!       (the WAQ kernel is a modeled host clock), while
@@ -23,7 +34,9 @@
 use std::io::Write;
 
 use anyhow::{anyhow, Result};
-use kllm::coordinator::{serve_tcp, BackendSpec, Coordinator, EngineConfig, KvBits};
+use kllm::coordinator::{
+    serve_tcp_with, BackendSpec, ChaosCfg, Coordinator, EngineConfig, KvBits, TcpCfg,
+};
 use kllm::eval::{run_experiment, Corpus, ExperimentCtx, ALL_IDS};
 use kllm::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
 use kllm::util::cli::Args;
@@ -135,7 +148,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "preset", "config", "port", "ckpt", "requests", "max-new", "backend", "kv-bits",
-        "shards",
+        "shards", "queue-cap", "default-deadline-ms", "max-conns", "read-timeout-ms",
+        "chaos-seed", "chaos-rate", "drain-ms",
     ])
     .map_err(|e| anyhow!(e))?;
     let mut preset = args.str_or("preset", "test");
@@ -161,6 +175,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "--shards 0 is invalid: the sharded backend needs >= 1 column shard"
         ));
     }
+    // serving-robustness knobs (admission control, deadlines, chaos)
+    let queue_cap = args.usize_or("queue-cap", 0).map_err(|e| anyhow!(e))?;
+    let default_deadline_ms =
+        args.u64_or("default-deadline-ms", 0).map_err(|e| anyhow!(e))?;
+    let max_conns = args.usize_or("max-conns", 64).map_err(|e| anyhow!(e))?;
+    let read_timeout_ms =
+        args.u64_or("read-timeout-ms", 30_000).map_err(|e| anyhow!(e))?;
+    let chaos_rate = args.f64_or("chaos-rate", 0.0).map_err(|e| anyhow!(e))?;
+    if !(0.0..=1.0).contains(&chaos_rate) {
+        return Err(anyhow!("--chaos-rate must be in [0, 1], got {chaos_rate}"));
+    }
+    let chaos_seed = args.u64_or("chaos-seed", 0xC4A05).map_err(|e| anyhow!(e))?;
+    let chaos = (chaos_rate > 0.0).then(|| ChaosCfg::uniform(chaos_seed, chaos_rate));
+    let drain_ms = args.u64_or("drain-ms", 5_000).map_err(|e| anyhow!(e))?;
     let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(|e| anyhow!(e))?;
     let params = match args.opt("ckpt") {
         Some(p) => ParamSet::load(std::path::Path::new(p))?,
@@ -172,9 +200,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = std::sync::Arc::new(Coordinator::start_with_manifest(
         manifest,
         params,
-        EngineConfig { backend, kv_bits, shards, ..Default::default() },
+        EngineConfig {
+            backend,
+            kv_bits,
+            shards,
+            queue_cap,
+            default_deadline_ms,
+            chaos,
+            ..Default::default()
+        },
     )?);
-    let port = serve_tcp(coord.clone(), port)?;
+    let tcp_cfg = TcpCfg {
+        max_conns,
+        read_timeout: (read_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(read_timeout_ms)),
+    };
+    let port = serve_tcp_with(coord.clone(), port, tcp_cfg)?;
     let how = if backend == BackendSpec::NativeSharded {
         format!("measured native WAQ LUT-GEMM datapath, {shards} tensor-parallel column shards")
     } else if backend.is_native() {
@@ -186,10 +227,79 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, backend {backend}: \
          {how}, kv cache {kv_bits}-bit)"
     );
-    println!("example: echo '{{\"prompt\": [1,2,3], \"max_new_tokens\": 8}}' | nc 127.0.0.1 {port}");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    if let Some(c) = &chaos {
+        println!(
+            "chaos enabled: rate {chaos_rate} seed {:#x} (deterministic fault injection)",
+            c.seed
+        );
     }
+    println!("example: echo '{{\"prompt\": [1,2,3], \"max_new_tokens\": 8}}' | nc 127.0.0.1 {port}");
+    println!("stdin EOF (or a 'drain'/'quit' line) triggers graceful drain ({drain_ms} ms limit)");
+
+    // SIGTERM-equivalent: block on stdin; EOF or an explicit drain/quit
+    // line starts the graceful drain (stop admitting, finish in-flight
+    // under the limit, abort the rest, dump stats, exit 0)
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match stdin.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let cmd = line.trim();
+                if cmd == "drain" || cmd == "quit" {
+                    break;
+                }
+                if cmd == "stats" {
+                    let (stats, sim) = coord.stats()?;
+                    println!(
+                        "stats: completed {} rejected {} expired {} step_failures {} \
+                         accept_errors {} conn_rejected {} decode_steps {} sim {:.4}s",
+                        stats.completed,
+                        stats.rejected,
+                        stats.expired,
+                        stats.step_failures,
+                        stats.accept_errors,
+                        stats.conn_rejected,
+                        stats.decode_steps,
+                        sim.seconds
+                    );
+                } else if !cmd.is_empty() {
+                    println!("commands: drain | quit | stats (or EOF to drain)");
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let report = coord.drain(std::time::Duration::from_millis(drain_ms))?;
+    println!(
+        "drained in {:.3}s: finished {} aborted {} rejected-mid-drain {} \
+         (in-use kv blocks after drain: {})",
+        report.drain_s,
+        report.finished,
+        report.aborted,
+        report.stats.rejected,
+        report.in_use_blocks
+    );
+    let s = &report.stats;
+    println!(
+        "final stats: completed {} rejected {} expired {} step_failures {} accept_errors {} \
+         conn_rejected {} prefills {} decode_steps {} mean_occupancy {:.2} backend {} \
+         kv_bits {} peak_kv_bytes {}",
+        s.completed,
+        s.rejected,
+        s.expired,
+        s.step_failures,
+        s.accept_errors,
+        s.conn_rejected,
+        s.prefills,
+        s.decode_steps,
+        s.mean_occupancy(),
+        s.waq_backend,
+        s.kv_bits,
+        s.peak_kv_bytes
+    );
+    Ok(())
 }
 
 fn cmd_quantize(args: &Args) -> Result<()> {

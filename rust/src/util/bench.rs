@@ -260,6 +260,69 @@ impl ShardBenchRow {
     }
 }
 
+/// One BENCH_soak.json row: robustness envelope of the serving stack under
+/// a heavy-tailed multi-client trace with chaos faults enabled (emitted by
+/// the `soak` bench and smoke-run in CI under FAST_BENCH). Every submitted
+/// request must resolve to exactly one terminal response — the row records
+/// how they resolved and what the tail latency of admission looked like.
+///
+/// Schema (JSON lines, one object per row):
+///   `name`              `"soak/<backend>/<phase>"` (`inproc` or `tcp`)
+///   `backend`           serving backend tag (e.g. `native-packed`)
+///   `requests`          total requests submitted over the trace
+///   `completed`         finished naturally (max_tokens / eos / length)
+///   `rejected`          refused at admission (queue cap / drain)
+///   `expired`           deadline-expired (in queue or mid-decode)
+///   `aborted`           terminated by fault containment or shutdown
+///   `p50_queue_wait_s`  median admission wait across terminal responses
+///   `p99_queue_wait_s`  p99 admission wait across terminal responses
+///   `drain_s`           wall seconds for the final graceful drain
+///   `chaos_rate`        injected fault rate (0.0 = chaos disabled)
+///   `chaos_seed`        chaos RNG seed (reproduces the fault pattern)
+pub struct SoakBenchRow {
+    pub name: String,
+    pub backend: String,
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub aborted: u64,
+    pub p50_queue_wait_s: f64,
+    pub p99_queue_wait_s: f64,
+    pub drain_s: f64,
+    pub chaos_rate: f64,
+    pub chaos_seed: u64,
+}
+
+impl SoakBenchRow {
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"backend\": \"{}\", \"requests\": {}, \
+             \"completed\": {}, \"rejected\": {}, \"expired\": {}, \"aborted\": {}, \
+             \"p50_queue_wait_s\": {:.6}, \"p99_queue_wait_s\": {:.6}, \
+             \"drain_s\": {:.6}, \"chaos_rate\": {:.4}, \"chaos_seed\": {}}}",
+            json_escape(&self.name),
+            json_escape(&self.backend),
+            self.requests,
+            self.completed,
+            self.rejected,
+            self.expired,
+            self.aborted,
+            self.p50_queue_wait_s,
+            self.p99_queue_wait_s,
+            self.drain_s,
+            self.chaos_rate,
+            self.chaos_seed
+        )
+    }
+
+    /// Append to the repo-root BENCH_soak.json (JSON lines; created if
+    /// missing). IO failures are reported, never fatal.
+    pub fn append(&self) {
+        append_line(&bench_json_path("BENCH_soak.json"), &self.json_line());
+    }
+}
+
 pub struct Bencher {
     /// measurement window per bench
     pub measure: Duration,
@@ -467,6 +530,32 @@ mod tests {
         assert!(line.contains("\"shards\": 4"), "{line}");
         assert!(line.contains("\"speedup_vs_1\": 3.1000"), "{line}");
         assert!(line.contains("\"efficiency\": 0.7750"), "{line}");
+    }
+
+    #[test]
+    fn soak_row_json_is_machine_readable() {
+        let row = SoakBenchRow {
+            name: "soak/native-packed/inproc".into(),
+            backend: "native-packed".into(),
+            requests: 64,
+            completed: 50,
+            rejected: 6,
+            expired: 5,
+            aborted: 3,
+            p50_queue_wait_s: 0.0012,
+            p99_queue_wait_s: 0.0456,
+            drain_s: 0.25,
+            chaos_rate: 0.05,
+            chaos_seed: 0xC4A05,
+        };
+        let line = row.json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"requests\": 64"), "{line}");
+        assert!(line.contains("\"p99_queue_wait_s\": 0.045600"), "{line}");
+        assert!(line.contains("\"chaos_rate\": 0.0500"), "{line}");
+        assert!(line.contains("\"chaos_seed\": 805381"), "{line}");
+        // terminal outcomes account for every request in this row
+        assert_eq!(row.completed + row.rejected + row.expired + row.aborted, row.requests);
     }
 
     #[test]

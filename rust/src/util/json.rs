@@ -49,6 +49,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -136,6 +143,16 @@ impl Json {
             }
         }
     }
+}
+
+/// Escape `s` as a complete JSON string literal (including the quotes).
+/// The single escaping implementation for every hand-rolled JSON reply in
+/// the repo — interpolating raw strings into JSON (e.g. error messages
+/// containing `"` or `\`) produces malformed output; use this instead.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    write_escaped(&mut out, s);
+    out
 }
 
 fn write_escaped(out: &mut String, s: &str) {
@@ -328,6 +345,21 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn escape_produces_parseable_literals() {
+        for s in [
+            "plain",
+            "with \"quotes\" and \\backslash\\",
+            "newline\nand\ttab\rand\u{1}control",
+            "", // empty string still gets quotes
+        ] {
+            let lit = escape(s);
+            let back = Json::parse(&lit).expect("escaped literal must parse");
+            assert_eq!(back.as_str(), Some(s), "roundtrip of {s:?}");
+        }
+        assert_eq!(escape("a\"b"), "\"a\\\"b\"");
+    }
 
     #[test]
     fn roundtrip_manifest_like() {

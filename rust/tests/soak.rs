@@ -1,0 +1,451 @@
+//! Serving-robustness soak suite (runs in the default featureless
+//! build): a deterministic chaos soak over the engine, the engine-death
+//! regression through the coordinator, an exactly-once terminal-response
+//! property over random submit/expire/reject/abort interleavings, and a
+//! quick multi-client TCP soak ending in a graceful drain. CI runs this
+//! file directly (`cargo test --test soak`); the heavier heavy-tailed
+//! trace that emits BENCH_soak.json lives in `benches/soak.rs`.
+
+use std::time::Duration;
+
+use kllm::coordinator::{
+    AdmitPolicy, BackendSpec, ChaosBackend, ChaosCfg, Coordinator, Engine, EngineConfig,
+    FinishReason, NativeCfg, NativeWaqBackend, PjrtBackend, Request, Response, TcpCfg,
+};
+use kllm::gemm::WaqBackend;
+use kllm::kvcache::KvBits;
+use kllm::runtime::artifacts::ModelCfg;
+use kllm::runtime::{Manifest, ParamSet};
+use kllm::sim::OasisMode;
+use kllm::util::check::Check;
+use kllm::util::json::Json;
+use kllm::util::rng::Rng;
+
+fn tiny_cfg(decode_batch: usize) -> ModelCfg {
+    ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        seq_len: 16,
+        batch: 1,
+        decode_batch,
+        head_dim: 16,
+        d_ff: 128,
+        n_linears: 8,
+    }
+}
+
+fn native_backend(cfg: ModelCfg) -> NativeWaqBackend {
+    let manifest = Manifest::synthetic("tiny", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    NativeWaqBackend::new(&manifest, &params, NativeCfg::default()).expect("native backend")
+}
+
+fn stub_backend(cfg: ModelCfg) -> PjrtBackend {
+    PjrtBackend::stub(cfg, WaqBackend::Packed, OasisMode::a4())
+}
+
+/// The paged-allocator invariant block (same checks as
+/// `tests/backend_parity.rs`): no leaks, no double assignment, bounded
+/// tables — run against the live engine mid-soak.
+fn check_paged_invariants(e: &Engine) {
+    let kv = e.kv();
+    let c = kv.cache();
+    let cfg = &kv.cfg;
+    let bt = c.block_tokens();
+    let mut seen = std::collections::HashSet::new();
+    let mut listed = 0usize;
+    for slot in 0..cfg.decode_batch {
+        for l in 0..cfg.n_layers {
+            let written = c.written(l, slot);
+            let blocks = c.slot_blocks(l, slot);
+            assert!(written <= cfg.seq_len, "written out of bounds");
+            assert_eq!(
+                blocks.len(),
+                written.div_ceil(bt),
+                "table covers exactly the written positions"
+            );
+            if kv.position(slot).is_none() {
+                assert_eq!(written, 0, "freed slot still has rows");
+            }
+            for &b in blocks {
+                assert!((b as usize) < c.capacity_blocks(), "block id beyond pool");
+                assert!(seen.insert(b), "block {b} assigned twice");
+            }
+            listed += blocks.len();
+        }
+    }
+    assert_eq!(listed, c.in_use_blocks(), "block leak: listed != in-use");
+}
+
+/// Every terminal response reduced to its observable outcome.
+type Signature = Vec<(u64, &'static str, Vec<i32>)>;
+
+/// Counter snapshot compared across identical-seed runs (the wall-clock
+/// stats fields are excluded on purpose — they can never be equal).
+type Counters = (u64, u64, u64, u64, u64);
+
+/// One deterministic chaos soak: a seeded submit/step schedule over a
+/// chaos-wrapped native backend with a bounded queue, already-expired
+/// deadlines on every 5th request, and a guaranteed admission-overflow
+/// burst at the end. Returns the outcome signature + stat counters, and
+/// asserts the structural invariants (exactly-once, leak-free) inline.
+fn run_chaos_soak(seed: u64) -> (Signature, Counters) {
+    const QUEUE_CAP: usize = 4;
+    let cfg = tiny_cfg(4);
+    let ecfg = EngineConfig {
+        policy: AdmitPolicy::FillAll,
+        kv_bits: KvBits::B4,
+        queue_cap: QUEUE_CAP,
+        ..Default::default()
+    };
+    let chaos = ChaosCfg {
+        seed: 0xC4A05 ^ seed,
+        prefill_err_rate: 0.05,
+        decode_err_rate: 0.05,
+        nan_rate: 0.10,
+        spike_rate: 0.10,
+        spike_s: 1e-4,
+        fault_budget: u64::MAX,
+    };
+    let mut e = Engine::new(
+        Box::new(ChaosBackend::new(Box::new(native_backend(cfg)), chaos)),
+        &ecfg,
+    );
+    let mut rng = Rng::new(seed);
+    let mut terminals: Vec<Response> = Vec::new();
+    let mut submitted = 0u64;
+    for _round in 0..30 {
+        for _ in 0..(1 + rng.below(2)) {
+            let id = submitted;
+            submitted += 1;
+            let plen = 1 + rng.below(6);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+            let mut req = Request::new(id, prompt, 1 + rng.below(5));
+            // every 5th request arrives already past its deadline: it must
+            // terminate DeadlineExpired from the queue sweep (or Rejected
+            // when the queue is at cap) without ever reaching the backend
+            if id % 5 == 0 {
+                req = req.with_deadline_ms(0);
+            }
+            if let Some(reject) = e.try_submit(req) {
+                terminals.push(reject);
+            }
+        }
+        for _ in 0..(1 + rng.below(2)) {
+            if e.has_work() {
+                terminals.extend(e.step().expect("chaos faults must be contained"));
+                check_paged_invariants(&e);
+            }
+        }
+    }
+    while e.has_work() {
+        terminals.extend(e.step().expect("backlog step"));
+        check_paged_invariants(&e);
+    }
+    // the queue is now empty: QUEUE_CAP + 3 back-to-back submits must
+    // yield exactly 3 immediate structured rejections
+    let mut overflow_rejects = 0;
+    for _ in 0..QUEUE_CAP + 3 {
+        let id = submitted;
+        submitted += 1;
+        if let Some(reject) = e.try_submit(Request::new(id, vec![1, 2, 3], 4)) {
+            assert_eq!(reject.finish_reason, FinishReason::Rejected);
+            assert!(reject.tokens.is_empty());
+            terminals.push(reject);
+            overflow_rejects += 1;
+        }
+    }
+    assert_eq!(overflow_rejects, 3, "cap overflow must reject exactly the excess");
+    while e.has_work() {
+        terminals.extend(e.step().expect("final step"));
+        check_paged_invariants(&e);
+    }
+
+    // exactly-once: every submitted id has exactly one terminal response
+    assert_eq!(terminals.len() as u64, submitted, "one terminal response per request");
+    let mut ids: Vec<u64> = terminals.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, submitted, "no id answered twice");
+    assert_eq!(e.kv().cache().in_use_blocks(), 0, "KV blocks leaked after soak");
+    assert_eq!(e.active_count(), 0);
+    assert_eq!(e.pending(), 0);
+
+    // terminal classification must reconcile with the engine's counters
+    let count = |f: fn(&FinishReason) -> bool| {
+        terminals.iter().filter(|r| f(&r.finish_reason)).count() as u64
+    };
+    assert_eq!(count(|f| f.is_natural()), e.stats.completed);
+    assert_eq!(count(|f| *f == FinishReason::Rejected), e.stats.rejected);
+    assert_eq!(count(|f| *f == FinishReason::DeadlineExpired), e.stats.expired);
+    assert!(e.stats.completed > 0, "soak must complete some requests");
+    assert!(e.stats.expired > 0, "already-expired deadlines must show up");
+    assert!(e.stats.rejected >= 3, "cap overflow rejections must be counted");
+
+    let mut sig: Signature = terminals
+        .iter()
+        .map(|r| (r.id, r.finish_reason.name(), r.tokens.clone()))
+        .collect();
+    sig.sort();
+    let counters = (
+        e.stats.completed,
+        e.stats.rejected,
+        e.stats.expired,
+        e.stats.step_failures,
+        e.stats.prefill_failures,
+    );
+    (sig, counters)
+}
+
+/// The soak acceptance property: with chaos enabled, two identical-seed
+/// runs resolve every request identically — same tokens, same finish
+/// reasons, same fault counters — and a different seed actually changes
+/// the trace (the determinism isn't vacuous).
+#[test]
+fn chaos_soak_is_deterministic_exactly_once_and_leak_free() {
+    let (sig_a, counters_a) = run_chaos_soak(7);
+    let (sig_b, counters_b) = run_chaos_soak(7);
+    assert_eq!(sig_a, sig_b, "identical seeds must produce identical outcomes");
+    assert_eq!(counters_a, counters_b, "identical seeds must produce identical counters");
+    let (sig_c, _) = run_chaos_soak(8);
+    assert_ne!(sig_a, sig_c, "a different seed must change the trace");
+}
+
+/// Satellite regression (engine-thread death): before fault containment,
+/// one failing decode step killed the engine thread — every queued waiter
+/// hung forever and all later submits were lost. Now the poisoned step
+/// aborts only its in-flight burst, every waiter is answered, and the
+/// engine keeps serving.
+#[test]
+fn chaos_step_fault_mid_burst_answers_every_waiter_and_engine_survives() {
+    let cfg = tiny_cfg(4);
+    let manifest = Manifest::synthetic("tiny", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    let chaos = ChaosCfg {
+        decode_err_rate: 1.0,
+        fault_budget: 1,
+        ..ChaosCfg::uniform(9, 0.0)
+    };
+    let coord = Coordinator::start_with_manifest(
+        manifest,
+        params,
+        EngineConfig {
+            backend: BackendSpec::Native(WaqBackend::Packed),
+            policy: AdmitPolicy::FillAll,
+            chaos: Some(chaos),
+            ..Default::default()
+        },
+    )
+    .expect("coordinator start");
+    let mut rxs = Vec::new();
+    for i in 0..3i32 {
+        let (_, rx) = coord
+            .submit_with(vec![1 + i, 2, 3], 4, 0.0, None)
+            .expect("submit");
+        rxs.push(rx);
+    }
+    let mut reasons = Vec::new();
+    for rx in rxs {
+        // recv_timeout so a regression shows up as a failure, not a hang
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every waiter must be answered after a step fault");
+        reasons.push(resp.finish_reason);
+    }
+    assert!(
+        reasons.contains(&FinishReason::Aborted),
+        "the poisoned decode step must abort its in-flight burst: {reasons:?}"
+    );
+    // the engine thread survived: a fresh request completes normally
+    // (fault budget 1 is spent, so chaos is transparent from here on)
+    let r = coord
+        .generate(vec![5, 6], 3)
+        .expect("engine must keep serving after the contained fault");
+    assert_eq!(r.finish_reason, FinishReason::MaxTokens);
+    assert_eq!(r.tokens.len(), 3);
+    let (stats, _) = coord.stats().expect("stats");
+    assert_eq!(stats.step_failures, 1, "exactly one contained fault (budget 1)");
+    coord.shutdown().expect("clean shutdown");
+}
+
+/// Exactly-once property over random interleavings of submit (with and
+/// without deadlines), bounded admission, engine steps, mid-flight
+/// aborts, and a final drain-style abort_all — under chaos, at a
+/// quantized KV width, with the paged-allocator invariants checked after
+/// every step. Extends the PR 4 burst stress test to the full
+/// terminal-response state machine.
+#[test]
+fn prop_every_request_resolves_exactly_once_under_random_interleavings() {
+    let cfg = tiny_cfg(4);
+    Check::new(12).forall("exactly-once-terminal", |rng, case| {
+        let ecfg = EngineConfig {
+            policy: if case % 2 == 0 { AdmitPolicy::FillAll } else { AdmitPolicy::OnePerStep },
+            kv_bits: if case % 3 == 0 { KvBits::Fp32 } else { KvBits::B4 },
+            queue_cap: [0, 2, 5][case % 3],
+            ..Default::default()
+        };
+        let chaos = ChaosCfg {
+            fault_budget: 3,
+            ..ChaosCfg::uniform(case as u64, 0.08)
+        };
+        let mut e = Engine::new(
+            Box::new(ChaosBackend::new(Box::new(stub_backend(cfg)), chaos)),
+            &ecfg,
+        );
+        let mut terminals: Vec<Response> = Vec::new();
+        let mut submitted = 0u64;
+        for _op in 0..40 {
+            match rng.below(5) {
+                // submit: deadlines are None, already-past, or far-future
+                // (never "soon" — wall-clock races would break the test)
+                0 | 1 => {
+                    let id = submitted;
+                    submitted += 1;
+                    let plen = 1 + rng.below(5);
+                    let prompt: Vec<i32> =
+                        (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+                    let mut req = Request::new(id, prompt, 1 + rng.below(4));
+                    match rng.below(4) {
+                        0 => req = req.with_deadline_ms(0),
+                        1 => req = req.with_deadline_ms(3_600_000),
+                        _ => {}
+                    }
+                    if let Some(reject) = e.try_submit(req) {
+                        assert_eq!(reject.finish_reason, FinishReason::Rejected);
+                        terminals.push(reject);
+                    }
+                }
+                2 | 3 => {
+                    if e.has_work() {
+                        terminals.extend(e.step().expect("contained step"));
+                        check_paged_invariants(&e);
+                    }
+                }
+                _ => {
+                    if rng.below(4) == 0 {
+                        terminals.extend(e.abort_inflight());
+                        check_paged_invariants(&e);
+                    }
+                }
+            }
+        }
+        terminals.extend(e.abort_all());
+        assert_eq!(
+            terminals.len() as u64,
+            submitted,
+            "case {case}: every request resolves exactly once"
+        );
+        let mut ids: Vec<u64> = terminals.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, submitted, "case {case}: no double answers");
+        assert_eq!(e.kv().cache().in_use_blocks(), 0, "case {case}: leaked KV blocks");
+        check_paged_invariants(&e);
+    });
+}
+
+/// Quick multi-client TCP soak: every request line gets exactly one
+/// parseable JSON reply (deadline-expired and completed alike), an
+/// over-capacity connection gets a structured rejection, garbage input
+/// gets a structured error, and the final graceful drain returns every
+/// KV block with the listener counters merged into the report.
+#[test]
+fn tcp_soak_exactly_one_reply_per_line_then_graceful_drain() {
+    use std::io::{BufRead, BufReader, Write};
+    let cfg = tiny_cfg(4);
+    let manifest = Manifest::synthetic("tiny", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    let coord = std::sync::Arc::new(
+        Coordinator::start_with_manifest(
+            manifest,
+            params,
+            EngineConfig {
+                backend: BackendSpec::Native(WaqBackend::Packed),
+                policy: AdmitPolicy::FillAll,
+                queue_cap: 8,
+                ..Default::default()
+            },
+        )
+        .expect("coordinator start"),
+    );
+    let tcp = TcpCfg { max_conns: 8, read_timeout: Some(Duration::from_secs(10)) };
+    let port = kllm::coordinator::serve_tcp_with(coord.clone(), 0, tcp).expect("tcp");
+
+    // phase 1: 4 concurrent clients x 5 requests; every 4th request
+    // carries an already-expired deadline and must come back
+    // `deadline_expired` with no tokens (clients each keep one request in
+    // flight, so the depth-8 queue never rejects here)
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut sock = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut reader = BufReader::new(sock.try_clone().unwrap());
+            let mut expired = 0usize;
+            for i in 0..5u64 {
+                let deadline =
+                    if (c + i) % 4 == 0 { ", \"deadline_ms\": 0" } else { "" };
+                let line = format!(
+                    "{{\"prompt\": [{}, 2, 3], \"max_new_tokens\": 3{}}}\n",
+                    1 + c, deadline
+                );
+                sock.write_all(line.as_bytes()).unwrap();
+                let mut reply = String::new();
+                reader.read_line(&mut reply).unwrap();
+                let j = Json::parse(reply.trim()).expect("reply must be valid JSON");
+                let reason = j.get("finish_reason").and_then(Json::as_str).unwrap();
+                let ntok = j.get("tokens").unwrap().as_arr().unwrap().len();
+                if deadline.is_empty() {
+                    assert_eq!(reason, "max_tokens", "{reply}");
+                    assert_eq!(ntok, 3, "{reply}");
+                } else {
+                    assert_eq!(reason, "deadline_expired", "{reply}");
+                    assert_eq!(ntok, 0, "{reply}");
+                    expired += 1;
+                }
+                assert_eq!(j.get("rejected").and_then(Json::as_bool), Some(false));
+            }
+            expired
+        }));
+    }
+    let expired: usize = handles.into_iter().map(|h| h.join().expect("client")).sum();
+    assert_eq!(expired, 5, "the (c + i) % 4 == 0 schedule expires exactly 5 requests");
+
+    // phase 2: a --max-conns 1 listener on the same engine — while one
+    // connection is held (its handler provably registered by a completed
+    // roundtrip), the next connection gets a structured rejection line
+    let capped = TcpCfg { max_conns: 1, read_timeout: Some(Duration::from_secs(10)) };
+    let port1 = kllm::coordinator::serve_tcp_with(coord.clone(), 0, capped).expect("tcp capped");
+    let mut held = std::net::TcpStream::connect(("127.0.0.1", port1)).unwrap();
+    let mut held_reader = BufReader::new(held.try_clone().unwrap());
+    held.write_all(b"{\"prompt\": [1], \"max_new_tokens\": 1}\n").unwrap();
+    let mut reply = String::new();
+    held_reader.read_line(&mut reply).unwrap();
+    assert!(Json::parse(reply.trim()).is_ok(), "{reply}");
+    let over = std::net::TcpStream::connect(("127.0.0.1", port1)).unwrap();
+    let mut over_reply = String::new();
+    BufReader::new(over).read_line(&mut over_reply).unwrap();
+    let j = Json::parse(over_reply.trim()).expect("over-capacity reply is valid JSON");
+    assert_eq!(j.get("rejected").and_then(Json::as_bool), Some(true), "{over_reply}");
+    assert!(j.get("error").and_then(Json::as_str).is_some(), "{over_reply}");
+
+    // phase 3: garbage input gets a structured, parseable error reply
+    let mut garbage = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut greader = BufReader::new(garbage.try_clone().unwrap());
+    garbage.write_all(b"this is { not \"json\n").unwrap();
+    let mut greply = String::new();
+    greader.read_line(&mut greply).unwrap();
+    let j = Json::parse(greply.trim()).expect("error reply must be valid JSON");
+    assert!(j.get("error").and_then(Json::as_str).is_some(), "{greply}");
+
+    // phase 4: graceful drain — every block returned, listener counters
+    // merged into the final stats
+    let report = coord.drain(Duration::from_secs(10)).expect("drain");
+    assert_eq!(report.in_use_blocks, 0, "drain must return every KV block");
+    assert_eq!(report.stats.completed, 16, "15 soak completions + the held request");
+    assert_eq!(report.stats.expired, 5);
+    assert_eq!(report.stats.conn_rejected, 1, "the over-capacity connection");
+    assert_eq!(report.stats.accept_errors, 0);
+    assert_eq!(report.stats.rejected, 0, "nothing hit the depth-8 queue cap");
+}
