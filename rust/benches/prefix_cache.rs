@@ -1,0 +1,156 @@
+//! Prefix-cache bench: a fleet of requests sharing one long system
+//! prompt (the workload the radix index exists for), served twice — with
+//! `--prefix-cache off` (every prompt densely prefilled) and on (shared
+//! blocks aliased out of the index; only each request's private tail is
+//! computed). Rows land in BENCH_prefix.json via
+//! `util::bench::PrefixBenchRow`. Requests use `max_new_tokens = 1`, so
+//! the first token comes straight from the prefill logits and the host
+//! WAQ seconds isolate prefill cost.
+//!
+//! Tripwires (non-zero exit, so CI fails when the subsystem regresses):
+//!   * hit rate: every admission after the first cold burst must hit the
+//!     index (`prefix_hits >= requests - decode_batch`);
+//!   * payoff: host seconds off/on must be >= 10x on the full workload
+//!     (100 requests x 1k-token shared head), >= 1.5x under FAST_BENCH
+//!     (12 requests x 48-token head — the cold burst amortizes less).
+
+use kllm::coordinator::{
+    AdmitPolicy, BackendSpec, Engine, EngineConfig, NativeCfg, NativeWaqBackend, Request,
+};
+use kllm::gemm::WaqBackend;
+use kllm::kvcache::KvBits;
+use kllm::runtime::artifacts::ModelCfg;
+use kllm::runtime::{Manifest, ParamSet};
+use kllm::util::bench::{fast_mode, PrefixBenchRow};
+use kllm::util::rng::Rng;
+
+struct Workload {
+    name: &'static str,
+    requests: u64,
+    shared_tokens: usize,
+    min_speedup: f64,
+}
+
+/// One full serve of the shared-prefix stream; returns the engine for
+/// stats inspection.
+fn serve(
+    cfg: ModelCfg,
+    manifest: &Manifest,
+    params: &ParamSet,
+    kv_bits: KvBits,
+    prefix_cache: bool,
+    w: &Workload,
+) -> anyhow::Result<Engine> {
+    let backend = NativeWaqBackend::new(
+        manifest,
+        params,
+        NativeCfg { waq: WaqBackend::Packed, ..NativeCfg::default() },
+    )?;
+    let ecfg = EngineConfig {
+        policy: AdmitPolicy::FillAll,
+        backend: BackendSpec::Native(WaqBackend::Packed),
+        kv_bits,
+        prefix_cache,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(Box::new(backend), &ecfg);
+    let mut rng = Rng::new(11);
+    let head: Vec<i32> =
+        (0..w.shared_tokens).map(|_| rng.below(cfg.vocab) as i32).collect();
+    for id in 0..w.requests {
+        // shared head + an 8-token private tail (distinct per request, so
+        // tails never alias and COW fires on the final partial block)
+        let mut prompt = head.clone();
+        prompt.extend((0..8).map(|t| ((id as usize * 31 + t * 7 + 1) % cfg.vocab) as i32));
+        engine.submit(Request::new(id, prompt, 1));
+    }
+    engine.run_to_completion()?;
+    Ok(engine)
+}
+
+fn main() -> anyhow::Result<()> {
+    let w = if fast_mode() {
+        Workload { name: "fast", requests: 12, shared_tokens: 48, min_speedup: 1.5 }
+    } else {
+        Workload { name: "full", requests: 100, shared_tokens: 1024, min_speedup: 10.0 }
+    };
+    // context: shared head + 8-token tail + 1 generated, rounded up to a
+    // block boundary so the bench shape never depends on seq_len slack
+    let seq_len = (w.shared_tokens + 16).next_multiple_of(16);
+    let cfg = ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        seq_len,
+        batch: 1,
+        decode_batch: 2,
+        head_dim: 16,
+        d_ff: 128,
+        n_linears: 8,
+    };
+    let manifest = Manifest::synthetic("prefix-bench", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+
+    let mut failures = Vec::new();
+    for kv_bits in [KvBits::Fp32, KvBits::B4] {
+        let off = serve(cfg, &manifest, &params, kv_bits, false, &w)?;
+        let on = serve(cfg, &manifest, &params, kv_bits, true, &w)?;
+        assert_eq!(
+            off.stats.completed, on.stats.completed,
+            "both runs must complete the full stream"
+        );
+        let speedup = off.stats.host_waq_s / on.stats.host_waq_s.max(1e-12);
+        let row = PrefixBenchRow {
+            name: format!("prefix/{}", w.name),
+            backend: on.stats.waq_backend.to_string(),
+            kv_bits: on.stats.kv_bits,
+            requests: w.requests,
+            shared_tokens: w.shared_tokens as u64,
+            host_s_off: off.stats.host_waq_s,
+            host_s_on: on.stats.host_waq_s,
+            speedup,
+            prefix_hits: on.stats.prefix_hits,
+            blocks_reused: on.stats.prefix_blocks_reused,
+            evictions: on.stats.evictions,
+            bytes_per_token: on.stats.kv_bytes_per_token,
+        };
+        println!(
+            "bench prefix_cache/{}/kv{:<2} off {:.4}s  on {:.4}s  {:5.1}x  \
+             hits {}/{}  reused {}  evicted {}",
+            w.name,
+            row.kv_bits,
+            row.host_s_off,
+            row.host_s_on,
+            row.speedup,
+            row.prefix_hits,
+            w.requests,
+            row.blocks_reused,
+            row.evictions,
+        );
+        row.append();
+
+        // tripwire: everything after the cold first burst must hit
+        let min_hits = w.requests - cfg.decode_batch as u64;
+        if row.prefix_hits < min_hits {
+            failures.push(format!(
+                "kv{}: prefix_hits {} < {} (requests {} - decode_batch {})",
+                row.kv_bits, row.prefix_hits, min_hits, w.requests, cfg.decode_batch
+            ));
+        }
+        // tripwire: the cache must actually buy prefill host time back
+        if speedup < w.min_speedup {
+            failures.push(format!(
+                "kv{}: off/on host speedup {:.2}x < {:.1}x floor",
+                row.kv_bits, speedup, w.min_speedup
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("prefix_cache tripwire: {f}");
+        }
+        anyhow::bail!("{} prefix_cache tripwire(s) fired", failures.len());
+    }
+    Ok(())
+}

@@ -25,18 +25,31 @@
 //! seam, not a datapath change. Enabled via `EngineConfig::chaos`
 //! (`--chaos-seed` / `--chaos-rate` on `kllm serve`).
 //!
+//! A fourth, opt-in shape targets the KV allocator:
+//!
+//!   * **allocation pressure** — with `kv_pressure_rate > 0`, decode and
+//!     paged-prefill calls roll for a forced LRU eviction of up to
+//!     `kv_pressure_blocks` prefix-cache blocks
+//!     (`PagedKvCache::evict_cached`), exercising the eviction and
+//!     copy-on-write paths under deterministic soak. Only index-only
+//!     blocks (refcount 1) are ever evicted, so correctness is untouched
+//!     — hits just get colder.
+//!
 //! Determinism contract: every entry point draws from the RNG in a fixed
-//! order (`prefill*`: one draw; `decode`: fault, NaN, spike, then a
-//! victim-slot draw only when the NaN fires), so the fault pattern is a
-//! pure function of the seed and the call sequence — it cannot silently
-//! shift when an unrelated branch stops consuming randomness.
+//! order (`prefill`/`prefill_batch`: one draw; `prefill_paged`: fault,
+//! then pressure when enabled; `decode`: fault, NaN, spike, pressure when
+//! enabled, then a victim-slot draw only when the NaN fires), so the
+//! fault pattern is a pure function of the seed and the call sequence —
+//! it cannot silently shift when an unrelated branch stops consuming
+//! randomness. The pressure roll only exists when `kv_pressure_rate > 0`,
+//! so legacy profiles replay bit-identical fault patterns.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::{BackendSpec, DecodeBackend, PrefillOut, StepCost};
+use super::{BackendSpec, DecodeBackend, PagedPrefill, PagedPrefillOut, PrefillOut, StepCost};
 use crate::coordinator::kv::KvManager;
 use crate::kvcache::KvQuantizer;
 use crate::runtime::artifacts::ModelCfg;
@@ -61,6 +74,13 @@ pub struct ChaosCfg {
     /// rows and spikes are not counted). `u64::MAX` = unlimited. Lets a
     /// test script "fail exactly once mid-burst, then run healthy".
     pub fault_budget: u64,
+    /// Probability a decode/paged-prefill call forces an LRU eviction of
+    /// prefix-cache blocks (allocation pressure on the KV pool). 0 (the
+    /// default) keeps the legacy draw sequence bit-identical.
+    pub kv_pressure_rate: f64,
+    /// Blocks evicted per fired pressure event (upper bound; fewer when
+    /// the index has fewer evictable blocks).
+    pub kv_pressure_blocks: usize,
 }
 
 impl ChaosCfg {
@@ -76,7 +96,18 @@ impl ChaosCfg {
             spike_rate: rate,
             spike_s: 5e-3,
             fault_budget: u64::MAX,
+            kv_pressure_rate: 0.0,
+            kv_pressure_blocks: 0,
         }
+    }
+
+    /// Enable the KV-allocator pressure profile: each decode/paged-prefill
+    /// call force-evicts up to `blocks` prefix-cache blocks with
+    /// probability `rate` (the `--chaos-kv-pressure` knob).
+    pub fn with_kv_pressure(mut self, rate: f64, blocks: usize) -> ChaosCfg {
+        self.kv_pressure_rate = rate;
+        self.kv_pressure_blocks = blocks;
+        self
     }
 }
 
@@ -92,6 +123,7 @@ struct CounterCells {
     decode_errs: AtomicU64,
     nan_rows: AtomicU64,
     spikes: AtomicU64,
+    kv_evictions: AtomicU64,
 }
 
 impl ChaosCounters {
@@ -109,6 +141,11 @@ impl ChaosCounters {
 
     pub fn spikes(&self) -> u64 {
         self.0.spikes.load(Ordering::Relaxed)
+    }
+
+    /// Prefix-cache blocks freed by injected allocation pressure.
+    pub fn kv_evictions(&self) -> u64 {
+        self.0.kv_evictions.load(Ordering::Relaxed)
     }
 
     /// Hard errors only (the ones that consume `fault_budget`).
@@ -155,6 +192,20 @@ impl ChaosBackend {
         self.budget_left -= 1;
         true
     }
+
+    /// Roll for KV allocation pressure and apply it. The draw only exists
+    /// when the profile enables pressure (`kv_pressure_rate > 0`), so
+    /// legacy seeds replay identical fault patterns.
+    fn maybe_pressure(&mut self, kv: &mut KvManager) {
+        if self.cfg.kv_pressure_rate <= 0.0 {
+            return;
+        }
+        let roll = self.rng.f64();
+        if roll < self.cfg.kv_pressure_rate {
+            let n = kv.cache_mut().evict_cached(self.cfg.kv_pressure_blocks);
+            self.counters.0.kv_evictions.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
 }
 
 impl DecodeBackend for ChaosBackend {
@@ -191,6 +242,25 @@ impl DecodeBackend for ChaosBackend {
         self.inner.prefill_batch(prompts)
     }
 
+    fn supports_paged_prefill(&self) -> bool {
+        self.inner.supports_paged_prefill()
+    }
+
+    fn prefill_paged(
+        &mut self,
+        reqs: &[PagedPrefill<'_>],
+        kv: &mut KvManager,
+    ) -> Result<Vec<PagedPrefillOut>> {
+        // same burst-granularity fault unit as prefill_batch
+        let roll = self.rng.f64();
+        if roll < self.cfg.prefill_err_rate && self.take_fault() {
+            ChaosCounters::bump(&self.counters.0.prefill_errs);
+            bail!("chaos: injected paged-prefill fault ({} requests)", reqs.len());
+        }
+        self.maybe_pressure(kv);
+        self.inner.prefill_paged(reqs, kv)
+    }
+
     fn decode(
         &mut self,
         toks: &[i32],
@@ -206,6 +276,7 @@ impl DecodeBackend for ChaosBackend {
             ChaosCounters::bump(&self.counters.0.decode_errs);
             bail!("chaos: injected decode fault");
         }
+        self.maybe_pressure(kv);
         let (mut logits, mut cost) = self.inner.decode(toks, pos, active, kv)?;
         if nan < self.cfg.nan_rate {
             let victims: Vec<usize> = active
@@ -421,6 +492,45 @@ mod tests {
         assert!((cost.accel_s - (1e-4 + 0.25)).abs() < 1e-12);
         assert!(logits.iter().all(|v| !v.is_nan()));
         assert_eq!(b.counters().spikes(), 1);
+    }
+
+    #[test]
+    fn kv_pressure_evicts_index_only_blocks_deterministically() {
+        use crate::kvcache::KvPrecision;
+        let m = ModelCfg::test_preset();
+        // Build a prefix-cache-enabled manager and park one prompt's blocks
+        // in the index with no live slot holding them (refcount 1 each).
+        let mut kv = KvManager::with_precision_opts(m, KvPrecision::Fp32, true);
+        let prompt = [1i32, 2, 3, 4];
+        let matched = kv.admit_prefix(0, 1, &prompt, prompt.len()).unwrap();
+        assert_eq!(matched.tokens, 0, "cold index: nothing to alias");
+        let d = m.n_heads * m.head_dim;
+        for l in 0..m.n_layers {
+            for p in 0..prompt.len() {
+                kv.append_token(l, 0, p, &vec![0.5; d], &vec![0.25; d]).unwrap();
+            }
+        }
+        kv.set_position(0, prompt.len()).unwrap();
+        kv.register_prefix(0, &prompt);
+        kv.release(0);
+        let parked = kv.cache().in_use_blocks();
+        assert_eq!(parked, m.n_layers, "one block per layer parked in the index");
+
+        // rate 1.0 pressure fires on the first decode and drains the index
+        let cfg = ChaosCfg::uniform(0xE71C, 0.0).with_kv_pressure(1.0, 8);
+        let mut b = ChaosBackend::new(flat(), cfg);
+        let toks = vec![0i32; m.decode_batch];
+        let pos = vec![0i32; m.decode_batch];
+        let active = vec![false; m.decode_batch];
+        b.decode(&toks, &pos, &active, &mut kv).unwrap();
+        assert_eq!(kv.cache().in_use_blocks(), 0, "pressure freed the parked blocks");
+        assert_eq!(b.counters().kv_evictions(), parked as u64);
+        assert_eq!(kv.cache().evictions(), parked as u64);
+        // identical seed + profile replays the identical eviction count
+        let mut kv2 = KvManager::with_precision_opts(m, KvPrecision::Fp32, true);
+        let mut b2 = ChaosBackend::new(flat(), cfg);
+        b2.decode(&toks, &pos, &active, &mut kv2).unwrap();
+        assert_eq!(b2.counters().kv_evictions(), 0, "empty index: nothing to evict");
     }
 
     #[test]

@@ -185,6 +185,32 @@ pub struct PrefillOut {
     pub cost: StepCost,
 }
 
+/// One request of a paged-prefill burst ([`DecodeBackend::prefill_paged`]):
+/// the slot is already claimed, the first `cached` prompt positions are
+/// served by aliased prefix-cache blocks, and the backend computes (and
+/// appends through `kv`) only the uncached tail `prompt[cached..plen]`.
+pub struct PagedPrefill<'a> {
+    pub prompt: &'a [i32],
+    pub slot: usize,
+    /// prompt positions already present in the slot's block tables
+    pub cached: usize,
+}
+
+/// Per-request result of [`DecodeBackend::prefill_paged`]. Unlike
+/// [`PrefillOut`] there is no dense KV pair — the K/V rows were appended
+/// straight into the paged cache (quantized in place for n-bit storage).
+pub struct PagedPrefillOut {
+    /// Prompt length actually consumed (clamped to the context window).
+    pub plen: usize,
+    /// Logits at the last prompt position (length `vocab`).
+    pub logits: Vec<f32>,
+    /// This request's share of the burst cost. Both the modeled
+    /// accelerator cost and the measured host/shard seconds cover only
+    /// the *uncached tail* — aliased prefix positions cost no compute,
+    /// which is the whole point of the prefix cache.
+    pub cost: StepCost,
+}
+
 /// The per-step datapath behind the serving engine. Implementations own
 /// compute; the engine owns slots, admission, sampling, and stats.
 pub trait DecodeBackend {
@@ -223,6 +249,39 @@ pub trait DecodeBackend {
     /// request with an `Aborted` response instead of dropping it.
     fn prefill_batch(&mut self, prompts: &[&[i32]]) -> Result<Vec<PrefillOut>> {
         prompts.iter().map(|p| self.prefill(p)).collect()
+    }
+
+    /// Whether [`Self::prefill_paged`] is implemented. The engine only
+    /// routes admission through the paged path (and therefore only
+    /// honors `--prefix-cache on`) when this is true; backends that
+    /// produce dense KV pairs (PJRT, test fixtures) keep the
+    /// `prefill_batch` + `install_prefill` admission path.
+    fn supports_paged_prefill(&self) -> bool {
+        false
+    }
+
+    /// Prefill an admission burst *through the paged cache*: for each
+    /// request, append K/V rows for the uncached tail positions directly
+    /// into `kv` (slot already claimed at `cached`) and compute the tail's
+    /// attention by reading the cache's stored representation — the same
+    /// fused-dequant gathers decode uses. That makes a cold run and a
+    /// prefix-hit run bit-exact by construction at every `--kv-bits`:
+    /// both read identical stored payloads. Returns one result per
+    /// request, in order.
+    ///
+    /// All-or-nothing like `prefill_batch`: on `Err` the engine releases
+    /// every burst slot (partial appends are reclaimed with the slots)
+    /// and answers `Aborted`.
+    fn prefill_paged(
+        &mut self,
+        reqs: &[PagedPrefill<'_>],
+        kv: &mut KvManager,
+    ) -> Result<Vec<PagedPrefillOut>> {
+        let _ = (reqs, kv);
+        Err(anyhow::anyhow!(
+            "backend {} does not implement paged prefill",
+            self.spec().name()
+        ))
     }
 
     /// Run one batched decode step over all `decode_batch` slots.

@@ -43,7 +43,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{batch_occupancy, BackendSpec, CostModel, DecodeBackend, PrefillOut, StepCost};
+use super::{
+    batch_occupancy, BackendSpec, CostModel, DecodeBackend, PagedPrefill, PagedPrefillOut,
+    PrefillOut, StepCost,
+};
 use crate::coordinator::kv::KvManager;
 use crate::gemm::{
     compensate, compensate_packed, CartesianLut, ShardPool, ShardedWaqGemm, WaqBackend, WaqGemm,
@@ -526,6 +529,138 @@ impl DecodeBackend for NativeWaqBackend {
                 v_cache: HostTensor::f32(vc, &shape),
                 cost,
             });
+        }
+        Ok(outs)
+    }
+
+    fn supports_paged_prefill(&self) -> bool {
+        true
+    }
+
+    /// Prefill through the paged cache: each request's *uncached tail*
+    /// rows are stacked (request-major) into one activation matrix and
+    /// every WAQ LUT-GEMM linear runs once per layer for the burst, like
+    /// `prefill_batch` — but K/V rows are appended straight into the
+    /// slot's block tables and each tail row's attention reads the cache
+    /// through the same fused-dequant gathers decode uses
+    /// (`key_scores`/`value_mix`, identical softmax shape). Cached prefix
+    /// positions are never recomputed and never requantized: a cold run
+    /// and a prefix-hit run read identical stored payloads, so their
+    /// logits are bit-exact at every `--kv-bits`. At FP32 storage the
+    /// gathers reproduce `causal_attention`'s accumulation order, keeping
+    /// this path bit-exact with the dense `prefill_batch` too.
+    fn prefill_paged(
+        &mut self,
+        reqs: &[PagedPrefill<'_>],
+        kv: &mut KvManager,
+    ) -> Result<Vec<PagedPrefillOut>> {
+        let m = self.model;
+        let (h, hd, d, s) = (m.n_heads, m.head_dim, m.d_model, m.seq_len);
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let plens: Vec<usize> = reqs.iter().map(|r| r.prompt.len().clamp(1, s - 1)).collect();
+        for (r, req) in reqs.iter().enumerate() {
+            if req.cached >= plens[r] {
+                bail!(
+                    "paged prefill: cached {} must leave a tail (plen {})",
+                    req.cached,
+                    plens[r]
+                );
+            }
+        }
+        let tails: Vec<usize> = reqs.iter().zip(&plens).map(|(r, &p)| p - r.cached).collect();
+        // row-offset map over the stacked *tail* rows only
+        let mut offs = Vec::with_capacity(tails.len());
+        let mut total = 0usize;
+        for &t in &tails {
+            offs.push(total);
+            total += t;
+        }
+        let mut x = Matrix::zeros(total, d);
+        for (r, req) in reqs.iter().enumerate() {
+            for t in 0..tails[r] {
+                let p = req.cached + t;
+                let tok =
+                    req.prompt.get(p).map_or(0, |&v| v.rem_euclid(m.vocab as i32)) as usize;
+                embed_into(x.row_mut(offs[r] + t), &self.tok_emb, &self.pos_emb, tok, p);
+            }
+        }
+        let mut waq_ns = 0u64;
+        let mut crit_ns = 0u64;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let qkv_rows = self.quant_forward(
+                &layer.qkv,
+                &rms_rows(&x, &layer.ln1),
+                &mut waq_ns,
+                &mut crit_ns,
+            );
+            let mut att_rows: Vec<Vec<f32>> = Vec::with_capacity(total);
+            for (r, req) in reqs.iter().enumerate() {
+                for t in 0..tails[r] {
+                    let p = req.cached + t;
+                    let row = &qkv_rows[offs[r] + t];
+                    kv.append_token(l, req.slot, p, &row[d..2 * d], &row[2 * d..3 * d])
+                        .map_err(|e| anyhow!("kv append: {e}"))?;
+                    // same attention shape as decode: gather, scale, max,
+                    // exp, normalize, mix — over cache positions 0..=p
+                    let mut att = vec![0f32; d];
+                    let mut scores = vec![0f32; p + 1];
+                    for head in 0..h {
+                        let q = &row[head * hd..(head + 1) * hd];
+                        kv.key_scores(l, req.slot, head, p + 1, q, &mut scores);
+                        let mut maxv = f32::NEG_INFINITY;
+                        for sc in scores.iter_mut() {
+                            *sc *= scale;
+                            maxv = maxv.max(*sc);
+                        }
+                        let mut denom = 0f32;
+                        for sc in scores.iter_mut() {
+                            *sc = (*sc - maxv).exp();
+                            denom += *sc;
+                        }
+                        let inv = 1.0 / denom;
+                        for sc in scores.iter_mut() {
+                            *sc *= inv;
+                        }
+                        let orow = &mut att[head * hd..(head + 1) * hd];
+                        kv.value_mix(l, req.slot, head, p + 1, &scores, orow);
+                    }
+                    att_rows.push(att);
+                }
+            }
+            let proj =
+                self.quant_forward(&layer.attn_out, &att_rows, &mut waq_ns, &mut crit_ns);
+            add_rows(&mut x, &proj);
+            let mut up = self.quant_forward(
+                &layer.mlp_up,
+                &rms_rows(&x, &layer.ln2),
+                &mut waq_ns,
+                &mut crit_ns,
+            );
+            for r in up.iter_mut() {
+                for v in r.iter_mut() {
+                    *v = gelu(*v);
+                }
+            }
+            let down = self.quant_forward(&layer.mlp_down, &up, &mut waq_ns, &mut crit_ns);
+            add_rows(&mut x, &down);
+        }
+        let host_s = waq_ns as f64 * 1e-9;
+        let crit_s = crit_ns as f64 * 1e-9;
+        let mut outs = Vec::with_capacity(reqs.len());
+        let mut hn = vec![0f32; d];
+        for r in 0..reqs.len() {
+            // the last tail row sits at absolute position plen - 1
+            rms_into(x.row(offs[r] + tails[r] - 1), &self.lnf, &mut hn);
+            let logits = self.head_logits(&hn);
+            let frac = tails[r] as f64 / total as f64;
+            // modeled and measured cost both cover only the computed tail
+            let mut cost = self.cost.prefill(tails[r]);
+            cost.host_waq_s = host_s * frac;
+            cost.shard_crit_s = crit_s * frac;
+            outs.push(PagedPrefillOut { plen: plens[r], logits, cost });
         }
         Ok(outs)
     }

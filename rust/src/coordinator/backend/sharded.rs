@@ -34,7 +34,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::{BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PrefillOut, StepCost};
+use super::{
+    BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PagedPrefill, PagedPrefillOut,
+    PrefillOut, StepCost,
+};
 use crate::coordinator::kv::KvManager;
 use crate::gemm::{ShardPool, WaqBackend};
 use crate::kvcache::KvQuantizer;
@@ -112,6 +115,23 @@ impl DecodeBackend for ShardedWaqBackend {
     /// split proportionally to token counts.
     fn prefill_batch(&mut self, prompts: &[&[i32]]) -> Result<Vec<PrefillOut>> {
         self.inner.prefill_batch(prompts)
+    }
+
+    fn supports_paged_prefill(&self) -> bool {
+        true
+    }
+
+    /// Paged (prefix-cache) prefill over the sharded linears: the inner
+    /// datapath computes only each request's uncached tail, with K/V
+    /// appended into the paged cache and attention read back through it.
+    /// Attention is unsharded, so prefix hits compose with any shard
+    /// count bit-exactly.
+    fn prefill_paged(
+        &mut self,
+        reqs: &[PagedPrefill<'_>],
+        kv: &mut KvManager,
+    ) -> Result<Vec<PagedPrefillOut>> {
+        self.inner.prefill_paged(reqs, kv)
     }
 
     fn decode(

@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::backend::chaos::ChaosCfg;
-use super::backend::{BackendSpec, DecodeBackend};
+use super::backend::{BackendSpec, DecodeBackend, PagedPrefill};
 use super::batcher::{AdmitPolicy, Batcher};
 use super::kv::KvManager;
 use super::request::{EngineStats, FinishReason, Request, Response};
@@ -64,6 +64,14 @@ pub struct EngineConfig {
     /// decode errors, NaN logit rows, and latency spikes. `None` (default)
     /// = no injection. Composes with every backend and every `kv_bits`.
     pub chaos: Option<ChaosCfg>,
+    /// Prompt-prefix KV sharing (`--prefix-cache on`): admission consults
+    /// a radix index over prior prompts and aliases the matched prefix's
+    /// KV blocks (refcounted, copy-on-write) so only the uncached tail is
+    /// prefilled. Requires a backend implementing
+    /// [`DecodeBackend::prefill_paged`]; silently disabled (with a logged
+    /// warning) otherwise. Composes with every `--kv-bits`: shared blocks
+    /// keep their stored payloads, so a hit never dequantizes or re-rounds.
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -78,6 +86,7 @@ impl Default for EngineConfig {
             queue_cap: 0,
             default_deadline_ms: 0,
             chaos: None,
+            prefix_cache: false,
         }
     }
 }
@@ -115,6 +124,15 @@ pub struct Engine {
     rng: Rng,
     /// deadline applied at submit to requests without one (None = none)
     default_deadline: Option<Duration>,
+    /// effective prefix-cache switch: `cfg.prefix_cache` AND the backend
+    /// implements paged prefill (admission routes through
+    /// `prefill_paged` + the radix index when true, the legacy dense
+    /// `prefill_batch` path when false)
+    prefix_cache: bool,
+    /// EWMA of natural completions' wall-clock service time (queue wait +
+    /// compute), feeding the `retry_after_ms` backpressure hint. 0.0
+    /// until the first natural completion.
+    recent_service_s: f64,
 }
 
 impl Engine {
@@ -126,7 +144,15 @@ impl Engine {
             KvBits::Fp32 => KvPrecision::Fp32,
             quantized => KvPrecision::Quant(backend.kv_quantizer(quantized.bits())),
         };
-        let kv = KvManager::with_precision(m, precision);
+        let prefix_cache = cfg.prefix_cache && backend.supports_paged_prefill();
+        if cfg.prefix_cache && !prefix_cache {
+            eprintln!(
+                "engine: --prefix-cache on requested but backend {} has no paged \
+                 prefill; running without prefix sharing",
+                backend.spec().name()
+            );
+        }
+        let kv = KvManager::with_precision_opts(m, precision, prefix_cache);
         let stats = EngineStats {
             waq_backend: backend.spec().name(),
             kv_bits: cfg.kv_bits.bits(),
@@ -142,8 +168,16 @@ impl Engine {
             rng: Rng::new(cfg.seed),
             default_deadline: (cfg.default_deadline_ms > 0)
                 .then(|| Duration::from_millis(cfg.default_deadline_ms)),
+            prefix_cache,
+            recent_service_s: 0.0,
             backend,
         }
+    }
+
+    /// Whether admission runs through the prefix-sharing paged path
+    /// (requested AND supported by the backend).
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_cache
     }
 
     /// Which execution engine + WAQ kernel this engine decodes with.
@@ -185,7 +219,9 @@ impl Engine {
             Ok(()) => None,
             Err(req) => {
                 self.stats.rejected += 1;
-                Some(queued_response(&req, FinishReason::Rejected))
+                let mut resp = queued_response(&req, FinishReason::Rejected);
+                resp.retry_after_ms = self.retry_after_ms();
+                Some(resp)
             }
         }
     }
@@ -196,7 +232,24 @@ impl Engine {
     /// this never enqueues.
     pub fn reject(&mut self, req: Request) -> Response {
         self.stats.rejected += 1;
-        queued_response(&req, FinishReason::Rejected)
+        let mut resp = queued_response(&req, FinishReason::Rejected);
+        resp.retry_after_ms = self.retry_after_ms();
+        resp
+    }
+
+    /// Backpressure hint for rejected submits: estimated milliseconds
+    /// until the queue has drained enough to accept a resubmit — queue
+    /// depth x the EWMA of recent natural completions' service time,
+    /// divided by the decode batch width (requests drain `decode_batch`
+    /// at a time once admitted). 0 before anything has completed (no
+    /// estimate is more honest than a made-up one).
+    pub fn retry_after_ms(&self) -> u64 {
+        if self.recent_service_s <= 0.0 {
+            return 0;
+        }
+        let depth = self.batcher.pending().max(1) as f64;
+        let batch = self.kv.cfg.decode_batch.max(1) as f64;
+        (1000.0 * depth * self.recent_service_s / batch).ceil() as u64
     }
 
     fn with_default_deadline(&self, mut r: Request) -> Request {
@@ -247,7 +300,9 @@ impl Engine {
         // the sequential path); the PJRT default loops internally.
         let free = self.kv.decode_batch_free();
         let admitted = self.batcher.admit(free);
-        if !admitted.is_empty() {
+        if !admitted.is_empty() && self.prefix_cache {
+            self.admit_paged(admitted, &mut done);
+        } else if !admitted.is_empty() {
             let prompts: Vec<&[i32]> = admitted.iter().map(|r| r.prompt.as_slice()).collect();
             match self.backend.prefill_batch(&prompts) {
                 Ok(pres) if pres.len() == admitted.len() => {
@@ -361,7 +416,137 @@ impl Engine {
         // stat robust to any future non-monotone accounting
         self.stats.peak_kv_bytes =
             self.stats.peak_kv_bytes.max(self.kv.peak_cache_bytes() as u64);
+        // eviction count lives on the cache (allocation-pressure and chaos
+        // evictions both land there); mirror it into the stats snapshot
+        self.stats.evictions = self.kv.cache().evictions();
         Ok(done)
+    }
+
+    /// Prefix-sharing admission (`--prefix-cache on`): claim a slot per
+    /// request, alias whatever prefix the radix index already holds, then
+    /// run ONE paged-prefill burst computing only the uncached tails —
+    /// K/V rows append straight into the paged cache and attention reads
+    /// back through it, so hit and cold paths consume bit-identical
+    /// stored payloads at every `--kv-bits`. Prefilled prompts register
+    /// in the index afterwards (intra-burst duplicates miss this round
+    /// and dedup at registration — they hit from the next burst on).
+    fn admit_paged(&mut self, admitted: Vec<Request>, done: &mut Vec<Response>) {
+        let seq_len = self.kv.cfg.seq_len;
+        // (request, claimed slot, index-served token count)
+        let mut planned: Vec<(Request, usize, usize)> = Vec::with_capacity(admitted.len());
+        for req in admitted {
+            let Some(slot) = self.kv.free_slot() else {
+                // unreachable (admit is bounded by free slots) — but an
+                // accounting bug must still answer the request, not drop it
+                self.stats.step_failures += 1;
+                done.push(queued_response(&req, FinishReason::Aborted));
+                continue;
+            };
+            let plen = req.prompt.len().clamp(1, seq_len - 1);
+            match self.kv.admit_prefix(slot, req.id, &req.prompt, plen) {
+                Ok(m) => {
+                    if m.tokens > 0 {
+                        self.stats.prefix_hits += 1;
+                    }
+                    self.stats.prefix_blocks_reused += m.blocks as u64;
+                    planned.push((req, slot, m.tokens));
+                }
+                Err(e) => {
+                    eprintln!(
+                        "engine: prefix admission failed for request {} ({e}); aborting it",
+                        req.id
+                    );
+                    self.stats.step_failures += 1;
+                    done.push(queued_response(&req, FinishReason::Aborted));
+                }
+            }
+        }
+        if planned.is_empty() {
+            return;
+        }
+        let plans: Vec<PagedPrefill<'_>> = planned
+            .iter()
+            .map(|(req, slot, cached)| PagedPrefill {
+                prompt: &req.prompt,
+                slot: *slot,
+                cached: *cached,
+            })
+            .collect();
+        match self.backend.prefill_paged(&plans, &mut self.kv) {
+            Ok(outs) if outs.len() == planned.len() => {
+                drop(plans);
+                let admitted_at = Instant::now();
+                for ((req, slot, _), out) in planned.into_iter().zip(outs) {
+                    let queue_wait_s = (admitted_at - req.arrived).as_secs_f64();
+                    let (start_s, start_j) = (self.sim.seconds, self.sim.energy_j);
+                    let truncated = out.plen < req.prompt.len();
+                    if let Err(e) = self.kv.set_position(slot, out.plen) {
+                        eprintln!(
+                            "engine: paged prefill bookkeeping failed for request {} ({e}); \
+                             aborting it",
+                            req.id
+                        );
+                        self.stats.step_failures += 1;
+                        self.kv.release(slot);
+                        done.push(queued_response(&req, FinishReason::Aborted));
+                        continue;
+                    }
+                    // index the freshly prefilled prompt so later arrivals
+                    // (including the next burst's duplicates) hit
+                    let indexed = out.plen.min(req.prompt.len());
+                    self.kv.register_prefix(slot, &req.prompt[..indexed]);
+                    self.stats.prefills += 1;
+                    if truncated {
+                        self.stats.truncated_prompts += 1;
+                    }
+                    self.sim.seconds += out.cost.accel_s;
+                    self.sim.energy_j += out.cost.accel_j;
+                    self.stats.host_waq_s += out.cost.host_waq_s;
+                    self.stats.host_shard_crit_s += out.cost.shard_crit_s;
+                    // the tail's last-position logits give token #1
+                    let tok = self.sample(&out.logits, req.temperature);
+                    let mut ar = ActiveReq {
+                        req,
+                        generated: vec![tok],
+                        first_token_at: Instant::now(),
+                        queue_wait_s,
+                        truncated_prompt: truncated,
+                        modeled_start_s: start_s,
+                        modeled_start_j: start_j,
+                    };
+                    self.stats.generated_tokens += 1;
+                    if let Some(resp) = self.maybe_finish(slot, &mut ar, admitted_at) {
+                        self.kv.release(slot);
+                        done.push(resp);
+                    } else {
+                        self.active[slot] = Some(ar);
+                    }
+                }
+            }
+            // all-or-nothing burst contract: nothing was sampled, so
+            // release every claimed slot (returning aliased blocks to the
+            // index/pool) and answer each request with Aborted
+            fail => {
+                drop(plans);
+                let err = match fail {
+                    Err(e) => e.to_string(),
+                    Ok(p) => format!(
+                        "backend returned {} paged-prefill results for {} requests",
+                        p.len(),
+                        planned.len()
+                    ),
+                };
+                eprintln!(
+                    "engine: paged burst prefill failed ({err}); aborting {} admitted request(s)",
+                    planned.len()
+                );
+                self.stats.prefill_failures += 1;
+                for (req, slot, _) in planned {
+                    self.kv.release(slot);
+                    done.push(queued_response(&req, FinishReason::Aborted));
+                }
+            }
+        }
     }
 
     /// Drain everything (used by benches/tests): step until idle.
@@ -457,12 +642,20 @@ impl Engine {
             None
         };
         reason.map(|fr| {
+            let resp = self.response_for(ar, fr);
             if fr == FinishReason::DeadlineExpired {
                 self.stats.expired += 1;
             } else {
                 self.stats.completed += 1;
+                // fold this natural completion's measured service time into
+                // the EWMA feeding the retry_after_ms backpressure hint
+                self.recent_service_s = if self.recent_service_s == 0.0 {
+                    resp.total_s
+                } else {
+                    0.8 * self.recent_service_s + 0.2 * resp.total_s
+                };
             }
-            self.response_for(ar, fr)
+            resp
         })
     }
 
@@ -481,6 +674,7 @@ impl Engine {
             total_s: ar.req.arrived.elapsed().as_secs_f64(),
             modeled_accel_s: self.sim.seconds - ar.modeled_start_s,
             modeled_accel_j: self.sim.energy_j - ar.modeled_start_j,
+            retry_after_ms: 0,
         }
     }
 
@@ -561,6 +755,7 @@ fn queued_response(req: &Request, fr: FinishReason) -> Response {
         total_s,
         modeled_accel_s: 0.0,
         modeled_accel_j: 0.0,
+        retry_after_ms: 0,
     }
 }
 
@@ -589,6 +784,7 @@ impl KvManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::PagedPrefillOut;
     use crate::coordinator::backend::PrefillOut;
     use crate::coordinator::backend::StepCost;
     use crate::runtime::artifacts::ModelCfg;
@@ -709,6 +905,96 @@ mod tests {
             }
             Ok((logits, StepCost::default()))
         }
+
+        fn supports_paged_prefill(&self) -> bool {
+            true
+        }
+
+        /// Minimal honest paged prefill: appends constant K/V rows for the
+        /// uncached tail (the real contract — the cached prefix is already
+        /// in the slot's block table) and returns fixed logits.
+        fn prefill_paged(
+            &mut self,
+            reqs: &[PagedPrefill<'_>],
+            kv: &mut KvManager,
+        ) -> Result<Vec<PagedPrefillOut>> {
+            let m = self.model;
+            let d = m.n_heads * m.head_dim;
+            let mut outs = Vec::with_capacity(reqs.len());
+            for r in reqs {
+                let plen = r.prompt.len().clamp(1, m.seq_len - 1);
+                for l in 0..m.n_layers {
+                    for p in r.cached..plen {
+                        kv.append_token(l, r.slot, p, &vec![0.1; d], &vec![0.2; d])
+                            .map_err(anyhow::Error::msg)?;
+                    }
+                }
+                let mut logits = vec![0.0f32; m.vocab];
+                logits[1] = 1.0;
+                outs.push(PagedPrefillOut { plen, logits, cost: StepCost::default() });
+            }
+            Ok(outs)
+        }
+    }
+
+    #[test]
+    fn prefix_cache_admission_hits_and_reuses_blocks() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig { prefix_cache: true, ..Default::default() };
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
+        assert!(e.prefix_cache_enabled());
+        // one full 16-token block plus a 4-token partial tail block
+        let prompt: Vec<i32> = (100..120).collect();
+        e.submit(Request::new(1, prompt.clone(), 2));
+        let done = e.run_to_completion().expect("cold run");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish_reason, FinishReason::MaxTokens);
+        assert_eq!(e.stats.prefix_hits, 0, "cold index: no hit");
+        assert_eq!(e.stats.prefix_blocks_reused, 0);
+        let parked = e.kv().cache().in_use_blocks();
+        assert!(parked > 0, "released slot leaves its prompt parked in the index");
+        // same prompt again: the index serves every token but the last
+        // (16 full + 3 of the partial chunk = 19 of 20)
+        e.submit(Request::new(2, prompt.clone(), 2));
+        let done = e.run_to_completion().expect("warm run");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish_reason, FinishReason::MaxTokens);
+        assert_eq!(e.stats.prefix_hits, 1, "warm admission hit");
+        // 2 blocks aliased per layer (full chunk + partial chunk)
+        assert_eq!(e.stats.prefix_blocks_reused, 2 * cfg.n_layers as u64);
+        assert_eq!(e.stats.prefills, 2);
+        // a divergent prompt sharing only the full block still hits
+        let mut fork = prompt[..18].to_vec();
+        fork[17] = 999;
+        e.submit(Request::new(3, fork, 2));
+        e.run_to_completion().expect("fork run");
+        assert_eq!(e.stats.prefix_hits, 2);
+        assert_eq!(e.stats.step_failures, 0);
+        assert_eq!(e.stats.prefill_failures, 0);
+    }
+
+    #[test]
+    fn rejected_response_carries_retry_after_once_estimable() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig { queue_cap: 1, ..Default::default() };
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
+        assert!(e.try_submit(Request::new(1, vec![1, 2], 2)).is_none());
+        // nothing has completed yet: no service-time estimate, hint is 0
+        let r = e.try_submit(Request::new(2, vec![1, 2], 2)).expect("queue full");
+        assert_eq!(r.finish_reason, FinishReason::Rejected);
+        assert_eq!(r.retry_after_ms, 0, "no estimate before first completion");
+        let done = e.run_to_completion().expect("run");
+        assert_eq!(done.len(), 1);
+        // EWMA primed by the natural completion: a fresh rejection now
+        // carries a non-zero backpressure hint
+        assert!(e.try_submit(Request::new(3, vec![1, 2], 2)).is_none());
+        let r = e.try_submit(Request::new(4, vec![1, 2], 2)).expect("queue full");
+        assert_eq!(r.finish_reason, FinishReason::Rejected);
+        assert!(r.retry_after_ms >= 1, "hint {}", r.retry_after_ms);
+        // the drain-path rejection carries the hint too
+        let drained = e.reject(Request::new(5, vec![1], 2));
+        assert!(drained.retry_after_ms >= 1);
+        assert_eq!(e.stats.rejected, 3);
     }
 
     #[test]

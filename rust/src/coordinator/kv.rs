@@ -7,7 +7,7 @@
 //! Slot state is the coordinator invariant most heavily property-tested
 //! (no leaks, no double-assignments, position bounds).
 
-use crate::kvcache::{KvPrecision, PagedKvCache};
+use crate::kvcache::{KvPrecision, PagedKvCache, PrefixMatch};
 use crate::runtime::artifacts::ModelCfg;
 use crate::runtime::HostTensor;
 
@@ -32,8 +32,18 @@ impl KvManager {
     }
 
     pub fn with_precision(cfg: ModelCfg, precision: KvPrecision) -> Self {
+        Self::with_precision_opts(cfg, precision, false)
+    }
+
+    /// Full-option constructor: storage precision plus the prompt-prefix
+    /// radix index (`--prefix-cache on`).
+    pub fn with_precision_opts(
+        cfg: ModelCfg,
+        precision: KvPrecision,
+        prefix_cache: bool,
+    ) -> Self {
         KvManager {
-            cache: PagedKvCache::new(&cfg, precision),
+            cache: PagedKvCache::new_with_prefix(&cfg, precision, prefix_cache),
             slots: vec![Slot::Free; cfg.decode_batch],
             cfg,
         }
@@ -43,6 +53,58 @@ impl KvManager {
     /// and block-table introspection).
     pub fn cache(&self) -> &PagedKvCache {
         &self.cache
+    }
+
+    /// Mutable cache access (chaos injection and prefix maintenance).
+    pub fn cache_mut(&mut self) -> &mut PagedKvCache {
+        &mut self.cache
+    }
+
+    /// Whether the prompt-prefix index is enabled on the cache.
+    pub fn prefix_enabled(&self) -> bool {
+        self.cache.prefix_enabled()
+    }
+
+    /// Claim `slot` for `request` and serve as much of `prompt` as the
+    /// prefix index holds by aliasing shared blocks (at most `plen - 1`
+    /// tokens, so the tail always computes logits). The slot comes up
+    /// `Active` at the matched position; the paged-prefill path then
+    /// appends the remaining tokens. With the index disabled this just
+    /// claims the slot at position 0.
+    pub fn admit_prefix(
+        &mut self,
+        slot: usize,
+        request: RequestId,
+        prompt: &[i32],
+        plen: usize,
+    ) -> Result<PrefixMatch, String> {
+        if self.slots[slot] != Slot::Free {
+            return Err(format!("slot {slot} not free"));
+        }
+        if plen == 0 || plen > self.cfg.seq_len {
+            return Err(format!("prompt_len {plen} out of range"));
+        }
+        let m = self.cache.admit_prefix(slot, prompt, plen - 1);
+        self.slots[slot] = Slot::Active { request, pos: m.tokens };
+        Ok(m)
+    }
+
+    /// Set an active slot's position (paged prefill completed: the slot
+    /// has written `pos` tokens).
+    pub fn set_position(&mut self, slot: usize, new_pos: usize) -> Result<(), String> {
+        match &mut self.slots[slot] {
+            Slot::Active { pos, .. } => {
+                *pos = new_pos;
+                Ok(())
+            }
+            Slot::Free => Err(format!("set_position on free slot {slot}")),
+        }
+    }
+
+    /// Register the slot's prefilled prompt prefix in the prefix index
+    /// (no-op when disabled).
+    pub fn register_prefix(&mut self, slot: usize, tokens: &[i32]) {
+        self.cache.register_prefix(slot, tokens);
     }
 
     /// Stored bits per cache element (32 = FP32).

@@ -14,7 +14,8 @@ pub mod server;
 
 pub use backend::{
     probe_decode_logits, BackendSpec, ChaosBackend, ChaosCfg, ChaosCounters, DecodeBackend,
-    NativeCfg, NativeWaqBackend, PjrtBackend, PrefillOut, ShardedWaqBackend, StepCost,
+    NativeCfg, NativeWaqBackend, PagedPrefill, PagedPrefillOut, PjrtBackend, PrefillOut,
+    ShardedWaqBackend, StepCost,
 };
 pub use batcher::{AdmitPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, SimTotals};

@@ -82,6 +82,13 @@ pub struct Response {
     /// every decode step it was in flight for), not the engine total
     pub modeled_accel_s: f64,
     pub modeled_accel_j: f64,
+    /// Backpressure hint attached to [`FinishReason::Rejected`] responses:
+    /// estimated milliseconds until the engine has drained enough queue to
+    /// accept a resubmit (queue depth x recent per-request service time /
+    /// decode batch width). `0` for every non-rejected outcome, and for
+    /// rejections before the engine has completed anything to estimate
+    /// from. Surfaced over TCP as `retry_after_ms` on rejection replies.
+    pub retry_after_ms: u64,
 }
 
 /// Why a request left the engine. Every submitted request receives
@@ -199,6 +206,18 @@ pub struct EngineStats {
     pub peak_kv_bytes: u64,
     /// ideal KV-cache storage bytes per token position (all layers, K+V)
     pub kv_bytes_per_token: f64,
+    /// Admitted requests whose prompt matched a non-empty prefix in the
+    /// radix index (`--prefix-cache on`): their matched tokens were served
+    /// by aliasing shared KV blocks instead of recomputing prefill.
+    pub prefix_hits: u64,
+    /// Total KV blocks aliased from the prefix index across all admissions
+    /// (block refcount bumps, summed over layers — the direct measure of
+    /// prefill compute and cache capacity the index saved).
+    pub prefix_blocks_reused: u64,
+    /// Prefix-cache blocks freed by LRU eviction: allocation-pressure
+    /// evictions (pool exhausted at alloc time) plus chaos-injected
+    /// pressure. Only index-only blocks (refcount 1) are ever evicted.
+    pub evictions: u64,
 }
 
 impl EngineStats {
@@ -208,6 +227,44 @@ impl EngineStats {
         } else {
             self.occupancy_sum as f64 / self.decode_steps as f64
         }
+    }
+
+    /// One-line JSON dump of every counter — the `{"cmd": "stats"}`
+    /// control-path reply and the stdin `stats` command. Keys are stable;
+    /// additions append, never rename.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"decode_steps\": {}, \"prefills\": {}, \"truncated_prompts\": {}, ",
+                "\"prefill_failures\": {}, \"step_failures\": {}, \"rejected\": {}, ",
+                "\"expired\": {}, \"accept_errors\": {}, \"conn_rejected\": {}, ",
+                "\"generated_tokens\": {}, \"completed\": {}, \"mean_occupancy\": {:.4}, ",
+                "\"waq_backend\": \"{}\", \"host_waq_s\": {:.6}, \"host_shard_crit_s\": {:.6}, ",
+                "\"kv_bits\": {}, \"peak_kv_bytes\": {}, \"kv_bytes_per_token\": {:.3}, ",
+                "\"prefix_hits\": {}, \"prefix_blocks_reused\": {}, \"evictions\": {}}}"
+            ),
+            self.decode_steps,
+            self.prefills,
+            self.truncated_prompts,
+            self.prefill_failures,
+            self.step_failures,
+            self.rejected,
+            self.expired,
+            self.accept_errors,
+            self.conn_rejected,
+            self.generated_tokens,
+            self.completed,
+            self.mean_occupancy(),
+            self.waq_backend,
+            self.host_waq_s,
+            self.host_shard_crit_s,
+            self.kv_bits,
+            self.peak_kv_bytes,
+            self.kv_bytes_per_token,
+            self.prefix_hits,
+            self.prefix_blocks_reused,
+            self.evictions,
+        )
     }
 }
 
@@ -230,6 +287,24 @@ mod tests {
             assert_eq!(fr.to_string(), name);
             assert_eq!(fr.is_natural(), natural, "{name}");
         }
+    }
+
+    #[test]
+    fn stats_json_is_one_line_and_carries_prefix_counters() {
+        let s = EngineStats {
+            prefix_hits: 3,
+            prefix_blocks_reused: 12,
+            evictions: 2,
+            waq_backend: "native-packed",
+            ..Default::default()
+        };
+        let j = s.to_json();
+        assert!(!j.contains('\n'), "stats dump must be a single line");
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"prefix_hits\": 3"));
+        assert!(j.contains("\"prefix_blocks_reused\": 12"));
+        assert!(j.contains("\"evictions\": 2"));
+        assert!(j.contains("\"waq_backend\": \"native-packed\""));
     }
 
     #[test]

@@ -25,8 +25,17 @@
 //! rejected | deadline_expired` ([`FinishReason::name`]); `rejected` is
 //! `true` exactly when admission control refused the request (queue at
 //! `--queue-cap`, or the server is draining), so load-shedding is
-//! machine-detectable without string matching. Malformed or failed
-//! request lines get `{"error": "<json-escaped message>"}` instead.
+//! machine-detectable without string matching. Rejection replies
+//! additionally carry `"retry_after_ms"` — the engine's backpressure
+//! hint (queue depth x recent service time) telling the client when a
+//! resubmit is likely to be admitted; `0` when the engine has no
+//! estimate yet. Malformed or failed request lines get
+//! `{"error": "<json-escaped message>"}` instead.
+//!
+//! A control line `{"cmd": "stats"}` (no prompt) replies with one JSON
+//! line of engine counters ([`EngineStats::to_json`]) — including the
+//! prefix-cache counters (`prefix_hits`, `prefix_blocks_reused`,
+//! `evictions`) — without consuming queue or KV capacity.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -605,10 +614,18 @@ fn response_reply(resp: &Response) -> String {
         .map(|t| t.to_string())
         .collect::<Vec<_>>()
         .join(",");
+    // the backpressure hint is a rejection-only field: absent elsewhere so
+    // clients can treat its presence as "resubmit later" without checking
+    // finish_reason first
+    let retry = if resp.finish_reason == FinishReason::Rejected {
+        format!(", \"retry_after_ms\": {}", resp.retry_after_ms)
+    } else {
+        String::new()
+    };
     format!(
         "{{\"id\": {}, \"tokens\": [{}], \"finish_reason\": {}, \"rejected\": {}, \
          \"truncated_prompt\": {}, \"queue_wait_s\": {:.6}, \"ttft_s\": {:.6}, \
-         \"total_s\": {:.6}, \"modeled_accel_s\": {:.6}}}",
+         \"total_s\": {:.6}, \"modeled_accel_s\": {:.6}{}}}",
         resp.id,
         toks,
         json::escape(resp.finish_reason.name()),
@@ -617,12 +634,18 @@ fn response_reply(resp: &Response) -> String {
         resp.queue_wait_s,
         resp.ttft_s,
         resp.total_s,
-        resp.modeled_accel_s
+        resp.modeled_accel_s,
+        retry
     )
 }
 
 fn handle_line(coord: &Coordinator, line: &str) -> Result<String, String> {
     let j = Json::parse(line)?;
+    // control path first: a stats line has no prompt and never enqueues
+    if j.get("cmd").and_then(Json::as_str) == Some("stats") {
+        let (stats, _) = coord.stats().map_err(|e| e.to_string())?;
+        return Ok(stats.to_json());
+    }
     let prompt: Vec<i32> = j
         .expect("prompt")?
         .as_arr()
@@ -689,6 +712,7 @@ mod tests {
             total_s: 0.002,
             modeled_accel_s: 0.0001,
             modeled_accel_j: 0.0,
+            retry_after_ms: 120,
         };
         let done = Json::parse(&response_reply(&mk(FinishReason::MaxTokens, vec![1, 2])))
             .expect("valid JSON");
@@ -696,11 +720,14 @@ mod tests {
         assert_eq!(done.get("rejected").and_then(Json::as_bool), Some(false));
         assert_eq!(done.get("tokens").unwrap().as_arr().unwrap().len(), 2);
         assert!(done.get("queue_wait_s").and_then(Json::as_f64).is_some());
+        // the hint is a rejection-only field
+        assert!(done.get("retry_after_ms").is_none());
 
         let rej = Json::parse(&response_reply(&mk(FinishReason::Rejected, vec![])))
             .expect("valid JSON");
         assert_eq!(rej.get("rejected").and_then(Json::as_bool), Some(true));
         assert_eq!(rej.get("finish_reason").and_then(Json::as_str), Some("rejected"));
         assert_eq!(rej.get("tokens").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(rej.get("retry_after_ms").and_then(Json::as_f64), Some(120.0));
     }
 }

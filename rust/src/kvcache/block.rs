@@ -1,8 +1,22 @@
 //! Fixed-size block allocator: a free list over a bounded pool of block
-//! ids. Blocks are handed to `(slot, layer)` block tables by
-//! [`super::PagedKvCache`]; releasing is O(blocks) pointer pushes — the
-//! payload is never copied or zeroed (reads are bounded by written
-//! counts, so stale payloads are unobservable).
+//! ids, with per-block reference counts so one physical block can be
+//! aliased into several `(slot, layer)` block tables at once (prefix
+//! sharing). Releasing is O(blocks) pointer pushes — the payload is
+//! never copied or zeroed (reads are bounded by written counts, so stale
+//! payloads are unobservable).
+//!
+//! # Refcount protocol
+//!
+//! * [`BlockAllocator::alloc`] mints a block at refcount 1.
+//! * [`BlockAllocator::retain`] adds a holder (a second slot table or the
+//!   prefix index aliasing the block).
+//! * [`BlockAllocator::release`] drops a holder; the block returns to the
+//!   free list only when the count reaches 0 (the `bool` return tells the
+//!   caller whether the payload actually died, i.e. whether side tables
+//!   such as outlier accounting must be cleared).
+//!
+//! Releasing a block that is not live panics — a refcount underflow would
+//! silently alias one physical block into two logical owners.
 
 /// Free-list allocator over block ids `0..capacity`.
 ///
@@ -16,8 +30,8 @@ pub struct BlockAllocator {
     /// next never-used id
     next: u32,
     capacity: u32,
-    /// liveness bitmap over minted ids (guards double-release)
-    live: Vec<bool>,
+    /// per-minted-id reference count; 0 = free (guards double-release)
+    refs: Vec<u32>,
 }
 
 impl BlockAllocator {
@@ -26,12 +40,12 @@ impl BlockAllocator {
             free: Vec::new(),
             next: 0,
             capacity: capacity as u32,
-            live: Vec::new(),
+            refs: Vec::new(),
         }
     }
 
-    /// Hand out a block id, reusing released ids before minting new ones.
-    /// `None` when the pool is exhausted.
+    /// Hand out a block id at refcount 1, reusing released ids before
+    /// minting new ones. `None` when the pool is exhausted.
     pub fn alloc(&mut self) -> Option<u32> {
         let id = match self.free.pop() {
             Some(id) => id,
@@ -41,31 +55,53 @@ impl BlockAllocator {
                 }
                 let id = self.next;
                 self.next += 1;
-                self.live.push(false);
+                self.refs.push(0);
                 id
             }
         };
-        debug_assert!(!self.live[id as usize], "allocated a live block {id}");
-        self.live[id as usize] = true;
+        debug_assert_eq!(self.refs[id as usize], 0, "allocated a live block {id}");
+        self.refs[id as usize] = 1;
         Some(id)
     }
 
-    /// Return a block to the free list. Double-release is a caller bug and
-    /// panics (it would alias one block into two tables).
-    pub fn release(&mut self, id: u32) {
+    /// Add a holder to a live block (aliasing it into another table or
+    /// into the prefix index).
+    pub fn retain(&mut self, id: u32) {
         assert!(
-            self.live.get(id as usize).copied().unwrap_or(false),
+            self.refs.get(id as usize).copied().unwrap_or(0) > 0,
+            "retain of non-live block {id}"
+        );
+        self.refs[id as usize] += 1;
+    }
+
+    /// Drop a holder. Returns `true` when this was the last reference and
+    /// the block went back on the free list (payload side tables should be
+    /// cleared by the caller). Releasing a non-live block is a caller bug
+    /// and panics (it would alias one block into two tables).
+    pub fn release(&mut self, id: u32) -> bool {
+        assert!(
+            self.refs.get(id as usize).copied().unwrap_or(0) > 0,
             "release of non-live block {id}"
         );
-        self.live[id as usize] = false;
-        self.free.push(id);
+        self.refs[id as usize] -= 1;
+        if self.refs[id as usize] == 0 {
+            self.free.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current reference count (0 = free).
+    pub fn ref_count(&self, id: u32) -> u32 {
+        self.refs.get(id as usize).copied().unwrap_or(0)
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity as usize
     }
 
-    /// Blocks currently assigned to a table.
+    /// Blocks currently assigned to at least one table.
     pub fn in_use(&self) -> usize {
         self.next as usize - self.free.len()
     }
@@ -88,11 +124,25 @@ mod tests {
         assert_ne!(b0, b1);
         assert_eq!(a.alloc(), None, "pool exhausted");
         assert_eq!(a.in_use(), 2);
-        a.release(b0);
+        assert!(a.release(b0), "last holder frees the block");
         assert_eq!(a.in_use(), 1);
         // released id is reused; high-water stays at 2
         assert_eq!(a.alloc(), Some(b0));
         assert_eq!(a.high_water(), 2);
+    }
+
+    #[test]
+    fn retain_defers_the_free() {
+        let mut a = BlockAllocator::new(1);
+        let b = a.alloc().unwrap();
+        a.retain(b);
+        assert_eq!(a.ref_count(b), 2);
+        assert!(!a.release(b), "one holder remains");
+        assert_eq!(a.in_use(), 1, "still live while aliased");
+        assert_eq!(a.alloc(), None, "aliased block is not reusable");
+        assert!(a.release(b), "last holder frees");
+        assert_eq!(a.ref_count(b), 0);
+        assert_eq!(a.alloc(), Some(b));
     }
 
     #[test]
@@ -102,5 +152,14 @@ mod tests {
         let b = a.alloc().unwrap();
         a.release(b);
         a.release(b);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-live")]
+    fn retain_of_free_block_panics() {
+        let mut a = BlockAllocator::new(1);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.retain(b);
     }
 }

@@ -58,13 +58,44 @@
 //! 2-bit. [`PagedKvCache::bytes_per_token`] reports this figure;
 //! [`PagedKvCache::peak_bytes`] reports the high-water mark of actually
 //! reserved block storage.
+//!
+//! # Prefix sharing (`--prefix-cache on`)
+//!
+//! Because block tables are indirection, requests that share a prompt
+//! head can share *physical* blocks. [`prefix::PrefixIndex`] is a radix
+//! trie over prompt-token chunks at block granularity: admission walks
+//! it and aliases every matched block into the new slot's tables
+//! (refcount +1 per block per layer in [`BlockAllocator`]), so only the
+//! uncached prompt tail is ever prefilled; after prefill the prompt's
+//! chunks are registered so later requests hit them. Shared blocks keep
+//! their stored payloads — quantized or FP32 — so a hit never
+//! requantizes and never dequantizes outside the fused attention
+//! gathers, which is what keeps hit-path decode bit-exact with a cold
+//! run at every `--kv-bits`.
+//!
+//! The refcount / copy-on-write / eviction protocol:
+//!
+//! * every holder of a block (each `(slot, layer)` table entry, plus the
+//!   index itself for registered chunks) owns one reference; the block
+//!   returns to the free list only when the last holder releases it —
+//!   no leaks, no double frees (underflow panics);
+//! * an append into a block with refcount > 1 first copies the shared
+//!   token rows `[0, ti)` into a private block (**copy-on-write**), so
+//!   divergent continuations never corrupt a shared prefix;
+//! * when the pool is exhausted, LRU **eviction** walks the index for
+//!   the coldest leaf whose blocks the index holds alone (refcount ==
+//!   1) and frees it — blocks aliased into any live slot are never
+//!   evicted, and with the index disabled behavior is exactly the
+//!   pre-prefix-cache error path.
 
 pub mod block;
 pub mod paged;
+pub mod prefix;
 pub mod quantized;
 
 pub use block::BlockAllocator;
-pub use paged::{KvPrecision, PagedKvCache};
+pub use paged::{KvPrecision, PagedKvCache, PrefixMatch};
+pub use prefix::PrefixIndex;
 pub use quantized::{KvQuantizer, KvSide};
 
 /// KV-cache storage precision selector (the `--kv-bits {32,4,3,2}` knob).

@@ -14,6 +14,7 @@
 //! [`value_mix`]: PagedKvCache::value_mix
 
 use super::block::BlockAllocator;
+use super::prefix::PrefixIndex;
 use super::quantized::{read_idx, KvQuantizer, KvSide};
 use crate::runtime::artifacts::ModelCfg;
 
@@ -23,6 +24,15 @@ pub enum KvPrecision {
     Fp32,
     /// n-bit K-Means index streams driven by the given quantizer.
     Quant(KvQuantizer),
+}
+
+/// Result of a prefix-index admission: how many prompt tokens were
+/// served from aliased blocks and how many per-layer block aliases that
+/// took (`tokens > 0` counts as one prefix hit).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixMatch {
+    pub tokens: usize,
+    pub blocks: usize,
 }
 
 /// Bytes per stored outlier entry: u16 channel + f32 value (accounted,
@@ -93,6 +103,11 @@ pub struct PagedKvCache {
     /// `[slot * n_layers + layer]` -> written position count
     written: Vec<usize>,
     store: Store,
+    /// prompt-prefix radix index (`--prefix-cache on`); `None` = disabled
+    prefix: Option<PrefixIndex>,
+    /// blocks freed by LRU eviction (prefix-index-only blocks dropped to
+    /// make room for allocations)
+    evictions: u64,
 }
 
 impl PagedKvCache {
@@ -101,6 +116,18 @@ impl PagedKvCache {
     pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 
     pub fn new(m: &ModelCfg, precision: KvPrecision) -> PagedKvCache {
+        Self::new_with_prefix(m, precision, false)
+    }
+
+    /// Build the cache with the prompt-prefix radix index enabled or
+    /// disabled. With it off, behavior is identical to pre-prefix-cache
+    /// builds (every refcount stays at 1, so copy-on-write never fires
+    /// and nothing is ever evictable).
+    pub fn new_with_prefix(
+        m: &ModelCfg,
+        precision: KvPrecision,
+        prefix_cache: bool,
+    ) -> PagedKvCache {
         let block_tokens = Self::DEFAULT_BLOCK_TOKENS.min(m.seq_len.max(1));
         let blocks_per = m.seq_len.div_ceil(block_tokens);
         let capacity = m.decode_batch * m.n_layers * blocks_per;
@@ -139,7 +166,36 @@ impl PagedKvCache {
             tables: vec![Vec::new(); m.decode_batch * m.n_layers],
             written: vec![0; m.decode_batch * m.n_layers],
             store,
+            prefix: prefix_cache.then(|| PrefixIndex::new(block_tokens, m.n_layers)),
+            evictions: 0,
         }
+    }
+
+    /// Whether the prompt-prefix radix index is enabled.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Live prefix-index node count (stats/introspection).
+    pub fn prefix_nodes(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.node_count())
+    }
+
+    /// Blocks freed by LRU eviction so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Allocator reference count for one block id (refcount audits).
+    pub fn block_ref_count(&self, id: u32) -> usize {
+        self.alloc.ref_count(id)
+    }
+
+    /// Every block id the prefix index holds a reference on, with
+    /// multiplicity (empty when the index is disabled). Together with the
+    /// slot tables this enumerates every holder the allocator knows of.
+    pub fn prefix_block_refs(&self) -> Vec<u32> {
+        self.prefix.as_ref().map_or_else(Vec::new, |p| p.block_refs())
     }
 
     /// Stored bits per cache element: 32 for FP32, else the codebook
@@ -211,18 +267,148 @@ impl PagedKvCache {
         }
         let bi = pos / self.block_tokens;
         if bi == self.tables[e].len() {
-            let id = self
-                .alloc
-                .alloc()
-                .ok_or_else(|| "kv block pool exhausted".to_string())?;
+            let id = self.alloc_with_evict()?;
             self.store.ensure(id);
             self.tables[e].push(id);
         }
-        let block = self.tables[e][bi];
+        let mut block = self.tables[e][bi];
         let ti = pos % self.block_tokens;
+        if self.alloc.ref_count(block) > 1 {
+            // copy-on-write: the block is aliased (other slots and/or the
+            // prefix index hold it), so this slot's first divergent
+            // append lands in a private copy of the shared rows [0, ti)
+            let id = self.alloc_with_evict()?;
+            self.store.ensure(id);
+            self.store.copy_rows(block, id, ti);
+            self.tables[e][bi] = id;
+            if self.alloc.release(block) {
+                self.store.release_block(block);
+            }
+            block = id;
+        }
         self.store.write_token(block, ti, layer, k_row, v_row);
         self.written[e] = pos + 1;
         Ok(())
+    }
+
+    /// Allocate a block, evicting LRU prefix-index-only blocks when the
+    /// pool is exhausted. Without the index (or with nothing evictable)
+    /// exhaustion is an error, exactly as before.
+    fn alloc_with_evict(&mut self) -> Result<u32, String> {
+        if let Some(id) = self.alloc.alloc() {
+            return Ok(id);
+        }
+        let Some(mut idx) = self.prefix.take() else {
+            return Err("kv block pool exhausted".to_string());
+        };
+        let got = loop {
+            match idx.evict_lru(&self.alloc) {
+                Some(blocks) => {
+                    for b in blocks {
+                        if self.alloc.release(b) {
+                            self.store.release_block(b);
+                        }
+                        self.evictions += 1;
+                    }
+                    if let Some(id) = self.alloc.alloc() {
+                        break Ok(id);
+                    }
+                }
+                None => {
+                    break Err(
+                        "kv block pool exhausted (no evictable prefix blocks)".to_string()
+                    )
+                }
+            }
+        };
+        self.prefix = Some(idx);
+        got
+    }
+
+    /// Consult the prefix index for `prompt` and alias every matched
+    /// block into `slot`'s tables (refcount +1 per block per layer). The
+    /// slot must be empty. At most `max_match` tokens are served from the
+    /// cache — the caller passes `plen - 1` so at least one prompt token
+    /// is always computed (sampling needs logits). A no-op returning zero
+    /// when the index is disabled.
+    pub fn admit_prefix(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        max_match: usize,
+    ) -> PrefixMatch {
+        let Some(mut idx) = self.prefix.take() else {
+            return PrefixMatch::default();
+        };
+        debug_assert!(
+            (0..self.n_layers).all(|l| self.written[self.entry(l, slot)] == 0),
+            "prefix admission into a non-empty slot"
+        );
+        let path = idx.lookup(prompt, max_match);
+        let mut matched = 0usize;
+        let mut blocks = 0usize;
+        for seg in &path {
+            for (layer, &b) in seg.blocks.iter().enumerate() {
+                self.alloc.retain(b);
+                let e = self.entry(layer, slot);
+                self.tables[e].push(b);
+            }
+            matched += seg.tokens;
+            blocks += seg.blocks.len();
+        }
+        for layer in 0..self.n_layers {
+            let e = self.entry(layer, slot);
+            self.written[e] = matched;
+        }
+        self.prefix = Some(idx);
+        PrefixMatch { tokens: matched, blocks }
+    }
+
+    /// Register `slot`'s first `tokens.len()` positions (a prefilled
+    /// prompt) in the prefix index. Newly indexed chunks retain the
+    /// slot's blocks (the index becomes a holder, so they outlive the
+    /// slot); chunks already indexed are deduplicated. A no-op when the
+    /// index is disabled.
+    pub fn register_prefix(&mut self, slot: usize, tokens: &[i32]) {
+        let Some(mut idx) = self.prefix.take() else { return };
+        debug_assert!(
+            tokens.is_empty() || self.written[self.entry(0, slot)] >= tokens.len(),
+            "registering unwritten positions"
+        );
+        let n_chunks = tokens.len().div_ceil(self.block_tokens);
+        let mut chunk_blocks = Vec::with_capacity(n_chunks);
+        for ci in 0..n_chunks {
+            let per_layer: Vec<u32> = (0..self.n_layers)
+                .map(|l| self.tables[self.entry(l, slot)][ci])
+                .collect();
+            chunk_blocks.push(per_layer);
+        }
+        idx.register(tokens, &chunk_blocks, &mut self.alloc);
+        self.prefix = Some(idx);
+    }
+
+    /// Forcibly evict up to `n` LRU index-only blocks (chaos injection:
+    /// deterministic allocation pressure on the prefix cache). Returns
+    /// how many blocks were actually freed.
+    pub fn evict_cached(&mut self, n: usize) -> usize {
+        let Some(mut idx) = self.prefix.take() else { return 0 };
+        let mut freed = 0usize;
+        while freed < n {
+            match idx.evict_lru(&self.alloc) {
+                Some(blocks) => {
+                    for b in blocks {
+                        if self.alloc.release(b) {
+                            self.store.release_block(b);
+                        }
+                        self.evictions += 1;
+                        freed += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        self.prefix = Some(idx);
+        freed
     }
 
     /// Fused-dequant key gather: `scores[j] = q . K[layer, slot, head, j]`
@@ -289,17 +475,19 @@ impl PagedKvCache {
     /// Release every block of `slot` back to the free list — copy-free:
     /// no payload is touched. Unwritten (and now unmapped) positions
     /// materialize as zeros, so stale keys cannot leak into the slot's
-    /// next tenant. Only the outlier *side table* of each freed block is
-    /// cleared (accounting metadata, not payload): otherwise
-    /// `allocated_bytes`/`peak_bytes` would keep counting freed rows'
-    /// FP-preserved channels.
+    /// next tenant. Blocks aliased elsewhere (prefix index, other slots)
+    /// only lose this slot's reference and stay live. Only the outlier
+    /// *side table* of each actually-freed block is cleared (accounting
+    /// metadata, not payload): otherwise `allocated_bytes`/`peak_bytes`
+    /// would keep counting freed rows' FP-preserved channels.
     pub fn release(&mut self, slot: usize) {
         for layer in 0..self.n_layers {
             let e = self.entry(layer, slot);
             let blocks = std::mem::take(&mut self.tables[e]);
             for id in blocks {
-                self.store.release_block(id);
-                self.alloc.release(id);
+                if self.alloc.release(id) {
+                    self.store.release_block(id);
+                }
             }
             self.written[e] = 0;
         }
@@ -416,6 +604,48 @@ impl Store {
                 s.outlier_entries -= s.k_out[row].len() + s.v_out[row].len();
                 s.k_out[row] = Vec::new();
                 s.v_out[row] = Vec::new();
+            }
+        }
+    }
+
+    /// Copy token rows `[0, n_tok)` of every head (K and V payloads,
+    /// scales, and outlier side tables) from block `src` to block `dst` —
+    /// the copy half of copy-on-write. Rows of one head are contiguous
+    /// across token index, so each head is one `copy_within`.
+    fn copy_rows(&mut self, src: u32, dst: u32, n_tok: usize) {
+        match self {
+            Store::Fp32(s) => {
+                let hd = s.geom.head_dim;
+                for head in 0..s.geom.n_heads {
+                    let a = s.geom.row(src, head, 0) * hd;
+                    let b = s.geom.row(dst, head, 0) * hd;
+                    let len = n_tok * hd;
+                    s.k.copy_within(a..a + len, b);
+                    s.v.copy_within(a..a + len, b);
+                }
+            }
+            Store::Quant(s) => {
+                let rb = s.row_bytes;
+                for head in 0..s.geom.n_heads {
+                    let ra = s.geom.row(src, head, 0);
+                    let rd = s.geom.row(dst, head, 0);
+                    s.k_idx.copy_within(ra * rb..(ra + n_tok) * rb, rd * rb);
+                    s.v_idx.copy_within(ra * rb..(ra + n_tok) * rb, rd * rb);
+                    s.k_scale.copy_within(ra..ra + n_tok, rd);
+                    s.v_scale.copy_within(ra..ra + n_tok, rd);
+                    for t in 0..n_tok {
+                        let (a, b) = (ra + t, rd + t);
+                        let ko = s.k_out[a].clone();
+                        let vo = s.v_out[a].clone();
+                        let old = s.k_out[b].len() + s.v_out[b].len();
+                        s.outlier_entries =
+                            s.outlier_entries + ko.len() + vo.len() - old;
+                        s.peak_outlier_entries =
+                            s.peak_outlier_entries.max(s.outlier_entries);
+                        s.k_out[b] = ko;
+                        s.v_out[b] = vo;
+                    }
+                }
             }
         }
     }

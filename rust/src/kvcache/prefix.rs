@@ -1,0 +1,385 @@
+//! Radix (trie) index over prompt-token prefixes at block granularity —
+//! the sharing half of the prefix-cache subsystem.
+//!
+//! # Structure
+//!
+//! Each node covers a *chunk* of `1..=block_tokens` consecutive prompt
+//! tokens and owns one physical block id **per layer** (the same token
+//! positions exist in every layer's table, so a chunk pins `n_layers`
+//! blocks). Children hang only off *full* (`block_tokens`-sized) nodes:
+//! a partial node is always the last hop of a path, mirroring the fact
+//! that only the final block of a prompt can be partially filled.
+//!
+//! # Protocol (see [`super::paged::PagedKvCache`] for the other half)
+//!
+//! * **Lookup / aliasing** — [`PrefixIndex::lookup`] walks the trie,
+//!   descending through exact full-chunk matches and finishing with the
+//!   child sharing the longest partial prefix. The caller aliases every
+//!   matched node's blocks into the admitted slot's tables
+//!   ([`super::BlockAllocator::retain`] per block), so a hit costs
+//!   pointer pushes, not prefill compute. Matched tokens are capped by
+//!   the caller so at least one prompt token is always computed (logits
+//!   must exist for sampling).
+//! * **Registration** — after prefill, [`PrefixIndex::register`] inserts
+//!   the prompt's chunks, retaining the slot's blocks for every *newly
+//!   created* node; chunks that already have an exact-token node are
+//!   deduplicated (descend, no second copy). The index is a first-class
+//!   block holder: a node's blocks stay live after every slot using them
+//!   is released.
+//! * **Eviction** — [`PrefixIndex::evict_lru`] removes the
+//!   least-recently-used *leaf* whose blocks are held by the index alone
+//!   (refcount == 1 on every layer's block), returning the block ids for
+//!   the cache to free. Interior nodes become evictable once their
+//!   children go; blocks aliased into any live slot are never evicted.
+//!
+//! # Invariants
+//!
+//! 1. A node's `blocks` has exactly one entry per model layer.
+//! 2. Only full nodes have children (partial nodes are leaves).
+//! 3. Every node's blocks carry one index-owned reference; eviction is
+//!    the only operation that drops it.
+//! 4. `last_used` of a matched node's ancestors is always >= as fresh as
+//!    the match (a child match implies a full parent match on the same
+//!    walk), so LRU leaf eviction never strands a hot interior path.
+
+use super::block::BlockAllocator;
+
+/// One matched hop of a lookup walk: the node's per-layer block ids and
+/// how many of its tokens matched (== chunk length except for the final
+/// partial hop).
+pub struct MatchSeg {
+    pub blocks: Vec<u32>,
+    pub tokens: usize,
+}
+
+struct Node {
+    /// the token chunk this node covers (`1..=block_tokens` tokens)
+    tokens: Vec<i32>,
+    /// one physical block id per layer
+    blocks: Vec<u32>,
+    children: Vec<usize>,
+    /// arena id of the parent; `None` for top-level (root) nodes
+    parent: Option<usize>,
+    /// LRU clock value of the last lookup/registration touching this node
+    last_used: u64,
+}
+
+/// Block-granularity radix index over prompt-token prefixes.
+pub struct PrefixIndex {
+    block_tokens: usize,
+    n_layers: usize,
+    /// node arena; `None` = freed entry (reused via `free`)
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    /// top-level nodes (children of the conceptual root)
+    roots: Vec<usize>,
+    /// monotone LRU clock, bumped once per lookup/register call
+    tick: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(block_tokens: usize, n_layers: usize) -> PrefixIndex {
+        PrefixIndex {
+            block_tokens,
+            n_layers,
+            nodes: Vec::new(),
+            free: Vec::new(),
+            roots: Vec::new(),
+            tick: 0,
+        }
+    }
+
+    /// Live node count (introspection for tests and stats).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    /// Every block id the index holds a reference on, with multiplicity
+    /// (one entry per node per layer). Introspection for refcount audits:
+    /// summing these against slot tables must reproduce the allocator's
+    /// per-block reference counts exactly.
+    pub fn block_refs(&self) -> Vec<u32> {
+        self.nodes
+            .iter()
+            .flatten()
+            .flat_map(|n| n.blocks.iter().copied())
+            .collect()
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("freed node id")
+    }
+
+    fn insert_node(&mut self, n: Node) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(n);
+                i
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Walk the trie along `prompt`, matching at most `max_tokens`
+    /// positions. Descends through exact full-chunk matches; the final
+    /// hop may match only a prefix of a node's chunk (the caller aliases
+    /// that block partially and copy-on-write fires on its first
+    /// divergent append). Touches every matched node's LRU stamp.
+    pub fn lookup(&mut self, prompt: &[i32], max_tokens: usize) -> Vec<MatchSeg> {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut path = Vec::new();
+        let mut children = self.roots.clone();
+        let mut consumed = 0usize;
+        loop {
+            let budget = max_tokens.saturating_sub(consumed);
+            if budget == 0 || children.is_empty() {
+                break;
+            }
+            let remaining = &prompt[consumed..prompt.len().min(max_tokens)];
+            // best child = longest shared token prefix with the remainder
+            let mut best: Option<(usize, usize)> = None;
+            for &c in &children {
+                let node = self.node(c);
+                let k = node
+                    .tokens
+                    .iter()
+                    .zip(remaining)
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                if k > best.map_or(0, |(_, bk)| bk) {
+                    best = Some((c, k));
+                }
+            }
+            let Some((c, k)) = best else { break };
+            let (full, blocks, kids) = {
+                let node = self.node(c);
+                (k == node.tokens.len(), node.blocks.clone(), node.children.clone())
+            };
+            self.nodes[c].as_mut().unwrap().last_used = tick;
+            path.push(MatchSeg { blocks, tokens: k });
+            consumed += k;
+            if !full {
+                break; // partial hop is always terminal
+            }
+            children = kids;
+        }
+        path
+    }
+
+    /// Insert `tokens` (a prefilled prompt prefix) into the trie.
+    /// `chunk_blocks[i]` holds the admitted slot's per-layer block ids
+    /// covering chunk `i`; blocks of newly created nodes are retained in
+    /// `alloc` (the index becomes a holder), while chunks with an exact
+    /// existing node are deduplicated against it.
+    pub fn register(
+        &mut self,
+        tokens: &[i32],
+        chunk_blocks: &[Vec<u32>],
+        alloc: &mut BlockAllocator,
+    ) {
+        self.tick += 1;
+        let tick = self.tick;
+        let bt = self.block_tokens;
+        let mut parent: Option<usize> = None;
+        for (ci, chunk) in tokens.chunks(bt).enumerate() {
+            let children = match parent {
+                None => self.roots.clone(),
+                Some(p) => self.node(p).children.clone(),
+            };
+            let found = children
+                .iter()
+                .copied()
+                .find(|&c| self.node(c).tokens == chunk);
+            let id = match found {
+                Some(c) => {
+                    self.nodes[c].as_mut().unwrap().last_used = tick;
+                    c
+                }
+                None => {
+                    let blocks = chunk_blocks[ci].clone();
+                    debug_assert_eq!(blocks.len(), self.n_layers);
+                    for &b in &blocks {
+                        alloc.retain(b);
+                    }
+                    let id = self.insert_node(Node {
+                        tokens: chunk.to_vec(),
+                        blocks,
+                        children: Vec::new(),
+                        parent,
+                        last_used: tick,
+                    });
+                    match parent {
+                        None => self.roots.push(id),
+                        Some(p) => self.nodes[p].as_mut().unwrap().children.push(id),
+                    }
+                    id
+                }
+            };
+            // invariant 2: only full chunks can take children — a partial
+            // chunk is by construction the prompt's last
+            debug_assert!(chunk.len() == bt || ci == tokens.chunks(bt).count() - 1);
+            parent = Some(id);
+        }
+    }
+
+    /// Evict the least-recently-used leaf whose blocks the index holds
+    /// alone (refcount == 1 on every layer), returning its block ids for
+    /// the cache to free. `None` when nothing is evictable (every indexed
+    /// block is aliased into a live slot, or the index is empty).
+    pub fn evict_lru(&mut self, alloc: &BlockAllocator) -> Option<Vec<u32>> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, slot) in self.nodes.iter().enumerate() {
+            if let Some(n) = slot {
+                if n.children.is_empty()
+                    && n.blocks.iter().all(|&b| alloc.ref_count(b) == 1)
+                    && best.map_or(true, |(_, t)| n.last_used < t)
+                {
+                    best = Some((i, n.last_used));
+                }
+            }
+        }
+        let (i, _) = best?;
+        let node = self.nodes[i].take().unwrap();
+        match node.parent {
+            None => self.roots.retain(|&c| c != i),
+            Some(p) => self.nodes[p].as_mut().unwrap().children.retain(|&c| c != i),
+        }
+        self.free.push(i);
+        Some(node.blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Stand-in allocator state: every node's blocks get one index ref.
+    fn index_with(alloc: &mut BlockAllocator) -> PrefixIndex {
+        let _ = alloc;
+        PrefixIndex::new(4, 2)
+    }
+
+    fn fresh_blocks(alloc: &mut BlockAllocator, n: usize) -> Vec<u32> {
+        (0..n).map(|_| alloc.alloc().unwrap()).collect()
+    }
+
+    #[test]
+    fn lookup_matches_full_and_partial_chunks() {
+        let mut alloc = BlockAllocator::new(64);
+        let mut idx = index_with(&mut alloc);
+        // register [1,2,3,4 | 5,6] — one full node, one partial leaf
+        let tokens = [1, 2, 3, 4, 5, 6];
+        let b0 = fresh_blocks(&mut alloc, 2);
+        let b1 = fresh_blocks(&mut alloc, 2);
+        idx.register(&tokens, &[b0.clone(), b1.clone()], &mut alloc);
+        assert_eq!(idx.node_count(), 2);
+        for &b in b0.iter().chain(&b1) {
+            assert_eq!(alloc.ref_count(b), 2, "slot + index");
+        }
+        // exact walk: full chunk + 2 of the partial node's tokens
+        let m = idx.lookup(&[1, 2, 3, 4, 5, 6, 9, 9], 7);
+        assert_eq!(m.len(), 2);
+        assert_eq!((m[0].tokens, m[1].tokens), (4, 2));
+        assert_eq!(m[0].blocks, b0);
+        assert_eq!(m[1].blocks, b1);
+        // divergence inside the first chunk: partial hop, walk stops
+        let m = idx.lookup(&[1, 2, 9, 9, 9], 5);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].tokens, 2);
+        // budget cap: max_tokens bounds the match even on identical tokens
+        let m = idx.lookup(&[1, 2, 3, 4, 5, 6], 3);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].tokens, 3);
+        // no shared prefix at all
+        assert!(idx.lookup(&[7, 7, 7], 3).is_empty());
+    }
+
+    #[test]
+    fn register_dedups_exact_chunks_and_branches_on_divergence() {
+        let mut alloc = BlockAllocator::new(64);
+        let mut idx = index_with(&mut alloc);
+        let head = fresh_blocks(&mut alloc, 2);
+        let tail_a = fresh_blocks(&mut alloc, 2);
+        idx.register(&[1, 2, 3, 4, 10, 11], &[head.clone(), tail_a], &mut alloc);
+        // second prompt shares the full head chunk, diverges after it:
+        // the head node is reused (no extra ref), the tail becomes a sibling
+        let head_dup = fresh_blocks(&mut alloc, 2);
+        let tail_b = fresh_blocks(&mut alloc, 2);
+        idx.register(
+            &[1, 2, 3, 4, 20, 21],
+            &[head_dup.clone(), tail_b.clone()],
+            &mut alloc,
+        );
+        assert_eq!(idx.node_count(), 3, "head shared, two tails");
+        for &b in &head {
+            assert_eq!(alloc.ref_count(b), 2, "deduped chunk not re-retained");
+        }
+        for &b in &head_dup {
+            assert_eq!(alloc.ref_count(b), 1, "duplicate head block stays slot-private");
+        }
+        for &b in &tail_b {
+            assert_eq!(alloc.ref_count(b), 2);
+        }
+        // both tails reachable under the shared head
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 20, 21], 6).len(), 2);
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 10, 11], 6).len(), 2);
+    }
+
+    #[test]
+    fn evict_lru_takes_cold_leaves_and_skips_aliased_blocks() {
+        let mut alloc = BlockAllocator::new(64);
+        let mut idx = index_with(&mut alloc);
+        let head = fresh_blocks(&mut alloc, 2);
+        let tail_a = fresh_blocks(&mut alloc, 2);
+        let tail_b = fresh_blocks(&mut alloc, 2);
+        idx.register(&[1, 2, 3, 4, 10], &[head.clone(), tail_a.clone()], &mut alloc);
+        idx.register(&[1, 2, 3, 4, 20], &[head.clone(), tail_b.clone()], &mut alloc);
+        // drop the registering slots' own refs: index becomes sole holder
+        for &b in head.iter().chain(&tail_a).chain(&tail_b) {
+            alloc.release(b);
+        }
+        // head was deduped on the second register (one index ref only)
+        assert_eq!(alloc.ref_count(head[0]), 1);
+        assert_eq!(alloc.ref_count(tail_a[0]), 1);
+        // touch tail_b so tail_a is the LRU leaf
+        idx.lookup(&[1, 2, 3, 4, 20], 5);
+        let evicted = idx.evict_lru(&alloc).expect("tail_a evictable");
+        assert_eq!(evicted, tail_a);
+        for b in evicted {
+            alloc.release(b);
+        }
+        // head is interior (tail_b remains) — next LRU victim is tail_b
+        let evicted = idx.evict_lru(&alloc).expect("tail_b evictable");
+        assert_eq!(evicted, tail_b);
+        for b in evicted {
+            alloc.release(b);
+        }
+        // now the head is a leaf and goes last
+        let evicted = idx.evict_lru(&alloc).expect("head evictable");
+        assert_eq!(evicted, head);
+        for b in evicted {
+            alloc.release(b);
+        }
+        assert_eq!(idx.node_count(), 0);
+        assert!(idx.evict_lru(&alloc).is_none(), "empty index");
+        assert_eq!(alloc.in_use(), 0, "no leaked blocks");
+    }
+
+    #[test]
+    fn aliased_leaf_is_not_evictable() {
+        let mut alloc = BlockAllocator::new(8);
+        let mut idx = index_with(&mut alloc);
+        let blocks = fresh_blocks(&mut alloc, 2);
+        idx.register(&[1, 2, 3], &[blocks.clone()], &mut alloc);
+        // slot still holds its ref (refcount 2): nothing evictable
+        assert!(idx.evict_lru(&alloc).is_none());
+        for &b in &blocks {
+            alloc.release(b);
+        }
+        assert_eq!(idx.evict_lru(&alloc), Some(blocks));
+    }
+}

@@ -5,18 +5,24 @@
 //!       [--calib-samples N] [--md FILE]    regenerate a paper table/figure
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
-//!       [--backend SPEC] [--kv-bits 32|4|3|2] [--shards N]
-//!       [--queue-cap N] [--default-deadline-ms MS] [--max-conns N]
-//!       [--read-timeout-ms MS] [--chaos-rate R] [--chaos-seed S]
-//!       [--drain-ms MS]
+//!       [--backend SPEC] [--kv-bits 32|4|3|2] [--prefix-cache on|off]
+//!       [--shards N] [--queue-cap N] [--default-deadline-ms MS]
+//!       [--max-conns N] [--read-timeout-ms MS] [--chaos-rate R]
+//!       [--chaos-seed S] [--chaos-kv-pressure R] [--drain-ms MS]
 //!       Robustness knobs: `--queue-cap` bounds the admission queue
-//!       (overflow answered with a structured rejection, never dropped);
+//!       (overflow answered with a structured rejection carrying a
+//!       `retry_after_ms` backpressure hint, never dropped);
 //!       `--default-deadline-ms` applies a deadline to requests that
 //!       bring none (per-request `deadline_ms` JSON field overrides);
 //!       `--max-conns`/`--read-timeout-ms` harden the TCP listener;
 //!       `--chaos-rate`/`--chaos-seed` wrap the backend in deterministic
-//!       fault injection (testing); stdin EOF triggers a graceful drain
-//!       bounded by `--drain-ms`.
+//!       fault injection (testing) and `--chaos-kv-pressure` adds seeded
+//!       allocation pressure on the prefix cache (forced LRU evictions);
+//!       stdin EOF triggers a graceful drain bounded by `--drain-ms`.
+//!       `--prefix-cache on` enables prompt-prefix KV sharing: admission
+//!       aliases KV blocks of previously served prompt prefixes
+//!       (refcounted, copy-on-write) so only the uncached tail is
+//!       prefilled — composes with every `--kv-bits` bit-exactly.
 //!       SPEC selects the decode execution engine:
 //!       `direct|histogram|packed` run decode through the PJRT artifacts
 //!       (the WAQ kernel is a modeled host clock), while
@@ -148,8 +154,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "preset", "config", "port", "ckpt", "requests", "max-new", "backend", "kv-bits",
-        "shards", "queue-cap", "default-deadline-ms", "max-conns", "read-timeout-ms",
-        "chaos-seed", "chaos-rate", "drain-ms",
+        "prefix-cache", "shards", "queue-cap", "default-deadline-ms", "max-conns",
+        "read-timeout-ms", "chaos-seed", "chaos-rate", "chaos-kv-pressure", "drain-ms",
     ])
     .map_err(|e| anyhow!(e))?;
     let mut preset = args.str_or("preset", "test");
@@ -187,7 +193,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Err(anyhow!("--chaos-rate must be in [0, 1], got {chaos_rate}"));
     }
     let chaos_seed = args.u64_or("chaos-seed", 0xC4A05).map_err(|e| anyhow!(e))?;
-    let chaos = (chaos_rate > 0.0).then(|| ChaosCfg::uniform(chaos_seed, chaos_rate));
+    let kv_pressure = args.f64_or("chaos-kv-pressure", 0.0).map_err(|e| anyhow!(e))?;
+    if !(0.0..=1.0).contains(&kv_pressure) {
+        return Err(anyhow!("--chaos-kv-pressure must be in [0, 1], got {kv_pressure}"));
+    }
+    let chaos = (chaos_rate > 0.0 || kv_pressure > 0.0).then(|| {
+        let mut c = ChaosCfg::uniform(chaos_seed, chaos_rate);
+        if kv_pressure > 0.0 {
+            // evict up to 4 prefix-cache blocks per fired pressure event
+            c = c.with_kv_pressure(kv_pressure, 4);
+        }
+        c
+    });
+    // prompt-prefix KV sharing: radix index + refcounted copy-on-write
+    // blocks; requires a backend with a paged prefill path (the native
+    // backends), silently measured-off otherwise
+    let prefix_cache = match args.str_or("prefix-cache", "off").as_str() {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(anyhow!("--prefix-cache must be 'on' or 'off', got '{other}'"));
+        }
+    };
     let drain_ms = args.u64_or("drain-ms", 5_000).map_err(|e| anyhow!(e))?;
     let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(|e| anyhow!(e))?;
     let params = match args.opt("ckpt") {
@@ -207,6 +234,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_cap,
             default_deadline_ms,
             chaos,
+            prefix_cache,
             ..Default::default()
         },
     )?);
@@ -225,7 +253,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     println!(
         "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, backend {backend}: \
-         {how}, kv cache {kv_bits}-bit)"
+         {how}, kv cache {kv_bits}-bit, prefix cache {})",
+        if prefix_cache { "on" } else { "off" }
     );
     if let Some(c) = &chaos {
         println!(
@@ -251,19 +280,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     break;
                 }
                 if cmd == "stats" {
+                    // same one-line JSON dump as the TCP {"cmd": "stats"}
+                    // control path (machine-parseable, prefix counters
+                    // included); sim seconds ride along on stderr
                     let (stats, sim) = coord.stats()?;
-                    println!(
-                        "stats: completed {} rejected {} expired {} step_failures {} \
-                         accept_errors {} conn_rejected {} decode_steps {} sim {:.4}s",
-                        stats.completed,
-                        stats.rejected,
-                        stats.expired,
-                        stats.step_failures,
-                        stats.accept_errors,
-                        stats.conn_rejected,
-                        stats.decode_steps,
-                        sim.seconds
-                    );
+                    println!("{}", stats.to_json());
+                    eprintln!("sim clock: {:.4}s modeled", sim.seconds);
                 } else if !cmd.is_empty() {
                     println!("commands: drain | quit | stats (or EOF to drain)");
                 }
@@ -285,7 +307,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "final stats: completed {} rejected {} expired {} step_failures {} accept_errors {} \
          conn_rejected {} prefills {} decode_steps {} mean_occupancy {:.2} backend {} \
-         kv_bits {} peak_kv_bytes {}",
+         kv_bits {} peak_kv_bytes {} prefix_hits {} prefix_blocks_reused {} evictions {}",
         s.completed,
         s.rejected,
         s.expired,
@@ -297,7 +319,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.mean_occupancy(),
         s.waq_backend,
         s.kv_bits,
-        s.peak_kv_bytes
+        s.peak_kv_bytes,
+        s.prefix_hits,
+        s.prefix_blocks_reused,
+        s.evictions
     );
     Ok(())
 }

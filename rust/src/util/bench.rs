@@ -323,6 +323,69 @@ impl SoakBenchRow {
     }
 }
 
+/// One BENCH_prefix.json row: the prefix-cache payoff on a shared-system-
+/// prompt workload — the same request stream served with `--prefix-cache`
+/// off (every prompt prefilled densely) and on (shared blocks aliased out
+/// of the radix index, only uncached tails computed). Emitted by the
+/// `prefix_cache` bench and smoke-run in CI under FAST_BENCH.
+///
+/// Schema (JSON lines, one object per row):
+///   `name`            `"prefix/<full|fast>"`
+///   `backend`         serving backend tag (e.g. `native-packed`)
+///   `kv_bits`         cache storage bits per element (32 = FP32)
+///   `requests`        requests in the stream (all share one prompt head)
+///   `shared_tokens`   length of the shared system-prompt head
+///   `host_s_off`      prefill+decode host WAQ seconds, prefix cache off
+///   `host_s_on`       same stream, prefix cache on
+///   `speedup`         `host_s_off / host_s_on`
+///   `prefix_hits`     admissions served partly from the index (on run)
+///   `blocks_reused`   blocks aliased instead of recomputed (on run)
+///   `evictions`       LRU blocks freed under pool pressure (on run)
+///   `bytes_per_token` ideal cache bytes per token position (on run)
+pub struct PrefixBenchRow {
+    pub name: String,
+    pub backend: String,
+    pub kv_bits: u32,
+    pub requests: u64,
+    pub shared_tokens: u64,
+    pub host_s_off: f64,
+    pub host_s_on: f64,
+    pub speedup: f64,
+    pub prefix_hits: u64,
+    pub blocks_reused: u64,
+    pub evictions: u64,
+    pub bytes_per_token: f64,
+}
+
+impl PrefixBenchRow {
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"backend\": \"{}\", \"kv_bits\": {}, \
+             \"requests\": {}, \"shared_tokens\": {}, \"host_s_off\": {:.6}, \
+             \"host_s_on\": {:.6}, \"speedup\": {:.3}, \"prefix_hits\": {}, \
+             \"blocks_reused\": {}, \"evictions\": {}, \"bytes_per_token\": {:.3}}}",
+            json_escape(&self.name),
+            json_escape(&self.backend),
+            self.kv_bits,
+            self.requests,
+            self.shared_tokens,
+            self.host_s_off,
+            self.host_s_on,
+            self.speedup,
+            self.prefix_hits,
+            self.blocks_reused,
+            self.evictions,
+            self.bytes_per_token
+        )
+    }
+
+    /// Append to the repo-root BENCH_prefix.json (JSON lines; created if
+    /// missing). IO failures are reported, never fatal.
+    pub fn append(&self) {
+        append_line(&bench_json_path("BENCH_prefix.json"), &self.json_line());
+    }
+}
+
 pub struct Bencher {
     /// measurement window per bench
     pub measure: Duration,
@@ -513,6 +576,30 @@ mod tests {
         assert!(line.contains("\"burst\": 8"), "{line}");
         assert!(line.contains("\"host_waq_s\": 0.012500"), "{line}");
         assert!(line.contains("\"speedup_vs_sequential\": 2.5000"), "{line}");
+    }
+
+    #[test]
+    fn prefix_row_json_is_machine_readable() {
+        let row = PrefixBenchRow {
+            name: "prefix/fast".into(),
+            backend: "native-packed".into(),
+            kv_bits: 32,
+            requests: 12,
+            shared_tokens: 48,
+            host_s_off: 0.5,
+            host_s_on: 0.1,
+            speedup: 5.0,
+            prefix_hits: 10,
+            blocks_reused: 120,
+            evictions: 3,
+            bytes_per_token: 512.0,
+        };
+        let line = row.json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"shared_tokens\": 48"), "{line}");
+        assert!(line.contains("\"speedup\": 5.000"), "{line}");
+        assert!(line.contains("\"prefix_hits\": 10"), "{line}");
+        assert!(line.contains("\"bytes_per_token\": 512.000"), "{line}");
     }
 
     #[test]

@@ -752,6 +752,76 @@ fn over_long_prompt_surfaces_truncation() {
     assert_eq!(e.stats.truncated_prompts, 1);
 }
 
+/// Tentpole acceptance: decode after a prefix-cache HIT is bit-exact
+/// with a cold run at every `--kv-bits`. Shared blocks keep their
+/// quantized payloads, so the hit path reads exactly the bytes the cold
+/// path would have written — greedy token streams must be identical.
+#[test]
+fn prefix_hit_decode_bit_exact_with_cold_at_every_kv_bits() {
+    use kllm::kvcache::KvBits;
+    // seq_len 48 → three 16-token blocks per slot: the 20-token probe
+    // spans one full shared block plus a partial chunk, so the warm run
+    // exercises both exact-block aliasing and partial-chunk matching.
+    let cfg = ModelCfg { seq_len: 48, ..tiny_cfg(2) };
+    let shared: Vec<i32> = (0..20).map(|i| 5 + i as i32).collect();
+    for kv_bits in KvBits::ALL {
+        let ecfg = EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            kv_bits,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        // cold: fresh engine, empty index — the whole prompt is computed
+        let cold = {
+            let mut e = Engine::new(Box::new(native_backend(cfg, WaqBackend::Packed)), &ecfg);
+            e.submit(Request::new(0, shared.clone(), 6));
+            let done = e.run_to_completion().expect("cold");
+            assert_eq!(e.stats.prefix_hits, 0, "{kv_bits:?}");
+            done[0].tokens.clone()
+        };
+        assert_eq!(cold.len(), 6, "{kv_bits:?}");
+        // warm: prime the index with the same prompt, then re-serve it —
+        // the probe aliases every cached block and computes one token
+        let mut e = Engine::new(Box::new(native_backend(cfg, WaqBackend::Packed)), &ecfg);
+        e.submit(Request::new(0, shared.clone(), 6));
+        e.run_to_completion().expect("prime");
+        e.submit(Request::new(1, shared.clone(), 6));
+        let done = e.run_to_completion().expect("warm");
+        assert_eq!(e.stats.prefix_hits, 1, "{kv_bits:?}");
+        assert!(
+            e.stats.prefix_blocks_reused >= cfg.n_layers as u64,
+            "{kv_bits:?}: reused {}",
+            e.stats.prefix_blocks_reused
+        );
+        assert_eq!(done[0].tokens, cold, "prefix-hit decode diverged at {kv_bits:?}");
+        // slots drained → every live block is parked in the prefix index
+        assert!(e.kv().cache().prefix_nodes() > 0, "{kv_bits:?}");
+        assert!(e.kv().cache().in_use_blocks() > 0, "{kv_bits:?}");
+    }
+}
+
+/// At fp32 the paged prefill path (`--prefix-cache on`, cache-mediated
+/// attention) is bit-exact with the legacy dense prefill path
+/// (`--prefix-cache off`) — same float ops in the same order.
+#[test]
+fn paged_prefill_matches_legacy_dense_prefill_at_fp32() {
+    let cfg = ModelCfg { seq_len: 48, ..tiny_cfg(2) };
+    let run = |prefix_cache: bool| {
+        let ecfg = EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            prefix_cache,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(native_backend(cfg, WaqBackend::Packed)), &ecfg);
+        e.submit(Request::new(0, (0..20).map(|i| 5 + i as i32).collect(), 6));
+        e.submit(Request::new(1, vec![3, 14, 15], 6));
+        let mut done = e.run_to_completion().expect("run");
+        done.sort_by_key(|r| r.id);
+        done.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+    assert_eq!(run(true), run(false), "paged vs legacy dense prefill tokens");
+}
+
 /// `--shards 0` is a configuration error with a real message, never a
 /// panic — at the pool, the GEMM, and the backend layer.
 #[test]

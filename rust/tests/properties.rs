@@ -496,3 +496,146 @@ fn prop_paged_kv_no_leaks_no_double_assignment_bounded_tables() {
         }
     });
 }
+
+/// Prefix-cache refcount audit: random admit / shared-prefix fork /
+/// divergent-append (copy-on-write) / register / abort / evict
+/// interleavings must never leak or double-free a block. Ground truth is
+/// holder-counting — for every live block id, the allocator's refcount
+/// must equal the number of slot-table entries referencing it plus the
+/// number of prefix-index node references. (The no-double-assignment
+/// invariant of the non-prefix test is deliberately *relaxed* here:
+/// aliasing shared blocks across tables is the whole point.)
+#[test]
+fn prop_prefix_refcounts_balance_holders_no_leak_no_double_free() {
+    use kllm::kvcache::{KvPrecision, KvQuantizer};
+    use std::collections::HashMap;
+
+    fn audit(kv: &KvManager, cfg: &ModelCfg) {
+        let c = kv.cache();
+        let mut holders: HashMap<u32, usize> = HashMap::new();
+        for slot in 0..cfg.decode_batch {
+            for l in 0..cfg.n_layers {
+                for &b in c.slot_blocks(l, slot) {
+                    *holders.entry(b).or_insert(0) += 1;
+                }
+            }
+        }
+        for b in c.prefix_block_refs() {
+            *holders.entry(b).or_insert(0) += 1;
+        }
+        // leak = allocator thinks a block is live that no holder lists
+        assert_eq!(holders.len(), c.in_use_blocks(), "live set vs allocator in-use");
+        for (&b, &n) in &holders {
+            assert_eq!(c.block_ref_count(b), n, "block {b}: refcount vs holders");
+        }
+    }
+
+    Check::new(12).forall("prefix-refcount", |rng, case| {
+        let cfg = ModelCfg { seq_len: 40, ..test_cfg() };
+        let precision = if case % 2 == 0 {
+            KvPrecision::Fp32
+        } else {
+            KvPrecision::Quant(KvQuantizer::uniform(
+                cfg.n_layers,
+                cfg.n_heads,
+                cfg.head_dim,
+                4,
+            ))
+        };
+        let mut kv = KvManager::with_precision_opts(cfg, precision, true);
+        let d = cfg.n_heads * cfg.head_dim;
+        // a small pool of shared prompt heads: draws collide constantly,
+        // so admissions fork off cached prefixes and COW fires both at
+        // partial-block admission tails and at divergent decode appends
+        let heads: Vec<Vec<i32>> = (0..3)
+            .map(|h| (0..24).map(|i| (h * 100 + i) as i32).collect())
+            .collect();
+        let mut next_req = 0u64;
+        for _ in 0..140 {
+            let r = rng.f64();
+            if r < 0.40 {
+                // admit: pooled head prefix + random tail, then "prefill"
+                // the uncached remainder through the COW append path
+                if let Some(slot) = kv.free_slot() {
+                    let head = &heads[rng.below(heads.len())];
+                    let mut prompt = head[..1 + rng.below(head.len())].to_vec();
+                    for _ in 0..rng.below(8) {
+                        prompt.push(rng.below(64) as i32);
+                    }
+                    prompt.truncate(cfg.seq_len - 2);
+                    let plen = prompt.len();
+                    let m = kv.admit_prefix(slot, next_req, &prompt, plen).unwrap();
+                    next_req += 1;
+                    assert!(m.tokens < plen, "at least one token is computed");
+                    let mut aborted = false;
+                    'fill: for pos in m.tokens..plen {
+                        for l in 0..cfg.n_layers {
+                            let krow = rng.normal_vec(d, 1.0);
+                            let vrow = rng.normal_vec(d, 1.0);
+                            if kv.append_token(l, slot, pos, &krow, &vrow).is_err() {
+                                // genuine pool pressure (COW can need one
+                                // block beyond capacity): abort the admit,
+                                // as the engine does on prefill failure
+                                kv.release(slot);
+                                aborted = true;
+                                break 'fill;
+                            }
+                        }
+                    }
+                    if !aborted {
+                        kv.set_position(slot, plen).unwrap();
+                        // some requests finish unregistered (engine aborts
+                        // before registration): both paths must balance
+                        if rng.f64() < 0.7 {
+                            kv.register_prefix(slot, &prompt);
+                        }
+                    }
+                }
+            } else if r < 0.75 {
+                // decode: divergent append on every active slot
+                for slot in 0..cfg.decode_batch {
+                    let Some(pos) = kv.position(slot) else { continue };
+                    if pos >= cfg.seq_len - 1 {
+                        kv.release(slot);
+                        continue;
+                    }
+                    let krow = rng.normal_vec(d, 1.0);
+                    let vrow = rng.normal_vec(d, 1.0);
+                    let mut ok = true;
+                    for l in 0..cfg.n_layers {
+                        if kv.append_token(l, slot, pos, &krow, &vrow).is_err() {
+                            kv.release(slot);
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        kv.advance(slot).unwrap();
+                    }
+                }
+            } else if r < 0.90 {
+                // abort a random active slot without registering
+                let occupied: Vec<usize> = (0..cfg.decode_batch)
+                    .filter(|&s| kv.position(s).is_some())
+                    .collect();
+                if !occupied.is_empty() {
+                    kv.release(*rng.choice(&occupied));
+                }
+            } else {
+                // chaos-style LRU pressure on the index
+                kv.cache_mut().evict_cached(1 + rng.below(4));
+            }
+            audit(&kv, &cfg);
+        }
+        // drain: release every slot, then evict the index dry — every
+        // block must come home, every node must go
+        for slot in 0..cfg.decode_batch {
+            if kv.position(slot).is_some() {
+                kv.release(slot);
+            }
+        }
+        kv.cache_mut().evict_cached(usize::MAX);
+        assert_eq!(kv.cache().in_use_blocks(), 0, "leaked blocks at drain");
+        assert_eq!(kv.cache().prefix_nodes(), 0, "stranded index nodes at drain");
+    });
+}
