@@ -49,7 +49,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::{BackendSpec, DecodeBackend, PagedPrefill, PagedPrefillOut, PrefillOut, StepCost};
+use super::{
+    BackendSpec, DecodeBackend, PagedPrefill, PagedPrefillOut, PrefillOut, SpecRound, StepCost,
+    VerifyRun,
+};
 use crate::coordinator::kv::KvManager;
 use crate::kvcache::KvQuantizer;
 use crate::runtime::artifacts::ModelCfg;
@@ -298,6 +301,26 @@ impl DecodeBackend for ChaosBackend {
             ChaosCounters::bump(&self.counters.0.spikes);
         }
         Ok((logits, cost))
+    }
+
+    /// Delegated untouched (no draw): the speculative composite calls
+    /// `verify_paged` on its *target*, inside this wrapper — chaos on the
+    /// speculative path rides the one `decode` draw per round, keeping
+    /// legacy seeds' draw order bit-identical.
+    fn verify_paged(
+        &mut self,
+        runs: &[VerifyRun<'_>],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        self.inner.verify_paged(runs, kv)
+    }
+
+    fn take_spec_rounds(&mut self) -> Option<Vec<SpecRound>> {
+        self.inner.take_spec_rounds()
+    }
+
+    fn requires_paged_admission(&self) -> bool {
+        self.inner.requires_paged_admission()
     }
 }
 

@@ -30,23 +30,32 @@
 //!     persistent worker pool; bit-exact with `NativeWaqBackend` at any
 //!     shard count (`--backend native-sharded --shards N`).
 //!
+//!   * [`SpeculativeBackend`] — speculative decoding: a 2-bit crumb-packed
+//!     draft twin of the same manifest proposes up to `--spec-k` tokens
+//!     per round against a private KV cache, the target scores every
+//!     proposal in one stacked [`DecodeBackend::verify_paged`] pass per
+//!     layer, and greedy acceptance keeps the longest matching prefix —
+//!     bit-exact with the target alone (`--backend native-spec`).
+//!
 //! Plus one wrapper: [`ChaosBackend`] (module [`chaos`]) composes over any
 //! of the above, injecting seeded deterministic faults (errors, NaN
 //! rows, latency spikes) for robustness testing — `--chaos-seed` /
 //! `--chaos-rate`.
 //!
-//! Future backends (speculative, multi-node) target this trait instead of
-//! the engine internals.
+//! Future backends (multi-node) target this trait instead of the engine
+//! internals.
 
 pub mod chaos;
 mod native;
 mod pjrt;
 mod sharded;
+mod speculative;
 
 pub use chaos::{ChaosBackend, ChaosCfg, ChaosCounters};
 pub use native::{NativeCfg, NativeWaqBackend};
 pub use pjrt::PjrtBackend;
 pub use sharded::ShardedWaqBackend;
+pub use speculative::SpeculativeBackend;
 
 use anyhow::Result;
 
@@ -74,6 +83,10 @@ pub enum BackendSpec {
     /// GEMM split into `EngineConfig::shards` column shards executed on a
     /// persistent worker pool — bit-exact with `Native(Packed)`.
     NativeSharded,
+    /// Speculative decoding: a low-bit crumb-packed draft proposes, the
+    /// native packed target verifies in one stacked pass — bit-exact with
+    /// `Native(Packed)` under greedy sampling (`--spec-k`, `--draft-wbits`).
+    NativeSpec,
 }
 
 impl Default for BackendSpec {
@@ -89,11 +102,16 @@ impl BackendSpec {
             BackendSpec::Pjrt(b) | BackendSpec::Native(b) => *b,
             // shards stream nibble-packed column slices of the packed form
             BackendSpec::NativeSharded => WaqBackend::Packed,
+            // target runs packed; the draft's crumb form rides underneath
+            BackendSpec::NativeSpec => WaqBackend::Packed,
         }
     }
 
     pub fn is_native(&self) -> bool {
-        matches!(self, BackendSpec::Native(_) | BackendSpec::NativeSharded)
+        matches!(
+            self,
+            BackendSpec::Native(_) | BackendSpec::NativeSharded | BackendSpec::NativeSpec
+        )
     }
 
     /// Canonical CLI/stats name (`packed`, `native-packed`, ...).
@@ -104,6 +122,7 @@ impl BackendSpec {
             BackendSpec::Native(WaqBackend::Histogram) => "native-histogram",
             BackendSpec::Native(WaqBackend::Packed) => "native-packed",
             BackendSpec::NativeSharded => "native-sharded",
+            BackendSpec::NativeSpec => "native-spec",
         }
     }
 
@@ -116,6 +135,7 @@ impl BackendSpec {
             .map(|b| b.name().to_string())
             .chain(WaqBackend::ALL.iter().map(|b| format!("native-{b}")))
             .chain(std::iter::once(BackendSpec::NativeSharded.name().to_string()))
+            .chain(std::iter::once(BackendSpec::NativeSpec.name().to_string()))
             .collect::<Vec<_>>()
             .join("|")
     }
@@ -133,6 +153,9 @@ impl std::str::FromStr for BackendSpec {
     fn from_str(s: &str) -> Result<BackendSpec, String> {
         if s == BackendSpec::NativeSharded.name() {
             return Ok(BackendSpec::NativeSharded);
+        }
+        if s == BackendSpec::NativeSpec.name() {
+            return Ok(BackendSpec::NativeSpec);
         }
         let parsed = match s.strip_prefix("native-") {
             Some(rest) => rest.parse().map(BackendSpec::Native),
@@ -164,6 +187,13 @@ pub struct StepCost {
     /// latency floor the column split cannot beat. 0.0 for unsharded
     /// backends (their whole GEMM is already counted in `host_waq_s`).
     pub shard_crit_s: f64,
+    /// Speculative split of `host_waq_s`: measured host seconds the draft
+    /// model spent proposing this step. 0.0 for non-speculative backends.
+    pub draft_s: f64,
+    /// Speculative split of `host_waq_s`: measured host seconds the target
+    /// spent verifying proposals this step. 0.0 for non-speculative
+    /// backends.
+    pub verify_s: f64,
 }
 
 /// Result of one request's prefill (one element of a batch for
@@ -209,6 +239,37 @@ pub struct PagedPrefillOut {
     /// the *uncached tail* — aliased prefix positions cost no compute,
     /// which is the whole point of the prefix cache.
     pub cost: StepCost,
+}
+
+/// One slot's outcome of a speculative decode round, drained by the
+/// engine via [`DecodeBackend::take_spec_rounds`] right after `decode`.
+/// The backend has already committed `accepted` into the paged cache
+/// (and truncated away every rejected position); the engine's job is to
+/// emit those tokens — running its normal per-token stop checks — and
+/// then sample the returned logits row (the target's distribution at the
+/// first divergent position) as the round's final token.
+#[derive(Clone, Debug)]
+pub struct SpecRound {
+    /// Slot index this round belongs to.
+    pub slot: usize,
+    /// How many draft tokens were proposed this round.
+    pub proposed: u64,
+    /// The draft tokens the target confirmed, in emission order. May be
+    /// empty (the round then degenerates to an ordinary decode step).
+    pub accepted: Vec<i32>,
+}
+
+/// One slot's run of a stacked verification pass
+/// ([`DecodeBackend::verify_paged`]): score `tokens` (the last committed
+/// token followed by the draft proposals) at consecutive cache positions
+/// `start..start + tokens.len()`, appending each position's K/V through
+/// the paged cache.
+pub struct VerifyRun<'a> {
+    pub slot: usize,
+    /// First input position == the slot's current written length.
+    pub start: usize,
+    /// Input tokens, scored in order; logits are returned for every one.
+    pub tokens: &'a [i32],
 }
 
 /// The per-step datapath behind the serving engine. Implementations own
@@ -297,6 +358,43 @@ pub trait DecodeBackend {
         active: &[bool],
         kv: &mut KvManager,
     ) -> Result<(Vec<f32>, StepCost)>;
+
+    /// Score every run's token sequence against the paged cache in one
+    /// stacked pass: for each [`VerifyRun`], append K/V for
+    /// `tokens[0..len]` at positions `start..start + len` through `kv`
+    /// and return row-major `(len, vocab)` logits per run, in order.
+    /// Position `start + j`'s logits must be bit-exact with what a plain
+    /// `decode` of `tokens[j]` at that position would produce — the
+    /// contract speculative verification rides on. Default: unsupported.
+    fn verify_paged(
+        &mut self,
+        runs: &[VerifyRun<'_>],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        let _ = (runs, kv);
+        Err(anyhow::anyhow!(
+            "backend {} does not implement stacked verification",
+            self.spec().name()
+        ))
+    }
+
+    /// Drain the speculative rounds of the latest `decode` call, if this
+    /// backend runs speculative decoding. `Some(rounds)` tells the engine
+    /// the backend already advanced/truncated the cache itself — the
+    /// engine must emit each round's accepted tokens (per-token stop
+    /// checks) and sample the logits row as usual, but must NOT call
+    /// `KvManager::advance`. Default: `None` (ordinary decode semantics).
+    fn take_spec_rounds(&mut self) -> Option<Vec<SpecRound>> {
+        None
+    }
+
+    /// Whether the engine must route admission through the paged path
+    /// even when the prefix cache is off. Speculative decoding needs
+    /// every slot resident in the shared paged cache (its rollback is
+    /// `KvManager::truncate`), so it cannot accept dense-KV admission.
+    fn requires_paged_admission(&self) -> bool {
+        false
+    }
 }
 
 /// Shared modeled-cost clock: both backends report the same OASIS
@@ -399,7 +497,7 @@ mod tests {
         assert_eq!(
             BackendSpec::accepted(),
             "direct|histogram|packed|native-direct|native-histogram|native-packed|\
-             native-sharded"
+             native-sharded|native-spec"
         );
         let err = "tpu".parse::<BackendSpec>().unwrap_err();
         assert!(err.contains("native-packed") && err.contains("histogram"), "{err}");
@@ -421,6 +519,19 @@ mod tests {
         assert!(BackendSpec::accepted().contains("native-sharded"));
         let err = "tpu".parse::<BackendSpec>().unwrap_err();
         assert!(err.contains("native-sharded"), "{err}");
+    }
+
+    #[test]
+    fn speculative_spec_roundtrips_and_is_advertised() {
+        let sp: BackendSpec = "native-spec".parse().expect("parse");
+        assert_eq!(sp, BackendSpec::NativeSpec);
+        assert_eq!(sp.to_string(), "native-spec");
+        assert_eq!(sp.name().parse::<BackendSpec>(), Ok(sp));
+        assert_eq!(sp.waq(), WaqBackend::Packed);
+        assert!(sp.is_native());
+        assert!(BackendSpec::accepted().contains("native-spec"));
+        let err = "tpu".parse::<BackendSpec>().unwrap_err();
+        assert!(err.contains("native-spec"), "{err}");
     }
 
     #[test]

@@ -45,12 +45,10 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{
     batch_occupancy, BackendSpec, CostModel, DecodeBackend, PagedPrefill, PagedPrefillOut,
-    PrefillOut, StepCost,
+    PrefillOut, StepCost, VerifyRun,
 };
 use crate::coordinator::kv::KvManager;
-use crate::gemm::{
-    compensate, compensate_packed, CartesianLut, ShardPool, ShardedWaqGemm, WaqBackend, WaqGemm,
-};
+use crate::gemm::{CartesianLut, ShardPool, ShardedWaqGemm, WaqBackend, WaqGemm};
 use crate::kvcache::KvQuantizer;
 use crate::orizuru;
 use crate::quant::{self, Codebook, OutlierCfg, QuantToken};
@@ -140,11 +138,15 @@ impl QuantLinear {
         let GemmExec::Mono(gemm) = &self.exec else {
             bail!("linear is already sharded");
         };
-        let Some(pw) = gemm.packed_weights() else {
+        let sharded = if let Some(pw) = gemm.packed_weights() {
+            ShardedWaqGemm::from_packed(pw, &gemm.lut, shards, pool.clone())
+        } else if let Some(cw) = gemm.crumb_weights() {
+            // the 2-bit draft regime: shards stream crumb-packed slices
+            ShardedWaqGemm::from_crumbs(cw, &gemm.lut, shards, pool.clone())
+        } else {
             bail!("sharding requires the packed WAQ kernel");
-        };
-        let sharded = ShardedWaqGemm::from_packed(pw, &gemm.lut, shards, pool.clone())
-            .map_err(anyhow::Error::msg)?;
+        }
+        .map_err(anyhow::Error::msg)?;
         self.exec = GemmExec::Sharded(sharded);
         Ok(())
     }
@@ -172,10 +174,7 @@ impl QuantLinear {
             GemmExec::Mono(gemm) => {
                 let mut out = gemm.execute_batch(&toks);
                 for (o, t) in out.iter_mut().zip(&toks) {
-                    match gemm.packed_weights() {
-                        Some(p) => compensate_packed(o, t, p),
-                        None => compensate(o, t, gemm.unpacked_weights().expect("weights")),
-                    }
+                    gemm.compensate(o, t);
                 }
                 out
             }
@@ -770,6 +769,148 @@ impl DecodeBackend for NativeWaqBackend {
         cost.host_waq_s = waq_ns as f64 * 1e-9;
         cost.shard_crit_s = crit_ns as f64 * 1e-9;
         Ok((out, cost))
+    }
+
+    /// Stacked verification: every run's token rows go into ONE activation
+    /// matrix (run-major) and each WAQ LUT-GEMM linear streams its weights
+    /// once per layer for the whole stack — the amortization speculative
+    /// decoding rides on (k+1 positions scored for one weight pass).
+    /// Structurally this is `prefill_paged` with (a) arbitrary start
+    /// positions, (b) logits computed at *every* row, and (c) decode-style
+    /// modeled cost. Per-row quantization and accumulation are independent
+    /// of stacking, and each row's attention reads the paged cache over
+    /// `0..=start + j` with the exact gather/scale/max/exp/normalize
+    /// sequence `decode` uses — so row `j`'s logits are bit-exact with a
+    /// plain decode of the same token at the same position.
+    fn verify_paged(
+        &mut self,
+        runs: &[VerifyRun<'_>],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        let m = self.model;
+        let (h, hd, d, s) = (m.n_heads, m.head_dim, m.d_model, m.seq_len);
+        if runs.is_empty() {
+            return Ok((Vec::new(), StepCost::default()));
+        }
+        let lens: Vec<usize> = runs.iter().map(|r| r.tokens.len()).collect();
+        for (run, &len) in runs.iter().zip(&lens) {
+            if len == 0 {
+                bail!("verify run for slot {} has no tokens", run.slot);
+            }
+            if run.start + len > s {
+                bail!(
+                    "verify run for slot {} overruns the context window ({} + {len} > {s})",
+                    run.slot,
+                    run.start
+                );
+            }
+        }
+        // row-offset map over the stacked rows (run-major)
+        let mut offs = Vec::with_capacity(lens.len());
+        let mut total = 0usize;
+        for &len in &lens {
+            offs.push(total);
+            total += len;
+        }
+        let mut x = Matrix::zeros(total, d);
+        for (r, run) in runs.iter().enumerate() {
+            for (j, &t) in run.tokens.iter().enumerate() {
+                let tok = t.rem_euclid(m.vocab as i32) as usize;
+                let row = x.row_mut(offs[r] + j);
+                embed_into(row, &self.tok_emb, &self.pos_emb, tok, run.start + j);
+            }
+        }
+        let mut waq_ns = 0u64;
+        let mut crit_ns = 0u64;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let qkv_rows = self.quant_forward(
+                &layer.qkv,
+                &rms_rows(&x, &layer.ln1),
+                &mut waq_ns,
+                &mut crit_ns,
+            );
+            let mut att_rows: Vec<Vec<f32>> = Vec::with_capacity(total);
+            for (r, run) in runs.iter().enumerate() {
+                for j in 0..lens[r] {
+                    let p = run.start + j;
+                    let row = &qkv_rows[offs[r] + j];
+                    kv.append_token(l, run.slot, p, &row[d..2 * d], &row[2 * d..3 * d])
+                        .map_err(|e| anyhow!("kv append: {e}"))?;
+                    let mut att = vec![0f32; d];
+                    let mut scores = vec![0f32; p + 1];
+                    for head in 0..h {
+                        let q = &row[head * hd..(head + 1) * hd];
+                        kv.key_scores(l, run.slot, head, p + 1, q, &mut scores);
+                        let mut maxv = f32::NEG_INFINITY;
+                        for sc in scores.iter_mut() {
+                            *sc *= scale;
+                            maxv = maxv.max(*sc);
+                        }
+                        let mut denom = 0f32;
+                        for sc in scores.iter_mut() {
+                            *sc = (*sc - maxv).exp();
+                            denom += *sc;
+                        }
+                        let inv = 1.0 / denom;
+                        for sc in scores.iter_mut() {
+                            *sc *= inv;
+                        }
+                        let orow = &mut att[head * hd..(head + 1) * hd];
+                        kv.value_mix(l, run.slot, head, p + 1, &scores, orow);
+                    }
+                    att_rows.push(att);
+                }
+            }
+            let proj =
+                self.quant_forward(&layer.attn_out, &att_rows, &mut waq_ns, &mut crit_ns);
+            add_rows(&mut x, &proj);
+            let mut up = self.quant_forward(
+                &layer.mlp_up,
+                &rms_rows(&x, &layer.ln2),
+                &mut waq_ns,
+                &mut crit_ns,
+            );
+            for r in up.iter_mut() {
+                for v in r.iter_mut() {
+                    *v = gelu(*v);
+                }
+            }
+            let down = self.quant_forward(&layer.mlp_down, &up, &mut waq_ns, &mut crit_ns);
+            add_rows(&mut x, &down);
+        }
+        let mut logits = Vec::with_capacity(runs.len());
+        let mut hn = vec![0f32; d];
+        for (r, &len) in lens.iter().enumerate() {
+            let mut rows = Vec::with_capacity(len * m.vocab);
+            for j in 0..len {
+                rms_into(x.row(offs[r] + j), &self.lnf, &mut hn);
+                rows.extend(self.head_logits(&hn));
+            }
+            logits.push(rows);
+        }
+        // modeled cost: depth level j of the stack is one decode step over
+        // the runs still alive at that depth (what a sequential engine
+        // would have paid); the measured host seconds show the stacking's
+        // actual amortization
+        let mut cost = StepCost::default();
+        let max_len = lens.iter().copied().max().unwrap_or(0);
+        for j in 0..max_len {
+            let mut n = 0usize;
+            let mut ctx = 0usize;
+            for (run, &len) in runs.iter().zip(&lens) {
+                if len > j {
+                    n += 1;
+                    ctx += run.start + j;
+                }
+            }
+            let c = self.cost.decode(n, ctx / n.max(1));
+            cost.accel_s += c.accel_s;
+            cost.accel_j += c.accel_j;
+        }
+        cost.host_waq_s = waq_ns as f64 * 1e-9;
+        cost.shard_crit_s = crit_ns as f64 * 1e-9;
+        Ok((logits, cost))
     }
 }
 

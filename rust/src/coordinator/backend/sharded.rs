@@ -36,7 +36,7 @@ use anyhow::{bail, Result};
 
 use super::{
     BackendSpec, DecodeBackend, NativeCfg, NativeWaqBackend, PagedPrefill, PagedPrefillOut,
-    PrefillOut, StepCost,
+    PrefillOut, StepCost, VerifyRun,
 };
 use crate::coordinator::kv::KvManager;
 use crate::gemm::{ShardPool, WaqBackend};
@@ -142,5 +142,17 @@ impl DecodeBackend for ShardedWaqBackend {
         kv: &mut KvManager,
     ) -> Result<(Vec<f32>, StepCost)> {
         self.inner.decode(toks, pos, active, kv)
+    }
+
+    /// Stacked speculative verification over the sharded linears: the
+    /// inner datapath runs each stacked GEMM once per layer, fanned out
+    /// over the shard pool — so a sharded target composes with the
+    /// speculative backend bit-exactly (attention is unsharded).
+    fn verify_paged(
+        &mut self,
+        runs: &[VerifyRun<'_>],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        self.inner.verify_paged(runs, kv)
     }
 }

@@ -1,0 +1,507 @@
+//! Speculative decoding: a 2-bit crumb-packed draft proposes, the packed
+//! target verifies — bit-exact with the target alone under greedy
+//! sampling (`--backend native-spec`).
+//!
+//! The composite owns two models quantized from the SAME manifest and
+//! parameter set:
+//!
+//!   * **draft** — a [`NativeWaqBackend`] re-quantized at
+//!     `--draft-wbits` (2 by default). A 4-entry codebook stores its
+//!     weights in the crumb form (`quant::CrumbWeights`, four reduction
+//!     rows per byte), so each draft decode streams *half* the weight
+//!     bytes of the target's nibble-packed pass — that bandwidth gap is
+//!     the whole speedup budget. The draft keeps a private FP32
+//!     [`KvManager`] (no prefix index) so its rollbacks never touch the
+//!     engine's shared paged cache.
+//!   * **target** — any paged-capable [`DecodeBackend`] (`native-packed`
+//!     or `native-sharded`); its logits define correctness.
+//!
+//! One decode round per engine step, per active slot at position `p`
+//! with last emitted token `t` (fed by the engine, not yet in any cache):
+//!
+//!   1. *propose*: up to `--spec-k` batched greedy draft steps produce
+//!      `d_1..d_k` against the draft cache;
+//!   2. *verify*: the target scores `[t, d_1..d_k]` at positions
+//!      `p..p+k` in ONE stacked [`DecodeBackend::verify_paged`] pass —
+//!      each linear's weights stream once per layer for all k+1 rows —
+//!      appending K/V into the shared paged cache as it goes;
+//!   3. *accept*: the longest prefix with `argmax(L_j) == d_{j+1}` (the
+//!      engine's own NaN-safe [`greedy_argmax`]) is committed; rejected
+//!      positions roll back via [`KvManager::truncate`] (COW-safe:
+//!      reference drops only, shared prefix blocks untouched); the
+//!      engine receives the accepted tokens through
+//!      [`DecodeBackend::take_spec_rounds`] plus the logits row at the
+//!      first divergent position, from which it samples the round's
+//!      final token exactly as a non-speculative step would.
+//!
+//! Acceptance == `k` leaves the draft cache one row short (it never saw
+//! its own last proposal as input), so those slots run one extra batched
+//! draft step to stay in lockstep. A draft slot that desyncs from the
+//! engine's cache (abort, slot reuse) is simply released and its slot
+//! degrades to `k = 0` rounds — an ordinary decode through the verify
+//! path — until the next paged prefill re-admits it.
+//!
+//! Bit-exactness argument: `verify_paged` rows reproduce `decode`'s
+//! float sequence exactly (see `native.rs`), acceptance uses the same
+//! argmax the engine samples greedily with, and a round with `m`
+//! accepted tokens leaves cache contents and position identical to
+//! `m + 1` plain decode steps — so greedy `native-spec` output is
+//! bit-identical to the target alone at every `--kv-bits`, enforced by
+//! `tests/backend_parity.rs`.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{
+    BackendSpec, DecodeBackend, NativeCfg, PagedPrefill, PagedPrefillOut, PrefillOut, SpecRound,
+    StepCost, VerifyRun,
+};
+use crate::coordinator::engine::greedy_argmax;
+use crate::coordinator::kv::KvManager;
+use crate::coordinator::NativeWaqBackend;
+use crate::gemm::WaqBackend;
+use crate::kvcache::KvQuantizer;
+use crate::runtime::artifacts::ModelCfg;
+use crate::runtime::{Manifest, ParamSet};
+use crate::sim::OasisMode;
+
+/// `--backend native-spec`: draft-propose / target-verify speculative
+/// decoding over the shared paged KV cache.
+pub struct SpeculativeBackend {
+    target: Box<dyn DecodeBackend>,
+    draft: NativeWaqBackend,
+    /// Draft-private cache: FP32, no prefix index — its truncations are
+    /// invisible to the engine's shared cache.
+    draft_kv: KvManager,
+    spec_k: usize,
+    draft_wbits: u32,
+    /// Rounds of the latest `decode`, drained by `take_spec_rounds`.
+    rounds: Vec<SpecRound>,
+}
+
+impl SpeculativeBackend {
+    /// Compose a speculative backend: quantize a draft twin of
+    /// `manifest`/`params` at `draft_wbits` (crumb-packed at 2 bits) and
+    /// pair it with `target`, which must serve the same model config and
+    /// support paged prefill (the composite's rollback is
+    /// `KvManager::truncate`, a paged-cache operation).
+    pub fn new(
+        manifest: &Manifest,
+        params: &ParamSet,
+        target: Box<dyn DecodeBackend>,
+        mode: OasisMode,
+        spec_k: usize,
+        draft_wbits: u32,
+    ) -> Result<SpeculativeBackend> {
+        if spec_k == 0 {
+            bail!("invalid --spec-k 0: speculative decoding needs >= 1 draft token");
+        }
+        if !matches!(draft_wbits, 2 | 3) {
+            bail!("invalid --draft-wbits {draft_wbits}: the draft serves 2 or 3 bits");
+        }
+        if !target.supports_paged_prefill() {
+            bail!(
+                "speculative target '{}' must support paged prefill",
+                target.spec().name()
+            );
+        }
+        let m = target.model();
+        let mm = manifest.model;
+        if mm.decode_batch != m.decode_batch || mm.seq_len != m.seq_len || mm.vocab != m.vocab {
+            bail!("speculative draft and target must serve the same model config");
+        }
+        let cfg = NativeCfg {
+            w_bits: draft_wbits,
+            ..NativeCfg::from_mode(WaqBackend::Packed, mode)
+        };
+        let draft = NativeWaqBackend::new(manifest, params, cfg)?;
+        Ok(SpeculativeBackend {
+            draft_kv: KvManager::new(m),
+            target,
+            draft,
+            spec_k,
+            draft_wbits,
+            rounds: Vec::new(),
+        })
+    }
+
+    /// Configured proposal window.
+    pub fn spec_k(&self) -> usize {
+        self.spec_k
+    }
+
+    /// Draft weight bit-width (2 = crumb-packed).
+    pub fn draft_wbits(&self) -> u32 {
+        self.draft_wbits
+    }
+
+    /// Drop draft slots whose request no longer matches the engine's
+    /// cache (aborted / finished / reused slots). Lazy by design: the
+    /// engine never tells backends about releases, so the composite
+    /// re-derives liveness from the shared cache at each entry point.
+    fn sync_slots(&mut self, kv: &KvManager) {
+        for slot in 0..self.draft_kv.cfg.decode_batch {
+            if let Some(dr) = self.draft_kv.request_of(slot) {
+                if kv.request_of(slot) != Some(dr) {
+                    self.draft_kv.release(slot);
+                }
+            }
+        }
+    }
+}
+
+impl DecodeBackend for SpeculativeBackend {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec::NativeSpec
+    }
+
+    fn model(&self) -> ModelCfg {
+        self.target.model()
+    }
+
+    /// Cache codebooks come from the target's calibration — the shared
+    /// paged cache stores the *target's* K/V, the draft cache is FP32.
+    fn kv_quantizer(&self, bits: u32) -> KvQuantizer {
+        self.target.kv_quantizer(bits)
+    }
+
+    /// Dense prefill delegates to the target (the probe path). The draft
+    /// stays cold — its slots are only admitted through `prefill_paged`,
+    /// so a dense-admitted slot simply runs `k = 0` rounds.
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+        self.target.prefill(prompt)
+    }
+
+    fn prefill_batch(&mut self, prompts: &[&[i32]]) -> Result<Vec<PrefillOut>> {
+        self.target.prefill_batch(prompts)
+    }
+
+    fn supports_paged_prefill(&self) -> bool {
+        true
+    }
+
+    /// The engine must admit through the paged cache: speculative
+    /// rollback is `KvManager::truncate`, which needs every slot resident
+    /// in block tables, not dense KV pairs.
+    fn requires_paged_admission(&self) -> bool {
+        true
+    }
+
+    /// Target prefill first (all-or-nothing, into the shared cache), then
+    /// the draft prefills the SAME prompts into its private cache — whole
+    /// prompts, `cached = 0`: the draft has no prefix index, recomputing
+    /// a shared prefix with the cheap model costs less than keeping a
+    /// second index coherent. On a draft failure the claimed draft slots
+    /// are released and the error propagates; the engine then releases
+    /// the burst's shared-cache slots too, keeping both sides clean.
+    fn prefill_paged(
+        &mut self,
+        reqs: &[PagedPrefill<'_>],
+        kv: &mut KvManager,
+    ) -> Result<Vec<PagedPrefillOut>> {
+        let mut outs = self.target.prefill_paged(reqs, kv)?;
+        self.sync_slots(kv);
+        let claim = |dkv: &mut KvManager, req: &PagedPrefill<'_>| -> Result<()> {
+            let request = kv
+                .request_of(req.slot)
+                .ok_or_else(|| anyhow!("paged prefill: slot {} unclaimed", req.slot))?;
+            let plen = req.prompt.len().max(1);
+            dkv.admit_prefix(req.slot, request, req.prompt, plen)
+                .map_err(anyhow::Error::msg)?;
+            Ok(())
+        };
+        let mut claimed = Vec::with_capacity(reqs.len());
+        let mut run = || -> Result<Vec<PagedPrefillOut>> {
+            for req in reqs {
+                claim(&mut self.draft_kv, req)?;
+                claimed.push(req.slot);
+            }
+            let draft_reqs: Vec<PagedPrefill<'_>> = reqs
+                .iter()
+                .map(|r| PagedPrefill { prompt: r.prompt, slot: r.slot, cached: 0 })
+                .collect();
+            let douts = self.draft.prefill_paged(&draft_reqs, &mut self.draft_kv)?;
+            for (req, dout) in reqs.iter().zip(&douts) {
+                self.draft_kv
+                    .set_position(req.slot, dout.plen)
+                    .map_err(anyhow::Error::msg)?;
+            }
+            Ok(douts)
+        };
+        match run() {
+            Ok(douts) => {
+                for (out, dout) in outs.iter_mut().zip(douts) {
+                    out.cost.accel_s += dout.cost.accel_s;
+                    out.cost.accel_j += dout.cost.accel_j;
+                    out.cost.host_waq_s += dout.cost.host_waq_s;
+                    out.cost.shard_crit_s += dout.cost.shard_crit_s;
+                    out.cost.draft_s += dout.cost.host_waq_s;
+                }
+                Ok(outs)
+            }
+            Err(e) => {
+                for slot in claimed {
+                    self.draft_kv.release(slot);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// One speculative round per active slot: batched draft proposals,
+    /// one stacked target verification, greedy acceptance, rollback.
+    /// Returns the logits row at each slot's first divergent position
+    /// (what the engine samples); the accepted prefixes travel via
+    /// `take_spec_rounds`. The shared cache leaves this call already
+    /// advanced/truncated — the engine must not `advance` it again.
+    fn decode(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        kv: &mut KvManager,
+    ) -> Result<(Vec<f32>, StepCost)> {
+        let m = self.target.model();
+        let (b, s, vocab) = (m.decode_batch, m.seq_len, m.vocab);
+        if toks.len() != b || pos.len() != b || active.len() != b {
+            bail!("decode arity mismatch: expected {b} slots");
+        }
+        self.sync_slots(kv);
+        self.rounds.clear();
+
+        // per-slot proposal window: spec_k, clamped to the context room
+        // (verify appends k+1 rows at p..p+k, so k <= s-1-p; the engine
+        // only decodes non-exhausted slots, so p <= s-2 and k >= 1), and
+        // zero for slots without a live, position-synced draft twin
+        let mut k_slot = vec![0usize; b];
+        for i in 0..b {
+            if !active[i] {
+                continue;
+            }
+            let p = pos[i] as usize;
+            if self.draft_kv.request_of(i).is_some() {
+                if self.draft_kv.position(i) == Some(p) {
+                    k_slot[i] = self.spec_k.min(s.saturating_sub(1).saturating_sub(p));
+                } else {
+                    // desynced draft (should not happen; degrade safely)
+                    self.draft_kv.release(i);
+                }
+            }
+        }
+
+        // --- propose: up to max(k_slot) batched greedy draft steps -----
+        let mut cur_toks = toks.to_vec();
+        let mut cur_pos = pos.to_vec();
+        let mut proposals: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut draft_cost = StepCost::default();
+        let kmax = k_slot.iter().copied().max().unwrap_or(0);
+        for step in 0..kmax {
+            let step_active: Vec<bool> =
+                (0..b).map(|i| active[i] && step < k_slot[i]).collect();
+            let (logits, c) =
+                self.draft.decode(&cur_toks, &cur_pos, &step_active, &mut self.draft_kv)?;
+            draft_cost.accel_s += c.accel_s;
+            draft_cost.accel_j += c.accel_j;
+            draft_cost.host_waq_s += c.host_waq_s;
+            draft_cost.shard_crit_s += c.shard_crit_s;
+            for i in 0..b {
+                if !step_active[i] {
+                    continue;
+                }
+                self.draft_kv.advance(i).map_err(anyhow::Error::msg)?;
+                let d = greedy_argmax(&logits[i * vocab..(i + 1) * vocab]);
+                proposals[i].push(d);
+                cur_toks[i] = d;
+                cur_pos[i] += 1;
+            }
+        }
+
+        // --- verify: one stacked pass over [t, d_1..d_k] per slot ------
+        let run_tokens: Vec<(usize, Vec<i32>)> = (0..b)
+            .filter(|&i| active[i])
+            .map(|i| {
+                let mut ts = Vec::with_capacity(proposals[i].len() + 1);
+                ts.push(toks[i]);
+                ts.extend_from_slice(&proposals[i]);
+                (i, ts)
+            })
+            .collect();
+        let runs: Vec<VerifyRun<'_>> = run_tokens
+            .iter()
+            .map(|(i, ts)| VerifyRun { slot: *i, start: pos[*i] as usize, tokens: ts })
+            .collect();
+        let (run_logits, verify_cost) = self.target.verify_paged(&runs, kv)?;
+        if run_logits.len() != runs.len() {
+            bail!("verify returned {} result rows for {} runs", run_logits.len(), runs.len());
+        }
+
+        // --- accept: longest matching prefix, then roll back the rest --
+        let mut out = vec![0f32; b * vocab];
+        let mut needs_extra = vec![false; b];
+        for (run, lg) in runs.iter().zip(&run_logits) {
+            let i = run.slot;
+            let p = run.start;
+            let props = &proposals[i];
+            if lg.len() != run.tokens.len() * vocab {
+                bail!("verify logits shape mismatch for slot {i}");
+            }
+            let mut acc = 0usize;
+            while acc < props.len()
+                && greedy_argmax(&lg[acc * vocab..(acc + 1) * vocab]) == props[acc]
+            {
+                acc += 1;
+            }
+            // commit: keep rows p..=p+acc, drop the rejected tail; the
+            // slot position lands at p+acc+1, exactly where acc+1 plain
+            // decode steps would have left it
+            kv.truncate(i, p + acc + 1).map_err(anyhow::Error::msg)?;
+            out[i * vocab..(i + 1) * vocab]
+                .copy_from_slice(&lg[acc * vocab..(acc + 1) * vocab]);
+            self.rounds.push(SpecRound {
+                slot: i,
+                proposed: props.len() as u64,
+                accepted: props[..acc].to_vec(),
+            });
+            if k_slot[i] == 0 {
+                continue; // no draft twin: nothing to roll back
+            }
+            if acc < props.len() {
+                // draft rows p..p+k-1 hold [t, d_1..d_{k-1}]; keep the
+                // accepted prefix and resync to the shared position
+                self.draft_kv
+                    .truncate(i, p + acc + 1)
+                    .map_err(anyhow::Error::msg)?;
+            } else if p + props.len() + 1 < s - 1 {
+                // full acceptance: the draft never consumed d_k, so it is
+                // one row behind — run one extra step below (skipped when
+                // the slot exhausts this round anyway)
+                needs_extra[i] = true;
+            }
+        }
+
+        // --- keep fully-accepting drafts in lockstep -------------------
+        if needs_extra.iter().any(|&f| f) {
+            let (_, c) =
+                self.draft.decode(&cur_toks, &cur_pos, &needs_extra, &mut self.draft_kv)?;
+            draft_cost.accel_s += c.accel_s;
+            draft_cost.accel_j += c.accel_j;
+            draft_cost.host_waq_s += c.host_waq_s;
+            draft_cost.shard_crit_s += c.shard_crit_s;
+            for i in 0..b {
+                if needs_extra[i] {
+                    self.draft_kv.advance(i).map_err(anyhow::Error::msg)?;
+                }
+            }
+        }
+
+        let mut cost = verify_cost;
+        cost.verify_s = verify_cost.host_waq_s;
+        cost.draft_s = draft_cost.host_waq_s;
+        cost.accel_s += draft_cost.accel_s;
+        cost.accel_j += draft_cost.accel_j;
+        cost.host_waq_s += draft_cost.host_waq_s;
+        cost.shard_crit_s += draft_cost.shard_crit_s;
+        Ok((out, cost))
+    }
+
+    fn take_spec_rounds(&mut self) -> Option<Vec<SpecRound>> {
+        Some(std::mem::take(&mut self.rounds))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            seq_len: 16,
+            batch: 2,
+            decode_batch: 2,
+            head_dim: 16,
+            d_ff: 64,
+            n_linears: 8,
+        }
+    }
+
+    fn build(spec_k: usize, wbits: u32) -> Result<SpeculativeBackend> {
+        let manifest = Manifest::synthetic("tiny", tiny_cfg());
+        let params = ParamSet::init(&manifest, &mut Rng::new(42));
+        let target = Box::new(NativeWaqBackend::new(
+            &manifest,
+            &params,
+            NativeCfg::from_mode(WaqBackend::Packed, OasisMode::a4()),
+        )?);
+        SpeculativeBackend::new(
+            &manifest,
+            &params,
+            target,
+            OasisMode::a4(),
+            spec_k,
+            wbits,
+        )
+    }
+
+    #[test]
+    fn constructor_validates_config() {
+        assert!(build(0, 2).is_err(), "spec_k 0 rejected");
+        assert!(build(4, 4).is_err(), "draft wider than 3 bits rejected");
+        assert!(build(4, 1).is_err(), "1-bit draft rejected");
+        let b = build(2, 2).expect("valid config builds");
+        assert_eq!(b.spec(), BackendSpec::NativeSpec);
+        assert_eq!(b.spec_k(), 2);
+        assert_eq!(b.draft_wbits(), 2);
+        assert!(b.requires_paged_admission());
+        assert!(b.supports_paged_prefill());
+    }
+
+    #[test]
+    fn rejects_non_paged_target() {
+        let manifest = Manifest::synthetic("tiny", tiny_cfg());
+        let params = ParamSet::init(&manifest, &mut Rng::new(42));
+        let target = Box::new(crate::coordinator::PjrtBackend::stub(
+            tiny_cfg(),
+            WaqBackend::Packed,
+            OasisMode::a4(),
+        ));
+        let err = SpeculativeBackend::new(
+            &manifest,
+            &params,
+            target,
+            OasisMode::a4(),
+            2,
+            2,
+        );
+        assert!(err.is_err(), "dense-KV target must be rejected");
+    }
+
+    #[test]
+    fn decode_without_draft_slot_degrades_to_plain_rounds() {
+        // dense-probe shape: slots admitted outside prefill_paged run
+        // k = 0 rounds whose logits equal a plain target decode
+        let mut spec = build(4, 2).expect("build");
+        let m = spec.model();
+        let prompt = [3i32, 7, 11];
+        let pre = spec.prefill(&prompt).expect("prefill");
+        let mut kv = KvManager::new(m);
+        kv.install_prefill(0, 1, pre.plen, &pre.k_cache, &pre.v_cache).unwrap();
+        let mut toks = vec![0i32; m.decode_batch];
+        let mut pos = vec![0i32; m.decode_batch];
+        let mut active = vec![false; m.decode_batch];
+        toks[0] = 5;
+        pos[0] = pre.plen as i32;
+        active[0] = true;
+        let (logits, _) = spec.decode(&toks, &pos, &active, &mut kv).expect("decode");
+        let rounds = spec.take_spec_rounds().expect("speculative backend");
+        assert_eq!(rounds.len(), 1);
+        assert_eq!(rounds[0].proposed, 0);
+        assert!(rounds[0].accepted.is_empty());
+        // position advanced by the backend (truncate == advance at k = 0)
+        assert_eq!(kv.position(0), Some(pre.plen + 1));
+        assert!(logits[..m.vocab].iter().any(|v| *v != 0.0));
+    }
+}

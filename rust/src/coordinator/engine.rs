@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::backend::chaos::ChaosCfg;
-use super::backend::{BackendSpec, DecodeBackend, PagedPrefill};
+use super::backend::{BackendSpec, CostModel, DecodeBackend, PagedPrefill, SpecRound};
 use super::batcher::{AdmitPolicy, Batcher};
 use super::kv::KvManager;
 use super::request::{EngineStats, FinishReason, Request, Response};
@@ -72,6 +72,15 @@ pub struct EngineConfig {
     /// warning) otherwise. Composes with every `--kv-bits`: shared blocks
     /// keep their stored payloads, so a hit never dequantizes or re-rounds.
     pub prefix_cache: bool,
+    /// Speculative decoding window (`--spec-k N`, `--backend native-spec`
+    /// only): up to `N` draft tokens are proposed per decode round and
+    /// verified in one stacked target pass. Ignored by the other backends.
+    pub spec_k: usize,
+    /// Draft-model weight width in bits (`--draft-wbits {2,3}`,
+    /// `--backend native-spec` only): the draft is the SAME manifest
+    /// re-quantized at this width — 2-bit runs the crumb-packed kernel
+    /// (four rows per LUT byte). Ignored by the other backends.
+    pub draft_wbits: u32,
 }
 
 impl Default for EngineConfig {
@@ -87,6 +96,8 @@ impl Default for EngineConfig {
             default_deadline_ms: 0,
             chaos: None,
             prefix_cache: false,
+            spec_k: 4,
+            draft_wbits: 2,
         }
     }
 }
@@ -125,14 +136,23 @@ pub struct Engine {
     /// deadline applied at submit to requests without one (None = none)
     default_deadline: Option<Duration>,
     /// effective prefix-cache switch: `cfg.prefix_cache` AND the backend
-    /// implements paged prefill (admission routes through
-    /// `prefill_paged` + the radix index when true, the legacy dense
-    /// `prefill_batch` path when false)
+    /// implements paged prefill (the KvManager's radix index is enabled,
+    /// and intra-burst duplicates dedup by aliasing, only when true)
     prefix_cache: bool,
+    /// admission routes through `prefill_paged` (vs the legacy dense
+    /// `prefill_batch` path): the prefix cache is on, OR the backend
+    /// demands paged admission regardless (the speculative backend's
+    /// verification appends into the paged cache, so its slots must be
+    /// paged-admitted even with the index off)
+    paged_admission: bool,
     /// EWMA of natural completions' wall-clock service time (queue wait +
     /// compute), feeding the `retry_after_ms` backpressure hint. 0.0
     /// until the first natural completion.
     recent_service_s: f64,
+    /// modeled cost clock for this backend's work — the cold-start
+    /// fallback for `retry_after_ms` before any completion has primed
+    /// the service-time EWMA
+    cost_model: CostModel,
 }
 
 impl Engine {
@@ -152,6 +172,8 @@ impl Engine {
                 backend.spec().name()
             );
         }
+        let paged_admission = backend.supports_paged_prefill()
+            && (prefix_cache || backend.requires_paged_admission());
         let kv = KvManager::with_precision_opts(m, precision, prefix_cache);
         let stats = EngineStats {
             waq_backend: backend.spec().name(),
@@ -169,7 +191,9 @@ impl Engine {
             default_deadline: (cfg.default_deadline_ms > 0)
                 .then(|| Duration::from_millis(cfg.default_deadline_ms)),
             prefix_cache,
+            paged_admission,
             recent_service_s: 0.0,
+            cost_model: CostModel::new(m, cfg.mode, backend.spec().waq()),
             backend,
         }
     }
@@ -220,7 +244,7 @@ impl Engine {
             Err(req) => {
                 self.stats.rejected += 1;
                 let mut resp = queued_response(&req, FinishReason::Rejected);
-                resp.retry_after_ms = self.retry_after_ms();
+                resp.retry_after_ms = self.retry_after_ms(&req);
                 Some(resp)
             }
         }
@@ -233,23 +257,34 @@ impl Engine {
     pub fn reject(&mut self, req: Request) -> Response {
         self.stats.rejected += 1;
         let mut resp = queued_response(&req, FinishReason::Rejected);
-        resp.retry_after_ms = self.retry_after_ms();
+        resp.retry_after_ms = self.retry_after_ms(&req);
         resp
     }
 
     /// Backpressure hint for rejected submits: estimated milliseconds
     /// until the queue has drained enough to accept a resubmit — queue
-    /// depth x the EWMA of recent natural completions' service time,
-    /// divided by the decode batch width (requests drain `decode_batch`
-    /// at a time once admitted). 0 before anything has completed (no
-    /// estimate is more honest than a made-up one).
-    pub fn retry_after_ms(&self) -> u64 {
-        if self.recent_service_s <= 0.0 {
+    /// depth x per-request service time, divided by the decode batch
+    /// width (requests drain `decode_batch` at a time once admitted).
+    /// Service time is the EWMA of recent natural completions once any
+    /// exist; before the first completion it falls back to the modeled
+    /// cost of serving `req` itself (prefill + `max_new_tokens` decode
+    /// steps at full batch), so a cold engine's rejections still carry a
+    /// usable hint instead of `0`.
+    pub fn retry_after_ms(&self, req: &Request) -> u64 {
+        let service_s = if self.recent_service_s > 0.0 {
+            self.recent_service_s
+        } else {
+            let plen = req.prompt.len().clamp(1, self.kv.cfg.seq_len - 1);
+            let pre = self.cost_model.prefill(plen);
+            let dec = self.cost_model.decode(self.kv.cfg.decode_batch, plen);
+            pre.accel_s + req.max_new_tokens as f64 * (dec.accel_s + dec.host_waq_s)
+        };
+        if service_s <= 0.0 {
             return 0;
         }
         let depth = self.batcher.pending().max(1) as f64;
         let batch = self.kv.cfg.decode_batch.max(1) as f64;
-        (1000.0 * depth * self.recent_service_s / batch).ceil() as u64
+        (1000.0 * depth * service_s / batch).ceil() as u64
     }
 
     fn with_default_deadline(&self, mut r: Request) -> Request {
@@ -300,14 +335,38 @@ impl Engine {
         // the sequential path); the PJRT default loops internally.
         let free = self.kv.decode_batch_free();
         let admitted = self.batcher.admit(free);
-        if !admitted.is_empty() && self.prefix_cache {
+        if !admitted.is_empty() && self.paged_admission {
             self.admit_paged(admitted, &mut done);
         } else if !admitted.is_empty() {
-            let prompts: Vec<&[i32]> = admitted.iter().map(|r| r.prompt.as_slice()).collect();
+            // intra-burst duplicate collapse: identical prompts in one
+            // admission burst prefill ONCE — every clone reuses the
+            // computed K/V tensors and last-position logits (bit-exact:
+            // prefill is deterministic in the prompt). The first
+            // occurrence is always the unique, so it pays the modeled
+            // cost before any of its clones take their sim-clock marks.
+            let mut unique_of: Vec<usize> = Vec::with_capacity(admitted.len());
+            let mut uniques: Vec<usize> = Vec::new();
+            for (i, r) in admitted.iter().enumerate() {
+                match uniques.iter().position(|&u| admitted[u].prompt == r.prompt) {
+                    Some(j) => {
+                        unique_of.push(j);
+                        self.stats.burst_dedup_hits += 1;
+                    }
+                    None => {
+                        unique_of.push(uniques.len());
+                        uniques.push(i);
+                    }
+                }
+            }
+            let prompts: Vec<&[i32]> =
+                uniques.iter().map(|&u| admitted[u].prompt.as_slice()).collect();
+            let n_unique = uniques.len();
             match self.backend.prefill_batch(&prompts) {
-                Ok(pres) if pres.len() == admitted.len() => {
+                Ok(pres) if pres.len() == n_unique => {
                     let admitted_at = Instant::now();
-                    for (req, pre) in admitted.into_iter().zip(pres) {
+                    let mut charged = vec![false; n_unique];
+                    for (i, req) in admitted.into_iter().enumerate() {
+                        let pre = &pres[unique_of[i]];
                         let queue_wait_s = (admitted_at - req.arrived).as_secs_f64();
                         let Some(slot) = self.kv.free_slot() else {
                             // unreachable (admit is bounded by free slots)
@@ -342,10 +401,15 @@ impl Engine {
                         if truncated {
                             self.stats.truncated_prompts += 1;
                         }
-                        self.sim.seconds += pre.cost.accel_s;
-                        self.sim.energy_j += pre.cost.accel_j;
-                        self.stats.host_waq_s += pre.cost.host_waq_s;
-                        self.stats.host_shard_crit_s += pre.cost.shard_crit_s;
+                        // a duplicate charges nothing: its unique (always
+                        // processed first) already paid the burst row
+                        if !charged[unique_of[i]] {
+                            charged[unique_of[i]] = true;
+                            self.sim.seconds += pre.cost.accel_s;
+                            self.sim.energy_j += pre.cost.accel_j;
+                            self.stats.host_waq_s += pre.cost.host_waq_s;
+                            self.stats.host_shard_crit_s += pre.cost.shard_crit_s;
+                        }
                         // the prefill's last-position logits give token #1
                         let tok = self.sample(&pre.logits, req.temperature);
                         let mut ar = ActiveReq {
@@ -377,7 +441,7 @@ impl Engine {
                         Ok(p) => format!(
                             "backend returned {} prefill results for {} prompts",
                             p.len(),
-                            admitted.len()
+                            n_unique
                         ),
                     };
                     eprintln!(
@@ -422,19 +486,56 @@ impl Engine {
         Ok(done)
     }
 
-    /// Prefix-sharing admission (`--prefix-cache on`): claim a slot per
-    /// request, alias whatever prefix the radix index already holds, then
-    /// run ONE paged-prefill burst computing only the uncached tails —
-    /// K/V rows append straight into the paged cache and attention reads
-    /// back through it, so hit and cold paths consume bit-identical
-    /// stored payloads at every `--kv-bits`. Prefilled prompts register
-    /// in the index afterwards (intra-burst duplicates miss this round
-    /// and dedup at registration — they hit from the next burst on).
+    /// Paged admission (`--prefix-cache on`, or a backend that requires
+    /// paged slots): split the burst into unique prompts and intra-burst
+    /// duplicates, run the uniques through ONE paged-prefill burst, then
+    /// admit each duplicate by aliasing its (now registered) twin — zero
+    /// prefill compute for clones. Dedup needs the radix index, so with
+    /// the index off (paged admission forced by the backend alone) every
+    /// request takes the cold path.
     fn admit_paged(&mut self, admitted: Vec<Request>, done: &mut Vec<Response>) {
+        let mut work = admitted;
+        let mut dups: Vec<Request> = Vec::new();
+        if self.prefix_cache {
+            let mut uniques: Vec<Request> = Vec::with_capacity(work.len());
+            for req in work {
+                if !req.prompt.is_empty() && uniques.iter().any(|u| u.prompt == req.prompt) {
+                    dups.push(req);
+                } else {
+                    uniques.push(req);
+                }
+            }
+            work = uniques;
+        }
+        // (prompt, registered length, last-position logits) of burst
+        // prompts that have clones waiting — the clone samples its first
+        // token from its twin's row
+        let mut twins: Vec<(Vec<i32>, usize, Vec<f32>)> = Vec::new();
+        self.admit_paged_burst(work, &dups, &mut twins, done);
+        for req in dups {
+            self.admit_paged_duplicate(req, &twins, done);
+        }
+    }
+
+    /// Prefix-sharing burst admission: claim a slot per request, alias
+    /// whatever prefix the radix index already holds, then run ONE
+    /// paged-prefill burst computing only the uncached tails — K/V rows
+    /// append straight into the paged cache and attention reads back
+    /// through it, so hit and cold paths consume bit-identical stored
+    /// payloads at every `--kv-bits`. Prefilled prompts register in the
+    /// index afterwards; prompts listed in `dups` additionally record a
+    /// `twins` entry for the duplicate pass.
+    fn admit_paged_burst(
+        &mut self,
+        work: Vec<Request>,
+        dups: &[Request],
+        twins: &mut Vec<(Vec<i32>, usize, Vec<f32>)>,
+        done: &mut Vec<Response>,
+    ) {
         let seq_len = self.kv.cfg.seq_len;
         // (request, claimed slot, index-served token count)
-        let mut planned: Vec<(Request, usize, usize)> = Vec::with_capacity(admitted.len());
-        for req in admitted {
+        let mut planned: Vec<(Request, usize, usize)> = Vec::with_capacity(work.len());
+        for req in work {
             let Some(slot) = self.kv.free_slot() else {
                 // unreachable (admit is bounded by free slots) — but an
                 // accounting bug must still answer the request, not drop it
@@ -492,9 +593,12 @@ impl Engine {
                         continue;
                     }
                     // index the freshly prefilled prompt so later arrivals
-                    // (including the next burst's duplicates) hit
+                    // (including this burst's duplicates) hit
                     let indexed = out.plen.min(req.prompt.len());
                     self.kv.register_prefix(slot, &req.prompt[..indexed]);
+                    if dups.iter().any(|d| d.prompt == req.prompt) {
+                        twins.push((req.prompt.clone(), indexed, out.logits.clone()));
+                    }
                     self.stats.prefills += 1;
                     if truncated {
                         self.stats.truncated_prompts += 1;
@@ -549,6 +653,74 @@ impl Engine {
         }
     }
 
+    /// Admit one intra-burst duplicate by aliasing its twin's freshly
+    /// registered prompt: the whole prompt must match the index (a
+    /// full-length alias — the clone reuses the twin's last-position
+    /// logits, so no uncovered tail is needed) and no prefill compute or
+    /// modeled cost is charged. When the twin never registered (it was
+    /// aborted, or its blocks were evicted already) the duplicate falls
+    /// back to a real singleton paged prefill — correctness never
+    /// depends on the dedup hitting.
+    fn admit_paged_duplicate(
+        &mut self,
+        req: Request,
+        twins: &[(Vec<i32>, usize, Vec<f32>)],
+        done: &mut Vec<Response>,
+    ) {
+        let Some((_, plen, logits)) = twins.iter().find(|(p, _, _)| *p == req.prompt) else {
+            return self.admit_paged_burst(vec![req], &[], &mut Vec::new(), done);
+        };
+        let Some(slot) = self.kv.free_slot() else {
+            // unreachable (admit is bounded by free slots) — but an
+            // accounting bug must still answer the request, not drop it
+            self.stats.step_failures += 1;
+            done.push(queued_response(&req, FinishReason::Aborted));
+            return;
+        };
+        match self.kv.admit_duplicate(slot, req.id, &req.prompt, *plen) {
+            Ok(true) => {
+                self.stats.burst_dedup_hits += 1;
+                self.stats.prefills += 1;
+                let admitted_at = Instant::now();
+                let queue_wait_s = (admitted_at - req.arrived).as_secs_f64();
+                let truncated = *plen < req.prompt.len();
+                if truncated {
+                    self.stats.truncated_prompts += 1;
+                }
+                let tok = self.sample(logits, req.temperature);
+                let mut ar = ActiveReq {
+                    req,
+                    generated: vec![tok],
+                    first_token_at: Instant::now(),
+                    queue_wait_s,
+                    truncated_prompt: truncated,
+                    modeled_start_s: self.sim.seconds,
+                    modeled_start_j: self.sim.energy_j,
+                };
+                self.stats.generated_tokens += 1;
+                if let Some(resp) = self.maybe_finish(slot, &mut ar, admitted_at) {
+                    self.kv.release(slot);
+                    done.push(resp);
+                } else {
+                    self.active[slot] = Some(ar);
+                }
+            }
+            Ok(false) => {
+                // the twin's blocks were evicted between registration and
+                // now: cold-prefill this clone alone
+                self.admit_paged_burst(vec![req], &[], &mut Vec::new(), done);
+            }
+            Err(e) => {
+                eprintln!(
+                    "engine: duplicate admission failed for request {} ({e}); aborting it",
+                    req.id
+                );
+                self.stats.step_failures += 1;
+                done.push(queued_response(&req, FinishReason::Aborted));
+            }
+        }
+    }
+
     /// Drain everything (used by benches/tests): step until idle.
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
@@ -591,6 +763,15 @@ impl Engine {
 
         let now = Instant::now();
         let mut done = Vec::new();
+        // A speculative backend reports per-slot rounds: verification
+        // already appended the round's K/V rows and truncated each slot's
+        // cache to its accepted length, so the engine must NOT advance —
+        // it emits the accepted draft tokens (per-token stop checks at
+        // each token's virtual position) and samples from the returned row.
+        if let Some(rounds) = self.backend.take_spec_rounds() {
+            self.emit_spec_rounds(rounds, &pos, &logits, now, &mut done);
+            return Ok(done);
+        }
         for slot in 0..b {
             let Some(mut ar) = self.active[slot].take() else { continue };
             if let Err(e) = self.kv.advance(slot) {
@@ -623,18 +804,112 @@ impl Engine {
         Ok(done)
     }
 
+    /// Multi-token emission for one speculative decode step. Per round:
+    /// count the proposal/acceptance stats, push each accepted draft
+    /// token with the SAME stop checks sequential decode would have run —
+    /// Eos/MaxTokens from the token stream, Length at the token's
+    /// *virtual* cache position (round start `p` + tokens emitted so
+    /// far + 1, exactly where `kv.exhausted` would fire had the tokens
+    /// decoded one at a time) — then, if still running, sample one token
+    /// from the returned logit row (the backend returns each slot's row
+    /// at its accepted depth). A stop mid-list discards the remaining
+    /// accepted tokens; the backend's truncate already bounded the cache
+    /// and the release below frees it either way.
+    fn emit_spec_rounds(
+        &mut self,
+        rounds: Vec<SpecRound>,
+        pos: &[i32],
+        logits: &[f32],
+        now: Instant,
+        done: &mut Vec<Response>,
+    ) {
+        let vocab = self.kv.cfg.vocab;
+        let seq_len = self.kv.cfg.seq_len;
+        let b = self.active.len();
+        let mut by_slot: Vec<Option<SpecRound>> = (0..b).map(|_| None).collect();
+        for r in rounds {
+            if r.slot < b {
+                by_slot[r.slot] = Some(r);
+            }
+        }
+        for slot in 0..b {
+            let Some(mut ar) = self.active[slot].take() else { continue };
+            let Some(round) = by_slot[slot].take() else {
+                // no round for an active slot: its cache position is
+                // unknowable, so the only safe answer is a contained abort
+                eprintln!(
+                    "engine: speculative backend reported no round for slot {slot} \
+                     (request {}); aborting it",
+                    ar.req.id
+                );
+                self.stats.step_failures += 1;
+                self.kv.release(slot);
+                done.push(self.response_for(&mut ar, FinishReason::Aborted));
+                continue;
+            };
+            self.stats.spec_rounds += 1;
+            self.stats.spec_proposed += round.proposed;
+            self.stats.spec_accepted += round.accepted.len() as u64;
+            let p = pos[slot] as usize;
+            let acc = round.accepted.len();
+            let mut finished = None;
+            for (j, &tok) in round.accepted.iter().enumerate() {
+                ar.generated.push(tok);
+                self.stats.generated_tokens += 1;
+                // accepted token j was decoded from cache rows 0..=p+j,
+                // leaving the cache p+j+1 tokens long
+                let exhausted = p + j + 1 >= seq_len - 1;
+                if let Some(resp) = self.maybe_finish_at(&mut ar, exhausted, now) {
+                    finished = Some(resp);
+                    break;
+                }
+            }
+            if finished.is_none() {
+                let lrow = &logits[slot * vocab..(slot + 1) * vocab];
+                let tok = self.sample(lrow, ar.req.temperature);
+                ar.generated.push(tok);
+                self.stats.generated_tokens += 1;
+                // the sampled token sits where the backend truncated to
+                // (p + acc + 1), so this matches kv.exhausted exactly
+                let exhausted = p + acc + 1 >= seq_len - 1;
+                finished = self.maybe_finish_at(&mut ar, exhausted, now);
+            }
+            match finished {
+                Some(resp) => {
+                    self.kv.release(slot);
+                    done.push(resp);
+                }
+                None => self.active[slot] = Some(ar),
+            }
+        }
+    }
+
     /// Terminal-state check after each sampled token. Natural completions
     /// (Eos / MaxTokens / Length) win over deadline expiry when both hold
     /// — the work is done either way, and "completed" is the more useful
     /// label. Mid-decode expiry returns the partial tokens generated so
     /// far; the caller releases the KV slot on any `Some`.
     fn maybe_finish(&mut self, slot: usize, ar: &mut ActiveReq, now: Instant) -> Option<Response> {
+        let exhausted = self.kv.exhausted(slot);
+        self.maybe_finish_at(ar, exhausted, now)
+    }
+
+    /// [`Self::maybe_finish`] with the context-exhaustion test supplied by
+    /// the caller: the speculative path checks each accepted token at its
+    /// *virtual* position (the cache was already truncated to the round's
+    /// final length, so `kv.exhausted` can't be consulted mid-list).
+    fn maybe_finish_at(
+        &mut self,
+        ar: &mut ActiveReq,
+        exhausted: bool,
+        now: Instant,
+    ) -> Option<Response> {
         let last = *ar.generated.last().unwrap();
         let reason = if ar.req.eos_token == Some(last) {
             Some(FinishReason::Eos)
         } else if ar.generated.len() >= ar.req.max_new_tokens {
             Some(FinishReason::MaxTokens)
-        } else if self.kv.exhausted(slot) {
+        } else if exhausted {
             Some(FinishReason::Length)
         } else if ar.req.expired(now) {
             Some(FinishReason::DeadlineExpired)
@@ -764,7 +1039,7 @@ fn queued_response(req: &Request, fr: FinishReason) -> Response {
 /// total order `f32::total_cmp` (ties resolve to the highest index, as
 /// the old `partial_cmp` argmax did), and an all-NaN row falls back to
 /// token 0 instead of panicking the engine thread.
-fn greedy_argmax(logits: &[f32]) -> i32 {
+pub(crate) fn greedy_argmax(logits: &[f32]) -> i32 {
     logits
         .iter()
         .enumerate()
@@ -850,16 +1125,34 @@ mod tests {
 
     /// Well-behaved scripted backend that can be told to fail decode on
     /// its Nth call — the minimal engine-fault fixture (the full seeded
-    /// fault matrix lives in `backend::chaos`).
+    /// fault matrix lives in `backend::chaos`). Counts the prompt rows it
+    /// actually prefills, so dedup tests can prove clones computed nothing.
     struct ScriptedBackend {
         model: ModelCfg,
         decode_calls: usize,
         fail_decode_on: Option<usize>,
+        prefill_rows: std::sync::Arc<std::sync::atomic::AtomicUsize>,
     }
 
     impl ScriptedBackend {
         fn ok(model: ModelCfg) -> Self {
-            ScriptedBackend { model, decode_calls: 0, fail_decode_on: None }
+            ScriptedBackend {
+                model,
+                decode_calls: 0,
+                fail_decode_on: None,
+                prefill_rows: Default::default(),
+            }
+        }
+
+        /// The fixture plus a handle to its prefill-row counter (the
+        /// backend is boxed away into the engine, so the counter must be
+        /// cloned out first).
+        fn counted(
+            model: ModelCfg,
+        ) -> (Self, std::sync::Arc<std::sync::atomic::AtomicUsize>) {
+            let b = Self::ok(model);
+            let rows = b.prefill_rows.clone();
+            (b, rows)
         }
     }
 
@@ -873,6 +1166,7 @@ mod tests {
         }
 
         fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+            self.prefill_rows.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             let m = self.model;
             let plen = prompt.len().clamp(1, m.seq_len - 1);
             let shape = [m.n_layers, 1, m.n_heads, m.seq_len, m.head_dim];
@@ -918,6 +1212,8 @@ mod tests {
             reqs: &[PagedPrefill<'_>],
             kv: &mut KvManager,
         ) -> Result<Vec<PagedPrefillOut>> {
+            self.prefill_rows
+                .fetch_add(reqs.len(), std::sync::atomic::Ordering::Relaxed);
             let m = self.model;
             let d = m.n_heads * m.head_dim;
             let mut outs = Vec::with_capacity(reqs.len());
@@ -974,19 +1270,21 @@ mod tests {
     }
 
     #[test]
-    fn rejected_response_carries_retry_after_once_estimable() {
+    fn rejected_response_always_carries_retry_after_hint() {
         let cfg = ModelCfg::test_preset();
         let ecfg = EngineConfig { queue_cap: 1, ..Default::default() };
         let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
         assert!(e.try_submit(Request::new(1, vec![1, 2], 2)).is_none());
-        // nothing has completed yet: no service-time estimate, hint is 0
+        // nothing has completed yet: the hint falls back to the modeled
+        // cost of serving the rejected request itself (prefill +
+        // max_new_tokens decode steps) — never a meaningless 0
         let r = e.try_submit(Request::new(2, vec![1, 2], 2)).expect("queue full");
         assert_eq!(r.finish_reason, FinishReason::Rejected);
-        assert_eq!(r.retry_after_ms, 0, "no estimate before first completion");
+        assert!(r.retry_after_ms >= 1, "cold hint from the cost model, got 0");
         let done = e.run_to_completion().expect("run");
         assert_eq!(done.len(), 1);
-        // EWMA primed by the natural completion: a fresh rejection now
-        // carries a non-zero backpressure hint
+        // EWMA primed by the natural completion: rejections now estimate
+        // from measured service time instead of the model
         assert!(e.try_submit(Request::new(3, vec![1, 2], 2)).is_none());
         let r = e.try_submit(Request::new(4, vec![1, 2], 2)).expect("queue full");
         assert_eq!(r.finish_reason, FinishReason::Rejected);
@@ -995,6 +1293,68 @@ mod tests {
         let drained = e.reject(Request::new(5, vec![1], 2));
         assert!(drained.retry_after_ms >= 1);
         assert_eq!(e.stats.rejected, 3);
+    }
+
+    /// Satellite: intra-burst duplicate-prompt dedup on the dense
+    /// (non-paged) admission path — two identical prompts admitted in one
+    /// burst run ONE backend prefill row; the clone reuses the computed
+    /// K/V + logits and produces a bit-identical greedy stream.
+    #[test]
+    fn dense_burst_of_clones_prefills_once_and_matches() {
+        let cfg = ModelCfg::test_preset(); // decode_batch 2: one burst
+        let ecfg = EngineConfig { policy: AdmitPolicy::FillAll, ..Default::default() };
+        let (backend, rows) = ScriptedBackend::counted(cfg);
+        let mut e = Engine::new(Box::new(backend), &ecfg);
+        let prompt: Vec<i32> = (40..52).collect();
+        e.submit(Request::new(1, prompt.clone(), 3));
+        e.submit(Request::new(2, prompt.clone(), 3));
+        let done = e.run_to_completion().expect("run");
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|r| r.finish_reason == FinishReason::MaxTokens));
+        let a = done.iter().find(|r| r.id == 1).unwrap();
+        let b = done.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(a.tokens, b.tokens, "clones sample identical greedy streams");
+        let computed = rows.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(computed, 1, "one prefill row serves both clones");
+        assert_eq!(e.stats.burst_dedup_hits, 1);
+        assert_eq!(e.stats.prefills, 2, "prefills keeps per-request semantics");
+        assert_eq!(e.stats.completed, 2);
+        assert_eq!(e.kv().cache().in_use_blocks(), 0);
+    }
+
+    /// Satellite: the same collapse on the paged (prefix-cache) path —
+    /// the unique prefills + registers, the clone admits as a full-length
+    /// alias of the freshly indexed prompt (zero tail compute) and samples
+    /// from its twin's logit row.
+    #[test]
+    fn paged_burst_of_clones_aliases_twin_blocks() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig {
+            prefix_cache: true,
+            policy: AdmitPolicy::FillAll,
+            ..Default::default()
+        };
+        let (backend, rows) = ScriptedBackend::counted(cfg);
+        let mut e = Engine::new(Box::new(backend), &ecfg);
+        // one full 16-token block plus a 2-token partial tail block
+        let prompt: Vec<i32> = (300..318).collect();
+        e.submit(Request::new(1, prompt.clone(), 2));
+        e.submit(Request::new(2, prompt.clone(), 2));
+        let done = e.run_to_completion().expect("run");
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|r| r.finish_reason == FinishReason::MaxTokens));
+        let a = done.iter().find(|r| r.id == 1).unwrap();
+        let b = done.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(a.tokens, b.tokens, "clone decodes over aliased blocks bit-exactly");
+        let computed = rows.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(computed, 1, "the clone never reached the backend");
+        assert_eq!(e.stats.burst_dedup_hits, 1);
+        assert_eq!(e.stats.prefills, 2);
+        // dedup is its own counter, not a prefix hit (the unique was cold)
+        assert_eq!(e.stats.prefix_hits, 0);
+        assert_eq!(e.stats.completed, 2);
+        assert_eq!(e.stats.step_failures, 0);
+        assert_eq!(e.stats.prefill_failures, 0);
     }
 
     #[test]
@@ -1088,6 +1448,7 @@ mod tests {
             model: cfg,
             decode_calls: 0,
             fail_decode_on: Some(2),
+            prefill_rows: Default::default(),
         };
         let mut e = Engine::new(
             Box::new(backend),

@@ -89,6 +89,40 @@ impl KvManager {
         Ok(m)
     }
 
+    /// Claim `slot` as a *full alias* of an already-indexed identical
+    /// prompt (intra-burst duplicate dedup): unlike [`Self::admit_prefix`]
+    /// the match is allowed to cover every one of `plen` tokens — the
+    /// duplicate reuses its twin's logits instead of recomputing a tail,
+    /// so no uncovered position is needed. Returns `Ok(true)` with the
+    /// slot `Active` at `plen` when the index served the whole prompt;
+    /// on a partial match (the twin was evicted or never registered) the
+    /// aliased blocks are returned and the slot stays `Free` —
+    /// `Ok(false)` tells the caller to fall back to a real prefill.
+    pub fn admit_duplicate(
+        &mut self,
+        slot: usize,
+        request: RequestId,
+        prompt: &[i32],
+        plen: usize,
+    ) -> Result<bool, String> {
+        if self.slots[slot] != Slot::Free {
+            return Err(format!("slot {slot} not free"));
+        }
+        if plen == 0 || plen > self.cfg.seq_len || plen > prompt.len() {
+            return Err(format!("prompt_len {plen} out of range"));
+        }
+        let m = self.cache.admit_prefix(slot, prompt, plen);
+        if m.tokens == plen {
+            self.slots[slot] = Slot::Active { request, pos: plen };
+            Ok(true)
+        } else {
+            // partial coverage is useless to a duplicate (its logits come
+            // from the twin): hand the aliased blocks straight back
+            self.cache.release(slot);
+            Ok(false)
+        }
+    }
+
     /// Set an active slot's position (paged prefill completed: the slot
     /// has written `pos` tokens).
     pub fn set_position(&mut self, slot: usize, new_pos: usize) -> Result<(), String> {
@@ -262,6 +296,21 @@ impl KvManager {
         out: &mut [f32],
     ) {
         self.cache.value_mix(layer, slot, head, n, w, out)
+    }
+
+    /// Roll an active slot back to `new_len` written positions (the
+    /// speculative-decode rejection path): truncates the paged storage —
+    /// reference-dropping only, COW-safe for shared prefix blocks, see
+    /// [`PagedKvCache::truncate`] — and rewinds the slot position to
+    /// match, so the next append lands at `new_len`.
+    pub fn truncate(&mut self, slot: usize, new_len: usize) -> Result<(), String> {
+        match self.slots[slot] {
+            Slot::Active { .. } => {
+                self.cache.truncate(slot, new_len)?;
+                self.set_position(slot, new_len)
+            }
+            Slot::Free => Err(format!("truncate on free slot {slot}")),
+        }
     }
 
     pub fn advance(&mut self, slot: usize) -> Result<usize, String> {
@@ -468,6 +517,30 @@ mod tests {
         assert!(kv
             .update_from_step(&ok, &ok, &[1 << 20, 0], &[false, false])
             .is_ok());
+    }
+
+    #[test]
+    fn truncate_rewinds_position_and_storage_together() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        let (kc, vc) = prefill_pair(&c, 1.0);
+        kv.install_prefill(0, 7, 20, &kc, &vc).unwrap();
+        assert!(kv.truncate(1, 3).is_err(), "free slot");
+        assert!(kv.truncate(0, 21).is_err(), "beyond written");
+        kv.truncate(0, 17).unwrap();
+        assert_eq!(kv.position(0), Some(17));
+        for l in 0..c.n_layers {
+            assert_eq!(kv.cache().written(l, 0), 17);
+        }
+        // the append protocol resumes exactly at the rollback point
+        let d = c.n_heads * c.head_dim;
+        let row = vec![0.5f32; d];
+        for l in 0..c.n_layers {
+            kv.append_token(l, 0, 17, &row, &row).unwrap();
+        }
+        assert_eq!(kv.advance(0).unwrap(), 18);
+        kv.release(0);
+        assert_eq!(kv.cache().in_use_blocks(), 0);
     }
 
     #[test]

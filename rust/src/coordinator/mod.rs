@@ -15,7 +15,7 @@ pub mod server;
 pub use backend::{
     probe_decode_logits, BackendSpec, ChaosBackend, ChaosCfg, ChaosCounters, DecodeBackend,
     NativeCfg, NativeWaqBackend, PagedPrefill, PagedPrefillOut, PjrtBackend, PrefillOut,
-    ShardedWaqBackend, StepCost,
+    ShardedWaqBackend, SpecRound, SpeculativeBackend, StepCost, VerifyRun,
 };
 pub use batcher::{AdmitPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, SimTotals};

@@ -84,10 +84,14 @@ pub struct Response {
     pub modeled_accel_j: f64,
     /// Backpressure hint attached to [`FinishReason::Rejected`] responses:
     /// estimated milliseconds until the engine has drained enough queue to
-    /// accept a resubmit (queue depth x recent per-request service time /
-    /// decode batch width). `0` for every non-rejected outcome, and for
-    /// rejections before the engine has completed anything to estimate
-    /// from. Surfaced over TCP as `retry_after_ms` on rejection replies.
+    /// accept a resubmit (queue depth x per-request service time / decode
+    /// batch width). Service time is the EWMA of recent natural
+    /// completions once any exist; before the first completion it falls
+    /// back to a modeled cost estimate for the rejected request itself
+    /// (prefill + `max_new_tokens` decode steps), so cold-start
+    /// rejections carry a real hint instead of `0`. `0` for every
+    /// non-rejected outcome. Surfaced over TCP as `retry_after_ms` on
+    /// rejection replies.
     pub retry_after_ms: u64,
 }
 
@@ -218,6 +222,21 @@ pub struct EngineStats {
     /// evictions (pool exhausted at alloc time) plus chaos-injected
     /// pressure. Only index-only blocks (refcount 1) are ever evicted.
     pub evictions: u64,
+    /// Speculative decode rounds executed (`--backend native-spec`): one
+    /// per active slot per decode step — each round proposes draft tokens
+    /// and verifies them in a single stacked target pass.
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all speculative rounds.
+    pub spec_proposed: u64,
+    /// Proposed draft tokens accepted by target verification (the
+    /// acceptance rate is `spec_accepted / spec_proposed`; every round
+    /// additionally emits one sampled token on top of the accepted run).
+    pub spec_accepted: u64,
+    /// Intra-burst duplicate prompts collapsed at admission: the
+    /// duplicate skipped prefill compute and reused its twin's K/V rows
+    /// (dense path: same installed cache; paged path: aliased blocks)
+    /// and last-position logits.
+    pub burst_dedup_hits: u64,
 }
 
 impl EngineStats {
@@ -241,7 +260,9 @@ impl EngineStats {
                 "\"generated_tokens\": {}, \"completed\": {}, \"mean_occupancy\": {:.4}, ",
                 "\"waq_backend\": \"{}\", \"host_waq_s\": {:.6}, \"host_shard_crit_s\": {:.6}, ",
                 "\"kv_bits\": {}, \"peak_kv_bytes\": {}, \"kv_bytes_per_token\": {:.3}, ",
-                "\"prefix_hits\": {}, \"prefix_blocks_reused\": {}, \"evictions\": {}}}"
+                "\"prefix_hits\": {}, \"prefix_blocks_reused\": {}, \"evictions\": {}, ",
+                "\"spec_rounds\": {}, \"spec_proposed\": {}, \"spec_accepted\": {}, ",
+                "\"burst_dedup_hits\": {}}}"
             ),
             self.decode_steps,
             self.prefills,
@@ -264,6 +285,10 @@ impl EngineStats {
             self.prefix_hits,
             self.prefix_blocks_reused,
             self.evictions,
+            self.spec_rounds,
+            self.spec_proposed,
+            self.spec_accepted,
+            self.burst_dedup_hits,
         )
     }
 }
@@ -295,6 +320,10 @@ mod tests {
             prefix_hits: 3,
             prefix_blocks_reused: 12,
             evictions: 2,
+            spec_rounds: 7,
+            spec_proposed: 28,
+            spec_accepted: 19,
+            burst_dedup_hits: 4,
             waq_backend: "native-packed",
             ..Default::default()
         };
@@ -304,6 +333,10 @@ mod tests {
         assert!(j.contains("\"prefix_hits\": 3"));
         assert!(j.contains("\"prefix_blocks_reused\": 12"));
         assert!(j.contains("\"evictions\": 2"));
+        assert!(j.contains("\"spec_rounds\": 7"));
+        assert!(j.contains("\"spec_proposed\": 28"));
+        assert!(j.contains("\"spec_accepted\": 19"));
+        assert!(j.contains("\"burst_dedup_hits\": 4"));
         assert!(j.contains("\"waq_backend\": \"native-packed\""));
     }
 

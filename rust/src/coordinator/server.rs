@@ -35,7 +35,14 @@
 //! A control line `{"cmd": "stats"}` (no prompt) replies with one JSON
 //! line of engine counters ([`EngineStats::to_json`]) — including the
 //! prefix-cache counters (`prefix_hits`, `prefix_blocks_reused`,
-//! `evictions`) — without consuming queue or KV capacity.
+//! `evictions`) and the speculative counters (`spec_rounds`,
+//! `spec_proposed`, `spec_accepted`) — without consuming queue or KV
+//! capacity.
+//!
+//! The full wire protocol (TCP and the stdin REPL), with examples and
+//! field-by-field reference, is consolidated in `docs/serving.md` at the
+//! repository root — that document and this module's schema comments
+//! describe the same single implementation below.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -48,7 +55,7 @@ use anyhow::{anyhow, Result};
 
 use super::backend::{
     BackendSpec, ChaosBackend, DecodeBackend, NativeCfg, NativeWaqBackend, PjrtBackend,
-    ShardedWaqBackend,
+    ShardedWaqBackend, SpeculativeBackend,
 };
 use super::engine::{Engine, EngineConfig, SimTotals};
 use super::request::{EngineStats, FinishReason, Request, RequestId, Response};
@@ -274,6 +281,28 @@ fn build_backend(
                 cfg.shards,
             )?;
             Box::new(sharded)
+        }
+        // speculative decoding: the verification target is the plain
+        // native packed backend (`--shards` is ignored here — compose a
+        // sharded target by teaching this arm ShardedWaqBackend when
+        // needed); the 2/3-bit draft is built inside from the same
+        // manifest + params, so draft and target serve the same model
+        BackendSpec::NativeSpec => {
+            let manifest = native_manifest(source)?;
+            let target = NativeWaqBackend::new(
+                &manifest,
+                params,
+                NativeCfg::from_mode(WaqBackend::Packed, cfg.mode),
+            )?;
+            let spec = SpeculativeBackend::new(
+                &manifest,
+                params,
+                Box::new(target),
+                cfg.mode,
+                cfg.spec_k,
+                cfg.draft_wbits,
+            )?;
+            Box::new(spec)
         }
     };
     Ok(match cfg.chaos {
@@ -511,7 +540,8 @@ pub fn serve_tcp(coord: Arc<Coordinator>, port: u16) -> Result<u16> {
 
 /// [`serve_tcp`] with explicit listener hardening. Accept errors are
 /// counted (`EngineStats::accept_errors`) and logged — never silently
-/// swallowed — and the listener keeps accepting after them.
+/// swallowed — and the listener keeps accepting after them. The wire
+/// schema served here is documented line-by-line in `docs/serving.md`.
 pub fn serve_tcp_with(coord: Arc<Coordinator>, port: u16, cfg: TcpCfg) -> Result<u16> {
     use std::io::Write;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;

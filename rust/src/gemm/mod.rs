@@ -22,14 +22,18 @@ pub mod waq;
 pub mod woq;
 
 pub use compensation::{
-    compensate, compensate_packed, execute_critical_path, execute_dual_branch,
+    compensate, compensate_crumbs, compensate_packed, execute_critical_path,
+    execute_dual_branch,
 };
 pub use lut::CartesianLut;
-pub use packed::{accumulate_tiles, execute_batch_tiled, execute_packed, TileCfg};
+pub use packed::{
+    accumulate_tiles, accumulate_tiles_crumbs, execute_batch_tiled,
+    execute_batch_tiled_crumbs, execute_packed, TileCfg,
+};
 pub use sharded::{ShardPool, ShardedWaqGemm};
 pub use waq::{execute_direct, execute_histogram};
 
-use crate::quant::{PackedWeights, QuantToken, QuantWeights};
+use crate::quant::{CrumbWeights, PackedWeights, QuantToken, QuantWeights};
 
 /// Which software execution path runs the WAQ LUT-GEMM.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -82,10 +86,14 @@ impl std::str::FromStr for WaqBackend {
 
 /// Weight storage matching the backend that will stream it: the packed
 /// backend drops the byte-per-index form entirely (keeping both would
-/// cost 1.5x the index memory the packing exists to halve).
+/// cost 1.5x the index memory the packing exists to halve). A <= 2-bit
+/// codebook under the packed backend goes to the crumb form — four
+/// reduction rows per byte — which halves the weight stream again (the
+/// speculative draft model's regime).
 enum WaqWeights {
     Unpacked(QuantWeights),
     Packed(PackedWeights),
+    Crumbs(CrumbWeights),
 }
 
 /// A prepared WAQ GEMM: quantized weights (in backend-appropriate
@@ -104,6 +112,7 @@ pub struct WaqGemm {
 impl WaqGemm {
     pub fn new(w: QuantWeights, lut: CartesianLut, backend: WaqBackend) -> WaqGemm {
         let w = match backend {
+            WaqBackend::Packed if w.codebook.len() <= 4 => WaqWeights::Crumbs(w.pack_crumbs()),
             WaqBackend::Packed => WaqWeights::Packed(w.pack()),
             _ => WaqWeights::Unpacked(w),
         };
@@ -115,11 +124,21 @@ impl WaqGemm {
         self
     }
 
-    /// The packed weight form (present iff the backend is `Packed`).
+    /// The nibble-packed weight form (present iff the backend is `Packed`
+    /// and the codebook is wider than 2 bits).
     pub fn packed_weights(&self) -> Option<&PackedWeights> {
         match &self.w {
             WaqWeights::Packed(p) => Some(p),
-            WaqWeights::Unpacked(_) => None,
+            _ => None,
+        }
+    }
+
+    /// The crumb-packed weight form (present iff the backend is `Packed`
+    /// and the codebook fits 2 bits — the speculative draft regime).
+    pub fn crumb_weights(&self) -> Option<&CrumbWeights> {
+        match &self.w {
+            WaqWeights::Crumbs(c) => Some(c),
+            _ => None,
         }
     }
 
@@ -129,7 +148,7 @@ impl WaqGemm {
     pub fn unpacked_weights(&self) -> Option<&QuantWeights> {
         match &self.w {
             WaqWeights::Unpacked(w) => Some(w),
-            WaqWeights::Packed(_) => None,
+            _ => None,
         }
     }
 
@@ -143,6 +162,15 @@ impl WaqGemm {
                 waq::execute_histogram(tok, w, &self.lut)
             }
             (WaqWeights::Packed(p), _) => packed::execute_packed(tok, p, &self.lut),
+            (WaqWeights::Crumbs(c), _) => {
+                let mut out = packed::execute_batch_tiled_crumbs(
+                    std::slice::from_ref(tok),
+                    c,
+                    &self.lut,
+                    &TileCfg::single_thread(),
+                );
+                out.pop().expect("one token in, one row out")
+            }
             (WaqWeights::Unpacked(_), WaqBackend::Packed) => {
                 unreachable!("packed backend always stores packed weights")
             }
@@ -157,7 +185,21 @@ impl WaqGemm {
             WaqWeights::Packed(p) => {
                 packed::execute_batch_tiled(toks, p, &self.lut, &self.tile)
             }
+            WaqWeights::Crumbs(c) => {
+                packed::execute_batch_tiled_crumbs(toks, c, &self.lut, &self.tile)
+            }
             WaqWeights::Unpacked(_) => toks.iter().map(|t| self.execute(t)).collect(),
+        }
+    }
+
+    /// Outlier error compensation over whichever weight form is resident
+    /// — the ONE dispatch point for the dual-branch serving forward, so
+    /// callers never match on storage themselves.
+    pub fn compensate(&self, out: &mut [f32], tok: &QuantToken) {
+        match &self.w {
+            WaqWeights::Packed(p) => compensation::compensate_packed(out, tok, p),
+            WaqWeights::Crumbs(c) => compensation::compensate_crumbs(out, tok, c),
+            WaqWeights::Unpacked(w) => compensation::compensate(out, tok, w),
         }
     }
 }
@@ -210,5 +252,39 @@ mod tests {
         for (a, b) in h.iter().zip(&want) {
             crate::util::check::assert_allclose(a, b, 1e-4, 1e-4, "hist vs direct");
         }
+    }
+
+    #[test]
+    fn two_bit_codebooks_dispatch_to_crumbs_bit_exact() {
+        let mut rng = Rng::new(12);
+        let (k, n) = (81, 24); // K % 4 == 1 exercises the crumb tail
+        let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
+        let qw = quant::quantize_weights(&wmat, 2);
+        let calib: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let cfg = OutlierCfg { total_frac: 0.04 };
+        let cb = quant::learn_act_codebook(&refs, None, 4, cfg);
+        let lut = CartesianLut::build(&cb, &qw.codebook);
+        let toks: Vec<_> = (0..3)
+            .map(|_| quant::quantize_token(&rng.heavy_tailed_vec(k, 0.02, 8.0), &cb, cfg))
+            .collect();
+
+        let direct = WaqGemm::new(qw.clone(), lut.clone(), WaqBackend::Direct);
+        let packed = WaqGemm::new(qw, lut, WaqBackend::Packed);
+        // 2-bit codebook under the packed backend stores crumbs, not nibbles
+        assert!(packed.crumb_weights().is_some());
+        assert!(packed.packed_weights().is_none());
+
+        // main branch + compensation both bit-exact with the direct path
+        let mut want = direct.execute_batch(&toks);
+        let mut got = packed.execute_batch(&toks);
+        assert_eq!(got, want);
+        assert_eq!(packed.execute(&toks[0]), want[0]);
+        for ((w, g), t) in want.iter_mut().zip(got.iter_mut()).zip(&toks) {
+            direct.compensate(w, t);
+            packed.compensate(g, t);
+        }
+        assert_eq!(got, want);
     }
 }

@@ -37,7 +37,7 @@
 //! thread count and tile shape.
 
 use super::lut::CartesianLut;
-use crate::quant::{PackedWeights, QuantToken};
+use crate::quant::{CrumbWeights, PackedWeights, QuantToken};
 
 /// Tile/parallelism configuration for [`execute_batch_tiled`].
 #[derive(Clone, Copy, Debug)]
@@ -212,6 +212,198 @@ fn accumulate_range(
             add_tail(&mut acc[..width], j0, tok, w, lut);
         }
     }
+}
+
+/// Debug-only guard for the crumb stream, mirroring
+/// [`debug_assert_nibbles`]: a quad byte whose crumb exceeds the weight
+/// codebook means corrupt index data and must not silently read an
+/// unwritten fused-table slot.
+#[inline]
+fn debug_assert_crumbs(b: u8, mask: usize) {
+    debug_assert!(
+        (0..4).all(|r| ((b >> (6 - 2 * r)) & 0x03) as usize <= mask),
+        "packed weight byte {b:#04x} out of range for crumb mask {mask:#x}"
+    );
+}
+
+/// Build a fused crumb-pair row for activation indices `(ia0, ia1)`:
+/// `fused[(iw0 << 2) | iw1] = lut[ia0][iw0] + lut[ia1][iw1]` — the crumb
+/// analogue of [`build_fused_row`], 16 entries instead of 256. Because
+/// each entry is exactly the per-pair sum the direct path computes before
+/// accumulating, the crumb kernel stays bit-exact with
+/// [`super::waq::execute_direct`]. Entries whose crumbs exceed the weight
+/// codebook are never produced by `CrumbWeights` and are left untouched.
+#[inline]
+fn build_fused_crumb_pair(fused: &mut [f32; 16], ia0: u8, ia1: u8, lut: &CartesianLut) {
+    let mask = (1usize << lut.n_w_bits) - 1;
+    let r0 = &lut.table[(ia0 as usize) << lut.n_w_bits..][..mask + 1];
+    let r1 = &lut.table[(ia1 as usize) << lut.n_w_bits..][..mask + 1];
+    for (hi, &v0) in r0.iter().enumerate() {
+        let dst = &mut fused[hi << 2..(hi << 2) + mask + 1];
+        for (d, &v1) in dst.iter_mut().zip(r1) {
+            *d = v0 + v1;
+        }
+    }
+}
+
+/// Accumulate the 1-3 unquaddable tail rows exactly like the direct path:
+/// row pairs first (one fused-pair lookup per column, matching the direct
+/// kernel's two-row unroll — tail rows start at `4 * n_quads`, an even
+/// offset, so the pairing boundary lines up), then a plain LUT-row gather
+/// for a final odd row.
+fn add_crumb_tail(
+    acc: &mut [f32],
+    j0: usize,
+    tok: &QuantToken,
+    w: &CrumbWeights,
+    lut: &CartesianLut,
+) {
+    let base_k = 4 * w.n_quads();
+    let mask = (1usize << lut.n_w_bits) - 1;
+    let mut fused = [0.0f32; 16];
+    let mut t = 0;
+    while t + 1 < w.tail.len() {
+        build_fused_crumb_pair(&mut fused, tok.idx[base_k + t], tok.idx[base_k + t + 1], lut);
+        let (r0, r1) = (&w.tail[t], &w.tail[t + 1]);
+        for (jj, a) in acc.iter_mut().enumerate() {
+            let (i0, i1) = (r0.get(j0 + jj) as usize, r1.get(j0 + jj) as usize);
+            debug_assert!(i0 <= mask && i1 <= mask, "tail crumb {i0}/{i1} out of range");
+            *a += fused[(i0 << 2) | i1];
+        }
+        t += 2;
+    }
+    if t < w.tail.len() {
+        let base = (tok.idx[base_k + t] as usize) << lut.n_w_bits;
+        let row = &lut.table[base..base + mask + 1];
+        let tail = &w.tail[t];
+        for (jj, a) in acc.iter_mut().enumerate() {
+            let iw = tail.get(j0 + jj) as usize;
+            debug_assert!(iw <= mask, "tail crumb index {iw} out of range (mask {mask})");
+            *a += row[iw & mask];
+        }
+    }
+}
+
+/// Accumulate (no scaling) columns `[j0, j1)` of every token over
+/// crumb-packed weights, K-quad tiles outermost and tokens inside so each
+/// weight tile is reused across the batch while hot — the crumb twin of
+/// [`accumulate_range`]. Each quad byte costs two fused-pair lookups for
+/// FOUR MACs at half the nibble stream's weight traffic, and the
+/// accumulation order per output column (k pairs ascending, then the
+/// tail) is identical to the direct path's, so results are bit-exact with
+/// `execute_direct` for every tile shape and thread count.
+fn accumulate_range_crumbs(
+    toks: &[QuantToken],
+    w: &CrumbWeights,
+    lut: &CartesianLut,
+    k_quad_block: usize,
+    j0: usize,
+    j1: usize,
+    outs: &mut [&mut [f32]],
+) {
+    let n = w.n_cols;
+    let nq = w.n_quads();
+    let width = j1 - j0;
+    let crumb_mask = (1usize << lut.n_w_bits) - 1;
+    let mut fhi = [0.0f32; 16];
+    let mut flo = [0.0f32; 16];
+    let mut qb = 0;
+    while qb < nq {
+        let qe = (qb + k_quad_block).min(nq);
+        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
+            for q in qb..qe {
+                build_fused_crumb_pair(&mut fhi, tok.idx[4 * q], tok.idx[4 * q + 1], lut);
+                build_fused_crumb_pair(&mut flo, tok.idx[4 * q + 2], tok.idx[4 * q + 3], lut);
+                let wrow = &w.quads[q * n + j0..q * n + j1];
+                for (a, &b) in acc[..width].iter_mut().zip(wrow) {
+                    debug_assert_crumbs(b, crumb_mask);
+                    *a += fhi[(b >> 4) as usize];
+                    *a += flo[(b & 0x0F) as usize];
+                }
+            }
+        }
+        qb = qe;
+    }
+    if !w.tail.is_empty() {
+        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
+            add_crumb_tail(&mut acc[..width], j0, tok, w, lut);
+        }
+    }
+}
+
+/// Accumulate (no scaling) the full column range of crumb-packed `w` for
+/// every token — the crumb twin of [`accumulate_tiles`], and the building
+/// block the sharded backend drives with each shard's column slice.
+/// `k_quad_block` plays `k_pair_block`'s role at quad granularity.
+pub fn accumulate_tiles_crumbs(
+    toks: &[QuantToken],
+    w: &CrumbWeights,
+    lut: &CartesianLut,
+    k_quad_block: usize,
+    outs: &mut [&mut [f32]],
+) {
+    for t in toks {
+        assert_eq!(t.idx.len(), w.n_rows, "reduction length mismatch");
+    }
+    assert_eq!(toks.len(), outs.len(), "token/output arity mismatch");
+    accumulate_range_crumbs(toks, w, lut, k_quad_block.max(1), 0, w.n_cols, outs);
+}
+
+/// Multi-token (M x K) @ (K x N) over crumb-packed weights: the 2-bit
+/// counterpart of [`execute_batch_tiled`], same tiling/threading scheme
+/// (`cfg.k_pair_block` reinterpreted as the K-quad tile depth), bit-exact
+/// with per-token `execute_direct` for every tile shape and thread count.
+pub fn execute_batch_tiled_crumbs(
+    toks: &[QuantToken],
+    w: &CrumbWeights,
+    lut: &CartesianLut,
+    cfg: &TileCfg,
+) -> Vec<Vec<f32>> {
+    for t in toks {
+        assert_eq!(t.idx.len(), w.n_rows, "reduction length mismatch");
+    }
+    if toks.is_empty() {
+        return Vec::new();
+    }
+    let n = w.n_cols;
+    let k_quad_block = cfg.k_pair_block.max(1);
+    let ranges = col_ranges(n, cfg);
+    let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; n]).collect();
+
+    if ranges.len() <= 1 {
+        let mut views: Vec<&mut [f32]> = out.iter_mut().map(Vec::as_mut_slice).collect();
+        accumulate_range_crumbs(toks, w, lut, k_quad_block, 0, n, &mut views);
+    } else {
+        std::thread::scope(|s| {
+            let workers: Vec<_> = ranges
+                .iter()
+                .map(|&(j0, j1)| {
+                    s.spawn(move || {
+                        let mut local: Vec<Vec<f32>> =
+                            toks.iter().map(|_| vec![0.0f32; j1 - j0]).collect();
+                        let mut views: Vec<&mut [f32]> =
+                            local.iter_mut().map(Vec::as_mut_slice).collect();
+                        accumulate_range_crumbs(toks, w, lut, k_quad_block, j0, j1, &mut views);
+                        drop(views);
+                        (j0, local)
+                    })
+                })
+                .collect();
+            for worker in workers {
+                let (j0, local) = worker.join().expect("waq gemm worker panicked");
+                for (dst, src) in out.iter_mut().zip(local) {
+                    dst[j0..j0 + src.len()].copy_from_slice(&src);
+                }
+            }
+        });
+    }
+
+    for (tok, row) in toks.iter().zip(out.iter_mut()) {
+        for (j, a) in row.iter_mut().enumerate() {
+            *a *= tok.scale * w.col_scales[j];
+        }
+    }
+    out
 }
 
 /// Split `[0, n)` into `parts` contiguous near-equal ranges (width
@@ -398,6 +590,76 @@ mod tests {
         }
         let want = execute_batch_tiled(&toks, &pw, &lut, &TileCfg::single_thread());
         assert_eq!(rows, want);
+    }
+
+    #[test]
+    fn crumb_kernel_bit_exact_with_direct() {
+        // K % 4 in {0,1,2,3} exercises every tail shape, K=2/3 the
+        // quad-free edge; outliers don't matter here (compensation is a
+        // separate pass) but odd N checks column handling
+        for &(k, n) in &[(64usize, 24usize), (65, 24), (66, 17), (67, 9), (2, 8), (3, 8)] {
+            let (toks, qw, lut) = setup(40 + k as u64, k, n, 4, 2, 3);
+            let cw = qw.pack_crumbs();
+            let want: Vec<Vec<f32>> =
+                toks.iter().map(|t| waq::execute_direct(t, &qw, &lut)).collect();
+            for threads in [1usize, 3] {
+                for (nb, kb) in [(8usize, 3usize), (512, 128), (5, 1000)] {
+                    let cfg = TileCfg { n_block: nb, k_pair_block: kb, threads };
+                    let got = execute_batch_tiled_crumbs(&toks, &cw, &lut, &cfg);
+                    assert_eq!(got, want, "({k},{n}) threads={threads} nb={nb} kb={kb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crumb_kernel_mixed_activation_bits() {
+        // 3-bit activations x 2-bit weights (the draft model pairs a 2-bit
+        // weight codebook with whatever activation width the mode sets)
+        for ab in [3u32, 4] {
+            let (toks, qw, lut) = setup(90 + ab as u64, 48, 12, ab, 2, 2);
+            let cw = qw.pack_crumbs();
+            let want: Vec<Vec<f32>> =
+                toks.iter().map(|t| waq::execute_direct(t, &qw, &lut)).collect();
+            let got = execute_batch_tiled_crumbs(&toks, &cw, &lut, &TileCfg::default());
+            assert_eq!(got, want, "A{ab}/W2 not bit-exact");
+        }
+    }
+
+    #[test]
+    fn accumulate_tiles_crumbs_is_the_unscaled_kernel() {
+        let (toks, qw, lut) = setup(91, 33, 12, 4, 2, 3);
+        let cw = qw.pack_crumbs();
+        let mut rows: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; 12]).collect();
+        let mut views: Vec<&mut [f32]> = rows.iter_mut().map(Vec::as_mut_slice).collect();
+        accumulate_tiles_crumbs(&toks, &cw, &lut, 4, &mut views);
+        drop(views);
+        for (tok, row) in toks.iter().zip(rows.iter_mut()) {
+            for (a, &s) in row.iter_mut().zip(&cw.col_scales) {
+                *a *= tok.scale * s;
+            }
+        }
+        let want = execute_batch_tiled_crumbs(&toks, &cw, &lut, &TileCfg::single_thread());
+        assert_eq!(rows, want);
+        // empty batch is a no-op, like the nibble kernel
+        let none: Vec<QuantToken> = Vec::new();
+        assert!(execute_batch_tiled_crumbs(&none, &cw, &lut, &TileCfg::default()).is_empty());
+    }
+
+    #[test]
+    fn fused_crumb_pair_matches_two_lookups() {
+        let mut rng = Rng::new(92);
+        let cb_a = quant::Codebook::new(rng.normal_vec(16, 1.0));
+        let cb_w = quant::Codebook::new(rng.normal_vec(4, 1.0));
+        let lut = CartesianLut::build(&cb_a, &cb_w);
+        let mut fused = [0.0f32; 16];
+        build_fused_crumb_pair(&mut fused, 5, 11, &lut);
+        for iw0 in 0..4u8 {
+            for iw1 in 0..4u8 {
+                let b = ((iw0 as usize) << 2) | iw1 as usize;
+                assert_eq!(fused[b], lut.lookup(5, iw0) + lut.lookup(11, iw1));
+            }
+        }
     }
 
     #[test]

@@ -493,6 +493,43 @@ impl PagedKvCache {
         }
     }
 
+    /// Roll back `slot` to `new_len` written positions (speculative-decode
+    /// rejection): per layer, pop every table block that lies entirely
+    /// beyond the new length and release that reference. Truncation only
+    /// drops references — no payload is ever written — so a block shared
+    /// with the prefix index or another slot survives untouched, and a
+    /// later re-append into a retained aliased partial block fires the
+    /// ordinary copy-on-write in [`append`](Self::append). Stale rows
+    /// beyond `new_len` in the retained tail block are unreachable (every
+    /// read asserts against the written count) and are overwritten by the
+    /// next append. `new_len` must not exceed the written count.
+    pub fn truncate(&mut self, slot: usize, new_len: usize) -> Result<(), String> {
+        if slot >= self.n_slots {
+            return Err(format!("truncate out of range: slot {slot}"));
+        }
+        for layer in 0..self.n_layers {
+            let e = self.entry(layer, slot);
+            if new_len > self.written[e] {
+                return Err(format!(
+                    "truncate to {new_len} beyond written {} (layer {layer})",
+                    self.written[e]
+                ));
+            }
+        }
+        let keep = new_len.div_ceil(self.block_tokens);
+        for layer in 0..self.n_layers {
+            let e = self.entry(layer, slot);
+            while self.tables[e].len() > keep {
+                let id = self.tables[e].pop().expect("table longer than keep");
+                if self.alloc.release(id) {
+                    self.store.release_block(id);
+                }
+            }
+            self.written[e] = new_len;
+        }
+        Ok(())
+    }
+
     /// Materialize the dense `(L, B, H, S, hd)` cache pair, zeros at
     /// unwritten positions (the PJRT artifact contract). The buffers are
     /// zeroed here, so reused scratch space can never leak a released
@@ -1016,6 +1053,95 @@ mod tests {
         // peak is a true high-water mark: it neither shrinks on release
         // nor keeps counting freed rows as live
         assert_eq!(cache.peak_bytes(), with_outliers);
+    }
+
+    #[test]
+    fn truncate_pops_tail_blocks_and_reopens_append() {
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let mut cache = PagedKvCache::new(&m, KvPrecision::Fp32);
+        let mut rng = Rng::new(3);
+        let mut rows = Vec::new();
+        for pos in 0..37 {
+            let (kr, vr) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
+            for layer in 0..m.n_layers {
+                cache.append(layer, 0, pos, &kr, &vr).unwrap();
+            }
+            rows.push((kr, vr));
+        }
+        assert_eq!(cache.slot_blocks(0, 0).len(), 3);
+        // beyond-written truncation is an error, state untouched
+        assert!(cache.truncate(0, 38).is_err());
+        assert_eq!(cache.written(0, 0), 37);
+        // mid-block rollback: 20 positions keep ceil(20/16) = 2 blocks
+        cache.truncate(0, 20).unwrap();
+        for layer in 0..m.n_layers {
+            assert_eq!(cache.written(layer, 0), 20);
+            assert_eq!(cache.slot_blocks(layer, 0).len(), 2);
+        }
+        assert_eq!(cache.in_use_blocks(), 2 * m.n_layers);
+        // surviving rows are untouched by the rollback
+        let (mut kout, mut vout) = (vec![0f32; d], vec![0f32; d]);
+        for pos in 0..20 {
+            cache.read_row(0, 0, pos, &mut kout, &mut vout);
+            assert_eq!(kout, rows[pos].0, "pos {pos}");
+        }
+        // append-only protocol resumes at the truncated length
+        assert!(cache.append(0, 0, 21, &rows[0].0, &rows[0].1).is_err());
+        cache.append(0, 0, 20, &rows[0].0, &rows[0].1).unwrap();
+        assert_eq!(cache.written(0, 0), 21);
+        // truncate-to-zero behaves like release
+        cache.truncate(0, 0).unwrap();
+        assert_eq!(cache.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn truncate_never_mutates_shared_prefix_blocks() {
+        let m = cfg();
+        let d = m.n_heads * m.head_dim;
+        let mut cache = PagedKvCache::new_with_prefix(&m, KvPrecision::Fp32, true);
+        let mut rng = Rng::new(4);
+        let prompt: Vec<i32> = (0..32).collect();
+        let mut rows = Vec::new();
+        for pos in 0..prompt.len() {
+            let (kr, vr) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
+            for layer in 0..m.n_layers {
+                cache.append(layer, 0, pos, &kr, &vr).unwrap();
+            }
+            rows.push((kr, vr));
+        }
+        cache.register_prefix(0, &prompt);
+        // slot 1 aliases both shared blocks (the second partially: the
+        // match is capped at plen - 1 so one token always computes); each
+        // is now held by slot 0, the index, and slot 1
+        let matched = cache.admit_prefix(1, &prompt, prompt.len() - 1);
+        assert_eq!(matched.tokens, 31);
+        let shared: Vec<u32> = cache.slot_blocks(0, 1).to_vec();
+        assert_eq!(shared.len(), 2);
+        for &b in &shared {
+            assert_eq!(cache.block_ref_count(b), 3);
+        }
+        // speculative rollback into the shared region: only this slot's
+        // references drop; the index keeps the blocks and their payloads
+        cache.truncate(1, 10).unwrap();
+        assert_eq!(cache.slot_blocks(0, 1), &shared[..1]);
+        assert_eq!(cache.block_ref_count(shared[1]), 2, "slot 0 + index hold it");
+        let (mut kout, mut vout) = (vec![0f32; d], vec![0f32; d]);
+        for pos in 0..prompt.len() {
+            cache.read_row(0, 0, pos, &mut kout, &mut vout);
+            assert_eq!(kout, rows[pos].0, "shared payload mutated at {pos}");
+        }
+        // re-append at the truncated position copy-on-writes off the
+        // still-aliased partial block instead of corrupting it
+        for layer in 0..m.n_layers {
+            cache.append(layer, 1, 10, &rows[0].0, &rows[0].1).unwrap();
+        }
+        cache.read_row(0, 0, 10, &mut kout, &mut vout);
+        assert_eq!(kout, rows[10].0, "COW failed: shared row overwritten");
+        cache.release(1);
+        cache.release(0);
+        cache.evict_cached(usize::MAX);
+        assert_eq!(cache.in_use_blocks(), 0, "rollback leaked blocks");
     }
 
     #[test]

@@ -6,9 +6,10 @@
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
 //!       [--backend SPEC] [--kv-bits 32|4|3|2] [--prefix-cache on|off]
-//!       [--shards N] [--queue-cap N] [--default-deadline-ms MS]
-//!       [--max-conns N] [--read-timeout-ms MS] [--chaos-rate R]
-//!       [--chaos-seed S] [--chaos-kv-pressure R] [--drain-ms MS]
+//!       [--shards N] [--spec-k N] [--draft-wbits 2|3] [--queue-cap N]
+//!       [--default-deadline-ms MS] [--max-conns N] [--read-timeout-ms MS]
+//!       [--chaos-rate R] [--chaos-seed S] [--chaos-kv-pressure R]
+//!       [--drain-ms MS]
 //!       Robustness knobs: `--queue-cap` bounds the admission queue
 //!       (overflow answered with a structured rejection carrying a
 //!       `retry_after_ms` backpressure hint, never dropped);
@@ -31,9 +32,15 @@
 //!       the selected kernel, no PJRT required — and `native-sharded`
 //!       splits every linear into `--shards N` tensor-parallel column
 //!       shards on a persistent worker pool (bit-exact with
-//!       `native-packed`). `--kv-bits` picks the paged KV-cache storage
-//!       precision: 32 = FP32 (bit-exact with the dense cache), 4/3/2 =
-//!       K-Means index streams (>= 4x lower cache bytes/token)
+//!       `native-packed`). `native-spec` serves speculative decoding: a
+//!       low-bit draft (`--draft-wbits {2,3}`; 2-bit runs the
+//!       crumb-packed kernel) proposes up to `--spec-k N` tokens per
+//!       round and the packed target verifies them in ONE stacked
+//!       LUT-GEMM pass — greedy output is bit-exact with `native-packed`
+//!       (`--shards` is ignored by this backend). `--kv-bits` picks the
+//!       paged KV-cache storage precision: 32 = FP32 (bit-exact with the
+//!       dense cache), 4/3/2 = K-Means index streams (>= 4x lower cache
+//!       bytes/token)
 //!   quantize [--preset P] [--bits B]        quantize + report one matrix
 //!   list                                    list experiments + artifacts
 
@@ -154,8 +161,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "preset", "config", "port", "ckpt", "requests", "max-new", "backend", "kv-bits",
-        "prefix-cache", "shards", "queue-cap", "default-deadline-ms", "max-conns",
-        "read-timeout-ms", "chaos-seed", "chaos-rate", "chaos-kv-pressure", "drain-ms",
+        "prefix-cache", "shards", "spec-k", "draft-wbits", "queue-cap",
+        "default-deadline-ms", "max-conns", "read-timeout-ms", "chaos-seed", "chaos-rate",
+        "chaos-kv-pressure", "drain-ms",
     ])
     .map_err(|e| anyhow!(e))?;
     let mut preset = args.str_or("preset", "test");
@@ -180,6 +188,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Err(anyhow!(
             "--shards 0 is invalid: the sharded backend needs >= 1 column shard"
         ));
+    }
+    // speculative decoding knobs for `--backend native-spec` (ignored by
+    // every other backend; the backend constructor re-validates both)
+    let spec_k = args.usize_or("spec-k", 4).map_err(|e| anyhow!(e))?;
+    if spec_k == 0 {
+        return Err(anyhow!("--spec-k 0 is invalid: propose at least 1 draft token"));
+    }
+    let draft_wbits = args.usize_or("draft-wbits", 2).map_err(|e| anyhow!(e))? as u32;
+    if !matches!(draft_wbits, 2 | 3) {
+        return Err(anyhow!("--draft-wbits must be 2 or 3, got {draft_wbits}"));
     }
     // serving-robustness knobs (admission control, deadlines, chaos)
     let queue_cap = args.usize_or("queue-cap", 0).map_err(|e| anyhow!(e))?;
@@ -231,6 +249,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             backend,
             kv_bits,
             shards,
+            spec_k,
+            draft_wbits,
             queue_cap,
             default_deadline_ms,
             chaos,
@@ -246,6 +266,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let port = serve_tcp_with(coord.clone(), port, tcp_cfg)?;
     let how = if backend == BackendSpec::NativeSharded {
         format!("measured native WAQ LUT-GEMM datapath, {shards} tensor-parallel column shards")
+    } else if backend == BackendSpec::NativeSpec {
+        format!(
+            "speculative decoding: {draft_wbits}-bit draft proposes up to {spec_k} \
+             tokens/round, packed target verifies in one stacked pass"
+        )
     } else if backend.is_native() {
         "measured native WAQ LUT-GEMM datapath".to_string()
     } else {

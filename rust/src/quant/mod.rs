@@ -19,5 +19,5 @@ pub use activation::{
 };
 pub use codebook::Codebook;
 pub use outlier::OutlierCfg;
-pub use packed::{PackedCrumbs, PackedIdx, PackedWeights};
+pub use packed::{CrumbWeights, PackedCrumbs, PackedIdx, PackedWeights};
 pub use weights::{quantize_weights, quantize_weights_weighted, QuantWeights};

@@ -288,7 +288,161 @@ impl PackedWeights {
     }
 }
 
+/// K-Means-quantized weights with a <= 2-bit codebook, the index matrix
+/// crumb-packed FOUR reduction rows per byte — the storage format the
+/// crumb GEMM kernel (`gemm::packed::execute_batch_tiled_crumbs`) streams
+/// for the 2-bit speculative draft model. Index traffic is half of the
+/// nibble-packed [`PackedWeights`] form and a quarter of the
+/// byte-per-index form; numerics are identical (same codebook, scales,
+/// and index values).
+#[derive(Clone, Debug)]
+pub struct CrumbWeights {
+    pub n_rows: usize, // K (reduction dim)
+    pub n_cols: usize, // N (output channels)
+    /// `(n_rows / 4) * n_cols` bytes, row-quad-major:
+    /// `quads[q * n_cols + j] = idx[4q][j] << 6 | idx[4q+1][j] << 4 |
+    /// idx[4q+2][j] << 2 | idx[4q+3][j]` (row `4q` in the top crumb).
+    pub quads: Vec<u8>,
+    /// The `n_rows % 4` unquaddable final rows, each crumb-packed along
+    /// columns.
+    pub tail: Vec<PackedCrumbs>,
+    pub codebook: Codebook,
+    pub col_scales: Vec<f32>,
+}
+
+impl CrumbWeights {
+    /// Number of packed row quads (`n_rows / 4`).
+    #[inline]
+    pub fn n_quads(&self) -> usize {
+        self.n_rows / 4
+    }
+
+    /// Recover the byte-per-index matrix (row-major K x N), for tests and
+    /// for interop with the unpacked execution paths.
+    pub fn unpack_idx(&self) -> Vec<u8> {
+        let n = self.n_cols;
+        let mut idx = vec![0u8; self.n_rows * n];
+        for q in 0..self.n_quads() {
+            for j in 0..n {
+                let b = self.quads[q * n + j];
+                for r in 0..4 {
+                    idx[(4 * q + r) * n + j] = (b >> (6 - 2 * r)) & 0x03;
+                }
+            }
+        }
+        for (t, row) in self.tail.iter().enumerate() {
+            let r = 4 * self.n_quads() + t;
+            for j in 0..n {
+                idx[r * n + j] = row.get(j);
+            }
+        }
+        idx
+    }
+
+    /// Dequantize one input-channel (reduction) row straight from the
+    /// packed form — the per-outlier fetch of the error-compensation
+    /// branch, bit-identical to `QuantWeights::dequant_row` on the
+    /// unpacked form.
+    pub fn dequant_row(&self, k: usize, out: &mut Vec<f32>) {
+        debug_assert!(k < self.n_rows, "row {k} out of range ({})", self.n_rows);
+        out.clear();
+        let nq = self.n_quads();
+        if k >= 4 * nq {
+            let row = &self.tail[k - 4 * nq];
+            out.extend(
+                (0..self.n_cols).map(|j| self.codebook.value(row.get(j)) * self.col_scales[j]),
+            );
+            return;
+        }
+        let row = &self.quads[(k / 4) * self.n_cols..(k / 4 + 1) * self.n_cols];
+        let shift = 6 - 2 * (k % 4);
+        out.extend(
+            row.iter()
+                .zip(&self.col_scales)
+                .map(|(&b, &s)| self.codebook.value((b >> shift) & 0x03) * s),
+        );
+    }
+
+    /// Index-storage bytes: a quarter of the byte-per-index form (plus
+    /// rounded-up tail rows when K is not a multiple of 4).
+    pub fn index_bytes(&self) -> usize {
+        self.quads.len() + self.tail.iter().map(|t| t.storage_bytes()).sum::<usize>()
+    }
+
+    /// Total storage: packed indices + FP16 codebook + FP16 scales (the
+    /// same accounting convention as [`PackedWeights::storage_bytes`]).
+    pub fn storage_bytes(&self) -> usize {
+        self.index_bytes() + self.codebook.len() * 2 + self.col_scales.len() * 2
+    }
+
+    /// Slice out output columns `[j0, j1)` as a standalone crumb-packed
+    /// matrix — the load-time column partitioner for the tensor-parallel
+    /// sharded backend, mirroring [`PackedWeights::slice_cols`]. Quad rows
+    /// are copied byte-for-byte (crumb packing runs along K inside a
+    /// byte, so columns stay independent bytes); tail rows are re-packed
+    /// from logical values.
+    pub fn slice_cols(&self, j0: usize, j1: usize) -> CrumbWeights {
+        assert!(j0 < j1 && j1 <= self.n_cols, "bad column range {j0}..{j1}");
+        let width = j1 - j0;
+        let mut quads = Vec::with_capacity(self.n_quads() * width);
+        for q in 0..self.n_quads() {
+            quads.extend_from_slice(&self.quads[q * self.n_cols + j0..q * self.n_cols + j1]);
+        }
+        let tail = self
+            .tail
+            .iter()
+            .map(|t| {
+                let vals: Vec<u8> = (j0..j1).map(|j| t.get(j)).collect();
+                PackedCrumbs::pack(&vals)
+            })
+            .collect();
+        CrumbWeights {
+            n_rows: self.n_rows,
+            n_cols: width,
+            quads,
+            tail,
+            codebook: self.codebook.clone(),
+            col_scales: self.col_scales[j0..j1].to_vec(),
+        }
+    }
+}
+
 impl QuantWeights {
+    /// Convert to the crumb-packed storage format consumed by the crumb
+    /// GEMM kernel. Requires a <= 2-bit codebook (the speculative draft
+    /// regime).
+    pub fn pack_crumbs(&self) -> CrumbWeights {
+        assert!(
+            self.codebook.len() <= 4,
+            "cannot crumb-pack a {}-entry codebook",
+            self.codebook.len()
+        );
+        let (k, n) = (self.n_rows, self.n_cols);
+        let mut quads = Vec::with_capacity((k / 4) * n);
+        for q in 0..k / 4 {
+            for j in 0..n {
+                let mut b = 0u8;
+                for r in 0..4 {
+                    let v = self.idx[(4 * q + r) * n + j];
+                    assert!(v < 4, "weight index does not fit in a crumb");
+                    b |= v << (6 - 2 * r);
+                }
+                quads.push(b);
+            }
+        }
+        let tail = (4 * (k / 4)..k)
+            .map(|r| PackedCrumbs::pack(&self.idx[r * n..(r + 1) * n]))
+            .collect();
+        CrumbWeights {
+            n_rows: k,
+            n_cols: n,
+            quads,
+            tail,
+            codebook: self.codebook.clone(),
+            col_scales: self.col_scales.clone(),
+        }
+    }
+
     /// Convert to the nibble-packed storage format consumed by
     /// `gemm::packed`. Requires a <= 4-bit codebook (all WAQ configs).
     pub fn pack(&self) -> PackedWeights {
@@ -526,6 +680,87 @@ mod tests {
         assert_eq!(pw.index_bytes(), qw.idx.len() / 2);
         // storage accounting stays consistent with the unpacked form
         assert_eq!(pw.storage_bytes(), qw.storage_bytes());
+    }
+
+    #[test]
+    fn crumb_weights_pack_roundtrip_all_tail_lengths() {
+        let mut rng = Rng::new(31);
+        // K % 4 in {0, 1, 2, 3}, including a K < 4 tail-only edge
+        for &(k, n) in &[(8usize, 6usize), (9, 5), (10, 7), (11, 4), (3, 4), (33, 16)] {
+            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+            let qw = quant::quantize_weights(&w, 2);
+            let cw = qw.pack_crumbs();
+            assert_eq!(cw.n_rows, k);
+            assert_eq!(cw.n_cols, n);
+            assert_eq!(cw.n_quads(), k / 4);
+            assert_eq!(cw.tail.len(), k % 4);
+            assert_eq!(cw.unpack_idx(), qw.idx, "({k},{n})");
+            assert_eq!(cw.col_scales, qw.col_scales);
+            assert_eq!(cw.codebook, qw.codebook);
+            // dequant_row (the outlier-compensation fetch) is bit-identical
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for r in 0..k {
+                qw.dequant_row(r, &mut a);
+                cw.dequant_row(r, &mut b);
+                assert_eq!(a, b, "({k},{n}) row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn crumb_weights_quarter_index_traffic() {
+        let mut rng = Rng::new(32);
+        let w = Matrix::random_normal(128, 64, 1.0, &mut rng);
+        let qw = quant::quantize_weights(&w, 2);
+        let cw = qw.pack_crumbs();
+        assert_eq!(cw.index_bytes(), qw.idx.len() / 4);
+        // half the nibble-packed form's stream
+        assert_eq!(cw.index_bytes() * 2, qw.pack().index_bytes());
+    }
+
+    #[test]
+    fn crumb_slice_cols_matches_full_matrix_columns() {
+        let mut rng = Rng::new(33);
+        for &(k, n) in &[(8usize, 11usize), (9, 11), (2, 7), (33, 16)] {
+            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+            let qw = quant::quantize_weights(&w, 2);
+            let cw = qw.pack_crumbs();
+            let full_idx = cw.unpack_idx();
+            for &(j0, j1) in &[(0usize, n), (0, 1), (n - 1, n), (1, n - 1), (n / 2, n)] {
+                if j0 >= j1 {
+                    continue;
+                }
+                let s = cw.slice_cols(j0, j1);
+                assert_eq!(s.n_rows, k);
+                assert_eq!(s.n_cols, j1 - j0);
+                assert_eq!(s.col_scales, cw.col_scales[j0..j1].to_vec());
+                assert_eq!(s.codebook, cw.codebook);
+                let sliced_idx = s.unpack_idx();
+                for r in 0..k {
+                    for j in j0..j1 {
+                        assert_eq!(
+                            sliced_idx[r * (j1 - j0) + (j - j0)],
+                            full_idx[r * n + j],
+                            "({k},{n}) row {r} col {j} slice {j0}..{j1}"
+                        );
+                    }
+                }
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                for r in 0..k {
+                    cw.dequant_row(r, &mut a);
+                    s.dequant_row(r, &mut b);
+                    assert_eq!(&a[j0..j1], &b[..], "({k},{n}) row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "crumb-pack")]
+    fn crumb_pack_rejects_wide_codebooks() {
+        let mut rng = Rng::new(34);
+        let w = Matrix::random_normal(8, 4, 1.0, &mut rng);
+        quant::quantize_weights(&w, 4).pack_crumbs();
     }
 
     #[test]

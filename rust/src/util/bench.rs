@@ -386,6 +386,80 @@ impl PrefixBenchRow {
     }
 }
 
+/// One BENCH_spec.json row: speculative decoding payoff at one
+/// `(--spec-k, --draft-wbits)` setting — acceptance measured on the real
+/// native datapath (test preset, predictable synthetic params), round
+/// shape priced at the HBM bandwidth roofline at LLaMA-2-7B scale, the
+/// weight-bandwidth-bound regime the subsystem targets. Emitted by the
+/// `spec_decode` bench and smoke-run in CI under FAST_BENCH. One
+/// `"…/target"` row per run records the non-speculative baseline
+/// (spec_k = draft_wbits = 0, accept_rate 0, speedup_bw 1.0).
+///
+/// Schema (JSON lines, one object per row):
+///   `name`             `"spec/<full|fast>/k<K>w<W>"` or `"spec/<…>/target"`
+///   `backend`          serving backend tag (`native-spec` / target tag)
+///   `spec_k`           configured proposal window (0 = target baseline)
+///   `draft_wbits`      draft weight width (0 = target baseline)
+///   `requests`         requests served in the run
+///   `generated_tokens` tokens emitted across the run
+///   `spec_rounds`      speculative rounds executed
+///   `proposed`         draft tokens proposed (window clamps included)
+///   `accepted`         proposals the target's greedy argmax confirmed
+///   `accept_rate`      `accepted / proposed`
+///   `host_waq_s`       measured WAQ LUT-GEMM seconds (draft + verify)
+///   `host_tok_s`       `generated_tokens / host_waq_s`
+///   `tok_s_bw`         HBM-roofline tok/s at LLaMA-2-7B scale: bandwidth
+///                      over the round's streamed bytes per emitted token
+///   `speedup_bw`       `tok_s_bw / (target row's tok_s_bw)`
+pub struct SpecBenchRow {
+    pub name: String,
+    pub backend: String,
+    pub spec_k: u32,
+    pub draft_wbits: u32,
+    pub requests: u64,
+    pub generated_tokens: u64,
+    pub spec_rounds: u64,
+    pub proposed: u64,
+    pub accepted: u64,
+    pub accept_rate: f64,
+    pub host_waq_s: f64,
+    pub host_tok_s: f64,
+    pub tok_s_bw: f64,
+    pub speedup_bw: f64,
+}
+
+impl SpecBenchRow {
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"backend\": \"{}\", \"spec_k\": {}, \
+             \"draft_wbits\": {}, \"requests\": {}, \"generated_tokens\": {}, \
+             \"spec_rounds\": {}, \"proposed\": {}, \"accepted\": {}, \
+             \"accept_rate\": {:.4}, \"host_waq_s\": {:.6}, \"host_tok_s\": {:.3}, \
+             \"tok_s_bw\": {:.3}, \"speedup_bw\": {:.4}}}",
+            json_escape(&self.name),
+            json_escape(&self.backend),
+            self.spec_k,
+            self.draft_wbits,
+            self.requests,
+            self.generated_tokens,
+            self.spec_rounds,
+            self.proposed,
+            self.accepted,
+            self.accept_rate,
+            self.host_waq_s,
+            self.host_tok_s,
+            self.tok_s_bw,
+            self.speedup_bw
+        )
+    }
+
+    /// Append to the repo-root BENCH_spec.json (JSON lines; created if
+    /// missing). IO failures are reported, never fatal.
+    pub fn append(&self) {
+        append_line(&bench_json_path("BENCH_spec.json"), &self.json_line());
+    }
+}
+
 pub struct Bencher {
     /// measurement window per bench
     pub measure: Duration,
@@ -617,6 +691,35 @@ mod tests {
         assert!(line.contains("\"shards\": 4"), "{line}");
         assert!(line.contains("\"speedup_vs_1\": 3.1000"), "{line}");
         assert!(line.contains("\"efficiency\": 0.7750"), "{line}");
+    }
+
+    #[test]
+    fn spec_row_json_is_machine_readable() {
+        let row = SpecBenchRow {
+            name: "spec/fast/k4w2".into(),
+            backend: "native-spec".into(),
+            spec_k: 4,
+            draft_wbits: 2,
+            requests: 8,
+            generated_tokens: 128,
+            spec_rounds: 40,
+            proposed: 150,
+            accepted: 120,
+            accept_rate: 0.8,
+            host_waq_s: 0.0125,
+            host_tok_s: 10240.0,
+            tok_s_bw: 412.5,
+            speedup_bw: 1.37,
+        };
+        let line = row.json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"spec_k\": 4"), "{line}");
+        assert!(line.contains("\"draft_wbits\": 2"), "{line}");
+        assert!(line.contains("\"accept_rate\": 0.8000"), "{line}");
+        assert!(line.contains("\"tok_s_bw\": 412.500"), "{line}");
+        assert!(line.contains("\"speedup_bw\": 1.3700"), "{line}");
+        // acceptance never exceeds what was proposed
+        assert!(row.accepted <= row.proposed);
     }
 
     #[test]

@@ -822,6 +822,152 @@ fn paged_prefill_matches_legacy_dense_prefill_at_fp32() {
     assert_eq!(run(true), run(false), "paged vs legacy dense prefill tokens");
 }
 
+// ---------------------------------------------------------------------------
+// speculative decoding: greedy-parity net (the subsystem's acceptance bar)
+// ---------------------------------------------------------------------------
+
+/// Synthetic params with each layer's residual contributions damped, so
+/// the greedy argmax develops real margins and speculative rounds accept
+/// proposals. Parity must hold at *any* acceptance rate; damping makes
+/// the accept/commit paths (not just rejection + rollback) do real work
+/// in these tests.
+fn damped_params(manifest: &Manifest, damp: f32) -> ParamSet {
+    let mut params = ParamSet::init(manifest, &mut Rng::new(42));
+    for l in 0..manifest.model.n_layers {
+        for name in [format!("l{l}.attn_out"), format!("l{l}.mlp_down")] {
+            let idx = ParamSet::index_of(manifest, &name).expect("manifest param");
+            let mut m = params.matrix(idx).expect("matrix");
+            for v in m.data.iter_mut() {
+                *v *= damp;
+            }
+            params.set_matrix(idx, &m).expect("set matrix");
+        }
+    }
+    params
+}
+
+/// Seeded 4-request stream; returns `(id, tokens)` sorted by id.
+fn spec_stream(e: &mut Engine, vocab: usize) -> Vec<(u64, Vec<i32>)> {
+    let mut rng = Rng::new(9);
+    for id in 0..4u64 {
+        let plen = 1 + rng.below(5);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+        e.submit(Request::new(id, prompt, 6));
+    }
+    let mut out = e.run_to_completion().expect("run");
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// Tentpole acceptance: `--backend native-spec` is bit-exact with the
+/// target alone — same greedy token streams — across every `--kv-bits`
+/// setting, `--spec-k` in {1, 2, 4}, and `--prefix-cache` off/on. The
+/// draft only ever *proposes*; every emitted token comes from the
+/// target's own logits, so acceptance (high here by construction) and
+/// rejection-rollback alike must leave the streams untouched.
+#[test]
+fn speculative_bit_exact_with_target_at_every_kv_bits_k_and_prefix() {
+    use kllm::coordinator::SpeculativeBackend;
+    use kllm::kvcache::KvBits;
+    let cfg = tiny_cfg(2);
+    let manifest = Manifest::synthetic("tiny", cfg);
+    let params = damped_params(&manifest, 0.05);
+    let ncfg = || NativeCfg { waq: WaqBackend::Packed, ..NativeCfg::default() };
+    for kv_bits in KvBits::ALL {
+        for prefix_cache in [false, true] {
+            let ecfg = EngineConfig {
+                policy: AdmitPolicy::FillAll,
+                kv_bits,
+                prefix_cache,
+                ..Default::default()
+            };
+            let want = {
+                let target = NativeWaqBackend::new(&manifest, &params, ncfg()).expect("target");
+                let mut e = Engine::new(Box::new(target), &ecfg);
+                spec_stream(&mut e, cfg.vocab)
+            };
+            for k in [1usize, 2, 4] {
+                let ecfg = EngineConfig {
+                    backend: BackendSpec::NativeSpec,
+                    spec_k: k,
+                    draft_wbits: 2,
+                    ..ecfg.clone()
+                };
+                let target = NativeWaqBackend::new(&manifest, &params, ncfg()).expect("target");
+                let spec = SpeculativeBackend::new(
+                    &manifest,
+                    &params,
+                    Box::new(target),
+                    ecfg.mode,
+                    k,
+                    2,
+                )
+                .expect("speculative backend");
+                let mut e = Engine::new(Box::new(spec), &ecfg);
+                let got = spec_stream(&mut e, cfg.vocab);
+                assert_eq!(
+                    got, want,
+                    "kv {kv_bits}-bit prefix={prefix_cache} k={k}: speculative \
+                     streams diverged from the target's"
+                );
+                assert!(e.stats.spec_rounds > 0, "no speculative rounds ran");
+                assert!(
+                    e.stats.spec_proposed >= e.stats.spec_accepted,
+                    "accepted {} > proposed {}",
+                    e.stats.spec_accepted,
+                    e.stats.spec_proposed
+                );
+                assert_eq!(e.stats.step_failures, 0);
+                assert_eq!(e.active_count(), 0);
+            }
+        }
+    }
+}
+
+/// The same parity bar with a tensor-parallel sharded target: the
+/// composite's verify path rides the sharded backend's paged surface
+/// (which must agree bit-for-bit with unsharded packed, per the shard
+/// parity net above), so the speculative streams still match a plain
+/// native-packed engine's.
+#[test]
+fn speculative_over_sharded_target_bit_exact() {
+    use kllm::coordinator::SpeculativeBackend;
+    let cfg = tiny_cfg(2);
+    let manifest = Manifest::synthetic("tiny", cfg);
+    let params = damped_params(&manifest, 0.05);
+    let ecfg = EngineConfig {
+        policy: AdmitPolicy::FillAll,
+        kv_bits: kllm::kvcache::KvBits::B4,
+        ..Default::default()
+    };
+    let want = {
+        let target = NativeWaqBackend::new(
+            &manifest,
+            &params,
+            NativeCfg { waq: WaqBackend::Packed, ..NativeCfg::default() },
+        )
+        .expect("target");
+        let mut e = Engine::new(Box::new(target), &ecfg);
+        spec_stream(&mut e, cfg.vocab)
+    };
+    let ecfg = EngineConfig {
+        backend: BackendSpec::NativeSpec,
+        spec_k: 3,
+        draft_wbits: 3,
+        shards: 3,
+        ..ecfg
+    };
+    let target =
+        ShardedWaqBackend::new(&manifest, &params, NativeCfg::default(), 3).expect("sharded");
+    let spec =
+        SpeculativeBackend::new(&manifest, &params, Box::new(target), ecfg.mode, 3, 3)
+            .expect("speculative backend");
+    let mut e = Engine::new(Box::new(spec), &ecfg);
+    let got = spec_stream(&mut e, cfg.vocab);
+    assert_eq!(got, want, "sharded-target speculative streams diverged");
+    assert!(e.stats.spec_rounds > 0);
+}
+
 /// `--shards 0` is a configuration error with a real message, never a
 /// panic — at the pool, the GEMM, and the backend layer.
 #[test]

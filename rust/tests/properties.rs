@@ -497,6 +497,74 @@ fn prop_paged_kv_no_leaks_no_double_assignment_bounded_tables() {
     });
 }
 
+/// 2-bit crumb-packed GEMM property net (the speculative-draft datapath):
+/// for random shapes (odd and even K — odd exercises the quad tail —
+/// batch 1..=16, 2/3/4-bit activations, outliers on/off) the crumb
+/// kernel + outlier compensation is bit-identical to the direct
+/// dual-branch reference, and so is every column-sharded split built via
+/// `from_crumbs` (including `cols < shards` and `cols % shards != 0`).
+#[test]
+fn prop_crumb_gemm_bit_exact_sharded_and_unsharded() {
+    use kllm::gemm::{ShardPool, ShardedWaqGemm, TileCfg};
+    use std::sync::Arc;
+
+    Check::new(16).forall("crumb-gemm-bit-exact", |rng, case| {
+        let k = 1 + rng.below(130);
+        let n = 1 + rng.below(40);
+        let batch = 1 + rng.below(16);
+        let a_bits = 2 + rng.below(3) as u32;
+        let outliers_on = case % 2 == 0;
+        let w = Matrix::random_normal(k, n, 1.0, rng);
+        let qw = quant::quantize_weights(&w, 2);
+        let calib: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let ocfg = OutlierCfg { total_frac: 0.05 };
+        let cb = quant::learn_act_codebook(&refs, None, a_bits, ocfg);
+        let toks: Vec<QuantToken> = (0..batch)
+            .map(|_| {
+                let x = rng.heavy_tailed_vec(k, 0.02, 8.0);
+                if outliers_on {
+                    quant::quantize_token(&x, &cb, ocfg)
+                } else {
+                    quant::quantize_token_with_outliers(&x, &cb, &[])
+                }
+            })
+            .collect();
+        let lut = CartesianLut::build(&cb, &qw.codebook);
+        let cw = qw.pack_crumbs();
+        let want: Vec<Vec<f32>> =
+            toks.iter().map(|t| gemm::execute_dual_branch(t, &qw, &lut)).collect();
+
+        // unsharded crumb kernel at a random tiling
+        let tcfg = TileCfg {
+            n_block: 1 + rng.below(64),
+            k_pair_block: 1 + rng.below(40),
+            threads: 1 + rng.below(4),
+        };
+        let mut got = gemm::execute_batch_tiled_crumbs(&toks, &cw, &lut, &tcfg);
+        for (o, t) in got.iter_mut().zip(&toks) {
+            gemm::compensate_crumbs(o, t, &cw);
+        }
+        assert_eq!(
+            got, want,
+            "K={k} N={n} A{a_bits}/W2 batch={batch} outliers={outliers_on} cfg={tcfg:?}"
+        );
+
+        // every sharded split of the same crumb weights
+        for shards in [1usize, 2, 3, 7] {
+            let pool = Arc::new(ShardPool::new(shards).expect("pool"));
+            let sh = ShardedWaqGemm::from_crumbs(&cw, &lut, shards, pool).expect("shard");
+            assert_eq!(
+                sh.execute_batch(&toks),
+                want,
+                "K={k} N={n} A{a_bits}/W2 batch={batch} shards={shards} \
+                 outliers={outliers_on}"
+            );
+        }
+    });
+}
+
 /// Prefix-cache refcount audit: random admit / shared-prefix fork /
 /// divergent-append (copy-on-write) / register / abort / evict
 /// interleavings must never leak or double-free a block. Ground truth is
@@ -630,6 +698,238 @@ fn prop_prefix_refcounts_balance_holders_no_leak_no_double_free() {
         // drain: release every slot, then evict the index dry — every
         // block must come home, every node must go
         for slot in 0..cfg.decode_batch {
+            if kv.position(slot).is_some() {
+                kv.release(slot);
+            }
+        }
+        kv.cache_mut().evict_cached(usize::MAX);
+        assert_eq!(kv.cache().in_use_blocks(), 0, "leaked blocks at drain");
+        assert_eq!(kv.cache().prefix_nodes(), 0, "stranded index nodes at drain");
+    });
+}
+
+/// Speculative rollback-safety audit (the tentpole's KV contract): random
+/// propose / accept / reject / deep-truncate / abort interleavings over a
+/// prefix-sharing paged cache. After every operation the allocator's
+/// refcounts must balance the holders (no leak, no double free), a drain
+/// must return every block, and — the immutability bar — blocks shared
+/// with the registered canonical prefix must never be mutated: a slot
+/// forked off that prefix always reads back the exact stored payload, no
+/// matter how many speculative appends and truncates ran over aliased
+/// tails in between. Rows are a pure function of (token history, layer),
+/// like a real model's, so any corruption shows up as a content mismatch.
+#[test]
+fn prop_speculative_rollback_refcounts_balance_and_prefix_blocks_immutable() {
+    use kllm::kvcache::{KvPrecision, KvQuantizer};
+    use std::collections::HashMap;
+
+    fn rows_for(hist: &[i32], layer: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut h = 0xcbf29ce484222325u64 ^ (layer as u64).wrapping_mul(0x9e3779b9);
+        for &t in hist {
+            h = (h ^ t as u64).wrapping_mul(0x100000001b3);
+        }
+        let mut rng = Rng::new(h);
+        (rng.normal_vec(d, 1.0), rng.normal_vec(d, 1.0))
+    }
+
+    fn audit(kv: &KvManager, cfg: &ModelCfg) {
+        let c = kv.cache();
+        let mut holders: HashMap<u32, usize> = HashMap::new();
+        for slot in 0..cfg.decode_batch {
+            for l in 0..cfg.n_layers {
+                for &b in c.slot_blocks(l, slot) {
+                    *holders.entry(b).or_insert(0) += 1;
+                }
+            }
+        }
+        for b in c.prefix_block_refs() {
+            *holders.entry(b).or_insert(0) += 1;
+        }
+        assert_eq!(holders.len(), c.in_use_blocks(), "live set vs allocator in-use");
+        for (&b, &n) in &holders {
+            assert_eq!(c.block_ref_count(b), n, "block {b}: refcount vs holders");
+        }
+    }
+
+    Check::new(10).forall("spec-rollback", |rng, case| {
+        let cfg = ModelCfg { seq_len: 40, ..test_cfg() };
+        let precision = if case % 2 == 0 {
+            KvPrecision::Fp32
+        } else {
+            KvPrecision::Quant(KvQuantizer::uniform(
+                cfg.n_layers,
+                cfg.n_heads,
+                cfg.head_dim,
+                4,
+            ))
+        };
+        let mut kv = KvManager::with_precision_opts(cfg, precision, true);
+        let d = cfg.n_heads * cfg.head_dim;
+        let (nl, nb, nh, sl, hd) =
+            (cfg.n_layers, cfg.decode_batch, cfg.n_heads, cfg.seq_len, cfg.head_dim);
+        let flat = |l: usize, s: usize, h: usize, pos: usize| -> usize {
+            ((((l * nb) + s) * nh + h) * sl + pos) * hd
+        };
+
+        // canonical shared prefix, computed once and registered
+        let prefix: Vec<i32> = (0..24).map(|i| 7 + i as i32).collect();
+        let plen = prefix.len();
+        let s0 = kv.free_slot().expect("empty cache has a free slot");
+        let m = kv.admit_prefix(s0, 0, &prefix, plen).unwrap();
+        assert_eq!(m.tokens, 0, "cold admission computes everything");
+        for pos in 0..plen {
+            for l in 0..nl {
+                let (krow, vrow) = rows_for(&prefix[..=pos], l, d);
+                kv.append_token(l, s0, pos, &krow, &vrow).unwrap();
+            }
+        }
+        kv.set_position(s0, plen).unwrap();
+        kv.register_prefix(s0, &prefix);
+        // the *stored* payload (post-quantization for n-bit streams) is
+        // the ground truth every later forked read must reproduce
+        let (ksnap, vsnap) = kv.dense_tensors();
+        let (ksnap, vsnap) =
+            (ksnap.as_f32().unwrap().to_vec(), vsnap.as_f32().unwrap().to_vec());
+        kv.release(s0);
+        audit(&kv, &cfg);
+
+        // per-slot token history (committed + uncommitted speculation)
+        let mut hist: Vec<Option<Vec<i32>>> = vec![None; nb];
+        let mut next_req = 1u64;
+        for _ in 0..140 {
+            let r = rng.f64();
+            if r < 0.35 {
+                // fork: canonical head slice + random tail, then check the
+                // aliased canonical positions against the snapshot
+                let Some(slot) = kv.free_slot() else { continue };
+                let head_len = 1 + rng.below(plen);
+                let mut prompt = prefix[..head_len].to_vec();
+                for _ in 0..rng.below(6) {
+                    prompt.push(rng.below(64) as i32);
+                }
+                prompt.truncate(cfg.seq_len - 8);
+                let pl = prompt.len();
+                let m = kv.admit_prefix(slot, next_req, &prompt, pl).unwrap();
+                next_req += 1;
+                assert!(m.tokens < pl, "match capped at plen-1");
+                let (kd, vd) = kv.dense_tensors();
+                let (kd, vd) = (kd.as_f32().unwrap(), vd.as_f32().unwrap());
+                for pos in 0..m.tokens.min(head_len) {
+                    for l in 0..nl {
+                        for h in 0..nh {
+                            let a = flat(l, slot, h, pos);
+                            let b = flat(l, s0, h, pos);
+                            assert_eq!(
+                                &kd[a..a + hd],
+                                &ksnap[b..b + hd],
+                                "shared prefix K mutated: l{l} h{h} pos{pos}"
+                            );
+                            assert_eq!(
+                                &vd[a..a + hd],
+                                &vsnap[b..b + hd],
+                                "shared prefix V mutated: l{l} h{h} pos{pos}"
+                            );
+                        }
+                    }
+                }
+                // compute the uncached tail (COW on partial blocks)
+                let mut ok = true;
+                'fill: for pos in m.tokens..pl {
+                    for l in 0..nl {
+                        let (krow, vrow) = rows_for(&prompt[..=pos], l, d);
+                        if kv.append_token(l, slot, pos, &krow, &vrow).is_err() {
+                            kv.release(slot); // genuine pool pressure
+                            ok = false;
+                            break 'fill;
+                        }
+                    }
+                }
+                if ok {
+                    kv.set_position(slot, pl).unwrap();
+                    kv.register_prefix(slot, &prompt);
+                    hist[slot] = Some(prompt);
+                } else {
+                    hist[slot] = None;
+                }
+            } else if r < 0.70 {
+                // speculative round: propose k, then accept a random
+                // prefix of the proposals (rollback via truncate)
+                let active: Vec<usize> =
+                    (0..nb).filter(|&s| hist[s].is_some()).collect();
+                if active.is_empty() {
+                    continue;
+                }
+                let slot = *rng.choice(&active);
+                let base = kv.position(slot).unwrap();
+                let window = (cfg.seq_len - 1).saturating_sub(base).min(4);
+                if window == 0 {
+                    kv.release(slot);
+                    hist[slot] = None;
+                    continue;
+                }
+                let k = 1 + rng.below(window);
+                let mut h = hist[slot].clone().unwrap();
+                let mut ok = true;
+                'prop: for i in 0..k {
+                    h.push(rng.below(64) as i32);
+                    for l in 0..nl {
+                        let (krow, vrow) = rows_for(&h, l, d);
+                        if kv.append_token(l, slot, base + i, &krow, &vrow).is_err() {
+                            kv.release(slot);
+                            hist[slot] = None;
+                            ok = false;
+                            break 'prop;
+                        }
+                    }
+                }
+                if ok {
+                    kv.set_position(slot, base + k).unwrap();
+                    let acc = rng.below(k + 1);
+                    kv.truncate(slot, base + acc).unwrap();
+                    h.truncate(base + acc);
+                    hist[slot] = Some(h);
+                }
+            } else if r < 0.80 {
+                // deep rollback, possibly below the aliased prefix region
+                let active: Vec<usize> =
+                    (0..nb).filter(|&s| hist[s].is_some()).collect();
+                if active.is_empty() {
+                    continue;
+                }
+                let slot = *rng.choice(&active);
+                let pos = kv.position(slot).unwrap();
+                let new_len = 1 + rng.below(pos.max(1));
+                kv.truncate(slot, new_len).unwrap();
+                hist[slot].as_mut().unwrap().truncate(new_len);
+            } else if r < 0.92 {
+                // abort mid-speculation
+                let active: Vec<usize> =
+                    (0..nb).filter(|&s| hist[s].is_some()).collect();
+                if !active.is_empty() {
+                    let slot = *rng.choice(&active);
+                    kv.release(slot);
+                    hist[slot] = None;
+                }
+            } else {
+                // LRU pressure on the index
+                kv.cache_mut().evict_cached(1);
+            }
+
+            for slot in 0..nb {
+                match &hist[slot] {
+                    Some(h) => assert_eq!(
+                        kv.position(slot),
+                        Some(h.len()),
+                        "slot {slot}: position vs tracked history"
+                    ),
+                    None => assert!(kv.position(slot).is_none(), "slot {slot} not free"),
+                }
+            }
+            audit(&kv, &cfg);
+        }
+
+        // drain: every block comes home, every index node goes
+        for slot in 0..nb {
             if kv.position(slot).is_some() {
                 kv.release(slot);
             }
