@@ -1,0 +1,176 @@
+//! Scheduler bench: decode inter-token latency under a prefill flood,
+//! burst vs chunked. Rows land in BENCH_sched.json via
+//! `util::bench::SchedBenchRow`.
+//!
+//! The question this bench answers is the one the chunked scheduler
+//! exists for: when long prompts keep arriving, what happens to the
+//! tokens/sec *experienced by requests already decoding*? Under the
+//! phased burst loop an admitted prompt's whole prefill runs inside one
+//! engine step, so every co-resident decode's next token waits for it —
+//! the inter-token p99 inflates with prompt length. Under `--sched
+//! chunked` each step carries at most a budgeted chunk of prefill rows
+//! (auto-sized so one chunk costs about one decode step), bounding the
+//! stall.
+//!
+//! Three scenarios, identical model and datapath (native packed WAQ,
+//! synthetic params):
+//!   * `decode-only`  — persistent decoders, no flood: the baseline
+//!     inter-token latency of the datapath itself;
+//!   * `mixed-flood` under `burst`    — informational (the spike we're
+//!     converting into bounded per-step work);
+//!   * `mixed-flood` under `chunked`  — the tripwired row.
+//!
+//! Latencies come from the engine's own `decode_lat` histogram — the
+//! per-token gaps recorded at sampling time (recorded, not inferred
+//! from totals), exactly what `{"cmd":"stats"}` reports in production.
+//!
+//! Tripwire (non-zero exit so CI fails on regression): chunked
+//! mixed-flood p99 must stay within 6x the decode-only p99 plus a
+//! 500us absolute floor (host-timer noise at microsecond scales). Burst
+//! is exempt — its spike is the documented behavior chunked removes.
+
+use kllm::coordinator::{
+    AdmitPolicy, Engine, EngineConfig, NativeCfg, NativeWaqBackend, Request, SchedPolicy,
+};
+use kllm::gemm::WaqBackend;
+use kllm::runtime::artifacts::ModelCfg;
+use kllm::runtime::{Manifest, ParamSet};
+use kllm::util::bench::{fast_mode, SchedBenchRow};
+use kllm::util::rng::Rng;
+
+/// Bench preset: the serving test shape with room for three persistent
+/// decoders plus one flood slot, and enough context that long prompts
+/// leave decode headroom.
+fn bench_cfg() -> ModelCfg {
+    ModelCfg {
+        vocab: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        seq_len: 64,
+        batch: 2,
+        decode_batch: 4,
+        head_dim: 16,
+        d_ff: 256,
+        n_linears: 8,
+    }
+}
+
+struct Workload {
+    name: &'static str,
+    /// tokens each persistent decoder generates
+    decoder_tokens: usize,
+    /// long-prompt requests injected while the decoders stream
+    floods: usize,
+    /// prompt length of each flood request
+    flood_prompt: usize,
+}
+
+/// Run one scenario and return the engine (stats carry the histogram).
+fn run_scenario(sched: SchedPolicy, w: &Workload, flood: bool) -> anyhow::Result<Engine> {
+    let cfg = bench_cfg();
+    let manifest = Manifest::synthetic("sched-bench", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    let backend = NativeWaqBackend::new(
+        &manifest,
+        &params,
+        NativeCfg { waq: WaqBackend::Packed, ..NativeCfg::default() },
+    )?;
+    let ecfg = EngineConfig {
+        policy: AdmitPolicy::FillAll,
+        sched,
+        prefill_chunk: 0, // auto budget: chunk cost ~ one decode step
+        ..Default::default()
+    };
+    let mut e = Engine::new(Box::new(backend), &ecfg);
+    // three persistent decoders with short prompts: the latency victims
+    for id in 0..3u64 {
+        e.submit(Request::new(id, vec![1 + id as i32, 5, 9, 13], w.decoder_tokens));
+    }
+    // warm the decoders into steady state before any flood arrives
+    for _ in 0..4 {
+        e.step()?;
+    }
+    let mut injected = 0usize;
+    let mut since = 0usize;
+    while e.has_work() {
+        if flood && injected < w.floods && since >= 3 {
+            let base = 20 + injected as i32;
+            let prompt: Vec<i32> =
+                (0..w.flood_prompt).map(|t| base + (t as i32) % 17).collect();
+            e.submit(Request::new(100 + injected as u64, prompt, 2));
+            injected += 1;
+            since = 0;
+        }
+        e.step()?;
+        since += 1;
+    }
+    anyhow::ensure!(
+        e.stats.prefill_failures + e.stats.step_failures == 0,
+        "scenario had failures"
+    );
+    Ok(e)
+}
+
+fn main() -> anyhow::Result<()> {
+    let w = if fast_mode() {
+        Workload { name: "fast", decoder_tokens: 24, floods: 4, flood_prompt: 24 }
+    } else {
+        Workload { name: "full", decoder_tokens: 48, floods: 12, flood_prompt: 32 }
+    };
+
+    let report = |label: &str, sched: SchedPolicy, scenario: &str, e: &Engine| -> (f64, f64) {
+        let s = &e.stats;
+        let (p50, p99) = (s.decode_lat.percentile(0.50), s.decode_lat.percentile(0.99));
+        let row = SchedBenchRow {
+            name: format!("sched/{}/{label}", w.name),
+            sched: sched.to_string(),
+            scenario: scenario.to_string(),
+            prefill_chunk: 0,
+            requests: s.completed,
+            generated_tokens: s.generated_tokens,
+            lat_count: s.decode_lat.count(),
+            p50_s: p50,
+            p99_s: p99,
+        };
+        println!(
+            "bench scheduler/{}/{label:<16} p50 {:9.1}us  p99 {:9.1}us  ({} gaps)",
+            w.name,
+            p50 * 1e6,
+            p99 * 1e6,
+            row.lat_count
+        );
+        row.append();
+        (p50, p99)
+    };
+
+    let base = run_scenario(SchedPolicy::Chunked, &w, false)?;
+    let (_, base_p99) = report("decode-only", SchedPolicy::Chunked, "decode-only", &base);
+
+    let burst = run_scenario(SchedPolicy::Burst, &w, true)?;
+    report("burst-mixed", SchedPolicy::Burst, "mixed-flood", &burst);
+
+    let chunked = run_scenario(SchedPolicy::Chunked, &w, true)?;
+    let (_, chunked_p99) = report("chunked-mixed", SchedPolicy::Chunked, "mixed-flood", &chunked);
+
+    anyhow::ensure!(
+        base.stats.decode_lat.count() > 0 && chunked.stats.decode_lat.count() > 0,
+        "histograms recorded nothing"
+    );
+    anyhow::ensure!(
+        chunked.stats.prefills as usize >= 3 + w.floods,
+        "the flood never prefilled"
+    );
+    // the tripwire: chunked keeps mixed-flood decode p99 near baseline
+    let limit = base_p99 * 6.0 + 500e-6;
+    if chunked_p99 > limit {
+        anyhow::bail!(
+            "scheduler tripwire: chunked mixed-flood p99 {:.1}us exceeds {:.1}us \
+             (decode-only p99 {:.1}us x6 + 500us)",
+            chunked_p99 * 1e6,
+            limit * 1e6,
+            base_p99 * 1e6
+        );
+    }
+    Ok(())
+}

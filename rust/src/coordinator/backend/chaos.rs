@@ -43,6 +43,14 @@
 //! it cannot silently shift when an unrelated branch stops consuming
 //! randomness. The pressure roll only exists when `kv_pressure_rate > 0`,
 //! so legacy profiles replay bit-identical fault patterns.
+//!
+//! `DecodeBackend::schedule` (the iteration-level scheduler's mixed
+//! step) composes through the trait default, which dispatches to this
+//! wrapper's own `prefill_paged` and `decode` — so a mixed step draws
+//! exactly the per-call sequences above, and a phase the default skips
+//! (no chunks planned, or no active decode slot) consumes **zero**
+//! draws. Chunk-fault tests rely on that arithmetic to place a fault on
+//! a chosen chunk.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

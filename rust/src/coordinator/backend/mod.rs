@@ -6,8 +6,11 @@
 //! token's logits plus the request's KV cache pair, `prefill_batch`
 //! prefills a whole admission burst in one call (the engine's admission
 //! path; default = loop over `prefill`, native backends run each linear
-//! once for the stacked burst), and `decode(tokens, positions, ...)` runs
-//! one batched decode step over all slots. Every call also returns a
+//! once for the stacked burst), `decode(tokens, positions, ...)` runs
+//! one batched decode step over all slots, and `schedule` runs one
+//! iteration-level mixed step (budgeted prefill chunks + decode,
+//! `--sched chunked`) with a default built on the former two so every
+//! backend and wrapper composes unchanged. Every call also returns a
 //! [`StepCost`] so responses report modeled accelerator time/energy and
 //! the host software-datapath seconds regardless of which engine
 //! executed.
@@ -241,6 +244,37 @@ pub struct PagedPrefillOut {
     pub cost: StepCost,
 }
 
+/// One iteration-level scheduler step (`--sched chunked`): the decode
+/// rows of every active slot plus a budgeted chunk of pending prefill
+/// work, handed to the backend as one unit so implementations may fuse
+/// the two phases when they can.
+pub struct ScheduleWork<'a> {
+    /// Budgeted prefill chunks: prompt *slices* resuming at `cached`
+    /// (the per-request chunk cursor). Empty when nothing is prefilling.
+    pub chunks: Vec<PagedPrefill<'a>>,
+    /// Decode rows, `decode_batch`-shaped exactly like
+    /// [`DecodeBackend::decode`]; `active` marks live decode slots
+    /// (mid-prefill slots are *not* active — they join once their final
+    /// chunk lands).
+    pub toks: &'a [i32],
+    pub pos: &'a [i32],
+    pub active: &'a [bool],
+}
+
+/// Result of [`DecodeBackend::schedule`]. The chunk burst and the decode
+/// step carry *separate* `Result`s so the engine can contain each fault
+/// to the requests it affects: a chunk fault aborts only the chunking
+/// requests while every in-flight decode survives, and a decode fault
+/// leaves mid-prefill requests untouched.
+pub struct ScheduleOut {
+    /// One [`PagedPrefillOut`] per chunk, in order. `Err` means the
+    /// whole chunk burst failed (all-or-nothing, like `prefill_paged`).
+    pub chunks: Result<Vec<PagedPrefillOut>>,
+    /// `None` when no slot was active — the decode phase never ran (no
+    /// backend call, and for [`ChaosBackend`] no fault draw either).
+    pub decode: Option<Result<(Vec<f32>, StepCost)>>,
+}
+
 /// One slot's outcome of a speculative decode round, drained by the
 /// engine via [`DecodeBackend::take_spec_rounds`] right after `decode`.
 /// The backend has already committed `accepted` into the paged cache
@@ -394,6 +428,39 @@ pub trait DecodeBackend {
     /// `KvManager::truncate`), so it cannot accept dense-KV admission.
     fn requires_paged_admission(&self) -> bool {
         false
+    }
+
+    /// Run one mixed iteration-level step (`--sched chunked`): the
+    /// budgeted prefill chunks, then the batched decode over the active
+    /// slots. The default executes the two phases as separate calls —
+    /// chunks through [`Self::prefill_paged`], whose resume-cursor
+    /// contract (`cached` positions already written, compute only the
+    /// tail of the prompt slice) is exactly a chunk — so every paged
+    /// backend composes without an override, and wrappers like
+    /// [`ChaosBackend`] keep their per-call fault draws because the
+    /// inner calls dispatch through the vtable. `PjrtBackend` is
+    /// untouched: the engine never schedules chunked work on a backend
+    /// without paged prefill. An empty chunk list skips the prefill
+    /// call entirely and a step with no active slot skips decode, so
+    /// neither phase consumes chaos randomness it didn't need.
+    ///
+    /// Chunked scheduling is bit-exact per request with the burst path
+    /// because each chunk replays the identical per-row float sequence
+    /// `prefill_paged` would run for those positions inside one call —
+    /// attention reads the same stored cache payloads either way; only
+    /// the interleaving across *requests* changes.
+    fn schedule(&mut self, work: &ScheduleWork<'_>, kv: &mut KvManager) -> ScheduleOut {
+        let chunks = if work.chunks.is_empty() {
+            Ok(Vec::new())
+        } else {
+            self.prefill_paged(&work.chunks, kv)
+        };
+        let decode = work
+            .active
+            .iter()
+            .any(|&a| a)
+            .then(|| self.decode(work.toks, work.pos, work.active, kv));
+        ScheduleOut { chunks, decode }
     }
 }
 

@@ -548,6 +548,15 @@ impl DecodeBackend for NativeWaqBackend {
     /// logits are bit-exact at every `--kv-bits`. At FP32 storage the
     /// gathers reproduce `causal_attention`'s accumulation order, keeping
     /// this path bit-exact with the dense `prefill_batch` too.
+    ///
+    /// Chunk/resume contract (the iteration-level scheduler's seam): a
+    /// *chunk* is simply a call with `prompt` sliced to the chunk end and
+    /// `cached` at the resume cursor — each tail row `t` computes at
+    /// absolute position `cached + t` attending over `0..=cached + t`,
+    /// so the per-row float sequence is identical whether the prompt
+    /// arrives whole or split across any number of calls (row
+    /// independence). Only the final chunk's last-position logits are
+    /// sampled; intermediate chunks' logits are discarded by the engine.
     fn prefill_paged(
         &mut self,
         reqs: &[PagedPrefill<'_>],

@@ -27,7 +27,11 @@
 //! the parity net in `tests/backend_parity.rs` and the `shard_scaling`
 //! bench's CI tripwires. `StepCost::shard_crit_s` reports the real
 //! slowest-shard critical path of each step (the latency floor a
-//! multi-worker split cannot beat).
+//! multi-worker split cannot beat) — the chunked scheduler's auto budget
+//! (`--prefill-chunk 0`) EWMA-tracks exactly this number to size prefill
+//! chunks against decode steps. `DecodeBackend::schedule` composes via
+//! the trait default: chunks and decode both delegate to the inner
+//! sharded datapath, no override needed.
 
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;

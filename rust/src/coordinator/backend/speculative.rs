@@ -188,11 +188,15 @@ impl DecodeBackend for SpeculativeBackend {
 
     /// Target prefill first (all-or-nothing, into the shared cache), then
     /// the draft prefills the SAME prompts into its private cache — whole
-    /// prompts, `cached = 0`: the draft has no prefix index, recomputing
-    /// a shared prefix with the cheap model costs less than keeping a
-    /// second index coherent. On a draft failure the claimed draft slots
-    /// are released and the error propagates; the engine then releases
-    /// the burst's shared-cache slots too, keeping both sides clean.
+    /// prompts, `cached = 0` on the first chunk: the draft has no prefix
+    /// index, recomputing a shared prefix with the cheap model costs less
+    /// than keeping a second index coherent. A chunk *resume* (the
+    /// iteration-level scheduler re-enters with the same slot + request
+    /// and a longer prompt slice) skips the claim and continues from the
+    /// draft's own cursor, so mid-prefill slots never trip the "slot not
+    /// free" claim error. On a draft failure only the newly claimed draft
+    /// slots are released and the error propagates; the engine then
+    /// releases the shared-cache slots too, keeping both sides clean.
     fn prefill_paged(
         &mut self,
         reqs: &[PagedPrefill<'_>],
@@ -200,6 +204,16 @@ impl DecodeBackend for SpeculativeBackend {
     ) -> Result<Vec<PagedPrefillOut>> {
         let mut outs = self.target.prefill_paged(reqs, kv)?;
         self.sync_slots(kv);
+        // resume detection: `sync_slots` just released every draft slot
+        // whose request diverged from the shared cache, so a surviving
+        // match means this call continues a prefill already in flight
+        let resumed: Vec<bool> = reqs
+            .iter()
+            .map(|r| {
+                self.draft_kv.request_of(r.slot).is_some()
+                    && self.draft_kv.request_of(r.slot) == kv.request_of(r.slot)
+            })
+            .collect();
         let claim = |dkv: &mut KvManager, req: &PagedPrefill<'_>| -> Result<()> {
             let request = kv
                 .request_of(req.slot)
@@ -211,13 +225,29 @@ impl DecodeBackend for SpeculativeBackend {
         };
         let mut claimed = Vec::with_capacity(reqs.len());
         let mut run = || -> Result<Vec<PagedPrefillOut>> {
-            for req in reqs {
+            for (req, &resume) in reqs.iter().zip(&resumed) {
+                if resume {
+                    continue;
+                }
                 claim(&mut self.draft_kv, req)?;
                 claimed.push(req.slot);
             }
             let draft_reqs: Vec<PagedPrefill<'_>> = reqs
                 .iter()
-                .map(|r| PagedPrefill { prompt: r.prompt, slot: r.slot, cached: 0 })
+                .zip(&resumed)
+                .map(|(r, &resume)| PagedPrefill {
+                    prompt: r.prompt,
+                    slot: r.slot,
+                    // resume chunks continue from the draft's cursor; a
+                    // first chunk recomputes any index-served prefix
+                    // (the draft keeps no prefix index, so its cache
+                    // must cover the whole prompt itself)
+                    cached: if resume {
+                        self.draft_kv.position(r.slot).unwrap_or(0)
+                    } else {
+                        0
+                    },
+                })
                 .collect();
             let douts = self.draft.prefill_paged(&draft_reqs, &mut self.draft_kv)?;
             for (req, dout) in reqs.iter().zip(&douts) {

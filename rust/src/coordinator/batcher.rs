@@ -87,11 +87,19 @@ impl Batcher {
     /// prefill failure every request popped here still gets a `Response`
     /// — admitted requests never silently vanish.
     pub fn admit(&mut self, free_slots: usize) -> Vec<Request> {
+        self.admit_capped(free_slots, usize::MAX)
+    }
+
+    /// Partial admission: like [`Batcher::admit`] but additionally capped
+    /// at `max` requests — the surface the chunked scheduler uses to take
+    /// only as much pending work as its per-step budget and free-slot
+    /// count allow, leaving the rest queued in FIFO order.
+    pub fn admit_capped(&mut self, free_slots: usize, max: usize) -> Vec<Request> {
         let want = match self.policy {
             AdmitPolicy::OnePerStep => free_slots.min(1),
             AdmitPolicy::FillAll => free_slots,
         };
-        let n = want.min(self.queue.len());
+        let n = want.min(max).min(self.queue.len());
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.queue.pop_front().unwrap());
@@ -208,5 +216,27 @@ mod tests {
         assert_eq!(b.admit(0).len(), 0);
         assert_eq!(b.admit(2).len(), 2);
         assert_eq!(b.admitted(), 2);
+    }
+
+    #[test]
+    fn admit_capped_takes_partial_bursts_in_fifo_order() {
+        let mut b = Batcher::new(AdmitPolicy::FillAll);
+        for i in 0..6 {
+            b.enqueue(req(i));
+        }
+        // cap below free slots: the cap wins
+        let first: Vec<u64> = b.admit_capped(4, 2).iter().map(|r| r.id).collect();
+        assert_eq!(first, vec![0, 1]);
+        // free slots below cap: capacity wins
+        let second: Vec<u64> = b.admit_capped(1, 8).iter().map(|r| r.id).collect();
+        assert_eq!(second, vec![2]);
+        assert_eq!(b.admitted(), 3);
+        assert_eq!(b.pending(), 3, "the rest stays queued");
+        // the policy bound still applies under a large cap
+        let mut one = Batcher::new(AdmitPolicy::OnePerStep);
+        for i in 0..3 {
+            one.enqueue(req(i));
+        }
+        assert_eq!(one.admit_capped(4, 8).len(), 1);
     }
 }

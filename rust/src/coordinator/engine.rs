@@ -5,10 +5,27 @@
 //! sampling, and stats. All per-step compute lives behind the
 //! `coordinator::backend::DecodeBackend` trait: `PjrtBackend` (AOT
 //! artifacts) or `NativeWaqBackend` (the K-Means WAQ LUT-GEMM datapath,
-//! executed natively). Each `step()`:
-//!   1. admits queued requests into free slots (backend prefill),
+//! executed natively). Two schedulers share the engine
+//! (`--sched {burst,chunked}`, [`SchedPolicy`]):
+//!
+//! - **Burst** (default, the original phased loop): each `step()`
+//!   1. admits queued requests into free slots (backend prefill, whole
+//!      prompts),
 //!   2. runs one backend decode step for all slots (inactive slots padded),
 //!   3. samples next tokens, advances slots, completes finished requests.
+//!
+//! - **Chunked** (iteration-level, vLLM-style): each `step()` assembles
+//!   ONE mixed backend pass — the active decode slots plus a budgeted
+//!   *chunk* of pending prefill rows ([`DecodeBackend::schedule`]).
+//!   Prompts prefill incrementally across steps behind per-request
+//!   cursors, so per-step work — and therefore decode inter-token
+//!   latency — stays bounded no matter how long the queued prompts are.
+//!   The chunk budget follows the measured datapath (shard critical
+//!   path, EWMA-tracked) unless pinned by `--prefill-chunk`. Token
+//!   streams are bit-exact with Burst (greedy): paged prefill attention
+//!   is row-independent, so splitting a prompt across chunks replays
+//!   the identical float sequence.
+//!
 //! A simulated-OASIS clock advances alongside from the backend's
 //! `StepCost` reports, so every response carries both measured
 //! wall-clock and modeled accelerator latency/energy.
@@ -18,7 +35,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::backend::chaos::ChaosCfg;
-use super::backend::{BackendSpec, CostModel, DecodeBackend, PagedPrefill, SpecRound};
+use super::backend::{
+    BackendSpec, CostModel, DecodeBackend, PagedPrefill, PagedPrefillOut, ScheduleWork, SpecRound,
+    StepCost,
+};
 use super::batcher::{AdmitPolicy, Batcher};
 use super::kv::KvManager;
 use super::request::{EngineStats, FinishReason, Request, Response};
@@ -26,6 +46,45 @@ use crate::gemm::WaqBackend;
 use crate::kvcache::{KvBits, KvPrecision};
 use crate::sim::OasisMode;
 use crate::util::rng::Rng;
+
+/// Scheduler shape for [`Engine::step`] (`--sched {burst,chunked}`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// The phased loop: admit a burst, prefill every admitted prompt
+    /// whole, then decode — one long prompt stalls every in-flight
+    /// decode for its entire prefill.
+    #[default]
+    Burst,
+    /// Iteration-level scheduling: every step runs ONE mixed backend
+    /// pass of the active decode slots plus a budgeted chunk of pending
+    /// prefill rows, so per-step work — and decode inter-token latency —
+    /// stays bounded while prompts of any length stream in. Requires a
+    /// paged-prefill backend (falls back to `Burst` with a logged
+    /// warning otherwise). Greedy token streams are bit-exact with
+    /// `Burst`: same tokens, different interleaving.
+    Chunked,
+}
+
+impl std::fmt::Display for SchedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SchedPolicy::Burst => "burst",
+            SchedPolicy::Chunked => "chunked",
+        })
+    }
+}
+
+impl std::str::FromStr for SchedPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "burst" => Ok(SchedPolicy::Burst),
+            "chunked" => Ok(SchedPolicy::Chunked),
+            other => Err(format!("unknown scheduler '{other}' (expected burst|chunked)")),
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -81,6 +140,17 @@ pub struct EngineConfig {
     /// re-quantized at this width — 2-bit runs the crumb-packed kernel
     /// (four rows per LUT byte). Ignored by the other backends.
     pub draft_wbits: u32,
+    /// Scheduler shape (`--sched {burst,chunked}`): `Burst` keeps the
+    /// phased admit-all → prefill-whole → decode loop; `Chunked` runs
+    /// iteration-level scheduling with budgeted prefill chunks mixed
+    /// into every decode step. See [`SchedPolicy`].
+    pub sched: SchedPolicy,
+    /// Prefill rows per chunked step (`--prefill-chunk N`, chunked
+    /// scheduler only). `0` (default) auto-budgets from the measured
+    /// datapath: the chunk is sized so its prefill time ≈ one decode
+    /// step (EWMA of `StepCost::shard_crit_s`, falling back to
+    /// `host_waq_s` for unsharded backends).
+    pub prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -98,6 +168,8 @@ impl Default for EngineConfig {
             prefix_cache: false,
             spec_k: 4,
             draft_wbits: 2,
+            sched: SchedPolicy::Burst,
+            prefill_chunk: 0,
         }
     }
 }
@@ -108,6 +180,11 @@ struct ActiveReq {
     /// when admission sampled the prefill's token — a request is only
     /// active after its first token exists, so this is never "pending"
     first_token_at: Instant,
+    /// when this request's latest token was sampled — the anchor for the
+    /// decode inter-token latency histogram (`EngineStats::decode_lat`).
+    /// Initialized alongside `first_token_at` (token #1's latency is
+    /// TTFT, recorded separately), advanced on every decode emission.
+    last_token_at: Instant,
     /// arrival → admission wall-clock (time spent queued), frozen at
     /// admission so the response reports it regardless of outcome
     queue_wait_s: f64,
@@ -115,6 +192,31 @@ struct ActiveReq {
     truncated_prompt: bool,
     /// sim-clock marks at admission, so responses report per-request
     /// deltas (not the engine's running totals)
+    modeled_start_s: f64,
+    modeled_start_j: f64,
+}
+
+/// One request whose prompt is prefilling chunk-by-chunk across engine
+/// iterations (`--sched chunked`). Its KV slot is claimed (Active at
+/// `done` tokens) for the whole span — index-aliased prefix blocks stay
+/// pinned, COW fires normally if a shared block is appended into — and
+/// `done` is the resume cursor the next chunk starts from. No first
+/// token exists yet: a deadline expiring here answers the request with
+/// `DeadlineExpired` before any token and releases the partial slot.
+struct PendingPrefill {
+    req: Request,
+    slot: usize,
+    /// prompt tokens already resident in the cache (index-served prefix
+    /// at claim + every chunk completed since)
+    done: usize,
+    /// prompt tokens the prefill will consume in total (clamped to
+    /// `seq_len - 1`, exactly as burst admission clamps)
+    plen: usize,
+    /// arrival → slot-claim wall-clock, frozen at claim (the chunked
+    /// analogue of burst admission's queue wait)
+    queue_wait_s: f64,
+    /// sim-clock marks at claim, so the response's modeled delta spans
+    /// every chunk of its own prefill
     modeled_start_s: f64,
     modeled_start_j: f64,
 }
@@ -153,6 +255,21 @@ pub struct Engine {
     /// fallback for `retry_after_ms` before any completion has primed
     /// the service-time EWMA
     cost_model: CostModel,
+    /// effective scheduler: `cfg.sched` downgraded to `Burst` (with a
+    /// logged warning) when the backend has no paged prefill — chunk
+    /// resume needs the paged cache's append/cursor machinery
+    sched: SchedPolicy,
+    /// pinned chunk size (`--prefill-chunk`); 0 = auto-budget from the
+    /// measured-datapath EWMAs below
+    prefill_chunk: usize,
+    /// requests mid-prefill under the chunked scheduler, FIFO by claim
+    /// order (head-of-line receives chunk budget first)
+    prefilling: Vec<PendingPrefill>,
+    /// EWMA of measured datapath seconds per prefill row (shard critical
+    /// path when reported, host WAQ seconds otherwise); 0.0 until primed
+    prefill_row_ewma: f64,
+    /// EWMA of measured datapath seconds per decode step; 0.0 until primed
+    decode_step_ewma: f64,
 }
 
 impl Engine {
@@ -172,8 +289,19 @@ impl Engine {
                 backend.spec().name()
             );
         }
+        let mut sched = cfg.sched;
+        if sched == SchedPolicy::Chunked && !backend.supports_paged_prefill() {
+            eprintln!(
+                "engine: --sched chunked requested but backend {} has no paged \
+                 prefill; falling back to burst scheduling",
+                backend.spec().name()
+            );
+            sched = SchedPolicy::Burst;
+        }
         let paged_admission = backend.supports_paged_prefill()
-            && (prefix_cache || backend.requires_paged_admission());
+            && (prefix_cache
+                || backend.requires_paged_admission()
+                || sched == SchedPolicy::Chunked);
         let kv = KvManager::with_precision_opts(m, precision, prefix_cache);
         let stats = EngineStats {
             waq_backend: backend.spec().name(),
@@ -194,6 +322,11 @@ impl Engine {
             paged_admission,
             recent_service_s: 0.0,
             cost_model: CostModel::new(m, cfg.mode, backend.spec().waq()),
+            sched,
+            prefill_chunk: cfg.prefill_chunk,
+            prefilling: Vec::new(),
+            prefill_row_ewma: 0.0,
+            decode_step_ewma: 0.0,
             backend,
         }
     }
@@ -297,7 +430,10 @@ impl Engine {
     }
 
     pub fn has_work(&self) -> bool {
-        self.batcher.pending() > 0 || self.kv.active_count() > 0
+        // mid-prefill slots are Active in the KV manager, so the second
+        // clause already covers `prefilling`; the third keeps drain
+        // correct even if slot accounting ever diverges
+        self.batcher.pending() > 0 || self.kv.active_count() > 0 || !self.prefilling.is_empty()
     }
 
     pub fn pending(&self) -> usize {
@@ -308,14 +444,35 @@ impl Engine {
         self.kv.active_count()
     }
 
+    /// The effective scheduler (after any unsupported-backend fallback).
+    pub fn sched(&self) -> SchedPolicy {
+        self.sched
+    }
+
+    /// Requests currently mid-prefill under the chunked scheduler
+    /// (claimed slot, incomplete cursor). Always 0 under `Burst`.
+    pub fn prefilling_count(&self) -> usize {
+        self.prefilling.len()
+    }
+
     /// One engine iteration; returns completed responses.
     ///
-    /// Fault containment: a failed burst prefill, per-request install, or
-    /// decode step answers the affected requests with `Aborted` (counted
-    /// in `prefill_failures` / `step_failures`) and returns `Ok` — the
-    /// engine keeps serving. `step()` only returns `Err` for engine-state
-    /// corruption no response can paper over.
+    /// Fault containment (both schedulers): a failed prefill (burst or
+    /// chunk), per-request install, or decode step answers the affected
+    /// requests with `Aborted` (counted in `prefill_failures` /
+    /// `step_failures`) and returns `Ok` — the engine keeps serving.
+    /// `step()` only returns `Err` for engine-state corruption no
+    /// response can paper over.
     pub fn step(&mut self) -> Result<Vec<Response>> {
+        match self.sched {
+            SchedPolicy::Burst => self.step_burst(),
+            SchedPolicy::Chunked => self.step_chunked(),
+        }
+    }
+
+    /// The phased scheduler (`--sched burst`): admit a burst, prefill
+    /// every admitted prompt whole, then run one decode step.
+    fn step_burst(&mut self) -> Result<Vec<Response>> {
         let mut done = Vec::new();
 
         // ---- deadline sweep (in-queue expiry) --------------------------
@@ -412,10 +569,12 @@ impl Engine {
                         }
                         // the prefill's last-position logits give token #1
                         let tok = self.sample(&pre.logits, req.temperature);
+                        let first_at = Instant::now();
                         let mut ar = ActiveReq {
                             req,
                             generated: vec![tok],
-                            first_token_at: Instant::now(),
+                            first_token_at: first_at,
+                            last_token_at: first_at,
                             queue_wait_s,
                             truncated_prompt: truncated,
                             modeled_start_s: start_s,
@@ -484,6 +643,282 @@ impl Engine {
         // evictions both land there); mirror it into the stats snapshot
         self.stats.evictions = self.kv.cache().evictions();
         Ok(done)
+    }
+
+    /// The iteration-level scheduler (`--sched chunked`): ONE mixed
+    /// backend pass per step — active decode slots plus a budgeted chunk
+    /// of pending prefill rows ([`DecodeBackend::schedule`]). Admission
+    /// claims a slot (aliasing any index-served prefix) and parks the
+    /// request in `prefilling`; chunks advance its cursor across steps;
+    /// the final chunk samples token #1 and promotes it to a decode slot.
+    /// Greedy streams are bit-exact with burst: paged prefill attention
+    /// is row-independent, so a prompt split across chunks replays the
+    /// identical float sequence, and decode logits depend only on the
+    /// slot's own cache contents — never on which step computed them.
+    fn step_chunked(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+
+        // ---- deadline sweeps -------------------------------------------
+        // In-queue expiry first (identical to burst), then mid-prefill
+        // expiry: a deadline passing between chunks answers the request
+        // BEFORE its first token — no partial tokens exist — and releases
+        // the partially filled slot (aliased/COW blocks return to the
+        // index or pool).
+        let now = Instant::now();
+        for req in self.batcher.take_expired(now) {
+            self.stats.expired += 1;
+            done.push(queued_response(&req, FinishReason::DeadlineExpired));
+        }
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            if self.prefilling[i].req.expired(now) {
+                let p = self.prefilling.remove(i);
+                self.kv.release(p.slot);
+                self.stats.expired += 1;
+                done.push(queued_response(&p.req, FinishReason::DeadlineExpired));
+            } else {
+                i += 1;
+            }
+        }
+
+        // ---- intake (claim slots, no compute yet) ----------------------
+        // Intake is additionally capped at the step's chunk budget: a
+        // request beyond it couldn't receive a single row this step, and
+        // leaving it queued keeps it visible to the cheaper in-queue
+        // deadline sweep instead of parking it in a slot.
+        let budget = self.chunk_budget();
+        let free = self.kv.decode_batch_free();
+        let admitted = self.batcher.admit_capped(free, budget.max(1));
+        let claimed_at = Instant::now();
+        let seq_len = self.kv.cfg.seq_len;
+        for req in admitted {
+            let Some(slot) = self.kv.free_slot() else {
+                // unreachable (admit is bounded by free slots) — but an
+                // accounting bug must still answer the request, not drop it
+                self.stats.step_failures += 1;
+                done.push(queued_response(&req, FinishReason::Aborted));
+                continue;
+            };
+            let plen = req.prompt.len().clamp(1, seq_len - 1);
+            match self.kv.admit_prefix(slot, req.id, &req.prompt, plen) {
+                Ok(m) => {
+                    if m.tokens > 0 {
+                        self.stats.prefix_hits += 1;
+                    }
+                    self.stats.prefix_blocks_reused += m.blocks as u64;
+                    self.prefilling.push(PendingPrefill {
+                        slot,
+                        done: m.tokens,
+                        plen,
+                        queue_wait_s: (claimed_at - req.arrived).as_secs_f64(),
+                        modeled_start_s: self.sim.seconds,
+                        modeled_start_j: self.sim.energy_j,
+                        req,
+                    });
+                }
+                Err(e) => {
+                    eprintln!(
+                        "engine: prefix admission failed for request {} ({e}); aborting it",
+                        req.id
+                    );
+                    self.stats.step_failures += 1;
+                    done.push(queued_response(&req, FinishReason::Aborted));
+                }
+            }
+        }
+
+        // ---- chunk plan (budget spent FIFO, head-of-line first) --------
+        // (pending index, chunk end cursor); `cached` in the plan is the
+        // resume cursor, so the backend computes only rows done..end.
+        let mut plans: Vec<(usize, usize)> = Vec::new();
+        let mut rows = 0usize;
+        for (idx, p) in self.prefilling.iter().enumerate() {
+            if rows >= budget {
+                break;
+            }
+            let take = (budget - rows).min(p.plen - p.done);
+            plans.push((idx, p.done + take));
+            rows += take;
+        }
+        let chunks: Vec<PagedPrefill<'_>> = plans
+            .iter()
+            .map(|&(idx, end)| {
+                let p = &self.prefilling[idx];
+                PagedPrefill {
+                    // the slice end never exceeds the real prompt (plen
+                    // is clamped to seq_len-1 but also to the backend's
+                    // own clamp of the full prompt)
+                    prompt: &p.req.prompt[..end.min(p.req.prompt.len())],
+                    slot: p.slot,
+                    cached: p.done,
+                }
+            })
+            .collect();
+
+        // ---- decode inputs (pre-chunk actives) -------------------------
+        // Built BEFORE the backend pass: a request finishing its prefill
+        // this step starts decoding next step. Token values are
+        // unaffected (decode logits depend only on the slot's cache, not
+        // on which step runs it); mid-prefill slots are Active in the KV
+        // manager but not in `self.active`, so they pad as inactive.
+        let (toks, pos, active, occupancy) = self.decode_inputs();
+
+        // ---- ONE mixed backend pass ------------------------------------
+        let work = ScheduleWork { chunks, toks: &toks, pos: &pos, active: &active };
+        let out = self.backend.schedule(&work, &mut self.kv);
+        drop(work);
+
+        // ---- chunk results ---------------------------------------------
+        match out.chunks {
+            Ok(outs) if outs.len() == plans.len() => {
+                // pass 1: charge costs, advance cursors, classify each
+                // planned request (None = bookkeeping failure, Some(out)
+                // = final chunk) — removals deferred so indices stay valid
+                let mut meas = 0.0f64;
+                let mut leaving: Vec<(usize, Option<PagedPrefillOut>)> = Vec::new();
+                for (&(idx, _), out) in plans.iter().zip(outs.into_iter()) {
+                    self.sim.seconds += out.cost.accel_s;
+                    self.sim.energy_j += out.cost.accel_j;
+                    self.stats.host_waq_s += out.cost.host_waq_s;
+                    self.stats.host_shard_crit_s += out.cost.shard_crit_s;
+                    meas += if out.cost.shard_crit_s > 0.0 {
+                        out.cost.shard_crit_s
+                    } else {
+                        out.cost.host_waq_s
+                    };
+                    if let Err(e) = self.kv.set_position(self.prefilling[idx].slot, out.plen) {
+                        eprintln!(
+                            "engine: chunk bookkeeping failed for request {} ({e}); aborting it",
+                            self.prefilling[idx].req.id
+                        );
+                        self.stats.step_failures += 1;
+                        leaving.push((idx, None));
+                        continue;
+                    }
+                    self.prefilling[idx].done = out.plen;
+                    if out.plen >= self.prefilling[idx].plen {
+                        leaving.push((idx, Some(out)));
+                    }
+                }
+                if rows > 0 && meas > 0.0 {
+                    let per_row = meas / rows as f64;
+                    self.prefill_row_ewma = if self.prefill_row_ewma == 0.0 {
+                        per_row
+                    } else {
+                        0.8 * self.prefill_row_ewma + 0.2 * per_row
+                    };
+                }
+                // pass 2: detach leavers in FIFO order (ascending indices;
+                // each removal shifts the rest down by one) so first-token
+                // sampling order matches burst admission order
+                let mut removed = 0usize;
+                for (idx, outcome) in leaving {
+                    let p = self.prefilling.remove(idx - removed);
+                    removed += 1;
+                    let Some(out) = outcome else {
+                        self.kv.release(p.slot);
+                        done.push(queued_response(&p.req, FinishReason::Aborted));
+                        continue;
+                    };
+                    // final chunk: the tail's last-position logits give
+                    // token #1 — from here on the request is an ordinary
+                    // decode-slot resident, exactly as if burst-admitted
+                    let truncated = p.plen < p.req.prompt.len();
+                    self.stats.prefills += 1;
+                    if truncated {
+                        self.stats.truncated_prompts += 1;
+                    }
+                    let indexed = p.plen.min(p.req.prompt.len());
+                    self.kv.register_prefix(p.slot, &p.req.prompt[..indexed]);
+                    let tok = self.sample(&out.logits, p.req.temperature);
+                    let first_at = Instant::now();
+                    let mut ar = ActiveReq {
+                        req: p.req,
+                        generated: vec![tok],
+                        first_token_at: first_at,
+                        last_token_at: first_at,
+                        queue_wait_s: p.queue_wait_s,
+                        truncated_prompt: truncated,
+                        modeled_start_s: p.modeled_start_s,
+                        modeled_start_j: p.modeled_start_j,
+                    };
+                    self.stats.generated_tokens += 1;
+                    if let Some(resp) = self.maybe_finish(p.slot, &mut ar, first_at) {
+                        self.kv.release(p.slot);
+                        done.push(resp);
+                    } else {
+                        self.active[p.slot] = Some(ar);
+                    }
+                }
+            }
+            // a failed (or arity-broken) chunk batch aborts exactly the
+            // requests that had a chunk in it — mid-prefill requests NOT
+            // planned this step keep their cursors and survive, as do all
+            // in-flight decodes (their result is handled independently
+            // below)
+            fail => {
+                let err = match fail {
+                    Err(e) => e.to_string(),
+                    Ok(p) => format!(
+                        "backend returned {} chunk results for {} planned chunks",
+                        p.len(),
+                        plans.len()
+                    ),
+                };
+                eprintln!(
+                    "engine: prefill chunk failed ({err}); aborting {} mid-prefill request(s)",
+                    plans.len()
+                );
+                self.stats.prefill_failures += 1;
+                let mut removed = 0usize;
+                for &(idx, _) in &plans {
+                    let p = self.prefilling.remove(idx - removed);
+                    removed += 1;
+                    self.kv.release(p.slot);
+                    done.push(queued_response(&p.req, FinishReason::Aborted));
+                }
+            }
+        }
+
+        // ---- decode result ---------------------------------------------
+        // Same containment as burst: a failed decode aborts the batch
+        // that was in flight but never the mid-prefill requests (their
+        // slots are not in `self.active`, so `abort_inflight` skips them).
+        if let Some(dres) = out.decode {
+            match dres {
+                Ok((logits, cost)) => done.extend(self.apply_decode(logits, cost, &pos, occupancy)),
+                Err(e) => {
+                    eprintln!(
+                        "engine: decode step failed ({e}); aborting {} in-flight request(s)",
+                        occupancy
+                    );
+                    self.stats.step_failures += 1;
+                    done.extend(self.abort_inflight());
+                }
+            }
+        }
+
+        self.stats.peak_kv_bytes =
+            self.stats.peak_kv_bytes.max(self.kv.peak_cache_bytes() as u64);
+        self.stats.evictions = self.kv.cache().evictions();
+        Ok(done)
+    }
+
+    /// Prefill rows the chunked scheduler may run this step. An explicit
+    /// `--prefill-chunk N` pins it; `0` sizes the chunk so its measured
+    /// datapath time ≈ one decode step (ratio of the two EWMAs — shard
+    /// critical path when the backend reports one, host WAQ seconds
+    /// otherwise), which keeps mixed steps roughly as long as pure decode
+    /// steps. Cold default before both EWMAs are primed: 16 rows (one KV
+    /// block).
+    fn chunk_budget(&self) -> usize {
+        if self.prefill_chunk > 0 {
+            return self.prefill_chunk;
+        }
+        if self.prefill_row_ewma > 0.0 && self.decode_step_ewma > 0.0 {
+            return ((self.decode_step_ewma / self.prefill_row_ewma).round() as usize).max(1);
+        }
+        16
     }
 
     /// Paged admission (`--prefix-cache on`, or a backend that requires
@@ -609,10 +1044,12 @@ impl Engine {
                     self.stats.host_shard_crit_s += out.cost.shard_crit_s;
                     // the tail's last-position logits give token #1
                     let tok = self.sample(&out.logits, req.temperature);
+                    let first_at = Instant::now();
                     let mut ar = ActiveReq {
                         req,
                         generated: vec![tok],
-                        first_token_at: Instant::now(),
+                        first_token_at: first_at,
+                        last_token_at: first_at,
                         queue_wait_s,
                         truncated_prompt: truncated,
                         modeled_start_s: start_s,
@@ -688,10 +1125,12 @@ impl Engine {
                     self.stats.truncated_prompts += 1;
                 }
                 let tok = self.sample(logits, req.temperature);
+                let first_at = Instant::now();
                 let mut ar = ActiveReq {
                     req,
                     generated: vec![tok],
-                    first_token_at: Instant::now(),
+                    first_token_at: first_at,
+                    last_token_at: first_at,
                     queue_wait_s,
                     truncated_prompt: truncated,
                     modeled_start_s: self.sim.seconds,
@@ -731,9 +1170,18 @@ impl Engine {
     }
 
     fn decode_step(&mut self) -> Result<Vec<Response>> {
-        let m = self.backend.model();
-        let b = m.decode_batch;
-        // last generated token + write position per slot (pads elsewhere)
+        let (toks, pos, active, occupancy) = self.decode_inputs();
+        let (logits, cost) = self
+            .backend
+            .decode(&toks, &pos, &active, &mut self.kv)?;
+        Ok(self.apply_decode(logits, cost, &pos, occupancy))
+    }
+
+    /// Last generated token, write position, and active flag per decode
+    /// slot (pads elsewhere), plus the occupancy count — the decode
+    /// arrays both schedulers hand the backend.
+    fn decode_inputs(&self) -> (Vec<i32>, Vec<i32>, Vec<bool>, u64) {
+        let b = self.active.len();
         let mut toks = vec![0i32; b];
         let mut pos = vec![0i32; b];
         let mut active = vec![false; b];
@@ -746,11 +1194,20 @@ impl Engine {
                 occupancy += 1;
             }
         }
+        (toks, pos, active, occupancy)
+    }
 
-        let (logits, cost) = self
-            .backend
-            .decode(&toks, &pos, &active, &mut self.kv)?;
-
+    /// Post-decode bookkeeping shared by both schedulers: charge the
+    /// step's cost, sample/advance/finish every active slot (or emit
+    /// speculative rounds), and record per-token decode latencies.
+    fn apply_decode(
+        &mut self,
+        logits: Vec<f32>,
+        cost: StepCost,
+        pos: &[i32],
+        occupancy: u64,
+    ) -> Vec<Response> {
+        let m = self.kv.cfg;
         self.stats.decode_steps += 1;
         self.stats.occupancy_sum += occupancy;
         self.sim.seconds += cost.accel_s;
@@ -760,6 +1217,16 @@ impl Engine {
         // the slowest-shard sum for the tensor-parallel backend
         self.stats.host_waq_s += cost.host_waq_s;
         self.stats.host_shard_crit_s += cost.shard_crit_s;
+        // prime the chunk-budget EWMA with this step's measured datapath
+        // seconds (harmless under burst: chunked reads it, burst ignores)
+        let meas = if cost.shard_crit_s > 0.0 { cost.shard_crit_s } else { cost.host_waq_s };
+        if meas > 0.0 {
+            self.decode_step_ewma = if self.decode_step_ewma == 0.0 {
+                meas
+            } else {
+                0.8 * self.decode_step_ewma + 0.2 * meas
+            };
+        }
 
         let now = Instant::now();
         let mut done = Vec::new();
@@ -769,10 +1236,10 @@ impl Engine {
         // it emits the accepted draft tokens (per-token stop checks at
         // each token's virtual position) and samples from the returned row.
         if let Some(rounds) = self.backend.take_spec_rounds() {
-            self.emit_spec_rounds(rounds, &pos, &logits, now, &mut done);
-            return Ok(done);
+            self.emit_spec_rounds(rounds, pos, &logits, now, &mut done);
+            return done;
         }
-        for slot in 0..b {
+        for slot in 0..self.active.len() {
             let Some(mut ar) = self.active[slot].take() else { continue };
             if let Err(e) = self.kv.advance(slot) {
                 // contained per-slot: the request was already taken off
@@ -791,6 +1258,11 @@ impl Engine {
             let tok = self.sample(lrow, ar.req.temperature);
             ar.generated.push(tok);
             self.stats.generated_tokens += 1;
+            // recorded inter-token latency: the gap since this request's
+            // previous token — the quantity the chunked scheduler exists
+            // to bound (another request's prefill stall lands here)
+            self.stats.decode_lat.record((now - ar.last_token_at).as_secs_f64());
+            ar.last_token_at = now;
             // no first-token bookkeeping here: admission always records
             // `first_token_at` when it samples the prefill's token, so a
             // decode step can never produce a request's first token
@@ -801,7 +1273,7 @@ impl Engine {
                 self.active[slot] = Some(ar);
             }
         }
-        Ok(done)
+        done
     }
 
     /// Multi-token emission for one speculative decode step. Per round:
@@ -853,8 +1325,10 @@ impl Engine {
             let p = pos[slot] as usize;
             let acc = round.accepted.len();
             let mut finished = None;
+            let mut emitted = 0usize;
             for (j, &tok) in round.accepted.iter().enumerate() {
                 ar.generated.push(tok);
+                emitted += 1;
                 self.stats.generated_tokens += 1;
                 // accepted token j was decoded from cache rows 0..=p+j,
                 // leaving the cache p+j+1 tokens long
@@ -868,11 +1342,22 @@ impl Engine {
                 let lrow = &logits[slot * vocab..(slot + 1) * vocab];
                 let tok = self.sample(lrow, ar.req.temperature);
                 ar.generated.push(tok);
+                emitted += 1;
                 self.stats.generated_tokens += 1;
                 // the sampled token sits where the backend truncated to
                 // (p + acc + 1), so this matches kv.exhausted exactly
                 let exhausted = p + acc + 1 >= seq_len - 1;
                 finished = self.maybe_finish_at(&mut ar, exhausted, now);
+            }
+            // a speculative round emits several tokens in one wall-clock
+            // gap: split it evenly so the histogram reflects effective
+            // per-token latency (what a streaming client observes)
+            if emitted > 0 {
+                let per = (now - ar.last_token_at).as_secs_f64() / emitted as f64;
+                for _ in 0..emitted {
+                    self.stats.decode_lat.record(per);
+                }
+                ar.last_token_at = now;
             }
             match finished {
                 Some(resp) => {
@@ -1006,6 +1491,12 @@ impl Engine {
     /// far; queued requests report zeros.
     pub fn abort_all(&mut self) -> Vec<Response> {
         let mut out = self.abort_inflight();
+        // mid-prefill requests (chunked scheduler) have no tokens yet:
+        // release their partial slots and answer like queued requests
+        for p in std::mem::take(&mut self.prefilling) {
+            self.kv.release(p.slot);
+            out.push(queued_response(&p.req, FinishReason::Aborted));
+        }
         for req in self.batcher.drain() {
             out.push(queued_response(&req, FinishReason::Aborted));
         }
@@ -1497,5 +1988,129 @@ mod tests {
             .tokens
             .iter()
             .all(|&t| t >= 0 && (t as usize) < cfg.vocab));
+    }
+
+    /// Tentpole: the chunked scheduler prefills a prompt incrementally
+    /// across steps (cursor resume through the paged cache), samples the
+    /// first token only on the final chunk, and produces the same tokens
+    /// as a burst run of the same request.
+    #[test]
+    fn chunked_prefill_resumes_across_steps_and_matches_burst() {
+        let cfg = ModelCfg::test_preset();
+        let prompt: Vec<i32> = (500..510).collect(); // 10 tokens
+        let mut burst =
+            Engine::new(Box::new(ScriptedBackend::ok(cfg)), &EngineConfig::default());
+        burst.submit(Request::new(1, prompt.clone(), 3));
+        let bresp = burst.run_to_completion().expect("burst").remove(0);
+
+        let ecfg = EngineConfig {
+            sched: SchedPolicy::Chunked,
+            prefill_chunk: 4,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
+        assert_eq!(e.sched(), SchedPolicy::Chunked);
+        e.submit(Request::new(1, prompt.clone(), 3));
+        assert!(e.step().expect("chunk 1").is_empty());
+        assert_eq!(e.prefilling_count(), 1, "mid-prefill after 4/10 rows");
+        assert_eq!(e.stats.generated_tokens, 0, "no token before the final chunk");
+        assert!(e.step().expect("chunk 2").is_empty());
+        assert_eq!(e.prefilling_count(), 1, "mid-prefill after 8/10 rows");
+        let done = e.run_to_completion().expect("finish");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish_reason, FinishReason::MaxTokens);
+        assert_eq!(done[0].tokens, bresp.tokens, "chunked == burst token stream");
+        assert_eq!(e.stats.prefills, 1);
+        assert_eq!(e.stats.completed, 1);
+        assert_eq!(e.kv().cache().in_use_blocks(), 0);
+    }
+
+    /// Tentpole: in-flight decodes advance every mixed step while a long
+    /// prompt prefills chunk-by-chunk — the starvation the iteration-level
+    /// scheduler exists to prevent — and their inter-token gaps land in
+    /// the recorded latency histogram.
+    #[test]
+    fn chunked_decode_advances_while_long_prompt_prefills() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig {
+            sched: SchedPolicy::Chunked,
+            prefill_chunk: 2,
+            policy: AdmitPolicy::FillAll,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
+        // A: 1-token prompt, promoted by its first chunk
+        e.submit(Request::new(1, vec![7], 40));
+        assert!(e.step().expect("admit A").is_empty());
+        assert_eq!(e.prefilling_count(), 0, "A promoted in one chunk");
+        // B: 6-token prompt → three 2-row chunks
+        e.submit(Request::new(2, (600..606).collect(), 2));
+        for expect in [1usize, 1, 0] {
+            let g0 = e.stats.generated_tokens;
+            assert!(e.step().expect("mixed step").is_empty());
+            assert_eq!(e.prefilling_count(), expect);
+            assert!(e.stats.generated_tokens > g0, "A decoded during B's prefill");
+        }
+        assert!(e.stats.decode_lat.count() > 0, "inter-token gaps recorded");
+        e.abort_all();
+        assert_eq!(e.kv().cache().in_use_blocks(), 0);
+    }
+
+    /// Satellite regression (engine-level): a deadline expiring *between
+    /// chunks* answers `DeadlineExpired` before any token exists and
+    /// reclaims the partially filled KV slot.
+    #[test]
+    fn chunked_deadline_expires_between_chunks_before_first_token() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig {
+            sched: SchedPolicy::Chunked,
+            prefill_chunk: 1,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
+        e.submit(Request::new(1, (700..710).collect(), 4).with_deadline_ms(30));
+        assert!(e.step().expect("chunk 1").is_empty());
+        assert_eq!(e.prefilling_count(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let done = e.run_to_completion().expect("expire");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish_reason, FinishReason::DeadlineExpired);
+        assert!(done[0].tokens.is_empty(), "expired before the first token");
+        assert_eq!(e.stats.expired, 1);
+        assert_eq!(e.stats.prefills, 0, "the prefill never completed");
+        assert_eq!(e.prefilling_count(), 0);
+        assert_eq!(e.kv().cache().in_use_blocks(), 0, "partial KV slot reclaimed");
+    }
+
+    #[test]
+    fn chunked_without_paged_backend_falls_back_to_burst() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig { sched: SchedPolicy::Chunked, ..Default::default() };
+        let mut e = Engine::new(Box::new(NanBackend { model: cfg }), &ecfg);
+        assert_eq!(e.sched(), SchedPolicy::Burst, "no paged prefill → burst");
+        e.submit(Request::new(1, vec![1, 2], 2));
+        assert_eq!(e.run_to_completion().expect("fallback run").len(), 1);
+    }
+
+    /// `--prefill-chunk 0`: before the datapath EWMAs are primed the
+    /// auto-budget falls back to one KV block (16 rows).
+    #[test]
+    fn auto_chunk_budget_defaults_to_one_block_cold() {
+        let cfg = ModelCfg::test_preset();
+        let ecfg = EngineConfig {
+            sched: SchedPolicy::Chunked,
+            prefill_chunk: 0,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(ScriptedBackend::ok(cfg)), &ecfg);
+        let prompt: Vec<i32> = (800..820).collect(); // 20 tokens
+        e.submit(Request::new(1, prompt, 2));
+        assert!(e.step().expect("chunk 1").is_empty());
+        assert_eq!(e.prefilling_count(), 1, "16/20 rows after the cold chunk");
+        assert!(e.step().expect("chunk 2").is_empty());
+        assert_eq!(e.prefilling_count(), 0, "second chunk completes the prompt");
+        let done = e.run_to_completion().expect("finish");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 2);
     }
 }

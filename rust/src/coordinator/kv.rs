@@ -123,8 +123,13 @@ impl KvManager {
         }
     }
 
-    /// Set an active slot's position (paged prefill completed: the slot
-    /// has written `pos` tokens).
+    /// Set an active slot's position: the paged-prefill path has written
+    /// `new_pos` tokens. Under the chunked scheduler this is the prefill
+    /// *cursor* — a slot stays `Active` mid-prompt across engine steps,
+    /// each chunk advancing it, until the final chunk lands at the full
+    /// (clamped) prompt length. Aliased prefix blocks stay pinned for the
+    /// whole span and COW fires normally if a chunk appends into a shared
+    /// block; `release` mid-prefill reclaims everything.
     pub fn set_position(&mut self, slot: usize, new_pos: usize) -> Result<(), String> {
         match &mut self.slots[slot] {
             Slot::Active { pos, .. } => {
@@ -561,5 +566,54 @@ mod tests {
         let (kc, vc) = prefill_pair(&c, 1.0);
         assert!(kv.install_prefill(0, 1, 0, &kc, &vc).is_err());
         assert!(kv.install_prefill(0, 1, c.seq_len + 1, &kc, &vc).is_err());
+    }
+
+    /// Chunked-scheduler contract: a slot claimed by `admit_prefix` stays
+    /// `Active` at its cursor between chunks, `set_position` advances it,
+    /// appends resume exactly where the previous chunk stopped, and a
+    /// mid-prefill `release` returns every partial block to the pool.
+    #[test]
+    fn mid_prefill_cursor_survives_across_chunks() {
+        let c = cfg();
+        let mut kv = KvManager::new(c);
+        let prompt: Vec<i32> = (0..20).collect();
+        let m = kv.admit_prefix(0, 42, &prompt, 20).unwrap();
+        assert_eq!(m.tokens, 0, "no index: slot claimed cold");
+        assert_eq!(kv.position(0), Some(0));
+        let d = c.n_heads * c.head_dim;
+        let row = vec![0.5f32; d];
+        // chunk 1: rows 0..8
+        for l in 0..c.n_layers {
+            for p in 0..8 {
+                kv.append_token(l, 0, p, &row, &row).unwrap();
+            }
+        }
+        kv.set_position(0, 8).unwrap();
+        assert_eq!(kv.position(0), Some(8), "cursor survives between chunks");
+        assert_eq!(kv.request_of(0), Some(42), "slot still owned mid-prefill");
+        assert_eq!(kv.free_slot(), Some(1), "mid-prefill slot is not free");
+        // chunk 2 resumes exactly at the cursor
+        for l in 0..c.n_layers {
+            for p in 8..20 {
+                kv.append_token(l, 0, p, &row, &row).unwrap();
+            }
+        }
+        kv.set_position(0, 20).unwrap();
+        for l in 0..c.n_layers {
+            assert_eq!(kv.cache().written(l, 0), 20);
+        }
+        // a second slot released mid-prefill reclaims its partial blocks
+        kv.admit_prefix(1, 43, &prompt, 20).unwrap();
+        for l in 0..c.n_layers {
+            for p in 0..5 {
+                kv.append_token(l, 1, p, &row, &row).unwrap();
+            }
+        }
+        kv.set_position(1, 5).unwrap();
+        let used = kv.cache().in_use_blocks();
+        kv.release(1);
+        assert!(kv.cache().in_use_blocks() < used, "partial blocks reclaimed");
+        kv.release(0);
+        assert_eq!(kv.cache().in_use_blocks(), 0, "zero leaked blocks");
     }
 }

@@ -15,10 +15,11 @@ pub mod server;
 pub use backend::{
     probe_decode_logits, BackendSpec, ChaosBackend, ChaosCfg, ChaosCounters, DecodeBackend,
     NativeCfg, NativeWaqBackend, PagedPrefill, PagedPrefillOut, PjrtBackend, PrefillOut,
-    ShardedWaqBackend, SpecRound, SpeculativeBackend, StepCost, VerifyRun,
+    ScheduleOut, ScheduleWork, ShardedWaqBackend, SpecRound, SpeculativeBackend, StepCost,
+    VerifyRun,
 };
 pub use batcher::{AdmitPolicy, Batcher};
-pub use engine::{Engine, EngineConfig, SimTotals};
+pub use engine::{Engine, EngineConfig, SchedPolicy, SimTotals};
 pub use kv::KvManager;
 // the KV precision knob is part of the engine-config surface
 pub use crate::kvcache::KvBits;

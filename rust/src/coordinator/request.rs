@@ -155,6 +155,73 @@ impl std::fmt::Display for FinishReason {
     }
 }
 
+/// Fixed log-spaced latency histogram: 32 power-of-two buckets starting
+/// at 1 µs, so bucket `i` spans `[2^i, 2^{i+1})` µs (bucket 0 also
+/// absorbs sub-µs samples, the last bucket absorbs everything from
+/// ~35 minutes up). Recording is O(1) with no allocation — cheap enough
+/// to run on every emitted token — and percentiles come back as the
+/// geometric midpoint of the covering bucket, so the quantization error
+/// is bounded by sqrt(2) in either direction. The engine records one
+/// sample per *decode-emitted* token: the measured wall-clock gap since
+/// the slot's previous token (spec rounds split the round gap evenly
+/// over the tokens they emit). The first token is never recorded here —
+/// that gap is TTFT, reported per response.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: [u64; Self::BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; Self::BUCKETS], total: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub const BUCKETS: usize = 32;
+    /// Lower edge of bucket 0, in seconds (1 µs).
+    const FLOOR_S: f64 = 1e-6;
+
+    /// Record one latency sample (seconds). Non-finite or negative
+    /// samples are dropped rather than poisoning a bucket.
+    pub fn record(&mut self, seconds: f64) {
+        if !seconds.is_finite() || seconds < 0.0 {
+            return;
+        }
+        let idx = if seconds <= Self::FLOOR_S {
+            0
+        } else {
+            ((seconds / Self::FLOOR_S).log2().floor() as usize).min(Self::BUCKETS - 1)
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// The q-quantile (`q` in [0, 1]) as the geometric midpoint of the
+    /// bucket containing it; `0.0` when empty. `percentile(0.5)` = p50,
+    /// `percentile(0.99)` = p99.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::FLOOR_S * (1u64 << i) as f64 * std::f64::consts::SQRT_2;
+            }
+        }
+        Self::FLOOR_S * (1u64 << (Self::BUCKETS - 1)) as f64 * std::f64::consts::SQRT_2
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub decode_steps: u64,
@@ -237,6 +304,13 @@ pub struct EngineStats {
     /// (dense path: same installed cache; paged path: aliased blocks)
     /// and last-position logits.
     pub burst_dedup_hits: u64,
+    /// Per-token decode inter-token latency (measured wall-clock gap
+    /// between consecutive emitted tokens of a slot; first tokens are
+    /// TTFT, not recorded here). This is the scheduler's tripwire
+    /// surface: a burst prefill stalling in-flight decodes shows up
+    /// directly as fat p99 gaps, and `--sched chunked` exists to bound
+    /// them. p50/p99 ride along in [`EngineStats::to_json`].
+    pub decode_lat: LatencyHistogram,
 }
 
 impl EngineStats {
@@ -262,7 +336,8 @@ impl EngineStats {
                 "\"kv_bits\": {}, \"peak_kv_bytes\": {}, \"kv_bytes_per_token\": {:.3}, ",
                 "\"prefix_hits\": {}, \"prefix_blocks_reused\": {}, \"evictions\": {}, ",
                 "\"spec_rounds\": {}, \"spec_proposed\": {}, \"spec_accepted\": {}, ",
-                "\"burst_dedup_hits\": {}}}"
+                "\"burst_dedup_hits\": {}, \"decode_lat_count\": {}, ",
+                "\"decode_lat_p50_s\": {:.6}, \"decode_lat_p99_s\": {:.6}}}"
             ),
             self.decode_steps,
             self.prefills,
@@ -289,6 +364,9 @@ impl EngineStats {
             self.spec_proposed,
             self.spec_accepted,
             self.burst_dedup_hits,
+            self.decode_lat.count(),
+            self.decode_lat.percentile(0.5),
+            self.decode_lat.percentile(0.99),
         )
     }
 }
@@ -338,6 +416,55 @@ mod tests {
         assert!(j.contains("\"spec_accepted\": 19"));
         assert!(j.contains("\"burst_dedup_hits\": 4"));
         assert!(j.contains("\"waq_backend\": \"native-packed\""));
+    }
+
+    #[test]
+    fn latency_histogram_buckets_and_percentiles() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), 0.0, "empty histogram reads 0");
+        // 99 samples in the [1, 2) µs bucket, one in the [1024, 2048) µs
+        // bucket: p50 sits in the first, p99 still in the first (the
+        // 99th of 100 samples), p100 in the tail bucket
+        for _ in 0..99 {
+            h.record(1.5e-6);
+        }
+        h.record(1.5e-3);
+        assert_eq!(h.count(), 100);
+        let sqrt2 = std::f64::consts::SQRT_2;
+        assert!((h.percentile(0.5) - 1e-6 * sqrt2).abs() < 1e-12);
+        assert!((h.percentile(0.99) - 1e-6 * sqrt2).abs() < 1e-12);
+        assert!((h.percentile(1.0) - 1024e-6 * sqrt2).abs() < 1e-9);
+        // quantization error is bounded by sqrt(2) both ways
+        for s in [3e-6, 7.9e-5, 0.013, 2.0] {
+            let mut one = LatencyHistogram::default();
+            one.record(s);
+            let p = one.percentile(0.5);
+            assert!(p / s <= sqrt2 + 1e-9 && s / p <= sqrt2 + 1e-9, "{s} -> {p}");
+        }
+        // garbage samples are dropped, extremes clamp into edge buckets
+        let mut g = LatencyHistogram::default();
+        g.record(f64::NAN);
+        g.record(-1.0);
+        assert_eq!(g.count(), 0);
+        g.record(0.0); // sub-µs clamps into bucket 0
+        g.record(1e9); // beyond the last bucket clamps into it
+        assert_eq!(g.count(), 2);
+        assert!(g.percentile(0.0) > 0.0);
+    }
+
+    #[test]
+    fn stats_json_appends_latency_keys() {
+        let mut s = EngineStats::default();
+        s.decode_lat.record(2e-6);
+        s.decode_lat.record(2e-6);
+        let j = s.to_json();
+        assert!(!j.contains('\n'));
+        assert!(j.contains("\"decode_lat_count\": 2"), "{j}");
+        assert!(j.contains("\"decode_lat_p50_s\": "), "{j}");
+        assert!(j.ends_with('}'), "{j}");
+        let p99 = s.decode_lat.percentile(0.99);
+        assert!(j.contains(&format!("\"decode_lat_p99_s\": {p99:.6}")), "{j}");
     }
 
     #[test]

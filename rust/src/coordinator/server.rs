@@ -35,9 +35,11 @@
 //! A control line `{"cmd": "stats"}` (no prompt) replies with one JSON
 //! line of engine counters ([`EngineStats::to_json`]) — including the
 //! prefix-cache counters (`prefix_hits`, `prefix_blocks_reused`,
-//! `evictions`) and the speculative counters (`spec_rounds`,
-//! `spec_proposed`, `spec_accepted`) — without consuming queue or KV
-//! capacity.
+//! `evictions`), the speculative counters (`spec_rounds`,
+//! `spec_proposed`, `spec_accepted`), and the recorded decode
+//! inter-token latency histogram (`decode_lat_count`,
+//! `decode_lat_p50_s`, `decode_lat_p99_s` — the per-token gaps the
+//! chunked scheduler bounds) — without consuming queue or KV capacity.
 //!
 //! The full wire protocol (TCP and the stdin REPL), with examples and
 //! field-by-field reference, is consolidated in `docs/serving.md` at the

@@ -6,10 +6,21 @@
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
 //!       [--backend SPEC] [--kv-bits 32|4|3|2] [--prefix-cache on|off]
+//!       [--sched burst|chunked] [--prefill-chunk N]
 //!       [--shards N] [--spec-k N] [--draft-wbits 2|3] [--queue-cap N]
 //!       [--default-deadline-ms MS] [--max-conns N] [--read-timeout-ms MS]
 //!       [--chaos-rate R] [--chaos-seed S] [--chaos-kv-pressure R]
 //!       [--drain-ms MS]
+//!       `--sched chunked` switches the engine to iteration-level
+//!       scheduling: every step runs one mixed backend pass of the
+//!       active decode slots plus a budgeted chunk of pending prefill
+//!       rows, so a long prompt can never stall in-flight decodes for
+//!       its whole prefill. `--prefill-chunk N` pins the chunk to N
+//!       rows per step; `0` (default) auto-budgets from the measured
+//!       datapath (EWMA of the shard critical path vs decode-step
+//!       time). Token streams are bit-exact with the default burst
+//!       scheduler; requires a paged-prefill (native) backend, warns
+//!       and falls back to burst otherwise.
 //!       Robustness knobs: `--queue-cap` bounds the admission queue
 //!       (overflow answered with a structured rejection carrying a
 //!       `retry_after_ms` backpressure hint, never dropped);
@@ -48,7 +59,7 @@ use std::io::Write;
 
 use anyhow::{anyhow, Result};
 use kllm::coordinator::{
-    serve_tcp_with, BackendSpec, ChaosCfg, Coordinator, EngineConfig, KvBits, TcpCfg,
+    serve_tcp_with, BackendSpec, ChaosCfg, Coordinator, EngineConfig, KvBits, SchedPolicy, TcpCfg,
 };
 use kllm::eval::{run_experiment, Corpus, ExperimentCtx, ALL_IDS};
 use kllm::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
@@ -161,9 +172,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "preset", "config", "port", "ckpt", "requests", "max-new", "backend", "kv-bits",
-        "prefix-cache", "shards", "spec-k", "draft-wbits", "queue-cap",
-        "default-deadline-ms", "max-conns", "read-timeout-ms", "chaos-seed", "chaos-rate",
-        "chaos-kv-pressure", "drain-ms",
+        "prefix-cache", "sched", "prefill-chunk", "shards", "spec-k", "draft-wbits",
+        "queue-cap", "default-deadline-ms", "max-conns", "read-timeout-ms", "chaos-seed",
+        "chaos-rate", "chaos-kv-pressure", "drain-ms",
     ])
     .map_err(|e| anyhow!(e))?;
     let mut preset = args.str_or("preset", "test");
@@ -233,6 +244,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             return Err(anyhow!("--prefix-cache must be 'on' or 'off', got '{other}'"));
         }
     };
+    // scheduler shape: burst (phased) or chunked (iteration-level with
+    // budgeted prefill chunks); the chunk size is rows per step, 0 = auto
+    let sched: SchedPolicy = args
+        .str_or("sched", "burst")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let prefill_chunk = args.usize_or("prefill-chunk", 0).map_err(|e| anyhow!(e))?;
     let drain_ms = args.u64_or("drain-ms", 5_000).map_err(|e| anyhow!(e))?;
     let manifest = Manifest::load(&artifacts_dir(&preset)).map_err(|e| anyhow!(e))?;
     let params = match args.opt("ckpt") {
@@ -255,6 +273,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             default_deadline_ms,
             chaos,
             prefix_cache,
+            sched,
+            prefill_chunk,
             ..Default::default()
         },
     )?);
@@ -278,7 +298,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     println!(
         "kllm serving preset '{preset}' on 127.0.0.1:{port} (JSON lines, backend {backend}: \
-         {how}, kv cache {kv_bits}-bit, prefix cache {})",
+         {how}, kv cache {kv_bits}-bit, prefix cache {}, sched {sched})",
         if prefix_cache { "on" } else { "off" }
     );
     if let Some(c) = &chaos {

@@ -460,6 +460,51 @@ impl SpecBenchRow {
     }
 }
 
+/// One scheduler-bench scenario (`benches/scheduler.rs`), appended to
+/// repo-root BENCH_sched.json as a JSON line. Field notes:
+///   `sched`            engine scheduler (`burst` | `chunked`)
+///   `scenario`         workload shape (`decode-only` | `mixed-flood`)
+///   `prefill_chunk`    configured chunk budget (0 = auto/EWMA)
+///   `lat_count`        inter-token gaps recorded by the engine's
+///                      `decode_lat` histogram (recorded, not inferred)
+///   `p50_s`/`p99_s`    decode inter-token latency percentiles, seconds
+pub struct SchedBenchRow {
+    pub name: String,
+    pub sched: String,
+    pub scenario: String,
+    pub prefill_chunk: usize,
+    pub requests: u64,
+    pub generated_tokens: u64,
+    pub lat_count: u64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl SchedBenchRow {
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"sched\": \"{}\", \"scenario\": \"{}\", \
+             \"prefill_chunk\": {}, \"requests\": {}, \"generated_tokens\": {}, \
+             \"lat_count\": {}, \"p50_s\": {:.9}, \"p99_s\": {:.9}}}",
+            json_escape(&self.name),
+            json_escape(&self.sched),
+            json_escape(&self.scenario),
+            self.prefill_chunk,
+            self.requests,
+            self.generated_tokens,
+            self.lat_count,
+            self.p50_s,
+            self.p99_s
+        )
+    }
+
+    /// Append to the repo-root BENCH_sched.json (JSON lines; created if
+    /// missing). IO failures are reported, never fatal.
+    pub fn append(&self) {
+        append_line(&bench_json_path("BENCH_sched.json"), &self.json_line());
+    }
+}
+
 pub struct Bencher {
     /// measurement window per bench
     pub measure: Duration,

@@ -1,0 +1,549 @@
+//! Scheduler net: the chunked iteration-level scheduler vs the phased
+//! burst loop. Everything runs in the default (featureless) build on the
+//! native datapath (`Manifest::synthetic`, no artifacts).
+//!
+//! What is pinned here:
+//!   * **Parity** — `--sched chunked` produces bit-identical greedy token
+//!     streams to `--sched burst` at every chunk size (1, 7, 16, 64, and
+//!     0 = auto-budget), across native-packed, native-sharded(3), and
+//!     native-spec backends, prefix cache off and on — including a
+//!     prompt longer than one chunk that forks a shared prefix so
+//!     copy-on-write fires while the fork is still mid-chunk.
+//!   * **Liveness/accounting property** — random interleavings of
+//!     submit/step/abort/drain with mixed long/short prompts answer
+//!     every request exactly once, never starve in-flight decodes while
+//!     long prompts chunk through prefill, keep the paged-allocator
+//!     invariants mid-flight, and leak zero KV blocks after drain —
+//!     across both schedulers × `--kv-bits {32,4}` × queue caps.
+//!   * **Regressions** — a deadline expiring *between chunks* answers
+//!     `DeadlineExpired` before any token and reclaims the half-filled
+//!     slot; a `ChaosBackend` fault during a chunk aborts only the
+//!     chunking request while co-resident decodes keep streaming.
+//!
+//! Parity grid note: at `--kv-bits < 32` with the prefix cache *off*,
+//! burst admission runs the dense FP32 prefill while chunked is
+//! necessarily paged (the tail attention reads the quantized cache), so
+//! first-token logits can legitimately differ between the two routes.
+//! The grid therefore exercises quantized KV where both schedulers share
+//! the paged route: prefix cache on (any backend), or native-spec
+//! (whose admission is always paged). At FP32 the paged gathers
+//! reproduce the dense accumulation order, so every route is compared.
+
+use std::collections::HashMap;
+
+use kllm::coordinator::{
+    AdmitPolicy, BackendSpec, ChaosBackend, ChaosCfg, Engine, EngineConfig, FinishReason,
+    NativeCfg, NativeWaqBackend, Request, SchedPolicy, ShardedWaqBackend, SpeculativeBackend,
+};
+use kllm::gemm::WaqBackend;
+use kllm::kvcache::KvBits;
+use kllm::runtime::artifacts::ModelCfg;
+use kllm::runtime::{Manifest, ParamSet};
+use kllm::util::rng::Rng;
+
+fn tiny_cfg(decode_batch: usize) -> ModelCfg {
+    ModelCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        seq_len: 16,
+        batch: 1,
+        decode_batch,
+        head_dim: 16,
+        d_ff: 128,
+        n_linears: 8,
+    }
+}
+
+fn native_backend(cfg: ModelCfg) -> NativeWaqBackend {
+    let manifest = Manifest::synthetic("tiny", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    NativeWaqBackend::new(
+        &manifest,
+        &params,
+        NativeCfg { waq: WaqBackend::Packed, ..NativeCfg::default() },
+    )
+    .expect("native backend build")
+}
+
+fn sharded_backend(cfg: ModelCfg, shards: usize) -> ShardedWaqBackend {
+    let manifest = Manifest::synthetic("tiny", cfg);
+    let params = ParamSet::init(&manifest, &mut Rng::new(42));
+    ShardedWaqBackend::new(&manifest, &params, NativeCfg::default(), shards)
+        .expect("sharded backend build")
+}
+
+/// Residual-damped params (as in `backend_parity.rs`) so the greedy
+/// argmax develops margins and speculative rounds actually accept —
+/// parity must hold at any acceptance rate, damping just makes the
+/// accept/commit paths do real work under chunked scheduling too.
+fn damped_params(manifest: &Manifest, damp: f32) -> ParamSet {
+    let mut params = ParamSet::init(manifest, &mut Rng::new(42));
+    for l in 0..manifest.model.n_layers {
+        for name in [format!("l{l}.attn_out"), format!("l{l}.mlp_down")] {
+            let idx = ParamSet::index_of(manifest, &name).expect("manifest param");
+            let mut m = params.matrix(idx).expect("matrix");
+            for v in m.data.iter_mut() {
+                *v *= damp;
+            }
+            params.set_matrix(idx, &m).expect("set matrix");
+        }
+    }
+    params
+}
+
+fn spec_backend(cfg: ModelCfg, ecfg: &EngineConfig) -> SpeculativeBackend {
+    let manifest = Manifest::synthetic("tiny", cfg);
+    let params = damped_params(&manifest, 0.05);
+    let target = NativeWaqBackend::new(
+        &manifest,
+        &params,
+        NativeCfg { waq: WaqBackend::Packed, ..NativeCfg::default() },
+    )
+    .expect("target");
+    SpeculativeBackend::new(
+        &manifest,
+        &params,
+        Box::new(target),
+        ecfg.mode,
+        ecfg.spec_k,
+        ecfg.draft_wbits,
+    )
+    .expect("speculative backend")
+}
+
+/// Seeded mixed stream: long prompts (several chunks at small budgets)
+/// interleaved with short ones, submitted up front; drained to idle.
+/// Returns `(id, tokens, finish_reason)` sorted by id.
+fn mixed_stream(e: &mut Engine, vocab: usize) -> Vec<(u64, Vec<i32>, FinishReason)> {
+    let mut rng = Rng::new(17);
+    for id in 0..6u64 {
+        let plen = if id % 2 == 0 { 9 + rng.below(4) } else { 1 + rng.below(3) };
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+        e.submit(Request::new(id, prompt, 2 + rng.below(3)));
+    }
+    let mut out = e.run_to_completion().expect("run");
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| (r.id, r.tokens, r.finish_reason)).collect()
+}
+
+/// The paged-allocator invariant block (shared idiom with
+/// `tests/backend_parity.rs`), valid whenever blocks are unaliased
+/// (prefix cache off): no leaks, no double assignment, bounded tables.
+fn check_paged_invariants(e: &Engine) {
+    let kv = e.kv();
+    let c = kv.cache();
+    let cfg = &kv.cfg;
+    let bt = c.block_tokens();
+    let mut seen = std::collections::HashSet::new();
+    let mut listed = 0usize;
+    for slot in 0..cfg.decode_batch {
+        for l in 0..cfg.n_layers {
+            let written = c.written(l, slot);
+            let blocks = c.slot_blocks(l, slot);
+            assert!(written <= cfg.seq_len, "written out of bounds");
+            assert_eq!(
+                blocks.len(),
+                written.div_ceil(bt),
+                "table covers exactly the written positions"
+            );
+            if kv.position(slot).is_none() {
+                assert_eq!(written, 0, "freed slot still has rows");
+            }
+            for &b in blocks {
+                assert!((b as usize) < c.capacity_blocks(), "block id beyond pool");
+                assert!(seen.insert(b), "block {b} assigned twice");
+            }
+            listed += blocks.len();
+        }
+    }
+    assert_eq!(listed, c.in_use_blocks(), "block leak: listed != in-use");
+}
+
+// ---------------------------------------------------------------------------
+// parity: chunked == burst token streams
+// ---------------------------------------------------------------------------
+
+/// Tentpole acceptance: chunked scheduling is bit-exact per request with
+/// the burst loop at every chunk size — including 1 (a long prompt
+/// crosses many steps) and 0 (auto-budget, EWMA-sized) — with the
+/// prefix cache off and on, on the packed native backend at FP32 KV.
+#[test]
+fn chunked_bit_exact_with_burst_across_chunk_sizes_and_prefix() {
+    let cfg = tiny_cfg(3);
+    for prefix_cache in [false, true] {
+        let ecfg = EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            prefix_cache,
+            ..Default::default()
+        };
+        let want = {
+            let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+            mixed_stream(&mut e, cfg.vocab)
+        };
+        for chunk in [1usize, 7, 16, 64, 0] {
+            let ecfg = EngineConfig {
+                sched: SchedPolicy::Chunked,
+                prefill_chunk: chunk,
+                ..ecfg.clone()
+            };
+            let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+            assert_eq!(e.sched(), SchedPolicy::Chunked, "paged backend must not fall back");
+            let got = mixed_stream(&mut e, cfg.vocab);
+            assert_eq!(
+                got, want,
+                "prefix={prefix_cache} chunk={chunk}: chunked diverged from burst"
+            );
+            assert_eq!(e.stats.prefills, 6, "every request must finish its prefill");
+            assert_eq!(e.stats.prefill_failures + e.stats.step_failures, 0);
+            assert_eq!(e.active_count(), 0);
+            assert!(
+                e.stats.decode_lat.count() > 0,
+                "inter-token histogram must record under chunked"
+            );
+            if !prefix_cache {
+                assert_eq!(e.kv().cache().in_use_blocks(), 0, "chunk={chunk} leaked blocks");
+            }
+        }
+    }
+}
+
+/// The same parity bar across the other backends: tensor-parallel
+/// sharded (3 shards) and speculative (draft + stacked verification),
+/// at FP32 and — where burst and chunked share the paged storage route
+/// (see the module doc) — 4-bit KV.
+#[test]
+fn chunked_bit_exact_with_burst_on_sharded_and_spec_backends() {
+    let cfg = tiny_cfg(3);
+    // (backend, kv_bits, prefix_cache, chunk sizes)
+    let sharded_grid: &[(KvBits, bool, &[usize])] = &[
+        (KvBits::Fp32, false, &[1, 16]),
+        (KvBits::Fp32, true, &[7]),
+        (KvBits::B4, true, &[7]),
+    ];
+    for &(kv_bits, prefix_cache, chunks) in sharded_grid {
+        let ecfg = EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            backend: BackendSpec::NativeSharded,
+            shards: 3,
+            kv_bits,
+            prefix_cache,
+            ..Default::default()
+        };
+        let want = {
+            let mut e = Engine::new(Box::new(sharded_backend(cfg, 3)), &ecfg);
+            mixed_stream(&mut e, cfg.vocab)
+        };
+        for &chunk in chunks {
+            let ecfg = EngineConfig {
+                sched: SchedPolicy::Chunked,
+                prefill_chunk: chunk,
+                ..ecfg.clone()
+            };
+            let mut e = Engine::new(Box::new(sharded_backend(cfg, 3)), &ecfg);
+            let got = mixed_stream(&mut e, cfg.vocab);
+            assert_eq!(
+                got, want,
+                "sharded kv={kv_bits} prefix={prefix_cache} chunk={chunk} diverged"
+            );
+            assert!(e.stats.host_shard_crit_s > 0.0, "shard critical path not measured");
+        }
+    }
+    // native-spec admission is always paged, so burst and chunked share
+    // the storage route at every kv-bits — including 4-bit, prefix off
+    let spec_grid: &[(KvBits, bool, &[usize])] = &[
+        (KvBits::Fp32, false, &[1, 16]),
+        (KvBits::Fp32, true, &[7]),
+        (KvBits::B4, false, &[7]),
+    ];
+    for &(kv_bits, prefix_cache, chunks) in spec_grid {
+        let ecfg = EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            backend: BackendSpec::NativeSpec,
+            spec_k: 3,
+            draft_wbits: 2,
+            kv_bits,
+            prefix_cache,
+            ..Default::default()
+        };
+        let want = {
+            let mut e = Engine::new(Box::new(spec_backend(cfg, &ecfg)), &ecfg);
+            mixed_stream(&mut e, cfg.vocab)
+        };
+        for &chunk in chunks {
+            let ecfg = EngineConfig {
+                sched: SchedPolicy::Chunked,
+                prefill_chunk: chunk,
+                ..ecfg.clone()
+            };
+            let mut e = Engine::new(Box::new(spec_backend(cfg, &ecfg)), &ecfg);
+            let got = mixed_stream(&mut e, cfg.vocab);
+            assert_eq!(
+                got, want,
+                "spec kv={kv_bits} prefix={prefix_cache} chunk={chunk} diverged"
+            );
+            assert!(e.stats.spec_rounds > 0, "no speculative rounds ran under chunked");
+        }
+    }
+}
+
+/// A prompt longer than one chunk forks a shared prefix mid-chunk: A's
+/// 12-token prompt is indexed, then B reuses its first 8 tokens and
+/// diverges — B's first uncached append lands in the *aliased* block, so
+/// copy-on-write fires while B still has chunks left to prefill. The
+/// fork's token stream must match burst's exactly, at FP32 and 4-bit KV.
+#[test]
+fn chunked_cow_fork_mid_chunk_matches_burst() {
+    let cfg = tiny_cfg(2);
+    let shared: Vec<i32> = (0..12).map(|t| 5 + t).collect();
+    let forked: Vec<i32> =
+        shared[..8].iter().copied().chain([60, 61, 62, 63]).collect();
+    for kv_bits in [KvBits::Fp32, KvBits::B4] {
+        let run = |sched: SchedPolicy, chunk: usize| {
+            let ecfg = EngineConfig {
+                policy: AdmitPolicy::FillAll,
+                prefix_cache: true,
+                kv_bits,
+                sched,
+                prefill_chunk: chunk,
+                ..Default::default()
+            };
+            let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+            // phase 1: index the shared prompt
+            e.submit(Request::new(0, shared.clone(), 3));
+            let mut out = e.run_to_completion().expect("phase 1");
+            // phase 2: the fork, plus a short co-resident decode
+            e.submit(Request::new(1, forked.clone(), 3));
+            e.submit(Request::new(2, vec![7, 9], 3));
+            out.extend(e.run_to_completion().expect("phase 2"));
+            out.sort_by_key(|r| r.id);
+            let hits = e.stats.prefix_hits;
+            let reused = e.stats.prefix_blocks_reused;
+            (
+                out.into_iter().map(|r| (r.id, r.tokens, r.finish_reason)).collect::<Vec<_>>(),
+                hits,
+                reused,
+            )
+        };
+        let (want, want_hits, _) = run(SchedPolicy::Burst, 0);
+        for chunk in [2usize, 3] {
+            let (got, hits, reused) = run(SchedPolicy::Chunked, chunk);
+            assert_eq!(got, want, "kv={kv_bits} chunk={chunk}: COW fork diverged");
+            assert_eq!(hits, want_hits, "prefix index must serve the fork identically");
+            assert!(hits >= 1, "the fork never hit the prefix index");
+            assert!(reused >= 1, "no aliased blocks — COW was never armed");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// liveness / accounting property
+// ---------------------------------------------------------------------------
+
+/// Random interleavings of submit / step / abort_all / drain, mixed
+/// long/short prompts (long ones span several chunks at budget 2), a
+/// sprinkle of already-expired deadlines, across both schedulers ×
+/// {FP32, 4-bit} KV × queue caps {unbounded, 2}:
+///   * every submitted request is answered exactly once (step results,
+///     immediate rejections, and abort responses combined);
+///   * whenever decoding slots exist before a step, that step generates
+///     tokens — long prefills cannot starve in-flight decodes;
+///   * the paged-allocator invariants hold after every step;
+///   * after the final drain the block pool is empty.
+#[test]
+fn prop_random_interleavings_exactly_once_no_starvation_no_leaks() {
+    let cfg = tiny_cfg(3);
+    for sched in [SchedPolicy::Burst, SchedPolicy::Chunked] {
+        for kv_bits in [KvBits::Fp32, KvBits::B4] {
+            for queue_cap in [0usize, 2] {
+                for seed in 0..3u64 {
+                    let label = format!(
+                        "sched={sched} kv={kv_bits} cap={queue_cap} seed={seed}"
+                    );
+                    let ecfg = EngineConfig {
+                        policy: AdmitPolicy::FillAll,
+                        kv_bits,
+                        queue_cap,
+                        sched,
+                        prefill_chunk: 2,
+                        ..Default::default()
+                    };
+                    let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+                    let mut rng = Rng::new(0xA11CE ^ seed);
+                    let mut answered: HashMap<u64, u32> = HashMap::new();
+                    let record = |answered: &mut HashMap<u64, u32>, id: u64| {
+                        *answered.entry(id).or_insert(0) += 1;
+                    };
+                    let mut next_id = 0u64;
+                    for _ in 0..40 {
+                        match rng.below(8) {
+                            0..=3 => {
+                                let plen = if rng.below(3) == 0 {
+                                    9 + rng.below(4)
+                                } else {
+                                    1 + rng.below(3)
+                                };
+                                let prompt: Vec<i32> =
+                                    (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+                                let mut r =
+                                    Request::new(next_id, prompt, 1 + rng.below(3));
+                                if rng.below(10) == 0 {
+                                    r = r.with_deadline_ms(0);
+                                }
+                                next_id += 1;
+                                if let Some(resp) = e.try_submit(r) {
+                                    assert_eq!(resp.finish_reason, FinishReason::Rejected);
+                                    record(&mut answered, resp.id);
+                                }
+                            }
+                            4..=6 => {
+                                let decoding =
+                                    e.active_count().saturating_sub(e.prefilling_count());
+                                let before = e.stats.generated_tokens;
+                                for resp in e.step().expect("step") {
+                                    record(&mut answered, resp.id);
+                                }
+                                if decoding > 0 {
+                                    assert!(
+                                        e.stats.generated_tokens > before,
+                                        "{label}: decodes starved by prefill work"
+                                    );
+                                }
+                                check_paged_invariants(&e);
+                            }
+                            _ => {
+                                for resp in e.abort_all() {
+                                    record(&mut answered, resp.id);
+                                }
+                                assert_eq!(e.active_count(), 0, "{label}: abort left slots");
+                                check_paged_invariants(&e);
+                            }
+                        }
+                    }
+                    for resp in e.run_to_completion().expect("drain") {
+                        record(&mut answered, resp.id);
+                    }
+                    assert_eq!(
+                        answered.len() as u64,
+                        next_id,
+                        "{label}: {} of {next_id} requests answered",
+                        answered.len()
+                    );
+                    for (id, n) in &answered {
+                        assert_eq!(*n, 1, "{label}: request {id} answered {n} times");
+                    }
+                    assert_eq!(
+                        e.kv().cache().in_use_blocks(),
+                        0,
+                        "{label}: KV blocks leaked after drain"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// regressions: deadlines between chunks, chaos mid-chunk
+// ---------------------------------------------------------------------------
+
+/// A deadline that expires *between chunks* (mid-prefill, before any
+/// token was sampled) must answer `DeadlineExpired` with an empty
+/// stream and reclaim the partially-filled KV slot — on the real native
+/// datapath, not just the scripted engine fixture.
+#[test]
+fn chunked_deadline_expires_between_chunks_reclaims_slot() {
+    let cfg = tiny_cfg(2);
+    let ecfg = EngineConfig {
+        sched: SchedPolicy::Chunked,
+        prefill_chunk: 1,
+        ..Default::default()
+    };
+    let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+    let prompt: Vec<i32> = (0..10).map(|t| 20 + t).collect();
+    e.submit(Request::new(0, prompt, 4).with_deadline_ms(40));
+    let first = e.step().expect("first chunk");
+    assert!(first.is_empty(), "one 1-row chunk cannot finish a 10-token prefill");
+    assert_eq!(e.prefilling_count(), 1, "request must be parked mid-prefill");
+    std::thread::sleep(std::time::Duration::from_millis(60));
+    let done = e.step().expect("sweep step");
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish_reason, FinishReason::DeadlineExpired);
+    assert!(done[0].tokens.is_empty(), "expired before the first token");
+    assert_eq!(e.stats.expired, 1);
+    assert_eq!(e.stats.prefills, 0, "prefill never completed");
+    assert_eq!(e.active_count(), 0);
+    assert_eq!(e.prefilling_count(), 0);
+    assert_eq!(e.kv().cache().in_use_blocks(), 0, "half-filled slot not reclaimed");
+    // the engine keeps serving afterwards
+    e.submit(Request::new(1, vec![3, 4], 2));
+    let rest = e.run_to_completion().expect("post-expiry service");
+    assert_eq!(rest.len(), 1);
+    assert!(rest[0].finish_reason.is_natural(), "{:?}", rest[0].finish_reason);
+}
+
+/// A `ChaosBackend` fault landing on a chunk aborts only the chunking
+/// request: the co-resident decode keeps streaming and completes
+/// naturally, and the engine serves new work afterwards.
+///
+/// Draw arithmetic (contractual, see `chaos.rs`): the trait-default
+/// `schedule` draws once per step with chunks (`prefill_paged`) and
+/// three times per step with active decodes; skipped phases draw
+/// nothing. Step 1 is chunk-only (draw #1 must pass), step 2 is B's
+/// chunk (draw #2 must fault) plus A's decode (draws #3–5, rates 0).
+/// The seed is searched, not hard-coded, so the test documents its own
+/// requirement on the fault pattern.
+#[test]
+fn chaos_chunk_fault_aborts_only_the_chunking_request() {
+    let cfg = tiny_cfg(2);
+    let seed = (0u64..)
+        .find(|&s| {
+            let mut r = Rng::new(s);
+            let pass = r.f64();
+            let fault = r.f64();
+            pass >= 0.5 && fault < 0.5
+        })
+        .expect("some seed passes then faults");
+    let mut ccfg = ChaosCfg::uniform(seed, 0.0);
+    ccfg.prefill_err_rate = 0.5;
+    ccfg.fault_budget = 1; // exactly one hard error, then healthy
+    let chaos = ChaosBackend::new(Box::new(native_backend(cfg)), ccfg);
+    let counters = chaos.counters();
+    let ecfg = EngineConfig {
+        sched: SchedPolicy::Chunked,
+        prefill_chunk: 16,
+        ..Default::default()
+    };
+    let mut e = Engine::new(Box::new(chaos), &ecfg);
+
+    e.submit(Request::new(0, vec![1, 2, 3], 4));
+    let s1 = e.step().expect("step 1: A's chunk passes");
+    assert!(s1.is_empty());
+    assert_eq!(e.active_count(), 1, "A promoted to decode");
+    assert_eq!(e.prefilling_count(), 0);
+
+    e.submit(Request::new(1, vec![4, 5, 6], 4));
+    let s2 = e.step().expect("step 2: B's chunk faults, A decodes");
+    assert_eq!(s2.len(), 1, "exactly the chunking request is answered");
+    assert_eq!(s2[0].id, 1);
+    assert_eq!(s2[0].finish_reason, FinishReason::Aborted);
+    assert!(s2[0].tokens.is_empty());
+    assert_eq!(counters.prefill_errs(), 1, "the injected fault must have landed");
+    assert_eq!(e.stats.prefill_failures, 1);
+    assert_eq!(e.active_count(), 1, "A survives B's chunk fault");
+
+    let rest = e.run_to_completion().expect("A drains");
+    assert_eq!(rest.len(), 1);
+    assert_eq!(rest[0].id, 0);
+    assert_eq!(rest[0].tokens.len(), 4, "A's stream is unharmed");
+    assert!(rest[0].finish_reason.is_natural());
+    assert_eq!(e.stats.step_failures, 0, "the decode path never faulted");
+    assert_eq!(e.kv().cache().in_use_blocks(), 0);
+
+    // fault budget spent: the engine serves new requests cleanly
+    e.submit(Request::new(2, vec![9, 8, 7], 3));
+    let post = e.run_to_completion().expect("post-fault service");
+    assert_eq!(post.len(), 1);
+    assert!(post[0].finish_reason.is_natural());
+}
