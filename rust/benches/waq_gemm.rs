@@ -4,6 +4,12 @@
 //! blocked f32 SGEMM baseline, and the compiled Pallas artifact through
 //! PJRT (when built with `--features pjrt` and artifacts exist).
 //!
+//! Also sweeps the any-bit datapath: per-width packed-kernel rows tagged
+//! `wbits`/`group_size`, plus the bit-planner tripwire — the `--wbits
+//! auto` plan at budget 3.0, solved on *measured* per-linear output MSE,
+//! must never be less accurate than uniform 3-bit at the same average
+//! width (the bench fails the job when it is).
+//!
 //! Results append to BENCH_waq_gemm.json at the repo root (JSON lines) so
 //! the perf trajectory is tracked across PRs.
 
@@ -11,10 +17,30 @@ use kllm::gemm::{self, CartesianLut, TileCfg, WaqBackend, WaqGemm};
 use kllm::quant::{self, OutlierCfg, QuantToken, QuantWeights};
 use kllm::runtime::{artifacts_dir, pjrt_available, HostTensor, Runtime};
 use kllm::tensor::Matrix;
-use kllm::util::bench::{black_box, fast_mode, Bencher};
+use kllm::util::bench::{bench_json_path, black_box, fast_mode, BenchResult, Bencher};
 use kllm::util::rng::Rng;
 
 const JSON: &str = "BENCH_waq_gemm.json";
+
+/// Output-MSE of `calib @ dequant(quantize(w, b))` against `calib @ w`
+/// for b in {2,3,4} — the same sensitivity currency the serving-side
+/// `--wbits auto` planner measures during calibration.
+fn width_mse(w: &Matrix, calib: &Matrix, group: usize) -> [f64; 3] {
+    let want = calib.matmul(w);
+    let mut out = [0f64; 3];
+    for (slot, bits) in [2u32, 3, 4].into_iter().enumerate() {
+        let deq = quant::quantize_weights_grouped(w, None, bits, group).dequantize();
+        let got = calib.matmul(&deq);
+        let err: f64 = want
+            .data
+            .iter()
+            .zip(&got.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        out[slot] = err / want.data.len() as f64;
+    }
+    out
+}
 
 fn main() -> anyhow::Result<()> {
     let (k, n) = if fast_mode() { (256, 256) } else { (1024, 1024) };
@@ -79,6 +105,73 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // any-bit mixed precision: the one packed kernel at every weight
+    // width × scale grid; rows are tagged `wbits`/`group_size` so the
+    // trajectory separates the axes instead of overloading `name`
+    println!("== any-bit packed kernel (K={k}, N={n}) ==");
+    let json_path = bench_json_path(JSON);
+    for wbits in [2u32, 3, 4] {
+        for group in [0usize, 128] {
+            let qwg = quant::quantize_weights_grouped(&w, None, wbits, group);
+            let lutg = CartesianLut::build(&cb_a, &qwg.codebook);
+            let pwg = qwg.pack();
+            let bt = Bencher::quick().throughput((k * n) as u64);
+            let mut r = bt.run(&format!("packed W{wbits} group={group}"), || {
+                black_box(gemm::execute_packed(&tok, &pwg, &lutg));
+            });
+            r.extra = vec![
+                ("wbits".into(), wbits.to_string()),
+                ("group_size".into(), group.to_string()),
+            ];
+            r.append_json(&json_path);
+        }
+    }
+
+    // bit-planner tripwire: measure the sensitivity of a 4-linear stack
+    // with spread weight scales (spread sensitivities), solve the auto
+    // plan at budget 3.0, and require (a) the parameter-weighted average
+    // width stays inside the budget and (b) the plan's total measured
+    // error never exceeds uniform 3-bit — the accuracy bar `--wbits auto`
+    // ships under. The planner guards this by construction; the tripwire
+    // keeps the guard from regressing.
+    let (pk, pn) = if fast_mode() { (64, 32) } else { (256, 64) };
+    let calib_m = Matrix::random_normal(8, pk, 1.0, &mut rng);
+    let mut mse: Vec<[f64; 3]> = Vec::new();
+    let mut sizes: Vec<usize> = Vec::new();
+    for scale in [0.1f32, 0.5, 1.0, 3.0] {
+        let lw = Matrix::random_normal(pk, pn, scale, &mut rng);
+        mse.push(width_mse(&lw, &calib_m, 128));
+        sizes.push(pk * pn);
+    }
+    let plan = quant::plan_bits(&mse, &sizes, 3.0);
+    let plan_score =
+        |p: &[u32]| -> f64 { p.iter().zip(&mse).map(|(&b, m)| m[b as usize - 2]).sum() };
+    let auto_err = plan_score(&plan);
+    let uni3_err = plan_score(&vec![3u32; mse.len()]);
+    let avg_bits = plan.iter().map(|&b| b as f64).sum::<f64>() / plan.len() as f64;
+    println!(
+        "-- wbits auto plan {plan:?} (avg {avg_bits:.2} bits): \
+         err {auto_err:.3e} vs uniform-3 {uni3_err:.3e}"
+    );
+    let mut row = BenchResult { name: "wbits auto plan (budget 3.0)".into(), ..Default::default() };
+    let plan_str = plan.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",");
+    row.extra = vec![
+        ("wbits_plan".into(), format!("[{plan_str}]")),
+        ("wbits_avg".into(), format!("{avg_bits:.4}")),
+        ("auto_err".into(), format!("{auto_err:.6e}")),
+        ("uniform3_err".into(), format!("{uni3_err:.6e}")),
+    ];
+    row.append_json(&json_path);
+    anyhow::ensure!(
+        avg_bits <= 3.0 + 1e-9,
+        "auto plan {plan:?} busts the 3.0 average-bits budget"
+    );
+    anyhow::ensure!(
+        auto_err <= uni3_err + 1e-12,
+        "auto plan (err {auto_err:.3e}) lost to uniform 3-bit ({uni3_err:.3e}) \
+         at equal average bits"
+    );
+
     // the dispatch layer all serving paths go through
     for backend in WaqBackend::ALL {
         let g = WaqGemm::new(qw.clone(), lut.clone(), backend);
@@ -130,6 +223,8 @@ fn main() -> anyhow::Result<()> {
             idx: inputs[1].as_i32().unwrap().iter().map(|&v| v as u8).collect(),
             codebook: qw.codebook.clone(),
             col_scales: vec![1.0; nn],
+            group_size: 0,
+            group_scales: vec![],
         };
         let tok_small = quant::QuantToken {
             idx: inputs[0].as_i32().unwrap()[..kk].iter().map(|&v| v as u8).collect(),

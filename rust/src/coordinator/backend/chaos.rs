@@ -233,6 +233,12 @@ impl DecodeBackend for ChaosBackend {
         self.inner.kv_quantizer(bits)
     }
 
+    fn wbits_plan(&self) -> Option<Vec<u32>> {
+        // chaos is a serving seam, not a datapath change: report the
+        // wrapped backend's per-layer bit assignment untouched
+        self.inner.wbits_plan()
+    }
+
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
         let roll = self.rng.f64();
         if roll < self.cfg.prefill_err_rate && self.take_fault() {

@@ -33,8 +33,9 @@
 //!     persistent worker pool; bit-exact with `NativeWaqBackend` at any
 //!     shard count (`--backend native-sharded --shards N`).
 //!
-//!   * [`SpeculativeBackend`] — speculative decoding: a 2-bit crumb-packed
-//!     draft twin of the same manifest proposes up to `--spec-k` tokens
+//!   * [`SpeculativeBackend`] — speculative decoding: a low-bit packed
+//!     draft twin of the same manifest (`--draft-wbits {2,3,4}`, 2 by
+//!     default) proposes up to `--spec-k` tokens
 //!     per round against a private KV cache, the target scores every
 //!     proposal in one stacked [`DecodeBackend::verify_paged`] pass per
 //!     layer, and greedy acceptance keeps the longest matching prefix —
@@ -55,7 +56,7 @@ mod sharded;
 mod speculative;
 
 pub use chaos::{ChaosBackend, ChaosCfg, ChaosCounters};
-pub use native::{NativeCfg, NativeWaqBackend};
+pub use native::{NativeCfg, NativeWaqBackend, WbitsSpec};
 pub use pjrt::PjrtBackend;
 pub use sharded::ShardedWaqBackend;
 pub use speculative::SpeculativeBackend;
@@ -86,7 +87,7 @@ pub enum BackendSpec {
     /// GEMM split into `EngineConfig::shards` column shards executed on a
     /// persistent worker pool — bit-exact with `Native(Packed)`.
     NativeSharded,
-    /// Speculative decoding: a low-bit crumb-packed draft proposes, the
+    /// Speculative decoding: a low-bit packed draft proposes, the
     /// native packed target verifies in one stacked pass — bit-exact with
     /// `Native(Packed)` under greedy sampling (`--spec-k`, `--draft-wbits`).
     NativeSpec,
@@ -105,7 +106,7 @@ impl BackendSpec {
             BackendSpec::Pjrt(b) | BackendSpec::Native(b) => *b,
             // shards stream nibble-packed column slices of the packed form
             BackendSpec::NativeSharded => WaqBackend::Packed,
-            // target runs packed; the draft's crumb form rides underneath
+            // target runs packed; the draft's denser stream rides underneath
             BackendSpec::NativeSpec => WaqBackend::Packed,
         }
     }
@@ -410,6 +411,16 @@ pub trait DecodeBackend {
             "backend {} does not implement stacked verification",
             self.spec().name()
         ))
+    }
+
+    /// The per-linear weight bit plan this backend serves (layer-major,
+    /// four linears per layer: qkv, attn_out, mlp_up, mlp_down), when it
+    /// quantizes weights at all. `--wbits auto` surfaces the planner's
+    /// choice here (and `EngineStats::to_json` reports it); uniform
+    /// configurations report the flat plan. Default: `None` (the PJRT
+    /// path serves compiled artifacts, not live-quantized weights).
+    fn wbits_plan(&self) -> Option<Vec<u32>> {
+        None
     }
 
     /// Drain the speculative rounds of the latest `decode` call, if this

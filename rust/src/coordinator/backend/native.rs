@@ -5,12 +5,16 @@
 //!   1. a short full-precision calibration forward over seeded random
 //!      tokens records the pre-GEMM activations of every linear (the
 //!      offline calibration the paper's scheme assumes);
-//!   2. each linear gets a K-Means weight quantization
-//!      (`quant::quantize_weights`), an activation codebook learned from
-//!      its calibration rows (`quant::learn_act_codebook`), and the
-//!      Cartesian-product LUT of both codebooks;
+//!   2. each linear gets a K-Means weight quantization at its planned
+//!      bit-width (`quant::quantize_weights_grouped`: uniform `--wbits`,
+//!      or the calibration-driven per-linear plan of `--wbits auto`, with
+//!      FineQuant-style per-group scales along the reduction dimension),
+//!      an activation codebook learned from its calibration rows
+//!      (`quant::learn_act_codebook`), and the Cartesian-product LUT of
+//!      both codebooks;
 //!   3. weights are stored in the form the configured [`WaqBackend`]
-//!      streams (nibble-packed for `Packed`).
+//!      streams (a 2/3/4-bit [`crate::quant::PackedStream`] form for
+//!      `Packed` — the density follows the codebook width).
 //!
 //! Serving then runs every linear through the dual-branch WAQ LUT-GEMM:
 //! online per-token quantization with Orizuru outlier detection
@@ -58,12 +62,30 @@ use crate::sim::OasisMode;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
+/// Weight bit-width policy of the quantized linears (`--wbits`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WbitsSpec {
+    /// One codebook width for every linear (`--wbits 2|3|4`).
+    Uniform(u32),
+    /// Calibration-driven per-linear plan (`--wbits auto`): construction
+    /// records each linear's output MSE under 2/3/4-bit codebooks on its
+    /// calibration rows, then `quant::plan_bits` spends an average-bits
+    /// budget (`--wbits-budget`) greedily where the sensitivity is.
+    Auto { budget: f64 },
+}
+
 /// Quantization configuration of the native backend.
 #[derive(Clone, Copy, Debug)]
 pub struct NativeCfg {
     /// Which software WAQ GEMM kernel executes the main branch.
     pub waq: WaqBackend,
-    pub w_bits: u32,
+    /// Weight bit-width policy: uniform, or planned per linear.
+    pub wbits: WbitsSpec,
+    /// Reduction-dimension rows sharing one weight scale (FineQuant-style
+    /// per-group scales; must be a multiple of 4, `0` = one scale per
+    /// column). Matrices shorter than the group size get a single group,
+    /// which is numerically identical to the ungrouped path.
+    pub w_group: usize,
     pub a_bits: u32,
     pub outlier: OutlierCfg,
     /// Modeled-clock schedule: look-ahead OASIS (true) vs critical-path
@@ -79,7 +101,8 @@ impl Default for NativeCfg {
     fn default() -> Self {
         NativeCfg {
             waq: WaqBackend::default(),
-            w_bits: 4,
+            wbits: WbitsSpec::Uniform(4),
+            w_group: 128,
             a_bits: 4,
             outlier: OutlierCfg::default(),
             lookahead: true,
@@ -119,10 +142,10 @@ struct QuantLinear {
 }
 
 impl QuantLinear {
-    fn build(w: &Matrix, calib: &[Vec<f32>], cfg: &NativeCfg) -> QuantLinear {
+    fn build(w: &Matrix, calib: &[Vec<f32>], cfg: &NativeCfg, w_bits: u32) -> QuantLinear {
         let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
         let cb = quant::learn_act_codebook(&refs, None, cfg.a_bits, cfg.outlier);
-        let qw = quant::quantize_weights(w, cfg.w_bits);
+        let qw = quant::quantize_weights_grouped(w, None, w_bits, cfg.w_group);
         let lut = CartesianLut::build(&cb, &qw.codebook);
         QuantLinear {
             k_per_side: cfg.outlier.k_per_side(w.rows),
@@ -133,20 +156,17 @@ impl QuantLinear {
 
     /// Split the GEMM into `shards` column shards executed on `pool`
     /// (`ShardedWaqBackend` construction). Requires the packed kernel —
-    /// the shards stream nibble-packed column slices.
+    /// the shards stream column slices of the packed form at whatever
+    /// stream width (2/3/4-bit) the linear's plan chose.
     fn shard(&mut self, shards: usize, pool: &Arc<ShardPool>) -> Result<()> {
         let GemmExec::Mono(gemm) = &self.exec else {
             bail!("linear is already sharded");
         };
-        let sharded = if let Some(pw) = gemm.packed_weights() {
-            ShardedWaqGemm::from_packed(pw, &gemm.lut, shards, pool.clone())
-        } else if let Some(cw) = gemm.crumb_weights() {
-            // the 2-bit draft regime: shards stream crumb-packed slices
-            ShardedWaqGemm::from_crumbs(cw, &gemm.lut, shards, pool.clone())
-        } else {
+        let Some(pw) = gemm.packed_weights() else {
             bail!("sharding requires the packed WAQ kernel");
-        }
-        .map_err(anyhow::Error::msg)?;
+        };
+        let sharded = ShardedWaqGemm::from_packed(pw, &gemm.lut, shards, pool.clone())
+            .map_err(anyhow::Error::msg)?;
         self.exec = GemmExec::Sharded(sharded);
         Ok(())
     }
@@ -219,6 +239,10 @@ pub struct NativeWaqBackend {
     kv_outlier_frac: f64,
     /// Total outlier channels routed through the compensation branch.
     outliers_seen: Arc<AtomicU64>,
+    /// Per-linear weight bit-widths actually served (layer-major: qkv,
+    /// attn_out, mlp_up, mlp_down) — the flat plan under uniform
+    /// `--wbits`, the calibration-driven plan under `--wbits auto`.
+    bit_plan: Vec<u32>,
 }
 
 impl NativeWaqBackend {
@@ -300,15 +324,63 @@ impl NativeWaqBackend {
             taps.push([mat_rows(&xn), mat_rows(&att), mat_rows(&xn2), mat_rows(&hmid)]);
         }
 
+        // --- per-linear bit plan (layer-major: qkv, attn_out, mlp_up,
+        // mlp_down) -------------------------------------------------------
+        let bit_plan: Vec<u32> = match cfg.wbits {
+            WbitsSpec::Uniform(b) => {
+                if !(2..=4).contains(&b) {
+                    bail!("--wbits must be 2, 3, 4, or auto (got {b})");
+                }
+                vec![b; 4 * m.n_layers]
+            }
+            WbitsSpec::Auto { budget } => {
+                if !(2.0..=4.0).contains(&budget) {
+                    bail!("--wbits-budget must lie in [2, 4] (got {budget})");
+                }
+                if let Some(plan) = &manifest.wbits_plan {
+                    // a manifest that already carries a plan pins it:
+                    // re-serving reproduces the exact mixed-precision
+                    // assignment without re-running sensitivity planning
+                    if plan.len() != 4 * m.n_layers {
+                        bail!(
+                            "manifest wbits_plan has {} entries, model needs {}",
+                            plan.len(),
+                            4 * m.n_layers
+                        );
+                    }
+                    plan.clone()
+                } else {
+                    // sensitivity table: each linear's output MSE on its
+                    // own calibration rows under 2/3/4-bit codebooks
+                    let mut mse = Vec::with_capacity(4 * m.n_layers);
+                    let mut sizes = Vec::with_capacity(4 * m.n_layers);
+                    for (fl, t) in fp_layers.iter().zip(&taps) {
+                        let lins = [
+                            (&fl.qkv, &t[0]),
+                            (&fl.attn_out, &t[1]),
+                            (&fl.mlp_up, &t[2]),
+                            (&fl.mlp_down, &t[3]),
+                        ];
+                        for (w, rows) in lins {
+                            mse.push(linear_sensitivity(w, rows, cfg.w_group));
+                            sizes.push(w.rows * w.cols);
+                        }
+                    }
+                    quant::plan_bits(&mse, &sizes, budget)
+                }
+            }
+        };
+
         // --- quantize every linear against its calibration rows ---------
         let layers: Vec<Layer> = fp_layers
             .into_iter()
             .zip(&taps)
-            .map(|(fl, t)| Layer {
-                qkv: QuantLinear::build(&fl.qkv, &t[0], &cfg),
-                attn_out: QuantLinear::build(&fl.attn_out, &t[1], &cfg),
-                mlp_up: QuantLinear::build(&fl.mlp_up, &t[2], &cfg),
-                mlp_down: QuantLinear::build(&fl.mlp_down, &t[3], &cfg),
+            .enumerate()
+            .map(|(l, (fl, t))| Layer {
+                qkv: QuantLinear::build(&fl.qkv, &t[0], &cfg, bit_plan[4 * l]),
+                attn_out: QuantLinear::build(&fl.attn_out, &t[1], &cfg, bit_plan[4 * l + 1]),
+                mlp_up: QuantLinear::build(&fl.mlp_up, &t[2], &cfg, bit_plan[4 * l + 2]),
+                mlp_down: QuantLinear::build(&fl.mlp_down, &t[3], &cfg, bit_plan[4 * l + 3]),
                 ln1: fl.ln1,
                 ln2: fl.ln2,
             })
@@ -331,6 +403,7 @@ impl NativeWaqBackend {
             kv_calib_v,
             kv_outlier_frac: cfg.outlier.total_frac,
             outliers_seen: Arc::new(AtomicU64::new(0)),
+            bit_plan,
         })
     }
 
@@ -389,6 +462,10 @@ impl DecodeBackend for NativeWaqBackend {
 
     fn model(&self) -> ModelCfg {
         self.model
+    }
+
+    fn wbits_plan(&self) -> Option<Vec<u32>> {
+        Some(self.bit_plan.clone())
     }
 
     /// Per-layer/per-head cache codebooks learned from the same FP
@@ -926,6 +1003,32 @@ impl DecodeBackend for NativeWaqBackend {
 // ---------------------------------------------------------------------------
 // FP32 building blocks shared by calibration, prefill, and decode
 // ---------------------------------------------------------------------------
+
+/// Output-MSE sensitivity of one linear under 2/3/4-bit K-Means
+/// codebooks, measured on its calibration rows: `out[b - 2]` is the mean
+/// squared error of `x @ dequant(quantize(W, b))` against `x @ W` over
+/// all calibration rows and output channels. This is the planner's
+/// currency — it captures how much *output* damage a width does to THIS
+/// linear on the activations it actually sees, not just weight distortion.
+fn linear_sensitivity(w: &Matrix, calib: &[Vec<f32>], group: usize) -> [f64; 3] {
+    let mut out = [0f64; 3];
+    let mut y = vec![0f32; w.cols];
+    for (slot, bits) in [2u32, 3, 4].into_iter().enumerate() {
+        let deq = quant::quantize_weights_grouped(w, None, bits, group).dequantize();
+        let mut err = 0f64;
+        for x in calib {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            for (k, &xv) in x.iter().enumerate() {
+                for ((o, &wv), &dv) in y.iter_mut().zip(w.row(k)).zip(deq.row(k)) {
+                    *o += xv * (wv - dv);
+                }
+            }
+            err += y.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        }
+        out[slot] = err / (calib.len().max(1) * w.cols) as f64;
+    }
+    out
+}
 
 /// Positional parameter lookup with shape validation.
 fn param<'a>(

@@ -107,6 +107,13 @@ impl DecodeBackend for ShardedWaqBackend {
         self.inner.kv_quantizer(bits)
     }
 
+    /// The inner datapath's plan — `slice_cols` preserves each linear's
+    /// stream width, so the sharded backend serves the same per-layer
+    /// bit assignment as unsharded `native-packed`.
+    fn wbits_plan(&self) -> Option<Vec<u32>> {
+        self.inner.wbits_plan()
+    }
+
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
         self.inner.prefill(prompt)
     }

@@ -1,18 +1,21 @@
-//! Speculative decoding: a 2-bit crumb-packed draft proposes, the packed
-//! target verifies — bit-exact with the target alone under greedy
-//! sampling (`--backend native-spec`).
+//! Speculative decoding: a low-bit packed draft proposes (2-bit by
+//! default), the packed target verifies — bit-exact with the target
+//! alone under greedy sampling (`--backend native-spec`).
 //!
 //! The composite owns two models quantized from the SAME manifest and
 //! parameter set:
 //!
 //!   * **draft** — a [`NativeWaqBackend`] re-quantized at
-//!     `--draft-wbits` (2 by default). A 4-entry codebook stores its
-//!     weights in the crumb form (`quant::CrumbWeights`, four reduction
-//!     rows per byte), so each draft decode streams *half* the weight
-//!     bytes of the target's nibble-packed pass — that bandwidth gap is
-//!     the whole speedup budget. The draft keeps a private FP32
-//!     [`KvManager`] (no prefix index) so its rollbacks never touch the
-//!     engine's shared paged cache.
+//!     `--draft-wbits` (2 by default, any of {2,3,4}). The unified
+//!     [`crate::quant::PackedStream`] form picks its density from the
+//!     codebook width — a 4-entry codebook streams four reduction rows
+//!     per byte, so the default 2-bit draft moves *half* the weight
+//!     bytes of the target's 4-bit pass; that bandwidth gap is the whole
+//!     speedup budget (a 4-bit draft streams the same bytes as the
+//!     target and only wins when its proposals are nearly free to
+//!     verify). The draft keeps a private FP32 [`KvManager`] (no prefix
+//!     index) so its rollbacks never touch the engine's shared paged
+//!     cache.
 //!   * **target** — any paged-capable [`DecodeBackend`] (`native-packed`
 //!     or `native-sharded`); its logits define correctness.
 //!
@@ -53,7 +56,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{
     BackendSpec, DecodeBackend, NativeCfg, PagedPrefill, PagedPrefillOut, PrefillOut, SpecRound,
-    StepCost, VerifyRun,
+    StepCost, VerifyRun, WbitsSpec,
 };
 use crate::coordinator::engine::greedy_argmax;
 use crate::coordinator::kv::KvManager;
@@ -80,7 +83,8 @@ pub struct SpeculativeBackend {
 
 impl SpeculativeBackend {
     /// Compose a speculative backend: quantize a draft twin of
-    /// `manifest`/`params` at `draft_wbits` (crumb-packed at 2 bits) and
+    /// `manifest`/`params` at `draft_wbits` (any of {2,3,4}; the packed
+    /// stream density follows the codebook width) and
     /// pair it with `target`, which must serve the same model config and
     /// support paged prefill (the composite's rollback is
     /// `KvManager::truncate`, a paged-cache operation).
@@ -95,8 +99,8 @@ impl SpeculativeBackend {
         if spec_k == 0 {
             bail!("invalid --spec-k 0: speculative decoding needs >= 1 draft token");
         }
-        if !matches!(draft_wbits, 2 | 3) {
-            bail!("invalid --draft-wbits {draft_wbits}: the draft serves 2 or 3 bits");
+        if !matches!(draft_wbits, 2 | 3 | 4) {
+            bail!("invalid --draft-wbits {draft_wbits}: the draft serves 2, 3, or 4 bits");
         }
         if !target.supports_paged_prefill() {
             bail!(
@@ -110,7 +114,7 @@ impl SpeculativeBackend {
             bail!("speculative draft and target must serve the same model config");
         }
         let cfg = NativeCfg {
-            w_bits: draft_wbits,
+            wbits: WbitsSpec::Uniform(draft_wbits),
             ..NativeCfg::from_mode(WaqBackend::Packed, mode)
         };
         let draft = NativeWaqBackend::new(manifest, params, cfg)?;
@@ -129,7 +133,7 @@ impl SpeculativeBackend {
         self.spec_k
     }
 
-    /// Draft weight bit-width (2 = crumb-packed).
+    /// Draft weight bit-width (2/3/4; 2 streams the densest form).
     pub fn draft_wbits(&self) -> u32 {
         self.draft_wbits
     }
@@ -162,6 +166,12 @@ impl DecodeBackend for SpeculativeBackend {
     /// paged cache stores the *target's* K/V, the draft cache is FP32.
     fn kv_quantizer(&self, bits: u32) -> KvQuantizer {
         self.target.kv_quantizer(bits)
+    }
+
+    /// The *target's* plan — its logits define the served model; the
+    /// draft's uniform `--draft-wbits` twin is an internal accelerator.
+    fn wbits_plan(&self) -> Option<Vec<u32>> {
+        self.target.wbits_plan()
     }
 
     /// Dense prefill delegates to the target (the probe path). The draft
@@ -479,8 +489,12 @@ mod tests {
     #[test]
     fn constructor_validates_config() {
         assert!(build(0, 2).is_err(), "spec_k 0 rejected");
-        assert!(build(4, 4).is_err(), "draft wider than 3 bits rejected");
         assert!(build(4, 1).is_err(), "1-bit draft rejected");
+        assert!(build(4, 5).is_err(), "draft wider than 4 bits rejected");
+        for wbits in [3u32, 4] {
+            let b = build(2, wbits).expect("any packed width builds");
+            assert_eq!(b.draft_wbits(), wbits);
+        }
         let b = build(2, 2).expect("valid config builds");
         assert_eq!(b.spec(), BackendSpec::NativeSpec);
         assert_eq!(b.spec_k(), 2);

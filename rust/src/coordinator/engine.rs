@@ -22,9 +22,12 @@
 //!   latency — stays bounded no matter how long the queued prompts are.
 //!   The chunk budget follows the measured datapath (shard critical
 //!   path, EWMA-tracked) unless pinned by `--prefill-chunk`. Token
-//!   streams are bit-exact with Burst (greedy): paged prefill attention
-//!   is row-independent, so splitting a prompt across chunks replays
-//!   the identical float sequence.
+//!   streams are bit-exact with Burst: paged prefill attention is
+//!   row-independent, so splitting a prompt across chunks replays the
+//!   identical float sequence — and sampling draws from a *per-request*
+//!   RNG stream (seeded from the engine seed and the request id), so
+//!   sampled (temperature > 0) streams match too, no matter how the
+//!   schedulers interleave the batch.
 //!
 //! A simulated-OASIS clock advances alongside from the backend's
 //! `StepCost` reports, so every response carries both measured
@@ -37,7 +40,7 @@ use anyhow::Result;
 use super::backend::chaos::ChaosCfg;
 use super::backend::{
     BackendSpec, CostModel, DecodeBackend, PagedPrefill, PagedPrefillOut, ScheduleWork, SpecRound,
-    StepCost,
+    StepCost, WbitsSpec,
 };
 use super::batcher::{AdmitPolicy, Batcher};
 use super::kv::KvManager;
@@ -89,6 +92,10 @@ impl std::str::FromStr for SchedPolicy {
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub policy: AdmitPolicy,
+    /// Sampling seed. Each request draws from its own RNG stream seeded
+    /// from `(seed, request id)`, so a sampled request's tokens are a
+    /// pure function of its id and its own logits — independent of batch
+    /// composition, admission order, and scheduler policy.
     pub seed: u64,
     pub mode: OasisMode,
     /// Which execution engine serves decode compute, and which software
@@ -135,11 +142,22 @@ pub struct EngineConfig {
     /// only): up to `N` draft tokens are proposed per decode round and
     /// verified in one stacked target pass. Ignored by the other backends.
     pub spec_k: usize,
-    /// Draft-model weight width in bits (`--draft-wbits {2,3}`,
+    /// Draft-model weight width in bits (`--draft-wbits {2,3,4}`,
     /// `--backend native-spec` only): the draft is the SAME manifest
-    /// re-quantized at this width — 2-bit runs the crumb-packed kernel
-    /// (four rows per LUT byte). Ignored by the other backends.
+    /// re-quantized at this width through the unified packed stream —
+    /// 2-bit streams four reduction rows per LUT byte, halving draft
+    /// weight traffic vs 4-bit. Ignored by the other backends.
     pub draft_wbits: u32,
+    /// Weight bit-width for the native backends (`--wbits {2,3,4,auto}`):
+    /// `Uniform(b)` quantizes every linear at `b` bits; `Auto { budget }`
+    /// runs the calibration-driven per-layer planner against an
+    /// average-bits budget (`--wbits-budget`). The served plan is
+    /// reported in [`EngineStats::wbits_plan`]. Ignored by PJRT.
+    pub wbits: WbitsSpec,
+    /// Per-group weight-scale group size in reduction rows
+    /// (`--wbits-group`, FineQuant-style; must be a multiple of 4, `0` =
+    /// one scale per column). Ignored by PJRT.
+    pub w_group: usize,
     /// Scheduler shape (`--sched {burst,chunked}`): `Burst` keeps the
     /// phased admit-all → prefill-whole → decode loop; `Chunked` runs
     /// iteration-level scheduling with budgeted prefill chunks mixed
@@ -168,6 +186,8 @@ impl Default for EngineConfig {
             prefix_cache: false,
             spec_k: 4,
             draft_wbits: 2,
+            wbits: WbitsSpec::Uniform(4),
+            w_group: 128,
             sched: SchedPolicy::Burst,
             prefill_chunk: 0,
         }
@@ -177,6 +197,11 @@ impl Default for EngineConfig {
 struct ActiveReq {
     req: Request,
     generated: Vec<i32>,
+    /// this request's private sampling stream, seeded from the engine
+    /// seed and the request id when its first token is sampled: every
+    /// later draw consumes only this stream, so sampled token sequences
+    /// never depend on which other requests share the batch
+    rng: Rng,
     /// when admission sampled the prefill's token — a request is only
     /// active after its first token exists, so this is never "pending"
     first_token_at: Instant,
@@ -234,7 +259,9 @@ pub struct Engine {
     active: Vec<Option<ActiveReq>>,
     pub stats: EngineStats,
     pub sim: SimTotals,
-    rng: Rng,
+    /// base sampling seed; per-request streams derive from it (see
+    /// [`Engine::request_rng`])
+    seed: u64,
     /// deadline applied at submit to requests without one (None = none)
     default_deadline: Option<Duration>,
     /// effective prefix-cache switch: `cfg.prefix_cache` AND the backend
@@ -307,6 +334,7 @@ impl Engine {
             waq_backend: backend.spec().name(),
             kv_bits: cfg.kv_bits.bits(),
             kv_bytes_per_token: kv.bytes_per_token(),
+            wbits_plan: backend.wbits_plan().unwrap_or_default(),
             ..Default::default()
         };
         Engine {
@@ -315,7 +343,7 @@ impl Engine {
             active: (0..m.decode_batch).map(|_| None).collect(),
             stats,
             sim: SimTotals::default(),
-            rng: Rng::new(cfg.seed),
+            seed: cfg.seed,
             default_deadline: (cfg.default_deadline_ms > 0)
                 .then(|| Duration::from_millis(cfg.default_deadline_ms)),
             prefix_cache,
@@ -568,11 +596,13 @@ impl Engine {
                             self.stats.host_shard_crit_s += pre.cost.shard_crit_s;
                         }
                         // the prefill's last-position logits give token #1
-                        let tok = self.sample(&pre.logits, req.temperature);
+                        let mut rng = self.request_rng(req.id);
+                        let tok = Self::sample(&mut rng, &pre.logits, req.temperature);
                         let first_at = Instant::now();
                         let mut ar = ActiveReq {
                             req,
                             generated: vec![tok],
+                            rng,
                             first_token_at: first_at,
                             last_token_at: first_at,
                             queue_wait_s,
@@ -830,11 +860,13 @@ impl Engine {
                     }
                     let indexed = p.plen.min(p.req.prompt.len());
                     self.kv.register_prefix(p.slot, &p.req.prompt[..indexed]);
-                    let tok = self.sample(&out.logits, p.req.temperature);
+                    let mut rng = self.request_rng(p.req.id);
+                    let tok = Self::sample(&mut rng, &out.logits, p.req.temperature);
                     let first_at = Instant::now();
                     let mut ar = ActiveReq {
                         req: p.req,
                         generated: vec![tok],
+                        rng,
                         first_token_at: first_at,
                         last_token_at: first_at,
                         queue_wait_s: p.queue_wait_s,
@@ -1043,11 +1075,13 @@ impl Engine {
                     self.stats.host_waq_s += out.cost.host_waq_s;
                     self.stats.host_shard_crit_s += out.cost.shard_crit_s;
                     // the tail's last-position logits give token #1
-                    let tok = self.sample(&out.logits, req.temperature);
+                    let mut rng = self.request_rng(req.id);
+                    let tok = Self::sample(&mut rng, &out.logits, req.temperature);
                     let first_at = Instant::now();
                     let mut ar = ActiveReq {
                         req,
                         generated: vec![tok],
+                        rng,
                         first_token_at: first_at,
                         last_token_at: first_at,
                         queue_wait_s,
@@ -1124,11 +1158,13 @@ impl Engine {
                 if truncated {
                     self.stats.truncated_prompts += 1;
                 }
-                let tok = self.sample(logits, req.temperature);
+                let mut rng = self.request_rng(req.id);
+                let tok = Self::sample(&mut rng, logits, req.temperature);
                 let first_at = Instant::now();
                 let mut ar = ActiveReq {
                     req,
                     generated: vec![tok],
+                    rng,
                     first_token_at: first_at,
                     last_token_at: first_at,
                     queue_wait_s,
@@ -1255,7 +1291,7 @@ impl Engine {
                 continue;
             }
             let lrow = &logits[slot * m.vocab..(slot + 1) * m.vocab];
-            let tok = self.sample(lrow, ar.req.temperature);
+            let tok = Self::sample(&mut ar.rng, lrow, ar.req.temperature);
             ar.generated.push(tok);
             self.stats.generated_tokens += 1;
             // recorded inter-token latency: the gap since this request's
@@ -1340,7 +1376,7 @@ impl Engine {
             }
             if finished.is_none() {
                 let lrow = &logits[slot * vocab..(slot + 1) * vocab];
-                let tok = self.sample(lrow, ar.req.temperature);
+                let tok = Self::sample(&mut ar.rng, lrow, ar.req.temperature);
                 ar.generated.push(tok);
                 emitted += 1;
                 self.stats.generated_tokens += 1;
@@ -1438,11 +1474,23 @@ impl Engine {
         }
     }
 
-    /// Sample the next token from one logit row. NaN-safe in both
-    /// branches: a numerically poisoned row (overflowed accumulator, bad
-    /// weights) must never panic the engine thread — see
-    /// [`greedy_argmax`] and the zero-weighting of NaN entries below.
-    fn sample(&mut self, logits: &[f32], temperature: f32) -> i32 {
+    /// The sampling stream for one request: seeded purely from the engine
+    /// seed and the request id (golden-ratio mixed so nearby ids land far
+    /// apart in seed space), never from admission order or batch state.
+    /// This is what makes sampled token streams scheduler-invariant: a
+    /// request's draws are consumed only by its own tokens, in token
+    /// order, so `--sched burst` and `--sched chunked` replay the exact
+    /// same stream however they interleave the batch.
+    fn request_rng(&self, id: super::request::RequestId) -> Rng {
+        Rng::new(self.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Sample the next token from one logit row, drawing from `rng` (the
+    /// owning request's private stream). NaN-safe in both branches: a
+    /// numerically poisoned row (overflowed accumulator, bad weights)
+    /// must never panic the engine thread — see [`greedy_argmax`] and the
+    /// zero-weighting of NaN entries below.
+    fn sample(rng: &mut Rng, logits: &[f32], temperature: f32) -> i32 {
         if temperature <= 0.0 {
             return greedy_argmax(logits);
         }
@@ -1460,7 +1508,7 @@ impl Engine {
             })
             .collect();
         let total: f64 = exps.iter().sum();
-        let mut u = self.rng.f64() * total;
+        let mut u = rng.f64() * total;
         for (i, e) in exps.iter().enumerate() {
             u -= e;
             if u <= 0.0 {

@@ -16,7 +16,7 @@ pub use backend::{
     probe_decode_logits, BackendSpec, ChaosBackend, ChaosCfg, ChaosCounters, DecodeBackend,
     NativeCfg, NativeWaqBackend, PagedPrefill, PagedPrefillOut, PjrtBackend, PrefillOut,
     ScheduleOut, ScheduleWork, ShardedWaqBackend, SpecRound, SpeculativeBackend, StepCost,
-    VerifyRun,
+    VerifyRun, WbitsSpec,
 };
 pub use batcher::{AdmitPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, SchedPolicy, SimTotals};

@@ -311,6 +311,12 @@ pub struct EngineStats {
     /// directly as fat p99 gaps, and `--sched chunked` exists to bound
     /// them. p50/p99 ride along in [`EngineStats::to_json`].
     pub decode_lat: LatencyHistogram,
+    /// Per-linear weight bit-widths actually served, layer-major with
+    /// four entries per layer (qkv, attn_out, mlp_up, mlp_down): the flat
+    /// plan under uniform `--wbits`, the calibration-driven assignment
+    /// under `--wbits auto`. Empty when the backend reports no plan (the
+    /// PJRT stub) or before engine construction.
+    pub wbits_plan: Vec<u32>,
 }
 
 impl EngineStats {
@@ -319,6 +325,16 @@ impl EngineStats {
             0.0
         } else {
             self.occupancy_sum as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Average served weight bits per linear (the number `--wbits-budget`
+    /// constrains); `0.0` when no plan is reported.
+    pub fn wbits_avg(&self) -> f64 {
+        if self.wbits_plan.is_empty() {
+            0.0
+        } else {
+            self.wbits_plan.iter().sum::<u32>() as f64 / self.wbits_plan.len() as f64
         }
     }
 
@@ -337,7 +353,8 @@ impl EngineStats {
                 "\"prefix_hits\": {}, \"prefix_blocks_reused\": {}, \"evictions\": {}, ",
                 "\"spec_rounds\": {}, \"spec_proposed\": {}, \"spec_accepted\": {}, ",
                 "\"burst_dedup_hits\": {}, \"decode_lat_count\": {}, ",
-                "\"decode_lat_p50_s\": {:.6}, \"decode_lat_p99_s\": {:.6}}}"
+                "\"decode_lat_p50_s\": {:.6}, \"decode_lat_p99_s\": {:.6}, ",
+                "\"wbits_avg\": {:.4}, \"wbits_plan\": [{}]}}"
             ),
             self.decode_steps,
             self.prefills,
@@ -367,6 +384,12 @@ impl EngineStats {
             self.decode_lat.count(),
             self.decode_lat.percentile(0.5),
             self.decode_lat.percentile(0.99),
+            self.wbits_avg(),
+            self.wbits_plan
+                .iter()
+                .map(|b| b.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
         )
     }
 }
@@ -465,6 +488,23 @@ mod tests {
         assert!(j.ends_with('}'), "{j}");
         let p99 = s.decode_lat.percentile(0.99);
         assert!(j.contains(&format!("\"decode_lat_p99_s\": {p99:.6}")), "{j}");
+    }
+
+    #[test]
+    fn stats_json_appends_wbits_plan_keys() {
+        let empty = EngineStats::default();
+        assert_eq!(empty.wbits_avg(), 0.0);
+        assert!(empty.to_json().contains("\"wbits_plan\": []"));
+        let s = EngineStats {
+            wbits_plan: vec![4, 3, 2, 3, 4, 2, 3, 4],
+            ..Default::default()
+        };
+        assert!((s.wbits_avg() - 3.125).abs() < 1e-12);
+        let j = s.to_json();
+        assert!(!j.contains('\n'));
+        assert!(j.contains("\"wbits_avg\": 3.1250"), "{j}");
+        assert!(j.contains("\"wbits_plan\": [4,3,2,3,4,2,3,4]"), "{j}");
+        assert!(j.ends_with('}'), "{j}");
     }
 
     #[test]

@@ -267,35 +267,39 @@ fn build_backend(
         }
         BackendSpec::Native(waq) => {
             let manifest = native_manifest(source)?;
-            let native = NativeWaqBackend::new(
-                &manifest,
-                params,
-                NativeCfg::from_mode(waq, cfg.mode),
-            )?;
+            let ncfg = NativeCfg {
+                wbits: cfg.wbits,
+                w_group: cfg.w_group,
+                ..NativeCfg::from_mode(waq, cfg.mode)
+            };
+            let native = NativeWaqBackend::new(&manifest, params, ncfg)?;
             Box::new(native)
         }
         BackendSpec::NativeSharded => {
             let manifest = native_manifest(source)?;
-            let sharded = ShardedWaqBackend::new(
-                &manifest,
-                params,
-                NativeCfg::from_mode(WaqBackend::Packed, cfg.mode),
-                cfg.shards,
-            )?;
+            let ncfg = NativeCfg {
+                wbits: cfg.wbits,
+                w_group: cfg.w_group,
+                ..NativeCfg::from_mode(WaqBackend::Packed, cfg.mode)
+            };
+            let sharded = ShardedWaqBackend::new(&manifest, params, ncfg, cfg.shards)?;
             Box::new(sharded)
         }
         // speculative decoding: the verification target is the plain
         // native packed backend (`--shards` is ignored here — compose a
         // sharded target by teaching this arm ShardedWaqBackend when
-        // needed); the 2/3-bit draft is built inside from the same
-        // manifest + params, so draft and target serve the same model
+        // needed); the {2,3,4}-bit draft is built inside from the same
+        // manifest + params, so draft and target serve the same model.
+        // The target honors `--wbits` (including the auto planner); the
+        // draft always runs uniform `--draft-wbits`.
         BackendSpec::NativeSpec => {
             let manifest = native_manifest(source)?;
-            let target = NativeWaqBackend::new(
-                &manifest,
-                params,
-                NativeCfg::from_mode(WaqBackend::Packed, cfg.mode),
-            )?;
+            let ncfg = NativeCfg {
+                wbits: cfg.wbits,
+                w_group: cfg.w_group,
+                ..NativeCfg::from_mode(WaqBackend::Packed, cfg.mode)
+            };
+            let target = NativeWaqBackend::new(&manifest, params, ncfg)?;
             let spec = SpeculativeBackend::new(
                 &manifest,
                 params,

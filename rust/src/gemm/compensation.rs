@@ -12,7 +12,7 @@
 
 use super::lut::CartesianLut;
 use super::waq;
-use crate::quant::{CrumbWeights, PackedWeights, QuantToken, QuantWeights};
+use crate::quant::{PackedWeights, QuantToken, QuantWeights};
 
 /// Apply error compensation in place: out[n] += r * W_deq[c, n] per outlier.
 pub fn compensate(out: &mut [f32], tok: &QuantToken, w: &QuantWeights) {
@@ -26,24 +26,11 @@ pub fn compensate(out: &mut [f32], tok: &QuantToken, w: &QuantWeights) {
     }
 }
 
-/// [`compensate`] over the nibble-packed weight form (what the serving
-/// path keeps resident when the packed GEMM backend is selected): same
-/// per-outlier dequant-row fetch, bit-identical FP accumulation.
+/// [`compensate`] over the packed weight form at any stream width (what
+/// the serving path keeps resident when the packed GEMM backend is
+/// selected): same per-outlier dequant-row fetch — group scales included
+/// when present — bit-identical FP accumulation.
 pub fn compensate_packed(out: &mut [f32], tok: &QuantToken, w: &PackedWeights) {
-    assert_eq!(out.len(), w.n_cols);
-    let mut wrow = Vec::with_capacity(w.n_cols);
-    for &(c, _v, r) in &tok.outliers {
-        w.dequant_row(c as usize, &mut wrow);
-        for (o, &wv) in out.iter_mut().zip(&wrow) {
-            *o += r * wv;
-        }
-    }
-}
-
-/// [`compensate`] over the crumb-packed weight form (what the 2-bit
-/// speculative draft keeps resident): same per-outlier dequant-row fetch,
-/// bit-identical FP accumulation.
-pub fn compensate_crumbs(out: &mut [f32], tok: &QuantToken, w: &CrumbWeights) {
     assert_eq!(out.len(), w.n_cols);
     let mut wrow = Vec::with_capacity(w.n_cols);
     for &(c, _v, r) in &tok.outliers {
@@ -215,25 +202,31 @@ mod tests {
     }
 
     #[test]
-    fn crumb_compensation_is_bit_exact_with_unpacked() {
-        // K % 4 in {0,1,2,3} exercises every crumb tail shape
+    fn packed_compensation_is_bit_exact_at_every_width_and_group() {
+        // K % 4 in {0,1,2,3} exercises every tail shape for both stream
+        // densities; group sizes cover ungrouped and a multi-group grid
         for (seed, k) in [(7u64, 96usize), (8, 97), (9, 98), (10, 99)] {
-            let mut rng = Rng::new(seed);
-            let wmat = Matrix::random_normal(k, 24, 1.0, &mut rng);
-            let qw = quant::quantize_weights(&wmat, 2);
-            let calib: Vec<Vec<f32>> =
-                (0..8).map(|_| rng.heavy_tailed_vec(k, 0.02, 12.0)).collect();
-            let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
-            let cfg = OutlierCfg { total_frac: 0.04 };
-            let cb_a = quant::learn_act_codebook(&refs, None, 4, cfg);
-            let tok = quant::quantize_token(&rng.heavy_tailed_vec(k, 0.02, 12.0), &cb_a, cfg);
-            assert!(!tok.outliers.is_empty());
-            let lut = CartesianLut::build(&cb_a, &qw.codebook);
-            let mut a = waq::execute_direct(&tok, &qw, &lut);
-            let mut b = a.clone();
-            compensate(&mut a, &tok, &qw);
-            compensate_crumbs(&mut b, &tok, &qw.pack_crumbs());
-            assert_eq!(a, b, "seed {seed} k {k}");
+            for w_bits in [2u32, 3, 4] {
+                for group in [0usize, 32] {
+                    let mut rng = Rng::new(seed + w_bits as u64);
+                    let wmat = Matrix::random_normal(k, 24, 1.0, &mut rng);
+                    let qw = quant::quantize_weights_grouped(&wmat, None, w_bits, group);
+                    let calib: Vec<Vec<f32>> =
+                        (0..8).map(|_| rng.heavy_tailed_vec(k, 0.02, 12.0)).collect();
+                    let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+                    let cfg = OutlierCfg { total_frac: 0.04 };
+                    let cb_a = quant::learn_act_codebook(&refs, None, 4, cfg);
+                    let tok =
+                        quant::quantize_token(&rng.heavy_tailed_vec(k, 0.02, 12.0), &cb_a, cfg);
+                    assert!(!tok.outliers.is_empty());
+                    let lut = CartesianLut::build(&cb_a, &qw.codebook);
+                    let mut a = waq::execute_direct(&tok, &qw, &lut);
+                    let mut b = a.clone();
+                    compensate(&mut a, &tok, &qw);
+                    compensate_packed(&mut b, &tok, &qw.pack());
+                    assert_eq!(a, b, "seed {seed} k {k} W{w_bits} g{group}");
+                }
+            }
         }
     }
 

@@ -2,8 +2,8 @@
 //! WAQ LUT-GEMM main branch (bit-exact Index-Counter semantics), the
 //! outlier branch (look-ahead + error compensation), the WOQ
 //! inner-product-LUT baseline family, and the packed/tiled/threaded fast
-//! backend (`packed`: nibble-packed indices + fused pair-LUT — see its
-//! module docs for the byte layout and the `lutF[b] = lut[ia0][b >> 4] +
+//! backend (`packed`: any-bit packed indices + fused pair-LUT — see its
+//! module docs for the byte layouts and the `lutF[b] = lut[ia0][b >> 4] +
 //! lut[ia1][b & 15]` scheme).
 //!
 //! Execution-path selection goes through [`WaqBackend`] / [`WaqGemm`]:
@@ -22,18 +22,14 @@ pub mod waq;
 pub mod woq;
 
 pub use compensation::{
-    compensate, compensate_crumbs, compensate_packed, execute_critical_path,
-    execute_dual_branch,
+    compensate, compensate_packed, execute_critical_path, execute_dual_branch,
 };
 pub use lut::CartesianLut;
-pub use packed::{
-    accumulate_tiles, accumulate_tiles_crumbs, execute_batch_tiled,
-    execute_batch_tiled_crumbs, execute_packed, TileCfg,
-};
+pub use packed::{accumulate_tiles, execute_batch_tiled, execute_packed, TileCfg};
 pub use sharded::{ShardPool, ShardedWaqGemm};
 pub use waq::{execute_direct, execute_histogram};
 
-use crate::quant::{CrumbWeights, PackedWeights, QuantToken, QuantWeights};
+use crate::quant::{PackedWeights, QuantToken, QuantWeights};
 
 /// Which software execution path runs the WAQ LUT-GEMM.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -42,7 +38,7 @@ pub enum WaqBackend {
     Direct,
     /// Literal Index-Counter semantics (histogram + MAC tree).
     Histogram,
-    /// Nibble-packed fused pair-LUT kernel, tiled + threaded for batches.
+    /// Any-bit packed fused pair-LUT kernel, tiled + threaded for batches.
     #[default]
     Packed,
 }
@@ -86,14 +82,13 @@ impl std::str::FromStr for WaqBackend {
 
 /// Weight storage matching the backend that will stream it: the packed
 /// backend drops the byte-per-index form entirely (keeping both would
-/// cost 1.5x the index memory the packing exists to halve). A <= 2-bit
-/// codebook under the packed backend goes to the crumb form — four
-/// reduction rows per byte — which halves the weight stream again (the
-/// speculative draft model's regime).
+/// cost extra index memory the packing exists to shrink). The packed form
+/// picks its stream density from the codebook width — <= 2-bit codebooks
+/// pack four reduction rows per byte (the speculative draft model's
+/// regime), wider ones pack two.
 enum WaqWeights {
     Unpacked(QuantWeights),
     Packed(PackedWeights),
-    Crumbs(CrumbWeights),
 }
 
 /// A prepared WAQ GEMM: quantized weights (in backend-appropriate
@@ -112,7 +107,6 @@ pub struct WaqGemm {
 impl WaqGemm {
     pub fn new(w: QuantWeights, lut: CartesianLut, backend: WaqBackend) -> WaqGemm {
         let w = match backend {
-            WaqBackend::Packed if w.codebook.len() <= 4 => WaqWeights::Crumbs(w.pack_crumbs()),
             WaqBackend::Packed => WaqWeights::Packed(w.pack()),
             _ => WaqWeights::Unpacked(w),
         };
@@ -124,20 +118,11 @@ impl WaqGemm {
         self
     }
 
-    /// The nibble-packed weight form (present iff the backend is `Packed`
-    /// and the codebook is wider than 2 bits).
+    /// The packed weight form (present iff the backend is `Packed`; its
+    /// `bits()` reports the stream width, 2/3/4).
     pub fn packed_weights(&self) -> Option<&PackedWeights> {
         match &self.w {
             WaqWeights::Packed(p) => Some(p),
-            _ => None,
-        }
-    }
-
-    /// The crumb-packed weight form (present iff the backend is `Packed`
-    /// and the codebook fits 2 bits — the speculative draft regime).
-    pub fn crumb_weights(&self) -> Option<&CrumbWeights> {
-        match &self.w {
-            WaqWeights::Crumbs(c) => Some(c),
             _ => None,
         }
     }
@@ -162,15 +147,6 @@ impl WaqGemm {
                 waq::execute_histogram(tok, w, &self.lut)
             }
             (WaqWeights::Packed(p), _) => packed::execute_packed(tok, p, &self.lut),
-            (WaqWeights::Crumbs(c), _) => {
-                let mut out = packed::execute_batch_tiled_crumbs(
-                    std::slice::from_ref(tok),
-                    c,
-                    &self.lut,
-                    &TileCfg::single_thread(),
-                );
-                out.pop().expect("one token in, one row out")
-            }
             (WaqWeights::Unpacked(_), WaqBackend::Packed) => {
                 unreachable!("packed backend always stores packed weights")
             }
@@ -185,9 +161,6 @@ impl WaqGemm {
             WaqWeights::Packed(p) => {
                 packed::execute_batch_tiled(toks, p, &self.lut, &self.tile)
             }
-            WaqWeights::Crumbs(c) => {
-                packed::execute_batch_tiled_crumbs(toks, c, &self.lut, &self.tile)
-            }
             WaqWeights::Unpacked(_) => toks.iter().map(|t| self.execute(t)).collect(),
         }
     }
@@ -198,7 +171,6 @@ impl WaqGemm {
     pub fn compensate(&self, out: &mut [f32], tok: &QuantToken) {
         match &self.w {
             WaqWeights::Packed(p) => compensation::compensate_packed(out, tok, p),
-            WaqWeights::Crumbs(c) => compensation::compensate_crumbs(out, tok, c),
             WaqWeights::Unpacked(w) => compensation::compensate(out, tok, w),
         }
     }
@@ -255,7 +227,7 @@ mod tests {
     }
 
     #[test]
-    fn two_bit_codebooks_dispatch_to_crumbs_bit_exact() {
+    fn two_bit_codebooks_dispatch_to_crumb_density_bit_exact() {
         let mut rng = Rng::new(12);
         let (k, n) = (81, 24); // K % 4 == 1 exercises the crumb tail
         let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
@@ -272,9 +244,10 @@ mod tests {
 
         let direct = WaqGemm::new(qw.clone(), lut.clone(), WaqBackend::Direct);
         let packed = WaqGemm::new(qw, lut, WaqBackend::Packed);
-        // 2-bit codebook under the packed backend stores crumbs, not nibbles
-        assert!(packed.crumb_weights().is_some());
-        assert!(packed.packed_weights().is_none());
+        // a 2-bit codebook under the packed backend streams four rows per
+        // byte through the same unified PackedWeights form
+        assert_eq!(packed.packed_weights().map(|p| p.bits()), Some(2));
+        assert_eq!(packed.packed_weights().map(|p| p.rows_per_byte()), Some(4));
 
         // main branch + compensation both bit-exact with the direct path
         let mut want = direct.execute_batch(&toks);

@@ -1,35 +1,48 @@
-//! Packed, tiled, multi-threaded WAQ LUT-GEMM — the fast software backend.
+//! Packed, tiled, multi-threaded WAQ LUT-GEMM — the fast software backend,
+//! width-generic over every packed stream the repo serves (2/3/4-bit).
 //!
-//! # Nibble layout
+//! # Stream layout
 //!
-//! Weights arrive as [`PackedWeights`]: the K x N index matrix packed two
-//! reduction rows per byte, `pairs[p * N + j] = idx[2p][j] << 4 |
-//! idx[2p+1][j]` (row `2p` in the high nibble). An odd final row is a
-//! nibble-packed tail. Index traffic is therefore half of the
-//! byte-per-index `QuantWeights` form the direct path streams.
+//! Weights arrive as [`PackedWeights`]: the K x N index matrix packed
+//! `rows_per_byte` reduction rows per byte (2 at nibble widths, 4 at crumb
+//! width), high-first, with the `n_rows % rows_per_byte` final rows kept
+//! as column-packed [`crate::quant::PackedStream`] tails. Index traffic is
+//! therefore 1/2 (nibble) or 1/4 (crumb) of the byte-per-index
+//! `QuantWeights` form the direct path streams.
 //!
 //! # Fused pair-LUT
 //!
 //! For one token, reduction rows `2p` and `2p+1` use activation indices
 //! `(ia0, ia1)`. Instead of two Cartesian-LUT gathers per output element,
-//! build one fused 256-entry row per pair once:
+//! build one fused row per pair once:
 //!
 //! ```text
-//! lutF[b] = lut[ia0][b >> 4] + lut[ia1][b & 15]
+//! lutF[b] = lut[ia0][b >> 4] + lut[ia1][b & 15]    (nibble widths)
+//! lutF[c] = lut[ia0][c >> 2] + lut[ia1][c &  3]    (crumb width)
 //! ```
 //!
-//! and then stream the packed weight bytes: each byte `b` costs a single
-//! table lookup and a single accumulate for TWO MACs. The fused row costs
-//! 2^(2*nW) adds to build and is amortized over all N (or one column
-//! tile's worth of) outputs. Because `lutF[b]` is exactly the
-//! `lut[ia0][iw0] + lut[ia1][iw1]` sum the direct path computes before
-//! accumulating, every result here is bit-exact with
-//! [`super::waq::execute_direct`] (same FP additions in the same order).
+//! and then stream the packed weight bytes: each nibble byte costs a
+//! single table lookup and a single accumulate for TWO MACs; each crumb
+//! byte costs two fused-pair lookups for FOUR MACs. Because every fused
+//! entry is exactly the `lut[ia0][iw0] + lut[ia1][iw1]` sum the direct
+//! path computes before accumulating, every result here is bit-exact with
+//! [`super::waq::execute_direct`] (same FP additions in the same order) at
+//! every width.
+//!
+//! # Per-group scales
+//!
+//! When the weights carry a FineQuant per-group scale grid, each
+//! `group_size`-row block accumulates into a zeroed per-group scratch and
+//! is folded through its factor (`out += gacc * group_scale`) before the
+//! per-token x per-column scaling — the same fold order as the direct
+//! reference, so bit-exactness holds grouped or not. Group boundaries are
+//! multiples of 4 (enforced at quantization), so a scale group never
+//! splits a packed byte.
 //!
 //! # Tiling + threads
 //!
 //! [`execute_batch_tiled`] blocks over N (column ranges, one per worker
-//! thread) and over K (pair blocks), iterating tokens inside the K block
+//! thread) and over K (chunk blocks), iterating tokens inside the K block
 //! so a `k_pair_block x n_block`-byte weight tile is re-streamed from
 //! cache — not memory — for every token of a continuous-batch decode
 //! step. Workers own disjoint column ranges, so parallelism never changes
@@ -37,7 +50,7 @@
 //! thread count and tile shape.
 
 use super::lut::CartesianLut;
-use crate::quant::{CrumbWeights, PackedWeights, QuantToken};
+use crate::quant::{PackedWeights, QuantToken};
 
 /// Tile/parallelism configuration for [`execute_batch_tiled`].
 #[derive(Clone, Copy, Debug)]
@@ -46,8 +59,9 @@ pub struct TileCfg {
     /// of each fused-row build. Wider = less build overhead, narrower =
     /// more parallelism.
     pub n_block: usize,
-    /// Reduction row-pairs per K tile; `k_pair_block * n_block` bytes of
-    /// packed weights should sit comfortably in L2.
+    /// Reduction row-chunks per K tile (pairs at nibble widths, quads at
+    /// crumb width); `k_pair_block * n_block` bytes of packed weights
+    /// should sit comfortably in L2.
     pub k_pair_block: usize,
     /// Worker threads over column ranges; 0 = use available parallelism.
     pub threads: usize,
@@ -79,6 +93,16 @@ fn debug_assert_nibbles(b: u8, mask: usize) {
     );
 }
 
+/// Debug-only guard for the crumb stream, mirroring
+/// [`debug_assert_nibbles`].
+#[inline]
+fn debug_assert_crumbs(b: u8, mask: usize) {
+    debug_assert!(
+        (0..4).all(|r| ((b >> (6 - 2 * r)) & 0x03) as usize <= mask),
+        "packed weight byte {b:#04x} out of range for crumb mask {mask:#x}"
+    );
+}
+
 /// Build the fused pair row: `fused[b] = lut[ia0][b >> 4] + lut[ia1][b & 15]`
 /// for every byte value that can occur with in-range nibbles. Entries whose
 /// nibbles exceed the weight codebook are never produced by
@@ -96,68 +120,172 @@ fn build_fused_row(fused: &mut [f32; 256], ia0: u8, ia1: u8, lut: &CartesianLut)
     }
 }
 
-/// Accumulate the odd tail row (when K is odd) exactly like the direct
-/// path's scalar tail: one plain LUT-row gather per column.
-fn add_tail(acc: &mut [f32], j0: usize, tok: &QuantToken, w: &PackedWeights, lut: &CartesianLut) {
-    let Some(tail) = &w.tail else { return };
+/// Build a fused crumb-pair row for activation indices `(ia0, ia1)`:
+/// `fused[(iw0 << 2) | iw1] = lut[ia0][iw0] + lut[ia1][iw1]` — the crumb
+/// analogue of [`build_fused_row`], 16 entries instead of 256.
+#[inline]
+fn build_fused_crumb_pair(fused: &mut [f32; 16], ia0: u8, ia1: u8, lut: &CartesianLut) {
     let mask = (1usize << lut.n_w_bits) - 1;
-    let base = (tok.idx[w.n_rows - 1] as usize) << lut.n_w_bits;
-    let row = &lut.table[base..base + mask + 1];
-    for (jj, a) in acc.iter_mut().enumerate() {
-        let iw = tail.get(j0 + jj) as usize;
-        debug_assert!(iw <= mask, "tail weight index {iw} out of range (mask {mask})");
-        *a += row[iw & mask];
+    let r0 = &lut.table[(ia0 as usize) << lut.n_w_bits..][..mask + 1];
+    let r1 = &lut.table[(ia1 as usize) << lut.n_w_bits..][..mask + 1];
+    for (hi, &v0) in r0.iter().enumerate() {
+        let dst = &mut fused[hi << 2..(hi << 2) + mask + 1];
+        for (d, &v1) in dst.iter_mut().zip(r1) {
+            *d = v0 + v1;
+        }
     }
 }
 
-/// Single-token packed GEMM: `out[n] = a_scale * w_scale[n] *
-/// sum_k LUT[cat(a_idx[k], w_idx[k, n])]`, bit-exact with
-/// `execute_direct`, at half the index traffic and one lookup per two
-/// MACs. Two pairs are processed per pass (two independent fused tables)
-/// to break the gather->add dependency chain, mirroring the direct path's
-/// two-row unroll.
-pub fn execute_packed(tok: &QuantToken, w: &PackedWeights, lut: &CartesianLut) -> Vec<f32> {
-    assert_eq!(tok.idx.len(), w.n_rows, "reduction length mismatch");
+/// Accumulate the 1-3 tail rows exactly like the direct path: row pairs
+/// first (one fused-pair lookup per column, matching the direct kernel's
+/// two-row unroll — tail rows start at `body_rows()`, an even offset from
+/// any group start, so the pairing boundary lines up), then a plain
+/// LUT-row gather for a final odd row. Only 2-bit streams can have more
+/// than one tail row, so the pair table uses crumb indexing.
+fn add_tail(acc: &mut [f32], j0: usize, tok: &QuantToken, w: &PackedWeights, lut: &CartesianLut) {
+    let base_k = w.body_rows();
+    let mask = (1usize << lut.n_w_bits) - 1;
+    let mut fused = [0.0f32; 16];
+    let mut t = 0;
+    while t + 1 < w.tail.len() {
+        build_fused_crumb_pair(&mut fused, tok.idx[base_k + t], tok.idx[base_k + t + 1], lut);
+        let (r0, r1) = (&w.tail[t], &w.tail[t + 1]);
+        for (jj, a) in acc.iter_mut().enumerate() {
+            let (i0, i1) = (r0.get(j0 + jj) as usize, r1.get(j0 + jj) as usize);
+            debug_assert!(i0 <= mask && i1 <= mask, "tail index {i0}/{i1} out of range");
+            *a += fused[(i0 << 2) | i1];
+        }
+        t += 2;
+    }
+    if t < w.tail.len() {
+        let base = (tok.idx[base_k + t] as usize) << lut.n_w_bits;
+        let row = &lut.table[base..base + mask + 1];
+        let tail = &w.tail[t];
+        for (jj, a) in acc.iter_mut().enumerate() {
+            let iw = tail.get(j0 + jj) as usize;
+            debug_assert!(iw <= mask, "tail weight index {iw} out of range (mask {mask})");
+            *a += row[iw & mask];
+        }
+    }
+}
+
+/// Accumulate (no scaling beyond group folding) reduction rows `[k0, k1)`
+/// of columns `[j0, j1)` for every token, dispatching on the stream
+/// density. K-chunk tiles are outermost with tokens inside, so each packed
+/// weight tile is reused across the whole batch while hot. Tail rows are
+/// processed iff `k1` reaches past the body.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_rows(
+    toks: &[QuantToken],
+    w: &PackedWeights,
+    lut: &CartesianLut,
+    k_block: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+    outs: &mut [&mut [f32]],
+) {
     let n = w.n_cols;
-    let np = w.n_pairs();
-    let nibble_mask = (1usize << lut.n_w_bits) - 1;
-    let mut acc = vec![0.0f32; n];
-    let mut f0 = [0.0f32; 256];
-    let mut f1 = [0.0f32; 256];
-    let mut p = 0;
-    while p + 1 < np {
-        build_fused_row(&mut f0, tok.idx[2 * p], tok.idx[2 * p + 1], lut);
-        build_fused_row(&mut f1, tok.idx[2 * p + 2], tok.idx[2 * p + 3], lut);
-        let w0 = &w.pairs[p * n..(p + 1) * n];
-        let w1 = &w.pairs[(p + 1) * n..(p + 2) * n];
-        for ((a, &b0), &b1) in acc.iter_mut().zip(w0).zip(w1) {
-            debug_assert_nibbles(b0, nibble_mask);
-            debug_assert_nibbles(b1, nibble_mask);
-            *a += f0[b0 as usize];
-            *a += f1[b1 as usize];
+    let per = w.rows_per_byte();
+    let width = j1 - j0;
+    let body_rows = w.body_rows();
+    // group starts are multiples of 4 and the body spans a whole number of
+    // chunks, so both bounds land on chunk boundaries
+    let c0 = k0 / per;
+    let c1 = k1.min(body_rows) / per;
+    let mask = (1usize << lut.n_w_bits) - 1;
+    let mut cb = c0;
+    if per == 2 {
+        let mut fused = [0.0f32; 256];
+        while cb < c1 {
+            let ce = (cb + k_block).min(c1);
+            for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
+                for p in cb..ce {
+                    build_fused_row(&mut fused, tok.idx[2 * p], tok.idx[2 * p + 1], lut);
+                    let wrow = &w.body[p * n + j0..p * n + j1];
+                    for (a, &b) in acc[..width].iter_mut().zip(wrow) {
+                        debug_assert_nibbles(b, mask);
+                        *a += fused[b as usize];
+                    }
+                }
+            }
+            cb = ce;
         }
-        p += 2;
-    }
-    if p < np {
-        build_fused_row(&mut f0, tok.idx[2 * p], tok.idx[2 * p + 1], lut);
-        let w0 = &w.pairs[p * n..(p + 1) * n];
-        for (a, &b) in acc.iter_mut().zip(w0) {
-            debug_assert_nibbles(b, nibble_mask);
-            *a += f0[b as usize];
+    } else {
+        // each crumb byte is two fused-pair lookups for FOUR MACs — the
+        // same per-column add sequence as the direct path's two-row unroll
+        let mut fhi = [0.0f32; 16];
+        let mut flo = [0.0f32; 16];
+        while cb < c1 {
+            let ce = (cb + k_block).min(c1);
+            for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
+                for q in cb..ce {
+                    build_fused_crumb_pair(&mut fhi, tok.idx[4 * q], tok.idx[4 * q + 1], lut);
+                    build_fused_crumb_pair(&mut flo, tok.idx[4 * q + 2], tok.idx[4 * q + 3], lut);
+                    let wrow = &w.body[q * n + j0..q * n + j1];
+                    for (a, &b) in acc[..width].iter_mut().zip(wrow) {
+                        debug_assert_crumbs(b, mask);
+                        *a += fhi[(b >> 4) as usize];
+                        *a += flo[(b & 0x0F) as usize];
+                    }
+                }
+            }
+            cb = ce;
         }
     }
-    add_tail(&mut acc, 0, tok, w, lut);
-    for (j, a) in acc.iter_mut().enumerate() {
-        *a *= tok.scale * w.col_scales[j];
+    if k1 > body_rows {
+        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
+            add_tail(&mut acc[..width], j0, tok, w, lut);
+        }
     }
-    acc
 }
 
-/// Accumulate (no scaling) the full column range of `w` for every token
-/// into per-token output slices (each at least `w.n_cols` long), K-pair
-/// tiles outermost. Per output column the accumulation order is identical
-/// to [`execute_batch_tiled`]'s — k pairs ascending, then the odd tail —
-/// for every `k_pair_block`, so callers that scale afterwards stay
+/// Accumulate columns `[j0, j1)` of every token into `outs[t][..j1-j0]`.
+/// Ungrouped weights accumulate straight into the outputs; grouped
+/// weights accumulate each scale group into a zeroed scratch and fold it
+/// through the group factor, exactly like the direct reference. In both
+/// cases the caller applies the per-token x per-column scaling afterwards.
+fn accumulate_range(
+    toks: &[QuantToken],
+    w: &PackedWeights,
+    lut: &CartesianLut,
+    k_block: usize,
+    j0: usize,
+    j1: usize,
+    outs: &mut [&mut [f32]],
+) {
+    if w.group_scales.is_empty() {
+        accumulate_rows(toks, w, lut, k_block, 0, w.n_rows, j0, j1, outs);
+        return;
+    }
+    let width = j1 - j0;
+    let mut scratch: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; width]).collect();
+    for g in 0..w.n_groups() {
+        let (k0, k1) = w.group_bounds(g);
+        for ga in scratch.iter_mut() {
+            ga.fill(0.0);
+        }
+        {
+            let mut views: Vec<&mut [f32]> =
+                scratch.iter_mut().map(Vec::as_mut_slice).collect();
+            accumulate_rows(toks, w, lut, k_block, k0, k1, j0, j1, &mut views);
+        }
+        let gs = &w.group_scales[g * w.n_cols + j0..g * w.n_cols + j1];
+        for (acc, ga) in outs.iter_mut().zip(&scratch) {
+            for ((a, &v), &s) in acc[..width].iter_mut().zip(ga).zip(gs) {
+                *a += v * s;
+            }
+        }
+    }
+}
+
+/// Accumulate (unscaled output; group factors already folded) the full
+/// column range of `w` for every token into per-token output slices (each
+/// at least `w.n_cols` long), K-chunk tiles outermost. Per output column
+/// the accumulation order is identical to [`execute_batch_tiled`]'s — k
+/// pairs ascending within each scale group, then the tail — for every
+/// `k_pair_block` and stream width, so callers that scale afterwards stay
 /// bit-exact with the unsharded kernel. This is the building block the
 /// tensor-parallel sharded backend (`gemm::sharded`) drives with each
 /// shard's column slice of the packed weights.
@@ -175,233 +303,28 @@ pub fn accumulate_tiles(
     accumulate_range(toks, w, lut, k_pair_block.max(1), 0, w.n_cols, outs);
 }
 
-/// Accumulate (no scaling) columns `[j0, j1)` of every token into
-/// `outs[t][..j1-j0]`, iterating K-pair tiles outermost and tokens inside
-/// so each packed weight tile is reused across the whole batch while hot.
-fn accumulate_range(
-    toks: &[QuantToken],
-    w: &PackedWeights,
-    lut: &CartesianLut,
-    k_pair_block: usize,
-    j0: usize,
-    j1: usize,
-    outs: &mut [&mut [f32]],
-) {
+/// Single-token packed GEMM: `out[n] = a_scale * w_scale[n] *
+/// sum_k LUT[cat(a_idx[k], w_idx[k, n])]`, bit-exact with
+/// `execute_direct` at every stream width, at 1/2 (nibble) or 1/4 (crumb)
+/// of the index traffic.
+pub fn execute_packed(tok: &QuantToken, w: &PackedWeights, lut: &CartesianLut) -> Vec<f32> {
+    assert_eq!(tok.idx.len(), w.n_rows, "reduction length mismatch");
     let n = w.n_cols;
-    let np = w.n_pairs();
-    let width = j1 - j0;
-    let nibble_mask = (1usize << lut.n_w_bits) - 1;
-    let mut fused = [0.0f32; 256];
-    let mut pb = 0;
-    while pb < np {
-        let pe = (pb + k_pair_block).min(np);
-        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
-            for p in pb..pe {
-                build_fused_row(&mut fused, tok.idx[2 * p], tok.idx[2 * p + 1], lut);
-                let wrow = &w.pairs[p * n + j0..p * n + j1];
-                for (a, &b) in acc[..width].iter_mut().zip(wrow) {
-                    debug_assert_nibbles(b, nibble_mask);
-                    *a += fused[b as usize];
-                }
-            }
-        }
-        pb = pe;
+    let mut out = vec![0.0f32; n];
+    {
+        let mut views = [out.as_mut_slice()];
+        accumulate_range(
+            std::slice::from_ref(tok),
+            w,
+            lut,
+            w.n_chunks().max(1),
+            0,
+            n,
+            &mut views,
+        );
     }
-    if w.tail.is_some() {
-        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
-            add_tail(&mut acc[..width], j0, tok, w, lut);
-        }
-    }
-}
-
-/// Debug-only guard for the crumb stream, mirroring
-/// [`debug_assert_nibbles`]: a quad byte whose crumb exceeds the weight
-/// codebook means corrupt index data and must not silently read an
-/// unwritten fused-table slot.
-#[inline]
-fn debug_assert_crumbs(b: u8, mask: usize) {
-    debug_assert!(
-        (0..4).all(|r| ((b >> (6 - 2 * r)) & 0x03) as usize <= mask),
-        "packed weight byte {b:#04x} out of range for crumb mask {mask:#x}"
-    );
-}
-
-/// Build a fused crumb-pair row for activation indices `(ia0, ia1)`:
-/// `fused[(iw0 << 2) | iw1] = lut[ia0][iw0] + lut[ia1][iw1]` — the crumb
-/// analogue of [`build_fused_row`], 16 entries instead of 256. Because
-/// each entry is exactly the per-pair sum the direct path computes before
-/// accumulating, the crumb kernel stays bit-exact with
-/// [`super::waq::execute_direct`]. Entries whose crumbs exceed the weight
-/// codebook are never produced by `CrumbWeights` and are left untouched.
-#[inline]
-fn build_fused_crumb_pair(fused: &mut [f32; 16], ia0: u8, ia1: u8, lut: &CartesianLut) {
-    let mask = (1usize << lut.n_w_bits) - 1;
-    let r0 = &lut.table[(ia0 as usize) << lut.n_w_bits..][..mask + 1];
-    let r1 = &lut.table[(ia1 as usize) << lut.n_w_bits..][..mask + 1];
-    for (hi, &v0) in r0.iter().enumerate() {
-        let dst = &mut fused[hi << 2..(hi << 2) + mask + 1];
-        for (d, &v1) in dst.iter_mut().zip(r1) {
-            *d = v0 + v1;
-        }
-    }
-}
-
-/// Accumulate the 1-3 unquaddable tail rows exactly like the direct path:
-/// row pairs first (one fused-pair lookup per column, matching the direct
-/// kernel's two-row unroll — tail rows start at `4 * n_quads`, an even
-/// offset, so the pairing boundary lines up), then a plain LUT-row gather
-/// for a final odd row.
-fn add_crumb_tail(
-    acc: &mut [f32],
-    j0: usize,
-    tok: &QuantToken,
-    w: &CrumbWeights,
-    lut: &CartesianLut,
-) {
-    let base_k = 4 * w.n_quads();
-    let mask = (1usize << lut.n_w_bits) - 1;
-    let mut fused = [0.0f32; 16];
-    let mut t = 0;
-    while t + 1 < w.tail.len() {
-        build_fused_crumb_pair(&mut fused, tok.idx[base_k + t], tok.idx[base_k + t + 1], lut);
-        let (r0, r1) = (&w.tail[t], &w.tail[t + 1]);
-        for (jj, a) in acc.iter_mut().enumerate() {
-            let (i0, i1) = (r0.get(j0 + jj) as usize, r1.get(j0 + jj) as usize);
-            debug_assert!(i0 <= mask && i1 <= mask, "tail crumb {i0}/{i1} out of range");
-            *a += fused[(i0 << 2) | i1];
-        }
-        t += 2;
-    }
-    if t < w.tail.len() {
-        let base = (tok.idx[base_k + t] as usize) << lut.n_w_bits;
-        let row = &lut.table[base..base + mask + 1];
-        let tail = &w.tail[t];
-        for (jj, a) in acc.iter_mut().enumerate() {
-            let iw = tail.get(j0 + jj) as usize;
-            debug_assert!(iw <= mask, "tail crumb index {iw} out of range (mask {mask})");
-            *a += row[iw & mask];
-        }
-    }
-}
-
-/// Accumulate (no scaling) columns `[j0, j1)` of every token over
-/// crumb-packed weights, K-quad tiles outermost and tokens inside so each
-/// weight tile is reused across the batch while hot — the crumb twin of
-/// [`accumulate_range`]. Each quad byte costs two fused-pair lookups for
-/// FOUR MACs at half the nibble stream's weight traffic, and the
-/// accumulation order per output column (k pairs ascending, then the
-/// tail) is identical to the direct path's, so results are bit-exact with
-/// `execute_direct` for every tile shape and thread count.
-fn accumulate_range_crumbs(
-    toks: &[QuantToken],
-    w: &CrumbWeights,
-    lut: &CartesianLut,
-    k_quad_block: usize,
-    j0: usize,
-    j1: usize,
-    outs: &mut [&mut [f32]],
-) {
-    let n = w.n_cols;
-    let nq = w.n_quads();
-    let width = j1 - j0;
-    let crumb_mask = (1usize << lut.n_w_bits) - 1;
-    let mut fhi = [0.0f32; 16];
-    let mut flo = [0.0f32; 16];
-    let mut qb = 0;
-    while qb < nq {
-        let qe = (qb + k_quad_block).min(nq);
-        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
-            for q in qb..qe {
-                build_fused_crumb_pair(&mut fhi, tok.idx[4 * q], tok.idx[4 * q + 1], lut);
-                build_fused_crumb_pair(&mut flo, tok.idx[4 * q + 2], tok.idx[4 * q + 3], lut);
-                let wrow = &w.quads[q * n + j0..q * n + j1];
-                for (a, &b) in acc[..width].iter_mut().zip(wrow) {
-                    debug_assert_crumbs(b, crumb_mask);
-                    *a += fhi[(b >> 4) as usize];
-                    *a += flo[(b & 0x0F) as usize];
-                }
-            }
-        }
-        qb = qe;
-    }
-    if !w.tail.is_empty() {
-        for (tok, acc) in toks.iter().zip(outs.iter_mut()) {
-            add_crumb_tail(&mut acc[..width], j0, tok, w, lut);
-        }
-    }
-}
-
-/// Accumulate (no scaling) the full column range of crumb-packed `w` for
-/// every token — the crumb twin of [`accumulate_tiles`], and the building
-/// block the sharded backend drives with each shard's column slice.
-/// `k_quad_block` plays `k_pair_block`'s role at quad granularity.
-pub fn accumulate_tiles_crumbs(
-    toks: &[QuantToken],
-    w: &CrumbWeights,
-    lut: &CartesianLut,
-    k_quad_block: usize,
-    outs: &mut [&mut [f32]],
-) {
-    for t in toks {
-        assert_eq!(t.idx.len(), w.n_rows, "reduction length mismatch");
-    }
-    assert_eq!(toks.len(), outs.len(), "token/output arity mismatch");
-    accumulate_range_crumbs(toks, w, lut, k_quad_block.max(1), 0, w.n_cols, outs);
-}
-
-/// Multi-token (M x K) @ (K x N) over crumb-packed weights: the 2-bit
-/// counterpart of [`execute_batch_tiled`], same tiling/threading scheme
-/// (`cfg.k_pair_block` reinterpreted as the K-quad tile depth), bit-exact
-/// with per-token `execute_direct` for every tile shape and thread count.
-pub fn execute_batch_tiled_crumbs(
-    toks: &[QuantToken],
-    w: &CrumbWeights,
-    lut: &CartesianLut,
-    cfg: &TileCfg,
-) -> Vec<Vec<f32>> {
-    for t in toks {
-        assert_eq!(t.idx.len(), w.n_rows, "reduction length mismatch");
-    }
-    if toks.is_empty() {
-        return Vec::new();
-    }
-    let n = w.n_cols;
-    let k_quad_block = cfg.k_pair_block.max(1);
-    let ranges = col_ranges(n, cfg);
-    let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; n]).collect();
-
-    if ranges.len() <= 1 {
-        let mut views: Vec<&mut [f32]> = out.iter_mut().map(Vec::as_mut_slice).collect();
-        accumulate_range_crumbs(toks, w, lut, k_quad_block, 0, n, &mut views);
-    } else {
-        std::thread::scope(|s| {
-            let workers: Vec<_> = ranges
-                .iter()
-                .map(|&(j0, j1)| {
-                    s.spawn(move || {
-                        let mut local: Vec<Vec<f32>> =
-                            toks.iter().map(|_| vec![0.0f32; j1 - j0]).collect();
-                        let mut views: Vec<&mut [f32]> =
-                            local.iter_mut().map(Vec::as_mut_slice).collect();
-                        accumulate_range_crumbs(toks, w, lut, k_quad_block, j0, j1, &mut views);
-                        drop(views);
-                        (j0, local)
-                    })
-                })
-                .collect();
-            for worker in workers {
-                let (j0, local) = worker.join().expect("waq gemm worker panicked");
-                for (dst, src) in out.iter_mut().zip(local) {
-                    dst[j0..j0 + src.len()].copy_from_slice(&src);
-                }
-            }
-        });
-    }
-
-    for (tok, row) in toks.iter().zip(out.iter_mut()) {
-        for (j, a) in row.iter_mut().enumerate() {
-            *a *= tok.scale * w.col_scales[j];
-        }
+    for (j, a) in out.iter_mut().enumerate() {
+        *a *= tok.scale * w.col_scales[j];
     }
     out
 }
@@ -434,10 +357,11 @@ fn col_ranges(n: usize, cfg: &TileCfg) -> Vec<(usize, usize)> {
     even_ranges(n, t)
 }
 
-/// Multi-token (M x K) @ (K x N) over packed weights: cache-tiled over N
-/// and K with the weight tile reused across every token of the batch, and
-/// column ranges fanned out over scoped worker threads. Bit-exact with
-/// per-token `execute_direct` for every tile shape and thread count.
+/// Multi-token (M x K) @ (K x N) over packed weights of any stream width:
+/// cache-tiled over N and K with the weight tile reused across every token
+/// of the batch, and column ranges fanned out over scoped worker threads.
+/// Bit-exact with per-token `execute_direct` for every tile shape, thread
+/// count, stream width, and scale-group size.
 pub fn execute_batch_tiled(
     toks: &[QuantToken],
     w: &PackedWeights,
@@ -451,13 +375,13 @@ pub fn execute_batch_tiled(
         return Vec::new();
     }
     let n = w.n_cols;
-    let k_pair_block = cfg.k_pair_block.max(1);
+    let k_block = cfg.k_pair_block.max(1);
     let ranges = col_ranges(n, cfg);
     let mut out: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; n]).collect();
 
     if ranges.len() <= 1 {
         let mut views: Vec<&mut [f32]> = out.iter_mut().map(Vec::as_mut_slice).collect();
-        accumulate_range(toks, w, lut, k_pair_block, 0, n, &mut views);
+        accumulate_range(toks, w, lut, k_block, 0, n, &mut views);
     } else {
         std::thread::scope(|s| {
             let workers: Vec<_> = ranges
@@ -468,7 +392,7 @@ pub fn execute_batch_tiled(
                             toks.iter().map(|_| vec![0.0f32; j1 - j0]).collect();
                         let mut views: Vec<&mut [f32]> =
                             local.iter_mut().map(Vec::as_mut_slice).collect();
-                        accumulate_range(toks, w, lut, k_pair_block, j0, j1, &mut views);
+                        accumulate_range(toks, w, lut, k_block, j0, j1, &mut views);
                         drop(views);
                         (j0, local)
                     })
@@ -501,17 +425,18 @@ mod tests {
     use crate::tensor::Matrix;
     use crate::util::rng::Rng;
 
-    fn setup(
+    fn setup_grouped(
         seed: u64,
         k: usize,
         n: usize,
         a_bits: u32,
         w_bits: u32,
+        group: usize,
         batch: usize,
     ) -> (Vec<QuantToken>, QuantWeights, CartesianLut) {
         let mut rng = Rng::new(seed);
         let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
-        let qw = quant::quantize_weights(&wmat, w_bits);
+        let qw = quant::quantize_weights_grouped(&wmat, None, w_bits, group);
         let calib: Vec<Vec<f32>> =
             (0..6).map(|_| rng.heavy_tailed_vec(k, 0.02, 10.0)).collect();
         let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
@@ -524,23 +449,36 @@ mod tests {
         (toks, qw, lut)
     }
 
+    fn setup(
+        seed: u64,
+        k: usize,
+        n: usize,
+        a_bits: u32,
+        w_bits: u32,
+        batch: usize,
+    ) -> (Vec<QuantToken>, QuantWeights, CartesianLut) {
+        setup_grouped(seed, k, n, a_bits, w_bits, 0, batch)
+    }
+
     #[test]
-    fn packed_bit_exact_with_direct() {
-        // even and odd K, including a K=1 tail-only edge
-        for &(k, n) in &[(64usize, 24usize), (65, 24), (1, 8), (2, 8), (129, 17)] {
-            let (toks, qw, lut) = setup(10 + k as u64, k, n, 4, 4, 1);
-            let pw = qw.pack();
-            let direct = waq::execute_direct(&toks[0], &qw, &lut);
-            let packed = execute_packed(&toks[0], &pw, &lut);
-            assert_eq!(packed, direct, "({k},{n}) not bit-exact");
+    fn packed_bit_exact_with_direct_every_width() {
+        // even and odd K, including tail-only edges for both densities
+        for w_bits in [2u32, 3, 4] {
+            for &(k, n) in &[(64usize, 24usize), (65, 24), (66, 17), (67, 9), (1, 8), (3, 8)] {
+                let (toks, qw, lut) = setup(10 + k as u64 + w_bits as u64, k, n, 4, w_bits, 1);
+                let pw = qw.pack();
+                let direct = waq::execute_direct(&toks[0], &qw, &lut);
+                let packed = execute_packed(&toks[0], &pw, &lut);
+                assert_eq!(packed, direct, "({k},{n}) W{w_bits} not bit-exact");
+            }
         }
     }
 
     #[test]
     fn packed_bit_exact_mixed_bitwidths() {
-        // 3-bit activations x 4-bit weights and 4x3
-        for &(ab, wb) in &[(3u32, 4u32), (4, 3), (3, 3)] {
-            let (toks, qw, lut) = setup(77 + ab as u64, 96, 20, ab, wb, 1);
+        // 3-bit activations x {4,3,2}-bit weights and 4x3
+        for &(ab, wb) in &[(3u32, 4u32), (4, 3), (3, 3), (3, 2)] {
+            let (toks, qw, lut) = setup(77 + ab as u64 + wb as u64, 96, 20, ab, wb, 1);
             let pw = qw.pack();
             let direct = waq::execute_direct(&toks[0], &qw, &lut);
             let packed = execute_packed(&toks[0], &pw, &lut);
@@ -550,14 +488,46 @@ mod tests {
 
     #[test]
     fn tiled_bit_exact_across_tiles_and_threads() {
-        let (toks, qw, lut) = setup(5, 97, 41, 4, 4, 5);
-        let pw = qw.pack();
-        let want: Vec<Vec<f32>> = toks.iter().map(|t| waq::execute_direct(t, &qw, &lut)).collect();
-        for threads in [1usize, 2, 3, 8] {
-            for (nb, kb) in [(8usize, 3usize), (16, 1), (512, 128), (5, 1000)] {
-                let cfg = TileCfg { n_block: nb, k_pair_block: kb, threads };
-                let got = execute_batch_tiled(&toks, &pw, &lut, &cfg);
-                assert_eq!(got, want, "threads={threads} nb={nb} kb={kb}");
+        for w_bits in [2u32, 3, 4] {
+            let (toks, qw, lut) = setup(5 + w_bits as u64, 97, 41, 4, w_bits, 5);
+            let pw = qw.pack();
+            let want: Vec<Vec<f32>> =
+                toks.iter().map(|t| waq::execute_direct(t, &qw, &lut)).collect();
+            for threads in [1usize, 2, 3, 8] {
+                for (nb, kb) in [(8usize, 3usize), (16, 1), (512, 128), (5, 1000)] {
+                    let cfg = TileCfg { n_block: nb, k_pair_block: kb, threads };
+                    let got = execute_batch_tiled(&toks, &pw, &lut, &cfg);
+                    assert_eq!(got, want, "W{w_bits} threads={threads} nb={nb} kb={kb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_tiled_bit_exact_with_direct() {
+        // per-group scales at every width, ragged final groups, tail rows
+        // landing inside the final group
+        for w_bits in [2u32, 3, 4] {
+            for &(k, n) in &[(64usize, 24usize), (70, 17), (33, 12)] {
+                for group in [4usize, 32] {
+                    let (toks, qw, lut) =
+                        setup_grouped(60 + k as u64 + w_bits as u64, k, n, 4, w_bits, group, 4);
+                    let pw = qw.pack();
+                    let want: Vec<Vec<f32>> =
+                        toks.iter().map(|t| waq::execute_direct(t, &qw, &lut)).collect();
+                    for threads in [1usize, 3] {
+                        for (nb, kb) in [(8usize, 3usize), (512, 128)] {
+                            let cfg = TileCfg { n_block: nb, k_pair_block: kb, threads };
+                            let got = execute_batch_tiled(&toks, &pw, &lut, &cfg);
+                            assert_eq!(
+                                got, want,
+                                "({k},{n}) W{w_bits} g{group} threads={threads} nb={nb} kb={kb}"
+                            );
+                        }
+                    }
+                    let single = execute_packed(&toks[0], &pw, &lut);
+                    assert_eq!(single, want[0], "({k},{n}) W{w_bits} g{group} single-token");
+                }
             }
         }
     }
@@ -576,39 +546,22 @@ mod tests {
     fn accumulate_tiles_is_the_unscaled_kernel() {
         // the slice-level entry point the sharded backend drives: after
         // applying the same per-token/per-column scaling, it equals the
-        // full batched kernel bit-for-bit (odd K exercises the tail row)
-        let (toks, qw, lut) = setup(8, 33, 12, 4, 4, 3);
-        let pw = qw.pack();
-        let mut rows: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; 12]).collect();
-        let mut views: Vec<&mut [f32]> = rows.iter_mut().map(Vec::as_mut_slice).collect();
-        accumulate_tiles(&toks, &pw, &lut, 4, &mut views);
-        drop(views);
-        for (tok, row) in toks.iter().zip(rows.iter_mut()) {
-            for (a, &s) in row.iter_mut().zip(&pw.col_scales) {
-                *a *= tok.scale * s;
-            }
-        }
-        let want = execute_batch_tiled(&toks, &pw, &lut, &TileCfg::single_thread());
-        assert_eq!(rows, want);
-    }
-
-    #[test]
-    fn crumb_kernel_bit_exact_with_direct() {
-        // K % 4 in {0,1,2,3} exercises every tail shape, K=2/3 the
-        // quad-free edge; outliers don't matter here (compensation is a
-        // separate pass) but odd N checks column handling
-        for &(k, n) in &[(64usize, 24usize), (65, 24), (66, 17), (67, 9), (2, 8), (3, 8)] {
-            let (toks, qw, lut) = setup(40 + k as u64, k, n, 4, 2, 3);
-            let cw = qw.pack_crumbs();
-            let want: Vec<Vec<f32>> =
-                toks.iter().map(|t| waq::execute_direct(t, &qw, &lut)).collect();
-            for threads in [1usize, 3] {
-                for (nb, kb) in [(8usize, 3usize), (512, 128), (5, 1000)] {
-                    let cfg = TileCfg { n_block: nb, k_pair_block: kb, threads };
-                    let got = execute_batch_tiled_crumbs(&toks, &cw, &lut, &cfg);
-                    assert_eq!(got, want, "({k},{n}) threads={threads} nb={nb} kb={kb}");
+        // full batched kernel bit-for-bit (odd K exercises the tail row,
+        // both stream densities covered)
+        for w_bits in [2u32, 4] {
+            let (toks, qw, lut) = setup(8 + w_bits as u64, 33, 12, 4, w_bits, 3);
+            let pw = qw.pack();
+            let mut rows: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; 12]).collect();
+            let mut views: Vec<&mut [f32]> = rows.iter_mut().map(Vec::as_mut_slice).collect();
+            accumulate_tiles(&toks, &pw, &lut, 4, &mut views);
+            drop(views);
+            for (tok, row) in toks.iter().zip(rows.iter_mut()) {
+                for (a, &s) in row.iter_mut().zip(&pw.col_scales) {
+                    *a *= tok.scale * s;
                 }
             }
+            let want = execute_batch_tiled(&toks, &pw, &lut, &TileCfg::single_thread());
+            assert_eq!(rows, want, "W{w_bits}");
         }
     }
 
@@ -618,32 +571,12 @@ mod tests {
         // weight codebook with whatever activation width the mode sets)
         for ab in [3u32, 4] {
             let (toks, qw, lut) = setup(90 + ab as u64, 48, 12, ab, 2, 2);
-            let cw = qw.pack_crumbs();
+            let cw = qw.pack();
             let want: Vec<Vec<f32>> =
                 toks.iter().map(|t| waq::execute_direct(t, &qw, &lut)).collect();
-            let got = execute_batch_tiled_crumbs(&toks, &cw, &lut, &TileCfg::default());
+            let got = execute_batch_tiled(&toks, &cw, &lut, &TileCfg::default());
             assert_eq!(got, want, "A{ab}/W2 not bit-exact");
         }
-    }
-
-    #[test]
-    fn accumulate_tiles_crumbs_is_the_unscaled_kernel() {
-        let (toks, qw, lut) = setup(91, 33, 12, 4, 2, 3);
-        let cw = qw.pack_crumbs();
-        let mut rows: Vec<Vec<f32>> = toks.iter().map(|_| vec![0.0f32; 12]).collect();
-        let mut views: Vec<&mut [f32]> = rows.iter_mut().map(Vec::as_mut_slice).collect();
-        accumulate_tiles_crumbs(&toks, &cw, &lut, 4, &mut views);
-        drop(views);
-        for (tok, row) in toks.iter().zip(rows.iter_mut()) {
-            for (a, &s) in row.iter_mut().zip(&cw.col_scales) {
-                *a *= tok.scale * s;
-            }
-        }
-        let want = execute_batch_tiled_crumbs(&toks, &cw, &lut, &TileCfg::single_thread());
-        assert_eq!(rows, want);
-        // empty batch is a no-op, like the nibble kernel
-        let none: Vec<QuantToken> = Vec::new();
-        assert!(execute_batch_tiled_crumbs(&none, &cw, &lut, &TileCfg::default()).is_empty());
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //! read-only state. This module exploits that the same way tensor-parallel
 //! serving does — each [`WaqGemm`](super::WaqGemm)-shaped matrix is split
 //! into `S` column shards *at load time* ([`PackedWeights::slice_cols`]:
-//! row-pair packing preserved, codebook/scales/outlier-dequant state
-//! partitioned per shard, per-shard LUT replica), and one GEMM call
-//! executes all shards concurrently on a persistent worker pool.
+//! stream width (2/3/4-bit) and packing preserved, codebook / column
+//! scales / per-group scale grid / outlier-dequant state partitioned per
+//! shard, per-shard LUT replica), and one GEMM call executes all shards
+//! concurrently on a persistent worker pool. One constructor serves every
+//! bit-width — the shard never inspects the stream density.
 //!
 //! # No concat copies, all-gather at nonlinearity boundaries
 //!
@@ -46,10 +48,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::compensation::{compensate_crumbs, compensate_packed};
+use super::compensation::compensate_packed;
 use super::lut::CartesianLut;
-use super::packed::{accumulate_tiles, accumulate_tiles_crumbs, even_ranges};
-use crate::quant::{CrumbWeights, PackedWeights, QuantToken};
+use super::packed::{accumulate_tiles, even_ranges};
+use crate::quant::{PackedWeights, QuantToken};
 
 /// K-pair tile depth used inside every shard (the same default the
 /// unsharded batched kernel uses; per-column accumulation order — and
@@ -188,37 +190,13 @@ impl Drop for ShardPool {
     }
 }
 
-/// The weight form one shard streams: nibble-packed (>= 3-bit codebooks)
-/// or crumb-packed (<= 2-bit, the speculative-draft regime). Both slice
-/// by columns at load time and run the same per-column accumulation
-/// order, so shard results stay bit-exact with the matching unsharded
-/// kernel either way.
-enum ShardWeights {
-    Nibble(PackedWeights),
-    Crumb(CrumbWeights),
-}
-
-impl ShardWeights {
-    fn n_cols(&self) -> usize {
-        match self {
-            ShardWeights::Nibble(w) => w.n_cols,
-            ShardWeights::Crumb(w) => w.n_cols,
-        }
-    }
-
-    fn col_scales(&self) -> &[f32] {
-        match self {
-            ShardWeights::Nibble(w) => &w.col_scales,
-            ShardWeights::Crumb(w) => &w.col_scales,
-        }
-    }
-}
-
 /// One column shard: a contiguous output-column slice of the packed
-/// weights plus its own LUT replica (read-only state is per-shard, as it
-/// would be per-rank in multi-device tensor parallelism).
+/// weights (at whatever stream width the full matrix carries — the
+/// kernel is width-generic) plus its own LUT replica (read-only state is
+/// per-shard, as it would be per-rank in multi-device tensor
+/// parallelism).
 struct Shard {
-    w: ShardWeights,
+    w: PackedWeights,
     lut: CartesianLut,
 }
 
@@ -232,16 +210,9 @@ impl Shard {
         for o in outs.iter_mut() {
             o.fill(0.0);
         }
-        match &self.w {
-            ShardWeights::Nibble(w) => {
-                accumulate_tiles(toks, w, &self.lut, SHARD_K_PAIR_BLOCK, &mut outs);
-            }
-            ShardWeights::Crumb(w) => {
-                accumulate_tiles_crumbs(toks, w, &self.lut, SHARD_K_PAIR_BLOCK, &mut outs);
-            }
-        }
+        accumulate_tiles(toks, &self.w, &self.lut, SHARD_K_PAIR_BLOCK, &mut outs);
         for (tok, o) in toks.iter().zip(outs.iter_mut()) {
-            for (a, &s) in o.iter_mut().zip(self.w.col_scales()) {
+            for (a, &s) in o.iter_mut().zip(&self.w.col_scales) {
                 *a *= tok.scale * s;
             }
         }
@@ -250,10 +221,7 @@ impl Shard {
         // values are bit-identical to the full matrix's, so this is the
         // same math the unsharded compensation applies)
         for (tok, o) in toks.iter().zip(outs.iter_mut()) {
-            match &self.w {
-                ShardWeights::Nibble(w) => compensate_packed(o, tok, w),
-                ShardWeights::Crumb(w) => compensate_crumbs(o, tok, w),
-            }
+            compensate_packed(o, tok, &self.w);
         }
     }
 }
@@ -272,7 +240,9 @@ pub struct ShardedWaqGemm {
 impl ShardedWaqGemm {
     /// Split `w` into (at most) `shards` contiguous column shards —
     /// uneven splits are fine; when `n_cols < shards` the surplus shards
-    /// are simply empty and dropped. `shards == 0` is a config error.
+    /// are simply empty and dropped. Works at every stream width (2/3/4
+    /// bits — including the speculative draft's 2-bit regime, which used
+    /// to need its own constructor). `shards == 0` is a config error.
     pub fn from_packed(
         w: &PackedWeights,
         lut: &CartesianLut,
@@ -287,38 +257,7 @@ impl ShardedWaqGemm {
         // one definition, so the two paths can never split differently
         let parts: Vec<Shard> = even_ranges(n, shards)
             .into_iter()
-            .map(|(j0, j1)| Shard {
-                w: ShardWeights::Nibble(w.slice_cols(j0, j1)),
-                lut: lut.clone(),
-            })
-            .collect();
-        Ok(ShardedWaqGemm {
-            shards: parts,
-            pool,
-            n_rows: w.n_rows,
-            n_cols: n,
-        })
-    }
-
-    /// [`Self::from_packed`] for the crumb-packed 2-bit weight form (the
-    /// speculative draft regime): same column chunking, same pool, same
-    /// bit-exactness contract against the unsharded crumb kernel.
-    pub fn from_crumbs(
-        w: &CrumbWeights,
-        lut: &CartesianLut,
-        shards: usize,
-        pool: Arc<ShardPool>,
-    ) -> Result<ShardedWaqGemm, String> {
-        if shards == 0 {
-            return Err("shard count must be >= 1 (got 0)".into());
-        }
-        let n = w.n_cols;
-        let parts: Vec<Shard> = even_ranges(n, shards)
-            .into_iter()
-            .map(|(j0, j1)| Shard {
-                w: ShardWeights::Crumb(w.slice_cols(j0, j1)),
-                lut: lut.clone(),
-            })
+            .map(|(j0, j1)| Shard { w: w.slice_cols(j0, j1), lut: lut.clone() })
             .collect();
         Ok(ShardedWaqGemm {
             shards: parts,
@@ -366,7 +305,7 @@ impl ShardedWaqGemm {
         for row in out.iter_mut() {
             let mut rest: &mut [f32] = row.as_mut_slice();
             for (si, sh) in self.shards.iter().enumerate() {
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut(sh.w.n_cols());
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(sh.w.n_cols);
                 per_shard[si].push(head);
                 rest = tail;
             }
@@ -495,53 +434,53 @@ mod tests {
         assert!(ShardedWaqGemm::from_packed(&qw.pack(), &lut, 0, pool.clone()).is_err());
         let mut rng = Rng::new(11);
         let qw2 = quant::quantize_weights(&Matrix::random_normal(16, 8, 1.0, &mut rng), 2);
-        assert!(ShardedWaqGemm::from_crumbs(&qw2.pack_crumbs(), &lut, 0, pool).is_err());
+        assert!(ShardedWaqGemm::from_packed(&qw2.pack(), &lut, 0, pool).is_err());
     }
 
     #[test]
-    fn sharded_crumbs_bit_exact_even_and_uneven_splits() {
-        use crate::gemm::execute_batch_tiled_crumbs;
-        // K % 4 in {0,1,2,3} (every crumb tail shape), uneven N splits,
-        // N < shards, outliers on and off
-        for &(k, n, batch, outliers) in &[
-            (64usize, 24usize, 3usize, true),
-            (65, 23, 5, true),
-            (66, 9, 2, false),
-            (67, 3, 1, true),
-        ] {
-            let mut rng = Rng::new(200 + k as u64);
-            let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
-            let qw = quant::quantize_weights(&wmat, 2);
-            let calib: Vec<Vec<f32>> =
-                (0..4).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
-            let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
-            let cfg = OutlierCfg { total_frac: 0.04 };
-            let cb = quant::learn_act_codebook(&refs, None, 4, cfg);
-            let toks: Vec<QuantToken> = (0..batch)
-                .map(|_| {
-                    let x = rng.heavy_tailed_vec(k, 0.02, 8.0);
-                    if outliers {
-                        quant::quantize_token(&x, &cb, cfg)
-                    } else {
-                        quant::quantize_token_with_outliers(&x, &cb, &[])
-                    }
-                })
-                .collect();
-            let lut = CartesianLut::build(&cb, &qw.codebook);
-            let cw = qw.pack_crumbs();
-            let mut want =
-                execute_batch_tiled_crumbs(&toks, &cw, &lut, &TileCfg::single_thread());
-            for (o, t) in want.iter_mut().zip(&toks) {
-                crate::gemm::compensate_crumbs(o, t, &cw);
-            }
-            for shards in [1usize, 2, 3, 7] {
-                let pool = Arc::new(ShardPool::new(shards).unwrap());
-                let sh = ShardedWaqGemm::from_crumbs(&cw, &lut, shards, pool).unwrap();
-                assert_eq!(
-                    sh.execute_batch(&toks),
-                    want,
-                    "({k},{n}) batch {batch} shards {shards}"
-                );
+    fn sharded_bit_exact_uneven_splits_at_every_width() {
+        // the one sharding path serves every stream width: K % 4 in
+        // {0,1,2,3} (every tail shape for both densities), uneven N
+        // splits, N < shards, outliers on and off, grouped and ungrouped
+        // scale grids
+        for w_bits in [2u32, 3, 4] {
+            for &(k, n, batch, outliers, group) in &[
+                (64usize, 24usize, 3usize, true, 0usize),
+                (65, 23, 5, true, 32),
+                (66, 9, 2, false, 0),
+                (67, 3, 1, true, 4),
+            ] {
+                let mut rng = Rng::new(200 + k as u64 + w_bits as u64 * 1000);
+                let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
+                let qw = quant::quantize_weights_grouped(&wmat, None, w_bits, group);
+                let calib: Vec<Vec<f32>> =
+                    (0..4).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
+                let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+                let cfg = OutlierCfg { total_frac: 0.04 };
+                let cb = quant::learn_act_codebook(&refs, None, 4, cfg);
+                let toks: Vec<QuantToken> = (0..batch)
+                    .map(|_| {
+                        let x = rng.heavy_tailed_vec(k, 0.02, 8.0);
+                        if outliers {
+                            quant::quantize_token(&x, &cb, cfg)
+                        } else {
+                            quant::quantize_token_with_outliers(&x, &cb, &[])
+                        }
+                    })
+                    .collect();
+                let lut = CartesianLut::build(&cb, &qw.codebook);
+                let want = reference(&toks, &qw, &lut);
+                let pw = qw.pack();
+                assert_eq!(pw.bits(), w_bits);
+                for shards in [1usize, 2, 3, 7] {
+                    let pool = Arc::new(ShardPool::new(shards).unwrap());
+                    let sh = ShardedWaqGemm::from_packed(&pw, &lut, shards, pool).unwrap();
+                    assert_eq!(
+                        sh.execute_batch(&toks),
+                        want,
+                        "W{w_bits} ({k},{n}) batch {batch} g{group} shards {shards}"
+                    );
+                }
             }
         }
     }

@@ -12,22 +12,26 @@
 use super::lut::CartesianLut;
 use crate::quant::{QuantToken, QuantWeights};
 
-/// out[n] = a_scale * w_scale[n] * sum_k LUT[cat(a_idx[k], w_idx[k, n])]
-/// for one token (M = 1 decode GEMM, the paper's running case).
-pub fn execute_direct(tok: &QuantToken, w: &QuantWeights, lut: &CartesianLut) -> Vec<f32> {
-    assert_eq!(tok.idx.len(), w.n_rows, "reduction length mismatch");
+/// Accumulate reduction rows `[k0, k1)` of the LUT sums into `acc`
+/// (unscaled). Two reduction rows per pass: two independent LUT gathers
+/// per output element break the load-add dependency chain (EXPERIMENTS.md
+/// §Perf iterations 1-2: 768us -> 536us -> measured below on 1024^2).
+/// Masking iw elides the per-element bounds check on the LUT row slice
+/// in release; debug builds assert in-range first — a wrapped index
+/// means corrupt data (e.g. a mixed-bitwidth config feeding 4-bit
+/// indices to a 3-bit LUT), which must fail loudly, not alias entries.
+fn accum_rows(
+    tok: &QuantToken,
+    w: &QuantWeights,
+    lut: &CartesianLut,
+    k0: usize,
+    k1: usize,
+    acc: &mut [f32],
+) {
     let n = w.n_cols;
     let mask = (1usize << lut.n_w_bits) - 1;
-    let mut acc = vec![0.0f32; n];
-    // Process two reduction rows per pass: two independent LUT gathers per
-    // output element break the load-add dependency chain (EXPERIMENTS.md
-    // §Perf iterations 1-2: 768us -> 536us -> measured below on 1024^2).
-    // Masking iw elides the per-element bounds check on the LUT row slice
-    // in release; debug builds assert in-range first — a wrapped index
-    // means corrupt data (e.g. a mixed-bitwidth config feeding 4-bit
-    // indices to a 3-bit LUT), which must fail loudly, not alias entries.
-    let mut k = 0;
-    while k + 1 < w.n_rows {
+    let mut k = k0;
+    while k + 1 < k1 {
         let base0 = (tok.idx[k] as usize) << lut.n_w_bits;
         let base1 = (tok.idx[k + 1] as usize) << lut.n_w_bits;
         let lr0 = &lut.table[base0..base0 + mask + 1];
@@ -44,7 +48,7 @@ pub fn execute_direct(tok: &QuantToken, w: &QuantWeights, lut: &CartesianLut) ->
         }
         k += 2;
     }
-    if k < w.n_rows {
+    if k < k1 {
         let base = (tok.idx[k] as usize) << lut.n_w_bits;
         let lut_row = &lut.table[base..base + mask + 1];
         let wrow = &w.idx[k * n..(k + 1) * n];
@@ -55,6 +59,32 @@ pub fn execute_direct(tok: &QuantToken, w: &QuantWeights, lut: &CartesianLut) ->
                 lut.n_w_bits
             );
             *a += lut_row[iw as usize & mask];
+        }
+    }
+}
+
+/// out[n] = a_scale * w_scale[n] * sum_k LUT[cat(a_idx[k], w_idx[k, n])]
+/// for one token (M = 1 decode GEMM, the paper's running case). When the
+/// weights carry a FineQuant per-group scale grid, each group's partial
+/// sum is folded through its factor before the per-column scaling — this
+/// function is the bit-exactness reference for every packed/sharded
+/// kernel, grouped or not.
+pub fn execute_direct(tok: &QuantToken, w: &QuantWeights, lut: &CartesianLut) -> Vec<f32> {
+    assert_eq!(tok.idx.len(), w.n_rows, "reduction length mismatch");
+    let n = w.n_cols;
+    let mut acc = vec![0.0f32; n];
+    if w.group_scales.is_empty() {
+        accum_rows(tok, w, lut, 0, w.n_rows, &mut acc);
+    } else {
+        let mut gacc = vec![0.0f32; n];
+        for g in 0..w.n_groups() {
+            let (k0, k1) = (g * w.group_size, ((g + 1) * w.group_size).min(w.n_rows));
+            gacc.fill(0.0);
+            accum_rows(tok, w, lut, k0, k1, &mut gacc);
+            let gs = &w.group_scales[g * n..(g + 1) * n];
+            for ((a, &v), &s) in acc.iter_mut().zip(&gacc).zip(gs) {
+                *a += v * s;
+            }
         }
     }
     for (j, a) in acc.iter_mut().enumerate() {
@@ -73,20 +103,35 @@ pub fn execute_histogram(tok: &QuantToken, w: &QuantWeights, lut: &CartesianLut)
     let entries = lut.entries();
     let mut out = vec![0.0f32; n];
     let mut counts = vec![0u32; entries];
+    // one histogram per (output channel, scale group); ungrouped weights
+    // are one whole-column group with unit factor
+    let n_groups = w.n_groups();
     for j in 0..n {
-        counts.iter_mut().for_each(|c| *c = 0);
-        for (k, &ia) in tok.idx.iter().enumerate() {
-            let iw = w.idx[k * n + j];
-            counts[((ia as usize) << lut.n_w_bits) | iw as usize] += 1;
-        }
-        // MAC tree: weighted sum of LUT entries by count
-        let mut acc = 0.0f32;
-        for (e, &c) in counts.iter().enumerate() {
-            if c != 0 {
-                acc += c as f32 * lut.table[e];
+        let mut col = 0.0f32;
+        for g in 0..n_groups {
+            let (k0, k1) = if w.group_scales.is_empty() {
+                (0, w.n_rows)
+            } else {
+                (g * w.group_size, ((g + 1) * w.group_size).min(w.n_rows))
+            };
+            counts.iter_mut().for_each(|c| *c = 0);
+            for (k, &ia) in tok.idx.iter().enumerate().take(k1).skip(k0) {
+                let iw = w.idx[k * n + j];
+                counts[((ia as usize) << lut.n_w_bits) | iw as usize] += 1;
             }
+            // MAC tree: weighted sum of LUT entries by count
+            let mut acc = 0.0f32;
+            for (e, &c) in counts.iter().enumerate() {
+                if c != 0 {
+                    acc += c as f32 * lut.table[e];
+                }
+            }
+            if !w.group_scales.is_empty() {
+                acc *= w.group_scales[g * n + j];
+            }
+            col += acc;
         }
-        out[j] = acc * tok.scale * w.col_scales[j];
+        out[j] = col * tok.scale * w.col_scales[j];
     }
     out
 }
@@ -191,9 +236,33 @@ mod tests {
             idx: vec![15, 0], // 15 is out of range for the 3-bit codebook
             codebook: cb_w,
             col_scales: vec![1.0],
+            group_size: 0,
+            group_scales: vec![],
         };
         let tok = QuantToken { idx: vec![0, 0], scale: 1.0, outliers: vec![] };
         execute_direct(&tok, &qw, &lut);
+    }
+
+    #[test]
+    fn grouped_direct_equals_histogram_and_dequant_matmul() {
+        let mut rng = Rng::new(7);
+        let (k, n) = (70, 12); // ragged final group
+        let wmat = Matrix::random_normal(k, n, 1.0, &mut rng);
+        let qw = quant::quantize_weights_grouped(&wmat, None, 3, 32);
+        let calib: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(k, 1.0)).collect();
+        let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let cfg = OutlierCfg::default();
+        let cb_a = quant::learn_act_codebook(&refs, None, 4, cfg);
+        let x = rng.normal_vec(k, 1.0);
+        let tok = quant::quantize_token(&x, &cb_a, cfg);
+        let lut = CartesianLut::build(&cb_a, &qw.codebook);
+
+        let got = execute_direct(&tok, &qw, &lut);
+        let h = execute_histogram(&tok, &qw, &lut);
+        crate::util::check::assert_allclose(&got, &h, 1e-4, 1e-4, "grouped direct vs histogram");
+        let a_deq = Matrix::from_vec(1, k, tok.dequantize_lookahead(&cb_a));
+        let want = a_deq.matmul(&qw.dequantize());
+        crate::util::check::assert_allclose(&got, want.row(0), 2e-4, 2e-4, "grouped explicit");
     }
 
     #[test]

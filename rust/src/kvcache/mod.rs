@@ -35,9 +35,9 @@
 //! * [`KvPrecision::Quant`] — nA-bit K-Means storage: each `(token, head)`
 //!   row is max-|inlier|-scaled, assigned against a per-layer/per-head
 //!   [`crate::quant::Codebook`] (learned from calibration rows or a
-//!   uniform fallback grid), and packed via `quant::packed` — nibble
-//!   streams ([`crate::quant::PackedIdx`] layout) for 3/4-bit, crumb
-//!   streams ([`crate::quant::PackedCrumbs`]) for 2-bit. An
+//!   uniform fallback grid), and packed via `quant::packed` — the same
+//!   [`crate::quant::PackedStream`] byte layout the GEMM weight streams
+//!   use (nibbles for 3/4-bit, crumbs for 2-bit). An
 //!   Orizuru-detected outlier escape hatch keeps the most extreme
 //!   channels of a row in FP32 (`(channel, value)` pairs applied on top
 //!   of the index stream at read time).

@@ -744,7 +744,7 @@ impl Store {
             }
             Store::Quant(s) => {
                 let hd = s.geom.head_dim;
-                let ipb = s.quantizer.idx_per_byte();
+                let bits = s.quantizer.bits();
                 for head in 0..s.geom.n_heads {
                     let row = s.geom.row(block, head, ti);
                     let kb = s.quantizer.book(layer, head, KvSide::Key);
@@ -754,10 +754,10 @@ impl Store {
                     let ko = &mut k_out[head * hd..(head + 1) * hd];
                     let vo = &mut v_out[head * hd..(head + 1) * hd];
                     for (ch, o) in ko.iter_mut().enumerate() {
-                        *o = kb.value(read_idx(kbytes, ipb, ch)) * s.k_scale[row];
+                        *o = kb.value(read_idx(kbytes, bits, ch)) * s.k_scale[row];
                     }
                     for (ch, o) in vo.iter_mut().enumerate() {
-                        *o = vb.value(read_idx(vbytes, ipb, ch)) * s.v_scale[row];
+                        *o = vb.value(read_idx(vbytes, bits, ch)) * s.v_scale[row];
                     }
                     for &(c, val) in &s.k_out[row] {
                         ko[c as usize] = val;
@@ -788,13 +788,13 @@ impl Store {
                 let book = s.quantizer.book(layer, head, KvSide::Key);
                 let bytes = &s.k_idx[row * s.row_bytes..(row + 1) * s.row_bytes];
                 let scale = s.k_scale[row];
-                let ipb = s.quantizer.idx_per_byte();
+                let bits = s.quantizer.bits();
                 let mut acc = 0f32;
                 for (ch, &qv) in q.iter().enumerate() {
-                    acc += qv * book.value(read_idx(bytes, ipb, ch)) * scale;
+                    acc += qv * book.value(read_idx(bytes, bits, ch)) * scale;
                 }
                 for &(c, val) in &s.k_out[row] {
-                    let base = book.value(read_idx(bytes, ipb, c as usize)) * scale;
+                    let base = book.value(read_idx(bytes, bits, c as usize)) * scale;
                     acc += q[c as usize] * (val - base);
                 }
                 acc
@@ -826,12 +826,12 @@ impl Store {
                 let book = s.quantizer.book(layer, head, KvSide::Val);
                 let bytes = &s.v_idx[row * s.row_bytes..(row + 1) * s.row_bytes];
                 let scale = s.v_scale[row];
-                let ipb = s.quantizer.idx_per_byte();
+                let bits = s.quantizer.bits();
                 for (ch, o) in out.iter_mut().enumerate() {
-                    *o += w * book.value(read_idx(bytes, ipb, ch)) * scale;
+                    *o += w * book.value(read_idx(bytes, bits, ch)) * scale;
                 }
                 for &(c, val) in &s.v_out[row] {
-                    let base = book.value(read_idx(bytes, ipb, c as usize)) * scale;
+                    let base = book.value(read_idx(bytes, bits, c as usize)) * scale;
                     out[c as usize] += w * (val - base);
                 }
             }

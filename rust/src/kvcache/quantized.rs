@@ -2,8 +2,9 @@
 //!
 //! Each appended `(token, head)` K or V row is quantized independently:
 //! max-|inlier| scale, nearest-centroid assignment against a
-//! per-layer/per-head codebook, and `quant::packed` index streams
-//! (nibbles at 3/4 bits, crumbs at 2 bits). Codebooks are learned from
+//! per-layer/per-head codebook, and `quant::packed` index streams — the
+//! same [`PackedStream`] byte layout the GEMM weights use (nibbles at
+//! 3/4 bits, crumbs at 2 bits). Codebooks are learned from
 //! calibration rows when a backend has them (SKIM-style: K-Means holds
 //! accuracy at any bit-width) or fall back to a uniform grid over the
 //! normalized range (RTN-like). The outlier escape hatch routes the most
@@ -12,7 +13,8 @@
 
 use crate::orizuru;
 use crate::quant::kmeans::kmeans_1d;
-use crate::quant::{Codebook, PackedCrumbs, PackedIdx};
+use crate::quant::packed::idx_per_byte;
+use crate::quant::{Codebook, PackedStream};
 
 /// Which side of the cache a row belongs to (separate codebooks: K rows
 /// feed dot products with queries, V rows feed the weighted mix — their
@@ -151,13 +153,10 @@ impl KvQuantizer {
         self.outliers_per_side
     }
 
-    /// Packed indices per byte: nibbles (2) at 3/4 bits, crumbs (4) at 2.
+    /// Packed indices per byte: nibbles (2) at 3/4 bits, crumbs (4) at 2
+    /// — the one density rule, shared with the GEMM weight streams.
     pub fn idx_per_byte(&self) -> usize {
-        if self.bits <= 2 {
-            4
-        } else {
-            2
-        }
+        idx_per_byte(self.bits)
     }
 
     /// Packed bytes per cache row.
@@ -207,24 +206,14 @@ impl KvQuantizer {
         }
         let scale = m.max(1e-12);
         let book = self.book(layer, head, side);
-        let crumbs = self.idx_per_byte() == 4;
         for (ch, &v) in row.iter().enumerate() {
-            let i = book.assign(v / scale);
-            if crumbs {
-                PackedCrumbs::set_in(out_bytes, ch, i);
-            } else {
-                PackedIdx::set_in(out_bytes, ch, i);
-            }
+            PackedStream::set_in(out_bytes, self.bits, ch, book.assign(v / scale));
         }
         // zero any tail padding in the final byte (reused pool slices may
         // hold a previous tenant's bits there)
         if self.head_dim % self.idx_per_byte() != 0 {
             for ch in self.head_dim..out_bytes.len() * self.idx_per_byte() {
-                if crumbs {
-                    PackedCrumbs::set_in(out_bytes, ch, 0);
-                } else {
-                    PackedIdx::set_in(out_bytes, ch, 0);
-                }
+                PackedStream::set_in(out_bytes, self.bits, ch, 0);
             }
         }
         let outliers = outs.iter().map(|&c| (c as u16, row[c as usize])).collect();
@@ -240,16 +229,12 @@ impl KvQuantizer {
     }
 }
 
-/// Read one logical index from a packed row — thin dispatch onto the
-/// `quant::packed` layout contract (`PackedIdx::get_in` /
-/// `PackedCrumbs::get_in`), so the bit layout lives in exactly one place.
+/// Read one logical index from a packed row — thin alias of the
+/// `quant::packed` layout contract ([`PackedStream::get_in`]), so the bit
+/// layout lives in exactly one place.
 #[inline]
-pub(crate) fn read_idx(bytes: &[u8], idx_per_byte: usize, ch: usize) -> u8 {
-    if idx_per_byte == 2 {
-        PackedIdx::get_in(bytes, ch)
-    } else {
-        PackedCrumbs::get_in(bytes, ch)
-    }
+pub(crate) fn read_idx(bytes: &[u8], bits: u32, ch: usize) -> u8 {
+    PackedStream::get_in(bytes, bits, ch)
 }
 
 #[cfg(test)]
@@ -279,7 +264,7 @@ mod tests {
             let book = q.book(0, 0, KvSide::Key);
             let max_cell = 2.0 * qr.scale / (1u32 << bits) as f32 + 1e-5;
             for (ch, &v) in row.iter().enumerate() {
-                let deq = book.value(read_idx(&qr.bytes, q.idx_per_byte(), ch)) * qr.scale;
+                let deq = book.value(read_idx(&qr.bytes, q.bits(), ch)) * qr.scale;
                 assert!(
                     (v - deq).abs() <= max_cell,
                     "bits {bits} ch {ch}: {v} vs {deq}"
@@ -302,7 +287,7 @@ mod tests {
                 let book = q.book(0, 0, KvSide::Key);
                 for (ch, &v) in row.iter().enumerate() {
                     let deq =
-                        book.value(read_idx(&qr.bytes, q.idx_per_byte(), ch)) * qr.scale;
+                        book.value(read_idx(&qr.bytes, q.bits(), ch)) * qr.scale;
                     e += ((v - deq) as f64).powi(2);
                 }
             }
@@ -328,11 +313,7 @@ mod tests {
             let (scale, _) = q.quantize_row_into(0, 0, KvSide::Key, &row, &mut dirty);
             let book = q.book(0, 0, KvSide::Key);
             let idx: Vec<u8> = row.iter().map(|&v| book.assign(v / scale)).collect();
-            let packed = if q.idx_per_byte() == 4 {
-                PackedCrumbs::pack(&idx).bytes
-            } else {
-                PackedIdx::pack(&idx).bytes
-            };
+            let packed = PackedStream::pack(&idx, bits).bytes;
             assert_eq!(dirty, packed, "hd {hd} bits {bits}");
             assert_eq!(q.quantize_row(0, 0, KvSide::Key, &row).bytes, packed);
         }

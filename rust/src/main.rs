@@ -6,11 +6,21 @@
 //!   train [--preset P] [--steps N] [--lr X] [--corpus C] [--out CKPT]
 //!   serve [--preset P] [--config FILE] [--port N] [--ckpt FILE]
 //!       [--backend SPEC] [--kv-bits 32|4|3|2] [--prefix-cache on|off]
+//!       [--wbits 2|3|4|auto] [--wbits-budget B] [--wbits-group N]
 //!       [--sched burst|chunked] [--prefill-chunk N]
-//!       [--shards N] [--spec-k N] [--draft-wbits 2|3] [--queue-cap N]
+//!       [--shards N] [--spec-k N] [--draft-wbits 2|3|4] [--queue-cap N]
 //!       [--default-deadline-ms MS] [--max-conns N] [--read-timeout-ms MS]
 //!       [--chaos-rate R] [--chaos-seed S] [--chaos-kv-pressure R]
 //!       [--drain-ms MS]
+//!       `--wbits` picks the native backends' weight bit-width: a fixed
+//!       2/3/4 quantizes every linear uniformly, while `auto` runs the
+//!       calibration-driven per-layer planner — each linear's output MSE
+//!       is measured under 2/3/4-bit codebooks and bits are assigned
+//!       greedily against the `--wbits-budget B` average-bits budget
+//!       (default 3.0). The served plan rides along in the stats dump
+//!       (`wbits_plan`/`wbits_avg`). `--wbits-group N` sets the
+//!       FineQuant-style per-group weight-scale granularity in reduction
+//!       rows (default 128; 0 = one scale per column).
 //!       `--sched chunked` switches the engine to iteration-level
 //!       scheduling: every step runs one mixed backend pass of the
 //!       active decode slots plus a budgeted chunk of pending prefill
@@ -44,8 +54,8 @@
 //!       splits every linear into `--shards N` tensor-parallel column
 //!       shards on a persistent worker pool (bit-exact with
 //!       `native-packed`). `native-spec` serves speculative decoding: a
-//!       low-bit draft (`--draft-wbits {2,3}`; 2-bit runs the
-//!       crumb-packed kernel) proposes up to `--spec-k N` tokens per
+//!       low-bit draft (`--draft-wbits {2,3,4}`; 2-bit streams four
+//!       reduction rows per byte) proposes up to `--spec-k N` tokens per
 //!       round and the packed target verifies them in ONE stacked
 //!       LUT-GEMM pass — greedy output is bit-exact with `native-packed`
 //!       (`--shards` is ignored by this backend). `--kv-bits` picks the
@@ -60,6 +70,7 @@ use std::io::Write;
 use anyhow::{anyhow, Result};
 use kllm::coordinator::{
     serve_tcp_with, BackendSpec, ChaosCfg, Coordinator, EngineConfig, KvBits, SchedPolicy, TcpCfg,
+    WbitsSpec,
 };
 use kllm::eval::{run_experiment, Corpus, ExperimentCtx, ALL_IDS};
 use kllm::runtime::{artifacts_dir, Manifest, ParamSet, Runtime};
@@ -173,8 +184,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "preset", "config", "port", "ckpt", "requests", "max-new", "backend", "kv-bits",
         "prefix-cache", "sched", "prefill-chunk", "shards", "spec-k", "draft-wbits",
-        "queue-cap", "default-deadline-ms", "max-conns", "read-timeout-ms", "chaos-seed",
-        "chaos-rate", "chaos-kv-pressure", "drain-ms",
+        "wbits", "wbits-budget", "wbits-group", "queue-cap", "default-deadline-ms",
+        "max-conns", "read-timeout-ms", "chaos-seed", "chaos-rate", "chaos-kv-pressure",
+        "drain-ms",
     ])
     .map_err(|e| anyhow!(e))?;
     let mut preset = args.str_or("preset", "test");
@@ -207,8 +219,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Err(anyhow!("--spec-k 0 is invalid: propose at least 1 draft token"));
     }
     let draft_wbits = args.usize_or("draft-wbits", 2).map_err(|e| anyhow!(e))? as u32;
-    if !matches!(draft_wbits, 2 | 3) {
-        return Err(anyhow!("--draft-wbits must be 2 or 3, got {draft_wbits}"));
+    if !matches!(draft_wbits, 2 | 3 | 4) {
+        return Err(anyhow!("--draft-wbits must be 2, 3, or 4, got {draft_wbits}"));
+    }
+    // native weight width: fixed 2/3/4 or the calibration-driven planner
+    // (`auto` + `--wbits-budget`); the backend constructor re-validates
+    let wbits = match args.str_or("wbits", "4").as_str() {
+        "auto" => {
+            let budget = args.f64_or("wbits-budget", 3.0).map_err(|e| anyhow!(e))?;
+            if !(2.0..=4.0).contains(&budget) {
+                return Err(anyhow!("--wbits-budget must be in [2, 4], got {budget}"));
+            }
+            WbitsSpec::Auto { budget }
+        }
+        fixed => match fixed.parse::<u32>() {
+            Ok(b) if (2..=4).contains(&b) => WbitsSpec::Uniform(b),
+            _ => return Err(anyhow!("--wbits must be 2, 3, 4, or auto, got '{fixed}'")),
+        },
+    };
+    let w_group = args.usize_or("wbits-group", 128).map_err(|e| anyhow!(e))?;
+    if w_group % 4 != 0 {
+        return Err(anyhow!(
+            "--wbits-group must be a multiple of 4 (0 = one scale per column), got {w_group}"
+        ));
     }
     // serving-robustness knobs (admission control, deadlines, chaos)
     let queue_cap = args.usize_or("queue-cap", 0).map_err(|e| anyhow!(e))?;
@@ -269,6 +302,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             shards,
             spec_k,
             draft_wbits,
+            wbits,
+            w_group,
             queue_cap,
             default_deadline_ms,
             chaos,

@@ -19,5 +19,8 @@ pub use activation::{
 };
 pub use codebook::Codebook;
 pub use outlier::OutlierCfg;
-pub use packed::{CrumbWeights, PackedCrumbs, PackedIdx, PackedWeights};
-pub use weights::{quantize_weights, quantize_weights_weighted, QuantWeights};
+pub use packed::{PackedStream, PackedWeights};
+pub use weights::{
+    plan_bits, quantize_weights, quantize_weights_grouped, quantize_weights_weighted,
+    QuantWeights,
+};

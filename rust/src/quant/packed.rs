@@ -1,201 +1,244 @@
-//! Nibble-packed index storage (two 4-bit K-Means indices per byte).
+//! Any-bit packed index storage (runtime bit-width 2/3/4).
 //!
 //! The WAQ datapath is memory-bandwidth-bound at decode, yet the plain
 //! `QuantWeights`/`QuantToken` forms spend a full byte per <=4-bit index —
-//! twice the traffic the quantization scheme was chosen to avoid. This
-//! module provides the packed forms the fast GEMM backend
-//! (`gemm::packed`) streams:
+//! several times the traffic the quantization scheme was chosen to avoid.
+//! This module provides the packed forms the fast GEMM backend
+//! (`gemm::packed`) streams, unified across every codebook width the repo
+//! serves:
 //!
-//! * [`PackedIdx`] — a flat nibble stream for any index sequence
-//!   (activation tokens, weight tails). Element `2i` lives in the HIGH
-//!   nibble of byte `i`, element `2i+1` in the LOW nibble, so a byte reads
-//!   left-to-right like the index stream it encodes.
+//! * [`PackedStream`] — a flat index sequence at a runtime bit-width.
+//!   2-bit streams pack four "crumbs" per byte; 3- and 4-bit streams pack
+//!   two nibbles per byte (a 3-bit index rides in a nibble: byte-aligned
+//!   streaming beats the 4/3x density of true bit-packing on this path).
+//!   Both layouts are high-first — element 0 lives in the top lanes of
+//!   byte 0, so a byte reads left-to-right like the stream it encodes.
 //! * [`PackedWeights`] — the K x N weight index matrix packed along the
-//!   *reduction* dimension: byte `pairs[p * n_cols + j]` holds
-//!   `idx[2p][j] << 4 | idx[2p+1][j]`. Pairing along K is what lets the
-//!   GEMM kernel fuse two LUT rows into one 256-entry table and do one
-//!   lookup per two MACs (see `gemm::packed` for the kernel-side story).
-//!   An odd final row is kept as a nibble-packed tail.
+//!   *reduction* dimension, `rows_per_byte` rows per byte (2 for nibble
+//!   widths, 4 for crumbs). Packing along K is what lets the GEMM kernel
+//!   fuse LUT rows and do one lookup per several MACs (see `gemm::packed`
+//!   for the kernel-side story). The `n_rows % rows_per_byte` final rows
+//!   are kept as column-packed [`PackedStream`] tails. Carries the
+//!   optional FineQuant per-group scale grid alongside the per-column
+//!   scales (see `quant::weights::quantize_weights_grouped`).
 //!
 //! Packing is lossless for any codebook of <= 16 centroids (<= 4 bits),
-//! which covers every WAQ configuration in the paper (3- and 4-bit).
+//! which covers every WAQ configuration in the paper plus the 2-bit
+//! speculative-draft regime.
 
 use super::codebook::Codebook;
 use super::weights::QuantWeights;
 
-/// A flat sequence of 4-bit indices, two per byte (high nibble first).
+/// Logical indices stored per byte at a given stream width: four for
+/// 2-bit crumbs, two for 3-/4-bit nibbles.
+#[inline]
+pub fn idx_per_byte(bits: u32) -> usize {
+    if bits <= 2 {
+        4
+    } else {
+        2
+    }
+}
+
+/// A flat sequence of b-bit indices (b in 2..=4), packed high-first.
+///
+/// 2-bit: element `4i` lives in bits 7..6 of byte `i`, element `4i+3` in
+/// bits 1..0. 3-/4-bit: element `2i` lives in the HIGH nibble of byte
+/// `i`, element `2i+1` in the LOW nibble. Unused tail lanes are zeroed.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub struct PackedIdx {
-    /// `len.div_ceil(2)` bytes; an odd tail element occupies the high
-    /// nibble of the last byte with the low nibble zeroed.
+pub struct PackedStream {
+    /// `len.div_ceil(idx_per_byte(bits))` bytes.
     pub bytes: Vec<u8>,
     /// logical number of indices
     pub len: usize,
+    bits: u32,
 }
 
-impl PackedIdx {
-    /// Pack a byte-per-index stream. Every index must fit in 4 bits —
-    /// enforced with a hard assert even in release, because a wide index
-    /// would bleed into its neighbor's nibble and corrupt both values
-    /// (packing is a cold path; the check is one branch per pair).
-    pub fn pack(idx: &[u8]) -> PackedIdx {
-        let mut bytes = Vec::with_capacity(idx.len().div_ceil(2));
-        let mut chunks = idx.chunks_exact(2);
-        for pair in &mut chunks {
-            assert!(pair[0] < 16 && pair[1] < 16, "index does not fit in a nibble");
-            bytes.push((pair[0] << 4) | pair[1]);
-        }
-        if let &[tail] = chunks.remainder() {
-            assert!(tail < 16, "index does not fit in a nibble");
-            bytes.push(tail << 4);
-        }
-        PackedIdx { bytes, len: idx.len() }
-    }
-
-    /// Inverse of [`PackedIdx::pack`].
-    pub fn unpack(&self) -> Vec<u8> {
-        (0..self.len).map(|i| self.get(i)).collect()
-    }
-
-    /// Read one logical index.
-    #[inline]
-    pub fn get(&self, i: usize) -> u8 {
-        debug_assert!(i < self.len);
-        Self::get_in(&self.bytes, i)
-    }
-
-    /// Read one logical index from any nibble-packed byte slice (the
-    /// layout contract for external pools, e.g. the KV-cache store).
-    #[inline]
-    pub fn get_in(bytes: &[u8], i: usize) -> u8 {
-        let b = bytes[i / 2];
-        if i % 2 == 0 {
-            b >> 4
-        } else {
-            b & 0x0F
-        }
-    }
-
-    /// Write one logical index into a nibble-packed byte slice in place.
-    #[inline]
-    pub fn set_in(bytes: &mut [u8], i: usize, v: u8) {
-        // hard assert even in release, for the same reason as `pack`: a
-        // wide index would bleed into the neighboring nibble
-        assert!(v < 16, "index does not fit in a nibble");
-        let b = &mut bytes[i / 2];
-        if i % 2 == 0 {
-            *b = (*b & 0x0F) | (v << 4);
-        } else {
-            *b = (*b & 0xF0) | v;
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    /// Bytes of index storage (exactly half the unpacked stream, rounded
-    /// up).
-    pub fn storage_bytes(&self) -> usize {
-        self.bytes.len()
-    }
-}
-
-/// A flat sequence of 2-bit indices ("crumbs"), four per byte, high-first:
-/// element `4i` lives in bits 7..6 of byte `i`, element `4i+3` in bits
-/// 1..0 — a byte reads left-to-right like the index stream it encodes
-/// (the crumb analogue of [`PackedIdx`]). Used by the 2-bit KV-cache
-/// store, where even nibble packing would waste half the stream.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct PackedCrumbs {
-    /// `len.div_ceil(4)` bytes; tail elements occupy the high crumbs of
-    /// the last byte with unused crumbs zeroed.
-    pub bytes: Vec<u8>,
-    /// logical number of indices
-    pub len: usize,
-}
-
-impl PackedCrumbs {
-    /// Pack a byte-per-index stream. Every index must fit in 2 bits —
-    /// hard assert even in release (a wide index would corrupt up to
-    /// three neighbors; packing is a cold path).
-    pub fn pack(idx: &[u8]) -> PackedCrumbs {
-        let mut bytes = Vec::with_capacity(idx.len().div_ceil(4));
-        for quad in idx.chunks(4) {
+impl PackedStream {
+    /// Pack a byte-per-index stream at width `bits`. Every index must fit
+    /// in `bits` bits — enforced with a hard assert even in release,
+    /// because a wide index would bleed into its neighbor's lane and
+    /// corrupt both values (packing is a cold path; the check is one
+    /// branch per element).
+    pub fn pack(idx: &[u8], bits: u32) -> PackedStream {
+        assert!((2..=4).contains(&bits), "unsupported stream width: {bits} bits");
+        let per = idx_per_byte(bits);
+        let lane = 8 / per; // bits per storage lane (2 or 4)
+        let mut bytes = Vec::with_capacity(idx.len().div_ceil(per));
+        for chunk in idx.chunks(per) {
             let mut b = 0u8;
-            for (i, &v) in quad.iter().enumerate() {
-                assert!(v < 4, "index does not fit in a crumb");
-                b |= v << (6 - 2 * i);
+            for (i, &v) in chunk.iter().enumerate() {
+                assert!((v as u32) < (1 << bits), "index {v} does not fit in {bits} bits");
+                b |= v << (8 - lane * (i + 1));
             }
             bytes.push(b);
         }
-        PackedCrumbs { bytes, len: idx.len() }
+        PackedStream { bytes, len: idx.len(), bits }
     }
 
-    /// Inverse of [`PackedCrumbs::pack`].
+    /// Inverse of [`PackedStream::pack`].
     pub fn unpack(&self) -> Vec<u8> {
         (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// The stream's logical bit-width (2, 3, or 4).
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        self.bits
     }
 
     /// Read one logical index.
     #[inline]
     pub fn get(&self, i: usize) -> u8 {
         debug_assert!(i < self.len);
-        Self::get_in(&self.bytes, i)
+        Self::get_in(&self.bytes, self.bits, i)
     }
 
-    /// Read one logical index from any crumb-packed byte slice (the
-    /// layout contract for external pools, e.g. the KV-cache store).
+    /// Read one logical index from any packed byte slice at width `bits`
+    /// (the layout contract for external pools, e.g. the KV-cache store).
     #[inline]
-    pub fn get_in(bytes: &[u8], i: usize) -> u8 {
-        (bytes[i / 4] >> (6 - 2 * (i % 4))) & 0x03
+    pub fn get_in(bytes: &[u8], bits: u32, i: usize) -> u8 {
+        if bits <= 2 {
+            (bytes[i / 4] >> (6 - 2 * (i % 4))) & 0x03
+        } else {
+            let b = bytes[i / 2];
+            if i % 2 == 0 {
+                b >> 4
+            } else {
+                b & 0x0F
+            }
+        }
     }
 
-    /// Write one logical index into a crumb-packed byte slice in place.
+    /// Write one logical index into a packed byte slice in place.
     #[inline]
-    pub fn set_in(bytes: &mut [u8], i: usize, v: u8) {
+    pub fn set_in(bytes: &mut [u8], bits: u32, i: usize, v: u8) {
         // hard assert even in release, for the same reason as `pack`: a
-        // wide index would corrupt up to three neighboring crumbs
-        assert!(v < 4, "index does not fit in a crumb");
-        let shift = 6 - 2 * (i % 4);
-        let b = &mut bytes[i / 4];
-        *b = (*b & !(0x03 << shift)) | (v << shift);
+        // wide index would corrupt neighboring lanes
+        assert!((v as u32) < (1 << bits), "index {v} does not fit in {bits} bits");
+        if bits <= 2 {
+            let shift = 6 - 2 * (i % 4);
+            let b = &mut bytes[i / 4];
+            *b = (*b & !(0x03 << shift)) | (v << shift);
+        } else {
+            let b = &mut bytes[i / 2];
+            if i % 2 == 0 {
+                *b = (*b & 0x0F) | (v << 4);
+            } else {
+                *b = (*b & 0xF0) | v;
+            }
+        }
+    }
+
+    /// Slice logical elements `[j0, j1)` and re-pack as a standalone
+    /// stream. This is the ONE column-slicing definition — weight-tail
+    /// rows and shard splits both route through it, so slice boundaries
+    /// need not be byte-aligned anywhere.
+    pub fn slice_cols(&self, j0: usize, j1: usize) -> PackedStream {
+        assert!(j0 <= j1 && j1 <= self.len, "bad column range {j0}..{j1}");
+        let vals: Vec<u8> = (j0..j1).map(|j| self.get(j)).collect();
+        PackedStream::pack(&vals, self.bits)
     }
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
-    /// Bytes of index storage (a quarter of the unpacked stream, rounded
-    /// up).
+    /// Bytes of index storage (the actual allocation).
     pub fn storage_bytes(&self) -> usize {
         self.bytes.len()
     }
 }
 
-/// K-Means-quantized weights with the index matrix nibble-packed along the
-/// reduction dimension — the storage format the packed/tiled GEMM backend
-/// streams. Produced by [`QuantWeights::pack`]; numerically identical to
-/// the unpacked form (same codebook, scales, and index values).
+/// K-Means-quantized weights with the index matrix packed along the
+/// reduction dimension at the codebook's bit-width — the storage format
+/// the packed/tiled GEMM backend streams for every width in {2,3,4}.
+/// Produced by [`QuantWeights::pack`]; numerically identical to the
+/// unpacked form (same codebook, scales, and index values).
 #[derive(Clone, Debug)]
 pub struct PackedWeights {
     pub n_rows: usize, // K (reduction dim)
     pub n_cols: usize, // N (output channels)
-    /// `(n_rows / 2) * n_cols` bytes, row-pair-major:
-    /// `pairs[p * n_cols + j] = idx[2p][j] << 4 | idx[2p+1][j]`.
-    pub pairs: Vec<u8>,
-    /// The unpaired final row when `n_rows` is odd, nibble-packed along
-    /// columns.
-    pub tail: Option<PackedIdx>,
+    /// `(n_rows / rows_per_byte) * n_cols` bytes, row-chunk-major: byte
+    /// `body[c * n_cols + j]` holds rows `c*per .. (c+1)*per` of column
+    /// `j`, high-first (nibble widths: `idx[2c][j] << 4 | idx[2c+1][j]`;
+    /// crumbs: row `4c` in bits 7..6).
+    pub body: Vec<u8>,
+    /// The `n_rows % rows_per_byte` final rows, each packed along columns.
+    pub tail: Vec<PackedStream>,
     pub codebook: Codebook,
     pub col_scales: Vec<f32>,
+    /// Reduction rows per scale group; 0 = whole-column scaling only.
+    pub group_size: usize,
+    /// FineQuant per-group scale grid, `n_groups * n_cols` row-major by
+    /// group; empty when `group_size == 0`.
+    pub group_scales: Vec<f32>,
+    bits: u32,
 }
 
 impl PackedWeights {
-    /// Number of packed row pairs (`n_rows / 2`).
+    /// The codebook's logical bit-width (2, 3, or 4).
     #[inline]
-    pub fn n_pairs(&self) -> usize {
-        self.n_rows / 2
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Reduction rows packed into each body byte (2 or 4).
+    #[inline]
+    pub fn rows_per_byte(&self) -> usize {
+        idx_per_byte(self.bits)
+    }
+
+    /// Number of packed body chunks (`n_rows / rows_per_byte`).
+    #[inline]
+    pub fn n_chunks(&self) -> usize {
+        self.n_rows / self.rows_per_byte()
+    }
+
+    /// Rows covered by the body (the rest live in `tail`).
+    #[inline]
+    pub fn body_rows(&self) -> usize {
+        self.n_chunks() * self.rows_per_byte()
+    }
+
+    /// Number of reduction-dim scale groups (1 when ungrouped).
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        if self.group_size == 0 {
+            1
+        } else {
+            self.n_rows.div_ceil(self.group_size)
+        }
+    }
+
+    /// Reduction-row range `[k0, k1)` covered by scale group `g`.
+    #[inline]
+    pub fn group_bounds(&self, g: usize) -> (usize, usize) {
+        if self.group_size == 0 {
+            (0, self.n_rows)
+        } else {
+            (g * self.group_size, ((g + 1) * self.group_size).min(self.n_rows))
+        }
+    }
+
+    /// Read one logical index (reduction row `k`, column `j`).
+    #[inline]
+    pub fn get_idx(&self, k: usize, j: usize) -> u8 {
+        let body_rows = self.body_rows();
+        if k >= body_rows {
+            return self.tail[k - body_rows].get(j);
+        }
+        let per = self.rows_per_byte();
+        let b = self.body[(k / per) * self.n_cols + j];
+        if per == 2 {
+            if k % 2 == 0 {
+                b >> 4
+            } else {
+                b & 0x0F
+            }
+        } else {
+            (b >> (6 - 2 * (k % 4))) & 0x03
+        }
     }
 
     /// Recover the byte-per-index matrix (row-major K x N), for tests and
@@ -203,17 +246,9 @@ impl PackedWeights {
     pub fn unpack_idx(&self) -> Vec<u8> {
         let n = self.n_cols;
         let mut idx = vec![0u8; self.n_rows * n];
-        for p in 0..self.n_pairs() {
+        for k in 0..self.n_rows {
             for j in 0..n {
-                let b = self.pairs[p * n + j];
-                idx[2 * p * n + j] = b >> 4;
-                idx[(2 * p + 1) * n + j] = b & 0x0F;
-            }
-        }
-        if let Some(tail) = &self.tail {
-            let r = self.n_rows - 1;
-            for j in 0..n {
-                idx[r * n + j] = tail.get(j);
+                idx[k * n + j] = self.get_idx(k, j);
             }
         }
         idx
@@ -222,257 +257,128 @@ impl PackedWeights {
     /// Dequantize one input-channel (reduction) row straight from the
     /// packed form — the per-outlier fetch of the error-compensation
     /// branch (paper §III-C2), bit-identical to
-    /// `QuantWeights::dequant_row` on the unpacked form.
+    /// `QuantWeights::dequant_row` on the unpacked form, including the
+    /// per-group scale factor when present.
     pub fn dequant_row(&self, k: usize, out: &mut Vec<f32>) {
         debug_assert!(k < self.n_rows, "row {k} out of range ({})", self.n_rows);
         out.clear();
-        if k == self.n_rows - 1 {
-            if let Some(tail) = &self.tail {
-                out.extend((0..self.n_cols).map(|j| {
-                    self.codebook.value(tail.get(j)) * self.col_scales[j]
-                }));
-                return;
+        let gs = if self.group_scales.is_empty() {
+            None
+        } else {
+            let g = k / self.group_size;
+            Some(&self.group_scales[g * self.n_cols..(g + 1) * self.n_cols])
+        };
+        out.extend((0..self.n_cols).map(|j| {
+            let v = self.codebook.value(self.get_idx(k, j)) * self.col_scales[j];
+            match gs {
+                Some(gs) => v * gs[j],
+                None => v,
             }
-        }
-        let row = &self.pairs[(k / 2) * self.n_cols..(k / 2 + 1) * self.n_cols];
-        let nibble = move |b: u8| if k % 2 == 0 { b >> 4 } else { b & 0x0F };
-        out.extend(
-            row.iter()
-                .zip(&self.col_scales)
-                .map(|(&b, &s)| self.codebook.value(nibble(b)) * s),
-        );
+        }));
     }
 
-    /// Index-storage bytes: half of the byte-per-index form (plus a
-    /// rounded-up tail row when K is odd).
+    /// Index-storage bytes: `1/rows_per_byte` of the byte-per-index form
+    /// (plus rounded-up tail rows).
     pub fn index_bytes(&self) -> usize {
-        self.pairs.len() + self.tail.as_ref().map_or(0, |t| t.storage_bytes())
+        self.body.len() + self.tail.iter().map(|t| t.storage_bytes()).sum::<usize>()
     }
 
     /// Slice out output columns `[j0, j1)` as a standalone packed matrix —
     /// the load-time column partitioner of the tensor-parallel sharded
-    /// backend (`gemm::sharded`). Row-pair packing is preserved (pair rows
-    /// are copied byte-for-byte), the tail row is re-packed from logical
-    /// values so shard boundaries need not be nibble-aligned, and the
-    /// codebook + per-column scales are partitioned with the slice, so
-    /// every per-column value (GEMM accumulation, `dequant_row`) is
-    /// bit-identical to the same column of the full matrix.
+    /// backend (`gemm::sharded`), width-generic. Body chunks are copied
+    /// byte-for-byte (row packing runs along K inside a byte, so columns
+    /// stay independent bytes); tail rows route through
+    /// [`PackedStream::slice_cols`] so shard boundaries need not be
+    /// byte-aligned; the codebook, per-column scales, and per-group scale
+    /// grid are partitioned with the slice, so every per-column value
+    /// (GEMM accumulation, `dequant_row`) is bit-identical to the same
+    /// column of the full matrix.
     pub fn slice_cols(&self, j0: usize, j1: usize) -> PackedWeights {
         assert!(j0 < j1 && j1 <= self.n_cols, "bad column range {j0}..{j1}");
         let width = j1 - j0;
-        let mut pairs = Vec::with_capacity(self.n_pairs() * width);
-        for p in 0..self.n_pairs() {
-            pairs.extend_from_slice(&self.pairs[p * self.n_cols + j0..p * self.n_cols + j1]);
+        let mut body = Vec::with_capacity(self.n_chunks() * width);
+        for c in 0..self.n_chunks() {
+            body.extend_from_slice(&self.body[c * self.n_cols + j0..c * self.n_cols + j1]);
         }
-        let tail = self.tail.as_ref().map(|t| {
-            let vals: Vec<u8> = (j0..j1).map(|j| t.get(j)).collect();
-            PackedIdx::pack(&vals)
-        });
+        let tail = self.tail.iter().map(|t| t.slice_cols(j0, j1)).collect();
+        let group_scales = if self.group_scales.is_empty() {
+            Vec::new()
+        } else {
+            (0..self.n_groups())
+                .flat_map(|g| &self.group_scales[g * self.n_cols + j0..g * self.n_cols + j1])
+                .copied()
+                .collect()
+        };
         PackedWeights {
             n_rows: self.n_rows,
             n_cols: width,
-            pairs,
+            body,
             tail,
             codebook: self.codebook.clone(),
             col_scales: self.col_scales[j0..j1].to_vec(),
+            group_size: self.group_size,
+            group_scales,
+            bits: self.bits,
         }
     }
 
-    /// Total storage: packed indices + FP16 codebook + FP16 scales. Note
-    /// the index term is one *nibble* per element regardless of codebook
-    /// bits — it equals `QuantWeights::storage_bytes` (which counts
-    /// bit-level packing) only for 4-bit codebooks; a 3-bit codebook costs
+    /// Total storage: packed indices + FP16 codebook + FP16 scales (per
+    /// column, plus the per-group grid when present). The index term is
+    /// lane-aligned — it equals `QuantWeights::storage_bytes` (which
+    /// counts bit-level packing) at 2 and 4 bits; a 3-bit codebook costs
     /// 4/3x the bit-minimal figure in exchange for byte-aligned streaming.
     pub fn storage_bytes(&self) -> usize {
-        self.index_bytes() + self.codebook.len() * 2 + self.col_scales.len() * 2
-    }
-}
-
-/// K-Means-quantized weights with a <= 2-bit codebook, the index matrix
-/// crumb-packed FOUR reduction rows per byte — the storage format the
-/// crumb GEMM kernel (`gemm::packed::execute_batch_tiled_crumbs`) streams
-/// for the 2-bit speculative draft model. Index traffic is half of the
-/// nibble-packed [`PackedWeights`] form and a quarter of the
-/// byte-per-index form; numerics are identical (same codebook, scales,
-/// and index values).
-#[derive(Clone, Debug)]
-pub struct CrumbWeights {
-    pub n_rows: usize, // K (reduction dim)
-    pub n_cols: usize, // N (output channels)
-    /// `(n_rows / 4) * n_cols` bytes, row-quad-major:
-    /// `quads[q * n_cols + j] = idx[4q][j] << 6 | idx[4q+1][j] << 4 |
-    /// idx[4q+2][j] << 2 | idx[4q+3][j]` (row `4q` in the top crumb).
-    pub quads: Vec<u8>,
-    /// The `n_rows % 4` unquaddable final rows, each crumb-packed along
-    /// columns.
-    pub tail: Vec<PackedCrumbs>,
-    pub codebook: Codebook,
-    pub col_scales: Vec<f32>,
-}
-
-impl CrumbWeights {
-    /// Number of packed row quads (`n_rows / 4`).
-    #[inline]
-    pub fn n_quads(&self) -> usize {
-        self.n_rows / 4
-    }
-
-    /// Recover the byte-per-index matrix (row-major K x N), for tests and
-    /// for interop with the unpacked execution paths.
-    pub fn unpack_idx(&self) -> Vec<u8> {
-        let n = self.n_cols;
-        let mut idx = vec![0u8; self.n_rows * n];
-        for q in 0..self.n_quads() {
-            for j in 0..n {
-                let b = self.quads[q * n + j];
-                for r in 0..4 {
-                    idx[(4 * q + r) * n + j] = (b >> (6 - 2 * r)) & 0x03;
-                }
-            }
-        }
-        for (t, row) in self.tail.iter().enumerate() {
-            let r = 4 * self.n_quads() + t;
-            for j in 0..n {
-                idx[r * n + j] = row.get(j);
-            }
-        }
-        idx
-    }
-
-    /// Dequantize one input-channel (reduction) row straight from the
-    /// packed form — the per-outlier fetch of the error-compensation
-    /// branch, bit-identical to `QuantWeights::dequant_row` on the
-    /// unpacked form.
-    pub fn dequant_row(&self, k: usize, out: &mut Vec<f32>) {
-        debug_assert!(k < self.n_rows, "row {k} out of range ({})", self.n_rows);
-        out.clear();
-        let nq = self.n_quads();
-        if k >= 4 * nq {
-            let row = &self.tail[k - 4 * nq];
-            out.extend(
-                (0..self.n_cols).map(|j| self.codebook.value(row.get(j)) * self.col_scales[j]),
-            );
-            return;
-        }
-        let row = &self.quads[(k / 4) * self.n_cols..(k / 4 + 1) * self.n_cols];
-        let shift = 6 - 2 * (k % 4);
-        out.extend(
-            row.iter()
-                .zip(&self.col_scales)
-                .map(|(&b, &s)| self.codebook.value((b >> shift) & 0x03) * s),
-        );
-    }
-
-    /// Index-storage bytes: a quarter of the byte-per-index form (plus
-    /// rounded-up tail rows when K is not a multiple of 4).
-    pub fn index_bytes(&self) -> usize {
-        self.quads.len() + self.tail.iter().map(|t| t.storage_bytes()).sum::<usize>()
-    }
-
-    /// Total storage: packed indices + FP16 codebook + FP16 scales (the
-    /// same accounting convention as [`PackedWeights::storage_bytes`]).
-    pub fn storage_bytes(&self) -> usize {
-        self.index_bytes() + self.codebook.len() * 2 + self.col_scales.len() * 2
-    }
-
-    /// Slice out output columns `[j0, j1)` as a standalone crumb-packed
-    /// matrix — the load-time column partitioner for the tensor-parallel
-    /// sharded backend, mirroring [`PackedWeights::slice_cols`]. Quad rows
-    /// are copied byte-for-byte (crumb packing runs along K inside a
-    /// byte, so columns stay independent bytes); tail rows are re-packed
-    /// from logical values.
-    pub fn slice_cols(&self, j0: usize, j1: usize) -> CrumbWeights {
-        assert!(j0 < j1 && j1 <= self.n_cols, "bad column range {j0}..{j1}");
-        let width = j1 - j0;
-        let mut quads = Vec::with_capacity(self.n_quads() * width);
-        for q in 0..self.n_quads() {
-            quads.extend_from_slice(&self.quads[q * self.n_cols + j0..q * self.n_cols + j1]);
-        }
-        let tail = self
-            .tail
-            .iter()
-            .map(|t| {
-                let vals: Vec<u8> = (j0..j1).map(|j| t.get(j)).collect();
-                PackedCrumbs::pack(&vals)
-            })
-            .collect();
-        CrumbWeights {
-            n_rows: self.n_rows,
-            n_cols: width,
-            quads,
-            tail,
-            codebook: self.codebook.clone(),
-            col_scales: self.col_scales[j0..j1].to_vec(),
-        }
+        self.index_bytes()
+            + self.codebook.len() * 2
+            + self.col_scales.len() * 2
+            + self.group_scales.len() * 2
     }
 }
 
 impl QuantWeights {
-    /// Convert to the crumb-packed storage format consumed by the crumb
-    /// GEMM kernel. Requires a <= 2-bit codebook (the speculative draft
-    /// regime).
-    pub fn pack_crumbs(&self) -> CrumbWeights {
-        assert!(
-            self.codebook.len() <= 4,
-            "cannot crumb-pack a {}-entry codebook",
-            self.codebook.len()
-        );
-        let (k, n) = (self.n_rows, self.n_cols);
-        let mut quads = Vec::with_capacity((k / 4) * n);
-        for q in 0..k / 4 {
-            for j in 0..n {
-                let mut b = 0u8;
-                for r in 0..4 {
-                    let v = self.idx[(4 * q + r) * n + j];
-                    assert!(v < 4, "weight index does not fit in a crumb");
-                    b |= v << (6 - 2 * r);
-                }
-                quads.push(b);
-            }
-        }
-        let tail = (4 * (k / 4)..k)
-            .map(|r| PackedCrumbs::pack(&self.idx[r * n..(r + 1) * n]))
-            .collect();
-        CrumbWeights {
-            n_rows: k,
-            n_cols: n,
-            quads,
-            tail,
-            codebook: self.codebook.clone(),
-            col_scales: self.col_scales.clone(),
-        }
-    }
-
-    /// Convert to the nibble-packed storage format consumed by
-    /// `gemm::packed`. Requires a <= 4-bit codebook (all WAQ configs).
+    /// Convert to the packed storage format consumed by `gemm::packed`,
+    /// selecting the stream density from the codebook width (<= 4
+    /// centroids pack four rows per byte, <= 16 pack two). Lossless for
+    /// every WAQ config in the repo.
     pub fn pack(&self) -> PackedWeights {
         assert!(
             self.codebook.len() <= 16,
-            "cannot nibble-pack a {}-entry codebook",
+            "cannot pack a {}-entry codebook",
             self.codebook.len()
         );
+        let bits = match self.codebook.len() {
+            0..=4 => 2,
+            5..=8 => 3,
+            _ => 4,
+        };
         let (k, n) = (self.n_rows, self.n_cols);
-        let mut pairs = Vec::with_capacity((k / 2) * n);
-        for p in 0..k / 2 {
-            let hi = &self.idx[2 * p * n..(2 * p + 1) * n];
-            let lo = &self.idx[(2 * p + 1) * n..(2 * p + 2) * n];
-            for (&h, &l) in hi.iter().zip(lo) {
-                assert!(h < 16 && l < 16, "weight index does not fit in a nibble");
-                pairs.push((h << 4) | l);
+        let per = idx_per_byte(bits);
+        let lane = 8 / per;
+        let mut body = Vec::with_capacity((k / per) * n);
+        for c in 0..k / per {
+            for j in 0..n {
+                let mut b = 0u8;
+                for r in 0..per {
+                    let v = self.idx[(per * c + r) * n + j];
+                    assert!((v as u32) < (1 << bits), "weight index does not fit in {bits} bits");
+                    b |= v << (8 - lane * (r + 1));
+                }
+                body.push(b);
             }
         }
-        let tail = if k % 2 == 1 {
-            Some(PackedIdx::pack(&self.idx[(k - 1) * n..k * n]))
-        } else {
-            None
-        };
+        let tail = (per * (k / per)..k)
+            .map(|r| PackedStream::pack(&self.idx[r * n..(r + 1) * n], bits))
+            .collect();
         PackedWeights {
             n_rows: k,
             n_cols: n,
-            pairs,
+            body,
             tail,
             codebook: self.codebook.clone(),
             col_scales: self.col_scales.clone(),
+            group_size: self.group_size,
+            group_scales: self.group_scales.clone(),
+            bits,
         }
     }
 }
@@ -480,8 +386,8 @@ impl QuantWeights {
 impl super::activation::QuantToken {
     /// Nibble-pack the activation index stream (halves the activation-side
     /// index traffic; outliers and scale are untouched).
-    pub fn pack_idx(&self) -> PackedIdx {
-        PackedIdx::pack(&self.idx)
+    pub fn pack_idx(&self) -> PackedStream {
+        PackedStream::pack(&self.idx, 4)
     }
 }
 
@@ -493,116 +399,106 @@ mod tests {
     use crate::util::rng::Rng;
 
     #[test]
-    fn pack_unpack_roundtrip_even_and_odd() {
+    fn stream_roundtrip_all_widths_and_tail_lengths() {
         let mut rng = Rng::new(1);
-        for len in [0usize, 1, 2, 7, 8, 31, 64, 1001] {
-            let idx: Vec<u8> = (0..len).map(|_| rng.below(16) as u8).collect();
-            let p = PackedIdx::pack(&idx);
-            assert_eq!(p.len, len);
-            assert_eq!(p.storage_bytes(), len.div_ceil(2));
-            assert_eq!(p.unpack(), idx, "len {len}");
-            for (i, &v) in idx.iter().enumerate() {
-                assert_eq!(p.get(i), v, "len {len} elem {i}");
+        for bits in [2u32, 3, 4] {
+            let per = idx_per_byte(bits);
+            for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 31, 33, 64, 1001] {
+                let idx: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
+                let p = PackedStream::pack(&idx, bits);
+                assert_eq!(p.len, len);
+                assert_eq!(p.bits(), bits);
+                assert_eq!(p.storage_bytes(), len.div_ceil(per));
+                assert_eq!(p.unpack(), idx, "bits {bits} len {len}");
+                for (i, &v) in idx.iter().enumerate() {
+                    assert_eq!(p.get(i), v, "bits {bits} len {len} elem {i}");
+                }
             }
+            assert!(PackedStream::pack(&[], bits).is_empty());
         }
     }
 
     #[test]
     fn nibble_layout_is_high_first() {
-        let p = PackedIdx::pack(&[0xA, 0x3, 0xF]);
+        let p = PackedStream::pack(&[0xA, 0x3, 0xF], 4);
         assert_eq!(p.bytes, vec![0xA3, 0xF0]);
-    }
-
-    #[test]
-    fn crumb_pack_unpack_roundtrip_all_tail_lengths() {
-        let mut rng = Rng::new(11);
-        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 33, 1001] {
-            let idx: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
-            let p = PackedCrumbs::pack(&idx);
-            assert_eq!(p.len, len);
-            assert_eq!(p.storage_bytes(), len.div_ceil(4));
-            assert_eq!(p.unpack(), idx, "len {len}");
-            for (i, &v) in idx.iter().enumerate() {
-                assert_eq!(p.get(i), v, "len {len} elem {i}");
-            }
-        }
-        assert!(PackedCrumbs::pack(&[]).is_empty());
+        // 3-bit streams share the nibble layout (byte-aligned lanes)
+        let p = PackedStream::pack(&[0x5, 0x3, 0x7], 3);
+        assert_eq!(p.bytes, vec![0x53, 0x70]);
     }
 
     #[test]
     fn crumb_layout_is_high_first() {
         // 0b11_10_01_00, then 0b01_00_00_00
-        let p = PackedCrumbs::pack(&[3, 2, 1, 0, 1]);
+        let p = PackedStream::pack(&[3, 2, 1, 0, 1], 2);
         assert_eq!(p.bytes, vec![0xE4, 0x40]);
     }
 
     #[test]
-    #[should_panic(expected = "crumb")]
-    fn crumb_pack_rejects_wide_index() {
-        PackedCrumbs::pack(&[4]);
+    #[should_panic(expected = "does not fit in 2 bits")]
+    fn crumb_stream_rejects_wide_index() {
+        PackedStream::pack(&[4], 2);
     }
 
     #[test]
-    fn crumb_boundaries_and_storage_match_allocation() {
-        // boundary lengths: empty, single, odd tails, and a large
-        // non-multiple-of-4 stream
+    #[should_panic(expected = "does not fit in 3 bits")]
+    fn three_bit_stream_rejects_codeword_past_the_edge() {
+        // 8 is the first index past the 8-codeword edge of a 3-bit book
+        PackedStream::pack(&[8], 3);
+    }
+
+    #[test]
+    fn three_bit_boundary_roundtrips_at_the_codeword_edge() {
+        // boundary lengths: empty, single, odd tails, and a large odd
+        // stream; values pinned at the 8-codeword edge (0 and 7) at both
+        // ends so edge codewords survive packing, slicing, and tails
         let mut rng = Rng::new(12);
         for len in [0usize, 1, 3, 5, 4095] {
-            let idx: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
-            let p = PackedCrumbs::pack(&idx);
+            let mut idx: Vec<u8> = (0..len).map(|_| rng.below(8) as u8).collect();
+            if len > 0 {
+                idx[0] = 7;
+                idx[len - 1] = 7;
+                idx[len / 2] = 0;
+            }
+            let p = PackedStream::pack(&idx, 3);
             assert_eq!(p.unpack(), idx, "len {len}");
             // regression: storage accounting must report the actual byte
             // allocation, not a formula that can drift from it
             assert_eq!(p.storage_bytes(), p.bytes.len(), "len {len}");
-            assert_eq!(p.bytes.len(), len.div_ceil(4), "len {len}");
-        }
-        // same accounting contract for the nibble stream
-        for len in [0usize, 1, 3, 4095] {
-            let idx: Vec<u8> = (0..len).map(|_| rng.below(16) as u8).collect();
-            let p = PackedIdx::pack(&idx);
-            assert_eq!(p.unpack(), idx, "len {len}");
-            assert_eq!(p.storage_bytes(), p.bytes.len(), "len {len}");
             assert_eq!(p.bytes.len(), len.div_ceil(2), "len {len}");
+            if len > 1 {
+                // unaligned slice keeps edge values intact
+                let s = p.slice_cols(1, len);
+                assert_eq!(s.unpack(), idx[1..], "len {len}");
+            }
         }
     }
 
     #[test]
-    fn slice_cols_matches_full_matrix_columns() {
+    fn boundaries_and_storage_match_allocation_all_widths() {
         let mut rng = Rng::new(13);
-        // even and odd K (odd exercises tail re-packing across unaligned
-        // shard boundaries)
-        for &(k, n) in &[(8usize, 11usize), (9, 11), (1, 7), (33, 16)] {
-            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
-            let qw = quant::quantize_weights(&w, 4);
-            let pw = qw.pack();
-            let full_idx = pw.unpack_idx();
-            for &(j0, j1) in &[(0usize, n), (0, 1), (n - 1, n), (1, n - 1), (n / 2, n)] {
-                if j0 >= j1 {
-                    continue;
-                }
-                let s = pw.slice_cols(j0, j1);
-                assert_eq!(s.n_rows, k);
-                assert_eq!(s.n_cols, j1 - j0);
-                assert_eq!(s.col_scales, pw.col_scales[j0..j1].to_vec());
-                assert_eq!(s.codebook, pw.codebook);
-                // index identity per (row, column)
-                let sliced_idx = s.unpack_idx();
-                for r in 0..k {
-                    for j in j0..j1 {
-                        assert_eq!(
-                            sliced_idx[r * (j1 - j0) + (j - j0)],
-                            full_idx[r * n + j],
-                            "({k},{n}) row {r} col {j} slice {j0}..{j1}"
-                        );
-                    }
-                }
-                // dequant_row (the outlier-compensation fetch) agrees too
-                let (mut a, mut b) = (Vec::new(), Vec::new());
-                for r in 0..k {
-                    pw.dequant_row(r, &mut a);
-                    s.dequant_row(r, &mut b);
-                    assert_eq!(&a[j0..j1], &b[..], "({k},{n}) row {r}");
-                }
+        for bits in [2u32, 3, 4] {
+            let per = idx_per_byte(bits);
+            for len in [0usize, 1, 3, 5, 4095] {
+                let idx: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
+                let p = PackedStream::pack(&idx, bits);
+                assert_eq!(p.unpack(), idx, "bits {bits} len {len}");
+                assert_eq!(p.storage_bytes(), p.bytes.len(), "bits {bits} len {len}");
+                assert_eq!(p.bytes.len(), len.div_ceil(per), "bits {bits} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_slice_cols_matches_full_stream() {
+        let mut rng = Rng::new(14);
+        for bits in [2u32, 3, 4] {
+            let idx: Vec<u8> = (0..33).map(|_| rng.below(1 << bits) as u8).collect();
+            let p = PackedStream::pack(&idx, bits);
+            for &(j0, j1) in &[(0usize, 33usize), (0, 1), (32, 33), (1, 32), (5, 20), (7, 7)] {
+                let s = p.slice_cols(j0, j1);
+                assert_eq!(s.len, j1 - j0);
+                assert_eq!(s.unpack(), idx[j0..j1], "bits {bits} slice {j0}..{j1}");
             }
         }
     }
@@ -610,166 +506,163 @@ mod tests {
     #[test]
     fn set_in_matches_pack_for_nibbles_and_crumbs() {
         let mut rng = Rng::new(21);
-        for len in [1usize, 2, 3, 4, 5, 9, 33] {
-            let idx4: Vec<u8> = (0..len).map(|_| rng.below(16) as u8).collect();
-            let mut buf = vec![0u8; len.div_ceil(2)];
-            for (i, &v) in idx4.iter().enumerate() {
-                PackedIdx::set_in(&mut buf, i, v);
-            }
-            assert_eq!(buf, PackedIdx::pack(&idx4).bytes, "nibble len {len}");
-            for (i, &v) in idx4.iter().enumerate() {
-                assert_eq!(PackedIdx::get_in(&buf, i), v);
-            }
-            let idx2: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
-            let mut buf = vec![0u8; len.div_ceil(4)];
-            for (i, &v) in idx2.iter().enumerate() {
-                PackedCrumbs::set_in(&mut buf, i, v);
-            }
-            assert_eq!(buf, PackedCrumbs::pack(&idx2).bytes, "crumb len {len}");
-            for (i, &v) in idx2.iter().enumerate() {
-                assert_eq!(PackedCrumbs::get_in(&buf, i), v);
+        for bits in [2u32, 3, 4] {
+            let per = idx_per_byte(bits);
+            for len in [1usize, 2, 3, 4, 5, 9, 33] {
+                let idx: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
+                let mut buf = vec![0u8; len.div_ceil(per)];
+                for (i, &v) in idx.iter().enumerate() {
+                    PackedStream::set_in(&mut buf, bits, i, v);
+                }
+                assert_eq!(buf, PackedStream::pack(&idx, bits).bytes, "bits {bits} len {len}");
+                for (i, &v) in idx.iter().enumerate() {
+                    assert_eq!(PackedStream::get_in(&buf, bits, i), v);
+                }
             }
         }
         // set_in overwrites in place (read-modify-write, not or-in)
         let mut buf = vec![0xFFu8; 1];
-        PackedIdx::set_in(&mut buf, 0, 0x2);
+        PackedStream::set_in(&mut buf, 4, 0, 0x2);
         assert_eq!(buf[0], 0x2F);
-        PackedCrumbs::set_in(&mut buf, 1, 0x1); // bits 5..4: 0b10 -> 0b01
+        PackedStream::set_in(&mut buf, 2, 1, 0x1); // bits 5..4: 0b10 -> 0b01
         assert_eq!(buf[0], 0x1F);
     }
 
     #[test]
-    fn weights_pack_roundtrip() {
+    fn weights_pack_roundtrip_all_widths_and_tails() {
         let mut rng = Rng::new(2);
-        for &(k, n) in &[(8usize, 6usize), (9, 5), (1, 4), (33, 16)] {
-            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
-            let qw = quant::quantize_weights(&w, 4);
-            let pw = qw.pack();
-            assert_eq!(pw.n_rows, k);
-            assert_eq!(pw.n_cols, n);
-            assert_eq!(pw.n_pairs(), k / 2);
-            assert_eq!(pw.tail.is_some(), k % 2 == 1);
-            assert_eq!(pw.unpack_idx(), qw.idx, "({k},{n})");
-            assert_eq!(pw.col_scales, qw.col_scales);
-            assert_eq!(pw.codebook, qw.codebook);
-        }
-    }
-
-    #[test]
-    fn dequant_row_matches_unpacked_even_and_odd_k() {
-        let mut rng = Rng::new(7);
-        for &(k, n) in &[(8usize, 6usize), (9, 5), (1, 4)] {
-            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
-            let qw = quant::quantize_weights(&w, 4);
-            let pw = qw.pack();
-            let (mut a, mut b) = (Vec::new(), Vec::new());
-            for r in 0..k {
-                qw.dequant_row(r, &mut a);
-                pw.dequant_row(r, &mut b);
-                assert_eq!(a, b, "({k},{n}) row {r}");
+        // K covers every tail length for both densities, incl. K < per
+        for &(k, n) in &[(8usize, 6usize), (9, 5), (10, 7), (11, 4), (1, 4), (3, 4), (33, 16)] {
+            for bits in [2u32, 3, 4] {
+                let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+                let qw = quant::quantize_weights(&w, bits);
+                let pw = qw.pack();
+                assert_eq!(pw.bits(), bits);
+                assert_eq!(pw.n_rows, k);
+                assert_eq!(pw.n_cols, n);
+                assert_eq!(pw.n_chunks(), k / pw.rows_per_byte());
+                assert_eq!(pw.tail.len(), k % pw.rows_per_byte());
+                assert_eq!(pw.unpack_idx(), qw.idx, "({k},{n}) bits {bits}");
+                assert_eq!(pw.col_scales, qw.col_scales);
+                assert_eq!(pw.codebook, qw.codebook);
+                assert!(pw.group_scales.is_empty());
             }
         }
     }
 
     #[test]
-    fn packing_halves_index_traffic() {
+    fn slice_cols_matches_full_matrix_columns_at_every_width() {
         let mut rng = Rng::new(3);
+        // odd K exercises tail re-packing across unaligned shard
+        // boundaries; group sizes cover ungrouped and a multi-group grid
+        for &(k, n) in &[(8usize, 11usize), (9, 11), (1, 7), (33, 16)] {
+            for bits in [2u32, 3, 4] {
+                for group in [0usize, 4, 8] {
+                    let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+                    let qw = quant::quantize_weights_grouped(&w, None, bits, group);
+                    let pw = qw.pack();
+                    let full_idx = pw.unpack_idx();
+                    for &(j0, j1) in &[(0usize, n), (0, 1), (n - 1, n), (1, n - 1), (n / 2, n)] {
+                        if j0 >= j1 {
+                            continue;
+                        }
+                        let s = pw.slice_cols(j0, j1);
+                        assert_eq!(s.n_rows, k);
+                        assert_eq!(s.n_cols, j1 - j0);
+                        assert_eq!(s.bits(), pw.bits());
+                        assert_eq!(s.col_scales, pw.col_scales[j0..j1].to_vec());
+                        assert_eq!(s.codebook, pw.codebook);
+                        assert_eq!(s.group_size, pw.group_size);
+                        assert_eq!(s.n_groups(), pw.n_groups());
+                        // index identity per (row, column)
+                        let sliced_idx = s.unpack_idx();
+                        for r in 0..k {
+                            for j in j0..j1 {
+                                assert_eq!(
+                                    sliced_idx[r * (j1 - j0) + (j - j0)],
+                                    full_idx[r * n + j],
+                                    "({k},{n}) b{bits} g{group} row {r} col {j} slice {j0}..{j1}"
+                                );
+                            }
+                        }
+                        // dequant_row (the outlier-compensation fetch)
+                        // agrees too — this pins the group-scale slicing
+                        let (mut a, mut b) = (Vec::new(), Vec::new());
+                        for r in 0..k {
+                            pw.dequant_row(r, &mut a);
+                            s.dequant_row(r, &mut b);
+                            assert_eq!(&a[j0..j1], &b[..], "({k},{n}) b{bits} g{group} row {r}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_row_matches_unpacked_every_width() {
+        let mut rng = Rng::new(7);
+        for &(k, n) in &[(8usize, 6usize), (9, 5), (11, 4), (1, 4)] {
+            for bits in [2u32, 3, 4] {
+                for group in [0usize, 4] {
+                    let w = Matrix::random_normal(k, n, 1.0, &mut rng);
+                    let qw = quant::quantize_weights_grouped(&w, None, bits, group);
+                    let pw = qw.pack();
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    for r in 0..k {
+                        qw.dequant_row(r, &mut a);
+                        pw.dequant_row(r, &mut b);
+                        assert_eq!(a, b, "({k},{n}) bits {bits} group {group} row {r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packing_shrinks_index_traffic_per_width() {
+        let mut rng = Rng::new(8);
         let w = Matrix::random_normal(128, 64, 1.0, &mut rng);
+        // 4-bit: two indices per byte, accounting-identical to the
+        // bit-packed figure of the unpacked form
         let qw = quant::quantize_weights(&w, 4);
         let pw = qw.pack();
         assert_eq!(pw.index_bytes(), qw.idx.len() / 2);
-        // storage accounting stays consistent with the unpacked form
         assert_eq!(pw.storage_bytes(), qw.storage_bytes());
+        // 2-bit: four indices per byte — half the nibble stream
+        let qw2 = quant::quantize_weights(&w, 2);
+        let cw = qw2.pack();
+        assert_eq!(cw.index_bytes(), qw2.idx.len() / 4);
+        assert_eq!(cw.storage_bytes(), qw2.storage_bytes());
+        // 3-bit rides in nibbles: byte-aligned, 4/3x the bit-minimal size
+        let qw3 = quant::quantize_weights(&w, 3);
+        assert_eq!(qw3.pack().index_bytes(), qw3.idx.len() / 2);
     }
 
     #[test]
-    fn crumb_weights_pack_roundtrip_all_tail_lengths() {
-        let mut rng = Rng::new(31);
-        // K % 4 in {0, 1, 2, 3}, including a K < 4 tail-only edge
-        for &(k, n) in &[(8usize, 6usize), (9, 5), (10, 7), (11, 4), (3, 4), (33, 16)] {
-            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
-            let qw = quant::quantize_weights(&w, 2);
-            let cw = qw.pack_crumbs();
-            assert_eq!(cw.n_rows, k);
-            assert_eq!(cw.n_cols, n);
-            assert_eq!(cw.n_quads(), k / 4);
-            assert_eq!(cw.tail.len(), k % 4);
-            assert_eq!(cw.unpack_idx(), qw.idx, "({k},{n})");
-            assert_eq!(cw.col_scales, qw.col_scales);
-            assert_eq!(cw.codebook, qw.codebook);
-            // dequant_row (the outlier-compensation fetch) is bit-identical
-            let (mut a, mut b) = (Vec::new(), Vec::new());
-            for r in 0..k {
-                qw.dequant_row(r, &mut a);
-                cw.dequant_row(r, &mut b);
-                assert_eq!(a, b, "({k},{n}) row {r}");
-            }
-        }
+    fn grouped_pack_carries_the_scale_grid() {
+        let mut rng = Rng::new(9);
+        let w = Matrix::random_normal(40, 6, 1.0, &mut rng);
+        let qw = quant::quantize_weights_grouped(&w, None, 4, 16);
+        let pw = qw.pack();
+        assert_eq!(pw.group_size, 16);
+        assert_eq!(pw.n_groups(), 3); // 40 rows / 16 per group, rounded up
+        assert_eq!(pw.group_scales, qw.group_scales);
+        assert_eq!(pw.group_bounds(0), (0, 16));
+        assert_eq!(pw.group_bounds(2), (32, 40));
+        // the grid is FP16-accounted alongside the per-column scales
+        assert_eq!(
+            pw.storage_bytes(),
+            pw.index_bytes() + pw.codebook.len() * 2 + (6 + 3 * 6) * 2
+        );
     }
 
     #[test]
-    fn crumb_weights_quarter_index_traffic() {
-        let mut rng = Rng::new(32);
-        let w = Matrix::random_normal(128, 64, 1.0, &mut rng);
-        let qw = quant::quantize_weights(&w, 2);
-        let cw = qw.pack_crumbs();
-        assert_eq!(cw.index_bytes(), qw.idx.len() / 4);
-        // half the nibble-packed form's stream
-        assert_eq!(cw.index_bytes() * 2, qw.pack().index_bytes());
-    }
-
-    #[test]
-    fn crumb_slice_cols_matches_full_matrix_columns() {
-        let mut rng = Rng::new(33);
-        for &(k, n) in &[(8usize, 11usize), (9, 11), (2, 7), (33, 16)] {
-            let w = Matrix::random_normal(k, n, 1.0, &mut rng);
-            let qw = quant::quantize_weights(&w, 2);
-            let cw = qw.pack_crumbs();
-            let full_idx = cw.unpack_idx();
-            for &(j0, j1) in &[(0usize, n), (0, 1), (n - 1, n), (1, n - 1), (n / 2, n)] {
-                if j0 >= j1 {
-                    continue;
-                }
-                let s = cw.slice_cols(j0, j1);
-                assert_eq!(s.n_rows, k);
-                assert_eq!(s.n_cols, j1 - j0);
-                assert_eq!(s.col_scales, cw.col_scales[j0..j1].to_vec());
-                assert_eq!(s.codebook, cw.codebook);
-                let sliced_idx = s.unpack_idx();
-                for r in 0..k {
-                    for j in j0..j1 {
-                        assert_eq!(
-                            sliced_idx[r * (j1 - j0) + (j - j0)],
-                            full_idx[r * n + j],
-                            "({k},{n}) row {r} col {j} slice {j0}..{j1}"
-                        );
-                    }
-                }
-                let (mut a, mut b) = (Vec::new(), Vec::new());
-                for r in 0..k {
-                    cw.dequant_row(r, &mut a);
-                    s.dequant_row(r, &mut b);
-                    assert_eq!(&a[j0..j1], &b[..], "({k},{n}) row {r}");
-                }
-            }
-        }
-    }
-
-    #[test]
-    #[should_panic(expected = "crumb-pack")]
-    fn crumb_pack_rejects_wide_codebooks() {
+    #[should_panic(expected = "cannot pack")]
+    fn pack_rejects_codebooks_wider_than_four_bits() {
         let mut rng = Rng::new(34);
         let w = Matrix::random_normal(8, 4, 1.0, &mut rng);
-        quant::quantize_weights(&w, 4).pack_crumbs();
-    }
-
-    #[test]
-    fn three_bit_codebooks_pack_too() {
-        let mut rng = Rng::new(4);
-        let w = Matrix::random_normal(17, 9, 1.0, &mut rng);
-        let qw = quant::quantize_weights(&w, 3);
-        let pw = qw.pack();
-        assert_eq!(pw.unpack_idx(), qw.idx);
+        quant::quantize_weights(&w, 5).pack();
     }
 
     #[test]

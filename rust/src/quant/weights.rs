@@ -3,6 +3,19 @@
 //! protection. Produces both the index/codebook form consumed by the WAQ
 //! LUT-GEMM datapath and the fake-quant (dequantized) form fed to the L2
 //! artifacts for accuracy experiments.
+//!
+//! Two extensions ride on the same representation (PAPERS.md):
+//!
+//! * FineQuant-style per-group scales ([`quantize_weights_grouped`]) —
+//!   each `group_size`-row block of the reduction dimension carries its
+//!   own per-column scale factor, so small (2-/3-bit) codebooks only have
+//!   to cover one group's dynamic range at a time. The codebook stays
+//!   shared across the matrix (the LUT-GEMM kernel needs one table per
+//!   matrix); the group factor folds into the kernel's per-group
+//!   accumulator instead.
+//! * SKIM-style any-bit planning ([`plan_bits`]) — given measured
+//!   per-linear sensitivity at 2/3/4 bits, assign a width per linear
+//!   against an average-bits budget.
 
 use super::codebook::Codebook;
 use super::kmeans::weighted_kmeans_1d;
@@ -10,7 +23,9 @@ use crate::tensor::Matrix;
 
 /// K-Means-quantized weight matrix W (K x N), y = x @ W.
 /// Output channel n has scale `col_scales[n]`; `idx[k * n_cols + n]` selects
-/// from the shared normalized `codebook`.
+/// from the shared normalized `codebook`. When `group_size > 0`, entry
+/// (k, n) additionally carries the factor
+/// `group_scales[(k / group_size) * n_cols + n]`.
 #[derive(Clone, Debug)]
 pub struct QuantWeights {
     pub n_rows: usize, // K (input channels / reduction dim)
@@ -18,6 +33,11 @@ pub struct QuantWeights {
     pub idx: Vec<u8>,
     pub codebook: Codebook,
     pub col_scales: Vec<f32>,
+    /// Reduction rows per FineQuant scale group; 0 = whole-column scaling.
+    pub group_size: usize,
+    /// `n_groups * n_cols` per-group factors (row-major by group); empty
+    /// when `group_size == 0`.
+    pub group_scales: Vec<f32>,
 }
 
 /// Max samples fed to the codebook learner (uniform stride subsample keeps
@@ -53,13 +73,12 @@ pub fn quantize_weights_weighted(
     let mut weights = fisher.map(|_| Vec::with_capacity(total / stride + 1));
     let mut i = 0;
     while i < total {
-        let (r, c) = (i / n, i % n);
+        let c = i % n;
         samples.push(w.data[i] / col_scales[c]);
         if let (Some(ws), Some(f)) = (weights.as_mut(), fisher) {
             ws.push(f.data[i]);
         }
         i += stride;
-        let _ = r;
     }
     let centroids = weighted_kmeans_1d(&samples, weights.as_deref(), 1 << bits, 40);
     let codebook = Codebook::new(centroids);
@@ -70,7 +89,144 @@ pub fn quantize_weights_weighted(
             idx.push(codebook.assign(v / col_scales[c]));
         }
     }
-    QuantWeights { n_rows: k, n_cols: n, idx, codebook, col_scales }
+    QuantWeights {
+        n_rows: k,
+        n_cols: n,
+        idx,
+        codebook,
+        col_scales,
+        group_size: 0,
+        group_scales: Vec::new(),
+    }
+}
+
+/// FineQuant-style fine-grained quantization: on top of the per-column
+/// scale, each `group_size`-row reduction block gets its own per-column
+/// factor (the block's max-abs relative to the column scale), and the
+/// shared codebook is learned over group-normalized values.
+/// `group_size == 0` is the ungrouped path, bit-identical to
+/// [`quantize_weights_weighted`].
+pub fn quantize_weights_grouped(
+    w: &Matrix,
+    fisher: Option<&Matrix>,
+    bits: u32,
+    group_size: usize,
+) -> QuantWeights {
+    if group_size == 0 {
+        return quantize_weights_weighted(w, fisher, bits);
+    }
+    // group boundaries must land on packed body-chunk boundaries (2 rows
+    // per byte at nibble widths, 4 at crumb width) so the packed kernel's
+    // per-group accumulation never splits a byte
+    assert!(group_size % 4 == 0, "group size must be a multiple of 4, got {group_size}");
+    let (k, n) = (w.rows, w.cols);
+    let mut col_scales = vec![0.0f32; n];
+    for r in 0..k {
+        for (c, &v) in w.row(r).iter().enumerate() {
+            col_scales[c] = col_scales[c].max(v.abs());
+        }
+    }
+    for s in col_scales.iter_mut() {
+        *s = s.max(1e-12);
+    }
+
+    // per-group per-column max-abs, relative to the column scale
+    let n_groups = k.div_ceil(group_size);
+    let mut group_scales = vec![0.0f32; n_groups * n];
+    for r in 0..k {
+        let g = r / group_size;
+        for (c, &v) in w.row(r).iter().enumerate() {
+            let gs = &mut group_scales[g * n + c];
+            *gs = gs.max(v.abs() / col_scales[c]);
+        }
+    }
+    for s in group_scales.iter_mut() {
+        *s = s.max(1e-12);
+    }
+
+    let total = k * n;
+    let stride = (total / MAX_KMEANS_SAMPLES).max(1);
+    let mut samples = Vec::with_capacity(total / stride + 1);
+    let mut weights = fisher.map(|_| Vec::with_capacity(total / stride + 1));
+    let mut i = 0;
+    while i < total {
+        let (r, c) = (i / n, i % n);
+        samples.push(w.data[i] / (col_scales[c] * group_scales[(r / group_size) * n + c]));
+        if let (Some(ws), Some(f)) = (weights.as_mut(), fisher) {
+            ws.push(f.data[i]);
+        }
+        i += stride;
+    }
+    let centroids = weighted_kmeans_1d(&samples, weights.as_deref(), 1 << bits, 40);
+    let codebook = Codebook::new(centroids);
+
+    let mut idx = Vec::with_capacity(total);
+    for r in 0..k {
+        let g = r / group_size;
+        for (c, &v) in w.row(r).iter().enumerate() {
+            idx.push(codebook.assign(v / (col_scales[c] * group_scales[g * n + c])));
+        }
+    }
+    QuantWeights { n_rows: k, n_cols: n, idx, codebook, col_scales, group_size, group_scales }
+}
+
+/// Solve the per-linear bit assignment against an average-bits budget
+/// (SKIM-style greedy). `mse[i][b]` is the measured sensitivity of linear
+/// `i` quantized at width `2 + b`; `params[i]` its parameter count; the
+/// returned plan's parameter-weighted average width never exceeds
+/// `budget`. Starts everything at 2 bits and repeatedly upgrades the
+/// linear with the best sensitivity drop per parameter of added storage.
+/// The greedy result is then guarded against every feasible *uniform*
+/// plan — whichever has the lower total sensitivity wins — so
+/// `--wbits auto --wbits-budget B` is never less accurate than
+/// `--wbits floor(B)` on the same sensitivity table.
+pub fn plan_bits(mse: &[[f64; 3]], params: &[usize], budget: f64) -> Vec<u32> {
+    assert_eq!(mse.len(), params.len(), "one sensitivity triple per linear");
+    if mse.is_empty() {
+        return Vec::new();
+    }
+    let total: f64 = params.iter().map(|&p| p as f64).sum();
+    let score =
+        |plan: &[u32]| -> f64 { plan.iter().zip(mse).map(|(&b, m)| m[b as usize - 2]).sum() };
+
+    let mut plan = vec![2u32; mse.len()];
+    let mut bit_mass = 2.0 * total;
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..plan.len() {
+            if plan[i] >= 4 {
+                continue;
+            }
+            if (bit_mass + params[i] as f64) / total > budget + 1e-9 {
+                continue;
+            }
+            let step = plan[i] as usize - 2;
+            let gain = mse[i][step] - mse[i][step + 1];
+            if gain <= 0.0 {
+                continue;
+            }
+            let per_param = gain / params[i] as f64;
+            if best.map_or(true, |(_, g)| per_param > g) {
+                best = Some((i, per_param));
+            }
+        }
+        let Some((i, _)) = best else { break };
+        plan[i] += 1;
+        bit_mass += params[i] as f64;
+    }
+
+    // greedy can lose to a uniform plan on adversarial sensitivity tables
+    // (a cheap upgrade taken early can crowd out a better expensive one)
+    let mut best_plan = plan;
+    for u in [2u32, 3, 4] {
+        if (u as f64) <= budget + 1e-9 {
+            let uniform = vec![u; mse.len()];
+            if score(&uniform) < score(&best_plan) {
+                best_plan = uniform;
+            }
+        }
+    }
+    best_plan
 }
 
 impl QuantWeights {
@@ -79,8 +235,12 @@ impl QuantWeights {
     pub fn dequantize(&self) -> Matrix {
         let mut data = Vec::with_capacity(self.idx.len());
         for (i, &q) in self.idx.iter().enumerate() {
-            let c = i % self.n_cols;
-            data.push(self.codebook.value(q) * self.col_scales[c]);
+            let (r, c) = (i / self.n_cols, i % self.n_cols);
+            let mut v = self.codebook.value(q) * self.col_scales[c];
+            if !self.group_scales.is_empty() {
+                v *= self.group_scales[(r / self.group_size) * self.n_cols + c];
+            }
+            data.push(v);
         }
         Matrix::from_vec(self.n_rows, self.n_cols, data)
     }
@@ -90,22 +250,43 @@ impl QuantWeights {
     pub fn dequant_row(&self, k: usize, out: &mut Vec<f32>) {
         out.clear();
         let row = &self.idx[k * self.n_cols..(k + 1) * self.n_cols];
-        out.extend(
-            row.iter()
-                .enumerate()
-                .map(|(c, &q)| self.codebook.value(q) * self.col_scales[c]),
-        );
+        let gs = if self.group_scales.is_empty() {
+            None
+        } else {
+            let g = k / self.group_size;
+            Some(&self.group_scales[g * self.n_cols..(g + 1) * self.n_cols])
+        };
+        out.extend(row.iter().enumerate().map(|(c, &q)| {
+            let v = self.codebook.value(q) * self.col_scales[c];
+            match gs {
+                Some(gs) => v * gs[c],
+                None => v,
+            }
+        }));
     }
 
     pub fn bits(&self) -> u32 {
         self.codebook.bits()
     }
 
+    /// Number of reduction-dim scale groups (1 when ungrouped).
+    pub fn n_groups(&self) -> usize {
+        if self.group_size == 0 {
+            1
+        } else {
+            self.n_rows.div_ceil(self.group_size)
+        }
+    }
+
     /// Bytes to store idx at `bits` packing + codebook + scales (memory
-    /// footprint accounting for the simulator).
+    /// footprint accounting for the simulator; the per-group grid is
+    /// FP16-accounted like the per-column scales).
     pub fn storage_bytes(&self) -> usize {
         let idx_bits = self.idx.len() * self.bits() as usize;
-        idx_bits.div_ceil(8) + self.codebook.len() * 2 + self.col_scales.len() * 2
+        idx_bits.div_ceil(8)
+            + self.codebook.len() * 2
+            + self.col_scales.len() * 2
+            + self.group_scales.len() * 2
     }
 }
 
@@ -185,5 +366,111 @@ mod tests {
         let q = quantize_weights(&w, 4);
         // 128*64 4-bit indices = 4096 B, + 16 fp16 centroids + 64 fp16 scales
         assert_eq!(q.storage_bytes(), 4096 + 32 + 128);
+        // per-group scales are accounted on top: 128/32 groups x 64 cols
+        let g = quantize_weights_grouped(&w, None, 4, 32);
+        assert_eq!(g.storage_bytes(), 4096 + 32 + 128 + 4 * 64 * 2);
+    }
+
+    #[test]
+    fn group_size_zero_is_the_ungrouped_path() {
+        let mut rng = Rng::new(7);
+        let w = Matrix::random_normal(24, 10, 1.0, &mut rng);
+        let a = quantize_weights(&w, 3);
+        let b = quantize_weights_grouped(&w, None, 3, 0);
+        assert_eq!(a.idx, b.idx);
+        assert_eq!(a.col_scales, b.col_scales);
+        assert_eq!(a.codebook, b.codebook);
+        assert_eq!(b.group_size, 0);
+        assert!(b.group_scales.is_empty());
+        assert_eq!(b.n_groups(), 1);
+    }
+
+    #[test]
+    fn group_scales_recover_small_magnitude_blocks() {
+        // FineQuant's motivating case: one reduction block is 100x
+        // smaller than the rest; with one scale per column, a 2-bit
+        // codebook spends its codewords on the large block and flattens
+        // the small one. Per-group scales renormalize each block.
+        let mut rng = Rng::new(8);
+        let mut w = Matrix::random_normal(64, 12, 1.0, &mut rng);
+        for r in 0..16 {
+            for v in w.row_mut(r) {
+                *v *= 0.01;
+            }
+        }
+        let e_flat = quantize_weights(&w, 2).dequantize().rel_err(&w);
+        let e_grouped = quantize_weights_grouped(&w, None, 2, 16).dequantize().rel_err(&w);
+        assert!(
+            e_grouped < e_flat,
+            "grouped 2-bit {e_grouped} should beat ungrouped {e_flat}"
+        );
+    }
+
+    #[test]
+    fn grouped_dequant_row_matches_full() {
+        let mut rng = Rng::new(9);
+        let w = Matrix::random_normal(21, 8, 1.0, &mut rng);
+        let q = quantize_weights_grouped(&w, None, 3, 8);
+        let full = q.dequantize();
+        let mut row = Vec::new();
+        for r in 0..21 {
+            q.dequant_row(r, &mut row);
+            assert_eq!(row.as_slice(), full.row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn grouped_rejects_unaligned_group_size() {
+        let mut rng = Rng::new(10);
+        let w = Matrix::random_normal(8, 4, 1.0, &mut rng);
+        quantize_weights_grouped(&w, None, 2, 6);
+    }
+
+    #[test]
+    fn plan_bits_respects_budget_and_spends_on_sensitivity() {
+        // linear 0 barely cares about width, linear 1 collapses below 4
+        // bits; both same size
+        let mse = [[0.010, 0.009, 0.008], [10.0, 4.0, 0.1]];
+        let params = [1000, 1000];
+        let plan = plan_bits(&mse, &params, 3.0);
+        assert_eq!(plan, vec![2, 4], "budget goes to the sensitive linear");
+        // parameter-weighted average stays within budget
+        let avg: f64 = plan.iter().zip(&params).map(|(&b, &p)| b as f64 * p as f64).sum::<f64>()
+            / params.iter().map(|&p| p as f64).sum::<f64>();
+        assert!(avg <= 3.0 + 1e-9);
+        // tight budget pins everything at the floor; loose budget at the cap
+        assert_eq!(plan_bits(&mse, &params, 2.0), vec![2, 2]);
+        assert_eq!(plan_bits(&mse, &params, 4.0), vec![4, 4]);
+    }
+
+    #[test]
+    fn plan_bits_weighs_parameter_cost() {
+        // equal sensitivity gain, but linear 1 is 10x cheaper to upgrade —
+        // with budget for only one upgrade step of the large linear, the
+        // small one must win on gain-per-parameter
+        let mse = [[1.0, 0.5, 0.2], [1.0, 0.5, 0.2]];
+        let params = [10_000, 1_000];
+        let plan = plan_bits(&mse, &params, 2.2);
+        assert_eq!(plan, vec![2, 4], "cheap linear upgraded first");
+    }
+
+    #[test]
+    fn plan_bits_never_loses_to_uniform_at_equal_budget() {
+        // adversarial table: greedy's first upgrade (linear 0, huge
+        // per-param gain) burns budget the uniform-3 plan spends better
+        let mse = [[5.0, 0.1, 0.1], [4.0, 0.5, 0.4], [4.0, 0.5, 0.4], [4.0, 0.5, 0.4]];
+        let params = [100, 100, 100, 100];
+        let plan = plan_bits(&mse, &params, 3.0);
+        let score = |p: &[u32]| -> f64 {
+            p.iter().zip(&mse).map(|(&b, m)| m[b as usize - 2]).sum()
+        };
+        assert!(
+            score(&plan) <= score(&vec![3u32; 4]) + 1e-12,
+            "auto plan {:?} (score {}) must not lose to uniform 3-bit ({})",
+            plan,
+            score(&plan),
+            score(&vec![3u32; 4])
+        );
     }
 }

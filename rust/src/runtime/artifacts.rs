@@ -125,6 +125,12 @@ pub struct Manifest {
     /// canonical parameter order (name, shape)
     pub params: Vec<(String, Vec<usize>)>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Per-linear weight bit plan, layer-major with four entries per
+    /// layer (qkv, attn_out, mlp_up, mlp_down), each in {2,3,4}. `None`
+    /// until a `--wbits auto` calibration records its choice; a manifest
+    /// that carries a plan pins it, so a re-serve skips re-planning and
+    /// reproduces the exact same mixed-precision assignment.
+    pub wbits_plan: Option<Vec<u32>>,
 }
 
 impl Manifest {
@@ -179,6 +185,25 @@ impl Manifest {
                 },
             );
         }
+        let wbits_plan = match j.get("wbits_plan") {
+            None | Some(Json::Null) => None,
+            Some(p) => {
+                let plan: Vec<u32> = p
+                    .usize_list()
+                    .ok_or("bad wbits_plan")?
+                    .into_iter()
+                    .map(|b| b as u32)
+                    .collect();
+                if plan.len() != 4 * model.n_layers || plan.iter().any(|b| !(2..=4).contains(b)) {
+                    return Err(format!(
+                        "bad wbits_plan: want {} entries in 2..=4, got {:?}",
+                        4 * model.n_layers,
+                        plan
+                    ));
+                }
+                Some(plan)
+            }
+        };
         Ok(Manifest {
             preset: j
                 .expect("preset")?
@@ -189,6 +214,7 @@ impl Manifest {
             model,
             params,
             artifacts,
+            wbits_plan,
         })
     }
 
@@ -225,7 +251,16 @@ impl Manifest {
             model,
             params: model.param_specs(),
             artifacts: BTreeMap::new(),
+            wbits_plan: None,
         }
+    }
+
+    /// Record a `--wbits auto` planner decision (layer-major, four
+    /// linears per layer) so later backends built from this manifest pin
+    /// the exact assignment instead of re-running calibration planning.
+    pub fn with_wbits_plan(mut self, plan: Vec<u32>) -> Manifest {
+        self.wbits_plan = Some(plan);
+        self
     }
 }
 
@@ -297,6 +332,32 @@ mod tests {
         let down = m.params.iter().find(|(n, _)| n == "l0.mlp_down").unwrap();
         assert_eq!(down.1, vec![256, 64]);
         assert!(m.artifacts.is_empty());
+    }
+
+    #[test]
+    fn wbits_plan_is_optional_and_validated() {
+        // absent → None (every pre-planner manifest parses unchanged)
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.wbits_plan, None);
+        assert_eq!(Manifest::synthetic("syn", m.model).wbits_plan, None);
+        // present → 4 entries per layer, each in {2,3,4}
+        let good = SAMPLE.replace(
+            "\"preset\": \"test\",",
+            "\"preset\": \"test\", \"wbits_plan\": [4,3,2,3,4,2,3,4],",
+        );
+        let m = Manifest::parse(Path::new("/tmp"), &good).unwrap();
+        assert_eq!(m.wbits_plan, Some(vec![4, 3, 2, 3, 4, 2, 3, 4]));
+        // wrong arity and out-of-range widths are rejected, not ignored
+        for plan in ["[4,3]", "[4,3,2,3,4,2,3,5]", "[4,3,2,3,4,2,3,1]"] {
+            let bad = SAMPLE.replace(
+                "\"preset\": \"test\",",
+                &format!("\"preset\": \"test\", \"wbits_plan\": {plan},"),
+            );
+            assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err(), "{plan}");
+        }
+        // builder records a plan onto a synthetic manifest
+        let m = Manifest::synthetic("syn", m.model).with_wbits_plan(vec![2; 8]);
+        assert_eq!(m.wbits_plan.as_deref(), Some(&[2u32; 8][..]));
     }
 
     #[test]

@@ -205,30 +205,41 @@ fn prop_packed_outlier_tokens_compensate_identically() {
 }
 
 #[test]
-fn prop_packed_idx_roundtrip() {
-    Check::new(32).forall("packed-idx-roundtrip", |rng, _| {
+fn prop_packed_stream_roundtrip_any_width() {
+    // the ONE packed representation (weights, KV payloads, shard slices):
+    // pack/unpack identity at every width and length, and storage
+    // accounting that matches the actual byte allocation
+    Check::new(32).forall("packed-stream-roundtrip", |rng, _| {
+        let bits = 2 + rng.below(3) as u32;
         let len = rng.below(300);
-        let idx: Vec<u8> = (0..len).map(|_| rng.below(16) as u8).collect();
-        let p = quant::PackedIdx::pack(&idx);
+        let idx: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
+        let p = quant::PackedStream::pack(&idx, bits);
+        assert_eq!(p.bits(), bits);
         assert_eq!(p.unpack(), idx);
-        assert_eq!(p.storage_bytes(), len.div_ceil(2));
+        assert_eq!(p.storage_bytes(), p.bytes.len(), "accounting vs allocation");
+        let per = if bits <= 2 { 4 } else { 2 };
+        assert_eq!(p.storage_bytes(), len.div_ceil(per), "W{bits} len={len}");
+        for (i, &v) in idx.iter().enumerate() {
+            assert_eq!(p.get(i), v, "elem {i} at W{bits}");
+        }
     });
 }
 
 #[test]
-fn prop_packed_crumbs_roundtrip_and_storage_accounting() {
-    // the 2-bit KV-cache streams: pack/unpack identity at any length and
-    // storage accounting that matches the actual byte allocation
-    Check::new(32).forall("packed-crumbs-roundtrip", |rng, _| {
-        let len = rng.below(300);
-        let idx: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
-        let p = quant::PackedCrumbs::pack(&idx);
-        assert_eq!(p.unpack(), idx);
-        assert_eq!(p.storage_bytes(), p.bytes.len(), "accounting vs allocation");
-        assert_eq!(p.storage_bytes(), len.div_ceil(4));
-        for (i, &v) in idx.iter().enumerate() {
-            assert_eq!(p.get(i), v, "elem {i}");
-        }
+fn prop_packed_stream_slice_matches_repack() {
+    // slice_cols is THE column-chunking primitive (shard splits and tile
+    // ranges both ride on it): slicing a stream must equal packing the
+    // sliced indices, at every width and for empty/full/interior ranges
+    Check::new(32).forall("packed-stream-slice", |rng, _| {
+        let bits = 2 + rng.below(3) as u32;
+        let len = 1 + rng.below(200);
+        let idx: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
+        let p = quant::PackedStream::pack(&idx, bits);
+        let j0 = rng.below(len + 1);
+        let j1 = j0 + rng.below(len + 1 - j0);
+        let s = p.slice_cols(j0, j1);
+        assert_eq!(s.bits(), bits);
+        assert_eq!(s.unpack(), &idx[j0..j1], "{j0}..{j1} of {len} at W{bits}");
     });
 }
 
@@ -497,25 +508,30 @@ fn prop_paged_kv_no_leaks_no_double_assignment_bounded_tables() {
     });
 }
 
-/// 2-bit crumb-packed GEMM property net (the speculative-draft datapath):
-/// for random shapes (odd and even K — odd exercises the quad tail —
-/// batch 1..=16, 2/3/4-bit activations, outliers on/off) the crumb
-/// kernel + outlier compensation is bit-identical to the direct
-/// dual-branch reference, and so is every column-sharded split built via
-/// `from_crumbs` (including `cols < shards` and `cols % shards != 0`).
+/// Any-bit packed GEMM property net (the tentpole acceptance sweep):
+/// random shapes (odd and even K — odd exercises the packed tail rows —
+/// batch 1..=16, 2/3/4-bit activations) crossed with every weight width
+/// in {2,3,4} × per-group scale grids {whole-row, 32, 128} × outliers
+/// on/off. The unified packed kernel + outlier compensation must be
+/// bit-identical to the direct dual-branch reference, and so must every
+/// column-sharded split built via `from_packed` (including
+/// `cols < shards` and `cols % shards != 0`).
 #[test]
-fn prop_crumb_gemm_bit_exact_sharded_and_unsharded() {
+fn prop_any_bit_gemm_bit_exact_sharded_and_unsharded() {
     use kllm::gemm::{ShardPool, ShardedWaqGemm, TileCfg};
     use std::sync::Arc;
 
-    Check::new(16).forall("crumb-gemm-bit-exact", |rng, case| {
+    // 18 cases tile the full {w_bits} x {group} x {outliers} grid once
+    Check::new(18).forall("any-bit-gemm-bit-exact", |rng, case| {
         let k = 1 + rng.below(130);
         let n = 1 + rng.below(40);
         let batch = 1 + rng.below(16);
         let a_bits = 2 + rng.below(3) as u32;
-        let outliers_on = case % 2 == 0;
+        let w_bits = 2 + (case % 3) as u32;
+        let group = [0usize, 32, 128][(case / 3) % 3];
+        let outliers_on = case / 9 == 0;
         let w = Matrix::random_normal(k, n, 1.0, rng);
-        let qw = quant::quantize_weights(&w, 2);
+        let qw = quant::quantize_weights_grouped(&w, None, w_bits, group);
         let calib: Vec<Vec<f32>> =
             (0..4).map(|_| rng.heavy_tailed_vec(k, 0.02, 8.0)).collect();
         let refs: Vec<&[f32]> = calib.iter().map(|v| v.as_slice()).collect();
@@ -532,34 +548,36 @@ fn prop_crumb_gemm_bit_exact_sharded_and_unsharded() {
             })
             .collect();
         let lut = CartesianLut::build(&cb, &qw.codebook);
-        let cw = qw.pack_crumbs();
+        let pw = qw.pack();
+        assert_eq!(pw.bits(), w_bits, "pack() follows the codebook width");
         let want: Vec<Vec<f32>> =
             toks.iter().map(|t| gemm::execute_dual_branch(t, &qw, &lut)).collect();
 
-        // unsharded crumb kernel at a random tiling
+        // unsharded any-bit kernel at a random tiling
         let tcfg = TileCfg {
             n_block: 1 + rng.below(64),
             k_pair_block: 1 + rng.below(40),
             threads: 1 + rng.below(4),
         };
-        let mut got = gemm::execute_batch_tiled_crumbs(&toks, &cw, &lut, &tcfg);
+        let mut got = gemm::execute_batch_tiled(&toks, &pw, &lut, &tcfg);
         for (o, t) in got.iter_mut().zip(&toks) {
-            gemm::compensate_crumbs(o, t, &cw);
+            gemm::compensate_packed(o, t, &pw);
         }
         assert_eq!(
             got, want,
-            "K={k} N={n} A{a_bits}/W2 batch={batch} outliers={outliers_on} cfg={tcfg:?}"
+            "K={k} N={n} A{a_bits}/W{w_bits} group={group} batch={batch} \
+             outliers={outliers_on} cfg={tcfg:?}"
         );
 
-        // every sharded split of the same crumb weights
-        for shards in [1usize, 2, 3, 7] {
+        // every sharded split of the same packed weights
+        for shards in [1usize, 3] {
             let pool = Arc::new(ShardPool::new(shards).expect("pool"));
-            let sh = ShardedWaqGemm::from_crumbs(&cw, &lut, shards, pool).expect("shard");
+            let sh = ShardedWaqGemm::from_packed(&pw, &lut, shards, pool).expect("shard");
             assert_eq!(
                 sh.execute_batch(&toks),
                 want,
-                "K={k} N={n} A{a_bits}/W2 batch={batch} shards={shards} \
-                 outliers={outliers_on}"
+                "K={k} N={n} A{a_bits}/W{w_bits} group={group} batch={batch} \
+                 shards={shards} outliers={outliers_on}"
             );
         }
     });

@@ -167,6 +167,8 @@ fn waq_gemm_kernel_matches_rust_datapath() {
         idx: w_idx.iter().map(|&v| v as u8).collect(),
         codebook: cb_w.clone(),
         col_scales: w_scale.clone(),
+        group_size: 0,
+        group_scales: vec![],
     };
     for mrow in 0..mm {
         let tok = kllm::quant::QuantToken {

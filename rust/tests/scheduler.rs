@@ -8,7 +8,10 @@
 //!     0 = auto-budget), across native-packed, native-sharded(3), and
 //!     native-spec backends, prefix cache off and on — including a
 //!     prompt longer than one chunk that forks a shared prefix so
-//!     copy-on-write fires while the fork is still mid-chunk.
+//!     copy-on-write fires while the fork is still mid-chunk. Parity
+//!     covers *sampled* streams too: temperature draws come from a
+//!     per-request RNG seeded at admission, so stochastic output is a
+//!     pure function of (engine seed, request id) — not of scheduling.
 //!   * **Liveness/accounting property** — random interleavings of
 //!     submit/step/abort/drain with mixed long/short prompts answer
 //!     every request exactly once, never starve in-flight decodes while
@@ -128,6 +131,27 @@ fn mixed_stream(e: &mut Engine, vocab: usize) -> Vec<(u64, Vec<i32>, FinishReaso
     out.into_iter().map(|r| (r.id, r.tokens, r.finish_reason)).collect()
 }
 
+/// Like [`mixed_stream`] but sampled: even ids draw at temperature 0.8,
+/// odd ids at 1.5, and id 5 stays greedy so both samplers and the
+/// argmax path coexist in one decode batch.
+fn sampled_stream(e: &mut Engine, vocab: usize) -> Vec<(u64, Vec<i32>, FinishReason)> {
+    let mut rng = Rng::new(29);
+    for id in 0..6u64 {
+        let plen = if id % 2 == 0 { 9 + rng.below(4) } else { 1 + rng.below(3) };
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+        let mut r = Request::new(id, prompt, 2 + rng.below(3));
+        r.temperature = match id {
+            5 => 0.0,
+            _ if id % 2 == 0 => 0.8,
+            _ => 1.5,
+        };
+        e.submit(r);
+    }
+    let mut out = e.run_to_completion().expect("run");
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| (r.id, r.tokens, r.finish_reason)).collect()
+}
+
 /// The paged-allocator invariant block (shared idiom with
 /// `tests/backend_parity.rs`), valid whenever blocks are unaliased
 /// (prefix cache off): no leaks, no double assignment, bounded tables.
@@ -206,6 +230,59 @@ fn chunked_bit_exact_with_burst_across_chunk_sizes_and_prefix() {
                 assert_eq!(e.kv().cache().in_use_blocks(), 0, "chunk={chunk} leaked blocks");
             }
         }
+    }
+}
+
+/// Parity beyond greedy: sampled (temperature > 0) token streams are
+/// bit-identical between burst and chunked at every chunk size, because
+/// each request draws from its own RNG stream seeded at admission from
+/// (engine seed, request id) — never from a shared engine-wide stream
+/// whose draw order would depend on scheduling. Two engines with the
+/// same seed reproduce the streams exactly; a different engine seed
+/// must change them, proving the sampler is live and not argmaxing.
+#[test]
+fn chunked_sampled_streams_bit_exact_with_burst() {
+    let cfg = tiny_cfg(3);
+    for prefix_cache in [false, true] {
+        let ecfg = EngineConfig {
+            policy: AdmitPolicy::FillAll,
+            prefix_cache,
+            seed: 0xD1CE,
+            ..Default::default()
+        };
+        let want = {
+            let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+            sampled_stream(&mut e, cfg.vocab)
+        };
+        // same seed, same scheduler: a fresh engine reproduces the draws
+        {
+            let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+            assert_eq!(
+                sampled_stream(&mut e, cfg.vocab),
+                want,
+                "prefix={prefix_cache}: same-seed re-run diverged"
+            );
+        }
+        for chunk in [1usize, 7, 0] {
+            let ecfg = EngineConfig {
+                sched: SchedPolicy::Chunked,
+                prefill_chunk: chunk,
+                ..ecfg.clone()
+            };
+            let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+            let got = sampled_stream(&mut e, cfg.vocab);
+            assert_eq!(
+                got, want,
+                "prefix={prefix_cache} chunk={chunk}: sampled stream diverged from burst"
+            );
+        }
+        // a different engine seed must reroute at least one sampled draw
+        let other = {
+            let ecfg = EngineConfig { seed: 0xBEEF, ..ecfg.clone() };
+            let mut e = Engine::new(Box::new(native_backend(cfg)), &ecfg);
+            sampled_stream(&mut e, cfg.vocab)
+        };
+        assert_ne!(other, want, "engine seed has no effect on sampling");
     }
 }
 
